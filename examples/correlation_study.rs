@@ -1,0 +1,37 @@
+//! Correlation study (paper Figs. 2 & 4 on real engines): scores a trace
+//! corpus with both PRMs via the Pallas prefix-score kernel and prints the
+//! partial-vs-final fit and the correlation-vs-tau sweep.
+//!
+//!     make artifacts && cargo run --release --example correlation_study
+
+use erprm::harness::correlation::{correlation_vs_tau, half_vs_final_fit, score_corpus};
+use erprm::runtime::Engine;
+use erprm::workload::MATH500;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    erprm::util::logging::init_from_env();
+    let engine = Engine::load(std::path::Path::new("artifacts"))?;
+    let n_traces = std::env::var("ERPRM_TRACES").ok().and_then(|v| v.parse().ok()).unwrap_or(48);
+
+    for prm in ["prm-large", "prm-small"] {
+        println!("\n==== {prm} over {n_traces} math500-s traces ====");
+        let traces = score_corpus(&engine, prm, &MATH500, n_traces, 7)?;
+        let mean_len = traces.iter().map(|t| t.len).sum::<usize>() as f64 / traces.len() as f64;
+
+        let (fit, _) = half_vs_final_fit(&traces);
+        println!(
+            "Fig. 2 fit: final = {:.3} + {:.3} * partial(half),  R^2 = {:.3}  (paper: 0.63-0.72)",
+            fit.intercept, fit.slope, fit.r2
+        );
+
+        println!("Fig. 4 sweep (mean step-trace len {mean_len:.0}):");
+        println!("{:>5} {:>9} {:>9} {:>12}", "tau", "pearson", "kendall", "sqrt(tau/L)");
+        for (tau, p, k) in correlation_vs_tau(&traces, &[2, 4, 8, 12, 16, 24, 32]) {
+            println!(
+                "{tau:>5} {p:>9.3} {k:>9.3} {:>12.3}",
+                (tau as f64 / mean_len).min(1.0).sqrt()
+            );
+        }
+    }
+    Ok(())
+}

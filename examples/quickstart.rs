@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, solve one arithmetic-chain problem
+//! with both decoders, and compare the FLOPs bill.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use erprm::config::{SearchConfig, SearchMode};
+use erprm::coordinator::{solve_early_rejection, solve_vanilla};
+use erprm::runtime::Engine;
+use erprm::tokenizer as tk;
+use erprm::util::benchkit::fmt_flops;
+use erprm::workload::{OpStep, Problem};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    erprm::util::logging::init_from_env();
+    let engine = Engine::load(std::path::Path::new("artifacts"))?;
+
+    // (61 - 5) * 6 + 4 mod 100
+    let problem = Problem {
+        v0: 61,
+        ops: vec![
+            OpStep { op: tk::MINUS, d: 5 },
+            OpStep { op: tk::TIMES, d: 6 },
+            OpStep { op: tk::PLUS, d: 4 },
+        ],
+    };
+    println!("problem: {}  (answer: {})", tk::detok(&problem.prompt_tokens()), problem.answer());
+
+    let cfg = SearchConfig { n_beams: 16, tau: 8, seed: 1, ..SearchConfig::default() };
+
+    let mut vanilla_cfg = cfg.clone();
+    vanilla_cfg.mode = SearchMode::Vanilla;
+    let vanilla = solve_vanilla(&engine, "lm-concise", "prm-large", &problem, &vanilla_cfg, 0.5)?;
+    let er = solve_early_rejection(&engine, "lm-concise", "prm-large", &problem, &cfg, 0.5)?;
+
+    for (name, out) in [("vanilla (Alg. 2)", &vanilla), ("early rejection (Alg. 3)", &er)] {
+        println!("\n== {name}");
+        println!("trace:  {}", tk::detok(&out.best_trace));
+        println!(
+            "answer: {:?}  correct: {}  reward: {:.3}",
+            out.answer, out.correct, out.best_reward
+        );
+        let r = out.ledger.report();
+        println!(
+            "flops:  {} total ({} LM + {} PRM), {:.0}ms",
+            fmt_flops(r.total_flops),
+            fmt_flops(r.lm_flops),
+            fmt_flops(r.prm_flops),
+            out.wall_s * 1000.0
+        );
+    }
+    println!(
+        "\nearly rejection used {:.2}x fewer FLOPs",
+        vanilla.ledger.total_flops() / er.ledger.total_flops()
+    );
+    Ok(())
+}

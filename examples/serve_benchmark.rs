@@ -1,0 +1,169 @@
+//! End-to-end serving driver (the mandated e2e validation): starts the
+//! HTTP server on a real socket, loads the trained LM + PRM through the
+//! PJRT runtime, fires a batch of concurrent /solve requests from client
+//! threads, and reports accuracy, latency percentiles and throughput.
+//!
+//!     make artifacts && cargo run --release --example serve_benchmark
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end serving.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Instant;
+
+use erprm::config::SearchConfig;
+use erprm::server::{api, http, metrics::Metrics, router::EngineHandle};
+use erprm::tokenizer as tk;
+use erprm::util::json::Json;
+use erprm::util::rng::Rng;
+use erprm::util::stats;
+use erprm::util::threadpool::ThreadPool;
+use erprm::workload::{gen_problem, SATMATH};
+
+fn post_solve(addr: std::net::SocketAddr, body: &str) -> Result<Json, String> {
+    let mut s = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    let req = format!(
+        "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    s.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+    let mut out = String::new();
+    s.read_to_string(&mut out).map_err(|e| e.to_string())?;
+    let body = out.split("\r\n\r\n").nth(1).ok_or("no body")?;
+    Json::parse(body).map_err(|e| e.to_string())
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    erprm::util::logging::init_from_env();
+    let n_requests: usize = std::env::var("ERPRM_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(16);
+    let clients = 4;
+
+    // ---- server side
+    let defaults = SearchConfig { n_beams: 8, tau: 8, ..SearchConfig::default() };
+    let handle = EngineHandle::spawn("artifacts".into(), defaults.clone(), 64)?;
+    let metrics = Arc::new(Metrics::default());
+    let pool = ThreadPool::new(clients);
+    let stop = Arc::new(AtomicBool::new(false));
+    let h2 = handle.clone();
+    let m2 = Arc::clone(&metrics);
+    let d2 = defaults.clone();
+    let addr = http::serve(
+        "127.0.0.1:0",
+        &pool,
+        1 << 20,
+        Arc::clone(&stop),
+        Arc::new(move |req| route(&h2, &m2, &d2, req)),
+    )?;
+    println!("server up on http://{addr}; firing {n_requests} requests from {clients} client threads");
+
+    // ---- client side: concurrent requests
+    let mut rng = Rng::new(314);
+    let bodies: Vec<String> = (0..n_requests)
+        .map(|_| {
+            let p = gen_problem(&mut rng, &SATMATH);
+            let ops: Vec<String> = p
+                .ops
+                .iter()
+                .map(|s| {
+                    format!(
+                        "[\"{}\",{}]",
+                        match s.op {
+                            tk::PLUS => "+",
+                            tk::MINUS => "-",
+                            _ => "*",
+                        },
+                        s.d
+                    )
+                })
+                .collect();
+            format!(
+                "{{\"v0\": {}, \"ops\": [{}], \"mode\": \"er\", \"n_beams\": 8, \"tau\": 8}}",
+                p.v0,
+                ops.join(",")
+            )
+        })
+        .collect();
+
+    let client_pool = ThreadPool::new(clients);
+    let t0 = Instant::now();
+    let results = erprm::util::threadpool::parallel_map(&client_pool, bodies, move |body| {
+        let t = Instant::now();
+        let resp = post_solve(addr, &body);
+        (t.elapsed().as_secs_f64() * 1000.0, resp)
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- report
+    let mut latencies = Vec::new();
+    let mut correct = 0usize;
+    let mut flops_total = 0.0;
+    let mut errors = 0usize;
+    for (ms, resp) in &results {
+        latencies.push(*ms);
+        match resp {
+            Ok(j) => {
+                correct += (j.get("correct").and_then(Json::as_bool) == Some(true)) as usize;
+                flops_total += j.get("flops").and_then(Json::as_f64).unwrap_or(0.0);
+            }
+            Err(e) => {
+                errors += 1;
+                eprintln!("request failed: {e}");
+            }
+        }
+    }
+    println!("\n== end-to-end serving results ==");
+    println!("requests:   {n_requests} ({errors} errors)");
+    println!("accuracy:   {:.1}%", 100.0 * correct as f64 / n_requests as f64);
+    println!("throughput: {:.2} problems/s", n_requests as f64 / wall);
+    println!(
+        "latency ms: p50 {:.0}  p95 {:.0}  mean {:.0}",
+        stats::quantile(&latencies, 0.5),
+        stats::quantile(&latencies, 0.95),
+        stats::mean(&latencies)
+    );
+    println!("flops/req:  {:.3e}", flops_total / n_requests as f64);
+    println!("\nserver metrics:\n{}", metrics.render());
+    handle.shutdown();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    Ok(())
+}
+
+fn route(
+    handle: &EngineHandle,
+    metrics: &Metrics,
+    defaults: &SearchConfig,
+    req: http::Request,
+) -> http::Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => http::Response::json(200, "{\"ok\":true}".into()),
+        ("GET", "/metrics") => http::Response::text(200, &metrics.render()),
+        ("POST", "/solve") => {
+            let t0 = Instant::now();
+            let parsed = match api::parse_solve(&req.body, defaults) {
+                Ok(p) => p,
+                Err(e) => {
+                    metrics.record_error();
+                    return http::Response::json(400, format!("{{\"error\":\"{e}\"}}"));
+                }
+            };
+            match handle.solve(parsed.clone(), defaults.clone()) {
+                Ok(out) => {
+                    metrics.record_ok(
+                        t0.elapsed().as_secs_f64() * 1000.0,
+                        out.ledger.total_flops(),
+                        out.correct,
+                    );
+                    http::Response::json(200, api::render_solve(&parsed, &out))
+                }
+                Err(e) => {
+                    metrics.record_error();
+                    http::Response::json(500, format!("{{\"error\":\"{e}\"}}"))
+                }
+            }
+        }
+        _ => http::Response::json(404, "{\"error\":\"not found\"}".into()),
+    }
+}

@@ -1,0 +1,30 @@
+//! Section 4 theory validation: Monte-Carlo check of the sqrt(tau/L)
+//! correlation law and the sub-Gaussian early-rejection safety bound.
+//! Pure simulation — runs without artifacts.
+//!
+//!     cargo run --release --example theory_validation
+
+use erprm::sim;
+
+fn main() {
+    let trials = 8000;
+    println!("== rho(P, F) = sqrt(tau/L), L = 64, {trials} trials ==");
+    println!("{:>5} {:>12} {:>12} {:>12}", "tau", "pearson(MC)", "kendall(MC)", "exact");
+    for tau in [4usize, 8, 16, 24, 32, 48, 64] {
+        let (p, k) = sim::toy_correlation(tau, 64, trials, 7);
+        println!("{tau:>5} {p:>12.3} {k:>12.3} {:>12.3}", sim::toy_correlation_exact(tau, 64));
+    }
+
+    println!("\n== Pr[prune optimal] vs (N-1)exp(-Delta^2/4sigma^2), N=16 M=4 ==");
+    println!("{:>5} {:>8} {:>12} {:>10}", "tau", "delta", "empirical", "bound");
+    for &(tau, d) in &[(4usize, 0.25f64), (8, 0.25), (16, 0.25), (32, 0.25), (64, 0.25), (16, 1.0)] {
+        let (emp, bound) = sim::prune_probability(16, 4, tau, d, 1.0, trials, 11);
+        println!("{tau:>5} {d:>8.2} {emp:>12.4} {bound:>10.4}");
+        assert!(emp <= bound + 0.02, "bound violated!");
+    }
+    println!("\nbound holds everywhere; decay is exponential in tau * delta^2 (paper Sec. 4).");
+    println!(
+        "min tau for rho*=0.8 at L=100: {} tokens (paper: 0.64 L = 64)",
+        sim::min_tau_for_rho(0.8, 100)
+    );
+}

@@ -1,0 +1,267 @@
+"""AOT export: lower every serving program to HLO text + write weights.bin.
+
+This is the only bridge between the Python build path and the Rust serving
+runtime. It emits, under artifacts/:
+
+  hlo/<model>_<program>_b<batch>.hlo.txt   one per (program, batch) variant
+  weights/<checkpoint>.bin                 raw little-endian f32, in
+                                           model.weight_specs order
+  manifest.json                            vocab, model dims, program map,
+                                           weight specs, FLOPs-per-token —
+                                           everything Rust needs to load and
+                                           run without importing Python
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+KV-cache args in decode/score programs are lowered with donate_argnums so
+the HLO carries input_output_alias — the PJRT runtime updates caches in
+place instead of copying ~MBs per step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import grammar as g
+from . import model as M
+from . import train as T
+
+BATCHES = [int(x) for x in os.environ.get("ERPRM_BATCHES", "4,8,16,32,64").split(",")]
+FULLSEQ_BATCH = 8
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str, name: str, fn, arg_specs, donate=()):
+    path = os.path.join(out_dir, "hlo", f"{name}.hlo.txt")
+    if os.path.exists(path):
+        return path
+    t0 = time.time()
+    # keep_unused: arguments the program happens not to need (e.g. the PRM
+    # head weights in prm_prefill) must stay parameters — the Rust runtime
+    # passes every weight buffer unconditionally.
+    lowered = jax.jit(fn, donate_argnums=tuple(donate), keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] {name}: {len(text)//1024} KiB in {time.time()-t0:.1f}s", flush=True)
+    return path
+
+
+def weight_arg_specs(cfg: M.ModelCfg):
+    return [spec(shape) for _, shape in M.weight_specs(cfg)]
+
+
+def write_weights_bin(path: str, cfg: M.ModelCfg, params) -> int:
+    """Raw little-endian f32 concat in weight_specs order; returns n_floats."""
+    bufs = []
+    for wname, shape in M.weight_specs(cfg):
+        a = np.asarray(params[wname], dtype="<f4")
+        assert a.shape == tuple(shape), (wname, a.shape, shape)
+        bufs.append(a.ravel())
+    flat = np.concatenate(bufs)
+    flat.tofile(path)
+    return int(flat.size)
+
+
+def export_resize(out_dir: str, cfg: M.ModelCfg, programs: dict):
+    """Cross-batch gather programs: `resize_bS_to_bD` selects/replicates beam
+    slots while moving between batch variants — the device-side mechanism of
+    the paper's two-tiered batching (prefix phase at b1=N, completion phase
+    at b2=N/M) and of beam expansion back up to N."""
+    for src in BATCHES:
+        kv_src = [spec(sh) for sh in M.kv_shapes(cfg, src)]
+        for dst in BATCHES:
+            if src == dst:
+                continue
+            programs[f"resize_b{src}_to_b{dst}"] = export(
+                out_dir, f"{cfg.name}_resize_b{src}_to_b{dst}",
+                M.kv_gather, [spec((dst,), I32)] + kv_src,
+            )
+
+
+def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
+    nw = len(M.weight_specs(cfg))
+    nkv = 2 * cfg.n_layers
+    s = cfg.cache_len
+    programs = {}
+
+    def wrap(core, n_state):
+        def fn(*args):
+            params = M.args_to_params(cfg, args[:nw])
+            return core(params, *args[nw:])
+        return fn
+
+    programs["prefill_b1"] = export(
+        out_dir, f"{cfg.name}_prefill_b1",
+        wrap(lambda p, t, l: M.lm_prefill(cfg, p, t, l), 2),
+        weight_arg_specs(cfg) + [spec((1, g.PROMPT_PAD), I32), spec((1,), I32)],
+    )
+    for b in BATCHES:
+        kv = [spec(sh) for sh in M.kv_shapes(cfg, b)]
+        programs[f"decode_b{b}"] = export(
+            out_dir, f"{cfg.name}_decode_b{b}",
+            wrap(lambda p, *a: M.lm_decode_block(cfg, p, *a), 6 + nkv),
+            weight_arg_specs(cfg)
+            + [spec((1,), I32), spec((b,), I32), spec((b, s), I32),
+               spec((b,), I32), spec((1,), F32), spec((b, 2), U32)]
+            + kv,
+            donate=range(nw + 6, nw + 6 + nkv),
+        )
+        programs[f"gather_b{b}"] = export(
+            out_dir, f"{cfg.name}_gather_b{b}",
+            M.kv_gather, [spec((b,), I32)] + kv,
+        )
+        programs[f"broadcast_b{b}"] = export(
+            out_dir, f"{cfg.name}_broadcast_b{b}",
+            lambda *kv1, b=b: M.kv_broadcast(b, *kv1),
+            [spec(sh) for sh in M.kv_shapes(cfg, 1)],
+        )
+    export_resize(out_dir, cfg, programs)
+    return programs
+
+
+def export_prm(out_dir: str, cfg: M.ModelCfg) -> dict:
+    nw = len(M.weight_specs(cfg))
+    nkv = 2 * cfg.n_layers
+    s = cfg.cache_len
+    programs = {}
+
+    def wrap(core):
+        def fn(*args):
+            params = M.args_to_params(cfg, args[:nw])
+            return core(params, *args[nw:])
+        return fn
+
+    programs["prefill_b1"] = export(
+        out_dir, f"{cfg.name}_prefill_b1",
+        wrap(lambda p, t, l: M.prm_prefill(cfg, p, t, l)),
+        weight_arg_specs(cfg) + [spec((1, g.PROMPT_PAD), I32), spec((1,), I32)],
+    )
+    for b in BATCHES:
+        kv = [spec(sh) for sh in M.kv_shapes(cfg, b)]
+        programs[f"score_b{b}"] = export(
+            out_dir, f"{cfg.name}_score_b{b}",
+            wrap(lambda p, *a: M.prm_score_block(cfg, p, *a)),
+            weight_arg_specs(cfg)
+            + [spec((1,), I32), spec((b,), I32), spec((b, s), I32),
+               spec((b, M.SCORE_BLOCK), I32)]
+            + kv,
+            donate=range(nw + 4, nw + 4 + nkv),
+        )
+        programs[f"gather_b{b}"] = export(
+            out_dir, f"{cfg.name}_gather_b{b}",
+            M.kv_gather, [spec((b,), I32)] + kv,
+        )
+        programs[f"broadcast_b{b}"] = export(
+            out_dir, f"{cfg.name}_broadcast_b{b}",
+            lambda *kv1, b=b: M.kv_broadcast(b, *kv1),
+            [spec(sh) for sh in M.kv_shapes(cfg, 1)],
+        )
+    export_resize(out_dir, cfg, programs)
+    programs[f"fullseq_b{FULLSEQ_BATCH}"] = export(
+        out_dir, f"{cfg.name}_fullseq_b{FULLSEQ_BATCH}",
+        wrap(lambda p, t, l: M.prm_fullseq(cfg, p, t, l)),
+        weight_arg_specs(cfg)
+        + [spec((FULLSEQ_BATCH, M.SEQ_TRAIN), I32), spec((FULLSEQ_BATCH,), I32)],
+    )
+    return programs
+
+
+def model_manifest(cfg: M.ModelCfg, programs: dict, weights: dict, out_dir: str) -> dict:
+    rel = lambda p: os.path.relpath(p, out_dir)
+    return {
+        "kind": "prm" if cfg.scored else "lm",
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "ffn": cfg.ffn,
+        "vocab": cfg.vocab,
+        "cache_len": cfg.cache_len,
+        "params": cfg.param_count(),
+        "flops_per_token": cfg.flops_per_token(),
+        "weight_specs": [[n, list(s)] for n, s in M.weight_specs(cfg)],
+        "programs": {k: rel(v) for k, v in programs.items()},
+        "weights": weights,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    ckpts = T.ensure_checkpoints(os.path.join(out_dir, "weights"), out_dir)
+
+    weights_rel = {}
+    for name, cfg in T.CHECKPOINTS:
+        binp = os.path.join(out_dir, "weights", f"{name}.bin")
+        if not os.path.exists(binp):
+            n = write_weights_bin(binp, cfg, ckpts[name])
+            print(f"[aot] weights {name}: {n} f32", flush=True)
+        weights_rel[name] = f"weights/{name}.bin"
+
+    lm_programs = export_lm(out_dir, M.LM_CFG)
+    prml_programs = export_prm(out_dir, M.PRM_LARGE_CFG)
+    prms_programs = export_prm(out_dir, M.PRM_SMALL_CFG)
+
+    manifest = {
+        "vocab": g.TOKEN_STRS,
+        "prompt_pad": g.PROMPT_PAD,
+        "decode_block": M.DECODE_BLOCK,
+        "score_block": M.SCORE_BLOCK,
+        "seq_train": M.SEQ_TRAIN,
+        "mod": g.MOD,
+        "batch_variants": BATCHES,
+        "fullseq_batch": FULLSEQ_BATCH,
+        "models": {
+            "lm": model_manifest(
+                M.LM_CFG, lm_programs,
+                {k: weights_rel[k] for k in ("lm-concise", "lm-verbose")}, out_dir),
+            "prm-large": model_manifest(
+                M.PRM_LARGE_CFG, prml_programs,
+                {"prm-large": weights_rel["prm-large"]}, out_dir),
+            "prm-small": model_manifest(
+                M.PRM_SMALL_CFG, prms_programs,
+                {"prm-small": weights_rel["prm-small"]}, out_dir),
+        },
+        # Paper-scale parameter counts, used only for narrative comparison in
+        # EXPERIMENTS.md (the ledger reports our analytic FLOPs).
+        "paper_scale": {"lm": 3.0e9, "prm-large": 7.0e9, "prm-small": 1.5e9},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] manifest written", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,423 @@
+"""Synthetic arithmetic-chain reasoning task (the benchmark substrate).
+
+The paper evaluates on MATH-500 / SAT-MATH / AIME with 3B LLMs and 1.5-7B
+PRMs; none of those are available here, so this module defines the synthetic
+equivalent (see DESIGN.md "Substitutions"): a problem is a start value
+v0 in [0,99] and K chained operations (op, d) with values mod 100. The gold
+solution writes one *reasoning step* per operation with digit-level scratch
+work, which makes steps 15-46 tokens long — long enough for mid-step partial
+rewards at tau in {4,8,16,24} to be meaningful, mirroring the paper's
+tau in {32,64,128} over ~300-token steps at the same tau/L ratios.
+
+Everything here (vocab, trace format, validator) is mirrored by the Rust
+tokenizer/workload modules; the vocab is exported in artifacts/manifest.json
+so both sides always agree.
+
+Trace format (token-level):
+  prompt:   BOS v0 (op d)*K '>'
+  step i:   vv op d ':' [~ filler]* (item ' ')*d [redundancy] '=' ww ';'
+  answer:   'A' ww EOS
+
+Scratch items: for '+d' count up v+1..v+d; for '-d' count down; for '*d'
+repeated addition v,2v,..,dv (all mod 100, printed as two digits).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+# ---------------------------------------------------------------- vocabulary
+
+PAD, BOS, EOS = 0, 1, 2
+DIG0 = 3  # '0'..'9' -> 3..12
+PLUS, MINUS, TIMES, EQ, SEMI, SEP, ANS, COLON, FILL, SPACE, RSV = (
+    13, 14, 15, 16, 17, 18, 19, 20, 21, 22, 23,
+)
+VOCAB_SIZE = 24
+
+TOKEN_STRS = (
+    ["<pad>", "<bos>", "<eos>"]
+    + [str(i) for i in range(10)]
+    + ["+", "-", "*", "=", ";", ">", "A", ":", "~", " ", "#"]
+)
+assert len(TOKEN_STRS) == VOCAB_SIZE
+
+OPS = {PLUS: "+", MINUS: "-", TIMES: "*"}
+
+MOD = 100
+MAX_SEQ = 256
+PROMPT_PAD = 24  # prompts are <= 20 tokens; prefill program uses this width
+
+
+def detok(ids: List[int]) -> str:
+    return "".join(TOKEN_STRS[i] for i in ids)
+
+
+def two_digits(v: int) -> List[int]:
+    v %= MOD
+    return [DIG0 + v // 10, DIG0 + v % 10]
+
+
+def apply_op(v: int, op: int, d: int) -> int:
+    if op == PLUS:
+        return (v + d) % MOD
+    if op == MINUS:
+        return (v - d) % MOD
+    if op == TIMES:
+        return (v * d) % MOD
+    raise ValueError(f"bad op token {op}")
+
+
+# ---------------------------------------------------------------- problems
+
+
+@dataclass
+class Problem:
+    v0: int
+    ops: List[Tuple[int, int]]  # (op_token, operand)
+
+    @property
+    def answer(self) -> int:
+        v = self.v0
+        for op, d in self.ops:
+            v = apply_op(v, op, d)
+        return v
+
+    def prompt_tokens(self) -> List[int]:
+        # ops are ';'-separated: the k-th op follows the (k-1)-th ';' in the
+        # prompt, and the model generating step k has emitted k-1 ';' in its
+        # solution — aligning the two counts is an attention pattern a
+        # 2-layer model learns reliably (plain concatenation was not).
+        toks = [BOS] + two_digits(self.v0)
+        for op, d in self.ops:
+            toks += [op, DIG0 + d, SEMI]
+        toks.append(SEP)
+        return toks
+
+
+# Benchmark analogs: (#ops K, operand range, op mix) — a difficulty gradient
+# mirroring SAT-MATH < MATH-500 < AIME. Harder = more steps, bigger operands
+# (longer scratch), more multiplication.
+BENCHMARKS = {
+    "satmath-s": dict(k=3, d_lo=2, d_hi=6, p_times=0.2),
+    "math500-s": dict(k=4, d_lo=2, d_hi=8, p_times=0.35),
+    "aime-s": dict(k=5, d_lo=4, d_hi=9, p_times=0.5),
+}
+
+
+def gen_problem(rng: random.Random, bench: str = "satmath-s") -> Problem:
+    cfg = BENCHMARKS[bench]
+    ops = []
+    for _ in range(cfg["k"]):
+        r = rng.random()
+        op = TIMES if r < cfg["p_times"] else (PLUS if r < (1 + cfg["p_times"]) / 2 else MINUS)
+        ops.append((op, rng.randint(cfg["d_lo"], cfg["d_hi"])))
+    return Problem(v0=rng.randint(0, MOD - 1), ops=ops)
+
+
+def gen_mixed_problem(rng: random.Random, k_lo: int = 2, k_hi: int = 5) -> Problem:
+    """Training-distribution problems spanning all benchmark difficulties."""
+    k = rng.randint(k_lo, k_hi)
+    ops = []
+    for _ in range(k):
+        op = rng.choice([PLUS, MINUS, TIMES])
+        ops.append((op, rng.randint(2, 9)))
+    return Problem(v0=rng.randint(0, MOD - 1), ops=ops)
+
+
+# ---------------------------------------------------------------- gold traces
+
+
+def scratch_items(v: int, op: int, d: int) -> List[int]:
+    """The digit-level working for one step: d intermediate values."""
+    if op == PLUS:
+        return [(v + i) % MOD for i in range(1, d + 1)]
+    if op == MINUS:
+        return [(v - i) % MOD for i in range(1, d + 1)]
+    if op == TIMES:
+        return [(v * i) % MOD for i in range(1, d + 1)]
+    raise ValueError(f"bad op token {op}")
+
+
+def step_tokens(
+    v: int,
+    op: int,
+    d: int,
+    verbose: bool,
+    rng: Optional[random.Random],
+    item_override: Optional[List[int]] = None,
+    result_override: Optional[int] = None,
+) -> List[int]:
+    """One reasoning step. `verbose` adds filler + a redundant re-listing,
+    reproducing the paper's "exploratory LLM" trace style (Qwen analog)."""
+    items = item_override if item_override is not None else scratch_items(v, op, d)
+    result = result_override if result_override is not None else items[-1]
+    toks = two_digits(v) + [op, DIG0 + d, COLON]
+    if verbose and rng is not None:
+        toks += [FILL] * rng.randint(1, 3)
+    for it in items:
+        toks += two_digits(it) + [SPACE]
+    if verbose and rng is not None and rng.random() < 0.4 and len(items) >= 2:
+        toks += [FILL]
+        for it in items[-2:]:
+            toks += two_digits(it) + [SPACE]
+    toks += [EQ] + two_digits(result) + [SEMI]
+    return toks
+
+
+def solution_tokens(p: Problem, verbose: bool = False, rng: Optional[random.Random] = None) -> List[int]:
+    toks: List[int] = []
+    v = p.v0
+    for op, d in p.ops:
+        toks += step_tokens(v, op, d, verbose, rng)
+        v = apply_op(v, op, d)
+    toks += [ANS] + two_digits(v) + [EOS]
+    return toks
+
+
+def full_sequence(p: Problem, verbose: bool = False, rng: Optional[random.Random] = None) -> List[int]:
+    seq = p.prompt_tokens() + solution_tokens(p, verbose, rng)
+    if len(seq) > MAX_SEQ:
+        # Regenerate without redundancy bloat: strip filler to fit.
+        seq = [t for t in seq if t != FILL]
+    return seq[:MAX_SEQ]
+
+
+# ---------------------------------------------------------------- corruption
+
+
+def corrupt_solution(p: Problem, rng: random.Random, verbose: bool = False) -> List[int]:
+    """A solution with an injected error (for PRM training).
+
+    Error modes (validator-labelled, so compounding effects are exact):
+      * wrong-op: a step applies a different operation/operand than the
+        problem's k-th — internally consistent arithmetic, wrong problem.
+        This is the dominant real LM failure mode, so the PRM must see it.
+      * scratch/result: a perturbed intermediate value or step result.
+    """
+    # wrong-op corruption: substitute the op or operand of one step and
+    # compute that step *consistently* with the wrong op.
+    if rng.random() < 0.4:
+        err_step = rng.randrange(len(p.ops))
+        new_ops = list(p.ops)
+        op, d = new_ops[err_step]
+        if rng.random() < 0.5:
+            alt = rng.choice([o for o in (PLUS, MINUS, TIMES) if o != op])
+            new_ops[err_step] = (alt, d)
+        else:
+            alt_d = d + rng.choice([-2, -1, 1, 2])
+            alt_d = min(9, max(1, alt_d))
+            if alt_d == d:
+                alt_d = d - 1 if d > 1 else d + 1
+            new_ops[err_step] = (op, alt_d)
+        wrong = Problem(v0=p.v0, ops=new_ops)
+        return solution_tokens(wrong, verbose=verbose, rng=rng)
+
+    toks: List[int] = []
+    v = p.v0
+    err_step = rng.randrange(len(p.ops))
+    carried = None  # wrong running value once the error propagates
+    for i, (op, d) in enumerate(p.ops):
+        cur = carried if carried is not None else v
+        items = scratch_items(cur, op, d)
+        result = items[-1]
+        if i == err_step:
+            mode = rng.random()
+            delta = rng.choice([-3, -2, -1, 1, 2, 3])
+            if mode < 0.5 and len(items) > 1:
+                j = rng.randrange(len(items) - 1)
+                items[j] = (items[j] + delta) % MOD
+                # downstream items recomputed from the wrong one for +/-
+                if op in (PLUS, MINUS):
+                    sign = 1 if op == PLUS else -1
+                    for t in range(j + 1, len(items)):
+                        items[t] = (items[j] + sign * (t - j)) % MOD
+                    result = items[-1]
+            else:
+                result = (result + delta) % MOD
+                items[-1] = result
+            carried = result
+        elif carried is not None:
+            items = scratch_items(cur, op, d)
+            result = items[-1]
+            carried = result
+        toks += step_tokens(cur, op, d, verbose, rng, item_override=items, result_override=result)
+        v = apply_op(v, op, d)
+    final = carried if carried is not None else v
+    toks += [ANS] + two_digits(final) + [EOS]
+    return toks
+
+
+# ---------------------------------------------------------------- validator
+
+
+@dataclass
+class ValidatorState:
+    """Incremental token-level validator.
+
+    Feeds one token at a time; `ok` flips to False at the first position
+    where the trace is arithmetically or syntactically wrong — including a
+    step that uses the wrong operation for its index in the problem — and
+    stays False (monotone), which is exactly the "correct so far" semantics
+    the PRM is trained to estimate.
+    """
+
+    v: int  # running value entering the current step
+    ops: Optional[List[Tuple[int, int]]] = None  # expected (op, d) per step
+    step_idx: int = 0
+    ok: bool = True
+    done: bool = False
+    answer: Optional[int] = None
+    # parser state
+    _phase: str = "head"  # head | scratch | result | answer | done
+    _buf: List[int] = field(default_factory=list)
+    _step_op: int = 0
+    _step_d: int = 0
+    _items_seen: int = 0
+    _expect: List[int] = field(default_factory=list)
+    _after_redundant: bool = False
+
+    def _fail(self):
+        self.ok = False
+
+    def feed(self, tok: int) -> bool:
+        """Consume one token; returns current ok flag."""
+        if self.done or not self.ok:
+            # once wrong/finished, stay wrong/finished
+            if not self.done and tok == EOS:
+                self.done = True
+            return self.ok
+
+        ph = self._phase
+        if ph == "head":
+            # expecting: vv op d ':'   (or 'A' vv EOS)
+            if tok == ANS and not self._buf:
+                if self.ops is not None and self.step_idx != len(self.ops):
+                    self._fail()  # answered before finishing all steps
+                self._phase = "answer"
+                self._buf = []
+                return self.ok
+            self._buf.append(tok)
+            n = len(self._buf)
+            if n <= 2:
+                if not (DIG0 <= tok <= DIG0 + 9):
+                    self._fail()
+                elif n == 2:
+                    head_v = (self._buf[0] - DIG0) * 10 + (self._buf[1] - DIG0)
+                    if head_v != self.v:
+                        self._fail()
+            elif n == 3:
+                if tok not in OPS:
+                    self._fail()
+                elif self.ops is not None:
+                    if self.step_idx >= len(self.ops) or tok != self.ops[self.step_idx][0]:
+                        self._fail()  # wrong operation for this step
+                self._step_op = tok
+            elif n == 4:
+                if not (DIG0 <= tok <= DIG0 + 9):
+                    self._fail()
+                else:
+                    self._step_d = tok - DIG0
+                    if self._step_d < 1:
+                        self._fail()
+                    elif self.ops is not None and self._step_d != self.ops[self.step_idx][1]:
+                        self._fail()  # wrong operand for this step
+            elif n == 5:
+                if tok != COLON:
+                    self._fail()
+                else:
+                    self._expect = scratch_items(self.v, self._step_op, self._step_d)
+                    self._items_seen = 0
+                    self._buf = []
+                    self._after_redundant = False
+                    self._phase = "scratch"
+        elif ph == "scratch":
+            if tok == FILL:
+                if self._buf:
+                    self._fail()
+                elif self._items_seen >= 2:
+                    self._after_redundant = True
+                return self.ok
+            if tok == EQ:
+                if self._buf or (self._items_seen < len(self._expect) and not self._after_redundant):
+                    self._fail()
+                else:
+                    self._buf = []
+                    self._phase = "result"
+                return self.ok
+            if DIG0 <= tok <= DIG0 + 9:
+                self._buf.append(tok)
+                if len(self._buf) > 2:
+                    self._fail()
+                return self.ok
+            if tok == SPACE:
+                if len(self._buf) != 2:
+                    self._fail()
+                    return self.ok
+                val = (self._buf[0] - DIG0) * 10 + (self._buf[1] - DIG0)
+                self._buf = []
+                if self._after_redundant:
+                    # redundant re-listing: must match one of the last items
+                    tail = self._expect[-2:]
+                    if val not in tail:
+                        self._fail()
+                else:
+                    if self._items_seen >= len(self._expect) or val != self._expect[self._items_seen]:
+                        self._fail()
+                    self._items_seen += 1
+                return self.ok
+            self._fail()
+        elif ph == "result":
+            self._buf.append(tok)
+            n = len(self._buf)
+            if n <= 2:
+                if not (DIG0 <= tok <= DIG0 + 9):
+                    self._fail()
+            elif n == 3:
+                if tok != SEMI:
+                    self._fail()
+                else:
+                    val = (self._buf[0] - DIG0) * 10 + (self._buf[1] - DIG0)
+                    want = apply_op(self.v, self._step_op, self._step_d)
+                    if val != want:
+                        self._fail()
+                    else:
+                        self.v = want
+                        self.step_idx += 1
+                        self._buf = []
+                        self._phase = "head"
+        elif ph == "answer":
+            self._buf.append(tok)
+            n = len(self._buf)
+            if n <= 2:
+                if not (DIG0 <= tok <= DIG0 + 9):
+                    self._fail()
+            elif n == 3:
+                if tok != EOS:
+                    self._fail()
+                else:
+                    val = (self._buf[0] - DIG0) * 10 + (self._buf[1] - DIG0)
+                    self.answer = val
+                    if val != self.v:
+                        self._fail()
+                    self.done = True
+        return self.ok
+
+
+def label_positions(p: Problem, sol: List[int]) -> List[int]:
+    """Per-token 'correct so far' labels for PRM training."""
+    st = ValidatorState(v=p.v0, ops=p.ops)
+    labels = []
+    for t in sol:
+        labels.append(1 if st.feed(t) else 0)
+    return labels
+
+
+def extract_answer(sol: List[int]) -> Optional[int]:
+    """Final answer from a generated solution (last 'A dd' group)."""
+    for i in range(len(sol) - 2):
+        if sol[i] == ANS and DIG0 <= sol[i + 1] <= DIG0 + 9 and DIG0 <= sol[i + 2] <= DIG0 + 9:
+            return (sol[i + 1] - DIG0) * 10 + (sol[i + 2] - DIG0)
+    return None

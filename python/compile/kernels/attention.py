@@ -1,0 +1,108 @@
+"""Pallas fused causal attention (flash-style, TPU-shaped, interpret=True).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's serving
+stack runs CUDA attention kernels; here the same insight — never materialize
+the [S, S] score matrix in HBM — is expressed TPU-style. The BlockSpec grid
+streams one (block_q x D) query tile through VMEM against (block_k x D)
+key/value tiles with an online-softmax accumulator, which is the HBM<->VMEM
+schedule a GPU kernel would express with threadblocks + shared memory. The
+QK^T and PV contractions are the MXU-bound ops.
+
+VMEM footprint per grid step (f32 words):
+    q tile        block_q * D
+    k, v tiles    2 * block_k * D
+    scores        block_q * block_k
+    accum + stats block_q * (D + 2)
+At the toy dims (S=256, D=16, block=64) this is ~13 KB — far under the
+16 MB/core budget; at paper scale (D=128, block=128) it is ~330 KB, still
+comfortable, which is what the §Perf VMEM estimate in DESIGN.md records.
+
+`interpret=True` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode
+lowers to plain HLO, so the kernel runs inside the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len, use_len):
+    """One (batch*head, q-block) grid step: online softmax over k blocks."""
+    qi = pl.program_id(1)
+    q = q_ref[...]  # [block_q, D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+
+    acc = jnp.zeros((block_q, d), jnp.float32)
+    m_i = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((block_q,), jnp.float32)
+
+    q_pos = qi * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    n_kblocks = seq_len // block_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_tile = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32) * scale
+        k_pos = kb * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos <= q_pos
+        if use_len:
+            mask = mask & (k_pos < len_ref[0])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v_tile, preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    # Causal: only k blocks at or below the current q block contribute.
+    acc, m_i, l_i = lax.fori_loop(0, qi + 1, body, (acc, m_i, l_i))
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def causal_attention(q, k, v, lengths=None, *, block_q=64, block_k=64):
+    """Fused causal attention. q, k, v: [B, H, S, D]; lengths: optional [B].
+
+    Matches `ref.causal_attention_ref` (tested via hypothesis sweeps).
+    """
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    use_len = lengths is not None
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    lens = jnp.repeat(lengths.astype(jnp.int32), h)
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq_len=s, use_len=use_len
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),  # lengths, one per bh row
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),  # q tile
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),  # full k row
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),  # full v row
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(lens, qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+(hypothesis) sweeps shapes/dtypes and asserts the Pallas kernels match
+these to tight tolerances. They are also used directly by the L2 model in
+places where a fused kernel buys nothing (tiny decode-step matvecs).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def causal_attention_ref(q, k, v, lengths=None):
+    """Masked causal attention.
+
+    q, k, v: [B, H, S, D]; lengths: optional [B] int32 — positions >= length
+    are masked out of the keys (padded prompt tail).
+    Returns [B, H, S, D].
+    """
+    b, h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qi = lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ki = lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    mask = ki <= qi  # causal
+    if lengths is not None:
+        klen = ki[None, :, :] < lengths[:, None, None]
+        full = mask[None] & klen
+        logits = jnp.where(full[:, None], logits, NEG_INF)
+    else:
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def prm_prefix_score_ref(hidden, w, b):
+    """Reward head + prefix aggregation (the paper-specific fusion).
+
+    hidden: [B, S, Dm]; w: [Dm]; b: scalar (0-d array or float).
+    Returns (score, cummin, cummean), each [B, S]:
+      score[b, t]   = sigmoid(hidden[b, t] . w + b)       per-token reward
+      cummin[b, t]  = min_{u <= t} score[b, u]            running min
+      cummean[b, t] = mean_{u <= t} score[b, u]           running mean
+    A single PRM invocation therefore yields the partial reward at *every*
+    prefix length tau — the serving layer reads any index for free.
+    """
+    logit = jnp.einsum("bsd,d->bs", hidden, w) + b
+    score = 1.0 / (1.0 + jnp.exp(-logit))
+    cummin = lax.associative_scan(jnp.minimum, score, axis=1)
+    csum = jnp.cumsum(score, axis=1)
+    denom = jnp.arange(1, score.shape[1] + 1, dtype=score.dtype)[None, :]
+    cummean = csum / denom
+    return score, cummin, cummean

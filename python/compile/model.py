@@ -1,0 +1,373 @@
+"""L2: JAX model definitions — decoder LM and decoder PRM with KV caches.
+
+These are the compute graphs that `aot.py` lowers to HLO text for the Rust
+runtime. Weights are *arguments* (not baked constants) so one HLO program
+serves every weight set of the same architecture (lm-concise and lm-verbose
+share all LM programs); Rust uploads weights.bin once into device buffers
+and threads the KV cache through `execute_b` without host copies.
+
+Entry points (all pure, shapes static per export variant):
+  lm_prefill      prompt -> KV cache (b=1) + last-token logits
+  lm_decode_block sample DECODE_BLOCK tokens with in-graph categorical
+                  sampling (temperature + per-slot RNG keys are args)
+  prm_prefill     prompt -> PRM KV cache (b=1)
+  prm_score_block incremental per-token reward scores for new tokens
+  prm_fullseq     whole-sequence scoring via the Pallas prefix kernel
+                  (correlation studies, Fig. 2 / Fig. 4)
+  kv_gather       beam prune/expand slot permutation, on device
+  kv_broadcast    b=1 prompt KV -> N beam slots, on device
+
+KV cache discipline (the L3 contract; see rust/src/runtime/):
+  * The cache is 2*L separate arrays [B, H, S, D] (k and v per layer) —
+    separate args alias cleanly under donation.
+  * Writes happen at a *lockstep physical frontier*: every call writes its
+    whole token block at positions [pos, pos+T) for all slots, via
+    dynamic_update_slice with a scalar start (no scatter => XLA can update
+    in place). Slots whose logical sequences diverged (step boundaries at
+    different offsets) simply have junk at some physical positions.
+  * Attendability is an explicit `valid` bitmask [B, S] maintained by the
+    Rust coordinator: junk/pad positions are 0 and never attended.
+  * RoPE uses *logical* per-slot positions (an i32[B] argument), so relative
+    geometry matches training even when physical slots contain gaps.
+  * Within a block, fresh tokens attend to the cache (mask = valid) plus the
+    block's own earlier tokens held in registers; the cache is written once
+    per layer-plane at block end (4x less DUS traffic than per-token).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.attention import causal_attention
+from .kernels.prm_score import prm_prefix_score
+from .kernels.ref import causal_attention_ref
+from . import grammar
+
+SEQ_TRAIN = grammar.MAX_SEQ  # 256: training / full-sequence scoring width
+PROMPT_PAD = grammar.PROMPT_PAD
+DECODE_BLOCK = 4  # tokens sampled per decode call (amortizes PJRT overhead)
+SCORE_BLOCK = 16  # tokens scored per PRM call
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int = grammar.VOCAB_SIZE
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    ffn: int = 256
+    cache_len: int = 384  # serving KV cache length (>= trace + junk margin)
+    scored: bool = False  # PRM: per-position reward head instead of LM head
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        p = self.vocab * self.d_model  # embedding
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.ffn
+        per_layer += 4 * self.d_model  # ln scales/biases
+        p += self.n_layers * per_layer + 2 * self.d_model  # final ln
+        if self.scored:
+            p += self.d_model + 1
+        else:
+            p += self.d_model * self.vocab
+        return p
+
+    def flops_per_token(self) -> int:
+        """Analytic forward cost per token (the FLOPs ledger's unit)."""
+        return 2 * self.param_count()
+
+
+LM_CFG = ModelCfg(name="lm")
+# PRM caches are longer: SCORE_BLOCK-aligned feeding wastes up to 15
+# positions per scoring round (see rust/src/coordinator/scorer.rs).
+PRM_LARGE_CFG = ModelCfg(name="prm-large", d_model=96, n_layers=3, ffn=384, scored=True, cache_len=512)
+PRM_SMALL_CFG = ModelCfg(name="prm-small", d_model=48, n_layers=2, ffn=192, scored=True, cache_len=512)
+
+
+# ----------------------------------------------------------------- params
+
+
+def weight_specs(cfg: ModelCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the weights.bin / HLO arg order."""
+    d, f, v = cfg.d_model, cfg.ffn, cfg.vocab
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("emb", (v, d))]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_s", (d,)), (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.wq", (d, d)), (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)), (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_s", (d,)), (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.w1", (d, f)), (f"l{i}.w2", (f, d)),
+        ]
+    specs += [("lnf_s", (d,)), ("lnf_b", (d,))]
+    if cfg.scored:
+        specs += [("head_w", (d,)), ("head_b", (1,))]
+    else:
+        specs += [("head", (d, v))]
+    return specs
+
+
+def init_params(cfg: ModelCfg, key) -> Dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape in weight_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_s"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            std = 1.0 / math.sqrt(shape[0])
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * std
+    return params
+
+
+def params_to_args(cfg: ModelCfg, params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[name] for name, _ in weight_specs(cfg)]
+
+
+def args_to_params(cfg: ModelCfg, args) -> Dict[str, jnp.ndarray]:
+    return {name: a for (name, _), a in zip(weight_specs(cfg), args)}
+
+
+# ----------------------------------------------------------------- layers
+
+
+def layer_norm(x, s, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * s + b
+
+
+def rope(x, positions):
+    """Rotary embedding. x: [..., T, H, D]; positions: [..., T] (logical)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def kv_shapes(cfg: ModelCfg, batch: int) -> List[Tuple[int, ...]]:
+    """Shapes of the 2*L cache args, order [l0.k, l0.v, l1.k, l1.v, ...]."""
+    return [(batch, cfg.n_heads, cfg.cache_len, cfg.head_dim)] * (2 * cfg.n_layers)
+
+
+# ----------------------------------------------------------------- prefill
+
+
+def _stack_fullseq(cfg, params, tokens, lengths, use_kernel=True):
+    """Run the stack over a full padded window (training / prefill).
+
+    Returns (hidden [B, T, d], k_list, v_list) with per-layer roped K/V
+    [B, H, T, D] so callers can install them into a serving cache.
+    `use_kernel=False` selects the differentiable jnp reference attention
+    (Pallas kernels have no autodiff rule) — training only; the AOT export
+    path always runs the L1 kernel."""
+    bsz, t = tokens.shape
+    h = params["emb"][tokens]
+    pos = jnp.arange(t, dtype=jnp.int32)[None, :].repeat(bsz, 0)
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        x = layer_norm(h, params[f"l{i}.ln1_s"], params[f"l{i}.ln1_b"])
+        q = (x @ params[f"l{i}.wq"]).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+        k = (x @ params[f"l{i}.wk"]).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+        v = (x @ params[f"l{i}.wv"]).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+        q, k = rope(q, pos), rope(k, pos)
+        qh, kh, vh = (a.transpose(0, 2, 1, 3) for a in (q, k, v))
+        # L1 Pallas kernel on the prefill path (the big contraction).
+        attn = causal_attention if use_kernel else causal_attention_ref
+        o = attn(qh, kh, vh, lengths)
+        o = o.transpose(0, 2, 1, 3).reshape(bsz, t, cfg.d_model)
+        h = h + o @ params[f"l{i}.wo"]
+        x = layer_norm(h, params[f"l{i}.ln2_s"], params[f"l{i}.ln2_b"])
+        h = h + jax.nn.gelu(x @ params[f"l{i}.w1"]) @ params[f"l{i}.w2"]
+        ks.append(kh)
+        vs.append(vh)
+    h = layer_norm(h, params["lnf_s"], params["lnf_b"])
+    return h, ks, vs
+
+
+def _install_prefix(cfg, ks, vs, bsz):
+    """Place prompt K/V at physical positions [0, PROMPT_PAD) of a fresh
+    serving cache."""
+    out = []
+    for i in range(cfg.n_layers):
+        for a in (ks[i], vs[i]):
+            cache = jnp.zeros((bsz, cfg.n_heads, cfg.cache_len, cfg.head_dim), jnp.float32)
+            out.append(lax.dynamic_update_slice(cache, a, (0, 0, 0, 0)))
+    return out
+
+
+def lm_prefill(cfg: ModelCfg, params, tokens, lengths):
+    """tokens: [1, PROMPT_PAD] i32; lengths: [1] i32.
+    Returns (logits_last [1, V], *kv arrays [1, H, S, D])."""
+    h, ks, vs = _stack_fullseq(cfg, params, tokens, lengths)
+    last = jnp.take_along_axis(h, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+    logits = last[:, 0, :] @ params["head"]
+    return (logits, *_install_prefix(cfg, ks, vs, tokens.shape[0]))
+
+
+def prm_prefill(cfg: ModelCfg, params, tokens, lengths):
+    """Same as lm_prefill but for the PRM; returns only the cache arrays."""
+    _, ks, vs = _stack_fullseq(cfg, params, tokens, lengths)
+    return tuple(_install_prefix(cfg, ks, vs, tokens.shape[0]))
+
+
+# ----------------------------------------------------------------- decode
+
+
+def _block_stack(cfg, params, kvs, pos_phys, pos_log, valid, n_tokens, mode, tokens=None, temp=None, keys=None, keys_init_tok=None):
+    """Shared autoregressive block driver as a `lax.scan`.
+
+    One scan step = one token through the whole stack: embed, per-layer
+    (LN -> qkv -> RoPE at *logical* positions -> write K/V into the cache at
+    the *physical* frontier via dynamic_update_slice -> masked attention ->
+    MLP), final LN, then either sample the next token (mode="decode",
+    in-graph categorical with per-slot keys) or emit a reward score
+    (mode="score", inputs come from `tokens`).
+
+    scan keeps the compiled HLO one-body-sized: the unrolled variant made
+    XLA CPU spend minutes compiling the 16-token x n-layer graph.
+
+    Attention mask per sub-step s: `valid` (committed clean positions)
+    OR physical positions [pos_phys, pos_phys+s] (this block's own prefix).
+    Returns (outputs [B, T], new kv list).
+    """
+    bsz = valid.shape[0]
+    s = cfg.cache_len
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    p0 = pos_phys[0]
+    idx = lax.broadcasted_iota(jnp.int32, (1, s), 1)  # [1, S]
+    vmask = valid > 0  # [B, S]
+    t_eff = jnp.maximum(temp[0], 1e-2) if temp is not None else None
+
+    def body(carry, step):
+        tok, kvs = carry
+        if mode == "score":
+            tok = tokens[:, step]
+        h = params["emb"][tok]  # [B, d]
+        logpos = pos_log + step
+        phys = p0 + step
+        mask = vmask | ((idx >= p0) & (idx <= phys))  # [B, S]
+        new_kvs = list(kvs)
+        for i in range(cfg.n_layers):
+            x = layer_norm(h, params[f"l{i}.ln1_s"], params[f"l{i}.ln1_b"])
+            q = (x @ params[f"l{i}.wq"]).reshape(bsz, cfg.n_heads, cfg.head_dim)
+            k = (x @ params[f"l{i}.wk"]).reshape(bsz, cfg.n_heads, cfg.head_dim)
+            v = (x @ params[f"l{i}.wv"]).reshape(bsz, cfg.n_heads, cfg.head_dim)
+            q = rope(q[:, None], logpos[:, None])[:, 0]
+            k = rope(k[:, None], logpos[:, None])[:, 0]
+            kk = lax.dynamic_update_slice(new_kvs[2 * i], k[:, :, None, :], (0, 0, phys, 0))
+            vv = lax.dynamic_update_slice(new_kvs[2 * i + 1], v[:, :, None, :], (0, 0, phys, 0))
+            new_kvs[2 * i] = kk
+            new_kvs[2 * i + 1] = vv
+            sc = jnp.einsum("bhd,bhsd->bhs", q, kk) * scale
+            sc = jnp.where(mask[:, None, :], sc, NEG_INF)
+            p = jax.nn.softmax(sc, axis=-1)
+            o = jnp.einsum("bhs,bhsd->bhd", p, vv)
+            h = h + o.reshape(bsz, cfg.d_model) @ params[f"l{i}.wo"]
+            x = layer_norm(h, params[f"l{i}.ln2_s"], params[f"l{i}.ln2_b"])
+            h = h + jax.nn.gelu(x @ params[f"l{i}.w1"]) @ params[f"l{i}.w2"]
+        h = layer_norm(h, params["lnf_s"], params["lnf_b"])
+        if mode == "decode":
+            logits = h @ params["head"]
+            kdata = keys.astype(jnp.uint32)
+            folded = jax.vmap(
+                lambda kk_: jax.random.fold_in(jax.random.wrap_key_data(kk_), step)
+            )(kdata)
+            nxt = jax.vmap(jax.random.categorical)(folded, logits / t_eff).astype(jnp.int32)
+            return (nxt, tuple(new_kvs)), nxt
+        else:
+            score = 1.0 / (1.0 + jnp.exp(-(h @ params["head_w"] + params["head_b"][0])))
+            return (tok, tuple(new_kvs)), score
+
+    init_tok = tokens[:, 0] if mode == "score" else keys_init_tok
+    (_, final_kvs), outs = lax.scan(
+        body, (init_tok, tuple(kvs)), jnp.arange(n_tokens, dtype=jnp.int32)
+    )
+    return jnp.transpose(outs, (1, 0)), list(final_kvs)
+
+
+def lm_decode_block(cfg: ModelCfg, params, pos_phys, pos_log, valid, tok, temp, keys, *kvs):
+    """Sample DECODE_BLOCK tokens per slot with in-graph categorical sampling.
+
+    pos_phys: [1] i32 lockstep write frontier; pos_log: [B] logical positions;
+    valid: [B, S] i32 attendability bitmask; tok: [B] previous token;
+    temp: [1] f32; keys: [B, 2] u32 per-slot RNG keys.
+    Returns (tokens [B, DECODE_BLOCK] i32, *kv').
+    """
+    outs, new_kvs = _block_stack(
+        cfg, params, list(kvs), pos_phys, pos_log, valid, DECODE_BLOCK,
+        mode="decode", temp=temp, keys=keys, keys_init_tok=tok,
+    )
+    return (outs, *new_kvs)
+
+
+def prm_score_block(cfg: ModelCfg, params, pos_phys, pos_log, valid, tokens, *kvs):
+    """Incremental PRM scoring: feed SCORE_BLOCK new tokens per slot.
+
+    tokens: [B, SCORE_BLOCK] i32 (PAD beyond each slot's valid span; the
+    host only reads scores it knows are valid).
+    Returns (scores [B, SCORE_BLOCK] f32 in (0,1), *kv').
+    """
+    outs, new_kvs = _block_stack(
+        cfg, params, list(kvs), pos_phys, pos_log, valid, SCORE_BLOCK,
+        mode="score", tokens=tokens,
+    )
+    return (outs, *new_kvs)
+
+
+# ----------------------------------------------------------- full-sequence
+
+
+def prm_fullseq(cfg: ModelCfg, params, tokens, lengths):
+    """Whole-sequence PRM scoring through the Pallas prefix-score kernel.
+
+    tokens: [B, SEQ_TRAIN] i32; lengths: [B] i32.
+    Returns (score, cummin, cummean) each [B, SEQ_TRAIN] — the correlation
+    studies (Fig. 2 / Fig. 4) read partial rewards at arbitrary tau from one
+    call.
+    """
+    h, _, _ = _stack_fullseq(cfg, params, tokens, lengths)
+    return prm_prefix_score(h, params["head_w"], params["head_b"])
+
+
+def lm_logits_fullseq(cfg: ModelCfg, params, tokens, lengths):
+    """Teacher-forcing logits for training. tokens: [B, S]."""
+    h, _, _ = _stack_fullseq(cfg, params, tokens, lengths, use_kernel=False)
+    return h @ params["head"]
+
+
+def prm_logits_fullseq(cfg: ModelCfg, params, tokens, lengths):
+    """Per-position reward logits for training (BCE applied outside)."""
+    h, _, _ = _stack_fullseq(cfg, params, tokens, lengths, use_kernel=False)
+    return h @ params["head_w"] + params["head_b"][0]
+
+
+# ----------------------------------------------------------------- kv ops
+
+
+def kv_gather(idx, *kvs):
+    """Beam slot permutation on device. idx: [B] i32 source slot per dest."""
+    return tuple(jnp.take(kv, idx, axis=0) for kv in kvs)
+
+
+def kv_broadcast(batch: int, *kvs):
+    """Replicate b=1 prompt KV into `batch` beam slots."""
+    out = []
+    for kv in kvs:
+        _, h, s, d = kv.shape
+        out.append(jnp.broadcast_to(kv, (batch, h, s, d)) + 0.0)
+    return tuple(out)

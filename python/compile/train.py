@@ -1,0 +1,260 @@
+"""Build-time training of the four model checkpoints.
+
+The paper serves pretrained 3B LLMs and 1.5-7B PRMs; those weights are not
+available here, so the substitution (DESIGN.md) trains tiny real models on
+the synthetic arithmetic-chain task at artifact-build time:
+
+  lm-concise   trained on minimal scratchpad traces   (Llama-3.2-3B analog)
+  lm-verbose   trained on filler/redundant traces     (Qwen-2.5-3B analog)
+  prm-large    3-layer reward model                   (MathShepherd-7B analog)
+  prm-small    2-layer half-width reward model        (Skywork-1.5B analog)
+
+PRMs are trained on a 50/50 mix of gold and corrupted traces with
+per-position "correct so far" labels from the grammar validator — this is
+what makes their partial scores genuinely predictive of final scores, the
+property the paper's hypothesis rests on.
+
+Everything is CPU-friendly: hand-rolled Adam (optax is not installed),
+streaming synthetic data (no dataset files), fp32. Checkpoints are cached
+as .npz under artifacts/weights/ and training curves logged to
+artifacts/train_log_<model>.json; `make artifacts` skips training when the
+cache exists.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import random
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import grammar as g
+from . import model as M
+
+SEQ = M.SEQ_TRAIN
+
+
+# ----------------------------------------------------------------- batches
+
+
+def _pad(seq: List[int], width: int = SEQ) -> List[int]:
+    return (seq + [g.PAD] * width)[:width]
+
+
+HEAD_WEIGHT = 8.0  # loss emphasis on step-head tokens (vv op d ':')
+
+
+def lm_batch(rng: random.Random, bsz: int, verbose: bool):
+    """Teacher-forcing batch: predict token t+1 from prefix; loss only on
+    solution positions (after '>'), with extra weight on step-head tokens —
+    a single wrong op token ruins a whole trace, but contributes 1/70th of
+    uniform loss, so the optimizer underweights exactly the tokens that
+    matter most for end-task accuracy."""
+    toks, lens, masks = [], [], []
+    for _ in range(bsz):
+        p = g.gen_mixed_problem(rng)
+        prompt = p.prompt_tokens()
+        sol = g.solution_tokens(p, verbose=verbose, rng=rng)
+        seq = prompt + sol
+        if len(seq) > SEQ:
+            seq = seq[:SEQ]
+        # per-target weights: mask[i] weights the prediction of seq[i+1]
+        w = [0.0] * len(seq)
+        head = True  # after '>' or ';' the next 5 tokens are a step head
+        head_left = 5
+        for i in range(len(prompt) - 1, len(seq) - 1):
+            nxt = seq[i + 1]
+            weight = 1.0
+            if head and head_left > 0:
+                weight = HEAD_WEIGHT
+                head_left -= 1
+                if head_left == 0:
+                    head = False
+            if nxt == g.SEMI:
+                head = True
+                head_left = 5
+            if nxt == g.ANS:
+                weight = HEAD_WEIGHT  # answer region matters too
+            w[i] = weight
+        toks.append(_pad(seq))
+        lens.append(len(seq))
+        masks.append((w + [0.0] * SEQ)[:SEQ])
+    return (
+        jnp.array(toks, jnp.int32),
+        jnp.array(lens, jnp.int32),
+        jnp.array(masks, jnp.float32),
+    )
+
+
+def prm_batch(rng: random.Random, bsz: int):
+    """Per-position BCE batch: 50% gold, 50% corrupted; labels from the
+    incremental validator; loss only on solution positions."""
+    toks, lens, labels, masks = [], [], [], []
+    for _ in range(bsz):
+        p = g.gen_mixed_problem(rng)
+        verbose = rng.random() < 0.5
+        if rng.random() < 0.4:
+            sol = g.solution_tokens(p, verbose=verbose, rng=rng)
+        else:
+            sol = g.corrupt_solution(p, rng, verbose=verbose)
+        lab = g.label_positions(p, sol)
+        prompt = p.prompt_tokens()
+        seq = prompt + sol
+        full_lab = [1] * len(prompt) + lab
+        mask = [0.0] * len(prompt) + [1.0] * len(sol)
+        if len(seq) > SEQ:
+            seq, full_lab, mask = seq[:SEQ], full_lab[:SEQ], mask[:SEQ]
+        toks.append(_pad(seq))
+        lens.append(len(seq))
+        labels.append(_pad(full_lab))
+        masks.append(_pad([int(m) for m in mask]))
+    return (
+        jnp.array(toks, jnp.int32),
+        jnp.array(lens, jnp.int32),
+        jnp.array(labels, jnp.float32),
+        jnp.array(masks, jnp.float32),
+    )
+
+
+# ----------------------------------------------------------------- losses
+
+
+def lm_loss(cfg, params, toks, lens, mask):
+    logits = M.lm_logits_fullseq(cfg, params, toks, lens)
+    targets = jnp.roll(toks, -1, axis=1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prm_loss(cfg, params, toks, lens, labels, mask):
+    logit = M.prm_logits_fullseq(cfg, params, toks, lens)
+    bce = jnp.maximum(logit, 0) - logit * labels + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    return (bce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ------------------------------------------------------------------- adam
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------- drivers
+
+
+def _cosine_lr(step, steps, base):
+    return base * 0.5 * (1 + np.cos(np.pi * min(step / steps, 1.0)))
+
+
+def train_lm(name: str, verbose: bool, steps: int, bsz: int, seed: int, log_dir: str):
+    cfg = M.LM_CFG
+    rng = random.Random(seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lens, mask, lr):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, toks, lens, mask))(params)
+        params, opt = adam_step(params, grads, opt, lr)
+        return params, opt, loss
+
+    log = []
+    t0 = time.time()
+    for s in range(steps):
+        toks, lens, mask = lm_batch(rng, bsz, verbose)
+        lr = jnp.float32(_cosine_lr(s, steps, 3e-3))
+        params, opt, loss = step_fn(params, opt, toks, lens, mask, lr)
+        if s % 25 == 0 or s == steps - 1:
+            l = float(loss)
+            log.append({"step": s, "loss": l, "wall_s": time.time() - t0})
+            print(f"[{name}] step {s:4d} loss {l:.4f} ({time.time()-t0:.0f}s)", flush=True)
+    with open(os.path.join(log_dir, f"train_log_{name}.json"), "w") as f:
+        json.dump(log, f)
+    return params
+
+
+def train_prm(name: str, cfg: M.ModelCfg, steps: int, bsz: int, seed: int, log_dir: str):
+    rng = random.Random(seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lens, labels, mask, lr):
+        loss, grads = jax.value_and_grad(lambda p: prm_loss(cfg, p, toks, lens, labels, mask))(params)
+        params, opt = adam_step(params, grads, opt, lr)
+        return params, opt, loss
+
+    log = []
+    t0 = time.time()
+    for s in range(steps):
+        toks, lens, labels, mask = prm_batch(rng, bsz)
+        lr = jnp.float32(_cosine_lr(s, steps, 2e-3))
+        params, opt, loss = step_fn(params, opt, toks, lens, labels, mask, lr)
+        if s % 25 == 0 or s == steps - 1:
+            l = float(loss)
+            log.append({"step": s, "loss": l, "wall_s": time.time() - t0})
+            print(f"[{name}] step {s:4d} loss {l:.4f} ({time.time()-t0:.0f}s)", flush=True)
+    with open(os.path.join(log_dir, f"train_log_{name}.json"), "w") as f:
+        json.dump(log, f)
+    return params
+
+
+# ------------------------------------------------------------- checkpoint
+
+
+def save_params(path: str, params: Dict[str, jnp.ndarray]):
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> Dict[str, jnp.ndarray]:
+    data = np.load(path)
+    return {k: jnp.asarray(data[k]) for k in data.files}
+
+
+CHECKPOINTS: List[Tuple[str, M.ModelCfg]] = [
+    ("lm-concise", M.LM_CFG),
+    ("lm-verbose", M.LM_CFG),
+    ("prm-large", M.PRM_LARGE_CFG),
+    ("prm-small", M.PRM_SMALL_CFG),
+]
+
+
+def ensure_checkpoints(weights_dir: str, log_dir: str) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Train (or load cached) all four checkpoints."""
+    os.makedirs(weights_dir, exist_ok=True)
+    steps_lm = int(os.environ.get("ERPRM_TRAIN_STEPS_LM", "700"))
+    steps_prm = int(os.environ.get("ERPRM_TRAIN_STEPS_PRM", "500"))
+    out = {}
+    for name, cfg in CHECKPOINTS:
+        path = os.path.join(weights_dir, f"{name}.npz")
+        if os.path.exists(path):
+            print(f"[train] cached {name}", flush=True)
+            out[name] = load_params(path)
+            continue
+        print(f"[train] training {name} ({cfg.param_count()} params)", flush=True)
+        if cfg.scored:
+            bsz = 8 if cfg is M.PRM_LARGE_CFG else 16
+            params = train_prm(name, cfg, steps_prm, bsz, seed=hash(name) % 2**31, log_dir=log_dir)
+        else:
+            params = train_lm(name, name == "lm-verbose", steps_lm, 16, seed=hash(name) % 2**31, log_dir=log_dir)
+        save_params(path, params)
+        out[name] = params
+    return out

@@ -1,0 +1,58 @@
+"""AOT export tests: HLO text is well-formed and carries KV donation aliases."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_roundtrippable():
+    lowered = jax.jit(lambda x, y: (x @ y + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32), jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    )
+    txt = aot.to_hlo_text(lowered)
+    assert "HloModule" in txt and "ENTRY" in txt
+    assert "f32[4,4]" in txt
+
+
+def test_export_writes_and_caches(tmp_path):
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    p = aot.export(str(tmp_path), "toy", lambda x: (x + 1,), [aot.spec((3,), jnp.float32)])
+    assert os.path.exists(p)
+    mtime = os.path.getmtime(p)
+    p2 = aot.export(str(tmp_path), "toy", lambda x: (x + 2,), [aot.spec((3,), jnp.float32)])
+    assert os.path.getmtime(p2) == mtime  # cached, not re-lowered
+
+
+def test_donated_kv_alias_in_hlo(tmp_path):
+    """decode programs must carry input_output_alias for the KV args."""
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+
+    def fn(kv, x):
+        return (x, kv.at[0].add(x[0]))
+
+    lowered = jax.jit(fn, donate_argnums=(0,)).lower(
+        aot.spec((8, 4), jnp.float32), aot.spec((4,), jnp.float32)
+    )
+    txt = aot.to_hlo_text(lowered)
+    assert "input_output_alias" in txt
+
+
+def test_write_weights_bin_order(tmp_path):
+    cfg = M.PRM_SMALL_CFG
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "w.bin")
+    n = aot.write_weights_bin(path, cfg, params)
+    assert n == cfg.param_count()
+    flat = np.fromfile(path, dtype="<f4")
+    assert flat.size == n
+    # first tensor is the embedding, row-major
+    emb = np.asarray(params["emb"]).ravel()
+    np.testing.assert_array_equal(flat[: emb.size], emb)
+    # last is head_b
+    np.testing.assert_array_equal(flat[-1:], np.asarray(params["head_b"]))

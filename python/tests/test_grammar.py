@@ -1,0 +1,137 @@
+"""Grammar / task-substrate tests: tokenization, gold traces, validator."""
+
+import random
+
+import pytest
+
+from compile import grammar as g
+
+
+def test_vocab_size_and_strings():
+    assert g.VOCAB_SIZE == 24
+    assert len(g.TOKEN_STRS) == g.VOCAB_SIZE
+    assert g.TOKEN_STRS[g.PLUS] == "+"
+    assert g.TOKEN_STRS[g.ANS] == "A"
+    assert g.TOKEN_STRS[g.DIG0 + 7] == "7"
+
+
+def test_two_digits_roundtrip():
+    for v in range(100):
+        t = g.two_digits(v)
+        assert len(t) == 2
+        assert (t[0] - g.DIG0) * 10 + (t[1] - g.DIG0) == v
+    assert g.two_digits(105) == g.two_digits(5)
+
+
+def test_apply_op_mod():
+    assert g.apply_op(99, g.PLUS, 3) == 2
+    assert g.apply_op(1, g.MINUS, 4) == 97
+    assert g.apply_op(25, g.TIMES, 5) == 25
+    with pytest.raises(ValueError):
+        g.apply_op(1, g.EQ, 1)
+
+
+def test_problem_answer_chains():
+    p = g.Problem(v0=10, ops=[(g.PLUS, 5), (g.TIMES, 3), (g.MINUS, 9)])
+    assert p.answer == ((10 + 5) * 3 - 9) % 100
+    toks = p.prompt_tokens()
+    assert toks[0] == g.BOS and toks[-1] == g.SEP
+    # BOS vv (op d ;)*3 '>'
+    assert len(toks) == 2 + 2 + 3 * 3
+    assert g.detok(toks) == "<bos>10+5;*3;-9;>"
+
+
+@pytest.mark.parametrize("bench", list(g.BENCHMARKS))
+def test_benchmark_problems_fit(bench):
+    rng = random.Random(7)
+    for _ in range(300):
+        p = g.gen_problem(rng, bench)
+        seq = g.full_sequence(p, verbose=True, rng=rng)
+        assert len(seq) <= g.MAX_SEQ
+        assert len(p.prompt_tokens()) <= g.PROMPT_PAD
+
+
+@pytest.mark.parametrize("verbose", [False, True])
+def test_gold_traces_validate(verbose):
+    rng = random.Random(11)
+    for _ in range(200):
+        p = g.gen_mixed_problem(rng)
+        sol = g.solution_tokens(p, verbose=verbose, rng=rng)
+        labels = g.label_positions(p, sol)
+        assert all(labels), g.detok(sol)
+        assert g.extract_answer(sol) == p.answer
+
+
+@pytest.mark.parametrize("verbose", [False, True])
+def test_corrupted_traces_detected(verbose):
+    rng = random.Random(13)
+    for _ in range(200):
+        p = g.gen_mixed_problem(rng)
+        bad = g.corrupt_solution(p, rng, verbose=verbose)
+        labels = g.label_positions(p, bad)
+        assert not all(labels), g.detok(bad)
+
+
+def test_labels_monotone():
+    """'Correct so far' must never recover after the first error."""
+    rng = random.Random(17)
+    for _ in range(200):
+        p = g.gen_mixed_problem(rng)
+        bad = g.corrupt_solution(p, rng, verbose=rng.random() < 0.5)
+        labels = g.label_positions(p, bad)
+        first_bad = labels.index(0)
+        assert all(l == 0 for l in labels[first_bad:])
+
+
+def test_validator_rejects_malformed():
+    p = g.Problem(v0=12, ops=[(g.PLUS, 2)])
+    st = g.ValidatorState(v=p.v0)
+    # wrong head value
+    for t in g.two_digits(99):
+        st.feed(t)
+    assert not st.ok
+
+
+def test_validator_wrong_answer():
+    p = g.Problem(v0=12, ops=[(g.PLUS, 2)])
+    sol = g.solution_tokens(p)
+    # flip the final answer's units digit: the mismatch is only checkable
+    # once the answer group completes (at EOS)
+    sol2 = list(sol)
+    sol2[-2] = g.DIG0 + ((sol2[-2] - g.DIG0 + 1) % 10)
+    labels = g.label_positions(p, sol2)
+    assert labels[-2] == 1 and labels[-1] == 0
+
+
+def test_extract_answer_none():
+    assert g.extract_answer([g.BOS, g.DIG0, g.EOS]) is None
+
+
+def test_wrong_op_step_detected():
+    """A step applying the wrong operation (internally consistent) must be
+    rejected at the op token — the dominant real LM failure mode."""
+    p = g.Problem(v0=12, ops=[(g.TIMES, 6)])
+    wrong = g.Problem(v0=12, ops=[(g.PLUS, 6)])
+    trace = g.solution_tokens(wrong)
+    labels = g.label_positions(p, trace)
+    assert labels[0] and labels[1] and not labels[2]
+
+
+def test_early_answer_detected():
+    p = g.Problem(v0=10, ops=[(g.PLUS, 2), (g.PLUS, 3)])
+    one = g.Problem(v0=10, ops=[(g.PLUS, 2)])
+    labels = g.label_positions(p, g.solution_tokens(one))
+    assert not all(labels)
+
+
+def test_scratch_items():
+    assert g.scratch_items(98, g.PLUS, 3) == [99, 0, 1]
+    assert g.scratch_items(1, g.MINUS, 2) == [0, 99]
+    assert g.scratch_items(25, g.TIMES, 4) == [25, 50, 75, 0]
+
+
+def test_benchmark_difficulty_ordering():
+    """aime-s must have more steps than satmath-s (difficulty gradient)."""
+    rng = random.Random(3)
+    ks = {b: g.gen_problem(rng, b).ops for b in g.BENCHMARKS}
+    assert len(ks["satmath-s"]) < len(ks["math500-s"]) < len(ks["aime-s"])

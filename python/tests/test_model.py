@@ -1,0 +1,223 @@
+"""L2 model tests: the serving-cache discipline must match teacher forcing.
+
+The key invariants the Rust coordinator depends on:
+  * prefill logits == full-sequence logits at the prompt boundary
+  * incremental PRM scoring (lockstep physical frontier + validity mask +
+    logical-position RoPE) == full-sequence scoring, even when slots
+    diverge and junk blocks are interleaved
+  * kv_gather / kv_broadcast permute slots exactly
+  * weight_specs round-trips params and matches param_count
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import grammar as g
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = M.LM_CFG
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def prm():
+    cfg = M.PRM_SMALL_CFG
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(1))
+
+
+def _problem(seed=0, bench="satmath-s"):
+    return g.gen_problem(random.Random(seed), bench)
+
+
+def _pad_prompt(prompt):
+    toks = jnp.array([prompt + [g.PAD] * (g.PROMPT_PAD - len(prompt))], jnp.int32)
+    return toks, jnp.array([len(prompt)], jnp.int32)
+
+
+# ------------------------------------------------------------- param specs
+
+
+@pytest.mark.parametrize("cfg", [M.LM_CFG, M.PRM_LARGE_CFG, M.PRM_SMALL_CFG])
+def test_param_count_matches_specs(cfg):
+    total = sum(int(np.prod(s)) for _, s in M.weight_specs(cfg))
+    assert total == cfg.param_count()
+
+
+def test_params_args_roundtrip(lm):
+    cfg, params = lm
+    args = M.params_to_args(cfg, params)
+    back = M.args_to_params(cfg, args)
+    assert set(back) == set(params)
+    for k in params:
+        assert back[k] is params[k]
+
+
+def test_flops_per_token(lm):
+    cfg, _ = lm
+    assert cfg.flops_per_token() == 2 * cfg.param_count()
+
+
+# ---------------------------------------------------------------- prefill
+
+
+def test_prefill_matches_fullseq(lm):
+    cfg, params = lm
+    p = _problem(3)
+    prompt = p.prompt_tokens()
+    toks, lens = _pad_prompt(prompt)
+    out = M.lm_prefill(cfg, params, toks, lens)
+    logits, kvs = out[0], out[1:]
+    assert logits.shape == (1, cfg.vocab)
+    assert len(kvs) == 2 * cfg.n_layers
+    seq = prompt + g.solution_tokens(p)
+    full = jnp.array([seq + [g.PAD] * (M.SEQ_TRAIN - len(seq))], jnp.int32)
+    flog = M.lm_logits_fullseq(cfg, params, full, jnp.array([len(seq)], jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits[0]), np.asarray(flog[0, len(prompt) - 1]), atol=2e-5
+    )
+
+
+# ------------------------------------------------- incremental == fullseq
+
+
+def test_incremental_prm_matches_fullseq_with_divergence(prm):
+    cfg, params = prm
+    p = _problem(5, "math500-s")
+    prompt, sol = p.prompt_tokens(), g.solution_tokens(p)
+    seq = prompt + sol
+
+    full = jnp.array([seq + [g.PAD] * (M.SEQ_TRAIN - len(seq))], jnp.int32)
+    ref_logit = M.prm_logits_fullseq(cfg, params, full, jnp.array([len(seq)], jnp.int32))
+    ref_scores = 1 / (1 + np.exp(-np.asarray(ref_logit[0])))[: len(seq)]
+
+    toksP, lensP = _pad_prompt(prompt)
+    kvs1 = M.prm_prefill(cfg, params, toksP, lensP)
+    B = 2
+    kvs = list(M.kv_broadcast(B, *kvs1))
+    S = cfg.cache_len
+    valid = np.zeros((B, S), np.int32)
+    valid[:, : len(prompt)] = 1
+    pos_phys, pos_log = g.PROMPT_PAD, np.full((B,), len(prompt), np.int32)
+    got = [[], []]
+    i = [0, 0]
+    rnd = 0
+    while i[0] < len(sol):
+        T = M.SCORE_BLOCK
+        blks, ns = [], []
+        for slot in range(B):
+            if slot == 1 and rnd == 1:
+                blks.append([g.PAD] * T)  # slot 1 idles one round (junk)
+                ns.append(0)
+            else:
+                blk = sol[i[slot] : i[slot] + T]
+                ns.append(len(blk))
+                blks.append(blk + [g.PAD] * (T - len(blk)))
+        out = M.prm_score_block(
+            cfg, params,
+            jnp.array([pos_phys], jnp.int32), jnp.array(pos_log),
+            jnp.array(valid), jnp.array(blks, jnp.int32), *kvs,
+        )
+        sc, kvs = out[0], list(out[1:])
+        for slot in range(B):
+            got[slot].extend(np.asarray(sc[slot][: ns[slot]]))
+            valid[slot, pos_phys : pos_phys + ns[slot]] = 1
+            pos_log[slot] += ns[slot]
+            i[slot] += ns[slot]
+        pos_phys += T
+        rnd += 1
+
+    np.testing.assert_allclose(np.array(got[0]), ref_scores[len(prompt):], atol=2e-5)
+    n1 = len(got[1])
+    np.testing.assert_allclose(np.array(got[1]), ref_scores[len(prompt):len(prompt) + n1], atol=2e-5)
+
+
+# ------------------------------------------------------------ decode block
+
+
+def test_decode_block_shapes_and_determinism(lm):
+    cfg, params = lm
+    p = _problem(7)
+    prompt = p.prompt_tokens()
+    toks, lens = _pad_prompt(prompt)
+    out = M.lm_prefill(cfg, params, toks, lens)
+    kvs1 = out[1:]
+    B = 4
+    kvs = list(M.kv_broadcast(B, *kvs1))
+    S = cfg.cache_len
+    valid = np.zeros((B, S), np.int32)
+    valid[:, : len(prompt)] = 1
+    args = (
+        jnp.array([g.PROMPT_PAD], jnp.int32),
+        jnp.full((B,), len(prompt), jnp.int32),
+        jnp.array(valid),
+        jnp.full((B,), g.SEP, jnp.int32),
+        jnp.array([0.7], jnp.float32),
+        jnp.arange(B * 2, dtype=jnp.uint32).reshape(B, 2),
+    )
+    o1 = M.lm_decode_block(cfg, params, *args, *kvs)
+    o2 = M.lm_decode_block(cfg, params, *args, *kvs)
+    assert o1[0].shape == (B, M.DECODE_BLOCK)
+    assert o1[0].dtype == jnp.int32
+    assert (np.asarray(o1[0]) == np.asarray(o2[0])).all()  # same keys => same sample
+    assert (np.asarray(o1[0]) >= 0).all() and (np.asarray(o1[0]) < cfg.vocab).all()
+    # different keys => (almost surely) different samples somewhere
+    args_k = args[:5] + (args[5] + 1234567,)
+    o3 = M.lm_decode_block(cfg, params, *args_k, *kvs)
+    assert (np.asarray(o1[0]) != np.asarray(o3[0])).any()
+
+
+def test_decode_greedy_low_temperature(lm):
+    """At temperature -> 0 the in-graph sampler must argmax."""
+    cfg, params = lm
+    p = _problem(9)
+    prompt = p.prompt_tokens()
+    toks, lens = _pad_prompt(prompt)
+    out = M.lm_prefill(cfg, params, toks, lens)
+    logits, kvs1 = out[0], out[1:]
+    B = 4
+    kvs = list(M.kv_broadcast(B, *kvs1))
+    valid = np.zeros((B, cfg.cache_len), np.int32)
+    valid[:, : len(prompt)] = 1
+    # feed the argmax of the prefill logits as the first decode token
+    first = int(np.asarray(logits)[0].argmax())
+    o = M.lm_decode_block(
+        cfg, params,
+        jnp.array([g.PROMPT_PAD], jnp.int32),
+        jnp.full((B,), len(prompt), jnp.int32),
+        jnp.array(valid),
+        jnp.full((B,), first, jnp.int32),
+        jnp.array([0.0], jnp.float32),
+        jnp.arange(B * 2, dtype=jnp.uint32).reshape(B, 2),
+        *kvs,
+    )
+    sampled = np.asarray(o[0])
+    # all slots identical under greedy
+    assert (sampled == sampled[0]).all()
+
+
+# ------------------------------------------------------------------ kv ops
+
+
+def test_kv_gather_permutes_slots():
+    kv = jnp.arange(4 * 2 * 8 * 3, dtype=jnp.float32).reshape(4, 2, 8, 3)
+    idx = jnp.array([2, 2, 0, 1], jnp.int32)
+    (out,) = M.kv_gather(idx, kv)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(kv[2]))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(kv[2]))
+    np.testing.assert_array_equal(np.asarray(out[2]), np.asarray(kv[0]))
+    np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(kv[1]))
+
+
+def test_kv_broadcast_replicates():
+    kv = jnp.arange(1 * 2 * 8 * 3, dtype=jnp.float32).reshape(1, 2, 8, 3)
+    (out,) = M.kv_broadcast(5, kv)
+    assert out.shape == (5, 2, 8, 3)
+    for b in range(5):
+        np.testing.assert_array_equal(np.asarray(out[b]), np.asarray(kv[0]))

@@ -1,0 +1,82 @@
+"""Training-path tests: losses decrease, batches are well-formed, Adam works."""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import grammar as g
+from compile import model as M
+from compile import train as T
+
+
+def test_lm_batch_shapes():
+    rng = random.Random(0)
+    toks, lens, mask = T.lm_batch(rng, 4, verbose=False)
+    assert toks.shape == (4, T.SEQ) and mask.shape == (4, T.SEQ)
+    assert (np.asarray(lens) <= T.SEQ).all()
+    # mask covers only solution positions (strictly inside the sequence)
+    m = np.asarray(mask)
+    for i in range(4):
+        assert m[i].sum() > 0
+        assert m[i, int(lens[i]) :].sum() == 0
+
+
+def test_prm_batch_labels_monotone():
+    rng = random.Random(1)
+    toks, lens, labels, mask = T.prm_batch(rng, 8)
+    lab, msk = np.asarray(labels), np.asarray(mask)
+    for i in range(8):
+        sol = lab[i][msk[i] > 0]
+        # once 0, stays 0
+        if (sol == 0).any():
+            first = int(np.argmax(sol == 0))
+            assert (sol[first:] == 0).all()
+
+
+def test_adam_step_moves_params():
+    params = {"w": jnp.ones((3,)), "b": jnp.zeros((2,))}
+    grads = {"w": jnp.ones((3,)), "b": jnp.ones((2,))}
+    st = T.adam_init(params)
+    new, st2 = T.adam_step(params, grads, st, 0.1)
+    assert float(st2["t"]) == 1.0
+    assert (np.asarray(new["w"]) < 1.0).all()
+
+
+@pytest.mark.slow
+def test_lm_loss_decreases_quickly():
+    cfg = M.LM_CFG
+    rng = random.Random(2)
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    opt = T.adam_init(params)
+
+    @jax.jit
+    def step(params, opt, toks, lens, mask):
+        loss, grads = jax.value_and_grad(lambda p: T.lm_loss(cfg, p, toks, lens, mask))(params)
+        params, opt = T.adam_step(params, grads, opt, 3e-3)
+        return params, opt, loss
+
+    losses = []
+    for s in range(12):
+        toks, lens, mask = T.lm_batch(rng, 8, verbose=False)
+        params, opt, loss = step(params, opt, toks, lens, mask)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_prm_loss_finite():
+    cfg = M.PRM_SMALL_CFG
+    rng = random.Random(3)
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    toks, lens, labels, mask = T.prm_batch(rng, 4)
+    loss = T.prm_loss(cfg, params, toks, lens, labels, mask)
+    assert np.isfinite(float(loss))
+    assert 0.2 < float(loss) < 2.0  # near log(2) at init
+
+
+def test_cosine_lr_schedule():
+    assert T._cosine_lr(0, 100, 1.0) == pytest.approx(1.0)
+    assert T._cosine_lr(100, 100, 1.0) == pytest.approx(0.0, abs=1e-9)
+    assert 0.4 < T._cosine_lr(50, 100, 1.0) < 0.6

@@ -1,0 +1,105 @@
+//! Paper Sec. 3.2 ablation: two-tiered batching (shrink to b2 for the
+//! completion phase) vs staying at b1 — same algorithm, same FLOPs ledger,
+//! different wallclock (the paper's claim is a throughput effect).
+//! Also ablates the rejection policy (paper's top-N/M vs extensions).
+
+mod common;
+
+use std::time::Instant;
+
+use erprm::config::{SearchConfig, SearchMode};
+use erprm::coordinator::early_reject::solve_early_rejection_with_policy;
+use erprm::coordinator::policy::RejectPolicy;
+use erprm::util::benchkit::{fmt_flops, Table};
+use erprm::workload::{problem_set, SATMATH};
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let problems = problem_set(&SATMATH, common::problems(8), 48);
+    let n = 16;
+
+    let mut table = Table::new(
+        &format!("Ablation — two-tier batching & policy (satmath-s, N={n}, tau=8)"),
+        &["variant", "accuracy %", "total FLOPs", "wall s", "throughput (prob/s)"],
+    );
+
+    // Best-of-N baseline row (no step-level selection at all)
+    {
+        let cfg = SearchConfig {
+            mode: SearchMode::EarlyRejection,
+            n_beams: n,
+            tau: 8,
+            seed: 48,
+            ..SearchConfig::default()
+        };
+        let t0 = Instant::now();
+        let mut correct = 0usize;
+        let mut ledger: Option<erprm::coordinator::FlopsLedger> = None;
+        for (i, p) in problems.iter().enumerate() {
+            let mut c = cfg.clone();
+            c.seed = 48 + i as u64;
+            if let Ok(out) =
+                erprm::coordinator::solve_best_of_n(&engine, "lm-concise", "prm-large", p, &c, 0.5)
+            {
+                correct += out.correct as usize;
+                match &mut ledger {
+                    None => ledger = Some(out.ledger),
+                    Some(l) => l.merge(&out.ledger),
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            "Best-of-N (no search)".into(),
+            format!("{:.1}", 100.0 * correct as f64 / problems.len() as f64),
+            fmt_flops(ledger.map(|l| l.total_flops()).unwrap_or(0.0)),
+            format!("{wall:.1}"),
+            format!("{:.2}", problems.len() as f64 / wall),
+        ]);
+    }
+
+    let variants: Vec<(&str, RejectPolicy, bool)> = vec![
+        ("ER + two-tier (paper)", RejectPolicy::TopK { keep: 4 }, true),
+        ("ER, single-tier (b2=b1)", RejectPolicy::TopK { keep: 4 }, false),
+        ("ER + threshold policy", RejectPolicy::Threshold { min_score: 0.5, floor: 2 }, true),
+        ("ER + adaptive-gap policy", RejectPolicy::AdaptiveGap { keep: 4, min_gap: 0.03 }, true),
+    ];
+    for (label, policy, two_tier) in variants {
+        let cfg = SearchConfig {
+            mode: SearchMode::EarlyRejection,
+            n_beams: n,
+            tau: 8,
+            seed: 48,
+            ..SearchConfig::default()
+        };
+        let t0 = Instant::now();
+        let mut correct = 0usize;
+        let mut ledger = None;
+        for (i, p) in problems.iter().enumerate() {
+            let mut c = cfg.clone();
+            c.seed = 48 + i as u64;
+            match solve_early_rejection_with_policy(
+                &engine, "lm-concise", "prm-large", p, &c, 0.5, policy, two_tier,
+            ) {
+                Ok(out) => {
+                    correct += out.correct as usize;
+                    match &mut ledger {
+                        None => ledger = Some(out.ledger),
+                        Some(l) => l.merge(&out.ledger),
+                    }
+                }
+                Err(e) => eprintln!("solve failed: {e}"),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total = ledger.map(|l| l.total_flops()).unwrap_or(0.0);
+        table.row(vec![
+            label.into(),
+            format!("{:.1}", 100.0 * correct as f64 / problems.len() as f64),
+            fmt_flops(total),
+            format!("{wall:.1}"),
+            format!("{:.2}", problems.len() as f64 / wall),
+        ]);
+    }
+    table.emit("ablation_two_tier");
+}

@@ -1,0 +1,44 @@
+//! Shared plumbing for the paper-table benches.
+//!
+//! Every bench prints the same rows/series its paper artifact reports and
+//! tees them under target/bench-out/. Problem counts and beam grids scale
+//! with ERPRM_PROBLEMS / ERPRM_FULL to keep `cargo bench` tractable on the
+//! single-core testbed (the table *shape* is stable across scales).
+
+use std::path::{Path, PathBuf};
+
+use erprm::runtime::Engine;
+
+pub fn artifacts() -> Option<PathBuf> {
+    for c in [Path::new("artifacts"), Path::new("../artifacts")] {
+        if c.join("manifest.json").exists() {
+            return Some(c.to_path_buf());
+        }
+    }
+    eprintln!("[bench] artifacts missing; run `make artifacts` first");
+    None
+}
+
+pub fn engine() -> Option<Engine> {
+    artifacts().map(|d| Engine::load(&d).expect("engine load"))
+}
+
+/// Beam-width grid: paper uses {4,8,16,32,64}; the default bench run covers
+/// {4,8,16} (set ERPRM_FULL=1 for the paper's full grid).
+pub fn n_grid() -> Vec<usize> {
+    if std::env::var("ERPRM_FULL").is_ok() {
+        vec![4, 8, 16, 32, 64]
+    } else {
+        vec![4, 8, 16]
+    }
+}
+
+/// tau grid (scaled from the paper's {32,64,128} over ~300-token steps to
+/// the same tau/L ratios over our 15-46-token steps).
+pub fn tau_grid() -> Vec<usize> {
+    vec![4, 8, 16]
+}
+
+pub fn problems(default: usize) -> usize {
+    erprm::harness::problems_per_cell(default)
+}

@@ -1,0 +1,58 @@
+//! Paper Fig. 2: partial rewards at half-step completion vs full rewards,
+//! with a linear fit — per PRM. The paper reports R^2 = 0.72 for
+//! MathShepherd-7B and 0.63 for the MetaMath PRM; the shape to reproduce
+//! is a strong positive linear relationship for both evaluators.
+
+mod common;
+
+use erprm::harness::correlation::{half_vs_final_fit, score_corpus};
+use erprm::util::benchkit::Table;
+use erprm::workload::MATH500;
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let n_traces = common::problems(64).max(32);
+
+    for prm in ["prm-large", "prm-small"] {
+        let traces = match score_corpus(&engine, prm, &MATH500, n_traces, 2024) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("corpus failed: {e}");
+                return;
+            }
+        };
+        let (fit, pts) = half_vs_final_fit(&traces);
+        let mut table = Table::new(
+            &format!("Fig. 2 — {prm}: final = a + b * partial(half), {n_traces} traces"),
+            &["quantity", "value"],
+        );
+        table.row(vec!["slope".into(), format!("{:.3}", fit.slope)]);
+        table.row(vec!["intercept".into(), format!("{:.3}", fit.intercept)]);
+        table.row(vec!["R^2".into(), format!("{:.3}", fit.r2)]);
+        table.row(vec!["paper R^2 (MathShepherd-7B)".into(), "0.72".into()]);
+        table.row(vec!["paper R^2 (MetaMath-7B)".into(), "0.63".into()]);
+        table.emit(&format!("fig2_{prm}"));
+
+        // scatter series (the figure's points), binned for terminal output
+        let mut scatter = Table::new(
+            &format!("Fig. 2 scatter ({prm}) — partial(half) bin -> mean final"),
+            &["partial bin", "mean final", "count"],
+        );
+        let mut bins = vec![(0.0f64, 0usize); 10];
+        for &(x, y) in &pts {
+            let b = ((x * 10.0) as usize).min(9);
+            bins[b].0 += y;
+            bins[b].1 += 1;
+        }
+        for (i, (sum, cnt)) in bins.iter().enumerate() {
+            if *cnt > 0 {
+                scatter.row(vec![
+                    format!("{:.1}-{:.1}", i as f64 / 10.0, (i + 1) as f64 / 10.0),
+                    format!("{:.3}", sum / *cnt as f64),
+                    cnt.to_string(),
+                ]);
+            }
+        }
+        scatter.emit(&format!("fig2_scatter_{prm}"));
+    }
+}

@@ -1,0 +1,57 @@
+//! Paper Fig. 4: Kendall tau and Pearson correlation of (partial, final)
+//! rewards as the decision prefix tau sweeps — empirically over real PRM
+//! scores AND the sqrt(tau/L) law of the toy model (Sec. 4).
+
+mod common;
+
+use erprm::harness::correlation::{correlation_vs_tau, score_corpus};
+use erprm::sim;
+use erprm::util::benchkit::Table;
+use erprm::workload::MATH500;
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let n_traces = common::problems(64).max(32);
+    let taus = [2usize, 4, 8, 12, 16, 24, 32];
+
+    for prm in ["prm-large", "prm-small"] {
+        let traces = match score_corpus(&engine, prm, &MATH500, n_traces, 4077) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("corpus failed: {e}");
+                return;
+            }
+        };
+        let mean_len =
+            traces.iter().map(|t| t.len).sum::<usize>() as f64 / traces.len() as f64;
+        let rows = correlation_vs_tau(&traces, &taus);
+        let mut table = Table::new(
+            &format!(
+                "Fig. 4 — {prm}: correlation vs tau ({n_traces} traces, mean len {mean_len:.0})"
+            ),
+            &["tau", "pearson", "kendall", "sqrt(tau/L) (toy)"],
+        );
+        for (tau, p, k) in rows {
+            table.row(vec![
+                tau.to_string(),
+                format!("{p:.3}"),
+                format!("{k:.3}"),
+                format!("{:.3}", (tau as f64 / mean_len).min(1.0).sqrt()),
+            ]);
+        }
+        table.emit(&format!("fig4_{prm}"));
+    }
+
+    // pure toy-model curve (the paper's analytic overlay)
+    let mut toy = Table::new("Fig. 4 overlay — i.i.d. toy model, L=32", &["tau", "pearson (MC)", "kendall (MC)", "sqrt(tau/L)"]);
+    for tau in [2usize, 4, 8, 16, 24, 32] {
+        let (p, k) = sim::toy_correlation(tau, 32, 3000, 9);
+        toy.row(vec![
+            tau.to_string(),
+            format!("{p:.3}"),
+            format!("{k:.3}"),
+            format!("{:.3}", sim::toy_correlation_exact(tau, 32)),
+        ]);
+    }
+    toy.emit("fig4_toy");
+}

@@ -1,0 +1,48 @@
+//! Paper Fig. 5: SAT-MATH accuracy-vs-FLOPs series for ER vs vanilla
+//! across the two LLMs and two PRMs (the figure's four panels as series).
+
+mod common;
+
+use erprm::config::SearchMode;
+use erprm::harness::{run_cell, Cell};
+use erprm::util::benchkit::{fmt_flops, Table};
+use erprm::workload::SATMATH;
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let problems = common::problems(10);
+    let tau = 8;
+
+    for lm in ["lm-concise", "lm-verbose"] {
+        for prm in ["prm-large", "prm-small"] {
+            let mut table = Table::new(
+                &format!("Fig. 5 panel — {lm} + {prm} (satmath-s, tau={tau})"),
+                &["series", "N", "FLOPs (x)", "accuracy % (y)"],
+            );
+            for n in common::n_grid() {
+                for (mode, label) in
+                    [(SearchMode::Vanilla, "vanilla"), (SearchMode::EarlyRejection, "ER")]
+                {
+                    let cell = Cell {
+                        bench: SATMATH,
+                        lm_ckpt: lm.into(),
+                        prm_ckpt: prm.into(),
+                        mode,
+                        n_beams: n,
+                        tau,
+                    };
+                    match run_cell(&engine, &cell, problems, 45) {
+                        Ok(res) => table.row(vec![
+                            label.into(),
+                            n.to_string(),
+                            fmt_flops(res.ledger.total_flops()),
+                            format!("{:.1}", res.accuracy),
+                        ]),
+                        Err(e) => eprintln!("cell failed: {e}"),
+                    }
+                }
+            }
+            table.emit(&format!("fig5_{lm}_{prm}"));
+        }
+    }
+}

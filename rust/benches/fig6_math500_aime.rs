@@ -1,0 +1,48 @@
+//! Paper Fig. 6: Math-500 and AIME accuracy-vs-FLOPs series, ER vs vanilla,
+//! with the MathShepherd-analog PRM.
+
+mod common;
+
+use erprm::config::SearchMode;
+use erprm::harness::{run_cell, Cell};
+use erprm::util::benchkit::{fmt_flops, Table};
+use erprm::workload::{AIME, MATH500};
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let problems = common::problems(8);
+    let tau = 8;
+
+    for bench in [MATH500, AIME] {
+        for lm in ["lm-concise", "lm-verbose"] {
+            let mut table = Table::new(
+                &format!("Fig. 6 panel — {} / {lm} + prm-large (tau={tau})", bench.name),
+                &["series", "N", "FLOPs (x)", "accuracy % (y)"],
+            );
+            for n in common::n_grid() {
+                for (mode, label) in
+                    [(SearchMode::Vanilla, "vanilla"), (SearchMode::EarlyRejection, "ER")]
+                {
+                    let cell = Cell {
+                        bench,
+                        lm_ckpt: lm.into(),
+                        prm_ckpt: "prm-large".into(),
+                        mode,
+                        n_beams: n,
+                        tau,
+                    };
+                    match run_cell(&engine, &cell, problems, 46) {
+                        Ok(res) => table.row(vec![
+                            label.into(),
+                            n.to_string(),
+                            fmt_flops(res.ledger.total_flops()),
+                            format!("{:.1}", res.accuracy),
+                        ]),
+                        Err(e) => eprintln!("cell failed: {e}"),
+                    }
+                }
+            }
+            table.emit(&format!("fig6_{}_{lm}", bench.name));
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Paper Fig. 7: total FLOPs per LM-PRM combination with and without early
+//! rejection — the bar chart's heights as a table. The paper's headline:
+//! consistent reductions, up to 9x at the larger tau, with the
+//! exploratory-LM (Qwen-analog) combos showing the largest absolute
+//! savings (Obs. 5).
+
+mod common;
+
+use erprm::config::SearchMode;
+use erprm::harness::{run_cell, Cell};
+use erprm::util::benchkit::{fmt_flops, Table};
+use erprm::workload::SATMATH;
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let problems = common::problems(10);
+    let n = 16;
+
+    let mut table = Table::new(
+        &format!("Fig. 7 — total FLOPs per combo (satmath-s, N={n})"),
+        &["combo", "vanilla", "ER(tau=8)", "ER(tau=16)", "best reduction"],
+    );
+    for (lm, lm_label) in [("lm-concise", "Llama-a"), ("lm-verbose", "Qwen-a")] {
+        for (prm, prm_label) in [("prm-large", "Math-7b-a"), ("prm-small", "Skywork-1.5b-a")] {
+            let mut flops = Vec::new();
+            for (mode, tau) in [
+                (SearchMode::Vanilla, 1usize),
+                (SearchMode::EarlyRejection, 8),
+                (SearchMode::EarlyRejection, 16),
+            ] {
+                let cell = Cell {
+                    bench: SATMATH,
+                    lm_ckpt: lm.into(),
+                    prm_ckpt: prm.into(),
+                    mode,
+                    n_beams: n,
+                    tau,
+                };
+                match run_cell(&engine, &cell, problems, 47) {
+                    Ok(res) => flops.push(res.ledger.total_flops()),
+                    Err(e) => {
+                        eprintln!("cell failed: {e}");
+                        flops.push(f64::NAN);
+                    }
+                }
+            }
+            let best = flops[1..]
+                .iter()
+                .cloned()
+                .fold(f64::INFINITY, f64::min);
+            table.row(vec![
+                format!("{lm_label}+{prm_label}"),
+                fmt_flops(flops[0]),
+                fmt_flops(flops[1]),
+                fmt_flops(flops[2]),
+                format!("{:.2}x", flops[0] / best),
+            ]);
+        }
+    }
+    table.emit("fig7_total_flops");
+}

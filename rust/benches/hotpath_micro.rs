@@ -1,0 +1,107 @@
+//! L3 hot-path microbenches (the perf pass's measurement tool):
+//! PJRT call latencies per program class, host-side coordinator costs,
+//! and substrate costs (JSON, sampler, policy) — none of which may
+//! dominate the decode loop.
+
+mod common;
+
+use std::time::Duration;
+
+use erprm::coordinator::policy::RejectPolicy;
+use erprm::coordinator::sampler;
+use erprm::tokenizer as tk;
+use erprm::util::benchkit::{bench_fn, bench_header};
+use erprm::util::json::Json;
+use erprm::util::rng::Rng;
+use erprm::workload::{gen_problem, SATMATH};
+
+fn main() {
+    bench_header("hot-path micro");
+    let budget = Duration::from_secs(3);
+
+    // ---------- host-side substrate costs
+    let mut rng = Rng::new(1);
+    let logits: Vec<f32> = (0..24).map(|_| rng.f32()).collect();
+    let r = bench_fn("sampler: first tokens (N=64)", 3, 200, budget, || {
+        std::hint::black_box(sampler::sample_first_tokens(&logits, 64, 0.7, &mut rng));
+    });
+    println!("{}", r.report());
+
+    let keys: Vec<u64> = (0..64).collect();
+    let r = bench_fn("sampler: decode key material (B=64)", 3, 200, budget, || {
+        std::hint::black_box(sampler::decode_keys(&keys, 7));
+    });
+    println!("{}", r.report());
+
+    let scored: Vec<(usize, f32)> = (0..64).map(|i| (i, (i as f32 * 0.37) % 1.0)).collect();
+    let r = bench_fn("policy: top-N/M select (N=64)", 3, 200, budget, || {
+        std::hint::black_box(RejectPolicy::TopK { keep: 16 }.select(&scored));
+    });
+    println!("{}", r.report());
+
+    let body = r#"{"v0": 61, "ops": [["-",5],["*",6],["+",4]], "mode": "er", "n_beams": 16}"#;
+    let r = bench_fn("json: parse /solve body", 3, 500, budget, || {
+        std::hint::black_box(Json::parse(body).unwrap());
+    });
+    println!("{}", r.report());
+
+    // ---------- PJRT call latencies (the real hot path)
+    let Some(engine) = common::engine() else { return };
+    let mut rng = Rng::new(2);
+    let p = gen_problem(&mut rng, &SATMATH);
+    let prompt = p.prompt_tokens();
+
+    let r = bench_fn("pjrt: lm prefill b=1", 1, 50, budget, || {
+        std::hint::black_box(engine.lm_prefill("lm-concise", &prompt).unwrap());
+    });
+    println!("{}", r.report());
+
+    for b in [4usize, 16, 64] {
+        let (_, kv1) = engine.lm_prefill("lm-concise", &prompt).unwrap();
+        let mut kv = engine.kv_broadcast("lm-concise", &kv1, b).unwrap();
+        let prev = vec![tk::DIG0; b];
+        let keys: Vec<u32> = (0..2 * b as u32).collect();
+        let r = bench_fn(&format!("pjrt: lm decode block b={b}"), 2, 40, budget, || {
+            if kv.remaining() < 8 {
+                kv = engine.kv_broadcast("lm-concise", &kv1, b).unwrap();
+            }
+            std::hint::black_box(
+                engine.lm_decode_block("lm-concise", &mut kv, &prev, 0.7, &keys).unwrap(),
+            );
+        });
+        println!("{}", r.report());
+    }
+
+    for b in [4usize, 16] {
+        let kv1 = engine.prm_prefill("prm-large", &prompt).unwrap();
+        let mut kv = engine.kv_broadcast("prm-large", &kv1, b).unwrap();
+        let tokens = vec![tk::DIG0; b * engine.manifest.score_block];
+        let r = bench_fn(&format!("pjrt: prm-large score block b={b}"), 2, 30, budget, || {
+            if kv.remaining() < 32 {
+                kv = engine.kv_broadcast("prm-large", &kv1, b).unwrap();
+            }
+            std::hint::black_box(engine.prm_score_block("prm-large", &mut kv, &tokens).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    let (_, kv1) = engine.lm_prefill("lm-concise", &prompt).unwrap();
+    let kv = engine.kv_broadcast("lm-concise", &kv1, 16).unwrap();
+    let idx: Vec<i32> = (0..16).rev().collect();
+    let mut kvm = kv;
+    let r = bench_fn("pjrt: kv gather b=16", 2, 50, budget, || {
+        engine.kv_gather("lm-concise", &mut kvm, &idx).unwrap();
+    });
+    println!("{}", r.report());
+
+    let stats = engine.stats();
+    println!(
+        "\nengine stats: {} executions, {:.2}s exec wall, {} compiles ({:.1}s), {:.1} MiB up / {:.1} MiB down",
+        stats.executions,
+        stats.execute_wall_s,
+        stats.compiles,
+        stats.compile_wall_s,
+        stats.host_bytes_up as f64 / (1 << 20) as f64,
+        stats.host_bytes_down as f64 / (1 << 20) as f64,
+    );
+}

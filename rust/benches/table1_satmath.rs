@@ -1,0 +1,63 @@
+//! Paper Table 1: SAT-MATH grid — accuracy + total FLOPs for every
+//! (LM, PRM) combo under vanilla decoding and ER(tau) across beam widths.
+
+mod common;
+
+use erprm::config::SearchMode;
+use erprm::harness::{run_cell, Cell};
+use erprm::util::benchkit::{fmt_flops, Table};
+use erprm::workload::SATMATH;
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let problems = common::problems(12);
+    let seed = 42;
+
+    for lm in ["lm-concise", "lm-verbose"] {
+        for prm in ["prm-large", "prm-small"] {
+            let mut table = Table::new(
+                &format!(
+                    "Table 1 (satmath-s) — {lm} + {prm}, {problems} problems/cell"
+                ),
+                &["setting", "N", "accuracy %", "total FLOPs", "x vs vanilla"],
+            );
+            for n in common::n_grid() {
+                let mut settings = vec![(SearchMode::Vanilla, 1usize, "vanilla".to_string())];
+                for tau in common::tau_grid() {
+                    settings.push((SearchMode::EarlyRejection, tau, format!("ER(tau={tau})")));
+                }
+                let mut base_flops = None;
+                for (mode, tau, label) in settings {
+                    let cell = Cell {
+                        bench: SATMATH,
+                        lm_ckpt: lm.into(),
+                        prm_ckpt: prm.into(),
+                        mode,
+                        n_beams: n,
+                        tau,
+                    };
+                    match run_cell(&engine, &cell, problems, seed) {
+                        Ok(res) => {
+                            let total = res.ledger.total_flops();
+                            if mode == SearchMode::Vanilla {
+                                base_flops = Some(total);
+                            }
+                            let reduction = base_flops
+                                .map(|b| format!("{:.2}x", b / total))
+                                .unwrap_or_else(|| "-".into());
+                            table.row(vec![
+                                label,
+                                n.to_string(),
+                                format!("{:.1}", res.accuracy),
+                                fmt_flops(total),
+                                reduction,
+                            ]);
+                        }
+                        Err(e) => eprintln!("cell failed: {e}"),
+                    }
+                }
+            }
+            table.emit(&format!("table1_{lm}_{prm}"));
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Paper Table 2: Math-500 + AIME grids with the MathShepherd-analog PRM
+//! (prm-large), both LMs, vanilla vs ER(tau).
+
+mod common;
+
+use erprm::config::SearchMode;
+use erprm::harness::{run_cell, Cell};
+use erprm::util::benchkit::{fmt_flops, Table};
+use erprm::workload::{AIME, MATH500};
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let problems = common::problems(10);
+    let seed = 43;
+
+    for bench in [MATH500, AIME] {
+        for lm in ["lm-concise", "lm-verbose"] {
+            let mut table = Table::new(
+                &format!("Table 2 ({}) — {lm} + prm-large, {problems} problems/cell", bench.name),
+                &["setting", "N", "accuracy %", "total FLOPs", "x vs vanilla"],
+            );
+            for n in common::n_grid() {
+                let mut base = None;
+                let mut settings = vec![(SearchMode::Vanilla, 1usize, "vanilla".to_string())];
+                for tau in common::tau_grid() {
+                    settings.push((SearchMode::EarlyRejection, tau, format!("ER(tau={tau})")));
+                }
+                for (mode, tau, label) in settings {
+                    let cell = Cell {
+                        bench,
+                        lm_ckpt: lm.into(),
+                        prm_ckpt: "prm-large".into(),
+                        mode,
+                        n_beams: n,
+                        tau,
+                    };
+                    match run_cell(&engine, &cell, problems, seed) {
+                        Ok(res) => {
+                            let total = res.ledger.total_flops();
+                            if mode == SearchMode::Vanilla {
+                                base = Some(total);
+                            }
+                            table.row(vec![
+                                label,
+                                n.to_string(),
+                                format!("{:.1}", res.accuracy),
+                                fmt_flops(total),
+                                base.map(|b| format!("{:.2}x", b / total))
+                                    .unwrap_or_else(|| "-".into()),
+                            ]);
+                        }
+                        Err(e) => eprintln!("cell failed: {e}"),
+                    }
+                }
+            }
+            table.emit(&format!("table2_{}_{lm}", bench.name));
+        }
+    }
+}

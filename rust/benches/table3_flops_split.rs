@@ -1,0 +1,60 @@
+//! Paper Table 3: total FLOPs split LLM vs PRM for each LM-PRM combination
+//! under vanilla, ER(tau=8-analog of 32) and ER(tau=16-analog of 64).
+
+mod common;
+
+use erprm::config::SearchMode;
+use erprm::harness::{run_cell, Cell};
+use erprm::util::benchkit::{fmt_flops, Table};
+use erprm::workload::SATMATH;
+
+fn main() {
+    let Some(engine) = common::engine() else { return };
+    let problems = common::problems(10);
+    let n = 16;
+    let seed = 44;
+
+    let mut table = Table::new(
+        &format!("Table 3 — FLOPs split (satmath-s, N={n}, {problems} problems/cell)"),
+        &["combo", "setting", "LM FLOPs", "PRM FLOPs", "total", "x vs vanilla"],
+    );
+    for (lm, lm_label) in [("lm-concise", "Llama-a"), ("lm-verbose", "Qwen-a")] {
+        for (prm, prm_label) in [("prm-large", "Math"), ("prm-small", "Skywork")] {
+            let combo = format!("{lm_label}+{prm_label}");
+            let mut base = None;
+            for (mode, tau, label) in [
+                (SearchMode::Vanilla, 1usize, "vanilla"),
+                (SearchMode::EarlyRejection, 8, "ER(tau=8)"),
+                (SearchMode::EarlyRejection, 16, "ER(tau=16)"),
+            ] {
+                let cell = Cell {
+                    bench: SATMATH,
+                    lm_ckpt: lm.into(),
+                    prm_ckpt: prm.into(),
+                    mode,
+                    n_beams: n,
+                    tau,
+                };
+                match run_cell(&engine, &cell, problems, seed) {
+                    Ok(res) => {
+                        let r = res.ledger.report();
+                        if mode == SearchMode::Vanilla {
+                            base = Some(r.total_flops);
+                        }
+                        table.row(vec![
+                            combo.clone(),
+                            label.into(),
+                            fmt_flops(r.lm_flops),
+                            fmt_flops(r.prm_flops),
+                            fmt_flops(r.total_flops),
+                            base.map(|b| format!("{:.2}x", b / r.total_flops))
+                                .unwrap_or_else(|| "-".into()),
+                        ]);
+                    }
+                    Err(e) => eprintln!("cell failed: {e}"),
+                }
+            }
+        }
+    }
+    table.emit("table3_flops_split");
+}

@@ -1,0 +1,64 @@
+//! Paper Sec. 4 reproduction: the sqrt(tau/L) correlation law and the
+//! sub-Gaussian prune-the-optimal-beam bound, Monte-Carlo validated.
+
+mod common;
+
+use erprm::sim;
+use erprm::util::benchkit::Table;
+
+fn main() {
+    let trials = 6000;
+
+    let mut t1 = Table::new(
+        "Sec. 4 — rho(P,F) = sqrt(tau/L) (toy model, L=64)",
+        &["tau", "pearson (MC)", "kendall (MC)", "exact sqrt(tau/L)"],
+    );
+    for tau in [4usize, 8, 16, 24, 32, 48, 64] {
+        let (p, k) = sim::toy_correlation(tau, 64, trials, 7);
+        t1.row(vec![
+            tau.to_string(),
+            format!("{p:.3}"),
+            format!("{k:.3}"),
+            format!("{:.3}", sim::toy_correlation_exact(tau, 64)),
+        ]);
+    }
+    t1.emit("theory_sqrt_law");
+
+    let mut t2 = Table::new(
+        "Sec. 4 — Pr[prune optimal] <= (N-1) exp(-Delta^2/4sigma^2)  (N=16, M=4)",
+        &["tau", "delta/token", "empirical Pr", "bound", "holds"],
+    );
+    for &(tau, d) in &[
+        (4usize, 0.25f64),
+        (8, 0.25),
+        (16, 0.25),
+        (32, 0.25),
+        (64, 0.25),
+        (16, 0.1),
+        (16, 0.5),
+        (16, 1.0),
+    ] {
+        let (emp, bound) = sim::prune_probability(16, 4, tau, d, 1.0, trials, 11);
+        t2.row(vec![
+            tau.to_string(),
+            format!("{d:.2}"),
+            format!("{emp:.4}"),
+            format!("{bound:.4}"),
+            (emp <= bound + 0.02).to_string(),
+        ]);
+    }
+    t2.emit("theory_prune_bound");
+
+    let mut t3 = Table::new(
+        "Sec. 4 — min tau for target correlation (tau >= rho*^2 L)",
+        &["rho*", "L", "min tau"],
+    );
+    for &(rho, l) in &[(0.7f64, 100usize), (0.8, 100), (0.9, 100), (0.8, 32)] {
+        t3.row(vec![
+            format!("{rho:.1}"),
+            l.to_string(),
+            sim::min_tau_for_rho(rho, l).to_string(),
+        ]);
+    }
+    t3.emit("theory_min_tau");
+}

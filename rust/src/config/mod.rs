@@ -1,0 +1,315 @@
+//! Typed configuration system (JSON-backed, env-overridable).
+//!
+//! Three config groups cover the stack: `EngineConfig` (artifacts, models),
+//! `SearchConfig` (beam search / early rejection parameters — the paper's
+//! experiment axes), and `ServerConfig` (HTTP front end). `load_file`
+//! reads a JSON config; every field has a sensible default so `erprm serve`
+//! works with no config at all.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Which search pipeline to run — the paper's two decoders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Paper Algorithm 2: score only fully completed steps.
+    Vanilla,
+    /// Paper Algorithm 3: partial reward at tau tokens, prune, complete.
+    EarlyRejection,
+}
+
+impl SearchMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "vanilla" => Ok(SearchMode::Vanilla),
+            "er" | "early-rejection" | "early_rejection" => Ok(SearchMode::EarlyRejection),
+            other => Err(Error::parse(format!("unknown search mode '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchMode::Vanilla => "vanilla",
+            SearchMode::EarlyRejection => "er",
+        }
+    }
+}
+
+/// How per-token PRM scores aggregate into a step/beam reward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregation {
+    /// min over step scores ("let's verify step by step" convention).
+    Min,
+    /// mean over step scores.
+    Mean,
+    /// score at the last token of the step.
+    Last,
+}
+
+impl Aggregation {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "min" => Ok(Aggregation::Min),
+            "mean" => Ok(Aggregation::Mean),
+            "last" => Ok(Aggregation::Last),
+            other => Err(Error::parse(format!("unknown aggregation '{other}'"))),
+        }
+    }
+}
+
+/// Engine-level config: where artifacts live, which checkpoints serve.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    pub lm_checkpoint: String,  // "lm-concise" | "lm-verbose"
+    pub prm_model: String,      // "prm-large" | "prm-small"
+    pub temperature: f32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            lm_checkpoint: "lm-concise".into(),
+            prm_model: "prm-large".into(),
+            temperature: 0.7,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The serving temperature the experiments use per LM behaviour class:
+    /// concise (Llama-analog) decodes colder than verbose (Qwen-analog).
+    pub fn default_temperature(lm_checkpoint: &str) -> f32 {
+        if lm_checkpoint.contains("verbose") {
+            0.9
+        } else {
+            0.5
+        }
+    }
+}
+
+/// Search config — the paper's experiment axes (Sec. 5).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub mode: SearchMode,
+    /// Beam count N.
+    pub n_beams: usize,
+    /// Expansion factor M (keep top N/M, expand each by M). Paper: M=4.
+    pub m_expand: usize,
+    /// Early-rejection prefix length tau (tokens into the current step).
+    pub tau: usize,
+    /// Two-tier batching: batch size for the prefix phase (b1) and the
+    /// completion phase (b2); b1 >= b2 per the paper's Sec. 3.2.
+    pub b1: usize,
+    pub b2: usize,
+    /// Aggregation of per-token PRM scores into step rewards.
+    pub agg: Aggregation,
+    /// Hard cap on generated tokens per beam per step (runaway guard).
+    pub max_step_tokens: usize,
+    /// Hard cap on reasoning steps (search depth).
+    pub max_steps: usize,
+    /// RNG seed for sampling.
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            mode: SearchMode::EarlyRejection,
+            n_beams: 16,
+            m_expand: 4,
+            tau: 8,
+            b1: 64,
+            b2: 16,
+            agg: Aggregation::Mean,
+            max_step_tokens: 64,
+            max_steps: 8,
+            seed: 0,
+        }
+    }
+}
+
+impl SearchConfig {
+    pub fn keep(&self) -> usize {
+        (self.n_beams / self.m_expand).max(1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_beams == 0 || self.m_expand == 0 {
+            return Err(Error::invalid("n_beams and m_expand must be positive"));
+        }
+        if self.n_beams % self.m_expand != 0 {
+            return Err(Error::invalid(format!(
+                "n_beams ({}) must be divisible by m_expand ({})",
+                self.n_beams, self.m_expand
+            )));
+        }
+        if self.b2 > self.b1 {
+            return Err(Error::invalid(format!(
+                "two-tier batching requires b1 >= b2 (got b1={} b2={})",
+                self.b1, self.b2
+            )));
+        }
+        if self.tau == 0 || self.tau > self.max_step_tokens {
+            return Err(Error::invalid(format!(
+                "tau ({}) must be in 1..=max_step_tokens ({})",
+                self.tau, self.max_step_tokens
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// HTTP server config.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:8377".into(), workers: 2, max_body_bytes: 1 << 20 }
+    }
+}
+
+/// Whole-stack config file.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub engine: EngineConfig,
+    pub search: SearchConfig,
+    pub server: ServerConfig,
+}
+
+impl Config {
+    pub fn from_json(v: &Json) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(e) = v.get("engine") {
+            if let Some(s) = e.get("artifacts_dir").and_then(Json::as_str) {
+                cfg.engine.artifacts_dir = PathBuf::from(s);
+            }
+            if let Some(s) = e.get("lm_checkpoint").and_then(Json::as_str) {
+                cfg.engine.lm_checkpoint = s.to_string();
+            }
+            if let Some(s) = e.get("prm_model").and_then(Json::as_str) {
+                cfg.engine.prm_model = s.to_string();
+            }
+            if let Some(t) = e.get("temperature").and_then(Json::as_f64) {
+                cfg.engine.temperature = t as f32;
+            }
+        }
+        if let Some(s) = v.get("search") {
+            if let Some(m) = s.get("mode").and_then(Json::as_str) {
+                cfg.search.mode = SearchMode::parse(m)?;
+            }
+            if let Some(n) = s.get("n_beams").and_then(Json::as_usize) {
+                cfg.search.n_beams = n;
+            }
+            if let Some(n) = s.get("m_expand").and_then(Json::as_usize) {
+                cfg.search.m_expand = n;
+            }
+            if let Some(n) = s.get("tau").and_then(Json::as_usize) {
+                cfg.search.tau = n;
+            }
+            if let Some(n) = s.get("b1").and_then(Json::as_usize) {
+                cfg.search.b1 = n;
+            }
+            if let Some(n) = s.get("b2").and_then(Json::as_usize) {
+                cfg.search.b2 = n;
+            }
+            if let Some(a) = s.get("agg").and_then(Json::as_str) {
+                cfg.search.agg = Aggregation::parse(a)?;
+            }
+            if let Some(n) = s.get("seed").and_then(Json::as_i64) {
+                cfg.search.seed = n as u64;
+            }
+            if let Some(n) = s.get("max_steps").and_then(Json::as_usize) {
+                cfg.search.max_steps = n;
+            }
+            if let Some(n) = s.get("max_step_tokens").and_then(Json::as_usize) {
+                cfg.search.max_step_tokens = n;
+            }
+        }
+        if let Some(s) = v.get("server") {
+            if let Some(a) = s.get("addr").and_then(Json::as_str) {
+                cfg.server.addr = a.to_string();
+            }
+            if let Some(w) = s.get("workers").and_then(Json::as_usize) {
+                cfg.server.workers = w;
+            }
+        }
+        cfg.search.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load_file(path: &Path) -> Result<Config> {
+        let src = std::fs::read_to_string(path)?;
+        Config::from_json(&Json::parse(&src)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SearchConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{"engine": {"lm_checkpoint": "lm-verbose", "temperature": 0.9},
+                "search": {"mode": "vanilla", "n_beams": 32, "tau": 16},
+                "server": {"addr": "0.0.0.0:9000"}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.engine.lm_checkpoint, "lm-verbose");
+        assert_eq!(c.search.mode, SearchMode::Vanilla);
+        assert_eq!(c.search.n_beams, 32);
+        assert_eq!(c.search.tau, 16);
+        assert_eq!(c.server.addr, "0.0.0.0:9000");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut s = SearchConfig::default();
+        s.n_beams = 10;
+        s.m_expand = 4;
+        assert!(s.validate().is_err()); // not divisible
+        let mut s = SearchConfig::default();
+        s.b1 = 4;
+        s.b2 = 16;
+        assert!(s.validate().is_err()); // b2 > b1
+        let mut s = SearchConfig::default();
+        s.tau = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(SearchMode::parse("er").unwrap(), SearchMode::EarlyRejection);
+        assert_eq!(SearchMode::parse("vanilla").unwrap(), SearchMode::Vanilla);
+        assert!(SearchMode::parse("x").is_err());
+        assert_eq!(SearchMode::EarlyRejection.name(), "er");
+    }
+
+    #[test]
+    fn keep_rounds_up_to_one() {
+        let mut s = SearchConfig::default();
+        s.n_beams = 4;
+        s.m_expand = 4;
+        assert_eq!(s.keep(), 1);
+    }
+
+    #[test]
+    fn default_temperature_by_behaviour() {
+        assert!(EngineConfig::default_temperature("lm-verbose") > EngineConfig::default_temperature("lm-concise"));
+    }
+}

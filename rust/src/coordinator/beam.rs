@@ -1,0 +1,336 @@
+//! Beam bookkeeping: the host-side state of every candidate trajectory.
+//!
+//! A `Beam` owns the *clean* token sequence it has committed (junk from
+//! lockstep block overshoot never enters `gen`), its per-token PRM scores,
+//! step segmentation, and the pending-token discipline that keeps the
+//! host view consistent with the device KV cache (see
+//! `python/compile/model.py` docstring for the cache contract).
+
+use crate::config::Aggregation;
+use crate::tokenizer as tk;
+
+/// One candidate trajectory bound to a KV slot of the same index.
+#[derive(Debug, Clone)]
+pub struct Beam {
+    /// Clean generated tokens (solution region only, prompt excluded).
+    pub gen: Vec<i32>,
+    /// PRM score per `gen` token; filled as the scorer catches up.
+    pub scores: Vec<f32>,
+    /// Index into `gen` where the current (incomplete) step starts.
+    pub step_start: usize,
+    /// Aggregated reward of each completed step.
+    pub step_rewards: Vec<f32>,
+    /// Next token to feed the LM (sampled+accepted, KV not yet written).
+    pub pending: i32,
+    /// Number of `gen` tokens already fed to the PRM.
+    pub prm_fed: usize,
+    /// Beam finished (EOS committed).
+    pub finished: bool,
+    /// Beam rejected by the policy (slot reusable).
+    pub dead: bool,
+    /// Step boundary (`;`) committed but reward not yet aggregated; the
+    /// beam must not decode until `finalize_step` closes the step.
+    pub awaiting_finalize: bool,
+    /// Per-beam RNG stream id (feeds the in-graph sampler keys).
+    pub key: u64,
+}
+
+impl Beam {
+    /// `first_token` is the first *generated* token (sampled host-side from
+    /// the prefill logits): it enters `gen` immediately and is also the
+    /// pending token (its KV is written by the first decode call).
+    pub fn new(first_token: i32, key: u64) -> Self {
+        let mut gen = Vec::with_capacity(256);
+        gen.push(first_token);
+        Beam {
+            gen,
+            scores: Vec::with_capacity(256),
+            step_start: 0,
+            step_rewards: Vec::new(),
+            pending: first_token,
+            prm_fed: 0,
+            finished: false,
+            dead: false,
+            awaiting_finalize: false,
+            key,
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        !self.finished && !self.dead
+    }
+
+    /// Tokens of the current (possibly incomplete) step.
+    pub fn current_step(&self) -> &[i32] {
+        &self.gen[self.step_start..]
+    }
+
+    /// Scores of the current step's tokens that the PRM has produced so far.
+    pub fn current_step_scores(&self) -> &[f32] {
+        let hi = self.scores.len();
+        &self.scores[self.step_start.min(hi)..hi]
+    }
+
+    /// Accept sampled tokens from a decode block: commits tokens up to and
+    /// including the first boundary (`;` or EOS). Returns
+    /// `(n_committed_fed, boundary)` where `n_committed_fed` is how many of
+    /// the block's KV writes are clean for this slot (prev token + fed
+    /// accepted samples) — the amount the caller passes to `KvSet::commit`.
+    pub fn accept_block(&mut self, sampled: &[i32]) -> (usize, Option<i32>) {
+        debug_assert!(self.active());
+        let block = sampled.len();
+        let mut boundary = None;
+        let mut accepted = 0;
+        for (i, &t) in sampled.iter().enumerate() {
+            self.gen.push(t);
+            accepted = i + 1;
+            if t == tk::SEMI || t == tk::EOS {
+                boundary = Some(t);
+                break;
+            }
+        }
+        // fed tokens this block: prev at +0, sampled[0..block-1] at +1..;
+        // the last accepted sample's KV is unwritten iff it sits at index
+        // block-1 (never fed) — it becomes the pending token.
+        let last_idx = accepted - 1;
+        let fed_accepted = last_idx.min(block - 1);
+        match boundary {
+            Some(tk::EOS) => {
+                self.finished = true;
+                // pending irrelevant once finished
+            }
+            Some(b) => {
+                self.pending = b;
+                self.awaiting_finalize = true;
+            }
+            None => {
+                self.pending = *sampled.last().unwrap();
+            }
+        }
+        (1 + fed_accepted, boundary)
+    }
+
+    /// Length of the current step in tokens.
+    pub fn current_step_len(&self) -> usize {
+        self.gen.len() - self.step_start
+    }
+
+    /// Partial reward of the current step after `tau` tokens: aggregation
+    /// over the first `min(tau, len)` scored tokens of the step. Returns
+    /// None if the scorer hasn't produced them yet.
+    pub fn partial_reward(&self, tau: usize, agg: Aggregation) -> Option<f32> {
+        let want = tau.min(self.current_step_len());
+        if want == 0 {
+            return None;
+        }
+        let have = self.scores.len().saturating_sub(self.step_start);
+        if have < want {
+            return None;
+        }
+        Some(aggregate(&self.scores[self.step_start..self.step_start + want], agg))
+    }
+
+    /// Close the current step: aggregate its reward from the (complete)
+    /// scores and advance `step_start`. Panics if scores are missing.
+    pub fn finalize_step(&mut self, agg: Aggregation) -> f32 {
+        let end = self.gen.len();
+        assert!(self.scores.len() >= end, "finalize_step before scorer caught up");
+        let r = aggregate(&self.scores[self.step_start..end], agg);
+        self.step_rewards.push(r);
+        self.step_start = end;
+        self.awaiting_finalize = false;
+        r
+    }
+
+    /// Whole-beam quality: min over completed step rewards (the standard
+    /// "verify step by step" convention), or the running aggregate if no
+    /// step completed yet.
+    pub fn beam_reward(&self) -> f32 {
+        if self.step_rewards.is_empty() {
+            if self.scores.is_empty() {
+                0.5
+            } else {
+                aggregate(&self.scores, Aggregation::Min)
+            }
+        } else {
+            self.step_rewards.iter().cloned().fold(f32::INFINITY, f32::min)
+        }
+    }
+
+    /// The extracted final answer, if finished and well-formed.
+    pub fn answer(&self) -> Option<i64> {
+        tk::extract_answer(&self.gen)
+    }
+}
+
+fn aggregate(scores: &[f32], agg: Aggregation) -> f32 {
+    assert!(!scores.is_empty());
+    match agg {
+        Aggregation::Min => scores.iter().cloned().fold(f32::INFINITY, f32::min),
+        Aggregation::Mean => scores.iter().sum::<f32>() / scores.len() as f32,
+        Aggregation::Last => *scores.last().unwrap(),
+    }
+}
+
+/// The pool of beams bound to KV slots `0..batch`.
+#[derive(Debug, Clone)]
+pub struct BeamSet {
+    pub beams: Vec<Beam>,
+}
+
+impl BeamSet {
+    pub fn from_beams(beams: Vec<Beam>) -> Self {
+        BeamSet { beams }
+    }
+
+    /// Uniform first token for every slot (tests / degenerate cases).
+    pub fn new(batch: usize, first_token: i32, key_base: u64) -> Self {
+        BeamSet {
+            beams: (0..batch)
+                .map(|i| Beam::new(first_token, key_base.wrapping_add(i as u64)))
+                .collect(),
+        }
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.beams.len()).filter(|&i| self.beams[i].active()).collect()
+    }
+
+    pub fn finished_beams(&self) -> Vec<&Beam> {
+        self.beams.iter().filter(|b| b.finished && !b.dead).collect()
+    }
+
+    /// Best finished beam by reward; falls back to best unfinished.
+    pub fn best(&self) -> Option<&Beam> {
+        let fin = self
+            .beams
+            .iter()
+            .filter(|b| b.finished && !b.dead)
+            .max_by(|a, b| a.beam_reward().partial_cmp(&b.beam_reward()).unwrap());
+        fin.or_else(|| {
+            self.beams
+                .iter()
+                .filter(|b| !b.dead)
+                .max_by(|a, b| a.beam_reward().partial_cmp(&b.beam_reward()).unwrap())
+        })
+    }
+
+    /// Permute beams to match a KV gather/resize: `new[i] = old[idx[i]]`.
+    pub fn permute(&mut self, idx: &[i32], key_base: u64) {
+        let old = self.beams.clone();
+        self.beams = idx
+            .iter()
+            .enumerate()
+            .map(|(i, &src)| {
+                let mut b = old[src as usize].clone();
+                // fresh stream per slot so expanded siblings diverge
+                b.key = key_base.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                b
+            })
+            .collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_beam_contains_first_token() {
+        let b = Beam::new(tk::DIG0 + 5, 0);
+        assert_eq!(b.gen, vec![tk::DIG0 + 5]);
+        assert_eq!(b.pending, tk::DIG0 + 5);
+        assert!(b.active());
+    }
+
+    #[test]
+    fn accept_block_no_boundary() {
+        let mut b = Beam::new(tk::DIG0, 0);
+        let (fed, bd) = b.accept_block(&[tk::DIG0 + 1, tk::DIG0 + 2, tk::DIG0 + 3, tk::DIG0 + 4]);
+        assert_eq!(bd, None);
+        assert_eq!(b.gen.len(), 5);
+        // prev + first 3 samples fed; 4th pending
+        assert_eq!(fed, 4);
+        assert_eq!(b.pending, tk::DIG0 + 4);
+        assert!(b.active());
+    }
+
+    #[test]
+    fn accept_block_semi_mid_block() {
+        let mut b = Beam::new(tk::DIG0, 0);
+        let (fed, bd) = b.accept_block(&[tk::DIG0 + 1, tk::SEMI, tk::DIG0 + 9, tk::DIG0 + 9]);
+        assert_eq!(bd, Some(tk::SEMI));
+        assert_eq!(b.gen, vec![tk::DIG0, tk::DIG0 + 1, tk::SEMI]);
+        // prev + s0 written clean; ';' was fed but stays pending (re-fed)
+        assert_eq!(fed, 2);
+        assert_eq!(b.pending, tk::SEMI);
+    }
+
+    #[test]
+    fn accept_block_semi_last_position() {
+        let mut b = Beam::new(tk::DIG0, 0);
+        let (fed, bd) = b.accept_block(&[tk::DIG0 + 1, tk::DIG0 + 2, tk::DIG0 + 3, tk::SEMI]);
+        assert_eq!(bd, Some(tk::SEMI));
+        assert_eq!(fed, 4); // prev + 3 fed samples; ';' was never fed
+        assert_eq!(b.pending, tk::SEMI);
+    }
+
+    #[test]
+    fn accept_block_eos_finishes() {
+        let mut b = Beam::new(tk::SEMI, 0);
+        let (_, bd) = b.accept_block(&[tk::ANS, tk::DIG0 + 4, tk::DIG0, tk::EOS]);
+        assert_eq!(bd, Some(tk::EOS));
+        assert!(b.finished);
+        assert_eq!(b.answer(), Some(40));
+    }
+
+    #[test]
+    fn partial_reward_waits_for_scores() {
+        let mut b = Beam::new(tk::DIG0, 0);
+        b.accept_block(&[tk::DIG0, tk::DIG0, tk::DIG0, tk::DIG0]);
+        assert_eq!(b.partial_reward(5, Aggregation::Min), None);
+        b.scores.extend([0.9, 0.8, 0.7, 0.95, 0.99]);
+        assert_eq!(b.partial_reward(3, Aggregation::Min), Some(0.7));
+        assert_eq!(b.partial_reward(2, Aggregation::Mean), Some(0.85));
+        assert_eq!(b.partial_reward(2, Aggregation::Last), Some(0.8));
+    }
+
+    #[test]
+    fn finalize_step_and_beam_reward() {
+        let mut b = Beam::new(tk::DIG0, 0);
+        b.accept_block(&[tk::DIG0, tk::SEMI, tk::DIG0, tk::DIG0]);
+        // gen = [d, d, ';'] -> 3 tokens
+        b.scores.extend([0.9, 0.8, 0.85]);
+        let r = b.finalize_step(Aggregation::Min);
+        assert!((r - 0.8).abs() < 1e-6);
+        assert_eq!(b.step_start, 3);
+        assert_eq!(b.current_step_len(), 0);
+        b.accept_block(&[tk::DIG0, tk::SEMI, tk::PAD, tk::PAD]);
+        b.scores.extend([0.5, 0.6]);
+        b.finalize_step(Aggregation::Min);
+        assert!((b.beam_reward() - 0.5).abs() < 1e-6); // min over steps
+    }
+
+    #[test]
+    fn beamset_permute_copies_state() {
+        let mut set = BeamSet::new(4, tk::SEP, 7);
+        set.beams[2].gen = vec![tk::DIG0];
+        set.beams[2].scores = vec![0.9];
+        // slots 0/1 keep their fresh state: gen == [SEP]
+        set.permute(&[2, 2, 0, 1], 99);
+        assert_eq!(set.beams[0].gen, vec![tk::DIG0]);
+        assert_eq!(set.beams[1].gen, vec![tk::DIG0]);
+        assert_ne!(set.beams[0].key, set.beams[1].key); // siblings diverge
+        assert_eq!(set.beams[2].gen, vec![tk::SEP]); // old slot 0's first token
+    }
+
+    #[test]
+    fn best_prefers_finished() {
+        let mut set = BeamSet::new(2, tk::SEP, 0);
+        set.beams[0].scores = vec![0.99];
+        set.beams[0].gen = vec![tk::DIG0];
+        set.beams[1].finished = true;
+        set.beams[1].step_rewards = vec![0.4];
+        assert!(set.best().unwrap().finished);
+    }
+}

@@ -1,0 +1,56 @@
+//! Best-of-N baseline (paper Sec. 2, "Early Rejection" related work).
+//!
+//! BoN generates N *complete* solutions with no intermediate pruning and
+//! picks the best by PRM score — the decoding regime Speculative Rejection
+//! (Sun et al., 2024) accelerates with an ORM. Here it serves as the
+//! no-search baseline the PRM-guided decoders are measured against: same
+//! engines, same ledger, no step-level selection.
+
+use std::time::Instant;
+
+use crate::config::SearchConfig;
+use crate::coordinator::search::{PhaseTarget, SearchCtx, SolveOutcome};
+use crate::runtime::Engine;
+use crate::util::error::Result;
+use crate::workload::Problem;
+
+/// Generate N full solutions, score them with the PRM, return the best.
+pub fn solve_best_of_n(
+    engine: &Engine,
+    lm_ckpt: &str,
+    prm_ckpt: &str,
+    problem: &Problem,
+    cfg: &SearchConfig,
+    temp: f32,
+) -> Result<SolveOutcome> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let mut ctx = SearchCtx::init(engine, lm_ckpt, prm_ckpt, problem, cfg, temp)?;
+    let mut steps = 0;
+    // drive every beam to EOS (or run-away death), finalizing steps as they
+    // close but never pruning or expanding.
+    for _ in 0..cfg.max_steps {
+        let ok = ctx.decode_phase(PhaseTarget::Boundary)?;
+        let ok2 = ctx.score_catch_up()?;
+        ctx.harvest_finished();
+        if !ok || !ok2 {
+            break;
+        }
+        steps += 1;
+        let mut any = false;
+        for beam in ctx.beams.beams.iter_mut() {
+            if beam.active() && beam.awaiting_finalize {
+                beam.finalize_step(cfg.agg);
+                any = true;
+            }
+        }
+        if !any {
+            break; // all finished or dead
+        }
+    }
+    Ok(ctx.finish(problem, t0, steps))
+}
+
+// Covered end-to-end in rust/tests/integration.rs (needs artifacts). By
+// construction this module has no pruning or expansion code path: BoN's
+// generation FLOPs at width N upper-bound every searched decoder's.

@@ -1,0 +1,154 @@
+//! Analytic FLOPs ledger — the paper's headline metric.
+//!
+//! The paper reports total inference FLOPs split by generator (LLM) and
+//! evaluator (PRM) (Table 3) and the reduction factors (1.4x-9x). FLOPs are
+//! counted analytically — 2 * params per forward token — exactly as the
+//! paper's accounting does; what early rejection changes is *how many
+//! tokens* each component processes. Only logically-required tokens are
+//! charged (the lockstep implementation's on-device junk positions are an
+//! artifact of this backend, not of the algorithm).
+
+/// Token-level accounting for one run (one problem or an aggregate).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FlopsLedger {
+    /// 2*P cost units per token for each component.
+    pub lm_flops_per_token: u64,
+    pub prm_flops_per_token: u64,
+    /// Token counters.
+    pub lm_prefill_tokens: u64,
+    pub lm_decode_tokens: u64,
+    pub prm_prefill_tokens: u64,
+    pub prm_score_tokens: u64,
+    /// Runtime counters (wallclock diagnostics, not FLOPs).
+    pub pjrt_calls: u64,
+}
+
+impl FlopsLedger {
+    pub fn new(lm_flops_per_token: u64, prm_flops_per_token: u64) -> Self {
+        FlopsLedger { lm_flops_per_token, prm_flops_per_token, ..Default::default() }
+    }
+
+    pub fn lm_prefill(&mut self, tokens: usize) {
+        self.lm_prefill_tokens += tokens as u64;
+        self.pjrt_calls += 1;
+    }
+
+    pub fn lm_decode(&mut self, tokens: usize) {
+        self.lm_decode_tokens += tokens as u64;
+    }
+
+    pub fn prm_prefill(&mut self, tokens: usize) {
+        self.prm_prefill_tokens += tokens as u64;
+        self.pjrt_calls += 1;
+    }
+
+    pub fn prm_score(&mut self, tokens: usize) {
+        self.prm_score_tokens += tokens as u64;
+    }
+
+    pub fn call(&mut self) {
+        self.pjrt_calls += 1;
+    }
+
+    pub fn lm_flops(&self) -> f64 {
+        (self.lm_prefill_tokens + self.lm_decode_tokens) as f64 * self.lm_flops_per_token as f64
+    }
+
+    pub fn prm_flops(&self) -> f64 {
+        (self.prm_prefill_tokens + self.prm_score_tokens) as f64
+            * self.prm_flops_per_token as f64
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.lm_flops() + self.prm_flops()
+    }
+
+    /// Merge another ledger (aggregating a problem set).
+    pub fn merge(&mut self, other: &FlopsLedger) {
+        debug_assert_eq!(self.lm_flops_per_token, other.lm_flops_per_token);
+        debug_assert_eq!(self.prm_flops_per_token, other.prm_flops_per_token);
+        self.lm_prefill_tokens += other.lm_prefill_tokens;
+        self.lm_decode_tokens += other.lm_decode_tokens;
+        self.prm_prefill_tokens += other.prm_prefill_tokens;
+        self.prm_score_tokens += other.prm_score_tokens;
+        self.pjrt_calls += other.pjrt_calls;
+    }
+
+    pub fn report(&self) -> FlopsReport {
+        FlopsReport {
+            lm_flops: self.lm_flops(),
+            prm_flops: self.prm_flops(),
+            total_flops: self.total_flops(),
+            lm_tokens: self.lm_prefill_tokens + self.lm_decode_tokens,
+            prm_tokens: self.prm_prefill_tokens + self.prm_score_tokens,
+        }
+    }
+}
+
+/// Summary in the paper's reporting units.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlopsReport {
+    pub lm_flops: f64,
+    pub prm_flops: f64,
+    pub total_flops: f64,
+    pub lm_tokens: u64,
+    pub prm_tokens: u64,
+}
+
+impl FlopsReport {
+    /// Reduction factor of `self` relative to a baseline (paper's "Nx").
+    pub fn reduction_vs(&self, baseline: &FlopsReport) -> f64 {
+        if self.total_flops <= 0.0 {
+            return f64::INFINITY;
+        }
+        baseline.total_flops / self.total_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_splits() {
+        let mut l = FlopsLedger::new(200, 700);
+        l.lm_prefill(10);
+        l.lm_decode(90);
+        l.prm_prefill(10);
+        l.prm_score(40);
+        assert_eq!(l.lm_flops(), 100.0 * 200.0);
+        assert_eq!(l.prm_flops(), 50.0 * 700.0);
+        assert_eq!(l.total_flops(), 100.0 * 200.0 + 50.0 * 700.0);
+        let r = l.report();
+        assert_eq!(r.lm_tokens, 100);
+        assert_eq!(r.prm_tokens, 50);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = FlopsLedger::new(2, 3);
+        a.lm_decode(5);
+        let mut b = FlopsLedger::new(2, 3);
+        b.lm_decode(7);
+        b.prm_score(1);
+        a.merge(&b);
+        assert_eq!(a.lm_decode_tokens, 12);
+        assert_eq!(a.prm_score_tokens, 1);
+    }
+
+    #[test]
+    fn reduction_factor() {
+        let mut base = FlopsLedger::new(2, 2);
+        base.lm_decode(100);
+        let mut er = FlopsLedger::new(2, 2);
+        er.lm_decode(25);
+        let f = er.report().reduction_vs(&base.report());
+        assert!((f - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_ledger_zero() {
+        let l = FlopsLedger::new(10, 10);
+        assert_eq!(l.total_flops(), 0.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! The L3 coordination layer — the paper's system contribution.
+//!
+//! * [`beam`] — beam bookkeeping: clean token sequences, per-token PRM
+//!   scores, step segmentation, pending-token / KV-frontier discipline.
+//! * [`flops`] — the analytic FLOPs ledger (the paper's headline metric),
+//!   split LLM vs PRM as in Table 3.
+//! * [`sampler`] — host-side sampling (first token after prefill) and the
+//!   per-slot RNG key streams fed to the in-graph sampler.
+//! * [`scorer`] — incremental PRM scoring over beam slots (score-block
+//!   batching, backlog tracking, partial/step reward aggregation).
+//! * [`policy`] — rejection policies: the paper's top-N/M rule plus
+//!   threshold and adaptive-tau extensions (paper's future work).
+//! * [`scheduler`] — two-tier batch planning (paper Sec. 3.2): prefix phase
+//!   at b1 >= completion phase at b2.
+//! * [`search`] — Algorithm 2, vanilla PRM-guided beam search (baseline).
+//! * [`early_reject`] — Algorithm 3, beam search with early rejection.
+
+pub mod beam;
+pub mod bon;
+pub mod early_reject;
+pub mod flops;
+pub mod policy;
+pub mod sampler;
+pub mod scheduler;
+pub mod scorer;
+pub mod search;
+
+pub use beam::{Beam, BeamSet};
+pub use bon::solve_best_of_n;
+pub use early_reject::solve_early_rejection;
+pub use flops::{FlopsLedger, FlopsReport};
+pub use search::{solve_vanilla, SolveOutcome};

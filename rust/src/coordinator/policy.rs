@@ -1,0 +1,135 @@
+//! Rejection policies: which beams survive a partial-reward checkpoint.
+//!
+//! The paper's rule is top-N/M by partial reward (Alg. 3 line 8). Two
+//! extensions the paper lists as future work are also provided: an absolute
+//! score threshold, and an adaptive-tau gate that defers rejection when the
+//! partial scores are too close to call (the gap-vs-noise condition of
+//! Sec. 4's sub-Gaussian bound).
+
+/// Decision input: (slot, partial_reward) for every live candidate.
+pub type Scored = (usize, f32);
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RejectPolicy {
+    /// Keep the top `keep` candidates (paper's rule).
+    TopK { keep: usize },
+    /// Keep candidates above `min_score`, but at least `floor` of them.
+    Threshold { min_score: f32, floor: usize },
+    /// Keep top `keep` only if the standardized gap between the kept and
+    /// rejected groups exceeds `min_gap`; otherwise keep everyone (defer
+    /// the decision to a longer prefix — adaptive tau).
+    AdaptiveGap { keep: usize, min_gap: f32 },
+}
+
+impl RejectPolicy {
+    /// Returns the surviving slots, best-first.
+    pub fn select(&self, scored: &[Scored]) -> Vec<usize> {
+        let mut ranked: Vec<Scored> = scored.to_vec();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        match *self {
+            RejectPolicy::TopK { keep } => {
+                ranked.iter().take(keep.max(1)).map(|&(s, _)| s).collect()
+            }
+            RejectPolicy::Threshold { min_score, floor } => {
+                let above: Vec<usize> =
+                    ranked.iter().filter(|&&(_, v)| v >= min_score).map(|&(s, _)| s).collect();
+                if above.len() >= floor.max(1) {
+                    above
+                } else {
+                    ranked.iter().take(floor.max(1)).map(|&(s, _)| s).collect()
+                }
+            }
+            RejectPolicy::AdaptiveGap { keep, min_gap } => {
+                let keep = keep.max(1);
+                if ranked.len() <= keep {
+                    return ranked.iter().map(|&(s, _)| s).collect();
+                }
+                let kept_mean: f32 =
+                    ranked[..keep].iter().map(|&(_, v)| v).sum::<f32>() / keep as f32;
+                let rest = &ranked[keep..];
+                let rest_mean: f32 =
+                    rest.iter().map(|&(_, v)| v).sum::<f32>() / rest.len() as f32;
+                if kept_mean - rest_mean >= min_gap {
+                    ranked.iter().take(keep).map(|&(s, _)| s).collect()
+                } else {
+                    ranked.iter().map(|&(s, _)| s).collect() // defer: keep all
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check_simple};
+
+    fn scored(vals: &[f32]) -> Vec<Scored> {
+        vals.iter().cloned().enumerate().collect()
+    }
+
+    #[test]
+    fn topk_keeps_best() {
+        let s = scored(&[0.1, 0.9, 0.5, 0.7]);
+        let kept = RejectPolicy::TopK { keep: 2 }.select(&s);
+        assert_eq!(kept, vec![1, 3]);
+    }
+
+    #[test]
+    fn topk_at_least_one() {
+        let s = scored(&[0.3]);
+        assert_eq!(RejectPolicy::TopK { keep: 0 }.select(&s), vec![0]);
+    }
+
+    #[test]
+    fn threshold_with_floor() {
+        let s = scored(&[0.1, 0.2, 0.95]);
+        let kept = RejectPolicy::Threshold { min_score: 0.9, floor: 2 }.select(&s);
+        assert_eq!(kept.len(), 2); // floor kicks in
+        assert_eq!(kept[0], 2);
+        let kept2 = RejectPolicy::Threshold { min_score: 0.05, floor: 1 }.select(&s);
+        assert_eq!(kept2.len(), 3);
+    }
+
+    #[test]
+    fn adaptive_gap_defers_when_close() {
+        let close = scored(&[0.80, 0.81, 0.79, 0.805]);
+        let kept = RejectPolicy::AdaptiveGap { keep: 2, min_gap: 0.2 }.select(&close);
+        assert_eq!(kept.len(), 4); // too close: keep all
+        let wide = scored(&[0.95, 0.9, 0.2, 0.1]);
+        let kept = RejectPolicy::AdaptiveGap { keep: 2, min_gap: 0.2 }.select(&wide);
+        assert_eq!(kept, vec![0, 1]);
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let s = scored(&[0.5, 0.5, 0.5]);
+        assert_eq!(RejectPolicy::TopK { keep: 2 }.select(&s), vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_topk_selects_maximal_subset() {
+        check_simple(
+            "topk-maximal",
+            |rng| {
+                let n = rng.below(12) + 1;
+                let keep = rng.below(n) + 1;
+                let vals: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                (keep, vals)
+            },
+            |(keep, vals)| {
+                let kept = RejectPolicy::TopK { keep: *keep }.select(&scored(vals));
+                if kept.len() != (*keep).min(vals.len()).max(1) {
+                    return Err(format!("kept {} of {}", kept.len(), vals.len()));
+                }
+                let min_kept = kept.iter().map(|&s| vals[s]).fold(f32::INFINITY, f32::min);
+                for (i, &v) in vals.iter().enumerate() {
+                    if !kept.contains(&i) && v > min_kept {
+                        return Err(format!("rejected {i} ({v}) > kept min {min_kept}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Host-side sampling utilities.
+//!
+//! The in-graph sampler (temperature categorical, per-slot threefry keys)
+//! handles steady-state decoding; the host side only samples the *first*
+//! generated token per beam from the prefill logits (the first point of
+//! beam diversity) and derives the per-call key material.
+
+use crate::util::rng::Rng;
+
+/// Sample `n` first tokens from prefill logits (one independent draw per
+/// beam) at the given temperature.
+pub fn sample_first_tokens(logits: &[f32], n: usize, temp: f32, rng: &mut Rng) -> Vec<i32> {
+    (0..n).map(|_| rng.sample_logits(logits, temp) as i32).collect()
+}
+
+/// Per-slot u32x2 key material for one decode call: derived from each
+/// beam's stream id and a per-call counter so repeated calls never reuse
+/// keys, and sibling beams (same parent, different slot) diverge.
+pub fn decode_keys(beam_keys: &[u64], call_counter: u64) -> Vec<u32> {
+    let mut out = Vec::with_capacity(beam_keys.len() * 2);
+    for (slot, &k) in beam_keys.iter().enumerate() {
+        let mixed = splitmix(k ^ call_counter.wrapping_mul(0xA24BAED4963EE407) ^ (slot as u64) << 17);
+        out.push((mixed >> 32) as u32);
+        out.push(mixed as u32);
+    }
+    out
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_tokens_in_vocab_and_diverse() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.0f32; 24];
+        let toks = sample_first_tokens(&logits, 16, 1.0, &mut rng);
+        assert_eq!(toks.len(), 16);
+        assert!(toks.iter().all(|&t| (0..24).contains(&t)));
+        let distinct: std::collections::BTreeSet<_> = toks.iter().collect();
+        assert!(distinct.len() > 1);
+    }
+
+    #[test]
+    fn greedy_at_zero_temperature() {
+        let mut rng = Rng::new(2);
+        let mut logits = vec![0.0f32; 10];
+        logits[7] = 5.0;
+        let toks = sample_first_tokens(&logits, 8, 0.0, &mut rng);
+        assert!(toks.iter().all(|&t| t == 7));
+    }
+
+    #[test]
+    fn keys_unique_across_slots_and_calls() {
+        let beam_keys = vec![42u64; 8]; // identical streams (fresh siblings)
+        let a = decode_keys(&beam_keys, 0);
+        let b = decode_keys(&beam_keys, 1);
+        assert_eq!(a.len(), 16);
+        assert_ne!(a, b); // new call, new keys
+        // identical beam keys but different slots must differ
+        assert_ne!(&a[0..2], &a[2..4]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Two-tier batch planning (paper Sec. 3.2).
+//!
+//! Early rejection changes the shape of the work: the prefix phase touches
+//! all N beams for only tau tokens (wide, shallow), the completion phase
+//! touches N/M survivors to the end of the step (narrow, deep). The paper
+//! exploits this by running the prefix phase at a large batch b1 and the
+//! completion phase at a smaller b2. Here that maps to picking the batch
+//! *variant* for each phase and planning the KV resize between them; the
+//! `ablation_two_tier` bench measures the wallclock effect of disabling it.
+
+use crate::util::error::Result;
+
+/// Phase plan for one reasoning step of ER search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TwoTierPlan {
+    /// Batch variant for the prefix phase (all N beams).
+    pub b1: usize,
+    /// Batch variant for the completion phase (N/M survivors).
+    pub b2: usize,
+    /// Whether the completion phase shrinks to b2 (false = stay at b1,
+    /// wasting lockstep compute on dead slots — the ablation baseline).
+    pub shrink: bool,
+}
+
+impl TwoTierPlan {
+    /// Plan from the beam parameters and the exported batch variants.
+    pub fn plan(
+        n_beams: usize,
+        keep: usize,
+        variants: &[usize],
+        enable_two_tier: bool,
+    ) -> Result<TwoTierPlan> {
+        let b1 = smallest_variant(variants, n_beams)?;
+        let b2 = smallest_variant(variants, keep)?;
+        Ok(TwoTierPlan { b1, b2, shrink: enable_two_tier && b2 < b1 })
+    }
+
+    /// Batch the completion phase actually runs at.
+    pub fn completion_batch(&self) -> usize {
+        if self.shrink {
+            self.b2
+        } else {
+            self.b1
+        }
+    }
+}
+
+fn smallest_variant(variants: &[usize], n: usize) -> Result<usize> {
+    variants
+        .iter()
+        .copied()
+        .filter(|&b| b >= n)
+        .min()
+        .ok_or_else(|| {
+            crate::util::error::Error::invalid(format!(
+                "no batch variant >= {n} in {variants:?}"
+            ))
+        })
+}
+
+/// Expansion index plan: map `keep` survivors (in compact order) onto `b1`
+/// slots, `m` children each; leftover slots replicate survivor 0 but are
+/// marked inactive by the caller. Returns (indices, active_count).
+pub fn expansion_indices(keep: usize, m: usize, b1: usize) -> (Vec<i32>, usize) {
+    assert!(keep >= 1);
+    let active = (keep * m).min(b1);
+    let mut idx = Vec::with_capacity(b1);
+    for slot in 0..b1 {
+        if slot < active {
+            idx.push((slot / m).min(keep - 1) as i32);
+        } else {
+            idx.push(0);
+        }
+    }
+    (idx, active)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check_simple;
+
+    const VARIANTS: [usize; 5] = [4, 8, 16, 32, 64];
+
+    #[test]
+    fn plan_picks_variants() {
+        let p = TwoTierPlan::plan(16, 4, &VARIANTS, true).unwrap();
+        assert_eq!((p.b1, p.b2, p.shrink), (16, 4, true));
+        assert_eq!(p.completion_batch(), 4);
+    }
+
+    #[test]
+    fn plan_no_shrink_when_same_variant() {
+        let p = TwoTierPlan::plan(4, 1, &VARIANTS, true).unwrap();
+        assert_eq!((p.b1, p.b2), (4, 4));
+        assert!(!p.shrink);
+    }
+
+    #[test]
+    fn plan_ablation_disables_shrink() {
+        let p = TwoTierPlan::plan(64, 16, &VARIANTS, false).unwrap();
+        assert!(!p.shrink);
+        assert_eq!(p.completion_batch(), 64);
+    }
+
+    #[test]
+    fn plan_errors_beyond_largest() {
+        assert!(TwoTierPlan::plan(128, 4, &VARIANTS, true).is_err());
+    }
+
+    #[test]
+    fn expansion_fills_slots() {
+        let (idx, active) = expansion_indices(4, 4, 16);
+        assert_eq!(active, 16);
+        assert_eq!(idx[0..4], [0, 0, 0, 0]);
+        assert_eq!(idx[4..8], [1, 1, 1, 1]);
+        assert_eq!(idx[15], 3);
+    }
+
+    #[test]
+    fn expansion_partial_fill() {
+        let (idx, active) = expansion_indices(1, 4, 16);
+        assert_eq!(active, 4);
+        assert!(idx.iter().all(|&i| i == 0));
+    }
+
+    #[test]
+    fn prop_expansion_indices_valid() {
+        check_simple(
+            "expansion-valid",
+            |rng| {
+                let keep = rng.below(8) + 1;
+                let m = rng.below(6) + 1;
+                let b1 = [4usize, 8, 16, 32, 64][rng.below(5)];
+                (keep, m, b1)
+            },
+            |&(keep, m, b1)| {
+                let (idx, active) = expansion_indices(keep, m, b1);
+                if idx.len() != b1 {
+                    return Err("wrong arity".into());
+                }
+                if active > b1 || active == 0 {
+                    return Err(format!("active {active} out of range"));
+                }
+                if idx.iter().any(|&i| (i as usize) >= keep) {
+                    return Err("index beyond survivors".into());
+                }
+                // each survivor gets at least one child if room allows
+                if keep * m <= b1 {
+                    for s in 0..keep {
+                        if !idx[..active].contains(&(s as i32)) {
+                            return Err(format!("survivor {s} lost"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

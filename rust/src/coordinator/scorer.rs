@@ -1,0 +1,92 @@
+//! Incremental PRM scoring over beam slots.
+//!
+//! The PRM is a causal decoder with its own KV cache mirroring the beam
+//! slots. Each beam accumulates a backlog of clean generated tokens not
+//! yet scored; `catch_up` drains all backlogs with as few `score_block`
+//! calls as necessary (each call scores up to `score_block` tokens per
+//! slot, lockstep). This is the serving optimization that replaces the
+//! naive "re-run the PRM on the whole prefix at every decision point" —
+//! per decision the PRM pays only for new tokens.
+
+use crate::coordinator::beam::BeamSet;
+use crate::coordinator::flops::FlopsLedger;
+use crate::runtime::{Engine, KvSet};
+use crate::tokenizer as tk;
+use crate::util::error::Result;
+
+/// Drain every active beam's unscored-token backlog through the PRM.
+/// Appends scores to `beam.scores` (aligned with `beam.gen`).
+pub fn catch_up(
+    engine: &Engine,
+    prm_ckpt: &str,
+    prm_kv: &mut KvSet,
+    beams: &mut BeamSet,
+    ledger: &mut FlopsLedger,
+) -> Result<()> {
+    let t = engine.manifest.score_block;
+    let b = prm_kv.batch;
+    loop {
+        // find slots with backlog; include finished beams (their final step
+        // still needs scores) but not dead ones.
+        let mut any = false;
+        for beam in &beams.beams {
+            if !beam.dead && beam.prm_fed < beam.gen.len() {
+                any = true;
+                break;
+            }
+        }
+        if !any {
+            return Ok(());
+        }
+        let mut tokens = vec![tk::PAD; b * t];
+        let mut counts = vec![0usize; b];
+        for (slot, beam) in beams.beams.iter().enumerate().take(b) {
+            if beam.dead {
+                continue;
+            }
+            let backlog = &beam.gen[beam.prm_fed..];
+            let n = backlog.len().min(t);
+            tokens[slot * t..slot * t + n].copy_from_slice(&backlog[..n]);
+            counts[slot] = n;
+        }
+        let frontier = prm_kv.pos_phys;
+        let scores = engine.prm_score_block(prm_ckpt, prm_kv, &tokens)?;
+        ledger.call();
+        for (slot, beam) in beams.beams.iter_mut().enumerate().take(b) {
+            let n = counts[slot];
+            if n == 0 {
+                continue;
+            }
+            for i in 0..n {
+                beam.scores.push(scores[slot * t + i]);
+            }
+            beam.prm_fed += n;
+            ledger.prm_score(n);
+            prm_kv.commit(slot, frontier, n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The scorer's device interaction is covered by the integration tests
+    // (rust/tests/integration.rs) which run against real artifacts. Here we
+    // verify the backlog arithmetic via a pure model of the loop.
+
+    #[test]
+    fn backlog_draining_model() {
+        // model: backlogs drain min(backlog, block) per round, all slots in
+        // lockstep, until empty.
+        let block = 16usize;
+        let mut backlogs = vec![0usize, 5, 16, 37];
+        let mut rounds = 0;
+        while backlogs.iter().any(|&b| b > 0) {
+            for b in backlogs.iter_mut() {
+                *b -= (*b).min(block);
+            }
+            rounds += 1;
+            assert!(rounds < 10);
+        }
+        assert_eq!(rounds, 3); // ceil(37/16)
+    }
+}

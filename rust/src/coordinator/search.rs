@@ -1,0 +1,310 @@
+//! Vanilla PRM-guided beam search — paper Algorithm 2 (the baseline) —
+//! plus the shared per-problem search machinery both decoders use.
+//!
+//! Pipeline per reasoning step: every beam samples a full step (to `;` or
+//! EOS), the PRM scores the completed step, the top N/M survive and are
+//! expanded into M children each. The only difference in Algorithm 3
+//! (`early_reject`) is the mid-step partial-reward checkpoint and the
+//! two-tier batch shrink for the completion phase.
+
+use std::time::Instant;
+
+use crate::config::SearchConfig;
+use crate::coordinator::beam::{Beam, BeamSet};
+use crate::coordinator::flops::FlopsLedger;
+use crate::coordinator::sampler;
+use crate::coordinator::scheduler;
+use crate::coordinator::scorer;
+use crate::log_debug;
+use crate::runtime::{Engine, KvSet};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::workload::Problem;
+
+/// Result of solving one problem.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    pub answer: Option<i64>,
+    pub correct: bool,
+    pub best_reward: f32,
+    pub steps_executed: usize,
+    pub wall_s: f64,
+    pub ledger: FlopsLedger,
+    pub best_trace: Vec<i32>,
+    pub finished_beams: usize,
+}
+
+/// Per-problem search state shared by both algorithms.
+pub(crate) struct SearchCtx<'a> {
+    pub engine: &'a Engine,
+    pub lm_ckpt: &'a str,
+    pub prm_ckpt: &'a str,
+    pub cfg: &'a SearchConfig,
+    pub temp: f32,
+    pub lm_kv: KvSet,
+    pub prm_kv: KvSet,
+    pub beams: BeamSet,
+    pub done: Vec<Beam>,
+    pub ledger: FlopsLedger,
+    pub call_counter: u64,
+    pub decode_block: usize,
+}
+
+/// What a decode phase is driving each beam toward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum PhaseTarget {
+    /// Stop each beam at `tau` step-tokens or its step boundary (phase A).
+    Prefix { tau: usize },
+    /// Run each beam to its step boundary (phase B / vanilla step).
+    Boundary,
+}
+
+impl<'a> SearchCtx<'a> {
+    /// Prefill both models, broadcast to the b1 variant, sample first tokens.
+    pub fn init(
+        engine: &'a Engine,
+        lm_ckpt: &'a str,
+        prm_ckpt: &'a str,
+        problem: &Problem,
+        cfg: &'a SearchConfig,
+        temp: f32,
+    ) -> Result<Self> {
+        let lm_arch = engine.manifest.arch_for_checkpoint(lm_ckpt)?;
+        let prm_arch = engine.manifest.arch_for_checkpoint(prm_ckpt)?;
+        let mut ledger = FlopsLedger::new(lm_arch.flops_per_token, prm_arch.flops_per_token);
+
+        let prompt = problem.prompt_tokens();
+        let (logits, lm_kv1) = engine.lm_prefill(lm_ckpt, &prompt)?;
+        ledger.lm_prefill(prompt.len());
+        let prm_kv1 = engine.prm_prefill(prm_ckpt, &prompt)?;
+        ledger.prm_prefill(prompt.len());
+
+        let b1 = engine.manifest.batch_variant(cfg.n_beams)?;
+        let lm_kv = engine.kv_broadcast(lm_ckpt, &lm_kv1, b1)?;
+        let prm_kv = engine.kv_broadcast(prm_ckpt, &prm_kv1, b1)?;
+        ledger.call();
+        ledger.call();
+
+        let mut rng = Rng::new(cfg.seed ^ hash_problem(problem));
+        let first = sampler::sample_first_tokens(&logits, b1, temp, &mut rng);
+        let beams: Vec<Beam> = first
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                let mut b = Beam::new(t, rng.fork(i as u64).next_u64());
+                if i >= cfg.n_beams {
+                    b.dead = true; // padding slots of the batch variant
+                }
+                b
+            })
+            .collect();
+
+        Ok(SearchCtx {
+            engine,
+            lm_ckpt,
+            prm_ckpt,
+            cfg,
+            temp,
+            lm_kv,
+            prm_kv,
+            beams: BeamSet::from_beams(beams),
+            done: Vec::new(),
+            ledger,
+            call_counter: 0,
+            decode_block: engine.manifest.decode_block,
+        })
+    }
+
+    /// Is this beam still being driven by the current phase?
+    fn phase_pending(&self, beam: &Beam, target: PhaseTarget) -> bool {
+        if !beam.active() || beam.awaiting_finalize {
+            return false;
+        }
+        match target {
+            PhaseTarget::Prefix { tau } => {
+                beam.current_step_len() < tau && beam.current_step_len() < self.cfg.max_step_tokens
+            }
+            PhaseTarget::Boundary => beam.current_step_len() < self.cfg.max_step_tokens,
+        }
+    }
+
+    /// Run lockstep decode blocks until every beam satisfies `target`.
+    /// Beams that exceed `max_step_tokens` without a boundary are killed
+    /// (runaway guard). Returns false if the KV cache ran out (caller
+    /// finalizes with what it has).
+    pub fn decode_phase(&mut self, target: PhaseTarget) -> Result<bool> {
+        loop {
+            let pending: Vec<usize> = (0..self.beams.beams.len())
+                .filter(|&i| self.phase_pending(&self.beams.beams[i], target))
+                .collect();
+            if pending.is_empty() {
+                return Ok(true);
+            }
+            if self.lm_kv.remaining() < self.decode_block {
+                log_debug!("LM KV cache exhausted; stopping decode phase");
+                return Ok(false);
+            }
+            let b = self.lm_kv.batch;
+            let prev: Vec<i32> = self.beams.beams.iter().map(|bm| bm.pending).collect();
+            let keys: Vec<u64> = self.beams.beams.iter().map(|bm| bm.key).collect();
+            let key_mat = sampler::decode_keys(&keys, self.call_counter);
+            self.call_counter += 1;
+            let old_frontier = self.lm_kv.pos_phys;
+            let sampled =
+                self.engine
+                    .lm_decode_block(self.lm_ckpt, &mut self.lm_kv, &prev, self.temp, &key_mat)?;
+            self.ledger.call();
+            debug_assert_eq!(sampled.len(), b * self.decode_block);
+            for &slot in &pending {
+                let blk = &sampled[slot * self.decode_block..(slot + 1) * self.decode_block];
+                let beam = &mut self.beams.beams[slot];
+                let (fed, boundary) = beam.accept_block(blk);
+                self.lm_kv.commit(slot, old_frontier, fed);
+                self.ledger.lm_decode(fed);
+                if boundary.is_none()
+                    && beam.current_step_len() >= self.cfg.max_step_tokens
+                    && matches!(target, PhaseTarget::Boundary)
+                {
+                    beam.dead = true; // runaway: never closed the step
+                }
+            }
+        }
+    }
+
+    /// Drain PRM backlogs (scores for all clean tokens).
+    pub fn score_catch_up(&mut self) -> Result<bool> {
+        // bound: each round advances the PRM frontier by score_block
+        let max_backlog = self
+            .beams
+            .beams
+            .iter()
+            .filter(|b| !b.dead)
+            .map(|b| b.gen.len() - b.prm_fed)
+            .max()
+            .unwrap_or(0);
+        let rounds = max_backlog.div_ceil(self.engine.manifest.score_block);
+        if self.prm_kv.remaining() < rounds * self.engine.manifest.score_block {
+            log_debug!("PRM KV cache exhausted; stopping scoring");
+            return Ok(false);
+        }
+        scorer::catch_up(
+            self.engine,
+            self.prm_ckpt,
+            &mut self.prm_kv,
+            &mut self.beams,
+            &mut self.ledger,
+        )?;
+        Ok(true)
+    }
+
+    /// Move finished beams out of the pool into `done`.
+    pub fn harvest_finished(&mut self) {
+        for beam in self.beams.beams.iter_mut() {
+            if beam.finished && !beam.dead {
+                self.done.push(beam.clone());
+                beam.dead = true;
+            }
+        }
+    }
+
+    /// Expand `survivors` (slot ids, best-first) into M children each,
+    /// refilling all b1 slots. Device gather + host permute, both models.
+    pub fn expand(&mut self, survivors: &[usize]) -> Result<()> {
+        let b1 = self.lm_kv.batch;
+        let keep = survivors.len();
+        // compact order: survivors first (children map onto them)
+        let (rel_idx, active) = scheduler::expansion_indices(keep, self.cfg.m_expand, b1);
+        let idx: Vec<i32> = rel_idx.iter().map(|&r| survivors[r as usize] as i32).collect();
+        self.engine.kv_gather(self.lm_ckpt, &mut self.lm_kv, &idx)?;
+        self.engine.kv_gather(self.prm_ckpt, &mut self.prm_kv, &idx)?;
+        self.ledger.call();
+        self.ledger.call();
+        let key_base = self.call_counter.wrapping_mul(0x2545F4914F6CDD1D) ^ self.cfg.seed;
+        self.beams.permute(&idx, key_base);
+        for (slot, beam) in self.beams.beams.iter_mut().enumerate() {
+            beam.dead = slot >= active;
+            beam.finished = false; // children of unfinished survivors
+        }
+        Ok(())
+    }
+
+    /// Wrap up: pick the best candidate among done + pool.
+    pub fn finish(mut self, problem: &Problem, t0: Instant, steps: usize) -> SolveOutcome {
+        self.harvest_finished();
+        let best_done = self
+            .done
+            .iter()
+            .max_by(|a, b| a.beam_reward().partial_cmp(&b.beam_reward()).unwrap());
+        let best = match best_done {
+            Some(b) => Some(b),
+            None => self.beams.best(),
+        };
+        let (answer, best_reward, trace) = match best {
+            Some(b) => (b.answer(), b.beam_reward(), b.gen.clone()),
+            None => (None, 0.0, Vec::new()),
+        };
+        SolveOutcome {
+            answer,
+            correct: answer == Some(problem.answer()),
+            best_reward,
+            steps_executed: steps,
+            wall_s: t0.elapsed().as_secs_f64(),
+            ledger: self.ledger,
+            best_trace: trace,
+            finished_beams: self.done.len(),
+        }
+    }
+}
+
+fn hash_problem(p: &Problem) -> u64 {
+    let mut h = p.v0 as u64;
+    for s in &p.ops {
+        h = h
+            .wrapping_mul(0x100000001B3)
+            .wrapping_add((s.op as u64) << 8 | s.d as u64);
+    }
+    h
+}
+
+/// Paper Algorithm 2: PRM-guided beam search scoring only completed steps.
+pub fn solve_vanilla(
+    engine: &Engine,
+    lm_ckpt: &str,
+    prm_ckpt: &str,
+    problem: &Problem,
+    cfg: &SearchConfig,
+    temp: f32,
+) -> Result<SolveOutcome> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let mut ctx = SearchCtx::init(engine, lm_ckpt, prm_ckpt, problem, cfg, temp)?;
+    let mut steps = 0;
+    for _ in 0..cfg.max_steps {
+        // 1. every beam samples a full step
+        let ok = ctx.decode_phase(PhaseTarget::Boundary)?;
+        // 2. PRM scores the completed steps
+        let ok2 = ctx.score_catch_up()?;
+        ctx.harvest_finished();
+        if !ok || !ok2 {
+            break;
+        }
+        steps += 1;
+        // 3. rank by the new step's reward, keep top N/M
+        let mut scored: Vec<(usize, f32)> = Vec::new();
+        for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
+            if beam.active() && beam.awaiting_finalize {
+                let r = beam.finalize_step(cfg.agg);
+                scored.push((slot, r));
+            }
+        }
+        if scored.is_empty() {
+            break; // every beam finished or died
+        }
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let survivors: Vec<usize> =
+            scored.iter().take(cfg.keep()).map(|&(s, _)| s).collect();
+        // 4. expand survivors x M
+        ctx.expand(&survivors)?;
+    }
+    Ok(ctx.finish(problem, t0, steps))
+}

@@ -1,0 +1,200 @@
+//! Correlation studies over *real* traces and *real* PRM scores —
+//! the empirical halves of Fig. 2 (partial-vs-final scatter + R²) and
+//! Fig. 4 (Pearson / Kendall-tau vs tau).
+//!
+//! Pipeline: sample solutions from an LM checkpoint (mix of gold and
+//! corrupted traces keeps both reward tails populated), score whole
+//! sequences in one `prm_fullseq` call through the Pallas prefix-score
+//! kernel, then read the partial reward at any tau from the cumulative
+//! outputs — no re-scoring per tau.
+
+use crate::runtime::Engine;
+use crate::tokenizer as tk;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workload::{gen_problem, BenchSpec, Problem};
+
+/// A scored trace: partial rewards at every prefix + the final reward.
+#[derive(Debug, Clone)]
+pub struct ScoredTrace {
+    /// cumulative-min partial reward at each solution token index.
+    pub cummin: Vec<f32>,
+    /// cumulative-mean partial reward at each solution token index.
+    pub cummean: Vec<f32>,
+    /// solution length in tokens.
+    pub len: usize,
+}
+
+impl ScoredTrace {
+    /// Partial reward after `tau` solution tokens (clamped to length).
+    /// Uses the cumulative-*mean* channel: the paper's additive toy model
+    /// (P = sum of first tau token scores, F = sum of all) is exactly the
+    /// mean aggregation up to normalization; cumulative-min pins to the
+    /// noisiest early token and destroys the tau-dependence.
+    pub fn partial(&self, tau: usize) -> f64 {
+        self.cummean[tau.clamp(1, self.len) - 1] as f64
+    }
+
+    pub fn final_reward(&self) -> f64 {
+        self.cummean[self.len - 1] as f64
+    }
+
+    /// Half-length partial (Fig. 2's x-axis).
+    pub fn half(&self) -> f64 {
+        self.partial((self.len / 2).max(1))
+    }
+}
+
+/// Build and score a corpus of traces with a PRM checkpoint.
+///
+/// Traces are gold solutions and validator-labelled corruptions of
+/// problems from `bench` — the same trace population the PRM was trained
+/// to judge, giving both high- and low-reward tails.
+pub fn score_corpus(
+    engine: &Engine,
+    prm_ckpt: &str,
+    bench: &BenchSpec,
+    n_traces: usize,
+    seed: u64,
+) -> Result<Vec<ScoredTrace>> {
+    let fb = engine.manifest.fullseq_batch;
+    let s = engine.manifest.seq_train;
+    let mut rng = Rng::new(seed ^ 0xC0_55E7);
+    let mut out = Vec::with_capacity(n_traces);
+
+    let mut batch_tokens = vec![tk::PAD; fb * s];
+    let mut batch_lens = vec![0i32; fb];
+    let mut batch_sol_starts = vec![0usize; fb];
+    let mut filled = 0usize;
+
+    let flush = |engine: &Engine,
+                     tokens: &mut Vec<i32>,
+                     lens: &mut Vec<i32>,
+                     starts: &mut Vec<usize>,
+                     filled: &mut usize,
+                     out: &mut Vec<ScoredTrace>|
+     -> Result<()> {
+        if *filled == 0 {
+            return Ok(());
+        }
+        let (_, cummin, cummean) = engine.prm_fullseq(prm_ckpt, tokens, lens)?;
+        for i in 0..*filled {
+            let len = lens[i] as usize;
+            let start = starts[i];
+            out.push(ScoredTrace {
+                cummin: cummin[i * s + start..i * s + len].to_vec(),
+                cummean: cummean[i * s + start..i * s + len].to_vec(),
+                len: len - start,
+            });
+        }
+        tokens.iter_mut().for_each(|t| *t = tk::PAD);
+        *filled = 0;
+        Ok(())
+    };
+
+    while out.len() + filled < n_traces {
+        let p = gen_problem(&mut rng, bench);
+        let sol = synth_trace(&p, &mut rng);
+        let prompt = p.prompt_tokens();
+        let seq: Vec<i32> = prompt.iter().chain(sol.iter()).cloned().collect();
+        if seq.len() > s {
+            continue;
+        }
+        let row = filled;
+        batch_tokens[row * s..row * s + seq.len()].copy_from_slice(&seq);
+        batch_lens[row] = seq.len() as i32;
+        batch_sol_starts[row] = prompt.len();
+        filled += 1;
+        if filled == fb {
+            flush(engine, &mut batch_tokens, &mut batch_lens, &mut batch_sol_starts, &mut filled, &mut out)?;
+        }
+    }
+    flush(engine, &mut batch_tokens, &mut batch_lens, &mut batch_sol_starts, &mut filled, &mut out)?;
+    out.truncate(n_traces);
+    Ok(out)
+}
+
+/// Gold or corrupted trace, 50/50 (mirrors the PRM's training population).
+fn synth_trace(p: &Problem, rng: &mut Rng) -> Vec<i32> {
+    let gold = p.gold_solution();
+    if rng.f64() < 0.5 {
+        return gold;
+    }
+    // corrupt one scratch value: find a digit pair inside a scratch region
+    let mut toks = gold.clone();
+    let digit_positions: Vec<usize> = (0..toks.len().saturating_sub(1))
+        .filter(|&i| tk::is_digit(toks[i]) && tk::is_digit(toks[i + 1]))
+        .collect();
+    if digit_positions.is_empty() {
+        return toks;
+    }
+    let pos = digit_positions[rng.below(digit_positions.len())];
+    let delta = 1 + rng.below(3) as i64;
+    let v = tk::parse_two_digits(toks[pos], toks[pos + 1]).unwrap();
+    let nv = tk::two_digits(v + delta);
+    toks[pos] = nv[0];
+    toks[pos + 1] = nv[1];
+    toks
+}
+
+/// Fig. 4 rows: (tau, pearson, kendall) over a scored corpus.
+pub fn correlation_vs_tau(traces: &[ScoredTrace], taus: &[usize]) -> Vec<(usize, f64, f64)> {
+    taus.iter()
+        .map(|&tau| {
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for t in traces {
+                if t.len >= tau {
+                    xs.push(t.partial(tau));
+                    ys.push(t.final_reward());
+                }
+            }
+            (tau, stats::pearson(&xs, &ys), stats::kendall_tau(&xs, &ys))
+        })
+        .collect()
+}
+
+/// Fig. 2 fit: OLS of final on half-length partial rewards.
+pub fn half_vs_final_fit(traces: &[ScoredTrace]) -> (stats::OlsFit, Vec<(f64, f64)>) {
+    let pts: Vec<(f64, f64)> =
+        traces.iter().map(|t| (t.half(), t.final_reward())).collect();
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    (stats::ols(&xs, &ys), pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scored_trace_partial_indexing() {
+        let t = ScoredTrace {
+            cummin: vec![0.9, 0.8, 0.7, 0.7],
+            cummean: vec![0.9, 0.85, 0.8, 0.78],
+            len: 4,
+        };
+        assert!((t.partial(1) - 0.9).abs() < 1e-6);
+        assert!((t.partial(3) - 0.8).abs() < 1e-6);
+        assert_eq!(t.partial(99), t.final_reward());
+        assert!((t.half() - 0.85).abs() < 1e-6);
+    }
+
+    #[test]
+    fn correlation_rows_shapes() {
+        // synthetic monotone traces: partial == final at every tau
+        let traces: Vec<ScoredTrace> = (0..20)
+            .map(|i| {
+                let v = 0.5 + 0.02 * i as f32;
+                ScoredTrace { cummin: vec![v; 30], cummean: vec![v; 30], len: 30 }
+            })
+            .collect();
+        let rows = correlation_vs_tau(&traces, &[4, 8, 16]);
+        assert_eq!(rows.len(), 3);
+        for (_, p, k) in rows {
+            assert!((p - 1.0).abs() < 1e-9);
+            assert!((k - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Experiment harness: runs the paper's evaluation grid cells and formats
+//! the same rows the paper reports (Tables 1-3, Figs. 5-7).
+//!
+//! A *cell* is (benchmark, LM, PRM, mode, N, tau) evaluated over a seeded
+//! problem set; the output is mean accuracy plus the aggregated FLOPs
+//! ledger. Problem counts scale with `ERPRM_PROBLEMS` (default keeps the
+//! full `cargo bench` run tractable on this single-core testbed; the table
+//! *shape* — who wins, by what factor — is stable across scales).
+
+pub mod correlation;
+
+use crate::config::{SearchConfig, SearchMode};
+use crate::coordinator::flops::FlopsLedger;
+use crate::coordinator::{solve_early_rejection, solve_vanilla};
+use crate::log_info;
+use crate::runtime::Engine;
+use crate::util::error::Result;
+use crate::workload::{problem_set, BenchSpec};
+
+/// One grid cell's aggregate result.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub accuracy: f64,
+    pub n_problems: usize,
+    pub ledger: FlopsLedger,
+    pub wall_s: f64,
+    pub mean_steps: f64,
+}
+
+/// Experiment axes for one cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub bench: BenchSpec,
+    pub lm_ckpt: String,
+    pub prm_ckpt: String,
+    pub mode: SearchMode,
+    pub n_beams: usize,
+    pub tau: usize,
+}
+
+impl Cell {
+    pub fn label(&self) -> String {
+        let mode = match self.mode {
+            SearchMode::Vanilla => "vanilla".to_string(),
+            SearchMode::EarlyRejection => format!("ER(tau={})", self.tau),
+        };
+        format!(
+            "{}/{}/{} {} N={}",
+            self.bench.name, self.lm_ckpt, self.prm_ckpt, mode, self.n_beams
+        )
+    }
+}
+
+/// Number of problems per cell (env-scalable).
+pub fn problems_per_cell(default: usize) -> usize {
+    std::env::var("ERPRM_PROBLEMS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Serving temperature per LM behaviour class (DESIGN.md substitutions).
+pub fn temp_for(lm_ckpt: &str) -> f32 {
+    crate::config::EngineConfig::default_temperature(lm_ckpt)
+}
+
+/// Run one cell over a seeded problem set.
+pub fn run_cell(engine: &Engine, cell: &Cell, n_problems: usize, seed: u64) -> Result<CellResult> {
+    let problems = problem_set(&cell.bench, n_problems, seed);
+    let mut cfg = SearchConfig {
+        mode: cell.mode,
+        n_beams: cell.n_beams,
+        tau: cell.tau.max(1),
+        ..SearchConfig::default()
+    };
+    cfg.seed = seed;
+    let temp = temp_for(&cell.lm_ckpt);
+
+    let lm_arch = engine.manifest.arch_for_checkpoint(&cell.lm_ckpt)?;
+    let prm_arch = engine.manifest.arch_for_checkpoint(&cell.prm_ckpt)?;
+    let mut ledger = FlopsLedger::new(lm_arch.flops_per_token, prm_arch.flops_per_token);
+
+    let mut correct = 0usize;
+    let mut wall = 0.0;
+    let mut steps = 0usize;
+    for (i, p) in problems.iter().enumerate() {
+        cfg.seed = seed.wrapping_add(i as u64);
+        let out = match cell.mode {
+            SearchMode::Vanilla => {
+                solve_vanilla(engine, &cell.lm_ckpt, &cell.prm_ckpt, p, &cfg, temp)?
+            }
+            SearchMode::EarlyRejection => {
+                solve_early_rejection(engine, &cell.lm_ckpt, &cell.prm_ckpt, p, &cfg, temp)?
+            }
+        };
+        correct += out.correct as usize;
+        wall += out.wall_s;
+        steps += out.steps_executed;
+        ledger.merge(&out.ledger);
+    }
+    let res = CellResult {
+        accuracy: 100.0 * correct as f64 / n_problems.max(1) as f64,
+        n_problems,
+        ledger,
+        wall_s: wall,
+        mean_steps: steps as f64 / n_problems.max(1) as f64,
+    };
+    log_info!(
+        "{}: acc {:.1}% flops {:.3e} ({:.1}s)",
+        cell.label(),
+        res.accuracy,
+        res.ledger.total_flops(),
+        res.wall_s
+    );
+    Ok(res)
+}
+
+/// Pre-warm the engine for a list of checkpoints (avoids counting PJRT
+/// compilation in experiment wallclock).
+pub fn warm(engine: &Engine, ckpts: &[&str], batches: &[usize]) -> Result<()> {
+    for c in ckpts {
+        engine.warmup(c, batches)?;
+    }
+    Ok(())
+}

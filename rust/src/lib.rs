@@ -1,0 +1,31 @@
+//! # erprm — Early Rejection with Partial Reward Modeling
+//!
+//! A PRM-guided beam-search **serving stack** reproducing
+//! *"Accelerating LLM Reasoning via Early Rejection with Partial Reward
+//! Modeling"* (EMNLP 2025 Findings).
+//!
+//! Architecture (see `DESIGN.md`):
+//! * **L3 (this crate)** — request router, dynamic two-tier batcher,
+//!   KV-cache slot manager, prefill/decode scheduler, vanilla PRM beam
+//!   search (paper Alg. 2) and the early-rejection search (paper Alg. 3),
+//!   analytic FLOPs ledger, HTTP serving front end. Python is never on the
+//!   request path.
+//! * **L2/L1 (build-time Python)** — JAX transformer LM + PRM lowered to
+//!   HLO text with Pallas kernels inside; loaded here via the PJRT C API
+//!   (`runtime` module).
+//!
+//! The `util` modules are hand-rolled substrates (JSON, CLI, RNG, stats,
+//! thread pool, property testing, bench harness): the offline build
+//! environment provides no serde/clap/tokio/criterion/proptest.
+
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,297 @@
+//! `erprm` — leader binary: serve / solve / sweep / correlate / theory / info.
+//!
+//! Examples:
+//!   erprm info  --artifacts artifacts
+//!   erprm solve --artifacts artifacts --v0 61 --ops -5,*6,+4 --mode er --n 16 --tau 8
+//!   erprm serve --artifacts artifacts --addr 127.0.0.1:8377
+//!   erprm sweep --artifacts artifacts --bench satmath-s --n-list 4,8 --problems 10
+//!   erprm theory
+//!
+//! See README.md for the full walkthrough.
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use erprm::config::{SearchConfig, SearchMode};
+use erprm::coordinator::{solve_early_rejection, solve_vanilla};
+use erprm::harness::{self, Cell};
+use erprm::runtime::Engine;
+use erprm::server::{api, http, metrics::Metrics, router::EngineHandle};
+use erprm::sim;
+use erprm::tokenizer as tk;
+use erprm::util::benchkit::{fmt_flops, Table};
+use erprm::util::cli::Args;
+use erprm::util::error::{Error, Result};
+use erprm::util::logging;
+use erprm::util::threadpool::ThreadPool;
+use erprm::workload::{bench_by_name, OpStep, Problem};
+
+fn main() {
+    logging::init_from_env();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let r = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("theory") => cmd_theory(&args),
+        _ => {
+            eprintln!(
+                "usage: erprm <info|solve|serve|sweep|theory> [--artifacts DIR] [options]\n\
+                 run `erprm <cmd> --help` conventions in README.md"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let m = &engine.manifest;
+    println!("artifacts: {}", m.dir.display());
+    println!("vocab: {} tokens; prompt_pad {}; decode_block {}; score_block {}",
+        m.vocab.len(), m.prompt_pad, m.decode_block, m.score_block);
+    println!("batch variants: {:?}", m.batch_variants);
+    for (name, arch) in &m.models {
+        println!(
+            "  {name}: kind={} d={} L={} H={} params={} flops/token={} cache={} ckpts={:?}",
+            arch.kind, arch.d_model, arch.n_layers, arch.n_heads, arch.params,
+            arch.flops_per_token, arch.cache_len,
+            arch.weights.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+fn parse_ops(spec: &str) -> Result<Vec<OpStep>> {
+    spec.split(',')
+        .map(|s| {
+            let s = s.trim();
+            let (op, d) = s.split_at(1);
+            let op = match op {
+                "+" => tk::PLUS,
+                "-" => tk::MINUS,
+                "*" => tk::TIMES,
+                _ => return Err(Error::parse(format!("bad op '{s}'"))),
+            };
+            let d: i64 = d.parse().map_err(|_| Error::parse(format!("bad operand '{s}'")))?;
+            Ok(OpStep { op, d })
+        })
+        .collect()
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let v0 = args.get_u64("v0", 61)? as i64;
+    let ops = parse_ops(args.get_or("ops", "-5,*6,+4"))?;
+    let problem = Problem { v0, ops };
+    let mode = SearchMode::parse(args.get_or("mode", "er"))?;
+    let mut cfg = SearchConfig {
+        mode,
+        n_beams: args.get_usize("n", 16)?,
+        tau: args.get_usize("tau", 8)?,
+        seed: args.get_u64("seed", 0)?,
+        ..SearchConfig::default()
+    };
+    cfg.m_expand = args.get_usize("m", 4)?;
+    let lm = args.get_or("lm", "lm-concise");
+    let prm = args.get_or("prm", "prm-large");
+    let temp = harness::temp_for(lm);
+    let out = match mode {
+        SearchMode::Vanilla => solve_vanilla(&engine, lm, prm, &problem, &cfg, temp)?,
+        SearchMode::EarlyRejection => {
+            solve_early_rejection(&engine, lm, prm, &problem, &cfg, temp)?
+        }
+    };
+    println!("problem: {}", tk::detok(&problem.prompt_tokens()));
+    println!("trace:   {}", tk::detok(&out.best_trace));
+    println!(
+        "answer {:?} (expected {}) correct={} reward={:.3}",
+        out.answer, problem.answer(), out.correct, out.best_reward
+    );
+    let r = out.ledger.report();
+    println!(
+        "flops: total {} (LM {} / PRM {}), steps {}, wall {:.0}ms",
+        fmt_flops(r.total_flops), fmt_flops(r.lm_flops), fmt_flops(r.prm_flops),
+        out.steps_executed, out.wall_s * 1000.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let addr = args.get_or("addr", "127.0.0.1:8377").to_string();
+    let workers = args.get_usize("workers", 2)?;
+    let capacity = args.get_usize("capacity", 64)?;
+    let defaults = SearchConfig::default();
+    let handle = EngineHandle::spawn(dir, defaults.clone(), capacity)?;
+    let metrics = Arc::new(Metrics::default());
+    let pool = ThreadPool::new(workers);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let h2 = handle.clone();
+    let m2 = Arc::clone(&metrics);
+    let d2 = defaults.clone();
+    let local = http::serve(
+        &addr,
+        &pool,
+        1 << 20,
+        Arc::clone(&stop),
+        Arc::new(move |req| route(&h2, &m2, &d2, req)),
+    )?;
+    println!("erprm serving on http://{local}  (POST /solve, GET /metrics, GET /healthz)");
+    // run until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Route one HTTP request (shared with `examples/serve_benchmark.rs`).
+pub fn route(
+    handle: &EngineHandle,
+    metrics: &Metrics,
+    defaults: &SearchConfig,
+    req: http::Request,
+) -> http::Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => http::Response::json(200, "{\"ok\":true}".into()),
+        ("GET", "/metrics") => http::Response::text(200, &metrics.render()),
+        ("POST", "/solve") => {
+            let t0 = std::time::Instant::now();
+            let parsed = match api::parse_solve(&req.body, defaults) {
+                Ok(p) => p,
+                Err(e) => {
+                    metrics.record_error();
+                    return http::Response::json(400, format!("{{\"error\":\"{e}\"}}"));
+                }
+            };
+            match handle.solve(parsed.clone(), defaults.clone()) {
+                Ok(out) => {
+                    metrics.record_ok(
+                        t0.elapsed().as_secs_f64() * 1000.0,
+                        out.ledger.total_flops(),
+                        out.correct,
+                    );
+                    http::Response::json(200, api::render_solve(&parsed, &out))
+                }
+                Err(e) => {
+                    metrics.record_error();
+                    let code = if e.to_string().contains("queue full") { 503 } else { 500 };
+                    http::Response::json(code, format!("{{\"error\":\"{e}\"}}"))
+                }
+            }
+        }
+        _ => http::Response::json(404, "{\"error\":\"not found\"}".into()),
+    }
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let bench = bench_by_name(args.get_or("bench", "satmath-s"))
+        .ok_or_else(|| Error::invalid("unknown bench (satmath-s|math500-s|aime-s)"))?;
+    let n_list = args.get_usize_list("n-list", &[4, 8, 16])?;
+    let taus = args.get_usize_list("taus", &[8, 16])?;
+    let problems = args.get_usize("problems", 10)?;
+    let lm = args.get_or("lm", "lm-concise").to_string();
+    let prm = args.get_or("prm", "prm-large").to_string();
+    let seed = args.get_u64("seed", 42)?;
+
+    let mut table = Table::new(
+        &format!("{} / {} / {}", bench.name, lm, prm),
+        &["setting", "N", "accuracy %", "total FLOPs", "LM FLOPs", "PRM FLOPs", "wall s"],
+    );
+    for &n in &n_list {
+        let mut cells = vec![Cell {
+            bench,
+            lm_ckpt: lm.clone(),
+            prm_ckpt: prm.clone(),
+            mode: SearchMode::Vanilla,
+            n_beams: n,
+            tau: 1,
+        }];
+        for &tau in &taus {
+            cells.push(Cell {
+                bench,
+                lm_ckpt: lm.clone(),
+                prm_ckpt: prm.clone(),
+                mode: SearchMode::EarlyRejection,
+                n_beams: n,
+                tau,
+            });
+        }
+        for cell in cells {
+            let res = harness::run_cell(&engine, &cell, problems, seed)?;
+            let r = res.ledger.report();
+            let setting = match cell.mode {
+                SearchMode::Vanilla => "vanilla".into(),
+                SearchMode::EarlyRejection => format!("ER(tau={})", cell.tau),
+            };
+            table.row(vec![
+                setting,
+                n.to_string(),
+                format!("{:.1}", res.accuracy),
+                fmt_flops(r.total_flops),
+                fmt_flops(r.lm_flops),
+                fmt_flops(r.prm_flops),
+                format!("{:.1}", res.wall_s),
+            ]);
+        }
+    }
+    table.emit("sweep");
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> Result<()> {
+    let l = args.get_usize("len", 64)?;
+    let trials = args.get_usize("trials", 4000)?;
+    let mut t1 = Table::new(
+        "rho(P,F) vs tau — toy model (paper Sec. 4, Fig. 4 trend)",
+        &["tau", "pearson (MC)", "kendall (MC)", "sqrt(tau/L)"],
+    );
+    for tau in [4usize, 8, 16, 24, 32, 48, 64] {
+        let tau = tau.min(l);
+        let (p, k) = sim::toy_correlation(tau, l, trials, 7);
+        t1.row(vec![
+            tau.to_string(),
+            format!("{p:.3}"),
+            format!("{k:.3}"),
+            format!("{:.3}", sim::toy_correlation_exact(tau, l)),
+        ]);
+    }
+    t1.emit("theory_correlation");
+
+    let mut t2 = Table::new(
+        "Pr[prune optimal] vs bound (N-1)exp(-Delta^2/4sigma^2)",
+        &["tau", "delta/token", "empirical", "bound"],
+    );
+    for &(tau, d) in &[(4usize, 0.25f64), (8, 0.25), (16, 0.25), (32, 0.25), (16, 0.5), (16, 0.1)] {
+        let (emp, bound) = sim::prune_probability(16, 4, tau, d, 1.0, trials, 11);
+        t2.row(vec![
+            tau.to_string(),
+            format!("{d:.2}"),
+            format!("{emp:.4}"),
+            format!("{bound:.4}"),
+        ]);
+    }
+    t2.emit("theory_bound");
+    println!(
+        "min tau for rho*=0.8 at L=100: {} (paper: 64)",
+        sim::min_tau_for_rho(0.8, 100)
+    );
+    Ok(())
+}

@@ -1,0 +1,292 @@
+//! Artifacts manifest: the ABI between `python/compile/aot.py` and this
+//! runtime. Parsed from `artifacts/manifest.json`; validated against the
+//! Rust tokenizer so the two sides can never disagree silently.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tokenizer;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One model architecture (lm / prm-large / prm-small) with its programs
+/// and available weight checkpoints.
+#[derive(Debug, Clone)]
+pub struct ModelArch {
+    pub name: String,
+    pub kind: String, // "lm" | "prm"
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub cache_len: usize,
+    pub params: u64,
+    pub flops_per_token: u64,
+    /// (name, shape) in weights.bin / HLO argument order.
+    pub weight_specs: Vec<(String, Vec<usize>)>,
+    /// program name -> HLO text path (relative to artifacts dir).
+    pub programs: BTreeMap<String, PathBuf>,
+    /// checkpoint name -> weights.bin path.
+    pub weights: BTreeMap<String, PathBuf>,
+}
+
+impl ModelArch {
+    /// Number of KV-cache arrays threaded through decode/score calls.
+    pub fn n_kv(&self) -> usize {
+        2 * self.n_layers
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.weight_specs.len()
+    }
+
+    pub fn program_path(&self, name: &str) -> Result<&PathBuf> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| Error::invalid(format!("model '{}' has no program '{name}'", self.name)))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: Vec<String>,
+    pub prompt_pad: usize,
+    pub decode_block: usize,
+    pub score_block: usize,
+    pub seq_train: usize,
+    pub batch_variants: Vec<usize>,
+    pub fullseq_batch: usize,
+    pub models: BTreeMap<String, ModelArch>,
+    /// Paper-scale parameter counts (narrative comparison only).
+    pub paper_scale: BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("{}: {e} (run `make artifacts` first)", path.display()),
+            ))
+        })?;
+        let j = Json::parse(&src)?;
+        let vocab: Vec<String> = j
+            .req("vocab")?
+            .as_arr()
+            .ok_or_else(|| Error::parse("vocab must be an array"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().ok_or_else(|| Error::parse("models"))? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        let mut paper_scale = BTreeMap::new();
+        if let Some(ps) = j.get("paper_scale").and_then(Json::as_obj) {
+            for (k, v) in ps {
+                paper_scale.insert(k.clone(), v.as_f64().unwrap_or(0.0));
+            }
+        }
+        let man = Manifest {
+            dir: dir.to_path_buf(),
+            vocab,
+            prompt_pad: j.req("prompt_pad")?.as_usize().unwrap_or(16),
+            decode_block: j.req("decode_block")?.as_usize().unwrap_or(4),
+            score_block: j.req("score_block")?.as_usize().unwrap_or(16),
+            seq_train: j.req("seq_train")?.as_usize().unwrap_or(256),
+            batch_variants: j
+                .req("batch_variants")?
+                .as_arr()
+                .ok_or_else(|| Error::parse("batch_variants"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            fullseq_batch: j.req("fullseq_batch")?.as_usize().unwrap_or(8),
+            models,
+            paper_scale,
+        };
+        man.validate_abi()?;
+        Ok(man)
+    }
+
+    /// The Python-side vocabulary must match the Rust tokenizer exactly.
+    fn validate_abi(&self) -> Result<()> {
+        let ours = tokenizer::token_strs();
+        if self.vocab.len() != ours.len() {
+            return Err(Error::invalid(format!(
+                "vocab size mismatch: manifest {} vs tokenizer {}",
+                self.vocab.len(),
+                ours.len()
+            )));
+        }
+        for (i, (a, b)) in self.vocab.iter().zip(ours.iter()).enumerate() {
+            if a != b {
+                return Err(Error::invalid(format!(
+                    "vocab mismatch at id {i}: manifest '{a}' vs tokenizer '{b}'"
+                )));
+            }
+        }
+        if self.batch_variants.is_empty() {
+            return Err(Error::invalid("no batch variants exported"));
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArch> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::invalid(format!("unknown model '{name}'")))
+    }
+
+    /// Model arch that owns a given checkpoint (e.g. "lm-concise" -> "lm").
+    pub fn arch_for_checkpoint(&self, ckpt: &str) -> Result<&ModelArch> {
+        self.models
+            .values()
+            .find(|m| m.weights.contains_key(ckpt))
+            .ok_or_else(|| Error::invalid(format!("no model has checkpoint '{ckpt}'")))
+    }
+
+    /// Smallest exported batch variant >= n.
+    pub fn batch_variant(&self, n: usize) -> Result<usize> {
+        self.batch_variants
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| {
+                Error::invalid(format!(
+                    "no batch variant >= {n} (have {:?})",
+                    self.batch_variants
+                ))
+            })
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelArch> {
+    let specs = m
+        .req("weight_specs")?
+        .as_arr()
+        .ok_or_else(|| Error::parse("weight_specs"))?
+        .iter()
+        .map(|e| {
+            let pair = e.as_arr().ok_or_else(|| Error::parse("weight spec entry"))?;
+            let nm = pair[0].as_str().ok_or_else(|| Error::parse("weight name"))?;
+            let shape = pair[1]
+                .as_arr()
+                .ok_or_else(|| Error::parse("weight shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            Ok((nm.to_string(), shape))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut programs = BTreeMap::new();
+    for (k, v) in m.req("programs")?.as_obj().ok_or_else(|| Error::parse("programs"))? {
+        programs.insert(k.clone(), PathBuf::from(v.as_str().unwrap_or("")));
+    }
+    let mut weights = BTreeMap::new();
+    for (k, v) in m.req("weights")?.as_obj().ok_or_else(|| Error::parse("weights"))? {
+        weights.insert(k.clone(), PathBuf::from(v.as_str().unwrap_or("")));
+    }
+    Ok(ModelArch {
+        name: name.to_string(),
+        kind: m.req("kind")?.as_str().unwrap_or("").to_string(),
+        d_model: m.req("d_model")?.as_usize().unwrap_or(0),
+        n_layers: m.req("n_layers")?.as_usize().unwrap_or(0),
+        n_heads: m.req("n_heads")?.as_usize().unwrap_or(0),
+        head_dim: m.req("head_dim")?.as_usize().unwrap_or(0),
+        ffn: m.req("ffn")?.as_usize().unwrap_or(0),
+        vocab: m.req("vocab")?.as_usize().unwrap_or(0),
+        cache_len: m.req("cache_len")?.as_usize().unwrap_or(0),
+        params: m.req("params")?.as_i64().unwrap_or(0) as u64,
+        flops_per_token: m.req("flops_per_token")?.as_i64().unwrap_or(0) as u64,
+        weight_specs: specs,
+        programs,
+        weights,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest_json() -> String {
+        let vocab: Vec<String> =
+            tokenizer::token_strs().iter().map(|s| format!("\"{}\"", s.replace('"', "\\\""))).collect();
+        format!(
+            r#"{{
+  "vocab": [{}],
+  "prompt_pad": 16, "decode_block": 4, "score_block": 16, "seq_train": 256,
+  "mod": 100, "batch_variants": [4, 16, 64], "fullseq_batch": 8,
+  "models": {{
+    "lm": {{
+      "kind": "lm", "d_model": 64, "n_layers": 2, "n_heads": 4, "head_dim": 16,
+      "ffn": 256, "vocab": 24, "cache_len": 320, "params": 102016,
+      "flops_per_token": 204032,
+      "weight_specs": [["emb", [24, 64]], ["head", [64, 24]]],
+      "programs": {{"prefill_b1": "hlo/lm_prefill_b1.hlo.txt"}},
+      "weights": {{"lm-concise": "weights/lm-concise.bin"}}
+    }}
+  }},
+  "paper_scale": {{"lm": 3e9}}
+}}"#,
+            vocab.join(",")
+        )
+    }
+
+    fn load_toy(dir: &std::path::Path) -> Manifest {
+        std::fs::write(dir.join("manifest.json"), toy_manifest_json()).unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let dir = std::env::temp_dir().join("erprm-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = load_toy(&dir);
+        assert_eq!(m.prompt_pad, 16);
+        let lm = m.model("lm").unwrap();
+        assert_eq!(lm.n_kv(), 4);
+        assert_eq!(lm.params, 102016);
+        assert_eq!(m.arch_for_checkpoint("lm-concise").unwrap().name, "lm");
+        assert!(m.model("nope").is_err());
+        assert!(m.arch_for_checkpoint("nope").is_err());
+    }
+
+    #[test]
+    fn batch_variant_rounds_up() {
+        let dir = std::env::temp_dir().join("erprm-manifest-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = load_toy(&dir);
+        assert_eq!(m.batch_variant(1).unwrap(), 4);
+        assert_eq!(m.batch_variant(4).unwrap(), 4);
+        assert_eq!(m.batch_variant(5).unwrap(), 16);
+        assert_eq!(m.batch_variant(64).unwrap(), 64);
+        assert!(m.batch_variant(65).is_err());
+    }
+
+    #[test]
+    fn vocab_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("erprm-manifest-test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = toy_manifest_json().replacen("\"+\"", "\"@\"", 1);
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("vocab mismatch"));
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let dir = std::env::temp_dir().join("erprm-manifest-none");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,455 @@
+//! The PJRT execution engine: compiles HLO-text artifacts on demand,
+//! uploads weight checkpoints once, and exposes the typed call surface the
+//! coordinator drives. All state (KV caches, weights) stays device-resident
+//! between calls via `execute_b_untuple` (see `third_party/xla-rs`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifacts::{Manifest, ModelArch};
+use super::kv::KvSet;
+use crate::log_debug;
+use crate::log_info;
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Lm,
+    Prm,
+}
+
+/// `dst[slot] = src[idx[slot]]` for logical positions and validity rows.
+fn copy_bookkeeping(src: &KvSet, dst: &mut KvSet, idx: &[i32]) {
+    for (d, &s) in idx.iter().enumerate() {
+        let s = s as usize;
+        assert!(s < src.batch, "resize index {s} out of range {}", src.batch);
+        dst.pos_log[d] = src.pos_log[s];
+        let (d0, s0) = (d * dst.cache_len, s * src.cache_len);
+        dst.valid[d0..d0 + dst.cache_len].copy_from_slice(&src.valid[s0..s0 + src.cache_len]);
+    }
+}
+
+/// Aggregate runtime counters (for /metrics and perf work).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub compile_wall_s: f64,
+    pub execute_wall_s: f64,
+    pub host_bytes_up: u64,
+    pub host_bytes_down: u64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    weights: RefCell<HashMap<String, Rc<Vec<PjRtBuffer>>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        log_info!(
+            "engine up: platform={} devices={} models={:?}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.models.keys().collect::<Vec<_>>()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    // ------------------------------------------------------------ plumbing
+
+    fn program(&self, arch: &ModelArch, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        let key = format!("{}:{name}", arch.name);
+        if let Some(exe) = self.exes.borrow().get(&key) {
+            return Ok(Rc::clone(exe));
+        }
+        let rel = arch.program_path(name)?;
+        let path = self.manifest.dir.join(rel);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::invalid("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_wall_s += dt;
+        }
+        log_debug!("compiled {key} in {dt:.2}s");
+        self.exes.borrow_mut().insert(key, Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Warm the executable cache for a checkpoint's hot-path programs.
+    pub fn warmup(&self, ckpt: &str, batches: &[usize]) -> Result<()> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        self.program(&arch, "prefill_b1")?;
+        let body = if arch.kind == "lm" { "decode" } else { "score" };
+        for &b in batches {
+            let b = self.manifest.batch_variant(b)?;
+            self.program(&arch, &format!("{body}_b{b}"))?;
+            self.program(&arch, &format!("gather_b{b}"))?;
+            self.program(&arch, &format!("broadcast_b{b}"))?;
+        }
+        let _ = self.weights_for(ckpt)?;
+        Ok(())
+    }
+
+    fn weights_for(&self, ckpt: &str) -> Result<Rc<Vec<PjRtBuffer>>> {
+        if let Some(w) = self.weights.borrow().get(ckpt) {
+            return Ok(Rc::clone(w));
+        }
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?;
+        let rel = arch
+            .weights
+            .get(ckpt)
+            .ok_or_else(|| Error::invalid(format!("no weights for '{ckpt}'")))?;
+        let path = self.manifest.dir.join(rel);
+        let bytes = std::fs::read(&path)?;
+        let total: usize = arch.weight_specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        if bytes.len() != total * 4 {
+            return Err(Error::invalid(format!(
+                "weights {}: got {} bytes, expected {} f32",
+                path.display(),
+                bytes.len(),
+                total
+            )));
+        }
+        let mut floats = vec![0f32; total];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            floats[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        let mut bufs = Vec::with_capacity(arch.weight_specs.len());
+        let mut off = 0;
+        for (_, shape) in &arch.weight_specs {
+            let n: usize = shape.iter().product();
+            bufs.push(self.client.buffer_from_host_buffer(&floats[off..off + n], shape, None)?);
+            off += n;
+        }
+        self.stats.borrow_mut().host_bytes_up += bytes.len() as u64;
+        log_info!("uploaded weights '{ckpt}' ({total} f32)");
+        let rc = Rc::new(bufs);
+        self.weights.borrow_mut().insert(ckpt.to_string(), Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().host_bytes_up += (data.len() * 4) as u64;
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn buf_u32(&self, data: &[u32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().host_bytes_up += (data.len() * 4) as u64;
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().host_bytes_up += (data.len() * 4) as u64;
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let t0 = Instant::now();
+        let mut out = exe.execute_b_untuple(args)?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_wall_s += t0.elapsed().as_secs_f64();
+        if out.is_empty() || out[0].is_empty() {
+            return Err(Error::Xla("execution produced no outputs".into()));
+        }
+        Ok(out.remove(0))
+    }
+
+    fn download_i32(&self, buf: &PjRtBuffer) -> Result<Vec<i32>> {
+        let lit = buf.to_literal_sync()?;
+        let v = lit.to_vec::<i32>()?;
+        self.stats.borrow_mut().host_bytes_down += (v.len() * 4) as u64;
+        Ok(v)
+    }
+
+    fn download_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        let v = lit.to_vec::<f32>()?;
+        self.stats.borrow_mut().host_bytes_down += (v.len() * 4) as u64;
+        Ok(v)
+    }
+
+    fn pad_prompt(&self, prompt: &[i32]) -> Result<(Vec<i32>, i32)> {
+        let pad = self.manifest.prompt_pad;
+        if prompt.len() > pad {
+            return Err(Error::invalid(format!(
+                "prompt of {} tokens exceeds PROMPT_PAD {pad}",
+                prompt.len()
+            )));
+        }
+        let mut toks = prompt.to_vec();
+        toks.resize(pad, crate::tokenizer::PAD);
+        Ok((toks, prompt.len() as i32))
+    }
+
+    // --------------------------------------------------------------- calls
+
+    /// LM prefill at b=1: returns last-token logits and the prompt KV cache.
+    pub fn lm_prefill(&self, ckpt: &str, prompt: &[i32]) -> Result<(Vec<f32>, KvSet)> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        if arch.kind != "lm" {
+            return Err(Error::invalid(format!("'{ckpt}' is not an LM checkpoint")));
+        }
+        let exe = self.program(&arch, "prefill_b1")?;
+        let w = self.weights_for(ckpt)?;
+        let (toks, len) = self.pad_prompt(prompt)?;
+        let t = self.buf_i32(&toks, &[1, toks.len()])?;
+        let l = self.buf_i32(&[len], &[1])?;
+        let mut args: Vec<&PjRtBuffer> = w.iter().collect();
+        args.push(&t);
+        args.push(&l);
+        let mut out = self.run(&exe, &args)?;
+        if out.len() != 1 + arch.n_kv() {
+            return Err(Error::Xla(format!(
+                "prefill returned {} outputs, expected {}",
+                out.len(),
+                1 + arch.n_kv()
+            )));
+        }
+        let logits = self.download_f32(&out[0])?;
+        let kv_bufs: Vec<PjRtBuffer> = out.drain(1..).collect();
+        let mut kv = KvSet::new(kv_bufs, 1, arch.cache_len);
+        kv.pos_phys = self.manifest.prompt_pad;
+        kv.commit(0, 0, prompt.len());
+        Ok((logits, kv))
+    }
+
+    /// PRM prefill at b=1 (no logits output).
+    pub fn prm_prefill(&self, ckpt: &str, prompt: &[i32]) -> Result<KvSet> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        if arch.kind != "prm" {
+            return Err(Error::invalid(format!("'{ckpt}' is not a PRM checkpoint")));
+        }
+        let exe = self.program(&arch, "prefill_b1")?;
+        let w = self.weights_for(ckpt)?;
+        let (toks, len) = self.pad_prompt(prompt)?;
+        let t = self.buf_i32(&toks, &[1, toks.len()])?;
+        let l = self.buf_i32(&[len], &[1])?;
+        let mut args: Vec<&PjRtBuffer> = w.iter().collect();
+        args.push(&t);
+        args.push(&l);
+        let out = self.run(&exe, &args)?;
+        if out.len() != arch.n_kv() {
+            return Err(Error::Xla(format!(
+                "prm prefill returned {} outputs, expected {}",
+                out.len(),
+                arch.n_kv()
+            )));
+        }
+        let mut kv = KvSet::new(out, 1, arch.cache_len);
+        kv.pos_phys = self.manifest.prompt_pad;
+        kv.commit(0, 0, prompt.len());
+        Ok(kv)
+    }
+
+    /// Broadcast a b=1 prompt cache into `n` beam slots (rounded up to an
+    /// exported batch variant). Device-side replicate + bookkeeping copy.
+    pub fn kv_broadcast(&self, ckpt: &str, kv: &KvSet, n: usize) -> Result<KvSet> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        let b = self.manifest.batch_variant(n)?;
+        let exe = self.program(&arch, &format!("broadcast_b{b}"))?;
+        let args: Vec<&PjRtBuffer> = kv.bufs.iter().collect();
+        let out = self.run(&exe, &args)?;
+        let mut new = KvSet::new(out, b, arch.cache_len);
+        new.pos_phys = kv.pos_phys;
+        let (pos_log, valid) = kv.broadcast_bookkeeping(b);
+        new.pos_log = pos_log;
+        new.valid = valid;
+        Ok(new)
+    }
+
+    /// Permute beam slots on device: `new[slot] = old[idx[slot]]`.
+    pub fn kv_gather(&self, ckpt: &str, kv: &mut KvSet, idx: &[i32]) -> Result<()> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        if idx.len() != kv.batch {
+            return Err(Error::invalid(format!(
+                "gather idx len {} != batch {}",
+                idx.len(),
+                kv.batch
+            )));
+        }
+        let exe = self.program(&arch, &format!("gather_b{}", kv.batch))?;
+        let i = self.buf_i32(idx, &[idx.len()])?;
+        let mut args: Vec<&PjRtBuffer> = vec![&i];
+        args.extend(kv.bufs.iter());
+        let out = self.run(&exe, &args)?;
+        kv.bufs = out;
+        kv.permute_bookkeeping(idx);
+        Ok(())
+    }
+
+    /// Move beam slots between batch variants: `new[slot] = old[idx[slot]]`
+    /// with `idx.len() == dst_batch`. This is the device half of two-tier
+    /// batching (shrink to b2 for completion, grow back to b1 at expansion).
+    pub fn kv_resize(&self, ckpt: &str, kv: &KvSet, idx: &[i32], dst_batch: usize) -> Result<KvSet> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        if idx.len() != dst_batch {
+            return Err(Error::invalid("resize idx len must equal dst batch"));
+        }
+        if dst_batch == kv.batch {
+            // same-variant: plain gather into a fresh KvSet
+            let exe = self.program(&arch, &format!("gather_b{}", kv.batch))?;
+            let i = self.buf_i32(idx, &[idx.len()])?;
+            let mut args: Vec<&PjRtBuffer> = vec![&i];
+            args.extend(kv.bufs.iter());
+            let out = self.run(&exe, &args)?;
+            let mut new = KvSet::new(out, dst_batch, arch.cache_len);
+            new.pos_phys = kv.pos_phys;
+            copy_bookkeeping(kv, &mut new, idx);
+            return Ok(new);
+        }
+        let exe = self.program(&arch, &format!("resize_b{}_to_b{}", kv.batch, dst_batch))?;
+        let i = self.buf_i32(idx, &[idx.len()])?;
+        let mut args: Vec<&PjRtBuffer> = vec![&i];
+        args.extend(kv.bufs.iter());
+        let out = self.run(&exe, &args)?;
+        let mut new = KvSet::new(out, dst_batch, arch.cache_len);
+        new.pos_phys = kv.pos_phys;
+        copy_bookkeeping(kv, &mut new, idx);
+        Ok(new)
+    }
+
+    /// Sample `decode_block` tokens for every slot. Consumes and replaces
+    /// the KV buffers (they are donated to the execution). Caller commits
+    /// accepted tokens into the bookkeeping afterwards.
+    pub fn lm_decode_block(
+        &self,
+        ckpt: &str,
+        kv: &mut KvSet,
+        prev_tok: &[i32],
+        temp: f32,
+        keys: &[u32],
+    ) -> Result<Vec<i32>> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        let b = kv.batch;
+        if prev_tok.len() != b || keys.len() != 2 * b {
+            return Err(Error::invalid("decode arg arity mismatch"));
+        }
+        if kv.remaining() < self.manifest.decode_block {
+            return Err(Error::invalid(format!(
+                "KV cache exhausted (frontier {} of {})",
+                kv.pos_phys, kv.cache_len
+            )));
+        }
+        let exe = self.program(&arch, &format!("decode_b{b}"))?;
+        let w = self.weights_for(ckpt)?;
+        let pos_phys = self.buf_i32(&[kv.pos_phys as i32], &[1])?;
+        let pos_log = self.buf_i32(&kv.pos_log, &[b])?;
+        let valid = self.buf_i32(&kv.valid, &[b, kv.cache_len])?;
+        let tok = self.buf_i32(prev_tok, &[b])?;
+        let t = self.buf_f32(&[temp], &[1])?;
+        let k = self.buf_u32(keys, &[b, 2])?;
+        let mut args: Vec<&PjRtBuffer> = w.iter().collect();
+        args.extend([&pos_phys, &pos_log, &valid, &tok, &t, &k]);
+        args.extend(kv.bufs.iter());
+        let mut out = self.run(&exe, &args)?;
+        if out.len() != 1 + arch.n_kv() {
+            return Err(Error::Xla(format!("decode returned {} outputs", out.len())));
+        }
+        let tokens = self.download_i32(&out[0])?;
+        kv.bufs = out.drain(1..).collect();
+        kv.advance_frontier(self.manifest.decode_block);
+        Ok(tokens)
+    }
+
+    /// Score `score_block` new tokens per slot with the PRM. `tokens` is
+    /// row-major `[batch, score_block]` (PAD beyond each slot's span).
+    pub fn prm_score_block(
+        &self,
+        ckpt: &str,
+        kv: &mut KvSet,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        let b = kv.batch;
+        let t = self.manifest.score_block;
+        if tokens.len() != b * t {
+            return Err(Error::invalid("score tokens arity mismatch"));
+        }
+        if kv.remaining() < t {
+            return Err(Error::invalid(format!(
+                "PRM KV cache exhausted (frontier {} of {})",
+                kv.pos_phys, kv.cache_len
+            )));
+        }
+        let exe = self.program(&arch, &format!("score_b{b}"))?;
+        let w = self.weights_for(ckpt)?;
+        let pos_phys = self.buf_i32(&[kv.pos_phys as i32], &[1])?;
+        let pos_log = self.buf_i32(&kv.pos_log, &[b])?;
+        let valid = self.buf_i32(&kv.valid, &[b, kv.cache_len])?;
+        let toks = self.buf_i32(tokens, &[b, t])?;
+        let mut args: Vec<&PjRtBuffer> = w.iter().collect();
+        args.extend([&pos_phys, &pos_log, &valid, &toks]);
+        args.extend(kv.bufs.iter());
+        let mut out = self.run(&exe, &args)?;
+        if out.len() != 1 + arch.n_kv() {
+            return Err(Error::Xla(format!("score returned {} outputs", out.len())));
+        }
+        let scores = self.download_f32(&out[0])?;
+        kv.bufs = out.drain(1..).collect();
+        kv.advance_frontier(t);
+        Ok(scores)
+    }
+
+    /// Whole-sequence PRM scoring through the Pallas prefix-score kernel.
+    /// `tokens` is row-major `[fullseq_batch, seq_train]`.
+    /// Returns (score, cummin, cummean), each `[fullseq_batch * seq_train]`.
+    pub fn prm_fullseq(
+        &self,
+        ckpt: &str,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        let fb = self.manifest.fullseq_batch;
+        let s = self.manifest.seq_train;
+        if tokens.len() != fb * s || lens.len() != fb {
+            return Err(Error::invalid(format!(
+                "fullseq expects [{fb}, {s}] tokens and [{fb}] lens"
+            )));
+        }
+        let exe = self.program(&arch, &format!("fullseq_b{fb}"))?;
+        let w = self.weights_for(ckpt)?;
+        let t = self.buf_i32(tokens, &[fb, s])?;
+        let l = self.buf_i32(lens, &[fb])?;
+        let mut args: Vec<&PjRtBuffer> = w.iter().collect();
+        args.push(&t);
+        args.push(&l);
+        let out = self.run(&exe, &args)?;
+        if out.len() != 3 {
+            return Err(Error::Xla(format!("fullseq returned {} outputs", out.len())));
+        }
+        Ok((
+            self.download_f32(&out[0])?,
+            self.download_f32(&out[1])?,
+            self.download_f32(&out[2])?,
+        ))
+    }
+}

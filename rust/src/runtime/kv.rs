@@ -1,0 +1,150 @@
+//! Device-resident KV-cache handles.
+//!
+//! A `KvSet` owns the `2 * n_layers` PJRT buffers of one cache instance
+//! plus the host-side bookkeeping the lockstep cache discipline needs
+//! (see `python/compile/model.py` docstring): the physical write frontier,
+//! per-slot logical positions, and the per-slot validity bitmask that
+//! marks which physical positions are attendable (clean tokens) vs junk
+//! (block overshoot past a step boundary / PAD slots).
+
+use xla::PjRtBuffer;
+
+/// Device KV cache + host bookkeeping for a batch of beam slots.
+pub struct KvSet {
+    /// `[l0.k, l0.v, l1.k, l1.v, ...]`, each `[batch, heads, cache_len, hd]`.
+    pub bufs: Vec<PjRtBuffer>,
+    pub batch: usize,
+    pub cache_len: usize,
+    /// Lockstep physical write frontier (same for every slot).
+    pub pos_phys: usize,
+    /// Per-slot logical sequence length (RoPE positions).
+    pub pos_log: Vec<i32>,
+    /// Per-slot validity bitmask, row-major `[batch, cache_len]`.
+    pub valid: Vec<i32>,
+}
+
+impl KvSet {
+    pub fn new(bufs: Vec<PjRtBuffer>, batch: usize, cache_len: usize) -> Self {
+        KvSet {
+            bufs,
+            batch,
+            cache_len,
+            pos_phys: 0,
+            pos_log: vec![0; batch],
+            valid: vec![0; batch * cache_len],
+        }
+    }
+
+    /// Mark `[start, start+n)` physical positions of `slot` attendable and
+    /// advance its logical position by `n`.
+    pub fn commit(&mut self, slot: usize, start: usize, n: usize) {
+        assert!(slot < self.batch, "slot {slot} out of range {}", self.batch);
+        assert!(start + n <= self.cache_len, "cache overflow: {}+{n} > {}", start, self.cache_len);
+        let row = slot * self.cache_len;
+        for p in start..start + n {
+            self.valid[row + p] = 1;
+        }
+        self.pos_log[slot] += n as i32;
+    }
+
+    /// Advance the lockstep frontier after a block write of `n` positions.
+    pub fn advance_frontier(&mut self, n: usize) {
+        self.pos_phys += n;
+        assert!(
+            self.pos_phys <= self.cache_len,
+            "physical frontier {} past cache_len {}",
+            self.pos_phys,
+            self.cache_len
+        );
+    }
+
+    /// Remaining physical capacity.
+    pub fn remaining(&self) -> usize {
+        self.cache_len - self.pos_phys
+    }
+
+    /// Permute host bookkeeping to match a device `gather(idx)`:
+    /// `new[slot] = old[idx[slot]]`.
+    pub fn permute_bookkeeping(&mut self, idx: &[i32]) {
+        assert_eq!(idx.len(), self.batch);
+        let old_log = self.pos_log.clone();
+        let old_valid = self.valid.clone();
+        for (dst, &src) in idx.iter().enumerate() {
+            let src = src as usize;
+            assert!(src < self.batch, "gather index {src} out of range");
+            self.pos_log[dst] = old_log[src];
+            let (d0, s0) = (dst * self.cache_len, src * self.cache_len);
+            self.valid[d0..d0 + self.cache_len]
+                .copy_from_slice(&old_valid[s0..s0 + self.cache_len]);
+        }
+    }
+
+    /// Resize bookkeeping after broadcast b=1 -> n (device side handled by
+    /// the broadcast program).
+    pub fn broadcast_bookkeeping(&self, n: usize) -> (Vec<i32>, Vec<i32>) {
+        assert_eq!(self.batch, 1);
+        let mut pos_log = Vec::with_capacity(n);
+        let mut valid = Vec::with_capacity(n * self.cache_len);
+        for _ in 0..n {
+            pos_log.push(self.pos_log[0]);
+            valid.extend_from_slice(&self.valid[..self.cache_len]);
+        }
+        (pos_log, valid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(batch: usize, cache_len: usize) -> KvSet {
+        KvSet::new(Vec::new(), batch, cache_len)
+    }
+
+    #[test]
+    fn commit_marks_valid_and_advances_logical() {
+        let mut kv = toy(2, 8);
+        kv.commit(0, 0, 3);
+        kv.commit(1, 0, 2);
+        assert_eq!(kv.pos_log, vec![3, 2]);
+        assert_eq!(&kv.valid[0..4], &[1, 1, 1, 0]);
+        assert_eq!(&kv.valid[8..12], &[1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn frontier_advances_lockstep() {
+        let mut kv = toy(2, 8);
+        kv.advance_frontier(4);
+        assert_eq!(kv.pos_phys, 4);
+        assert_eq!(kv.remaining(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache overflow")]
+    fn commit_overflow_panics() {
+        let mut kv = toy(1, 4);
+        kv.commit(0, 2, 3);
+    }
+
+    #[test]
+    fn permute_bookkeeping_matches_gather_semantics() {
+        let mut kv = toy(3, 4);
+        kv.commit(0, 0, 1);
+        kv.commit(1, 0, 2);
+        kv.commit(2, 0, 3);
+        kv.permute_bookkeeping(&[2, 2, 0]);
+        assert_eq!(kv.pos_log, vec![3, 3, 1]);
+        assert_eq!(&kv.valid[0..4], &[1, 1, 1, 0]); // slot0 = old slot2
+        assert_eq!(&kv.valid[8..12], &[1, 0, 0, 0]); // slot2 = old slot0
+    }
+
+    #[test]
+    fn broadcast_replicates_slot0() {
+        let mut kv = toy(1, 4);
+        kv.commit(0, 0, 2);
+        let (log, valid) = kv.broadcast_bookkeeping(3);
+        assert_eq!(log, vec![2, 2, 2]);
+        assert_eq!(valid.len(), 12);
+        assert_eq!(&valid[4..8], &[1, 1, 0, 0]);
+    }
+}

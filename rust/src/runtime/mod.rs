@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT artifacts (HLO text + weights.bin) and execute
+//! them on the CPU PJRT client with device-resident KV caches.
+//!
+//! Layering:
+//! * [`artifacts`] — manifest parsing, ABI checks against the tokenizer.
+//! * [`engine`] — `Engine`: PJRT client, lazy executable compilation cache,
+//!   weight buffers, and the typed call surface (`prefill`, `decode_block`,
+//!   `score_block`, `gather`, `broadcast`, `fullseq`).
+//! * [`kv`] — `KvSet`: the device-resident cache handles threaded between
+//!   calls (never copied to host on the hot path).
+//!
+//! The engine is deliberately *not* `Send` (the `xla` crate's client is
+//! `Rc`-based): the serving front end talks to a dedicated engine thread
+//! via channels (`server::router`), which also serializes PJRT access.
+
+pub mod artifacts;
+pub mod engine;
+pub mod kv;
+
+pub use artifacts::{Manifest, ModelArch};
+pub use engine::{Engine, ModelKind};
+pub use kv::KvSet;

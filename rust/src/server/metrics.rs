@@ -1,0 +1,102 @@
+//! Serving metrics: counters + latency/FLOPs histograms, text-exposable.
+
+use std::sync::Mutex;
+
+use crate::util::stats::Histogram;
+
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    requests: u64,
+    errors: u64,
+    correct: u64,
+    latency_ms: Histogram,
+    flops: Histogram,
+    started: std::time::Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            inner: Mutex::new(Inner {
+                requests: 0,
+                errors: 0,
+                correct: 0,
+                latency_ms: Histogram::new(0.0, 60_000.0, 600),
+                flops: Histogram::new(0.0, 1e12, 200),
+                started: std::time::Instant::now(),
+            }),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_ok(&self, latency_ms: f64, flops: f64, correct: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.correct += correct as u64;
+        m.latency_ms.record(latency_ms);
+        m.flops.record(flops);
+    }
+
+    pub fn record_error(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.errors += 1;
+    }
+
+    /// Render in a Prometheus-flavoured text format.
+    pub fn render(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let up = m.started.elapsed().as_secs_f64();
+        let qps = if up > 0.0 { m.requests as f64 / up } else { 0.0 };
+        format!(
+            "erprm_requests_total {}\n\
+             erprm_errors_total {}\n\
+             erprm_correct_total {}\n\
+             erprm_uptime_seconds {:.1}\n\
+             erprm_throughput_rps {:.4}\n\
+             erprm_latency_ms_mean {:.2}\n\
+             erprm_latency_ms_p50 {:.2}\n\
+             erprm_latency_ms_p95 {:.2}\n\
+             erprm_flops_mean {:.3e}\n",
+            m.requests,
+            m.errors,
+            m.correct,
+            up,
+            qps,
+            m.latency_ms.mean(),
+            m.latency_ms.quantile(0.5),
+            m.latency_ms.quantile(0.95),
+            m.flops.mean(),
+        )
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.requests, m.errors, m.correct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_renders() {
+        let m = Metrics::default();
+        m.record_ok(12.0, 1e9, true);
+        m.record_ok(20.0, 2e9, false);
+        m.record_error();
+        let (req, err, corr) = m.snapshot();
+        assert_eq!((req, err, corr), (3, 1, 1));
+        let text = m.render();
+        assert!(text.contains("erprm_requests_total 3"));
+        assert!(text.contains("erprm_errors_total 1"));
+        assert!(text.contains("latency_ms_p50"));
+    }
+}

@@ -1,0 +1,16 @@
+//! HTTP serving front end.
+//!
+//! * [`http`] — minimal HTTP/1.1 server on `std::net` + the thread pool
+//!   (tokio is unavailable offline).
+//! * [`metrics`] — request counters and latency histograms (`/metrics`).
+//! * [`router`] — the engine actor: the PJRT engine is `!Send`, so one
+//!   dedicated thread owns it and serves solve requests from a channel;
+//!   the router also implements per-model-combo queues and batching of
+//!   queued requests into the engine thread.
+//! * [`api`] — request/response JSON schema for `/solve`, `/healthz`,
+//!   `/metrics`.
+
+pub mod api;
+pub mod http;
+pub mod metrics;
+pub mod router;

@@ -1,0 +1,165 @@
+//! The engine actor + request router.
+//!
+//! The PJRT engine is `!Send` (Rc-based client), so a dedicated thread owns
+//! it and executes solve requests sequentially from an mpsc queue; HTTP
+//! workers enqueue requests and block on a oneshot-style reply channel.
+//! The router keeps per-(lm,prm) warm state in the single engine and
+//! surfaces queue depth for backpressure (503 when saturated).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::config::SearchConfig;
+use crate::coordinator::search::SolveOutcome;
+use crate::coordinator::{solve_early_rejection, solve_vanilla};
+use crate::config::SearchMode;
+use crate::harness::temp_for;
+use crate::log_error;
+use crate::runtime::Engine;
+use crate::server::api::SolveRequest;
+use crate::util::error::{Error, Result};
+
+type Reply = mpsc::Sender<Result<SolveOutcome>>;
+
+enum Msg {
+    Solve(SolveRequest, SearchConfig, Reply),
+    Shutdown,
+}
+
+/// Handle used by HTTP workers; cheap to clone.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+    depth: Arc<AtomicUsize>,
+    capacity: usize,
+}
+
+impl EngineHandle {
+    /// Spawn the engine actor thread. Fails fast (in the caller) if the
+    /// artifacts dir is unloadable.
+    pub fn spawn(artifacts_dir: PathBuf, _defaults: SearchConfig, capacity: usize) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth2 = Arc::clone(&depth);
+        std::thread::Builder::new()
+            .name("erprm-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&artifacts_dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Shutdown => break,
+                        Msg::Solve(req, cfg, reply) => {
+                            let res = run_solve(&engine, &req, &cfg);
+                            depth2.fetch_sub(1, Ordering::Relaxed);
+                            if let Err(e) = &res {
+                                log_error!("solve failed: {e}");
+                            }
+                            let _ = reply.send(res);
+                        }
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::invalid("engine thread died during startup"))??;
+        Ok(EngineHandle { tx, depth, capacity })
+    }
+
+    /// Enqueue a solve; returns Err immediately when saturated (backpressure).
+    pub fn solve(&self, req: SolveRequest, mut cfg: SearchConfig) -> Result<SolveOutcome> {
+        if self.depth.load(Ordering::Relaxed) >= self.capacity {
+            return Err(Error::invalid("queue full"));
+        }
+        cfg.mode = req.mode;
+        cfg.n_beams = req.n_beams;
+        cfg.tau = req.tau;
+        cfg.validate()?;
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Solve(req, cfg, rtx))
+            .map_err(|_| Error::invalid("engine thread gone"))?;
+        rrx.recv().map_err(|_| Error::invalid("engine dropped request"))?
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+fn run_solve(engine: &Engine, req: &SolveRequest, cfg: &SearchConfig) -> Result<SolveOutcome> {
+    let temp = temp_for(&req.lm);
+    match req.mode {
+        SearchMode::Vanilla => solve_vanilla(engine, &req.lm, &req.prm, &req.problem, cfg, temp),
+        SearchMode::EarlyRejection => {
+            solve_early_rejection(engine, &req.lm, &req.prm, &req.problem, cfg, temp)
+        }
+    }
+}
+
+/// A simple FIFO request queue wrapper for tests/ablation of routing.
+#[derive(Default)]
+pub struct FifoQueue<T> {
+    inner: Mutex<std::collections::VecDeque<T>>,
+}
+
+impl<T> FifoQueue<T> {
+    pub fn push(&self, item: T) {
+        self.inner.lock().unwrap().push_back(item);
+    }
+
+    pub fn pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let q = FifoQueue::default();
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn spawn_fails_fast_without_artifacts() {
+        let r = EngineHandle::spawn(
+            PathBuf::from("/nonexistent-artifacts"),
+            SearchConfig::default(),
+            4,
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Analytic simulator of the paper's Section 4 theory.
+//!
+//! Implements the i.i.d. per-token toy model: beam i's token scores are
+//! i.i.d. with mean mu_i and std sigma; the partial reward is the sum of
+//! the first tau tokens, the final reward the sum of all L. Under this
+//! model rho(P, F) = sqrt(tau / L) exactly, and the probability of pruning
+//! the best beam obeys the sub-Gaussian bound
+//!     Pr[P_best < T] <= (N - 1) exp(-Delta^2 / (4 sigma_tau^2)).
+//! The `theory_bounds` bench and `examples/theory_validation.rs` regenerate
+//! the paper's Fig. 4 trend and verify the bound empirically.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Monte-Carlo correlation of (partial@tau, final@L) under the toy model.
+/// All beams share mu=0, sigma=1 (correlation is mean-invariant).
+pub fn toy_correlation(tau: usize, l: usize, trials: usize, seed: u64) -> (f64, f64) {
+    assert!(tau >= 1 && tau <= l);
+    let mut rng = Rng::new(seed);
+    let mut partials = Vec::with_capacity(trials);
+    let mut finals = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let mut p = 0.0;
+        let mut f = 0.0;
+        for t in 0..l {
+            let x = rng.normal();
+            f += x;
+            if t < tau {
+                p += x;
+            }
+        }
+        partials.push(p);
+        finals.push(f);
+    }
+    (stats::pearson(&partials, &finals), stats::kendall_tau(&partials, &finals))
+}
+
+/// Closed form rho = sqrt(tau / L).
+pub fn toy_correlation_exact(tau: usize, l: usize) -> f64 {
+    (tau as f64 / l as f64).sqrt()
+}
+
+/// One early-rejection trial: N beams, best beam has per-token mean
+/// `delta_token` above the rest; keep the top N/M by partial reward.
+/// Returns whether the best beam was (wrongly) pruned.
+fn prune_trial(rng: &mut Rng, n: usize, m: usize, tau: usize, delta_token: f64, sigma: f64) -> bool {
+    let keep = (n / m).max(1);
+    let mut partials = Vec::with_capacity(n);
+    for i in 0..n {
+        let mu = if i == 0 { delta_token } else { 0.0 };
+        let mut p = 0.0;
+        for _ in 0..tau {
+            p += mu + sigma * rng.normal();
+        }
+        partials.push(p);
+    }
+    // rank of beam 0 (the true best)
+    let best = partials[0];
+    let better = partials[1..].iter().filter(|&&p| p > best).count();
+    better >= keep
+}
+
+/// Empirical Pr[prune best] and the sub-Gaussian upper bound.
+///
+/// Bound (Sec. 4): with expected partial-score gap Delta = tau*delta_token
+/// and sub-Gaussian parameter sigma_tau = sigma*sqrt(tau):
+///   Pr <= (N-1) exp(-Delta^2 / (4 sigma_tau^2))
+///       = (N-1) exp(-tau * delta_token^2 / (4 sigma^2)).
+pub fn prune_probability(
+    n: usize,
+    m: usize,
+    tau: usize,
+    delta_token: f64,
+    sigma: f64,
+    trials: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut pruned = 0usize;
+    for _ in 0..trials {
+        if prune_trial(&mut rng, n, m, tau, delta_token, sigma) {
+            pruned += 1;
+        }
+    }
+    let empirical = pruned as f64 / trials as f64;
+    let bound =
+        ((n - 1) as f64) * (-(tau as f64) * delta_token * delta_token / (4.0 * sigma * sigma)).exp();
+    (empirical, bound.min(1.0))
+}
+
+/// Minimum tau for a target correlation rho* (Sec. 4): tau >= rho*^2 * L.
+pub fn min_tau_for_rho(rho_star: f64, l: usize) -> usize {
+    // epsilon guards fp noise (0.8^2 * 100 = 64.00000000000001)
+    (rho_star * rho_star * l as f64 - 1e-9).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correlation_follows_sqrt_law() {
+        for &(tau, l) in &[(8usize, 64usize), (16, 64), (32, 64), (64, 64)] {
+            let (pearson, _) = toy_correlation(tau, l, 4000, 42);
+            let exact = toy_correlation_exact(tau, l);
+            assert!(
+                (pearson - exact).abs() < 0.05,
+                "tau={tau} L={l}: mc {pearson:.3} vs exact {exact:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn correlation_is_one_at_full_length() {
+        let (p, k) = toy_correlation(32, 32, 500, 1);
+        assert!((p - 1.0).abs() < 1e-9);
+        assert!((k - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kendall_increases_with_tau() {
+        let (_, k8) = toy_correlation(8, 64, 3000, 7);
+        let (_, k32) = toy_correlation(32, 64, 3000, 7);
+        assert!(k32 > k8);
+    }
+
+    #[test]
+    fn bound_holds_and_decays() {
+        // wide gap, modest noise: both empirical and bound tiny
+        let (emp, bound) = prune_probability(16, 4, 32, 0.5, 1.0, 3000, 9);
+        assert!(emp <= bound + 0.02, "empirical {emp} vs bound {bound}");
+        // bound decays exponentially in tau (delta large enough that the
+        // min(.,1) clamp releases)
+        let (_, b8) = prune_probability(16, 4, 8, 1.0, 1.0, 10, 9);
+        let (_, b64) = prune_probability(16, 4, 64, 1.0, 1.0, 10, 9);
+        assert!(b64 < b8 * 0.1, "b8={b8} b64={b64}");
+    }
+
+    #[test]
+    fn zero_gap_prunes_often() {
+        // with no gap the best beam survives only by luck (keep/N)
+        let (emp, _) = prune_probability(16, 4, 16, 0.0, 1.0, 4000, 11);
+        let expected = 1.0 - 4.0 / 16.0; // keep 4 of 16
+        assert!((emp - expected).abs() < 0.06, "emp {emp} vs {expected}");
+    }
+
+    #[test]
+    fn min_tau_matches_paper_example() {
+        // paper: rho*=0.8 demands tau >= 0.64 L
+        assert_eq!(min_tau_for_rho(0.8, 100), 64);
+    }
+}

@@ -1,0 +1,161 @@
+//! Tokenizer for the arithmetic-chain grammar.
+//!
+//! The vocabulary is defined once in `python/compile/grammar.py` and shipped
+//! in `artifacts/manifest.json`; this module hard-codes the same ids (they
+//! are part of the artifact ABI) and verifies them against the manifest at
+//! engine startup (`runtime::artifacts`), so Python and Rust can never
+//! disagree silently.
+
+/// Token ids (ABI shared with python/compile/grammar.py).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const DIG0: i32 = 3; // '0'..'9' -> 3..12
+pub const PLUS: i32 = 13;
+pub const MINUS: i32 = 14;
+pub const TIMES: i32 = 15;
+pub const EQ: i32 = 16;
+pub const SEMI: i32 = 17; // step separator
+pub const SEP: i32 = 18; // problem/solution separator '>'
+pub const ANS: i32 = 19;
+pub const COLON: i32 = 20;
+pub const FILL: i32 = 21; // '~' filler (verbose traces)
+pub const SPACE: i32 = 22;
+pub const RSV: i32 = 23;
+pub const VOCAB_SIZE: usize = 24;
+
+/// Value modulus of the task (two-digit arithmetic).
+pub const MOD: i64 = 100;
+
+/// The canonical token strings, index == id.
+pub fn token_strs() -> Vec<&'static str> {
+    let mut v = vec!["<pad>", "<bos>", "<eos>"];
+    v.extend(["0", "1", "2", "3", "4", "5", "6", "7", "8", "9"]);
+    v.extend(["+", "-", "*", "=", ";", ">", "A", ":", "~", " ", "#"]);
+    v
+}
+
+/// Render token ids as a human-readable string.
+pub fn detok(ids: &[i32]) -> String {
+    let strs = token_strs();
+    ids.iter()
+        .map(|&i| strs.get(i as usize).copied().unwrap_or("?"))
+        .collect()
+}
+
+/// Two zero-padded digit tokens for a value mod 100.
+pub fn two_digits(v: i64) -> [i32; 2] {
+    let v = v.rem_euclid(MOD);
+    [DIG0 + (v / 10) as i32, DIG0 + (v % 10) as i32]
+}
+
+/// Parse two consecutive digit tokens; None if either is not a digit.
+pub fn parse_two_digits(a: i32, b: i32) -> Option<i64> {
+    if (DIG0..DIG0 + 10).contains(&a) && (DIG0..DIG0 + 10).contains(&b) {
+        Some(((a - DIG0) * 10 + (b - DIG0)) as i64)
+    } else {
+        None
+    }
+}
+
+pub fn is_digit(t: i32) -> bool {
+    (DIG0..DIG0 + 10).contains(&t)
+}
+
+pub fn is_op(t: i32) -> bool {
+    matches!(t, PLUS | MINUS | TIMES)
+}
+
+/// Apply an operation token to a running value (mod 100).
+pub fn apply_op(v: i64, op: i32, d: i64) -> i64 {
+    match op {
+        PLUS => (v + d).rem_euclid(MOD),
+        MINUS => (v - d).rem_euclid(MOD),
+        TIMES => (v * d).rem_euclid(MOD),
+        _ => panic!("bad op token {op}"),
+    }
+}
+
+/// Scratch items for one reasoning step (mirrors grammar.scratch_items).
+pub fn scratch_items(v: i64, op: i32, d: i64) -> Vec<i64> {
+    (1..=d)
+        .map(|i| match op {
+            PLUS => (v + i).rem_euclid(MOD),
+            MINUS => (v - i).rem_euclid(MOD),
+            TIMES => (v * i).rem_euclid(MOD),
+            _ => panic!("bad op token {op}"),
+        })
+        .collect()
+}
+
+/// Extract the final answer from a generated solution: last `A dd` group.
+pub fn extract_answer(sol: &[i32]) -> Option<i64> {
+    for i in (0..sol.len().saturating_sub(2)).rev() {
+        if sol[i] == ANS {
+            if let Some(v) = parse_two_digits(sol[i + 1], sol[i + 2]) {
+                return Some(v);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_matches_size() {
+        assert_eq!(token_strs().len(), VOCAB_SIZE);
+        assert_eq!(token_strs()[PLUS as usize], "+");
+        assert_eq!(token_strs()[ANS as usize], "A");
+    }
+
+    #[test]
+    fn two_digit_roundtrip() {
+        for v in 0..100 {
+            let [a, b] = two_digits(v);
+            assert_eq!(parse_two_digits(a, b), Some(v));
+        }
+        assert_eq!(two_digits(105), two_digits(5));
+        assert_eq!(two_digits(-1), two_digits(99));
+    }
+
+    #[test]
+    fn parse_rejects_non_digits() {
+        assert_eq!(parse_two_digits(PLUS, DIG0), None);
+        assert_eq!(parse_two_digits(DIG0, EOS), None);
+    }
+
+    #[test]
+    fn ops() {
+        assert_eq!(apply_op(99, PLUS, 3), 2);
+        assert_eq!(apply_op(1, MINUS, 4), 97);
+        assert_eq!(apply_op(25, TIMES, 5), 25);
+    }
+
+    #[test]
+    fn scratch_matches_python() {
+        assert_eq!(scratch_items(98, PLUS, 3), vec![99, 0, 1]);
+        assert_eq!(scratch_items(1, MINUS, 2), vec![0, 99]);
+        assert_eq!(scratch_items(25, TIMES, 4), vec![25, 50, 75, 0]);
+    }
+
+    #[test]
+    fn answer_extraction() {
+        let mut sol = vec![DIG0 + 1, SEMI];
+        sol.push(ANS);
+        sol.extend(two_digits(42));
+        sol.push(EOS);
+        assert_eq!(extract_answer(&sol), Some(42));
+        assert_eq!(extract_answer(&[BOS, EOS]), None);
+    }
+
+    #[test]
+    fn detok_readable() {
+        let mut toks = vec![BOS];
+        toks.extend(two_digits(61));
+        toks.extend([MINUS, DIG0 + 5, SEP]);
+        assert_eq!(detok(&toks), "<bos>61-5>");
+    }
+}

@@ -1,0 +1,209 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Two roles:
+//! * `bench_fn` — micro/endpoint timing with warmup, repeated samples, and
+//!   robust statistics (mean / p50 / p95 / min), for the L3 hot-path
+//!   benches.
+//! * `Table` — aligned text tables used by every paper-table/figure bench
+//!   to print the same rows/series the paper reports, plus tee-to-file so
+//!   `cargo bench` leaves machine-readable records under target/bench-out/.
+
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10} {:>10} {:>10} {:>10}  ({} samples)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+            self.samples
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Time `f` with warmup; samples until `max_samples` or `budget` elapses.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, max_samples: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(max_samples);
+    let start = Instant::now();
+    while samples.len() < max_samples && (samples.len() < 3 || start.elapsed() < budget) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples: samples.len(),
+        mean_ns: stats::mean(&samples),
+        p50_ns: stats::quantile(&samples, 0.5),
+        p95_ns: stats::quantile(&samples, 0.95),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Header printed once per bench binary.
+pub fn bench_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<42} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p95", "min"
+    );
+}
+
+// ---------------------------------------------------------------- tables
+
+/// Aligned text table for paper-style output.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print and also tee to target/bench-out/<slug>.txt.
+    pub fn emit(&self, slug: &str) {
+        let rendered = self.render();
+        print!("{rendered}");
+        let dir = std::path::Path::new("target/bench-out");
+        if std::fs::create_dir_all(dir).is_ok() {
+            if let Ok(mut f) = std::fs::File::create(dir.join(format!("{slug}.txt"))) {
+                let _ = f.write_all(rendered.as_bytes());
+            }
+        }
+    }
+}
+
+/// Format a FLOPs count in the paper's style (scaled scientific, 2 d.p.).
+pub fn fmt_flops(f: f64) -> String {
+    if f >= 1e12 {
+        format!("{:.2}e12", f / 1e12)
+    } else if f >= 1e9 {
+        format!("{:.2}e9", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2}e6", f / 1e6)
+    } else {
+        format!("{f:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_counts_samples() {
+        let r = bench_fn("noop", 2, 10, Duration::from_secs(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples, 10);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn table_render_aligned() {
+        let mut t = Table::new("T", &["a", "long-col"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        assert!(s.contains("long-col"));
+        let lines: Vec<&str> = s.lines().filter(|l| !l.is_empty()).collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_flops_scales() {
+        assert_eq!(fmt_flops(2.5e12), "2.50e12");
+        assert_eq!(fmt_flops(3.1e9), "3.10e9");
+        assert_eq!(fmt_flops(4.2e6), "4.20e6");
+        assert_eq!(fmt_flops(123.0), "123");
+    }
+}

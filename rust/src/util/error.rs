@@ -1,0 +1,66 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for the serving stack.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed JSON / manifest / config input.
+    Parse(String),
+    /// I/O failure (artifacts, sockets, weights).
+    Io(std::io::Error),
+    /// PJRT / XLA runtime failure.
+    Xla(String),
+    /// Invariant violation in the coordinator (a bug or bad request).
+    Invalid(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Shorthand constructors.
+impl Error {
+    pub fn parse(m: impl Into<String>) -> Self {
+        Error::Parse(m.into())
+    }
+    pub fn invalid(m: impl Into<String>) -> Self {
+        Error::Invalid(m.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        assert!(Error::parse("x").to_string().contains("parse"));
+        assert!(Error::invalid("y").to_string().contains("invalid"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
+    }
+}

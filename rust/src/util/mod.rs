@@ -1,0 +1,11 @@
+//! Hand-rolled substrate utilities (no serde/clap/tokio/criterion offline).
+
+pub mod benchkit;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

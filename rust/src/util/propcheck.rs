@@ -1,0 +1,147 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` randomized cases generated from a
+//! seeded RNG; on failure it re-derives the failing seed and attempts
+//! greedy shrinking through a user-provided `shrink` function, then panics
+//! with the minimal counterexample and the seed needed to replay it.
+//!
+//! Used for the coordinator invariants (routing, batching, beam state) —
+//! see `coordinator::*` test modules.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // ERPRM_PROPTEST_CASES scales coverage in CI vs local runs.
+        let cases = std::env::var("ERPRM_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Config { cases, seed: 0x5EED, max_shrink_iters: 200 }
+    }
+}
+
+/// Check `prop` over `cases` random inputs from `gen`.
+///
+/// `gen`: produce a case from an RNG.  `prop`: return Err(reason) on failure.
+/// `shrink`: propose smaller variants of a failing case (may be empty).
+pub fn check<T, G, P, S>(name: &str, cfg: Config, mut gen: G, prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    for case_idx in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case_idx as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let case = gen(&mut rng);
+        if let Err(first_reason) = prop(&case) {
+            // greedy shrink
+            let mut best = case.clone();
+            let mut best_reason = first_reason;
+            let mut iters = 0;
+            'outer: loop {
+                for candidate in shrink(&best) {
+                    iters += 1;
+                    if iters > cfg.max_shrink_iters {
+                        break 'outer;
+                    }
+                    if let Err(r) = prop(&candidate) {
+                        best = candidate;
+                        best_reason = r;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case_idx}, seed {case_seed:#x})\n\
+                 reason: {best_reason}\nminimal counterexample: {best:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: check with no shrinking.
+pub fn check_simple<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check(name, Config::default(), gen, prop, |_| Vec::new());
+}
+
+/// Shrinker for vectors: halves and single-removals.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 8 {
+        for i in 0..v.len() {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check_simple("sum-nonneg", |rng| (0..8).map(|_| rng.below(10)).collect::<Vec<_>>(), |v| {
+            if v.iter().sum::<usize>() < usize::MAX {
+                Ok(())
+            } else {
+                Err("overflow".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check_simple("always-fails", |rng| rng.below(100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn shrinking_reduces_case() {
+        // property: no vector contains a 7. shrinker should isolate a small one.
+        check(
+            "no-sevens",
+            Config { cases: 200, ..Default::default() },
+            |rng| (0..rng.below(20) + 1).map(|_| rng.below(10) as u32).collect::<Vec<u32>>(),
+            |v| {
+                if v.contains(&7) {
+                    Err("has 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+            |v| shrink_vec(v),
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let v = vec![1, 2, 3, 4];
+        for s in shrink_vec(&v) {
+            assert!(s.len() < v.len());
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Fixed-size thread pool (tokio is unavailable offline).
+//!
+//! Drives the HTTP server's connection handling and parallel experiment
+//! sweeps. Jobs are `FnOnce` closures; `join` blocks until the queue
+//! drains; dropping the pool shuts workers down cleanly.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    executed: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let executed = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            let executed = Arc::clone(&executed);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("erprm-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                executed.fetch_add(1, Ordering::Relaxed);
+                                let (lock, cv) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                if *p == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shutdown
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, pending, executed }
+    }
+
+    /// Submit a job; panics if the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Total jobs executed since creation.
+    pub fn executed(&self) -> usize {
+        self.executed.load(Ordering::Relaxed)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel => workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run a closure over each item with bounded parallelism, collecting results
+/// in input order. Convenience for experiment sweeps.
+pub fn parallel_map<T, R, F>(pool: &ThreadPool, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    let f = Arc::new(f);
+    let results: Arc<Mutex<Vec<Option<R>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    for (i, item) in items.into_iter().enumerate() {
+        let f = Arc::clone(&f);
+        let results = Arc::clone(&results);
+        pool.execute(move || {
+            let r = f(item);
+            results.lock().unwrap()[i] = Some(r);
+        });
+    }
+    pool.join();
+    Arc::try_unwrap(results)
+        .ok()
+        .expect("all workers done")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("job completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.executed(), 100);
+    }
+
+    #[test]
+    fn join_waits_for_slow_jobs() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicU64::new(0));
+        for _ in 0..4 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                thread::sleep(std::time::Duration::from_millis(20));
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = parallel_map(&pool, (0..50).collect::<Vec<i32>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn drop_shuts_down() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        pool.join();
+        drop(pool); // must not hang
+    }
+}

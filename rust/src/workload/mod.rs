@@ -1,0 +1,196 @@
+//! Benchmark workload generators + answer checking.
+//!
+//! Synthetic analogs of the paper's three math benchmarks (DESIGN.md
+//! "Substitutions"): a difficulty gradient of arithmetic-chain problems
+//! with mechanically checkable answers. Mirrors `python/compile/grammar.py`
+//! exactly (tested against the same fixtures).
+
+pub mod validator;
+
+use crate::tokenizer as tk;
+use crate::util::rng::Rng;
+
+/// One chained operation of a problem.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpStep {
+    pub op: i32, // PLUS | MINUS | TIMES token
+    pub d: i64,  // operand, 2..=9
+}
+
+/// A benchmark problem: start value + K chained operations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Problem {
+    pub v0: i64,
+    pub ops: Vec<OpStep>,
+}
+
+impl Problem {
+    pub fn answer(&self) -> i64 {
+        self.ops.iter().fold(self.v0, |v, s| tk::apply_op(v, s.op, s.d))
+    }
+
+    /// Prompt token encoding: BOS v0 (op d ';')*K '>'.
+    ///
+    /// Ops are ';'-separated so the k-th op follows the (k-1)-th ';' —
+    /// aligned with the ';' count of the solution so far, which makes op
+    /// retrieval a countable attention pattern for the small LM (see
+    /// grammar.py).
+    pub fn prompt_tokens(&self) -> Vec<i32> {
+        let mut t = vec![tk::BOS];
+        t.extend(tk::two_digits(self.v0));
+        for s in &self.ops {
+            t.push(s.op);
+            t.push(tk::DIG0 + s.d as i32);
+            t.push(tk::SEMI);
+        }
+        t.push(tk::SEP);
+        t
+    }
+
+    /// Gold solution tokens (concise style) — reference traces for tests
+    /// and for the oracle baseline.
+    pub fn gold_solution(&self) -> Vec<i32> {
+        let mut t = Vec::new();
+        let mut v = self.v0;
+        for s in &self.ops {
+            t.extend(tk::two_digits(v));
+            t.push(s.op);
+            t.push(tk::DIG0 + s.d as i32);
+            t.push(tk::COLON);
+            for item in tk::scratch_items(v, s.op, s.d) {
+                t.extend(tk::two_digits(item));
+                t.push(tk::SPACE);
+            }
+            v = tk::apply_op(v, s.op, s.d);
+            t.push(tk::EQ);
+            t.extend(tk::two_digits(v));
+            t.push(tk::SEMI);
+        }
+        t.push(tk::ANS);
+        t.extend(tk::two_digits(v));
+        t.push(tk::EOS);
+        t
+    }
+}
+
+/// Benchmark descriptor: mirrors grammar.BENCHMARKS.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchSpec {
+    pub name: &'static str,
+    pub k: usize,
+    pub d_lo: i64,
+    pub d_hi: i64,
+    pub p_times: f64,
+}
+
+pub const SATMATH: BenchSpec = BenchSpec { name: "satmath-s", k: 3, d_lo: 2, d_hi: 6, p_times: 0.2 };
+pub const MATH500: BenchSpec = BenchSpec { name: "math500-s", k: 4, d_lo: 2, d_hi: 8, p_times: 0.35 };
+pub const AIME: BenchSpec = BenchSpec { name: "aime-s", k: 5, d_lo: 4, d_hi: 9, p_times: 0.5 };
+
+pub const ALL_BENCHMARKS: [BenchSpec; 3] = [SATMATH, MATH500, AIME];
+
+pub fn bench_by_name(name: &str) -> Option<BenchSpec> {
+    ALL_BENCHMARKS.iter().copied().find(|b| b.name == name)
+}
+
+/// Generate one problem from a benchmark spec.
+pub fn gen_problem(rng: &mut Rng, spec: &BenchSpec) -> Problem {
+    let mut ops = Vec::with_capacity(spec.k);
+    for _ in 0..spec.k {
+        let r = rng.f64();
+        let op = if r < spec.p_times {
+            tk::TIMES
+        } else if r < (1.0 + spec.p_times) / 2.0 {
+            tk::PLUS
+        } else {
+            tk::MINUS
+        };
+        ops.push(OpStep { op, d: rng.range(spec.d_lo, spec.d_hi) });
+    }
+    Problem { v0: rng.range(0, tk::MOD - 1), ops }
+}
+
+/// A deterministic problem set for an experiment cell (seeded).
+pub fn problem_set(spec: &BenchSpec, n: usize, seed: u64) -> Vec<Problem> {
+    let mut rng = Rng::new(seed ^ 0xBE9C4A11);
+    (0..n).map(|_| gen_problem(&mut rng, spec)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_answer_chain() {
+        let p = Problem {
+            v0: 10,
+            ops: vec![
+                OpStep { op: tk::PLUS, d: 5 },
+                OpStep { op: tk::TIMES, d: 3 },
+                OpStep { op: tk::MINUS, d: 9 },
+            ],
+        };
+        assert_eq!(p.answer(), ((10 + 5) * 3 - 9) % 100);
+    }
+
+    #[test]
+    fn prompt_encoding() {
+        let p = Problem { v0: 61, ops: vec![OpStep { op: tk::MINUS, d: 5 }] };
+        assert_eq!(tk::detok(&p.prompt_tokens()), "<bos>61-5;>");
+    }
+
+    #[test]
+    fn gold_solution_matches_python_fixture() {
+        // fixture from python: Problem(61, [(-,5),(*,6),(+,4)])
+        let p = Problem {
+            v0: 61,
+            ops: vec![
+                OpStep { op: tk::MINUS, d: 5 },
+                OpStep { op: tk::TIMES, d: 6 },
+                OpStep { op: tk::PLUS, d: 4 },
+            ],
+        };
+        let s = tk::detok(&p.gold_solution());
+        assert_eq!(
+            s,
+            "61-5:60 59 58 57 56 =56;56*6:56 12 68 24 80 36 =36;36+4:37 38 39 40 =40;A40<eos>"
+        );
+    }
+
+    #[test]
+    fn gold_solution_answer_extractable() {
+        let mut rng = Rng::new(4);
+        for spec in &ALL_BENCHMARKS {
+            for _ in 0..50 {
+                let p = gen_problem(&mut rng, spec);
+                assert_eq!(tk::extract_answer(&p.gold_solution()), Some(p.answer()));
+            }
+        }
+    }
+
+    #[test]
+    fn benchmark_specs_are_graded() {
+        assert!(SATMATH.k < MATH500.k && MATH500.k < AIME.k);
+        assert!(SATMATH.p_times < AIME.p_times);
+    }
+
+    #[test]
+    fn problem_sets_deterministic() {
+        let a = problem_set(&SATMATH, 10, 42);
+        let b = problem_set(&SATMATH, 10, 42);
+        assert_eq!(a, b);
+        let c = problem_set(&SATMATH, 10, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prompts_fit_prompt_pad() {
+        let mut rng = Rng::new(9);
+        for spec in &ALL_BENCHMARKS {
+            for _ in 0..100 {
+                let p = gen_problem(&mut rng, spec);
+                assert!(p.prompt_tokens().len() <= 24);
+            }
+        }
+    }
+}

@@ -1,0 +1,415 @@
+//! Incremental token-level trace validator.
+//!
+//! Mirrors `grammar.ValidatorState` in Python exactly: feeds one token at a
+//! time, `ok` flips to false at the first arithmetically or syntactically
+//! wrong position — including a step that applies the wrong operation for
+//! its index in the problem — and stays false (monotone "correct so far"
+//! semantics, the quantity the PRM estimates). Used for answer checking,
+//! oracle analyses, and the correlation studies' ground-truth labels.
+
+use crate::tokenizer as tk;
+use crate::workload::OpStep;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Phase {
+    Head,
+    Scratch,
+    Result,
+    Answer,
+}
+
+#[derive(Debug, Clone)]
+pub struct Validator {
+    pub v: i64,
+    pub ok: bool,
+    pub done: bool,
+    pub answer: Option<i64>,
+    /// Expected (op, d) per step index; None disables problem checking
+    /// (pure arithmetic-consistency mode).
+    ops: Option<Vec<OpStep>>,
+    step_idx: usize,
+    phase: Phase,
+    buf: Vec<i32>,
+    step_op: i32,
+    step_d: i64,
+    items_seen: usize,
+    expect: Vec<i64>,
+    after_redundant: bool,
+}
+
+impl Validator {
+    /// Validate against a problem: step k must apply the problem's k-th op.
+    pub fn for_problem(p: &crate::workload::Problem) -> Self {
+        let mut v = Validator::new(p.v0);
+        v.ops = Some(p.ops.clone());
+        v
+    }
+
+    /// Arithmetic-consistency-only mode (no expected op sequence).
+    pub fn new(v0: i64) -> Self {
+        Validator {
+            v: v0,
+            ok: true,
+            done: false,
+            answer: None,
+            ops: None,
+            step_idx: 0,
+            phase: Phase::Head,
+            buf: Vec::new(),
+            step_op: 0,
+            step_d: 0,
+            items_seen: 0,
+            expect: Vec::new(),
+            after_redundant: false,
+        }
+    }
+
+    fn fail(&mut self) {
+        self.ok = false;
+    }
+
+    /// Consume one token; returns the current ok flag.
+    pub fn feed(&mut self, tok: i32) -> bool {
+        if self.done || !self.ok {
+            if !self.done && tok == tk::EOS {
+                self.done = true;
+            }
+            return self.ok;
+        }
+        match self.phase {
+            Phase::Head => self.feed_head(tok),
+            Phase::Scratch => self.feed_scratch(tok),
+            Phase::Result => self.feed_result(tok),
+            Phase::Answer => self.feed_answer(tok),
+        }
+        self.ok
+    }
+
+    /// Feed a whole slice, returning per-position labels.
+    pub fn labels(&mut self, toks: &[i32]) -> Vec<bool> {
+        toks.iter().map(|&t| self.feed(t)).collect()
+    }
+
+    fn feed_head(&mut self, tok: i32) {
+        if tok == tk::ANS && self.buf.is_empty() {
+            if let Some(ops) = &self.ops {
+                if self.step_idx != ops.len() {
+                    self.fail(); // answered before finishing all steps
+                }
+            }
+            self.phase = Phase::Answer;
+            self.buf.clear();
+            return;
+        }
+        self.buf.push(tok);
+        match self.buf.len() {
+            1 | 2 => {
+                if !tk::is_digit(tok) {
+                    self.fail();
+                } else if self.buf.len() == 2 {
+                    let head_v = tk::parse_two_digits(self.buf[0], self.buf[1]).unwrap();
+                    if head_v != self.v {
+                        self.fail();
+                    }
+                }
+            }
+            3 => {
+                if !tk::is_op(tok) {
+                    self.fail();
+                } else {
+                    if let Some(ops) = &self.ops {
+                        if self.step_idx >= ops.len() || tok != ops[self.step_idx].op {
+                            self.fail(); // wrong operation for this step
+                        }
+                    }
+                    self.step_op = tok;
+                }
+            }
+            4 => {
+                if !tk::is_digit(tok) {
+                    self.fail();
+                } else {
+                    self.step_d = (tok - tk::DIG0) as i64;
+                    if self.step_d < 1 {
+                        self.fail();
+                    } else if let Some(ops) = &self.ops {
+                        if self.step_idx < ops.len() && self.step_d != ops[self.step_idx].d {
+                            self.fail(); // wrong operand for this step
+                        }
+                    }
+                }
+            }
+            5 => {
+                if tok != tk::COLON {
+                    self.fail();
+                } else {
+                    self.expect = tk::scratch_items(self.v, self.step_op, self.step_d);
+                    self.items_seen = 0;
+                    self.buf.clear();
+                    self.after_redundant = false;
+                    self.phase = Phase::Scratch;
+                }
+            }
+            _ => self.fail(),
+        }
+    }
+
+    fn feed_scratch(&mut self, tok: i32) {
+        if tok == tk::FILL {
+            if !self.buf.is_empty() {
+                self.fail();
+            } else if self.items_seen >= 2 {
+                self.after_redundant = true;
+            }
+            return;
+        }
+        if tok == tk::EQ {
+            if !self.buf.is_empty()
+                || (self.items_seen < self.expect.len() && !self.after_redundant)
+            {
+                self.fail();
+            } else {
+                self.buf.clear();
+                self.phase = Phase::Result;
+            }
+            return;
+        }
+        if tk::is_digit(tok) {
+            self.buf.push(tok);
+            if self.buf.len() > 2 {
+                self.fail();
+            }
+            return;
+        }
+        if tok == tk::SPACE {
+            if self.buf.len() != 2 {
+                self.fail();
+                return;
+            }
+            let val = tk::parse_two_digits(self.buf[0], self.buf[1]).unwrap();
+            self.buf.clear();
+            if self.after_redundant {
+                let tail_start = self.expect.len().saturating_sub(2);
+                if !self.expect[tail_start..].contains(&val) {
+                    self.fail();
+                }
+            } else if self.items_seen >= self.expect.len() || val != self.expect[self.items_seen]
+            {
+                self.fail();
+            } else {
+                self.items_seen += 1;
+            }
+            return;
+        }
+        self.fail();
+    }
+
+    fn feed_result(&mut self, tok: i32) {
+        self.buf.push(tok);
+        match self.buf.len() {
+            1 | 2 => {
+                if !tk::is_digit(tok) {
+                    self.fail();
+                }
+            }
+            3 => {
+                if tok != tk::SEMI {
+                    self.fail();
+                } else {
+                    let val = tk::parse_two_digits(self.buf[0], self.buf[1]).unwrap();
+                    let want = tk::apply_op(self.v, self.step_op, self.step_d);
+                    if val != want {
+                        self.fail();
+                    } else {
+                        self.v = want;
+                        self.step_idx += 1;
+                        self.buf.clear();
+                        self.phase = Phase::Head;
+                    }
+                }
+            }
+            _ => self.fail(),
+        }
+    }
+
+    fn feed_answer(&mut self, tok: i32) {
+        self.buf.push(tok);
+        match self.buf.len() {
+            1 | 2 => {
+                if !tk::is_digit(tok) {
+                    self.fail();
+                }
+            }
+            3 => {
+                if tok != tk::EOS {
+                    self.fail();
+                } else {
+                    let val = tk::parse_two_digits(self.buf[0], self.buf[1]).unwrap();
+                    self.answer = Some(val);
+                    if val != self.v {
+                        self.fail();
+                    }
+                    self.done = true;
+                }
+            }
+            _ => self.fail(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_problem, ALL_BENCHMARKS};
+
+    #[test]
+    fn gold_traces_validate() {
+        let mut rng = Rng::new(0);
+        for spec in &ALL_BENCHMARKS {
+            for _ in 0..100 {
+                let p = gen_problem(&mut rng, spec);
+                let mut v = Validator::for_problem(&p);
+                let labels = v.labels(&p.gold_solution());
+                assert!(labels.iter().all(|&l| l), "{}", tk::detok(&p.gold_solution()));
+                assert!(v.done);
+                assert_eq!(v.answer, Some(p.answer()));
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_op_step_detected() {
+        // problem says *6 but the trace does +6 (internally consistent):
+        // arithmetic-only mode accepts it; problem mode must reject at the
+        // op token — this is the LM's dominant real failure mode.
+        let p = crate::workload::Problem {
+            v0: 12,
+            ops: vec![crate::workload::OpStep { op: tk::TIMES, d: 6 }],
+        };
+        let wrong = crate::workload::Problem {
+            v0: 12,
+            ops: vec![crate::workload::OpStep { op: tk::PLUS, d: 6 }],
+        };
+        let trace = wrong.gold_solution();
+        assert!(Validator::new(p.v0).labels(&trace).iter().all(|&l| l));
+        let labels = Validator::for_problem(&p).labels(&trace);
+        assert!(!labels.iter().all(|&l| l));
+        // failure exactly at the op token (index 2: v v op)
+        assert!(labels[0] && labels[1] && !labels[2]);
+    }
+
+    #[test]
+    fn early_answer_detected() {
+        // answering after 1 of 2 steps with a consistent running value
+        let p = crate::workload::Problem {
+            v0: 10,
+            ops: vec![
+                crate::workload::OpStep { op: tk::PLUS, d: 2 },
+                crate::workload::OpStep { op: tk::PLUS, d: 3 },
+            ],
+        };
+        let one = crate::workload::Problem { v0: 10, ops: vec![p.ops[0]] };
+        let trace = one.gold_solution();
+        let mut v = Validator::for_problem(&p);
+        let labels = v.labels(&trace);
+        assert!(!labels.iter().all(|&l| l));
+    }
+
+    #[test]
+    fn wrong_head_value_fails() {
+        let mut v = Validator::new(12);
+        for t in tk::two_digits(99) {
+            v.feed(t);
+        }
+        assert!(!v.ok);
+    }
+
+    #[test]
+    fn wrong_scratch_item_fails_at_that_item() {
+        // 12+2:13 14 =14;  -> corrupt first item to 19
+        let mut toks = Vec::new();
+        toks.extend(tk::two_digits(12));
+        toks.extend([tk::PLUS, tk::DIG0 + 2, tk::COLON]);
+        toks.extend(tk::two_digits(19)); // wrong (should be 13)
+        toks.push(tk::SPACE);
+        let mut v = Validator::new(12);
+        let labels = v.labels(&toks);
+        assert!(labels[..labels.len() - 1].iter().all(|&l| l));
+        assert!(!labels[labels.len() - 1]);
+    }
+
+    #[test]
+    fn wrong_result_fails() {
+        let mut toks = Vec::new();
+        toks.extend(tk::two_digits(12));
+        toks.extend([tk::PLUS, tk::DIG0 + 2, tk::COLON]);
+        for item in [13, 14] {
+            toks.extend(tk::two_digits(item));
+            toks.push(tk::SPACE);
+        }
+        toks.push(tk::EQ);
+        toks.extend(tk::two_digits(15)); // wrong: should be 14
+        toks.push(tk::SEMI);
+        let mut v = Validator::new(12);
+        let labels = v.labels(&toks);
+        assert!(!labels[labels.len() - 1]);
+    }
+
+    #[test]
+    fn wrong_answer_fails_and_records() {
+        let p = crate::workload::Problem {
+            v0: 12,
+            ops: vec![crate::workload::OpStep { op: tk::PLUS, d: 2 }],
+        };
+        let mut sol = p.gold_solution();
+        let n = sol.len();
+        sol[n - 2] = tk::DIG0 + (((sol[n - 2] - tk::DIG0) + 1) % 10);
+        let mut v = Validator::new(p.v0);
+        v.labels(&sol);
+        assert!(!v.ok);
+        assert!(v.done);
+        assert_ne!(v.answer, Some(p.answer()));
+    }
+
+    #[test]
+    fn monotone_once_failed() {
+        let mut v = Validator::new(0);
+        v.feed(tk::EOS); // malformed start? EOS in head phase -> fail path
+        let ok_after = v.feed(tk::DIG0);
+        assert!(!ok_after || v.done);
+        // explicit: corrupt then feed valid tokens, must stay failed
+        let mut v2 = Validator::new(12);
+        for t in tk::two_digits(99) {
+            v2.feed(t);
+        }
+        assert!(!v2.ok);
+        for t in tk::two_digits(12) {
+            assert!(!v2.feed(t));
+        }
+    }
+
+    #[test]
+    fn verbose_filler_and_redundancy_accepted() {
+        // 12+3:~~13 14 15 ~14 15 =15;
+        let mut toks = Vec::new();
+        toks.extend(tk::two_digits(12));
+        toks.extend([tk::PLUS, tk::DIG0 + 3, tk::COLON, tk::FILL, tk::FILL]);
+        for item in [13, 14, 15] {
+            toks.extend(tk::two_digits(item));
+            toks.push(tk::SPACE);
+        }
+        toks.push(tk::FILL);
+        for item in [14, 15] {
+            toks.extend(tk::two_digits(item));
+            toks.push(tk::SPACE);
+        }
+        toks.push(tk::EQ);
+        toks.extend(tk::two_digits(15));
+        toks.push(tk::SEMI);
+        let mut v = Validator::new(12);
+        let labels = v.labels(&toks);
+        assert!(labels.iter().all(|&l| l), "{}", tk::detok(&toks));
+        assert_eq!(v.v, 15);
+    }
+}
