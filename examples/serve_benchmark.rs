@@ -1,9 +1,18 @@
 //! End-to-end serving driver (the mandated e2e validation): starts the
-//! HTTP server on a real socket, loads the trained LM + PRM through the
-//! PJRT runtime, fires a batch of concurrent /solve requests from client
-//! threads, and reports accuracy, latency percentiles and throughput.
+//! HTTP server on a real socket in front of an engine shard pool, loads
+//! the trained LM + PRM through the PJRT runtime (one engine per shard),
+//! fires concurrent /solve requests from client threads, and reports
+//! accuracy, latency percentiles, throughput and per-shard utilization.
 //!
-//!     make artifacts && cargo run --release --example serve_benchmark
+//! By default it runs the same workload twice — `--shards-list 1,4` —
+//! and reports the scaling ratio, which is the acceptance gate for the
+//! shard-pool refactor (>2x at 4 shards on >=4 cores).
+//!
+//!     make artifacts && cargo run --release --example serve_benchmark -- \
+//!         --requests 32 --clients 8 --shards-list 1,4 --cache 0
+//!
+//! `--cache N` enables the pool's LRU solve cache (0, the default here,
+//! keeps it off so the ratio measures engine throughput, not cache hits).
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end serving.
 
@@ -14,15 +23,16 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use erprm::config::SearchConfig;
-use erprm::server::{api, http, metrics::Metrics, router::EngineHandle};
+use erprm::server::{http, metrics::Metrics, route, router::EnginePool};
 use erprm::tokenizer as tk;
+use erprm::util::cli::Args;
 use erprm::util::json::Json;
 use erprm::util::rng::Rng;
 use erprm::util::stats;
 use erprm::util::threadpool::ThreadPool;
 use erprm::workload::{gen_problem, SATMATH};
 
-fn post_solve(addr: std::net::SocketAddr, body: &str) -> Result<Json, String> {
+fn post_solve(addr: std::net::SocketAddr, body: &str) -> Result<(u16, Json), String> {
     let mut s = TcpStream::connect(addr).map_err(|e| e.to_string())?;
     let req = format!(
         "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
@@ -32,34 +42,117 @@ fn post_solve(addr: std::net::SocketAddr, body: &str) -> Result<Json, String> {
     s.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
     let mut out = String::new();
     s.read_to_string(&mut out).map_err(|e| e.to_string())?;
+    let status: u16 = out
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.get(..3))
+        .and_then(|c| c.parse().ok())
+        .ok_or("bad status line")?;
     let body = out.split("\r\n\r\n").nth(1).ok_or("no body")?;
-    Json::parse(body).map_err(|e| e.to_string())
+    let json = Json::parse(body).map_err(|e| e.to_string())?;
+    Ok((status, json))
 }
 
-fn main() -> Result<(), Box<dyn std::error::Error>> {
-    erprm::util::logging::init_from_env();
-    let n_requests: usize = std::env::var("ERPRM_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(16);
-    let clients = 4;
+struct RunReport {
+    shards: usize,
+    throughput_rps: f64,
+    accuracy_pct: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    errors: usize,
+    shard_solves: Vec<u64>,
+}
 
-    // ---- server side
+/// Run the full workload against a fresh pool with `shards` shards and
+/// return the measured report.
+fn run_once(
+    shards: usize,
+    capacity: usize,
+    cache: usize,
+    clients: usize,
+    bodies: &[String],
+) -> Result<RunReport, Box<dyn std::error::Error>> {
     let defaults = SearchConfig { n_beams: 8, tau: 8, ..SearchConfig::default() };
-    let handle = EngineHandle::spawn("artifacts".into(), defaults.clone(), 64)?;
+    let pool = EnginePool::spawn("artifacts".into(), shards, capacity, cache)?;
     let metrics = Arc::new(Metrics::default());
-    let pool = ThreadPool::new(clients);
+    let http_pool = ThreadPool::new(clients.max(2));
     let stop = Arc::new(AtomicBool::new(false));
-    let h2 = handle.clone();
+    let p2 = pool.clone();
     let m2 = Arc::clone(&metrics);
     let d2 = defaults.clone();
     let addr = http::serve(
         "127.0.0.1:0",
-        &pool,
+        &http_pool,
         1 << 20,
         Arc::clone(&stop),
-        Arc::new(move |req| route(&h2, &m2, &d2, req)),
+        Arc::new(move |req| route(&p2, &m2, &d2, req)),
     )?;
-    println!("server up on http://{addr}; firing {n_requests} requests from {clients} client threads");
 
-    // ---- client side: concurrent requests
+    let client_pool = ThreadPool::new(clients);
+    let t0 = Instant::now();
+    let results = erprm::util::threadpool::parallel_map(
+        &client_pool,
+        bodies.to_vec(),
+        move |body| {
+            let t = Instant::now();
+            let resp = post_solve(addr, &body);
+            (t.elapsed().as_secs_f64() * 1000.0, resp)
+        },
+    );
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut latencies = Vec::new();
+    let mut correct = 0usize;
+    let mut errors = 0usize;
+    for (ms, resp) in &results {
+        latencies.push(*ms);
+        match resp {
+            Ok((200, j)) => {
+                correct += (j.get("correct").and_then(Json::as_bool) == Some(true)) as usize;
+            }
+            Ok((status, _)) => {
+                errors += 1;
+                eprintln!("request rejected: HTTP {status}");
+            }
+            Err(e) => {
+                errors += 1;
+                eprintln!("request failed: {e}");
+            }
+        }
+    }
+    let report = RunReport {
+        shards: pool.n_shards(),
+        throughput_rps: bodies.len() as f64 / wall,
+        accuracy_pct: 100.0 * correct as f64 / bodies.len() as f64,
+        p50_ms: stats::quantile(&latencies, 0.5),
+        p95_ms: stats::quantile(&latencies, 0.95),
+        errors,
+        shard_solves: pool.shard_solves(),
+    };
+    println!(
+        "\nserver metrics ({shards} shard run):\n{}{}",
+        metrics.render(),
+        pool.render_metrics()
+    );
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    pool.shutdown();
+    Ok(report)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    erprm::util::logging::init_from_env();
+    let args = Args::from_env()?;
+    let n_requests = args.get_usize("requests", 16)?;
+    let clients = args.get_usize_min("clients", 8, 1)?;
+    let capacity = args.get_usize_min("capacity", 64, 1)?;
+    let cache = args.get_usize("cache", 0)?;
+    let shards_list = args.get_usize_list("shards-list", &[1, 4])?;
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts missing; run `make artifacts` first (skipping benchmark)");
+        return Ok(());
+    }
+
+    // One shared workload so every shard count sees identical requests.
     let mut rng = Rng::new(314);
     let bodies: Vec<String> = (0..n_requests)
         .map(|_| {
@@ -87,83 +180,34 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         })
         .collect();
 
-    let client_pool = ThreadPool::new(clients);
-    let t0 = Instant::now();
-    let results = erprm::util::threadpool::parallel_map(&client_pool, bodies, move |body| {
-        let t = Instant::now();
-        let resp = post_solve(addr, &body);
-        (t.elapsed().as_secs_f64() * 1000.0, resp)
-    });
-    let wall = t0.elapsed().as_secs_f64();
-
-    // ---- report
-    let mut latencies = Vec::new();
-    let mut correct = 0usize;
-    let mut flops_total = 0.0;
-    let mut errors = 0usize;
-    for (ms, resp) in &results {
-        latencies.push(*ms);
-        match resp {
-            Ok(j) => {
-                correct += (j.get("correct").and_then(Json::as_bool) == Some(true)) as usize;
-                flops_total += j.get("flops").and_then(Json::as_f64).unwrap_or(0.0);
-            }
-            Err(e) => {
-                errors += 1;
-                eprintln!("request failed: {e}");
-            }
-        }
-    }
-    println!("\n== end-to-end serving results ==");
-    println!("requests:   {n_requests} ({errors} errors)");
-    println!("accuracy:   {:.1}%", 100.0 * correct as f64 / n_requests as f64);
-    println!("throughput: {:.2} problems/s", n_requests as f64 / wall);
     println!(
-        "latency ms: p50 {:.0}  p95 {:.0}  mean {:.0}",
-        stats::quantile(&latencies, 0.5),
-        stats::quantile(&latencies, 0.95),
-        stats::mean(&latencies)
+        "firing {n_requests} requests from {clients} client threads at shard counts {shards_list:?}"
     );
-    println!("flops/req:  {:.3e}", flops_total / n_requests as f64);
-    println!("\nserver metrics:\n{}", metrics.render());
-    handle.shutdown();
-    stop.store(true, std::sync::atomic::Ordering::Relaxed);
-    Ok(())
-}
-
-fn route(
-    handle: &EngineHandle,
-    metrics: &Metrics,
-    defaults: &SearchConfig,
-    req: http::Request,
-) -> http::Response {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => http::Response::json(200, "{\"ok\":true}".into()),
-        ("GET", "/metrics") => http::Response::text(200, &metrics.render()),
-        ("POST", "/solve") => {
-            let t0 = Instant::now();
-            let parsed = match api::parse_solve(&req.body, defaults) {
-                Ok(p) => p,
-                Err(e) => {
-                    metrics.record_error();
-                    return http::Response::json(400, format!("{{\"error\":\"{e}\"}}"));
-                }
-            };
-            match handle.solve(parsed.clone(), defaults.clone()) {
-                Ok(out) => {
-                    metrics.record_ok(
-                        t0.elapsed().as_secs_f64() * 1000.0,
-                        out.ledger.total_flops(),
-                        out.correct,
-                    );
-                    http::Response::json(200, api::render_solve(&parsed, &out))
-                }
-                Err(e) => {
-                    metrics.record_error();
-                    http::Response::json(500, format!("{{\"error\":\"{e}\"}}"))
-                }
-            }
-        }
-        _ => http::Response::json(404, "{\"error\":\"not found\"}".into()),
+    let mut reports = Vec::new();
+    for &shards in &shards_list {
+        reports.push(run_once(shards, capacity, cache, clients, &bodies)?);
     }
+
+    println!("\n== end-to-end serving results ==");
+    println!(
+        "{:<8} {:>12} {:>10} {:>9} {:>9} {:>7}  per-shard solves",
+        "shards", "throughput/s", "accuracy%", "p50 ms", "p95 ms", "errors"
+    );
+    for r in &reports {
+        println!(
+            "{:<8} {:>12.2} {:>10.1} {:>9.0} {:>9.0} {:>7}  {:?}",
+            r.shards, r.throughput_rps, r.accuracy_pct, r.p50_ms, r.p95_ms, r.errors,
+            r.shard_solves
+        );
+    }
+    if reports.len() >= 2 {
+        let base = &reports[0];
+        let best = &reports[reports.len() - 1];
+        let ratio = best.throughput_rps / base.throughput_rps.max(1e-9);
+        println!(
+            "\nscaling: {} shard(s) -> {} shard(s) = {ratio:.2}x request throughput",
+            base.shards, best.shards
+        );
+    }
+    Ok(())
 }

@@ -169,11 +169,44 @@ pub struct ServerConfig {
     pub addr: String,
     pub workers: usize,
     pub max_body_bytes: usize,
+    /// Engine shards in the pool; 0 means auto (available cores - 1).
+    pub shards: usize,
+    /// Queue slots per shard; the pool 503s when every queue is full.
+    pub capacity: usize,
+    /// LRU solve-cache entries; 0 disables the cache.
+    pub cache_entries: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:8377".into(), workers: 2, max_body_bytes: 1 << 20 }
+        ServerConfig {
+            addr: "127.0.0.1:8377".into(),
+            workers: 2,
+            max_body_bytes: 1 << 20,
+            shards: 0,
+            capacity: 64,
+            cache_entries: 128,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Auto shard count: one engine thread per core, minus one core left
+    /// for the HTTP front end; never below 1.
+    pub fn default_shards() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1))
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// The shard count to actually spawn (resolves the 0 = auto case).
+    pub fn effective_shards(&self) -> usize {
+        if self.shards == 0 {
+            ServerConfig::default_shards()
+        } else {
+            self.shards
+        }
     }
 }
 
@@ -241,6 +274,15 @@ impl Config {
             if let Some(w) = s.get("workers").and_then(Json::as_usize) {
                 cfg.server.workers = w;
             }
+            if let Some(n) = s.get("shards").and_then(Json::as_usize) {
+                cfg.server.shards = n;
+            }
+            if let Some(n) = s.get("capacity").and_then(Json::as_usize) {
+                cfg.server.capacity = n;
+            }
+            if let Some(n) = s.get("cache_entries").and_then(Json::as_usize) {
+                cfg.server.cache_entries = n;
+            }
         }
         cfg.search.validate()?;
         Ok(cfg)
@@ -290,6 +332,23 @@ mod tests {
         let mut s = SearchConfig::default();
         s.tau = 0;
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn server_pool_knobs_parse_and_default() {
+        let d = ServerConfig::default();
+        assert_eq!(d.shards, 0, "default is auto");
+        assert!(d.effective_shards() >= 1);
+        assert!(ServerConfig::default_shards() >= 1);
+        let j = Json::parse(
+            r#"{"server": {"shards": 4, "capacity": 8, "cache_entries": 0}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.server.shards, 4);
+        assert_eq!(c.server.effective_shards(), 4);
+        assert_eq!(c.server.capacity, 8);
+        assert_eq!(c.server.cache_entries, 0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! Modeling"* (EMNLP 2025 Findings).
 //!
 //! Architecture (see `DESIGN.md`):
-//! * **L3 (this crate)** — request router, dynamic two-tier batcher,
+//! * **L3 (this crate)** — engine shard pool + request router, dynamic two-tier batcher,
 //!   KV-cache slot manager, prefill/decode scheduler, vanilla PRM beam
 //!   search (paper Alg. 2) and the early-rejection search (paper Alg. 3),
 //!   analytic FLOPs ledger, HTTP serving front end. Python is never on the

@@ -3,7 +3,7 @@
 //! Examples:
 //!   erprm info  --artifacts artifacts
 //!   erprm solve --artifacts artifacts --v0 61 --ops -5,*6,+4 --mode er --n 16 --tau 8
-//!   erprm serve --artifacts artifacts --addr 127.0.0.1:8377
+//!   erprm serve --artifacts artifacts --addr 127.0.0.1:8377 --shards 4 --cache 128
 //!   erprm sweep --artifacts artifacts --bench satmath-s --n-list 4,8 --problems 10
 //!   erprm theory
 //!
@@ -13,11 +13,11 @@ use std::path::PathBuf;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
-use erprm::config::{SearchConfig, SearchMode};
+use erprm::config::{SearchConfig, SearchMode, ServerConfig};
 use erprm::coordinator::{solve_early_rejection, solve_vanilla};
 use erprm::harness::{self, Cell};
 use erprm::runtime::Engine;
-use erprm::server::{api, http, metrics::Metrics, router::EngineHandle};
+use erprm::server::{http, metrics::Metrics, route, router::EnginePool};
 use erprm::sim;
 use erprm::tokenizer as tk;
 use erprm::util::benchkit::{fmt_flops, Table};
@@ -82,6 +82,13 @@ fn parse_ops(spec: &str) -> Result<Vec<OpStep>> {
     spec.split(',')
         .map(|s| {
             let s = s.trim();
+            // Guard before split_at: an empty segment ("-5,,+4" or a
+            // trailing comma) must be a parse error, not a panic.
+            if s.len() < 2 || !s.is_char_boundary(1) {
+                return Err(Error::parse(format!(
+                    "bad op segment '{s}' in '{spec}' (expected e.g. '-5,*6,+4')"
+                )));
+            }
             let (op, d) = s.split_at(1);
             let op = match op {
                 "+" => tk::PLUS,
@@ -135,68 +142,43 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let addr = args.get_or("addr", "127.0.0.1:8377").to_string();
-    let workers = args.get_usize("workers", 2)?;
-    let capacity = args.get_usize("capacity", 64)?;
+    let scfg = ServerConfig::default();
+    let addr = args.get_or("addr", &scfg.addr).to_string();
+    let capacity = args.get_usize_min("capacity", scfg.capacity, 1)?;
+    // --shards 0 (the default) means auto: available cores minus one.
+    let shards = match args.get_usize("shards", scfg.shards)? {
+        0 => ServerConfig::default_shards(),
+        n => n,
+    };
+    // HTTP workers gate request concurrency, so they must outnumber the
+    // shards or the pool can never be fully utilized.
+    let workers = args.get_usize_min("workers", shards + 2, 1)?;
+    // --cache N sets the LRU solve-cache size; --cache 0 disables it.
+    let cache = args.get_usize("cache", scfg.cache_entries)?;
     let defaults = SearchConfig::default();
-    let handle = EngineHandle::spawn(dir, defaults.clone(), capacity)?;
+    let pool = EnginePool::spawn(dir, shards, capacity, cache)?;
     let metrics = Arc::new(Metrics::default());
-    let pool = ThreadPool::new(workers);
+    let tpool = ThreadPool::new(workers);
     let stop = Arc::new(AtomicBool::new(false));
 
-    let h2 = handle.clone();
+    let p2 = pool.clone();
     let m2 = Arc::clone(&metrics);
     let d2 = defaults.clone();
     let local = http::serve(
         &addr,
-        &pool,
-        1 << 20,
+        &tpool,
+        scfg.max_body_bytes,
         Arc::clone(&stop),
-        Arc::new(move |req| route(&h2, &m2, &d2, req)),
+        Arc::new(move |req| route(&p2, &m2, &d2, req)),
     )?;
-    println!("erprm serving on http://{local}  (POST /solve, GET /metrics, GET /healthz)");
+    println!(
+        "erprm serving on http://{local}  ({} engine shards, {capacity} queue slots/shard, \
+         cache {cache})  (POST /solve, GET /metrics, GET /healthz)",
+        pool.n_shards()
+    );
     // run until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
-}
-
-/// Route one HTTP request (shared with `examples/serve_benchmark.rs`).
-pub fn route(
-    handle: &EngineHandle,
-    metrics: &Metrics,
-    defaults: &SearchConfig,
-    req: http::Request,
-) -> http::Response {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => http::Response::json(200, "{\"ok\":true}".into()),
-        ("GET", "/metrics") => http::Response::text(200, &metrics.render()),
-        ("POST", "/solve") => {
-            let t0 = std::time::Instant::now();
-            let parsed = match api::parse_solve(&req.body, defaults) {
-                Ok(p) => p,
-                Err(e) => {
-                    metrics.record_error();
-                    return http::Response::json(400, format!("{{\"error\":\"{e}\"}}"));
-                }
-            };
-            match handle.solve(parsed.clone(), defaults.clone()) {
-                Ok(out) => {
-                    metrics.record_ok(
-                        t0.elapsed().as_secs_f64() * 1000.0,
-                        out.ledger.total_flops(),
-                        out.correct,
-                    );
-                    http::Response::json(200, api::render_solve(&parsed, &out))
-                }
-                Err(e) => {
-                    metrics.record_error();
-                    let code = if e.to_string().contains("queue full") { 503 } else { 500 };
-                    http::Response::json(code, format!("{{\"error\":\"{e}\"}}"))
-                }
-            }
-        }
-        _ => http::Response::json(404, "{\"error\":\"not found\"}".into()),
     }
 }
 
@@ -294,4 +276,39 @@ fn cmd_theory(args: &Args) -> Result<()> {
         sim::min_tau_for_rho(0.8, 100)
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ops_happy_path() {
+        let ops = parse_ops("-5,*6,+4").unwrap();
+        assert_eq!(ops.len(), 3);
+        assert_eq!(ops[0].op, tk::MINUS);
+        assert_eq!(ops[0].d, 5);
+        assert_eq!(ops[1].op, tk::TIMES);
+        assert_eq!(ops[2].op, tk::PLUS);
+        assert_eq!(ops[2].d, 4);
+    }
+
+    #[test]
+    fn parse_ops_rejects_empty_segments_without_panicking() {
+        // These used to panic via split_at(1) on an empty segment.
+        assert!(parse_ops("-5,,+4").is_err());
+        assert!(parse_ops("-5,*6,").is_err());
+        assert!(parse_ops("").is_err());
+        assert!(parse_ops(",").is_err());
+        assert!(parse_ops("  ").is_err());
+    }
+
+    #[test]
+    fn parse_ops_rejects_bad_ops_and_operands() {
+        assert!(parse_ops("%5").is_err());
+        assert!(parse_ops("+x").is_err());
+        assert!(parse_ops("5").is_err());
+        // multi-byte first char must be a parse error, not a panic
+        assert!(parse_ops("é5").is_err());
+    }
 }

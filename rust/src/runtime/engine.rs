@@ -45,6 +45,21 @@ pub struct EngineStats {
     pub host_bytes_down: u64,
 }
 
+impl EngineStats {
+    /// Accumulate another engine's counters into this one. Used by the
+    /// shard pool to aggregate stats across per-shard engines for
+    /// `/metrics` (wall-clock fields sum, so they read as total
+    /// engine-seconds across shards, not elapsed time).
+    pub fn merge(&mut self, other: &EngineStats) {
+        self.executions += other.executions;
+        self.compiles += other.compiles;
+        self.compile_wall_s += other.compile_wall_s;
+        self.execute_wall_s += other.execute_wall_s;
+        self.host_bytes_up += other.host_bytes_up;
+        self.host_bytes_down += other.host_bytes_down;
+    }
+}
+
 pub struct Engine {
     client: PjRtClient,
     pub manifest: Manifest,
@@ -451,5 +466,45 @@ impl Engine {
             self.download_f32(&out[1])?,
             self.download_f32(&out[2])?,
         ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let mut a = EngineStats {
+            executions: 2,
+            compiles: 1,
+            compile_wall_s: 0.5,
+            execute_wall_s: 1.0,
+            host_bytes_up: 100,
+            host_bytes_down: 10,
+        };
+        let b = EngineStats {
+            executions: 3,
+            compiles: 0,
+            compile_wall_s: 0.25,
+            execute_wall_s: 2.0,
+            host_bytes_up: 50,
+            host_bytes_down: 5,
+        };
+        a.merge(&b);
+        assert_eq!(a.executions, 5);
+        assert_eq!(a.compiles, 1);
+        assert!((a.compile_wall_s - 0.75).abs() < 1e-12);
+        assert!((a.execute_wall_s - 3.0).abs() < 1e-12);
+        assert_eq!(a.host_bytes_up, 150);
+        assert_eq!(a.host_bytes_down, 15);
+    }
+
+    #[test]
+    fn stats_merge_identity() {
+        let mut a = EngineStats::default();
+        a.merge(&EngineStats::default());
+        assert_eq!(a.executions, 0);
+        assert_eq!(a.host_bytes_up, 0);
     }
 }

@@ -10,13 +10,15 @@
 //!   calls (never copied to host on the hot path).
 //!
 //! The engine is deliberately *not* `Send` (the `xla` crate's client is
-//! `Rc`-based): the serving front end talks to a dedicated engine thread
-//! via channels (`server::router`), which also serializes PJRT access.
+//! `Rc`-based): the serving front end talks to per-shard engine threads
+//! via channels (`server::router::EnginePool`), each shard owning its own
+//! engine and serializing its own PJRT access; `EngineStats::merge`
+//! aggregates counters across shards for `/metrics`.
 
 pub mod artifacts;
 pub mod engine;
 pub mod kv;
 
 pub use artifacts::{Manifest, ModelArch};
-pub use engine::{Engine, ModelKind};
+pub use engine::{Engine, EngineStats, ModelKind};
 pub use kv::KvSet;

@@ -29,6 +29,30 @@ pub struct SolveRequest {
     pub prm: String,
 }
 
+impl SolveRequest {
+    /// Stable key for the pool's solve cache. Covers every input that can
+    /// change a solve's outcome: the problem itself, the search mode and
+    /// its axes (N, tau, M), the sampling seed, and both checkpoints.
+    /// Solves are deterministic given all of these, so equal keys imply
+    /// byte-identical outcomes.
+    pub fn cache_key(&self, cfg: &SearchConfig) -> String {
+        let ops: Vec<String> =
+            self.problem.ops.iter().map(|s| format!("{}.{}", s.op, s.d)).collect();
+        format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            self.problem.v0,
+            ops.join(","),
+            cfg.mode.name(),
+            cfg.n_beams,
+            cfg.tau,
+            cfg.m_expand,
+            cfg.seed,
+            self.lm,
+            self.prm
+        )
+    }
+}
+
 pub fn parse_solve(body: &[u8], defaults: &SearchConfig) -> Result<SolveRequest> {
     let text = std::str::from_utf8(body).map_err(|_| Error::parse("body is not utf-8"))?;
     let j = Json::parse(text)?;
@@ -122,6 +146,22 @@ mod tests {
         assert!(parse_solve(br#"{"v0": 5, "ops": []}"#, &defaults()).is_err());
         assert!(parse_solve(br#"{"v0": 5, "ops": [["%",3]]}"#, &defaults()).is_err());
         assert!(parse_solve(br#"{"v0": 5, "ops": [["+",77]]}"#, &defaults()).is_err());
+    }
+
+    #[test]
+    fn cache_key_covers_problem_and_mode() {
+        let a = parse_solve(br#"{"v0": 5, "ops": [["+",3]]}"#, &defaults()).unwrap();
+        let b = parse_solve(br#"{"v0": 5, "ops": [["+",4]]}"#, &defaults()).unwrap();
+        let c = parse_solve(br#"{"v0": 5, "ops": [["+",3]], "mode": "vanilla"}"#, &defaults()).unwrap();
+        let cfg = defaults();
+        let key = |r: &SolveRequest| {
+            let mut c = cfg.clone();
+            c.mode = r.mode;
+            r.cache_key(&c)
+        };
+        assert_ne!(key(&a), key(&b));
+        assert_ne!(key(&a), key(&c));
+        assert_eq!(key(&a), key(&a));
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! Shared request routing for the serving endpoints.
+//!
+//! One `route` function drives both `erprm serve` and the serving
+//! examples, so the status-code contract is tested in one place:
+//!
+//! * parse/validation failures -> **400** (client mistake, don't retry)
+//! * pool saturation ([`crate::util::error::Error::Saturated`]) -> **503**
+//!   with `Retry-After` (server transient, retry later)
+//! * runtime faults (I/O, XLA) -> **500**
+
+use std::time::Instant;
+
+use crate::config::SearchConfig;
+use crate::server::api;
+use crate::server::http;
+use crate::server::metrics::Metrics;
+use crate::server::router::EnginePool;
+use crate::util::error::Error;
+
+/// Render an error with the status from [`Error::http_status`]; 503s
+/// carry a `Retry-After` hint so well-behaved clients back off.
+pub fn error_response(e: &Error) -> http::Response {
+    let status = e.http_status();
+    let resp = http::Response::json(status, format!("{{\"error\":\"{e}\"}}"));
+    if status == 503 {
+        resp.with_header("Retry-After", "1")
+    } else {
+        resp
+    }
+}
+
+/// Route one HTTP request against the shard pool.
+pub fn route(
+    pool: &EnginePool,
+    metrics: &Metrics,
+    defaults: &SearchConfig,
+    req: http::Request,
+) -> http::Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => http::Response::json(200, "{\"ok\":true}".into()),
+        ("GET", "/metrics") => {
+            let mut text = metrics.render();
+            text.push_str(&pool.render_metrics());
+            http::Response::text(200, &text)
+        }
+        ("POST", "/solve") => {
+            let t0 = Instant::now();
+            let parsed = match api::parse_solve(&req.body, defaults) {
+                Ok(p) => p,
+                Err(e) => {
+                    metrics.record_error(e.http_status());
+                    return error_response(&e);
+                }
+            };
+            match pool.solve(parsed.clone(), defaults.clone()) {
+                Ok(out) => {
+                    metrics.record_ok(
+                        t0.elapsed().as_secs_f64() * 1000.0,
+                        out.ledger.total_flops(),
+                        out.correct,
+                    );
+                    http::Response::json(200, api::render_solve(&parsed, &out))
+                }
+                Err(e) => {
+                    metrics.record_error(e.http_status());
+                    error_response(&e)
+                }
+            }
+        }
+        _ => http::Response::json(404, "{\"error\":\"not found\"}".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturated_renders_503_with_retry_after() {
+        let r = error_response(&Error::saturated("all queues full"));
+        assert_eq!(r.status, 503);
+        assert!(r.headers.iter().any(|(k, _)| *k == "Retry-After"));
+        assert!(String::from_utf8(r.body).unwrap().contains("saturated"));
+    }
+
+    #[test]
+    fn parse_errors_render_400_without_retry_after() {
+        let r = error_response(&Error::parse("bad json"));
+        assert_eq!(r.status, 400);
+        assert!(r.headers.is_empty());
+    }
+}

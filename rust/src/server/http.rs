@@ -25,15 +25,33 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Retry-After` on 503).
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
     pub fn json(status: u16, body: String) -> Response {
-        Response { status, content_type: "application/json", body: body.into_bytes() }
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            headers: Vec::new(),
+        }
     }
 
     pub fn text(status: u16, body: &str) -> Response {
-        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+        Response {
+            status,
+            content_type: "text/plain",
+            body: body.as_bytes().to_vec(),
+            headers: Vec::new(),
+        }
+    }
+
+    /// Attach an extra header (builder style).
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.headers.push((name, value.into()));
+        self
     }
 
     fn status_line(&self) -> &'static str {
@@ -43,6 +61,7 @@ impl Response {
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
             413 => "413 Payload Too Large",
+            429 => "429 Too Many Requests",
             500 => "500 Internal Server Error",
             503 => "503 Service Unavailable",
             _ => "200 OK",
@@ -85,12 +104,16 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request> 
 }
 
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
-    let head = format!(
-        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
         resp.status_line(),
         resp.content_type,
         resp.body.len()
     );
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()?;
@@ -98,7 +121,11 @@ pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
 }
 
 /// Serve until `stop` flips. `handler` must be cheap to clone across the
-/// pool (Arc closure).
+/// pool (Arc closure). Each accepted connection is dispatched onto the
+/// thread pool's workers, so up to `pool.size()` requests are handled
+/// concurrently — the old forwarder-thread adapter ran every handler
+/// inline on one thread, serializing the entire serve path and defeating
+/// both the worker pool and the engine shard pool behind it.
 pub fn serve(
     addr: &str,
     pool: &ThreadPool,
@@ -112,61 +139,40 @@ pub fn serve(
     let stop2 = Arc::clone(&stop);
     let handler = Arc::clone(&handler);
     let max = max_body;
+    let sender = pool.sender();
     std::thread::Builder::new()
         .name("erprm-accept".into())
-        .spawn({
-            let pool_tx = pool_sender(pool);
-            move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((mut stream, _)) => {
-                            let h = Arc::clone(&handler);
-                            pool_tx(Box::new(move || {
-                                let resp = match read_request(&mut stream, max) {
-                                    Ok(req) => h(req),
-                                    Err(e) => Response::json(
-                                        400,
-                                        format!("{{\"error\":\"{e}\"}}"),
-                                    ),
-                                };
-                                if let Err(e) = write_response(&mut stream, &resp) {
-                                    log_warn!("write response: {e}");
+        .spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        let h = Arc::clone(&handler);
+                        let accepted = sender.submit(Box::new(move || {
+                            let resp = match read_request(&mut stream, max) {
+                                Ok(req) => h(req),
+                                Err(e) => {
+                                    Response::json(400, format!("{{\"error\":\"{e}\"}}"))
                                 }
-                            }));
+                            };
+                            if let Err(e) = write_response(&mut stream, &resp) {
+                                log_warn!("write response: {e}");
+                            }
+                        }));
+                        if !accepted {
+                            log_warn!("worker pool shut down; dropping connection");
+                            break;
                         }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(e) => {
-                            log_warn!("accept: {e}");
-                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        log_warn!("accept: {e}");
                     }
                 }
             }
         })?;
     Ok(local)
-}
-
-/// Adapter: submit boxed jobs into the pool from the accept thread.
-fn pool_sender(pool: &ThreadPool) -> impl Fn(Box<dyn FnOnce() + Send>) + Send + 'static {
-    // The pool is owned by the caller and outlives the server; we only need
-    // a submit handle. ThreadPool::execute takes &self, so wrap in a
-    // channel to decouple lifetimes.
-    let (tx, rx) = std::sync::mpsc::channel::<Box<dyn FnOnce() + Send>>();
-    // forwarder thread: pulls jobs and runs them inline (they are already
-    // short-lived connection handlers); keeps ThreadPool lifetime simple.
-    std::thread::Builder::new()
-        .name("erprm-http-fwd".into())
-        .spawn(move || {
-            while let Ok(job) = rx.recv() {
-                job();
-            }
-        })
-        .expect("spawn forwarder");
-    let _ = pool;
-    move |job| {
-        let _ = tx.send(job);
-    }
 }
 
 #[cfg(test)]
@@ -213,8 +219,57 @@ mod tests {
 
     #[test]
     fn oversized_body_rejected() {
-        let req = format!("POST /x HTTP/1.1\r\nContent-Length: 99999\r\n\r\n");
+        let req = "POST /x HTTP/1.1\r\nContent-Length: 99999\r\n\r\n";
         let out = roundtrip(req.as_bytes(), |_| Response::text(200, "nope"));
         assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    }
+
+    #[test]
+    fn connections_are_handled_concurrently() {
+        // 4 requests x 100ms handler on a 4-worker pool must overlap;
+        // the old single-forwarder path took >400ms serially.
+        let pool = ThreadPool::new(4);
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = serve(
+            "127.0.0.1:0",
+            &pool,
+            1024,
+            Arc::clone(&stop),
+            Arc::new(|_| {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                Response::text(200, "ok")
+            }),
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let joins: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+                    let mut out = String::new();
+                    let _ = s.read_to_string(&mut out);
+                    assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        assert!(
+            elapsed < std::time::Duration::from_millis(350),
+            "handlers did not overlap: {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn extra_headers_are_emitted() {
+        let out = roundtrip(b"GET /busy HTTP/1.1\r\n\r\n", |_| {
+            Response::json(503, "{\"error\":\"saturated\"}".into()).with_header("Retry-After", "1")
+        });
+        assert!(out.starts_with("HTTP/1.1 503"), "{out}");
+        assert!(out.contains("Retry-After: 1\r\n"), "{out}");
     }
 }

@@ -1,4 +1,9 @@
 //! Serving metrics: counters + latency/FLOPs histograms, text-exposable.
+//!
+//! Error counters are split by class so backpressure (5xx, retryable) is
+//! distinguishable from client mistakes (4xx) on dashboards; pool-level
+//! gauges (per-shard queue depth, cache hits) are appended by
+//! `EnginePool::render_metrics`.
 
 use std::sync::Mutex;
 
@@ -13,6 +18,8 @@ pub struct Metrics {
 struct Inner {
     requests: u64,
     errors: u64,
+    errors_4xx: u64,
+    errors_5xx: u64,
     correct: u64,
     latency_ms: Histogram,
     flops: Histogram,
@@ -25,6 +32,8 @@ impl Default for Metrics {
             inner: Mutex::new(Inner {
                 requests: 0,
                 errors: 0,
+                errors_4xx: 0,
+                errors_5xx: 0,
                 correct: 0,
                 latency_ms: Histogram::new(0.0, 60_000.0, 600),
                 flops: Histogram::new(0.0, 1e12, 200),
@@ -43,10 +52,17 @@ impl Metrics {
         m.flops.record(flops);
     }
 
-    pub fn record_error(&self) {
+    /// Record a failed request, classified by the HTTP status it rendered
+    /// as (4xx = client mistake, 5xx = server fault/backpressure).
+    pub fn record_error(&self, status: u16) {
         let mut m = self.inner.lock().unwrap();
         m.requests += 1;
         m.errors += 1;
+        if (400..500).contains(&status) {
+            m.errors_4xx += 1;
+        } else {
+            m.errors_5xx += 1;
+        }
     }
 
     /// Render in a Prometheus-flavoured text format.
@@ -57,6 +73,8 @@ impl Metrics {
         format!(
             "erprm_requests_total {}\n\
              erprm_errors_total {}\n\
+             erprm_errors_4xx_total {}\n\
+             erprm_errors_5xx_total {}\n\
              erprm_correct_total {}\n\
              erprm_uptime_seconds {:.1}\n\
              erprm_throughput_rps {:.4}\n\
@@ -66,6 +84,8 @@ impl Metrics {
              erprm_flops_mean {:.3e}\n",
             m.requests,
             m.errors,
+            m.errors_4xx,
+            m.errors_5xx,
             m.correct,
             up,
             qps,
@@ -80,6 +100,12 @@ impl Metrics {
         let m = self.inner.lock().unwrap();
         (m.requests, m.errors, m.correct)
     }
+
+    /// (4xx, 5xx) error counts.
+    pub fn error_split(&self) -> (u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.errors_4xx, m.errors_5xx)
+    }
 }
 
 #[cfg(test)]
@@ -91,12 +117,25 @@ mod tests {
         let m = Metrics::default();
         m.record_ok(12.0, 1e9, true);
         m.record_ok(20.0, 2e9, false);
-        m.record_error();
+        m.record_error(400);
         let (req, err, corr) = m.snapshot();
         assert_eq!((req, err, corr), (3, 1, 1));
         let text = m.render();
         assert!(text.contains("erprm_requests_total 3"));
         assert!(text.contains("erprm_errors_total 1"));
         assert!(text.contains("latency_ms_p50"));
+    }
+
+    #[test]
+    fn errors_split_by_class() {
+        let m = Metrics::default();
+        m.record_error(400);
+        m.record_error(400);
+        m.record_error(503);
+        assert_eq!(m.error_split(), (2, 1));
+        let text = m.render();
+        assert!(text.contains("erprm_errors_4xx_total 2"));
+        assert!(text.contains("erprm_errors_5xx_total 1"));
+        assert!(text.contains("erprm_errors_total 3"));
     }
 }

@@ -1,16 +1,24 @@
 //! HTTP serving front end.
 //!
 //! * [`http`] — minimal HTTP/1.1 server on `std::net` + the thread pool
-//!   (tokio is unavailable offline).
-//! * [`metrics`] — request counters and latency histograms (`/metrics`).
-//! * [`router`] — the engine actor: the PJRT engine is `!Send`, so one
-//!   dedicated thread owns it and serves solve requests from a channel;
-//!   the router also implements per-model-combo queues and batching of
-//!   queued requests into the engine thread.
-//! * [`api`] — request/response JSON schema for `/solve`, `/healthz`,
-//!   `/metrics`.
+//!   (tokio is unavailable offline); keep-alive is off (`Connection:
+//!   close`) so connection handling stays one-shot per request.
+//! * [`metrics`] — request counters (4xx/5xx split), latency/FLOPs
+//!   histograms (`/metrics`).
+//! * [`router`] — the engine shard pool: the PJRT engine is `!Send`, so
+//!   each of N shard threads owns its own engine; a least-loaded
+//!   dispatcher places requests onto per-shard bounded queues, rejecting
+//!   with `Error::Saturated` (HTTP 503) when all are full, and a
+//!   seed-stable LRU solve cache short-circuits repeated requests.
+//! * [`handler`] — the shared `/solve` / `/healthz` / `/metrics` routing
+//!   and error→status mapping used by `erprm serve` and the examples.
+//! * [`api`] — request/response JSON schema for `/solve`.
 
 pub mod api;
+pub mod handler;
 pub mod http;
 pub mod metrics;
 pub mod router;
+
+pub use handler::{error_response, route};
+pub use router::EnginePool;

@@ -1,14 +1,31 @@
-//! The engine actor + request router.
+//! The engine shard pool + request router.
 //!
-//! The PJRT engine is `!Send` (Rc-based client), so a dedicated thread owns
-//! it and executes solve requests sequentially from an mpsc queue; HTTP
-//! workers enqueue requests and block on a oneshot-style reply channel.
-//! The router keeps per-(lm,prm) warm state in the single engine and
-//! surfaces queue depth for backpressure (503 when saturated).
+//! The PJRT engine is `!Send` (Rc-based client), so each engine lives on a
+//! dedicated *shard* thread that owns it outright and executes solve
+//! requests sequentially from its own bounded mpsc queue. [`EnginePool`]
+//! fronts N such shards with a least-loaded dispatcher: HTTP workers
+//! reserve a slot on the shallowest shard queue, enqueue the request, and
+//! block on a oneshot-style reply channel. When every shard queue is at
+//! capacity the pool rejects immediately with [`Error::Saturated`], which
+//! the HTTP layer renders as **503 Service Unavailable** (never 4xx — 400
+//! stays reserved for parse/validation mistakes).
+//!
+//! Queue-depth accounting is leak-proof by construction: the caller that
+//! reserves a slot holds a [`DepthGuard`] whose `Drop` releases it, so the
+//! gauge recovers on every path — send failure, reply-channel failure, and
+//! normal completion alike.
+//!
+//! The pool also carries a seed-stable LRU solve cache keyed on
+//! `(problem, mode, n_beams, tau, m_expand, seed, lm, prm)` (see
+//! [`crate::server::api::SolveRequest::cache_key`]): because solves are
+//! deterministic for a fixed seed, repeated benchmark traffic
+//! short-circuits entirely, and a hit returns a byte-identical outcome.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 
 use crate::config::SearchConfig;
 use crate::coordinator::search::SolveOutcome;
@@ -16,7 +33,7 @@ use crate::coordinator::{solve_early_rejection, solve_vanilla};
 use crate::config::SearchMode;
 use crate::harness::temp_for;
 use crate::log_error;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EngineStats};
 use crate::server::api::SolveRequest;
 use crate::util::error::{Error, Result};
 
@@ -27,78 +44,379 @@ enum Msg {
     Shutdown,
 }
 
-/// Handle used by HTTP workers; cheap to clone.
-#[derive(Clone)]
-pub struct EngineHandle {
+/// One engine shard: a thread owning its own `Engine`, fed by `tx`.
+struct Shard {
     tx: mpsc::Sender<Msg>,
+    /// Requests currently reserved against this shard (queued + executing
+    /// + reply pending). Owned by callers via [`DepthGuard`].
     depth: Arc<AtomicUsize>,
-    capacity: usize,
+    /// Total solves completed by this shard (utilization reporting).
+    solved: Arc<AtomicU64>,
+    /// Latest engine-stats snapshot published by the shard thread.
+    stats: Arc<Mutex<EngineStats>>,
+    /// Set when the shard thread is observed dead (send/reply failure);
+    /// placement skips dead shards so they can't keep attracting traffic
+    /// with their permanently-empty queues.
+    dead: AtomicBool,
 }
 
-impl EngineHandle {
-    /// Spawn the engine actor thread. Fails fast (in the caller) if the
-    /// artifacts dir is unloadable.
-    pub fn spawn(artifacts_dir: PathBuf, _defaults: SearchConfig, capacity: usize) -> Result<EngineHandle> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let depth = Arc::new(AtomicUsize::new(0));
-        let depth2 = Arc::clone(&depth);
-        std::thread::Builder::new()
-            .name("erprm-engine".into())
-            .spawn(move || {
-                let engine = match Engine::load(&artifacts_dir) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Msg::Shutdown => break,
-                        Msg::Solve(req, cfg, reply) => {
-                            let res = run_solve(&engine, &req, &cfg);
-                            depth2.fetch_sub(1, Ordering::Relaxed);
-                            if let Err(e) = &res {
-                                log_error!("solve failed: {e}");
-                            }
-                            let _ = reply.send(res);
-                        }
-                    }
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| Error::invalid("engine thread died during startup"))??;
-        Ok(EngineHandle { tx, depth, capacity })
+struct PoolInner {
+    shards: Vec<Shard>,
+    capacity: usize,
+    cache: Option<Mutex<SolveCache>>,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    joins: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Handle to the shard pool used by HTTP workers; cheap to clone.
+#[derive(Clone)]
+pub struct EnginePool {
+    inner: Arc<PoolInner>,
+}
+
+/// RAII slot reservation against one shard's depth gauge. Dropping the
+/// guard releases the slot, so the gauge can never leak — this replaces
+/// the old fetch_add/fetch_sub pairing that leaked a slot whenever the
+/// engine thread died between enqueue and reply.
+struct DepthGuard {
+    depth: Arc<AtomicUsize>,
+}
+
+impl Drop for DepthGuard {
+    fn drop(&mut self) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Atomically claim a slot iff `depth < capacity` (CAS loop so concurrent
+/// callers can't overshoot the bound).
+fn try_reserve(depth: &Arc<AtomicUsize>, capacity: usize) -> Option<DepthGuard> {
+    let mut cur = depth.load(Ordering::Relaxed);
+    loop {
+        if cur >= capacity {
+            return None;
+        }
+        match depth.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+            Ok(_) => return Some(DepthGuard { depth: Arc::clone(depth) }),
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Indices of shards in least-loaded-first order (stable on ties, so an
+/// idle pool drains deterministically from shard 0).
+fn placement_order(depths: &[usize]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..depths.len()).collect();
+    idx.sort_by_key(|&i| depths[i]);
+    idx
+}
+
+impl EnginePool {
+    /// Spawn `n_shards` engine threads (each loads its own `Engine` from
+    /// `artifacts_dir`), with `capacity` queue slots per shard and an LRU
+    /// solve cache of `cache_entries` entries (0 disables caching).
+    /// Fails fast (in the caller) if any shard's artifacts are unloadable.
+    pub fn spawn(
+        artifacts_dir: PathBuf,
+        n_shards: usize,
+        capacity: usize,
+        cache_entries: usize,
+    ) -> Result<EnginePool> {
+        let n_shards = n_shards.max(1);
+        if capacity == 0 {
+            return Err(Error::invalid("shard queue capacity must be positive"));
+        }
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut joins = Vec::with_capacity(n_shards);
+        let mut readies = Vec::with_capacity(n_shards);
+        for i in 0..n_shards {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let solved = Arc::new(AtomicU64::new(0));
+            let stats = Arc::new(Mutex::new(EngineStats::default()));
+            let dir = artifacts_dir.clone();
+            let solved2 = Arc::clone(&solved);
+            let stats2 = Arc::clone(&stats);
+            let join = std::thread::Builder::new()
+                .name(format!("erprm-shard-{i}"))
+                .spawn(move || shard_main(i, dir, rx, ready_tx, solved2, stats2))?;
+            shards.push(Shard { tx, depth, solved, stats, dead: AtomicBool::new(false) });
+            joins.push(join);
+            readies.push(ready_rx);
+        }
+        let mut startup: Result<()> = Ok(());
+        for (i, ready) in readies.into_iter().enumerate() {
+            let r = ready
+                .recv()
+                .map_err(|_| Error::internal(format!("shard {i} died during startup")))
+                .and_then(|r| r);
+            if startup.is_ok() {
+                startup = r;
+            }
+        }
+        if let Err(e) = startup {
+            // Unwind: stop any shards that did come up, then join all.
+            for s in &shards {
+                let _ = s.tx.send(Msg::Shutdown);
+            }
+            for j in joins {
+                let _ = j.join();
+            }
+            return Err(e);
+        }
+        let cache = if cache_entries > 0 {
+            Some(Mutex::new(SolveCache::new(cache_entries)))
+        } else {
+            None
+        };
+        Ok(EnginePool {
+            inner: Arc::new(PoolInner {
+                shards,
+                capacity,
+                cache,
+                cache_hits: AtomicU64::new(0),
+                cache_misses: AtomicU64::new(0),
+                joins: Mutex::new(joins),
+            }),
+        })
     }
 
-    /// Enqueue a solve; returns Err immediately when saturated (backpressure).
+    /// Solve via the least-loaded shard; returns [`Error::Saturated`]
+    /// immediately when every live shard queue is full (backpressure),
+    /// and short-circuits through the solve cache when enabled. If the
+    /// chosen shard thread turns out to be dead, the request fails over
+    /// to the next live shard instead of surfacing the infrastructure
+    /// fault to the client.
     pub fn solve(&self, req: SolveRequest, mut cfg: SearchConfig) -> Result<SolveOutcome> {
-        if self.depth.load(Ordering::Relaxed) >= self.capacity {
-            return Err(Error::invalid("queue full"));
+        cfg.mode = req.mode;
+        cfg.n_beams = req.n_beams;
+        cfg.tau = req.tau;
+        cfg.validate()?;
+        let key = req.cache_key(&cfg);
+        if let Some(cache) = &self.inner.cache {
+            if let Some(hit) = cache.lock().unwrap().get(&key) {
+                self.inner.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(hit);
+            }
+            self.inner.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // One placement attempt per shard: a dispatch that dies marks its
+        // shard dead, and the next reserve() skips it.
+        let mut last_err = None;
+        for _ in 0..self.inner.shards.len() {
+            let (idx, guard) = self.reserve()?;
+            match self.dispatch(idx, req.clone(), cfg.clone(), guard) {
+                Err(e) if self.inner.shards[idx].dead.load(Ordering::Relaxed) => {
+                    log_error!("shard {idx} dead; failing request over: {e}");
+                    last_err = Some(e);
+                }
+                Ok(out) => {
+                    if let Some(cache) = &self.inner.cache {
+                        cache.lock().unwrap().put(key, out.clone());
+                    }
+                    return Ok(out);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::internal("every engine shard is dead")))
+    }
+
+    /// Solve on one specific shard, bypassing placement and the cache.
+    /// Exists for tests and routing ablations (e.g. proving that seed
+    /// determinism survives sharding by running the same request on two
+    /// different shards).
+    pub fn solve_on_shard(
+        &self,
+        idx: usize,
+        req: SolveRequest,
+        mut cfg: SearchConfig,
+    ) -> Result<SolveOutcome> {
+        if idx >= self.inner.shards.len() {
+            return Err(Error::invalid(format!("no shard {idx}")));
         }
         cfg.mode = req.mode;
         cfg.n_beams = req.n_beams;
         cfg.tau = req.tau;
         cfg.validate()?;
-        self.depth.fetch_add(1, Ordering::Relaxed);
+        let guard = try_reserve(&self.inner.shards[idx].depth, self.inner.capacity)
+            .ok_or_else(|| Error::saturated(format!("shard {idx} queue full")))?;
+        self.dispatch(idx, req, cfg, guard)
+    }
+
+    /// Claim a queue slot on the shallowest live, non-full shard.
+    fn reserve(&self) -> Result<(usize, DepthGuard)> {
+        let depths = self.shard_depths();
+        let mut any_alive = false;
+        for idx in placement_order(&depths) {
+            let shard = &self.inner.shards[idx];
+            if shard.dead.load(Ordering::Relaxed) {
+                continue;
+            }
+            any_alive = true;
+            if let Some(guard) = try_reserve(&shard.depth, self.inner.capacity) {
+                return Ok((idx, guard));
+            }
+        }
+        if !any_alive {
+            return Err(Error::internal("every engine shard is dead"));
+        }
+        Err(Error::saturated(format!(
+            "all {} shard queues at capacity {}",
+            self.inner.shards.len(),
+            self.inner.capacity
+        )))
+    }
+
+    /// Enqueue on shard `idx` and await the reply. The guard is held for
+    /// the whole round trip, so the depth gauge releases on every exit
+    /// path, including a dead shard thread — which is also marked dead
+    /// here so placement stops routing to it (an empty queue on a dead
+    /// shard would otherwise look maximally attractive forever).
+    fn dispatch(
+        &self,
+        idx: usize,
+        req: SolveRequest,
+        cfg: SearchConfig,
+        guard: DepthGuard,
+    ) -> Result<SolveOutcome> {
+        let _guard = guard;
+        let shard = &self.inner.shards[idx];
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Solve(req, cfg, rtx))
-            .map_err(|_| Error::invalid("engine thread gone"))?;
-        rrx.recv().map_err(|_| Error::invalid("engine dropped request"))?
+        if shard.tx.send(Msg::Solve(req, cfg, rtx)).is_err() {
+            shard.dead.store(true, Ordering::Relaxed);
+            return Err(Error::internal(format!("engine shard {idx} gone")));
+        }
+        match rrx.recv() {
+            Ok(res) => res,
+            Err(_) => {
+                shard.dead.store(true, Ordering::Relaxed);
+                Err(Error::internal(format!("engine shard {idx} died mid-request")))
+            }
+        }
     }
 
+    pub fn n_shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    pub fn capacity_per_shard(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Total reserved slots across all shards.
     pub fn queue_depth(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
+        self.shard_depths().iter().sum()
     }
 
+    /// Per-shard reserved-slot gauges.
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.inner.shards.iter().map(|s| s.depth.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Per-shard completed-solve counters (utilization reporting).
+    pub fn shard_solves(&self) -> Vec<u64> {
+        self.inner.shards.iter().map(|s| s.solved.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Per-shard liveness (false once a shard thread has been observed
+    /// dead and placement stopped routing to it).
+    pub fn shard_alive(&self) -> Vec<bool> {
+        self.inner.shards.iter().map(|s| !s.dead.load(Ordering::Relaxed)).collect()
+    }
+
+    /// (hits, misses) of the solve cache; (0, 0) when disabled.
+    pub fn cache_counters(&self) -> (u64, u64) {
+        (
+            self.inner.cache_hits.load(Ordering::Relaxed),
+            self.inner.cache_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn cache_enabled(&self) -> bool {
+        self.inner.cache.is_some()
+    }
+
+    /// Engine counters aggregated across all shards.
+    pub fn engine_stats(&self) -> EngineStats {
+        let mut agg = EngineStats::default();
+        for s in &self.inner.shards {
+            agg.merge(&s.stats.lock().unwrap());
+        }
+        agg
+    }
+
+    /// Pool-level gauges in the same Prometheus-flavoured text format as
+    /// `server::metrics` (appended to `/metrics` output).
+    pub fn render_metrics(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("erprm_pool_shards {}\n", self.n_shards()));
+        out.push_str(&format!("erprm_pool_capacity_per_shard {}\n", self.inner.capacity));
+        let alive = self.shard_alive();
+        for (i, (d, n)) in self.shard_depths().iter().zip(self.shard_solves()).enumerate() {
+            out.push_str(&format!("erprm_shard_queue_depth{{shard=\"{i}\"}} {d}\n"));
+            out.push_str(&format!("erprm_shard_solves_total{{shard=\"{i}\"}} {n}\n"));
+            out.push_str(&format!("erprm_shard_alive{{shard=\"{i}\"}} {}\n", alive[i] as u8));
+        }
+        let (hits, misses) = self.cache_counters();
+        out.push_str(&format!("erprm_cache_hits_total {hits}\n"));
+        out.push_str(&format!("erprm_cache_misses_total {misses}\n"));
+        let s = self.engine_stats();
+        out.push_str(&format!("erprm_engine_executions_total {}\n", s.executions));
+        out.push_str(&format!("erprm_engine_compiles_total {}\n", s.compiles));
+        out.push_str(&format!("erprm_engine_compile_wall_seconds {:.3}\n", s.compile_wall_s));
+        out.push_str(&format!("erprm_engine_execute_wall_seconds {:.3}\n", s.execute_wall_s));
+        out.push_str(&format!("erprm_engine_host_bytes_up {}\n", s.host_bytes_up));
+        out.push_str(&format!("erprm_engine_host_bytes_down {}\n", s.host_bytes_down));
+        out
+    }
+
+    /// Stop all shard threads and wait for them to exit.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        for s in &self.inner.shards {
+            let _ = s.tx.send(Msg::Shutdown);
+        }
+        for j in self.inner.joins.lock().unwrap().drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Body of one shard thread: load the engine, then serve solves until
+/// shutdown. Publishes an engine-stats snapshot after every solve.
+fn shard_main(
+    idx: usize,
+    artifacts_dir: PathBuf,
+    rx: mpsc::Receiver<Msg>,
+    ready_tx: mpsc::Sender<Result<()>>,
+    solved: Arc<AtomicU64>,
+    stats: Arc<Mutex<EngineStats>>,
+) {
+    let engine = match Engine::load(&artifacts_dir) {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Solve(req, cfg, reply) => {
+                let res = run_solve(&engine, &req, &cfg);
+                solved.fetch_add(1, Ordering::Relaxed);
+                *stats.lock().unwrap() = engine.stats();
+                if let Err(e) = &res {
+                    log_error!("shard {idx}: solve failed: {e}");
+                }
+                let _ = reply.send(res);
+            }
+        }
     }
 }
 
@@ -109,6 +427,72 @@ fn run_solve(engine: &Engine, req: &SolveRequest, cfg: &SearchConfig) -> Result<
         SearchMode::EarlyRejection => {
             solve_early_rejection(engine, &req.lm, &req.prm, &req.problem, cfg, temp)
         }
+    }
+}
+
+/// Seed-stable LRU cache of solve outcomes. Solves are deterministic for a
+/// fixed `(problem, config, seed)` (see `deterministic_solves_with_same_seed`
+/// in the integration suite), so a hit is byte-identical to a recompute.
+///
+/// Recency is a monotonic tick per entry, so the hot path (hits, which
+/// happen under the pool-wide cache mutex) is one hash lookup + counter
+/// bump — O(1). Only an eviction (miss while full) scans for the
+/// least-recently-used entry, and that path is immediately followed by a
+/// full engine solve, which dwarfs the scan.
+pub struct SolveCache {
+    map: HashMap<String, CacheEntry>,
+    tick: u64,
+    cap: usize,
+}
+
+struct CacheEntry {
+    out: SolveOutcome,
+    last_used: u64,
+}
+
+impl SolveCache {
+    pub fn new(cap: usize) -> SolveCache {
+        assert!(cap > 0, "cache capacity must be positive (0 disables at the pool)");
+        SolveCache { map: HashMap::new(), tick: 0, cap }
+    }
+
+    /// Lookup; a hit refreshes the entry's recency.
+    pub fn get(&mut self, key: &str) -> Option<SolveOutcome> {
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self.map.get_mut(key)?;
+        entry.last_used = tick;
+        Some(entry.out.clone())
+    }
+
+    /// Insert, evicting the least-recently-used entry at capacity.
+    pub fn put(&mut self, key: String, out: SolveOutcome) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(entry) = self.map.get_mut(&key) {
+            entry.out = out;
+            entry.last_used = tick;
+            return;
+        }
+        if self.map.len() >= self.cap {
+            if let Some(evict) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&evict);
+            }
+        }
+        self.map.insert(key, CacheEntry { out, last_used: tick });
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
     }
 }
 
@@ -139,6 +523,9 @@ impl<T> FifoQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::flops::FlopsLedger;
+    use crate::workload::{OpStep, Problem};
+    use crate::tokenizer as tk;
 
     #[test]
     fn fifo_order() {
@@ -155,11 +542,166 @@ mod tests {
 
     #[test]
     fn spawn_fails_fast_without_artifacts() {
-        let r = EngineHandle::spawn(
-            PathBuf::from("/nonexistent-artifacts"),
-            SearchConfig::default(),
-            4,
-        );
+        let r = EnginePool::spawn(PathBuf::from("/nonexistent-artifacts"), 2, 4, 0);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn depth_guard_releases_on_drop() {
+        let depth = Arc::new(AtomicUsize::new(0));
+        let g1 = try_reserve(&depth, 2).expect("slot 1");
+        let _g2 = try_reserve(&depth, 2).expect("slot 2");
+        assert_eq!(depth.load(Ordering::Relaxed), 2);
+        assert!(try_reserve(&depth, 2).is_none(), "at capacity");
+        drop(g1);
+        assert_eq!(depth.load(Ordering::Relaxed), 1);
+        assert!(try_reserve(&depth, 2).is_some(), "slot recovered after drop");
+    }
+
+    #[test]
+    fn placement_prefers_least_loaded_stably() {
+        assert_eq!(placement_order(&[3, 0, 2, 0]), vec![1, 3, 2, 0]);
+        assert_eq!(placement_order(&[0, 0]), vec![0, 1]);
+        assert_eq!(placement_order(&[]), Vec::<usize>::new());
+    }
+
+    fn outcome(answer: i64) -> SolveOutcome {
+        SolveOutcome {
+            answer: Some(answer),
+            correct: true,
+            best_reward: 0.5,
+            steps_executed: 1,
+            wall_s: 0.1,
+            ledger: FlopsLedger::new(10, 10),
+            best_trace: vec![tk::ANS, tk::EOS],
+            finished_beams: 1,
+        }
+    }
+
+    #[test]
+    fn lru_cache_evicts_oldest() {
+        let mut c = SolveCache::new(2);
+        c.put("a".into(), outcome(1));
+        c.put("b".into(), outcome(2));
+        assert!(c.get("a").is_some()); // refresh 'a'; 'b' is now LRU
+        c.put("c".into(), outcome(3)); // evicts 'b'
+        assert_eq!(c.len(), 2);
+        assert!(c.get("b").is_none());
+        assert_eq!(c.get("a").unwrap().answer, Some(1));
+        assert_eq!(c.get("c").unwrap().answer, Some(3));
+    }
+
+    #[test]
+    fn lru_cache_overwrite_keeps_len() {
+        let mut c = SolveCache::new(2);
+        c.put("a".into(), outcome(1));
+        c.put("a".into(), outcome(9));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get("a").unwrap().answer, Some(9));
+    }
+
+    fn fake_shard(tx: mpsc::Sender<Msg>) -> Shard {
+        Shard {
+            tx,
+            depth: Arc::new(AtomicUsize::new(0)),
+            solved: Arc::new(AtomicU64::new(0)),
+            stats: Arc::new(Mutex::new(EngineStats::default())),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    #[test]
+    fn solve_fails_over_from_dead_shard() {
+        // shard 0: receiver already dropped => first send marks it dead
+        let (tx0, rx0) = mpsc::channel::<Msg>();
+        drop(rx0);
+        // shard 1: fake engine thread replying a canned error
+        let (tx1, rx1) = mpsc::channel::<Msg>();
+        let join = std::thread::spawn(move || {
+            while let Ok(msg) = rx1.recv() {
+                match msg {
+                    Msg::Shutdown => break,
+                    Msg::Solve(_, _, reply) => {
+                        let _ = reply.send(Err(Error::invalid("fake engine")));
+                    }
+                }
+            }
+        });
+        let pool = EnginePool {
+            inner: Arc::new(PoolInner {
+                shards: vec![fake_shard(tx0), fake_shard(tx1)],
+                capacity: 4,
+                cache: None,
+                cache_hits: AtomicU64::new(0),
+                cache_misses: AtomicU64::new(0),
+                joins: Mutex::new(vec![join]),
+            }),
+        };
+        let req = SolveRequest {
+            problem: Problem { v0: 5, ops: vec![OpStep { op: tk::PLUS, d: 3 }] },
+            mode: SearchMode::EarlyRejection,
+            n_beams: 8,
+            tau: 8,
+            lm: "lm-concise".into(),
+            prm: "prm-large".into(),
+        };
+        // Placement tries shard 0 first (tie -> lowest index), discovers it
+        // dead, and fails over to shard 1, whose reply comes through.
+        let err = pool.solve(req, SearchConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("fake engine"), "{err}");
+        assert_eq!(pool.shard_alive(), vec![false, true]);
+        assert_eq!(pool.queue_depth(), 0, "guards released on both paths");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn all_shards_dead_is_internal_not_client_error() {
+        let (tx0, rx0) = mpsc::channel::<Msg>();
+        drop(rx0);
+        let pool = EnginePool {
+            inner: Arc::new(PoolInner {
+                shards: vec![fake_shard(tx0)],
+                capacity: 4,
+                cache: None,
+                cache_hits: AtomicU64::new(0),
+                cache_misses: AtomicU64::new(0),
+                joins: Mutex::new(Vec::new()),
+            }),
+        };
+        let req = SolveRequest {
+            problem: Problem { v0: 5, ops: vec![OpStep { op: tk::PLUS, d: 3 }] },
+            mode: SearchMode::EarlyRejection,
+            n_beams: 8,
+            tau: 8,
+            lm: "lm-concise".into(),
+            prm: "prm-large".into(),
+        };
+        // First call trips over the dead shard; both calls must surface a
+        // 500-class error, never a 4xx.
+        let e1 = pool.solve(req.clone(), SearchConfig::default()).unwrap_err();
+        assert_eq!(e1.http_status(), 500, "{e1}");
+        let e2 = pool.solve(req, SearchConfig::default()).unwrap_err();
+        assert_eq!(e2.http_status(), 500, "{e2}");
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn cache_key_distinguishes_seed_and_models() {
+        let req = SolveRequest {
+            problem: Problem { v0: 61, ops: vec![OpStep { op: tk::MINUS, d: 5 }] },
+            mode: SearchMode::EarlyRejection,
+            n_beams: 8,
+            tau: 8,
+            lm: "lm-concise".into(),
+            prm: "prm-large".into(),
+        };
+        let cfg = SearchConfig { n_beams: 8, tau: 8, ..SearchConfig::default() };
+        let k1 = req.cache_key(&cfg);
+        let k2 = req.cache_key(&SearchConfig { seed: 1, ..cfg.clone() });
+        assert_ne!(k1, k2, "seed must be part of the cache key");
+        let mut req2 = req.clone();
+        req2.prm = "prm-small".into();
+        assert_ne!(k1, req2.cache_key(&cfg), "prm must be part of the cache key");
+        assert_eq!(k1, req.cache_key(&cfg), "key is stable");
     }
 }

@@ -85,6 +85,16 @@ impl Args {
         }
     }
 
+    /// Integer option with a lower bound, for knobs where zero (or too
+    /// small) is a configuration mistake, e.g. `--capacity`.
+    pub fn get_usize_min(&self, name: &str, default: usize, min: usize) -> Result<usize> {
+        let v = self.get_usize(name, default)?;
+        if v < min {
+            return Err(Error::parse(format!("--{name} must be >= {min}, got {v}")));
+        }
+        Ok(v)
+    }
+
     /// Comma-separated list of integers, e.g. `--taus 4,8,16`.
     pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(name) {
@@ -149,5 +159,13 @@ mod tests {
     fn bad_values_error() {
         let a = parse(&["x", "--n", "abc"]);
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn bounded_getter_enforces_min() {
+        let a = parse(&["x", "--capacity", "0", "--workers", "4"]);
+        assert!(a.get_usize_min("capacity", 64, 1).is_err());
+        assert_eq!(a.get_usize_min("workers", 2, 1).unwrap(), 4);
+        assert_eq!(a.get_usize_min("absent", 7, 1).unwrap(), 7);
     }
 }

@@ -13,6 +13,12 @@ pub enum Error {
     Xla(String),
     /// Invariant violation in the coordinator (a bug or bad request).
     Invalid(String),
+    /// Serving backpressure: every shard queue is at capacity. Maps to
+    /// HTTP 503 Service Unavailable (retryable), never 4xx.
+    Saturated(String),
+    /// Server-side infrastructure fault (e.g. an engine shard thread
+    /// died). Maps to HTTP 500 — never blamed on the client.
+    Internal(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -24,6 +30,8 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Invalid(m) => write!(f, "invalid: {m}"),
+            Error::Saturated(m) => write!(f, "saturated: {m}"),
+            Error::Internal(m) => write!(f, "internal: {m}"),
         }
     }
 }
@@ -50,6 +58,23 @@ impl Error {
     pub fn invalid(m: impl Into<String>) -> Self {
         Error::Invalid(m.into())
     }
+    pub fn saturated(m: impl Into<String>) -> Self {
+        Error::Saturated(m.into())
+    }
+    pub fn internal(m: impl Into<String>) -> Self {
+        Error::Internal(m.into())
+    }
+
+    /// The HTTP status this error renders as: client mistakes are 4xx,
+    /// backpressure is 503 (retryable), runtime/infrastructure faults
+    /// are 500.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            Error::Parse(_) | Error::Invalid(_) => 400,
+            Error::Saturated(_) => 503,
+            Error::Io(_) | Error::Xla(_) | Error::Internal(_) => 500,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -60,7 +85,19 @@ mod tests {
     fn display_variants() {
         assert!(Error::parse("x").to_string().contains("parse"));
         assert!(Error::invalid("y").to_string().contains("invalid"));
+        assert!(Error::saturated("z").to_string().contains("saturated"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn http_status_mapping() {
+        assert_eq!(Error::parse("x").http_status(), 400);
+        assert_eq!(Error::invalid("x").http_status(), 400);
+        assert_eq!(Error::saturated("x").http_status(), 503);
+        assert_eq!(Error::internal("x").http_status(), 500);
+        assert_eq!(Error::Xla("x".into()).http_status(), 500);
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert_eq!(io.http_status(), 500);
     }
 }

@@ -4,17 +4,19 @@
 //! sweeps. Jobs are `FnOnce` closures; `join` blocks until the queue
 //! drains; dropping the pool shuts workers down cleanly.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Duration;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
 
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
     pending: Arc<(Mutex<usize>, Condvar)>,
     executed: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
 }
 
 impl ThreadPool {
@@ -24,18 +26,22 @@ impl ThreadPool {
         let rx = Arc::new(Mutex::new(rx));
         let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
         let executed = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let rx = Arc::clone(&rx);
             let pending = Arc::clone(&pending);
             let executed = Arc::clone(&executed);
+            let stop = Arc::clone(&stop);
             workers.push(
                 thread::Builder::new()
                     .name(format!("erprm-worker-{i}"))
                     .spawn(move || loop {
+                        // recv with a timeout so shutdown works even while
+                        // detached JobSenders keep the channel open.
                         let job = {
                             let guard = rx.lock().unwrap();
-                            guard.recv()
+                            guard.recv_timeout(Duration::from_millis(50))
                         };
                         match job {
                             Ok(job) => {
@@ -48,13 +54,18 @@ impl ThreadPool {
                                     cv.notify_all();
                                 }
                             }
-                            Err(_) => break, // channel closed: shutdown
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
                         }
                     })
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { tx: Some(tx), workers, pending, executed }
+        ThreadPool { tx: Some(tx), workers, pending, executed, stop }
     }
 
     /// Submit a job; panics if the pool is shut down.
@@ -85,11 +96,57 @@ impl ThreadPool {
     pub fn size(&self) -> usize {
         self.workers.len()
     }
+
+    /// A cloneable submit handle decoupled from the pool's borrow (the
+    /// HTTP accept thread owns one). Jobs submitted through it run on the
+    /// pool's workers and count toward `join`. Dropping the pool still
+    /// shuts workers down (bounded by one recv timeout) even while a
+    /// `JobSender` is alive; submits after that point return false.
+    pub fn sender(&self) -> JobSender {
+        JobSender {
+            tx: self.tx.as_ref().expect("pool shut down").clone(),
+            pending: Arc::clone(&self.pending),
+        }
+    }
+}
+
+/// Detached submit handle for [`ThreadPool`]; see [`ThreadPool::sender`].
+#[derive(Clone)]
+pub struct JobSender {
+    tx: mpsc::Sender<Job>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl JobSender {
+    /// Submit a job; returns false (dropping the job) if the pool has
+    /// shut down.
+    pub fn submit(&self, job: Job) -> bool {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        if self.tx.send(job).is_err() {
+            // Pool gone: undo the pending count so a racing join() can't
+            // wedge waiting for a job that will never run.
+            let (lock, cv) = &*self.pending;
+            let mut p = lock.lock().unwrap();
+            *p -= 1;
+            if *p == 0 {
+                cv.notify_all();
+            }
+            return false;
+        }
+        true
+    }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close channel => workers exit
+        // Closing our sender ends workers once the queue drains (when no
+        // detached JobSender is alive); the stop flag covers the case
+        // where one is, bounding shutdown to one recv timeout.
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.tx.take());
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -175,5 +232,31 @@ mod tests {
         pool.execute(|| {});
         pool.join();
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn detached_sender_runs_jobs_on_workers() {
+        let pool = ThreadPool::new(4);
+        let sender = pool.sender();
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let c = Arc::clone(&counter);
+            assert!(sender.submit(Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            })));
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 20);
+        assert_eq!(pool.executed(), 20);
+        drop(sender);
+        drop(pool); // must not hang once the sender is gone
+    }
+
+    #[test]
+    fn submit_after_shutdown_reports_failure() {
+        let pool = ThreadPool::new(1);
+        let sender = pool.sender();
+        drop(pool);
+        assert!(!sender.submit(Box::new(|| {})));
     }
 }

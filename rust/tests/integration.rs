@@ -12,7 +12,10 @@ use erprm::coordinator::early_reject::solve_early_rejection_with_policy;
 use erprm::coordinator::policy::RejectPolicy;
 use erprm::harness;
 use erprm::runtime::Engine;
+use erprm::server::{api, error_response, http, metrics::Metrics, route, router::EnginePool};
 use erprm::tokenizer as tk;
+use erprm::util::error::Error;
+use erprm::util::threadpool::ThreadPool;
 use erprm::workload::{gen_problem, problem_set, Problem, SATMATH};
 use erprm::util::rng::Rng;
 
@@ -253,6 +256,140 @@ fn correlation_corpus_scores() {
             assert!(t.cummin[i] <= t.cummin[i - 1] + 1e-6);
         }
     }
+}
+
+// ---------------------------------------------------------------- serving
+
+fn http_get(addr: std::net::SocketAddr, reqbytes: &[u8]) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(reqbytes).unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+// The Saturated error must render as HTTP 503 + Retry-After end to end.
+// Pure HTTP-layer test: needs no artifacts, always runs.
+#[test]
+fn saturated_error_maps_to_503_over_http() {
+    let pool = ThreadPool::new(2);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let addr = http::serve(
+        "127.0.0.1:0",
+        &pool,
+        1024,
+        std::sync::Arc::clone(&stop),
+        std::sync::Arc::new(|_| error_response(&Error::saturated("all shard queues full"))),
+    )
+    .unwrap();
+    let out = http_get(addr, b"POST /solve HTTP/1.1\r\nContent-Length: 0\r\n\r\n");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    assert!(out.starts_with("HTTP/1.1 503"), "{out}");
+    assert!(out.contains("Retry-After"), "{out}");
+    assert!(out.contains("saturated"), "{out}");
+}
+
+fn solve_body() -> &'static [u8] {
+    br#"{"v0": 61, "ops": [["-",5],["*",6],["+",4]], "mode": "er", "n_beams": 8, "tau": 8}"#
+}
+
+#[test]
+fn pool_saturation_returns_503_and_depth_recovers() {
+    let Some(dir) = artifacts() else { return };
+    // 1 shard x 1 queue slot: concurrent requests must overflow into 503.
+    let epool = EnginePool::spawn(dir, 1, 1, 0).unwrap();
+    let metrics = std::sync::Arc::new(Metrics::default());
+    let tpool = ThreadPool::new(8);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let p2 = epool.clone();
+    let m2 = std::sync::Arc::clone(&metrics);
+    let addr = http::serve(
+        "127.0.0.1:0",
+        &tpool,
+        1 << 20,
+        std::sync::Arc::clone(&stop),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), req)),
+    )
+    .unwrap();
+    let req = format!(
+        "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        solve_body().len(),
+        std::str::from_utf8(solve_body()).unwrap()
+    );
+    let joins: Vec<_> = (0..6)
+        .map(|_| {
+            let req = req.clone();
+            std::thread::spawn(move || http_get(addr, req.as_bytes()))
+        })
+        .collect();
+    let mut ok = 0;
+    let mut saturated = 0;
+    for j in joins {
+        let out = j.join().unwrap();
+        if out.starts_with("HTTP/1.1 200") {
+            ok += 1;
+        } else if out.starts_with("HTTP/1.1 503") {
+            assert!(out.contains("Retry-After"), "{out}");
+            saturated += 1;
+        } else {
+            panic!("unexpected response: {out}");
+        }
+    }
+    assert_eq!(ok + saturated, 6);
+    assert!(ok >= 1, "at least one request must be served");
+    assert!(saturated >= 1, "1-slot pool under 6 concurrent requests must shed load");
+    // the depth gauge must fully recover once the queue drains
+    assert_eq!(epool.queue_depth(), 0, "depth gauge leaked");
+    let metrics_text = http_get(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+    assert!(
+        metrics_text.contains("erprm_shard_queue_depth{shard=\"0\"} 0"),
+        "{metrics_text}"
+    );
+    assert!(metrics_text.contains("erprm_errors_5xx_total"), "{metrics_text}");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    epool.shutdown();
+}
+
+#[test]
+fn sharding_preserves_seed_determinism() {
+    let Some(dir) = artifacts() else { return };
+    let epool = EnginePool::spawn(dir, 2, 4, 0).unwrap();
+    let cfg = SearchConfig::default();
+    let req = api::parse_solve(solve_body(), &cfg).unwrap();
+    // Same (problem, seed) on two different shards — two distinct engine
+    // instances — must produce byte-identical traces and ledgers.
+    let a = epool.solve_on_shard(0, req.clone(), cfg.clone()).unwrap();
+    let b = epool.solve_on_shard(1, req.clone(), cfg.clone()).unwrap();
+    assert_eq!(a.answer, b.answer);
+    assert_eq!(a.best_trace, b.best_trace, "traces diverged across shards");
+    assert_eq!(a.ledger, b.ledger, "FLOPs accounting diverged across shards");
+    let solves = epool.shard_solves();
+    assert_eq!(solves, vec![1, 1], "each shard must have executed exactly once");
+    epool.shutdown();
+}
+
+#[test]
+fn cache_hit_returns_identical_body_and_counts() {
+    let Some(dir) = artifacts() else { return };
+    let epool = EnginePool::spawn(dir, 1, 4, 16).unwrap();
+    let cfg = SearchConfig::default();
+    let req = api::parse_solve(solve_body(), &cfg).unwrap();
+    let first = epool.solve(req.clone(), cfg.clone()).unwrap();
+    let second = epool.solve(req.clone(), cfg.clone()).unwrap();
+    assert_eq!(epool.cache_counters(), (1, 1), "second solve must hit the cache");
+    assert_eq!(
+        api::render_solve(&req, &first),
+        api::render_solve(&req, &second),
+        "cache hit must render a byte-identical body"
+    );
+    assert_eq!(
+        epool.shard_solves(),
+        vec![1],
+        "the engine must only have run once"
+    );
+    assert!(epool.render_metrics().contains("erprm_cache_hits_total 1"));
+    epool.shutdown();
 }
 
 #[test]
