@@ -1,0 +1,201 @@
+//! Fleet-vs-sequential serving benchmark (the acceptance driver for the
+//! fleet scheduler): fires one mixed-concurrency workload at two pools
+//! with the *same shard count* — one dispatching sequentially, one running
+//! the fleet scheduler — and reports aggregate solves/sec, latency
+//! percentiles, queue wait, and the fleet's backfill/coalescing counters.
+//!
+//! The workload is deliberately mixed: requests vary in beam width (long
+//! and short solves interleaved, so sequential dispatch head-of-line
+//! blocks) and popular problems repeat (`--dup`, so the fleet's
+//! single-flight coalescing pays once for duplicate in-flight work, like
+//! production traffic hitting a hot prompt).
+//!
+//!     make artifacts && cargo run --release --example fleet_benchmark -- \
+//!         --requests 32 --clients 8 --shards 2 --max-inflight 8 --dup 4
+//!
+//! The LRU cache is off in both pools so the comparison measures the
+//! scheduler, not the cache.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use erprm::config::{SearchConfig, SearchMode};
+use erprm::fleet::FleetOptions;
+use erprm::server::api::SolveRequest;
+use erprm::server::{EnginePool, PoolOptions};
+use erprm::util::cli::Args;
+use erprm::util::rng::Rng;
+use erprm::util::stats;
+use erprm::util::threadpool::{parallel_map, ThreadPool};
+use erprm::workload::{gen_problem, SATMATH};
+
+struct Report {
+    label: String,
+    wall_s: f64,
+    rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    mean_queue_wait_ms: f64,
+    errors: usize,
+    engine_solves: u64,
+    fleet_line: String,
+}
+
+fn run_mode(
+    label: &str,
+    dir: PathBuf,
+    shards: usize,
+    capacity: usize,
+    fleet: Option<FleetOptions>,
+    clients: usize,
+    requests: &[SolveRequest],
+) -> Result<Report, Box<dyn std::error::Error>> {
+    let pool = EnginePool::spawn_with(
+        dir,
+        PoolOptions { shards, capacity, cache_entries: 0, default_deadline_ms: 0, fleet },
+    )?;
+    let client_pool = ThreadPool::new(clients);
+    let p2 = pool.clone();
+    let t0 = Instant::now();
+    let results = parallel_map(&client_pool, requests.to_vec(), move |req| {
+        let t = Instant::now();
+        let cfg = SearchConfig { seed: 7, ..SearchConfig::default() };
+        let res = p2.solve_timed(req, cfg);
+        (t.elapsed().as_secs_f64() * 1000.0, res)
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut latencies = Vec::new();
+    let mut queue_waits = Vec::new();
+    let mut errors = 0usize;
+    for (ms, res) in &results {
+        latencies.push(*ms);
+        match res {
+            Ok(s) => queue_waits.push(s.queue_wait_ms),
+            Err(e) => {
+                errors += 1;
+                eprintln!("[{label}] request failed: {e}");
+            }
+        }
+    }
+    let fleet_line = match pool.fleet_totals() {
+        Some(t) => format!(
+            "admitted {} backfill {} coalesced {} expired {}",
+            t.admitted, t.backfill, t.coalesced, t.expired
+        ),
+        None => "-".to_string(),
+    };
+    let report = Report {
+        label: label.to_string(),
+        wall_s,
+        rps: requests.len() as f64 / wall_s,
+        p50_ms: stats::quantile(&latencies, 0.5),
+        p95_ms: stats::quantile(&latencies, 0.95),
+        mean_queue_wait_ms: stats::mean(&queue_waits),
+        errors,
+        engine_solves: pool.shard_solves().iter().sum(),
+        fleet_line,
+    };
+    pool.shutdown();
+    Ok(report)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    erprm::util::logging::init_from_env();
+    let args = Args::from_env()?;
+    let n_requests = args.get_usize("requests", 24)?;
+    let clients = args.get_usize_min("clients", 8, 1)?;
+    let shards = args.get_usize_min("shards", 2, 1)?;
+    let capacity = args.get_usize_min("capacity", 64, 1)?;
+    let max_inflight = args.get_usize_min("max-inflight", 8, 1)?;
+    // every unique problem is requested `dup` times (hot-prompt traffic)
+    let dup = args.get_usize_min("dup", 4, 1)?;
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts missing; run `make artifacts` first (skipping benchmark)");
+        return Ok(());
+    }
+
+    // One shared workload so both modes see identical requests: unique
+    // problems at mixed beam widths, each repeated `dup` times, then
+    // shuffled so duplicates overlap in flight instead of back-to-back.
+    let widths = [4usize, 8, 16];
+    let mut rng = Rng::new(2718);
+    let uniques = n_requests.div_ceil(dup);
+    let mut requests: Vec<SolveRequest> = Vec::with_capacity(n_requests);
+    for i in 0..uniques {
+        let p = gen_problem(&mut rng, &SATMATH);
+        let n_beams = widths[i % widths.len()];
+        for _ in 0..dup {
+            if requests.len() == n_requests {
+                break;
+            }
+            requests.push(SolveRequest {
+                problem: p.clone(),
+                mode: SearchMode::EarlyRejection,
+                n_beams,
+                tau: 8,
+                lm: "lm-concise".into(),
+                prm: "prm-large".into(),
+                deadline_ms: None,
+                priority: 0,
+            });
+        }
+    }
+    rng.shuffle(&mut requests); // duplicates spread out, not back-to-back
+
+    println!(
+        "firing {} requests ({} unique problems x{dup}, widths {widths:?}) from {clients} \
+         client threads at {shards} shard(s)",
+        requests.len(),
+        uniques
+    );
+
+    let seq = run_mode(
+        "sequential",
+        "artifacts".into(),
+        shards,
+        capacity,
+        None,
+        clients,
+        &requests,
+    )?;
+    let fleet = run_mode(
+        "fleet",
+        "artifacts".into(),
+        shards,
+        capacity,
+        Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
+        clients,
+        &requests,
+    )?;
+
+    println!("\n== fleet vs sequential (equal shard count) ==");
+    println!(
+        "{:<12} {:>10} {:>12} {:>9} {:>9} {:>12} {:>7} {:>13}  fleet counters",
+        "mode", "wall s", "solves/sec", "p50 ms", "p95 ms", "queue-wait", "errors", "engine solves"
+    );
+    for r in [&seq, &fleet] {
+        println!(
+            "{:<12} {:>10.2} {:>12.2} {:>9.0} {:>9.0} {:>12.1} {:>7} {:>13}  {}",
+            r.label,
+            r.wall_s,
+            r.rps,
+            r.p50_ms,
+            r.p95_ms,
+            r.mean_queue_wait_ms,
+            r.errors,
+            r.engine_solves,
+            r.fleet_line
+        );
+    }
+    let ratio = fleet.rps / seq.rps.max(1e-9);
+    println!(
+        "\nfleet / sequential = {ratio:.2}x aggregate solves/sec \
+         (engine ran {} vs {} solves for the same {} requests)",
+        fleet.engine_solves,
+        seq.engine_solves,
+        requests.len()
+    );
+    Ok(())
+}

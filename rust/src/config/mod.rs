@@ -175,6 +175,14 @@ pub struct ServerConfig {
     pub capacity: usize,
     /// LRU solve-cache entries; 0 disables the cache.
     pub cache_entries: usize,
+    /// Run shards under the fleet scheduler (continuous cross-request
+    /// batching) instead of sequential one-request-at-a-time dispatch.
+    pub fleet: bool,
+    /// Fleet slot-table size per shard: how many requests interleave.
+    pub max_inflight: usize,
+    /// Default per-request deadline in ms, honored in both dispatch
+    /// modes; 0 = unbounded.
+    pub deadline_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -186,6 +194,9 @@ impl Default for ServerConfig {
             shards: 0,
             capacity: 64,
             cache_entries: 128,
+            fleet: false,
+            max_inflight: 8,
+            deadline_ms: 0,
         }
     }
 }
@@ -283,6 +294,15 @@ impl Config {
             if let Some(n) = s.get("cache_entries").and_then(Json::as_usize) {
                 cfg.server.cache_entries = n;
             }
+            if let Some(b) = s.get("fleet").and_then(Json::as_bool) {
+                cfg.server.fleet = b;
+            }
+            if let Some(n) = s.get("max_inflight").and_then(Json::as_usize) {
+                cfg.server.max_inflight = n;
+            }
+            if let Some(n) = s.get("deadline_ms").and_then(Json::as_i64) {
+                cfg.server.deadline_ms = n.max(0) as u64;
+            }
         }
         cfg.search.validate()?;
         Ok(cfg)
@@ -349,6 +369,22 @@ mod tests {
         assert_eq!(c.server.effective_shards(), 4);
         assert_eq!(c.server.capacity, 8);
         assert_eq!(c.server.cache_entries, 0);
+    }
+
+    #[test]
+    fn fleet_knobs_parse_and_default() {
+        let d = ServerConfig::default();
+        assert!(!d.fleet, "fleet is opt-in; the sequential path is the fallback");
+        assert_eq!(d.max_inflight, 8);
+        assert_eq!(d.deadline_ms, 0, "no deadline unless configured");
+        let j = Json::parse(
+            r#"{"server": {"fleet": true, "max_inflight": 16, "deadline_ms": 2000}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert!(c.server.fleet);
+        assert_eq!(c.server.max_inflight, 16);
+        assert_eq!(c.server.deadline_ms, 2000);
     }
 
     #[test]

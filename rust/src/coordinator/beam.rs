@@ -201,17 +201,20 @@ impl BeamSet {
     }
 
     /// Best finished beam by reward; falls back to best unfinished.
+    /// NaN rewards rank worst (and can't panic the comparator) via
+    /// [`crate::coordinator::policy::rankable`].
     pub fn best(&self) -> Option<&Beam> {
+        use crate::coordinator::policy::rankable;
         let fin = self
             .beams
             .iter()
             .filter(|b| b.finished && !b.dead)
-            .max_by(|a, b| a.beam_reward().partial_cmp(&b.beam_reward()).unwrap());
+            .max_by(|a, b| rankable(a.beam_reward()).total_cmp(&rankable(b.beam_reward())));
         fin.or_else(|| {
             self.beams
                 .iter()
                 .filter(|b| !b.dead)
-                .max_by(|a, b| a.beam_reward().partial_cmp(&b.beam_reward()).unwrap())
+                .max_by(|a, b| rankable(a.beam_reward()).total_cmp(&rankable(b.beam_reward())))
         })
     }
 

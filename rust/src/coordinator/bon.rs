@@ -30,8 +30,8 @@ pub fn solve_best_of_n(
     // drive every beam to EOS (or run-away death), finalizing steps as they
     // close but never pruning or expanding.
     for _ in 0..cfg.max_steps {
-        let ok = ctx.decode_phase(PhaseTarget::Boundary)?;
-        let ok2 = ctx.score_catch_up()?;
+        let ok = ctx.decode_phase(engine, PhaseTarget::Boundary)?;
+        let ok2 = ctx.score_catch_up(engine)?;
         ctx.harvest_finished();
         if !ok || !ok2 {
             break;

@@ -14,13 +14,17 @@
 //!
 //! Beams that complete their step before `tau` skip phase B; beams that
 //! emit EOS exit the pool as finished candidates.
-
-use std::time::Instant;
+//!
+//! The step-by-step mechanics live in the resumable state machine
+//! ([`crate::coordinator::task::SolveTask`]); these blocking entry points
+//! simply drive a task to completion on one engine, which is also what
+//! guarantees the fleet scheduler's interleaved path computes the exact
+//! same outcome.
 
 use crate::config::SearchConfig;
 use crate::coordinator::policy::RejectPolicy;
-use crate::coordinator::scheduler::TwoTierPlan;
-use crate::coordinator::search::{PhaseTarget, SearchCtx, SolveOutcome};
+use crate::coordinator::search::SolveOutcome;
+use crate::coordinator::task::SolveTask;
 use crate::runtime::Engine;
 use crate::util::error::Result;
 use crate::workload::Problem;
@@ -50,99 +54,14 @@ pub fn solve_early_rejection_with_policy(
     policy: RejectPolicy,
     two_tier: bool,
 ) -> Result<SolveOutcome> {
-    cfg.validate()?;
-    let t0 = Instant::now();
-    let mut ctx = SearchCtx::init(engine, lm_ckpt, prm_ckpt, problem, cfg, temp)?;
-    let variants = engine.manifest.batch_variants.clone();
-    let mut steps = 0;
-
-    for _ in 0..cfg.max_steps {
-        // ---- Phase A: decode tau prefix tokens for every beam
-        let ok = ctx.decode_phase(PhaseTarget::Prefix { tau: cfg.tau })?;
-        let ok2 = ctx.score_catch_up()?;
-        ctx.harvest_finished();
-        if !ok || !ok2 {
-            break;
-        }
-        steps += 1;
-
-        // ---- Partial rewards + early rejection
-        let mut scored: Vec<(usize, f32)> = Vec::new();
-        for (slot, beam) in ctx.beams.beams.iter().enumerate() {
-            if beam.active() {
-                if let Some(p) = beam.partial_reward(cfg.tau, cfg.agg) {
-                    scored.push((slot, p));
-                }
-            }
-        }
-        if scored.is_empty() {
-            break; // pool exhausted (all finished or dead)
-        }
-        let survivors = policy.select(&scored);
-        for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
-            if beam.active() && !survivors.contains(&slot) {
-                beam.dead = true; // << the early rejection
-            }
-        }
-
-        // ---- Phase B: survivors complete the step (two-tier shrink)
-        let plan = TwoTierPlan::plan(cfg.n_beams, survivors.len(), &variants, two_tier)?;
-        if plan.shrink {
-            // compact survivors into the b2 variant (both model caches)
-            let mut idx: Vec<i32> = survivors.iter().map(|&s| s as i32).collect();
-            idx.resize(plan.b2, *idx.first().unwrap_or(&0));
-            ctx.lm_kv = engine.kv_resize(lm_ckpt, &ctx.lm_kv, &idx, plan.b2)?;
-            ctx.prm_kv = engine.kv_resize(prm_ckpt, &ctx.prm_kv, &idx, plan.b2)?;
-            ctx.ledger.call();
-            ctx.ledger.call();
-            let key_base = ctx.call_counter.wrapping_mul(0x9E3779B97F4A7C15) ^ cfg.seed;
-            ctx.beams.permute(&idx, key_base);
-            for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
-                if slot >= survivors.len() {
-                    beam.dead = true; // padding slots
-                }
-            }
-        }
-        let ok = ctx.decode_phase(PhaseTarget::Boundary)?;
-        let ok2 = ctx.score_catch_up()?;
-        ctx.harvest_finished();
-        if !ok || !ok2 {
-            break;
-        }
-
-        // ---- Finalize step rewards for survivors
-        let mut final_survivors: Vec<(usize, f32)> = Vec::new();
-        for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
-            if beam.active() && beam.awaiting_finalize {
-                let r = beam.finalize_step(cfg.agg);
-                final_survivors.push((slot, r));
-            }
-        }
-        if final_survivors.is_empty() {
-            break;
-        }
-        final_survivors.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        let order: Vec<usize> = final_survivors.iter().map(|&(s, _)| s).collect();
-
-        // ---- Expansion back to width N at b1
-        if plan.shrink && ctx.lm_kv.batch != plan.b1 {
-            // grow b2 -> b1 with expansion mapping in one resize
-            let (rel, active) =
-                crate::coordinator::scheduler::expansion_indices(order.len(), cfg.m_expand, plan.b1);
-            let idx: Vec<i32> = rel.iter().map(|&r| order[r as usize] as i32).collect();
-            ctx.lm_kv = engine.kv_resize(lm_ckpt, &ctx.lm_kv, &idx, plan.b1)?;
-            ctx.prm_kv = engine.kv_resize(prm_ckpt, &ctx.prm_kv, &idx, plan.b1)?;
-            ctx.ledger.call();
-            ctx.ledger.call();
-            let key_base = ctx.call_counter.wrapping_mul(0x2545F4914F6CDD1D) ^ cfg.seed;
-            ctx.beams.permute(&idx, key_base);
-            for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
-                beam.dead = slot >= active;
-                beam.finished = false;
-            }
-        } else {
-            ctx.expand(&order)?;
-        }
-    }
-    Ok(ctx.finish(problem, t0, steps))
+    let task = SolveTask::early_rejection_with_policy(
+        problem.clone(),
+        lm_ckpt,
+        prm_ckpt,
+        cfg,
+        temp,
+        policy,
+        two_tier,
+    )?;
+    task.run_to_completion(engine)
 }

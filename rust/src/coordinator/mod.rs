@@ -14,6 +14,8 @@
 //!   at b1 >= completion phase at b2.
 //! * [`search`] — Algorithm 2, vanilla PRM-guided beam search (baseline).
 //! * [`early_reject`] — Algorithm 3, beam search with early rejection.
+//! * [`task`] — the resumable [`task::SolveTask`] state machine both
+//!   algorithms compile down to; the unit the fleet scheduler interleaves.
 
 pub mod beam;
 pub mod bon;
@@ -24,9 +26,11 @@ pub mod sampler;
 pub mod scheduler;
 pub mod scorer;
 pub mod search;
+pub mod task;
 
 pub use beam::{Beam, BeamSet};
 pub use bon::solve_best_of_n;
 pub use early_reject::solve_early_rejection;
 pub use flops::{FlopsLedger, FlopsReport};
 pub use search::{solve_vanilla, SolveOutcome};
+pub use task::{Progress, SolveTask};

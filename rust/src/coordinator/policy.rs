@@ -9,6 +9,23 @@
 /// Decision input: (slot, partial_reward) for every live candidate.
 pub type Scored = (usize, f32);
 
+/// A reward normalized for ranking: NaN maps to `-inf` so `total_cmp`
+/// never panics *and* a poisoned PRM score always loses — rewards live in
+/// (0, 1), so demoting NaN below every real score is unambiguous.
+pub fn rankable(x: f32) -> f32 {
+    if x.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        x
+    }
+}
+
+/// Total descending order on `(slot, score)`: best score first, NaN last,
+/// ties broken by the lower slot id (deterministic across runs).
+pub fn rank_desc(a: &Scored, b: &Scored) -> std::cmp::Ordering {
+    rankable(b.1).total_cmp(&rankable(a.1)).then(a.0.cmp(&b.0))
+}
+
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum RejectPolicy {
     /// Keep the top `keep` candidates (paper's rule).
@@ -22,10 +39,13 @@ pub enum RejectPolicy {
 }
 
 impl RejectPolicy {
-    /// Returns the surviving slots, best-first.
+    /// Returns the surviving slots, best-first. [`rank_desc`] keeps the
+    /// ranking total even if a PRM score comes back NaN (it sorts last,
+    /// i.e. is rejected first) — a poisoned reward must degrade the beam,
+    /// not panic the shard thread mid-request.
     pub fn select(&self, scored: &[Scored]) -> Vec<usize> {
         let mut ranked: Vec<Scored> = scored.to_vec();
-        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        ranked.sort_by(rank_desc);
         match *self {
             RejectPolicy::TopK { keep } => {
                 ranked.iter().take(keep.max(1)).map(|&(s, _)| s).collect()
@@ -105,6 +125,19 @@ mod tests {
     fn ties_break_deterministically() {
         let s = scored(&[0.5, 0.5, 0.5]);
         assert_eq!(RejectPolicy::TopK { keep: 2 }.select(&s), vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_reward_loses_instead_of_panicking() {
+        // a poisoned PRM score must be rejected first, not crash the sort
+        let s = scored(&[0.4, f32::NAN, 0.6, f32::NAN]);
+        assert_eq!(RejectPolicy::TopK { keep: 2 }.select(&s), vec![2, 0]);
+        // all-NaN still returns a deterministic (slot-ordered) survivor
+        let all_nan = scored(&[f32::NAN, f32::NAN]);
+        assert_eq!(RejectPolicy::TopK { keep: 1 }.select(&all_nan), vec![0]);
+        assert_eq!(rank_desc(&(0, f32::NAN), &(1, 0.0)), std::cmp::Ordering::Greater);
+        assert_eq!(rankable(0.7), 0.7);
+        assert_eq!(rankable(f32::NAN), f32::NEG_INFINITY);
     }
 
     #[test]

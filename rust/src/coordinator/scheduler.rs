@@ -125,6 +125,38 @@ mod tests {
     }
 
     #[test]
+    fn expansion_overflow_clamps_to_b1() {
+        // survivors * m_expand > b1: the batch can't hold a full brood, so
+        // active clamps to b1 and the best-ranked survivors (lowest compact
+        // index) keep their children; trailing survivors may get none.
+        let (idx, active) = expansion_indices(8, 4, 16);
+        assert_eq!(active, 16);
+        assert_eq!(idx.len(), 16);
+        assert!(idx.iter().all(|&i| (i as usize) < 8), "index beyond survivors");
+        assert_eq!(idx[0..4], [0, 0, 0, 0]);
+        assert_eq!(idx[12..16], [3, 3, 3, 3]);
+        // survivors 4..8 lost out — every slot went to the top ranks
+        assert!(idx.iter().all(|&i| i < 4));
+        // extreme overflow: more surviving children than slots — the best
+        // survivor's brood fills the batch, indices never go out of bounds
+        let (idx, active) = expansion_indices(6, 4, 4);
+        assert_eq!(active, 4);
+        assert_eq!(idx, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn plan_with_single_batch_variant() {
+        // only one exported variant: both phases run at it, never shrink
+        let p = TwoTierPlan::plan(8, 2, &[8], true).unwrap();
+        assert_eq!((p.b1, p.b2, p.shrink), (8, 8, false));
+        assert_eq!(p.completion_batch(), 8);
+        // a single variant smaller than N is a planning error, not a panic
+        assert!(TwoTierPlan::plan(16, 2, &[8], true).is_err());
+        // keep larger than any variant errors too (guards kv_resize)
+        assert!(TwoTierPlan::plan(8, 9, &[8], true).is_err());
+    }
+
+    #[test]
     fn prop_expansion_indices_valid() {
         check_simple(
             "expansion-valid",

@@ -6,6 +6,14 @@
 //! expanded into M children each. The only difference in Algorithm 3
 //! (`early_reject`) is the mid-step partial-reward checkpoint and the
 //! two-tier batch shrink for the completion phase.
+//!
+//! Since the fleet scheduler landed, the blocking `solve_*` entry points
+//! are thin drivers over [`crate::coordinator::task::SolveTask`], the
+//! resumable state machine that yields between engine calls so many
+//! in-flight solves can share one shard's engine loop. `SearchCtx` owns
+//! all per-problem state (no engine borrow) and every engine-touching
+//! method takes `&Engine` explicitly, which is what makes a parked task
+//! storable in a fleet slot table.
 
 use std::time::Instant;
 
@@ -13,12 +21,12 @@ use crate::config::SearchConfig;
 use crate::coordinator::beam::{Beam, BeamSet};
 use crate::coordinator::flops::FlopsLedger;
 use crate::coordinator::sampler;
-use crate::coordinator::scheduler;
+use crate::coordinator::scheduler::{self, TwoTierPlan};
 use crate::coordinator::scorer;
+use crate::coordinator::task::SolveTask;
 use crate::log_debug;
 use crate::runtime::{Engine, KvSet};
 use crate::util::error::Result;
-use crate::util::rng::Rng;
 use crate::workload::Problem;
 
 /// Result of solving one problem.
@@ -34,12 +42,13 @@ pub struct SolveOutcome {
     pub finished_beams: usize,
 }
 
-/// Per-problem search state shared by both algorithms.
-pub(crate) struct SearchCtx<'a> {
-    pub engine: &'a Engine,
-    pub lm_ckpt: &'a str,
-    pub prm_ckpt: &'a str,
-    pub cfg: &'a SearchConfig,
+/// Per-problem search state shared by both algorithms. Owns its config
+/// and checkpoint names so a parked [`SolveTask`] carries everything it
+/// needs between `advance` calls.
+pub(crate) struct SearchCtx {
+    pub lm_ckpt: String,
+    pub prm_ckpt: String,
+    pub cfg: SearchConfig,
     pub temp: f32,
     pub lm_kv: KvSet,
     pub prm_kv: KvSet,
@@ -59,14 +68,25 @@ pub(crate) enum PhaseTarget {
     Boundary,
 }
 
-impl<'a> SearchCtx<'a> {
+/// Outcome of one lockstep decode block within a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum DecodeTick {
+    /// Every beam satisfies the phase target; the phase is complete.
+    Done,
+    /// The KV cache cannot fit another block; caller finalizes early.
+    Exhausted,
+    /// One block was decoded; more ticks needed.
+    Progress,
+}
+
+impl SearchCtx {
     /// Prefill both models, broadcast to the b1 variant, sample first tokens.
     pub fn init(
-        engine: &'a Engine,
-        lm_ckpt: &'a str,
-        prm_ckpt: &'a str,
+        engine: &Engine,
+        lm_ckpt: &str,
+        prm_ckpt: &str,
         problem: &Problem,
-        cfg: &'a SearchConfig,
+        cfg: &SearchConfig,
         temp: f32,
     ) -> Result<Self> {
         let lm_arch = engine.manifest.arch_for_checkpoint(lm_ckpt)?;
@@ -85,7 +105,7 @@ impl<'a> SearchCtx<'a> {
         ledger.call();
         ledger.call();
 
-        let mut rng = Rng::new(cfg.seed ^ hash_problem(problem));
+        let mut rng = crate::util::rng::Rng::new(cfg.seed ^ hash_problem(problem));
         let first = sampler::sample_first_tokens(&logits, b1, temp, &mut rng);
         let beams: Vec<Beam> = first
             .iter()
@@ -100,10 +120,9 @@ impl<'a> SearchCtx<'a> {
             .collect();
 
         Ok(SearchCtx {
-            engine,
-            lm_ckpt,
-            prm_ckpt,
-            cfg,
+            lm_ckpt: lm_ckpt.to_string(),
+            prm_ckpt: prm_ckpt.to_string(),
+            cfg: cfg.clone(),
             temp,
             lm_kv,
             prm_kv,
@@ -128,51 +147,61 @@ impl<'a> SearchCtx<'a> {
         }
     }
 
+    /// Run one lockstep decode block toward `target` — the resumable unit
+    /// the fleet scheduler interleaves across requests. Beams that exceed
+    /// `max_step_tokens` without a boundary are killed (runaway guard).
+    pub fn decode_tick(&mut self, engine: &Engine, target: PhaseTarget) -> Result<DecodeTick> {
+        let pending: Vec<usize> = (0..self.beams.beams.len())
+            .filter(|&i| self.phase_pending(&self.beams.beams[i], target))
+            .collect();
+        if pending.is_empty() {
+            return Ok(DecodeTick::Done);
+        }
+        if self.lm_kv.remaining() < self.decode_block {
+            log_debug!("LM KV cache exhausted; stopping decode phase");
+            return Ok(DecodeTick::Exhausted);
+        }
+        let b = self.lm_kv.batch;
+        let prev: Vec<i32> = self.beams.beams.iter().map(|bm| bm.pending).collect();
+        let keys: Vec<u64> = self.beams.beams.iter().map(|bm| bm.key).collect();
+        let key_mat = sampler::decode_keys(&keys, self.call_counter);
+        self.call_counter += 1;
+        let old_frontier = self.lm_kv.pos_phys;
+        let sampled =
+            engine.lm_decode_block(&self.lm_ckpt, &mut self.lm_kv, &prev, self.temp, &key_mat)?;
+        self.ledger.call();
+        debug_assert_eq!(sampled.len(), b * self.decode_block);
+        for &slot in &pending {
+            let blk = &sampled[slot * self.decode_block..(slot + 1) * self.decode_block];
+            let beam = &mut self.beams.beams[slot];
+            let (fed, boundary) = beam.accept_block(blk);
+            self.lm_kv.commit(slot, old_frontier, fed);
+            self.ledger.lm_decode(fed);
+            if boundary.is_none()
+                && beam.current_step_len() >= self.cfg.max_step_tokens
+                && matches!(target, PhaseTarget::Boundary)
+            {
+                beam.dead = true; // runaway: never closed the step
+            }
+        }
+        Ok(DecodeTick::Progress)
+    }
+
     /// Run lockstep decode blocks until every beam satisfies `target`.
-    /// Beams that exceed `max_step_tokens` without a boundary are killed
-    /// (runaway guard). Returns false if the KV cache ran out (caller
-    /// finalizes with what it has).
-    pub fn decode_phase(&mut self, target: PhaseTarget) -> Result<bool> {
+    /// Returns false if the KV cache ran out (caller finalizes with what
+    /// it has). Blocking form of [`SearchCtx::decode_tick`].
+    pub fn decode_phase(&mut self, engine: &Engine, target: PhaseTarget) -> Result<bool> {
         loop {
-            let pending: Vec<usize> = (0..self.beams.beams.len())
-                .filter(|&i| self.phase_pending(&self.beams.beams[i], target))
-                .collect();
-            if pending.is_empty() {
-                return Ok(true);
-            }
-            if self.lm_kv.remaining() < self.decode_block {
-                log_debug!("LM KV cache exhausted; stopping decode phase");
-                return Ok(false);
-            }
-            let b = self.lm_kv.batch;
-            let prev: Vec<i32> = self.beams.beams.iter().map(|bm| bm.pending).collect();
-            let keys: Vec<u64> = self.beams.beams.iter().map(|bm| bm.key).collect();
-            let key_mat = sampler::decode_keys(&keys, self.call_counter);
-            self.call_counter += 1;
-            let old_frontier = self.lm_kv.pos_phys;
-            let sampled =
-                self.engine
-                    .lm_decode_block(self.lm_ckpt, &mut self.lm_kv, &prev, self.temp, &key_mat)?;
-            self.ledger.call();
-            debug_assert_eq!(sampled.len(), b * self.decode_block);
-            for &slot in &pending {
-                let blk = &sampled[slot * self.decode_block..(slot + 1) * self.decode_block];
-                let beam = &mut self.beams.beams[slot];
-                let (fed, boundary) = beam.accept_block(blk);
-                self.lm_kv.commit(slot, old_frontier, fed);
-                self.ledger.lm_decode(fed);
-                if boundary.is_none()
-                    && beam.current_step_len() >= self.cfg.max_step_tokens
-                    && matches!(target, PhaseTarget::Boundary)
-                {
-                    beam.dead = true; // runaway: never closed the step
-                }
+            match self.decode_tick(engine, target)? {
+                DecodeTick::Done => return Ok(true),
+                DecodeTick::Exhausted => return Ok(false),
+                DecodeTick::Progress => {}
             }
         }
     }
 
     /// Drain PRM backlogs (scores for all clean tokens).
-    pub fn score_catch_up(&mut self) -> Result<bool> {
+    pub fn score_catch_up(&mut self, engine: &Engine) -> Result<bool> {
         // bound: each round advances the PRM frontier by score_block
         let max_backlog = self
             .beams
@@ -182,14 +211,14 @@ impl<'a> SearchCtx<'a> {
             .map(|b| b.gen.len() - b.prm_fed)
             .max()
             .unwrap_or(0);
-        let rounds = max_backlog.div_ceil(self.engine.manifest.score_block);
-        if self.prm_kv.remaining() < rounds * self.engine.manifest.score_block {
+        let rounds = max_backlog.div_ceil(engine.manifest.score_block);
+        if self.prm_kv.remaining() < rounds * engine.manifest.score_block {
             log_debug!("PRM KV cache exhausted; stopping scoring");
             return Ok(false);
         }
         scorer::catch_up(
-            self.engine,
-            self.prm_ckpt,
+            engine,
+            &self.prm_ckpt,
             &mut self.prm_kv,
             &mut self.beams,
             &mut self.ledger,
@@ -209,14 +238,14 @@ impl<'a> SearchCtx<'a> {
 
     /// Expand `survivors` (slot ids, best-first) into M children each,
     /// refilling all b1 slots. Device gather + host permute, both models.
-    pub fn expand(&mut self, survivors: &[usize]) -> Result<()> {
+    pub fn expand(&mut self, engine: &Engine, survivors: &[usize]) -> Result<()> {
         let b1 = self.lm_kv.batch;
         let keep = survivors.len();
         // compact order: survivors first (children map onto them)
         let (rel_idx, active) = scheduler::expansion_indices(keep, self.cfg.m_expand, b1);
         let idx: Vec<i32> = rel_idx.iter().map(|&r| survivors[r as usize] as i32).collect();
-        self.engine.kv_gather(self.lm_ckpt, &mut self.lm_kv, &idx)?;
-        self.engine.kv_gather(self.prm_ckpt, &mut self.prm_kv, &idx)?;
+        engine.kv_gather(&self.lm_ckpt, &mut self.lm_kv, &idx)?;
+        engine.kv_gather(&self.prm_ckpt, &mut self.prm_kv, &idx)?;
         self.ledger.call();
         self.ledger.call();
         let key_base = self.call_counter.wrapping_mul(0x2545F4914F6CDD1D) ^ self.cfg.seed;
@@ -228,13 +257,62 @@ impl<'a> SearchCtx<'a> {
         Ok(())
     }
 
+    /// Compact `survivors` into the b2 variant for the ER completion
+    /// phase (two-tier shrink): resize both model caches, permute beams,
+    /// and mark padding slots dead.
+    pub fn shrink_to_b2(
+        &mut self,
+        engine: &Engine,
+        survivors: &[usize],
+        plan: TwoTierPlan,
+    ) -> Result<()> {
+        let mut idx: Vec<i32> = survivors.iter().map(|&s| s as i32).collect();
+        idx.resize(plan.b2, *idx.first().unwrap_or(&0));
+        self.lm_kv = engine.kv_resize(&self.lm_ckpt, &self.lm_kv, &idx, plan.b2)?;
+        self.prm_kv = engine.kv_resize(&self.prm_ckpt, &self.prm_kv, &idx, plan.b2)?;
+        self.ledger.call();
+        self.ledger.call();
+        let key_base = self.call_counter.wrapping_mul(0x9E3779B97F4A7C15) ^ self.cfg.seed;
+        self.beams.permute(&idx, key_base);
+        for (slot, beam) in self.beams.beams.iter_mut().enumerate() {
+            if slot >= survivors.len() {
+                beam.dead = true; // padding slots
+            }
+        }
+        Ok(())
+    }
+
+    /// Grow b2 back to b1 with the expansion mapping folded into one
+    /// resize (ER expansion after a shrunk completion phase). `order` is
+    /// the surviving slots best-first.
+    pub fn expand_from_b2(
+        &mut self,
+        engine: &Engine,
+        order: &[usize],
+        plan: TwoTierPlan,
+    ) -> Result<()> {
+        let (rel, active) = scheduler::expansion_indices(order.len(), self.cfg.m_expand, plan.b1);
+        let idx: Vec<i32> = rel.iter().map(|&r| order[r as usize] as i32).collect();
+        self.lm_kv = engine.kv_resize(&self.lm_ckpt, &self.lm_kv, &idx, plan.b1)?;
+        self.prm_kv = engine.kv_resize(&self.prm_ckpt, &self.prm_kv, &idx, plan.b1)?;
+        self.ledger.call();
+        self.ledger.call();
+        let key_base = self.call_counter.wrapping_mul(0x2545F4914F6CDD1D) ^ self.cfg.seed;
+        self.beams.permute(&idx, key_base);
+        for (slot, beam) in self.beams.beams.iter_mut().enumerate() {
+            beam.dead = slot >= active;
+            beam.finished = false;
+        }
+        Ok(())
+    }
+
     /// Wrap up: pick the best candidate among done + pool.
     pub fn finish(mut self, problem: &Problem, t0: Instant, steps: usize) -> SolveOutcome {
         self.harvest_finished();
-        let best_done = self
-            .done
-            .iter()
-            .max_by(|a, b| a.beam_reward().partial_cmp(&b.beam_reward()).unwrap());
+        let best_done = self.done.iter().max_by(|a, b| {
+            crate::coordinator::policy::rankable(a.beam_reward())
+                .total_cmp(&crate::coordinator::policy::rankable(b.beam_reward()))
+        });
         let best = match best_done {
             Some(b) => Some(b),
             None => self.beams.best(),
@@ -275,36 +353,6 @@ pub fn solve_vanilla(
     cfg: &SearchConfig,
     temp: f32,
 ) -> Result<SolveOutcome> {
-    cfg.validate()?;
-    let t0 = Instant::now();
-    let mut ctx = SearchCtx::init(engine, lm_ckpt, prm_ckpt, problem, cfg, temp)?;
-    let mut steps = 0;
-    for _ in 0..cfg.max_steps {
-        // 1. every beam samples a full step
-        let ok = ctx.decode_phase(PhaseTarget::Boundary)?;
-        // 2. PRM scores the completed steps
-        let ok2 = ctx.score_catch_up()?;
-        ctx.harvest_finished();
-        if !ok || !ok2 {
-            break;
-        }
-        steps += 1;
-        // 3. rank by the new step's reward, keep top N/M
-        let mut scored: Vec<(usize, f32)> = Vec::new();
-        for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
-            if beam.active() && beam.awaiting_finalize {
-                let r = beam.finalize_step(cfg.agg);
-                scored.push((slot, r));
-            }
-        }
-        if scored.is_empty() {
-            break; // every beam finished or died
-        }
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        let survivors: Vec<usize> =
-            scored.iter().take(cfg.keep()).map(|&(s, _)| s).collect();
-        // 4. expand survivors x M
-        ctx.expand(&survivors)?;
-    }
-    Ok(ctx.finish(problem, t0, steps))
+    let task = SolveTask::vanilla(problem.clone(), lm_ckpt, prm_ckpt, cfg, temp)?;
+    task.run_to_completion(engine)
 }

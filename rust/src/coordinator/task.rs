@@ -1,0 +1,434 @@
+//! Resumable solve tasks — the state machine the fleet scheduler drives.
+//!
+//! A [`SolveTask`] is one request's beam search reified as an explicit
+//! state machine: `init → phase-A decode → reject → phase-B decode →
+//! finalize/expand → done` for early rejection, `init → decode → select →
+//! done` for the vanilla baseline. Each [`SolveTask::advance`] call does a
+//! *bounded* amount of engine work (one lockstep decode block, one scoring
+//! catch-up, one reject/expand transition) and returns, so a shard thread
+//! can interleave many in-flight tasks on one engine instead of running
+//! each request to completion back to back.
+//!
+//! Determinism contract: a task performs exactly the same engine-call
+//! sequence, in the same order, as the blocking `solve_*` functions did —
+//! all of its state (KV caches, RNG streams, FLOPs ledger) is private to
+//! the task, so the resulting [`SolveOutcome`] is byte-identical (modulo
+//! wall-clock) no matter how many other tasks are interleaved between its
+//! `advance` calls. The integration suite pins this down.
+
+use std::time::Instant;
+
+use crate::config::{Aggregation, SearchConfig};
+use crate::coordinator::beam::BeamSet;
+use crate::coordinator::policy::RejectPolicy;
+use crate::coordinator::scheduler::TwoTierPlan;
+use crate::coordinator::search::{DecodeTick, PhaseTarget, SearchCtx, SolveOutcome};
+use crate::runtime::Engine;
+use crate::util::error::{Error, Result};
+use crate::workload::Problem;
+
+/// What one `advance` call produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Progress {
+    /// More engine work remains; call `advance` again.
+    Working,
+    /// The task is finished; collect the result with `take_outcome`.
+    Done,
+}
+
+/// Which decoder drives the task.
+#[derive(Debug, Clone, Copy)]
+enum Mode {
+    Vanilla,
+    Er { policy: RejectPolicy, two_tier: bool },
+}
+
+/// The resumable-solve state. Decode states tick one block per advance;
+/// host-side transitions (reject, finalize, expand) are one advance each.
+#[derive(Debug, Clone, Copy)]
+enum State {
+    Init,
+    // vanilla: decode to boundary, score, select + expand
+    VDecode,
+    VScore { decode_ok: bool },
+    VSelect,
+    // early rejection: prefix decode, score, reject (+shrink),
+    // completion decode, score, finalize (+expand)
+    ADecode,
+    AScore { decode_ok: bool },
+    Reject,
+    BDecode { plan: TwoTierPlan },
+    BScore { plan: TwoTierPlan, decode_ok: bool },
+    Finalize { plan: TwoTierPlan },
+    Done,
+}
+
+/// One in-flight solve, parked between engine calls.
+///
+/// Invariant: `lm_ckpt`/`prm_ckpt`/`cfg`/`temp` are construction inputs
+/// and never mutate; after `Init`, `ctx` holds equal copies (a `SearchCtx`
+/// must be self-contained for its own methods). Reads through either are
+/// interchangeable — do not add mutation to one side only.
+pub struct SolveTask {
+    problem: Problem,
+    lm_ckpt: String,
+    prm_ckpt: String,
+    cfg: SearchConfig,
+    temp: f32,
+    mode: Mode,
+    state: State,
+    ctx: Option<SearchCtx>,
+    t0: Instant,
+    /// Steps counted the same way the blocking solvers counted them.
+    steps: usize,
+    /// Completed select/expand rounds (the blocking `for` loop index).
+    iters: usize,
+    outcome: Option<SolveOutcome>,
+}
+
+impl SolveTask {
+    /// Vanilla beam search (paper Algorithm 2) as a resumable task.
+    pub fn vanilla(
+        problem: Problem,
+        lm_ckpt: &str,
+        prm_ckpt: &str,
+        cfg: &SearchConfig,
+        temp: f32,
+    ) -> Result<SolveTask> {
+        cfg.validate()?;
+        Ok(SolveTask::new(problem, lm_ckpt, prm_ckpt, cfg, temp, Mode::Vanilla))
+    }
+
+    /// Early rejection (paper Algorithm 3) with the default top-N/M policy.
+    pub fn early_rejection(
+        problem: Problem,
+        lm_ckpt: &str,
+        prm_ckpt: &str,
+        cfg: &SearchConfig,
+        temp: f32,
+    ) -> Result<SolveTask> {
+        let policy = RejectPolicy::TopK { keep: cfg.keep() };
+        SolveTask::early_rejection_with_policy(problem, lm_ckpt, prm_ckpt, cfg, temp, policy, true)
+    }
+
+    /// Early rejection with a custom policy / two-tier toggle (ablations).
+    pub fn early_rejection_with_policy(
+        problem: Problem,
+        lm_ckpt: &str,
+        prm_ckpt: &str,
+        cfg: &SearchConfig,
+        temp: f32,
+        policy: RejectPolicy,
+        two_tier: bool,
+    ) -> Result<SolveTask> {
+        cfg.validate()?;
+        Ok(SolveTask::new(problem, lm_ckpt, prm_ckpt, cfg, temp, Mode::Er { policy, two_tier }))
+    }
+
+    fn new(
+        problem: Problem,
+        lm_ckpt: &str,
+        prm_ckpt: &str,
+        cfg: &SearchConfig,
+        temp: f32,
+        mode: Mode,
+    ) -> SolveTask {
+        SolveTask {
+            problem,
+            lm_ckpt: lm_ckpt.to_string(),
+            prm_ckpt: prm_ckpt.to_string(),
+            cfg: cfg.clone(),
+            temp,
+            mode,
+            state: State::Init,
+            ctx: None,
+            t0: Instant::now(),
+            steps: 0,
+            iters: 0,
+            outcome: None,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, State::Done)
+    }
+
+    /// The finished outcome; `None` until `advance` returned `Done` (or
+    /// after it has already been taken).
+    pub fn take_outcome(&mut self) -> Option<SolveOutcome> {
+        self.outcome.take()
+    }
+
+    /// Short state label for logs/metrics.
+    pub fn state_name(&self) -> &'static str {
+        match self.state {
+            State::Init => "init",
+            State::VDecode => "decode",
+            State::VScore { .. } => "score",
+            State::VSelect => "select",
+            State::ADecode => "phase_a",
+            State::AScore { .. } => "score_a",
+            State::Reject => "reject",
+            State::BDecode { .. } => "phase_b",
+            State::BScore { .. } => "score_b",
+            State::Finalize { .. } => "finalize",
+            State::Done => "done",
+        }
+    }
+
+    /// Drive the task to completion on one engine (the blocking path).
+    pub fn run_to_completion(mut self, engine: &Engine) -> Result<SolveOutcome> {
+        loop {
+            if let Progress::Done = self.advance(engine)? {
+                return self
+                    .take_outcome()
+                    .ok_or_else(|| Error::internal("finished task lost its outcome"));
+            }
+        }
+    }
+
+    fn ctx_mut(&mut self) -> &mut SearchCtx {
+        self.ctx.as_mut().expect("SolveTask advanced past Init without a SearchCtx")
+    }
+
+    /// Seal the outcome from the current search state.
+    fn complete(&mut self) -> Result<Progress> {
+        let ctx = self
+            .ctx
+            .take()
+            .ok_or_else(|| Error::internal("SolveTask completed without a SearchCtx"))?;
+        self.outcome = Some(ctx.finish(&self.problem, self.t0, self.steps));
+        self.state = State::Done;
+        Ok(Progress::Done)
+    }
+
+    /// Perform one bounded unit of work. Errors are terminal: the caller
+    /// should drop the task and surface the error.
+    pub fn advance(&mut self, engine: &Engine) -> Result<Progress> {
+        match self.state {
+            State::Done => Ok(Progress::Done),
+            State::Init => {
+                let ctx = SearchCtx::init(
+                    engine,
+                    &self.lm_ckpt,
+                    &self.prm_ckpt,
+                    &self.problem,
+                    &self.cfg,
+                    self.temp,
+                )?;
+                self.ctx = Some(ctx);
+                if self.cfg.max_steps == 0 {
+                    // parity with the blocking `for _ in 0..max_steps`
+                    // loops: zero iterations, finish on the sampled beams
+                    return self.complete();
+                }
+                self.state = match self.mode {
+                    Mode::Vanilla => State::VDecode,
+                    Mode::Er { .. } => State::ADecode,
+                };
+                Ok(Progress::Working)
+            }
+
+            // ---------------------------------------------------- vanilla
+            State::VDecode => {
+                match self.ctx_mut().decode_tick(engine, PhaseTarget::Boundary)? {
+                    DecodeTick::Progress => {}
+                    DecodeTick::Done => self.state = State::VScore { decode_ok: true },
+                    DecodeTick::Exhausted => self.state = State::VScore { decode_ok: false },
+                }
+                Ok(Progress::Working)
+            }
+            State::VScore { decode_ok } => {
+                let ok2 = self.ctx_mut().score_catch_up(engine)?;
+                self.ctx_mut().harvest_finished();
+                if !decode_ok || !ok2 {
+                    return self.complete();
+                }
+                self.steps += 1;
+                self.state = State::VSelect;
+                Ok(Progress::Working)
+            }
+            State::VSelect => {
+                let agg = self.cfg.agg;
+                let keep = self.cfg.keep();
+                let ctx = self.ctx_mut();
+                let mut scored: Vec<(usize, f32)> = Vec::new();
+                for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
+                    if beam.active() && beam.awaiting_finalize {
+                        let r = beam.finalize_step(agg);
+                        scored.push((slot, r));
+                    }
+                }
+                if scored.is_empty() {
+                    return self.complete(); // every beam finished or died
+                }
+                scored.sort_by(crate::coordinator::policy::rank_desc);
+                let survivors: Vec<usize> = scored.iter().take(keep).map(|&(s, _)| s).collect();
+                self.ctx_mut().expand(engine, &survivors)?;
+                self.iters += 1;
+                if self.iters >= self.cfg.max_steps {
+                    return self.complete();
+                }
+                self.state = State::VDecode;
+                Ok(Progress::Working)
+            }
+
+            // -------------------------------------------- early rejection
+            State::ADecode => {
+                let tau = self.cfg.tau;
+                match self.ctx_mut().decode_tick(engine, PhaseTarget::Prefix { tau })? {
+                    DecodeTick::Progress => {}
+                    DecodeTick::Done => self.state = State::AScore { decode_ok: true },
+                    DecodeTick::Exhausted => self.state = State::AScore { decode_ok: false },
+                }
+                Ok(Progress::Working)
+            }
+            State::AScore { decode_ok } => {
+                let ok2 = self.ctx_mut().score_catch_up(engine)?;
+                self.ctx_mut().harvest_finished();
+                if !decode_ok || !ok2 {
+                    return self.complete();
+                }
+                self.steps += 1;
+                self.state = State::Reject;
+                Ok(Progress::Working)
+            }
+            State::Reject => {
+                let Mode::Er { policy, two_tier } = self.mode else {
+                    return Err(Error::internal("vanilla task reached an ER state"));
+                };
+                let (tau, agg) = (self.cfg.tau, self.cfg.agg);
+                let scored = partial_scores(&self.ctx_mut().beams, tau, agg);
+                if scored.is_empty() {
+                    return self.complete(); // pool exhausted (all finished or dead)
+                }
+                let survivors = policy.select(&scored);
+                let ctx = self.ctx_mut();
+                for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
+                    if beam.active() && !survivors.contains(&slot) {
+                        beam.dead = true; // << the early rejection
+                    }
+                }
+                let plan = TwoTierPlan::plan(
+                    self.cfg.n_beams,
+                    survivors.len(),
+                    &engine.manifest.batch_variants,
+                    two_tier,
+                )?;
+                if plan.shrink {
+                    self.ctx_mut().shrink_to_b2(engine, &survivors, plan)?;
+                }
+                self.state = State::BDecode { plan };
+                Ok(Progress::Working)
+            }
+            State::BDecode { plan } => {
+                match self.ctx_mut().decode_tick(engine, PhaseTarget::Boundary)? {
+                    DecodeTick::Progress => {}
+                    DecodeTick::Done => self.state = State::BScore { plan, decode_ok: true },
+                    DecodeTick::Exhausted => self.state = State::BScore { plan, decode_ok: false },
+                }
+                Ok(Progress::Working)
+            }
+            State::BScore { plan, decode_ok } => {
+                let ok2 = self.ctx_mut().score_catch_up(engine)?;
+                self.ctx_mut().harvest_finished();
+                if !decode_ok || !ok2 {
+                    return self.complete();
+                }
+                self.state = State::Finalize { plan };
+                Ok(Progress::Working)
+            }
+            State::Finalize { plan } => {
+                let agg = self.cfg.agg;
+                let ctx = self.ctx_mut();
+                let mut final_survivors: Vec<(usize, f32)> = Vec::new();
+                for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
+                    if beam.active() && beam.awaiting_finalize {
+                        let r = beam.finalize_step(agg);
+                        final_survivors.push((slot, r));
+                    }
+                }
+                if final_survivors.is_empty() {
+                    return self.complete();
+                }
+                final_survivors.sort_by(crate::coordinator::policy::rank_desc);
+                let order: Vec<usize> = final_survivors.iter().map(|&(s, _)| s).collect();
+                if plan.shrink && self.ctx_mut().lm_kv.batch != plan.b1 {
+                    self.ctx_mut().expand_from_b2(engine, &order, plan)?;
+                } else {
+                    self.ctx_mut().expand(engine, &order)?;
+                }
+                self.iters += 1;
+                if self.iters >= self.cfg.max_steps {
+                    return self.complete();
+                }
+                self.state = State::ADecode;
+                Ok(Progress::Working)
+            }
+        }
+    }
+}
+
+/// Partial rewards of every live candidate after the prefix phase —
+/// the rejection decision's input. Empty when no beam is both active and
+/// fully scored, which is the zero-survivor guard that ends the search.
+pub fn partial_scores(beams: &BeamSet, tau: usize, agg: Aggregation) -> Vec<(usize, f32)> {
+    let mut scored = Vec::new();
+    for (slot, beam) in beams.beams.iter().enumerate() {
+        if beam.active() {
+            if let Some(p) = beam.partial_reward(tau, agg) {
+                scored.push((slot, p));
+            }
+        }
+    }
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer as tk;
+
+    fn beamset(n: usize) -> BeamSet {
+        BeamSet::new(n, tk::DIG0, 7)
+    }
+
+    #[test]
+    fn partial_scores_skips_dead_and_finished() {
+        let mut set = beamset(4);
+        for b in set.beams.iter_mut() {
+            b.scores = vec![0.9];
+        }
+        set.beams[1].dead = true;
+        set.beams[2].finished = true;
+        let scored = partial_scores(&set, 1, Aggregation::Min);
+        let slots: Vec<usize> = scored.iter().map(|&(s, _)| s).collect();
+        assert_eq!(slots, vec![0, 3]);
+    }
+
+    #[test]
+    fn partial_scores_empty_is_the_zero_survivor_guard() {
+        // every beam dead or finished -> no rejection input -> the search
+        // must complete instead of calling the policy on an empty slate
+        let mut set = beamset(3);
+        set.beams[0].dead = true;
+        set.beams[1].finished = true;
+        set.beams[2].dead = true;
+        assert!(partial_scores(&set, 4, Aggregation::Mean).is_empty());
+        // active beams whose scorer hasn't caught up are also excluded
+        let set2 = beamset(2); // fresh beams: 1 gen token, 0 scores
+        assert!(partial_scores(&set2, 4, Aggregation::Mean).is_empty());
+    }
+
+    #[test]
+    fn task_construction_validates_config() {
+        let p = Problem { v0: 5, ops: vec![crate::workload::OpStep { op: tk::PLUS, d: 3 }] };
+        // n_beams not divisible by m_expand -> construction must fail
+        let cfg = SearchConfig { n_beams: 10, m_expand: 4, ..SearchConfig::default() };
+        assert!(SolveTask::vanilla(p.clone(), "lm", "prm", &cfg, 0.5).is_err());
+        let task =
+            SolveTask::early_rejection(p, "lm", "prm", &SearchConfig::default(), 0.5).unwrap();
+        assert!(!task.is_done());
+        assert_eq!(task.state_name(), "init");
+    }
+}

@@ -1,0 +1,77 @@
+//! The fleet scheduler: continuous cross-request batching per shard.
+//!
+//! The sequential serve path runs each request to completion on its shard
+//! before touching the next one, so the compute that early rejection frees
+//! mid-step simply evaporates — and a long solve head-of-line blocks every
+//! request queued behind it. The fleet turns each shard thread into a
+//! continuous scheduler instead:
+//!
+//! * every in-flight request is a resumable
+//!   [`crate::coordinator::task::SolveTask`] parked in a **slot table**
+//!   (`--max-inflight` slots per shard);
+//! * the shard loop advances each occupied slot by one bounded unit of
+//!   engine work per round (one lockstep decode block, one scoring pass,
+//!   one reject/expand transition) — short requests overtake long ones
+//!   instead of waiting behind them;
+//! * a slot freed by completion, failure, or deadline abort is immediately
+//!   **backfilled** from the admission queue — the engine never idles
+//!   while work is waiting. Within a task, the early-rejection shrink
+//!   (phase B at b2 < b1) is exactly what makes interleaving profitable:
+//!   the rounds a request spends in its narrow completion phase are cheap,
+//!   so the freed capacity goes to other requests' wide prefix phases;
+//! * identical in-flight requests **coalesce**: solves are deterministic
+//!   for a fixed `(problem, config, seed)` (the LRU-cache contract), so a
+//!   duplicate admission rides the running task and the engine pays once;
+//! * the [`queue::AdmissionQueue`] enforces the fairness/deadline policy:
+//!   highest priority first, FIFO within a priority, with an aging guard
+//!   that force-schedules any request waiting longer than `fair_after_ms`
+//!   so low-priority work cannot starve, and per-request deadlines that
+//!   reject queued work (and abort in-flight work) past its budget with
+//!   HTTP 504.
+//!
+//! Determinism: a task owns all of its state (KV caches, RNG streams,
+//! ledger), so its [`crate::coordinator::search::SolveOutcome`] is
+//! byte-identical (modulo wall-clock) whether it ran alone or interleaved
+//! with any number of other tasks — the integration suite pins this.
+//!
+//! What this is *not* (yet): requests still decode in separate device
+//! batches. Merging concurrent requests' beams into one shared device
+//! batch needs KV-merge programs the artifact exporter does not emit;
+//! that follow-up is tracked in ROADMAP.md.
+
+pub mod queue;
+pub mod shard;
+pub mod stats;
+
+use crate::coordinator::search::SolveOutcome;
+
+pub use queue::{AdmissionQueue, FleetJob, TaskSpec};
+pub use shard::{drive, Poll};
+pub use stats::{FleetStats, FleetTotals};
+
+/// A completed solve plus its scheduling telemetry. `queue_wait_ms` is
+/// enqueue → admission (how long scheduling delayed the request), which
+/// clients subtract from end-to-end latency to get service time.
+#[derive(Debug, Clone)]
+pub struct Solved {
+    pub outcome: SolveOutcome,
+    pub queue_wait_ms: f64,
+}
+
+/// Fleet-mode knobs (per shard). The serve-wide default deadline lives on
+/// the pool (`PoolOptions::default_deadline_ms`) because both dispatch
+/// modes honor it, not just the fleet.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Slot-table size: how many requests one shard interleaves.
+    pub max_inflight: usize,
+    /// Aging guard: a queued request older than this is scheduled next
+    /// regardless of priority, so nothing starves.
+    pub fair_after_ms: u64,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions { max_inflight: 8, fair_after_ms: 500 }
+    }
+}

@@ -1,0 +1,321 @@
+//! Admission queue: the fairness/deadline policy in front of the slots.
+//!
+//! Scheduling rule, in priority order:
+//! 1. **Aging guard** — any job waiting longer than `fair_after` is
+//!    scheduled next (oldest first), regardless of priority. This bounds
+//!    starvation: sustained high-priority load can delay low-priority
+//!    work by at most `fair_after` plus one slot turnover.
+//! 2. **Priority** — higher `priority` first.
+//! 3. **FIFO** — arrival order within a priority class.
+//!
+//! Deadlines are absolute (`enqueued + deadline`); `expire` sweeps jobs
+//! whose budget elapsed while queued so they fail fast with 504 instead of
+//! wasting a slot. All methods take `now` explicitly, which keeps the
+//! policy deterministic and directly testable without sleeping.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::config::{SearchConfig, SearchMode};
+use crate::coordinator::task::SolveTask;
+use crate::fleet::Solved;
+use crate::util::error::Result;
+use crate::workload::Problem;
+
+/// Reply channel a solve result is delivered on.
+pub type ReplyTx = mpsc::Sender<Result<Solved>>;
+
+/// Everything needed to build a [`SolveTask`] shard-side. Host data only,
+/// so it crosses the HTTP-worker → shard-thread boundary (the task itself
+/// holds `!Send` device handles and never leaves the shard).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub problem: Problem,
+    pub mode: SearchMode,
+    pub lm: String,
+    pub prm: String,
+    pub cfg: SearchConfig,
+    pub temp: f32,
+}
+
+impl TaskSpec {
+    /// Instantiate the resumable task (validates the config).
+    pub fn build(&self) -> Result<SolveTask> {
+        match self.mode {
+            SearchMode::Vanilla => {
+                SolveTask::vanilla(self.problem.clone(), &self.lm, &self.prm, &self.cfg, self.temp)
+            }
+            SearchMode::EarlyRejection => SolveTask::early_rejection(
+                self.problem.clone(),
+                &self.lm,
+                &self.prm,
+                &self.cfg,
+                self.temp,
+            ),
+        }
+    }
+}
+
+/// One queued request: the task recipe plus its scheduling envelope.
+pub struct FleetJob {
+    pub spec: TaskSpec,
+    /// Coalescing key (the pool's cache key); `None` disables coalescing
+    /// for this job.
+    pub key: Option<String>,
+    pub enqueued: Instant,
+    /// Time budget from enqueue; `None` = unbounded.
+    pub deadline: Option<Duration>,
+    /// Higher runs first (0 = default class).
+    pub priority: i64,
+    pub reply: ReplyTx,
+}
+
+impl FleetJob {
+    /// Absolute expiry instant, if bounded.
+    pub fn deadline_at(&self) -> Option<Instant> {
+        self.deadline.map(|d| self.enqueued + d)
+    }
+
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline_at().map(|t| now >= t).unwrap_or(false)
+    }
+
+    /// How long this job has waited, in milliseconds.
+    pub fn waited_ms(&self, now: Instant) -> f64 {
+        now.saturating_duration_since(self.enqueued).as_secs_f64() * 1000.0
+    }
+}
+
+/// The per-shard admission queue. O(n) selection per pop — queues are
+/// bounded by the shard's capacity (tens of entries), so scan cost is
+/// noise next to one engine call.
+pub struct AdmissionQueue {
+    jobs: Vec<(u64, FleetJob)>,
+    next_seq: u64,
+    fair_after: Duration,
+}
+
+impl AdmissionQueue {
+    pub fn new(fair_after: Duration) -> AdmissionQueue {
+        AdmissionQueue { jobs: Vec::new(), next_seq: 0, fair_after }
+    }
+
+    pub fn push(&mut self, job: FleetJob) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.jobs.push((seq, job));
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Next job under the fairness policy (see module docs).
+    pub fn pop(&mut self, now: Instant) -> Option<FleetJob> {
+        if self.jobs.is_empty() {
+            return None;
+        }
+        // aging guard: oldest job past fair_after wins outright
+        let starving = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, j))| now.saturating_duration_since(j.enqueued) >= self.fair_after)
+            .min_by_key(|(_, (seq, _))| *seq)
+            .map(|(i, _)| i);
+        let pick = starving.unwrap_or_else(|| {
+            // highest priority, then arrival order
+            self.jobs
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (seq, j))| (std::cmp::Reverse(j.priority), *seq))
+                .map(|(i, _)| i)
+                .expect("non-empty queue")
+        });
+        Some(self.jobs.remove(pick).1)
+    }
+
+    /// Remove and return every queued job whose deadline has elapsed.
+    pub fn expire(&mut self, now: Instant) -> Vec<FleetJob> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.jobs.len() {
+            if self.jobs[i].1.expired(now) {
+                out.push(self.jobs.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Remove and return every queued job matching `pred` (used to
+    /// coalesce queued duplicates onto an in-flight task).
+    pub fn drain_matching(&mut self, mut pred: impl FnMut(&FleetJob) -> bool) -> Vec<FleetJob> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.jobs.len() {
+            if pred(&self.jobs[i].1) {
+                out.push(self.jobs.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer as tk;
+    use crate::workload::OpStep;
+
+    fn spec() -> TaskSpec {
+        TaskSpec {
+            problem: Problem { v0: 5, ops: vec![OpStep { op: tk::PLUS, d: 3 }] },
+            mode: SearchMode::EarlyRejection,
+            lm: "lm-concise".into(),
+            prm: "prm-large".into(),
+            cfg: SearchConfig::default(),
+            temp: 0.5,
+        }
+    }
+
+    fn job(
+        base: Instant,
+        key: &str,
+        priority: i64,
+        deadline_ms: Option<u64>,
+    ) -> (FleetJob, mpsc::Receiver<Result<Solved>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            FleetJob {
+                spec: spec(),
+                key: Some(key.to_string()),
+                enqueued: base,
+                deadline: deadline_ms.map(Duration::from_millis),
+                priority,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn key_of(j: &FleetJob) -> &str {
+        j.key.as_deref().unwrap()
+    }
+
+    #[test]
+    fn fifo_within_priority() {
+        let base = Instant::now();
+        let mut q = AdmissionQueue::new(Duration::from_millis(500));
+        let (a, _ra) = job(base, "a", 0, None);
+        let (b, _rb) = job(base, "b", 0, None);
+        let (c, _rc) = job(base, "c", 0, None);
+        q.push(a);
+        q.push(b);
+        q.push(c);
+        assert_eq!(key_of(&q.pop(base).unwrap()), "a");
+        assert_eq!(key_of(&q.pop(base).unwrap()), "b");
+        assert_eq!(key_of(&q.pop(base).unwrap()), "c");
+        assert!(q.pop(base).is_none());
+    }
+
+    #[test]
+    fn priority_beats_arrival_order() {
+        let base = Instant::now();
+        let mut q = AdmissionQueue::new(Duration::from_millis(500));
+        let (lo, _r1) = job(base, "lo", 0, None);
+        let (hi, _r2) = job(base, "hi", 5, None);
+        let (mid, _r3) = job(base, "mid", 2, None);
+        q.push(lo);
+        q.push(hi);
+        q.push(mid);
+        assert_eq!(key_of(&q.pop(base).unwrap()), "hi");
+        assert_eq!(key_of(&q.pop(base).unwrap()), "mid");
+        assert_eq!(key_of(&q.pop(base).unwrap()), "lo");
+    }
+
+    #[test]
+    fn aging_guard_prevents_starvation() {
+        let base = Instant::now();
+        let mut q = AdmissionQueue::new(Duration::from_millis(500));
+        let (old_lo, _r1) = job(base, "old-lo", 0, None);
+        let (fresh_hi, _r2) = job(base + Duration::from_millis(490), "hi", 9, None);
+        q.push(old_lo);
+        q.push(fresh_hi);
+        // before the guard trips, priority wins…
+        let now = base + Duration::from_millis(499);
+        assert_eq!(key_of(&q.pop(now).unwrap()), "hi");
+        let (hi2, _r3) = job(now, "hi2", 9, None);
+        q.push(hi2);
+        // …but once the low-priority job has waited fair_after, it goes
+        // first no matter what outranks it
+        let later = base + Duration::from_millis(501);
+        assert_eq!(key_of(&q.pop(later).unwrap()), "old-lo");
+        assert_eq!(key_of(&q.pop(later).unwrap()), "hi2");
+    }
+
+    #[test]
+    fn expire_sweeps_only_past_deadline() {
+        let base = Instant::now();
+        let mut q = AdmissionQueue::new(Duration::from_millis(500));
+        let (tight, _r1) = job(base, "tight", 0, Some(10));
+        let (loose, _r2) = job(base, "loose", 0, Some(10_000));
+        let (unbounded, _r3) = job(base, "unbounded", 0, None);
+        q.push(tight);
+        q.push(loose);
+        q.push(unbounded);
+        let expired = q.expire(base + Duration::from_millis(11));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(key_of(&expired[0]), "tight");
+        assert_eq!(q.len(), 2);
+        assert!(!q.pop(base).unwrap().expired(base));
+    }
+
+    #[test]
+    fn drain_matching_pulls_duplicates() {
+        let base = Instant::now();
+        let mut q = AdmissionQueue::new(Duration::from_millis(500));
+        let (a, _r1) = job(base, "dup", 0, None);
+        let (b, _r2) = job(base, "other", 0, None);
+        let (c, _r3) = job(base, "dup", 0, None);
+        q.push(a);
+        q.push(b);
+        q.push(c);
+        let dups = q.drain_matching(|j| j.key.as_deref() == Some("dup"));
+        assert_eq!(dups.len(), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(key_of(&q.pop(base).unwrap()), "other");
+    }
+
+    #[test]
+    fn job_deadline_accounting() {
+        let base = Instant::now();
+        let (j, _r) = job(base, "x", 0, Some(100));
+        assert!(!j.expired(base + Duration::from_millis(99)));
+        assert!(j.expired(base + Duration::from_millis(100)));
+        assert!((j.waited_ms(base + Duration::from_millis(250)) - 250.0).abs() < 1.0);
+        let (u, _r2) = job(base, "y", 0, None);
+        assert!(u.deadline_at().is_none());
+        assert!(!u.expired(base + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn spec_builds_a_task() {
+        let s = spec();
+        let t = s.build().unwrap();
+        assert!(!t.is_done());
+        // invalid configs surface at build, before a slot is occupied
+        let bad = TaskSpec {
+            cfg: SearchConfig { tau: 0, ..SearchConfig::default() },
+            ..spec()
+        };
+        assert!(bad.build().is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! The per-shard fleet loop: slot table + round-robin task advancement.
+//!
+//! One call to [`drive`] takes over a shard thread that owns an `Engine`
+//! and runs until its message source shuts down. Each scheduler round:
+//!
+//! 1. **Ingest** — drain newly arrived jobs into the admission queue
+//!    (blocking only when completely idle, so the loop never spins).
+//! 2. **Expire** — bounce queued jobs whose deadline elapsed (HTTP 504).
+//! 3. **Coalesce** — fold queued duplicates of an in-flight task onto it.
+//! 4. **Backfill** — admit queued jobs into free slots, building each a
+//!    resumable [`SolveTask`].
+//! 5. **Advance** — give every occupied slot one bounded unit of engine
+//!    work; completed/failed/expired tasks reply and free their slot for
+//!    the next round's backfill.
+//!
+//! The engine stays `!Send`-confined to this thread; only host-side job
+//! envelopes cross the channel.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::task::{Progress, SolveTask};
+use crate::fleet::queue::{AdmissionQueue, FleetJob, ReplyTx};
+use crate::fleet::stats::FleetStats;
+use crate::fleet::{FleetOptions, Solved};
+use crate::log_error;
+use crate::runtime::{Engine, EngineStats};
+use crate::util::error::Error;
+
+/// One poll of the shard's message source.
+pub enum Poll {
+    /// A new job arrived.
+    Job(Box<FleetJob>),
+    /// Graceful shutdown requested: finish in-flight + queued work, then
+    /// exit.
+    Shutdown,
+    /// Nothing waiting right now (non-blocking poll only).
+    Empty,
+    /// The channel is gone; exit after draining in-flight work.
+    Closed,
+}
+
+/// One request attached to a running task (the admitting job or a
+/// coalesced duplicate).
+struct Waiter {
+    reply: ReplyTx,
+    queue_wait_ms: f64,
+}
+
+/// An occupied slot.
+struct Running {
+    task: SolveTask,
+    key: Option<String>,
+    /// Latest deadline among attached requests; the task aborts only when
+    /// every rider's budget is spent.
+    deadline_at: Option<Instant>,
+    /// True once any attached request is unbounded (no deadline).
+    unbounded: bool,
+    primary: Waiter,
+    riders: Vec<Waiter>,
+}
+
+impl Running {
+    /// Fold another request's deadline into the task's abort threshold.
+    fn extend_deadline(&mut self, d: Option<Instant>) {
+        match d {
+            None => self.unbounded = true,
+            Some(t) => {
+                self.deadline_at = Some(match self.deadline_at {
+                    Some(cur) => cur.max(t),
+                    None => t,
+                });
+            }
+        }
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        !self.unbounded && self.deadline_at.map(|t| now >= t).unwrap_or(false)
+    }
+}
+
+/// Drive one shard's fleet loop until the source closes. `poll(true)`
+/// must block for the next message; `poll(false)` must return
+/// immediately. `solved`/`engine_stats` are the pool-level per-shard
+/// counters the sequential path also maintains.
+pub fn drive(
+    engine: &Engine,
+    opts: &FleetOptions,
+    stats: &FleetStats,
+    solved: &AtomicU64,
+    engine_stats: &Mutex<EngineStats>,
+    mut poll: impl FnMut(bool) -> Poll,
+) {
+    let n_slots = opts.max_inflight.max(1);
+    let mut slots: Vec<Option<Running>> = (0..n_slots).map(|_| None).collect();
+    let mut queue = AdmissionQueue::new(Duration::from_millis(opts.fair_after_ms.max(1)));
+    let mut inflight = 0usize;
+    let mut shutdown = false;
+
+    loop {
+        // ---- 1. ingest
+        if inflight == 0 && queue.is_empty() {
+            if shutdown {
+                break;
+            }
+            match poll(true) {
+                Poll::Job(j) => queue.push(*j),
+                Poll::Shutdown => shutdown = true,
+                Poll::Closed => break,
+                Poll::Empty => {}
+            }
+            continue; // re-check idle/shutdown with the new state
+        }
+        loop {
+            match poll(false) {
+                Poll::Job(j) => queue.push(*j),
+                Poll::Shutdown => shutdown = true,
+                Poll::Closed => {
+                    shutdown = true;
+                    break;
+                }
+                Poll::Empty => break,
+            }
+        }
+        let now = Instant::now();
+
+        // ---- 2. expire queued work
+        for job in queue.expire(now) {
+            stats.expired_total.fetch_add(1, Ordering::Relaxed);
+            let _ = job.reply.send(Err(Error::deadline(format!(
+                "spent {:.0}ms queued, budget was {}ms",
+                job.waited_ms(now),
+                job.deadline.map(|d| d.as_millis()).unwrap_or(0)
+            ))));
+        }
+
+        // ---- 3. coalesce queued duplicates onto in-flight tasks
+        let dups = queue.drain_matching(|j| {
+            j.key.is_some()
+                && slots
+                    .iter()
+                    .flatten()
+                    .any(|r| r.key.is_some() && r.key == j.key)
+        });
+        for job in dups {
+            let r = slots
+                .iter_mut()
+                .flatten()
+                .find(|r| r.key == job.key)
+                .expect("matched above");
+            r.extend_deadline(job.deadline_at());
+            r.riders.push(Waiter { reply: job.reply, queue_wait_ms: job.waited_ms(now) });
+            stats.coalesced_total.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // ---- 4. backfill free slots from the queue
+        while inflight < n_slots {
+            let Some(job) = queue.pop(now) else { break };
+            let wait_ms = job.waited_ms(now);
+            // a duplicate of a slot filled earlier this same round (burst
+            // of identical requests hitting an idle shard) rides it too —
+            // step 3 only sees tasks that were in flight before backfill
+            if job.key.is_some() {
+                if let Some(r) = slots.iter_mut().flatten().find(|r| r.key == job.key) {
+                    r.extend_deadline(job.deadline_at());
+                    r.riders.push(Waiter { reply: job.reply, queue_wait_ms: wait_ms });
+                    stats.coalesced_total.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            }
+            match job.spec.build() {
+                Err(e) => {
+                    stats.failed_total.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Err(e));
+                }
+                Ok(task) => {
+                    if inflight > 0 {
+                        stats.backfill_total.fetch_add(1, Ordering::Relaxed);
+                    }
+                    stats.admitted_total.fetch_add(1, Ordering::Relaxed);
+                    let idx = slots
+                        .iter()
+                        .position(Option::is_none)
+                        .expect("inflight < n_slots implies a free slot");
+                    let deadline_at = job.deadline_at();
+                    let mut running = Running {
+                        task,
+                        key: job.key,
+                        deadline_at: None,
+                        unbounded: false,
+                        primary: Waiter { reply: job.reply, queue_wait_ms: wait_ms },
+                        riders: Vec::new(),
+                    };
+                    running.extend_deadline(deadline_at);
+                    slots[idx] = Some(running);
+                    inflight += 1;
+                }
+            }
+        }
+
+        // ---- 5. advance every occupied slot by one unit of work
+        if inflight > 0 {
+            stats.record_round(inflight, n_slots);
+        }
+        for idx in 0..slots.len() {
+            let Some(r) = slots[idx].as_mut() else { continue };
+            if r.expired(Instant::now()) {
+                let r = slots[idx].take().expect("checked occupied");
+                inflight -= 1;
+                stats.expired_total.fetch_add(1, Ordering::Relaxed);
+                reply_error(r, Error::deadline("aborted mid-solve: deadline elapsed"));
+                continue;
+            }
+            match r.task.advance(engine) {
+                Ok(Progress::Working) => {}
+                Ok(Progress::Done) => {
+                    let mut r = slots[idx].take().expect("checked occupied");
+                    inflight -= 1;
+                    solved.fetch_add(1, Ordering::Relaxed);
+                    *engine_stats.lock().unwrap() = engine.stats();
+                    if r.expired(Instant::now()) {
+                        // budget blew during the final advance: the 504
+                        // contract beats returning a too-late 200
+                        stats.expired_total.fetch_add(1, Ordering::Relaxed);
+                        reply_error(
+                            r,
+                            Error::deadline("deadline elapsed during the final solve step"),
+                        );
+                        continue;
+                    }
+                    match r.task.take_outcome() {
+                        Some(out) => {
+                            stats.completed_total.fetch_add(1, Ordering::Relaxed);
+                            for w in r.riders {
+                                let _ = w.reply.send(Ok(Solved {
+                                    outcome: out.clone(),
+                                    queue_wait_ms: w.queue_wait_ms,
+                                }));
+                            }
+                            let _ = r.primary.reply.send(Ok(Solved {
+                                outcome: out,
+                                queue_wait_ms: r.primary.queue_wait_ms,
+                            }));
+                        }
+                        None => {
+                            stats.failed_total.fetch_add(1, Ordering::Relaxed);
+                            reply_error(r, Error::internal("finished task lost its outcome"));
+                        }
+                    }
+                }
+                Err(e) => {
+                    let r = slots[idx].take().expect("checked occupied");
+                    inflight -= 1;
+                    stats.failed_total.fetch_add(1, Ordering::Relaxed);
+                    *engine_stats.lock().unwrap() = engine.stats();
+                    log_error!("fleet task failed in state '{}': {e}", r.task.state_name());
+                    reply_error(r, e);
+                }
+            }
+        }
+        stats.inflight.store(inflight, Ordering::Relaxed);
+        stats.queued.store(queue.len(), Ordering::Relaxed);
+    }
+    stats.inflight.store(0, Ordering::Relaxed);
+    stats.queued.store(0, Ordering::Relaxed);
+}
+
+/// Deliver one error to every request attached to a slot. `Error` is not
+/// `Clone`, so riders get a reconstructed copy — same variant where the
+/// message suffices to rebuild it, so a deadline abort renders 504 for
+/// every attached request, never a retry-suggesting 500.
+fn reply_error(r: Running, e: Error) {
+    fn same_class(e: &Error) -> Error {
+        match e {
+            Error::Parse(m) => Error::Parse(m.clone()),
+            Error::Xla(m) => Error::Xla(m.clone()),
+            Error::Invalid(m) => Error::Invalid(m.clone()),
+            Error::Saturated(m) => Error::Saturated(m.clone()),
+            Error::Deadline(m) => Error::Deadline(m.clone()),
+            other => Error::Internal(other.to_string()),
+        }
+    }
+    for w in r.riders {
+        let _ = w.reply.send(Err(same_class(&e)));
+    }
+    let _ = r.primary.reply.send(Err(e));
+}

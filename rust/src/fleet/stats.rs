@@ -1,0 +1,119 @@
+//! Fleet telemetry: lock-free per-shard counters the serving metrics
+//! endpoint aggregates.
+//!
+//! All counters are plain atomics so the shard loop can bump them without
+//! taking a lock on its hot path; `/metrics` reads are racy snapshots,
+//! which is fine for gauges.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Counters for one fleet shard. The pool holds one `Arc<FleetStats>` per
+/// shard and renders them under `erprm_fleet_*`.
+#[derive(Debug, Default)]
+pub struct FleetStats {
+    /// Requests currently occupying a slot (gauge).
+    pub inflight: AtomicUsize,
+    /// Requests waiting in the admission queue (gauge).
+    pub queued: AtomicUsize,
+    /// Tasks admitted into a slot.
+    pub admitted_total: AtomicU64,
+    /// Admissions that joined a loop with other requests already in
+    /// flight — i.e. a slot was backfilled mid-run instead of the shard
+    /// starting from idle. The continuous-batching win in one number.
+    pub backfill_total: AtomicU64,
+    /// Duplicate requests that rode an identical in-flight task instead
+    /// of occupying a slot (single-flight coalescing).
+    pub coalesced_total: AtomicU64,
+    /// Requests rejected or aborted because their deadline elapsed.
+    pub expired_total: AtomicU64,
+    /// Tasks that ran to a successful outcome.
+    pub completed_total: AtomicU64,
+    /// Tasks that ended in an engine/validation error.
+    pub failed_total: AtomicU64,
+    /// Occupied-slot samples accumulated while the loop was busy…
+    pub occupied_slot_ticks: AtomicU64,
+    /// …out of this many slot samples (occupancy = occupied / total).
+    pub slot_ticks: AtomicU64,
+}
+
+/// A plain snapshot of the monotonic counters (for tests and `/metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetTotals {
+    pub admitted: u64,
+    pub backfill: u64,
+    pub coalesced: u64,
+    pub expired: u64,
+    pub completed: u64,
+    pub failed: u64,
+}
+
+impl FleetStats {
+    /// Mean slot occupancy while the shard loop was busy, in [0, 1].
+    /// Measures how full the slot table ran — i.e. how much cross-request
+    /// overlap backfill actually achieved — not idle time.
+    pub fn occupancy(&self) -> f64 {
+        let total = self.slot_ticks.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        self.occupied_slot_ticks.load(Ordering::Relaxed) as f64 / total as f64
+    }
+
+    /// Record one busy scheduler round: `occupied` of `slots` slots held
+    /// a task while the round ran.
+    pub fn record_round(&self, occupied: usize, slots: usize) {
+        self.occupied_slot_ticks.fetch_add(occupied as u64, Ordering::Relaxed);
+        self.slot_ticks.fetch_add(slots as u64, Ordering::Relaxed);
+    }
+
+    pub fn totals(&self) -> FleetTotals {
+        FleetTotals {
+            admitted: self.admitted_total.load(Ordering::Relaxed),
+            backfill: self.backfill_total.load(Ordering::Relaxed),
+            coalesced: self.coalesced_total.load(Ordering::Relaxed),
+            expired: self.expired_total.load(Ordering::Relaxed),
+            completed: self.completed_total.load(Ordering::Relaxed),
+            failed: self.failed_total.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold another shard's totals into an aggregate (for `/metrics`).
+    pub fn merge_totals(into: &mut FleetTotals, other: FleetTotals) {
+        into.admitted += other.admitted;
+        into.backfill += other.backfill;
+        into.coalesced += other.coalesced;
+        into.expired += other.expired;
+        into.completed += other.completed;
+        into.failed += other.failed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_is_ratio_of_busy_rounds() {
+        let s = FleetStats::default();
+        assert_eq!(s.occupancy(), 0.0, "no samples yet");
+        s.record_round(4, 4);
+        s.record_round(2, 4);
+        s.record_round(1, 4);
+        assert!((s.occupancy() - 7.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn totals_snapshot_and_merge() {
+        let s = FleetStats::default();
+        s.admitted_total.fetch_add(3, Ordering::Relaxed);
+        s.backfill_total.fetch_add(2, Ordering::Relaxed);
+        s.coalesced_total.fetch_add(1, Ordering::Relaxed);
+        let mut agg = FleetTotals::default();
+        FleetStats::merge_totals(&mut agg, s.totals());
+        FleetStats::merge_totals(&mut agg, s.totals());
+        assert_eq!(agg.admitted, 6);
+        assert_eq!(agg.backfill, 4);
+        assert_eq!(agg.coalesced, 2);
+        assert_eq!(agg.expired, 0);
+    }
+}

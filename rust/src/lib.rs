@@ -5,11 +5,13 @@
 //! Modeling"* (EMNLP 2025 Findings).
 //!
 //! Architecture (see `DESIGN.md`):
-//! * **L3 (this crate)** — engine shard pool + request router, dynamic two-tier batcher,
-//!   KV-cache slot manager, prefill/decode scheduler, vanilla PRM beam
-//!   search (paper Alg. 2) and the early-rejection search (paper Alg. 3),
-//!   analytic FLOPs ledger, HTTP serving front end. Python is never on the
-//!   request path.
+//! * **L3 (this crate)** — engine shard pool + request router, the fleet
+//!   scheduler (continuous cross-request batching with rejection-freed
+//!   slot backfill), dynamic two-tier batcher, KV-cache slot manager,
+//!   prefill/decode scheduler, vanilla PRM beam search (paper Alg. 2) and
+//!   the early-rejection search (paper Alg. 3) — both compiled to a
+//!   resumable `SolveTask` state machine — analytic FLOPs ledger, HTTP
+//!   serving front end. Python is never on the request path.
 //! * **L2/L1 (build-time Python)** — JAX transformer LM + PRM lowered to
 //!   HLO text with Pallas kernels inside; loaded here via the PJRT C API
 //!   (`runtime` module).
@@ -20,6 +22,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod fleet;
 pub mod harness;
 pub mod runtime;
 pub mod server;

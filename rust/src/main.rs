@@ -4,6 +4,7 @@
 //!   erprm info  --artifacts artifacts
 //!   erprm solve --artifacts artifacts --v0 61 --ops -5,*6,+4 --mode er --n 16 --tau 8
 //!   erprm serve --artifacts artifacts --addr 127.0.0.1:8377 --shards 4 --cache 128
+//!   erprm serve --artifacts artifacts --fleet --max-inflight 8 --deadline-ms 5000
 //!   erprm sweep --artifacts artifacts --bench satmath-s --n-list 4,8 --problems 10
 //!   erprm theory
 //!
@@ -15,9 +16,10 @@ use std::sync::Arc;
 
 use erprm::config::{SearchConfig, SearchMode, ServerConfig};
 use erprm::coordinator::{solve_early_rejection, solve_vanilla};
+use erprm::fleet::FleetOptions;
 use erprm::harness::{self, Cell};
 use erprm::runtime::Engine;
-use erprm::server::{http, metrics::Metrics, route, router::EnginePool};
+use erprm::server::{http, metrics::Metrics, route, router::EnginePool, PoolOptions};
 use erprm::sim;
 use erprm::tokenizer as tk;
 use erprm::util::benchkit::{fmt_flops, Table};
@@ -150,13 +152,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => ServerConfig::default_shards(),
         n => n,
     };
-    // HTTP workers gate request concurrency, so they must outnumber the
-    // shards or the pool can never be fully utilized.
-    let workers = args.get_usize_min("workers", shards + 2, 1)?;
+    // HTTP workers gate request concurrency. Fleet shards interleave
+    // max_inflight requests each, so the worker default scales with
+    // whichever concurrency the pool can actually absorb.
+    let fleet = args.flag("fleet") || scfg.fleet;
+    let max_inflight = args.get_usize_min("max-inflight", scfg.max_inflight, 1)?;
+    let deadline_ms = args.get_u64("deadline-ms", scfg.deadline_ms)?;
+    let worker_default = if fleet { shards * max_inflight + 2 } else { shards + 2 };
+    let workers = args.get_usize_min("workers", worker_default, 1)?;
     // --cache N sets the LRU solve-cache size; --cache 0 disables it.
     let cache = args.get_usize("cache", scfg.cache_entries)?;
     let defaults = SearchConfig::default();
-    let pool = EnginePool::spawn(dir, shards, capacity, cache)?;
+    let pool = EnginePool::spawn_with(
+        dir,
+        PoolOptions {
+            shards,
+            capacity,
+            cache_entries: cache,
+            default_deadline_ms: deadline_ms,
+            fleet: fleet.then(|| FleetOptions { max_inflight, ..FleetOptions::default() }),
+        },
+    )?;
     let metrics = Arc::new(Metrics::default());
     let tpool = ThreadPool::new(workers);
     let stop = Arc::new(AtomicBool::new(false));
@@ -171,9 +187,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Arc::clone(&stop),
         Arc::new(move |req| route(&p2, &m2, &d2, req)),
     )?;
+    let mode = if fleet {
+        format!("fleet: {max_inflight} in-flight/shard, default deadline {deadline_ms}ms")
+    } else {
+        format!("sequential dispatch, default deadline {deadline_ms}ms")
+    };
     println!(
         "erprm serving on http://{local}  ({} engine shards, {capacity} queue slots/shard, \
-         cache {cache})  (POST /solve, GET /metrics, GET /healthz)",
+         cache {cache}, {mode})  (POST /solve, GET /metrics, GET /healthz)",
         pool.n_shards()
     );
     // run until killed

@@ -3,10 +3,19 @@
 //! POST /solve
 //!   {"v0": 61, "ops": [["-",5],["*",6],["+",4]],
 //!    "mode": "er"|"vanilla", "n_beams": 16, "tau": 8,
-//!    "lm": "lm-concise", "prm": "prm-large"}       (mode.. optional)
+//!    "lm": "lm-concise", "prm": "prm-large",
+//!    "deadline_ms": 2000, "priority": 5}           (mode.. optional)
 //! -> {"answer": 40, "correct": null|bool, "reward": 0.93,
 //!     "flops": 1.2e9, "lm_flops": ..., "prm_flops": ...,
-//!     "steps": 4, "wall_ms": 812.3, "trace": "61-5:60 ..."}
+//!     "steps": 4, "wall_ms": 812.3, "queue_wait_ms": 3.1,
+//!     "trace": "61-5:60 ..."}
+//!
+//! `deadline_ms` bounds the request end to end (queued + solving); when
+//! it elapses the server answers **504**. `priority` orders admission in
+//! fleet mode (higher first; the aging guard prevents starvation).
+//! `queue_wait_ms` is scheduling delay — subtract it from `wall_ms`'s
+//! transport-inclusive sibling (client-measured latency) to separate
+//! queueing from compute.
 //!
 //! GET /healthz -> {"ok": true}
 //! GET /metrics -> text counters
@@ -27,6 +36,12 @@ pub struct SolveRequest {
     pub tau: usize,
     pub lm: String,
     pub prm: String,
+    /// End-to-end time budget; `None` = unbounded (or the serve-wide
+    /// fleet default). Not part of the cache key — it schedules the
+    /// solve, it doesn't change it.
+    pub deadline_ms: Option<u64>,
+    /// Admission priority (higher first, 0 = default class).
+    pub priority: i64,
 }
 
 impl SolveRequest {
@@ -83,6 +98,19 @@ pub fn parse_solve(body: &[u8], defaults: &SearchConfig) -> Result<SolveRequest>
         Some(m) => SearchMode::parse(m)?,
         None => defaults.mode,
     };
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_i64() {
+            Some(ms) if ms > 0 => Some(ms as u64),
+            _ => return Err(Error::invalid("deadline_ms must be a positive integer")),
+        },
+    };
+    let priority = match j.get("priority") {
+        None => 0,
+        Some(v) => v
+            .as_i64()
+            .ok_or_else(|| Error::parse("priority must be an integer"))?,
+    };
     Ok(SolveRequest {
         problem: Problem { v0, ops },
         mode,
@@ -90,10 +118,15 @@ pub fn parse_solve(body: &[u8], defaults: &SearchConfig) -> Result<SolveRequest>
         tau: j.get("tau").and_then(Json::as_usize).unwrap_or(defaults.tau),
         lm: j.get("lm").and_then(Json::as_str).unwrap_or("lm-concise").to_string(),
         prm: j.get("prm").and_then(Json::as_str).unwrap_or("prm-large").to_string(),
+        deadline_ms,
+        priority,
     })
 }
 
-pub fn render_solve(req: &SolveRequest, out: &SolveOutcome) -> String {
+/// Render a solve response. `queue_wait_ms` is the scheduling delay the
+/// pool measured (enqueue → dispatch/admission), so clients can tell a
+/// slow solve from a busy server.
+pub fn render_solve(req: &SolveRequest, out: &SolveOutcome, queue_wait_ms: f64) -> String {
     let r = out.ledger.report();
     Json::obj(vec![
         ("answer", out.answer.map(|a| Json::num(a as f64)).unwrap_or(Json::Null)),
@@ -105,6 +138,7 @@ pub fn render_solve(req: &SolveRequest, out: &SolveOutcome) -> String {
         ("prm_flops", Json::num(r.prm_flops)),
         ("steps", Json::num(out.steps_executed as f64)),
         ("wall_ms", Json::num(out.wall_s * 1000.0)),
+        ("queue_wait_ms", Json::num(queue_wait_ms)),
         ("finished_beams", Json::num(out.finished_beams as f64)),
         ("trace", Json::str(tk::detok(&out.best_trace))),
     ])
@@ -137,6 +171,23 @@ mod tests {
         let r = parse_solve(body, &defaults()).unwrap();
         assert_eq!(r.n_beams, defaults().n_beams);
         assert_eq!(r.lm, "lm-concise");
+        assert_eq!(r.deadline_ms, None, "no deadline unless requested");
+        assert_eq!(r.priority, 0, "default priority class");
+    }
+
+    #[test]
+    fn parse_deadline_and_priority() {
+        let body = br#"{"v0": 5, "ops": [["+",3]], "deadline_ms": 2500, "priority": -2}"#;
+        let r = parse_solve(body, &defaults()).unwrap();
+        assert_eq!(r.deadline_ms, Some(2500));
+        assert_eq!(r.priority, -2);
+        // zero/negative deadlines are configuration mistakes, not requests
+        assert!(parse_solve(br#"{"v0": 5, "ops": [["+",3]], "deadline_ms": 0}"#, &defaults())
+            .is_err());
+        assert!(parse_solve(br#"{"v0": 5, "ops": [["+",3]], "deadline_ms": -5}"#, &defaults())
+            .is_err());
+        assert!(parse_solve(br#"{"v0": 5, "ops": [["+",3]], "priority": "high"}"#, &defaults())
+            .is_err());
     }
 
     #[test]
@@ -178,10 +229,12 @@ mod tests {
             best_trace: vec![tk::ANS, tk::DIG0, tk::DIG0 + 8, tk::EOS],
             finished_beams: 2,
         };
-        let s = render_solve(&req, &out);
+        let s = render_solve(&req, &out, 12.5);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("answer").unwrap().as_i64(), Some(8));
         assert_eq!(j.get("correct").unwrap().as_bool(), Some(true));
         assert!(j.get("trace").unwrap().as_str().unwrap().contains("A08"));
+        let qw = j.get("queue_wait_ms").unwrap().as_f64().unwrap();
+        assert!((qw - 12.5).abs() < 1e-9, "queue wait must round-trip: {qw}");
     }
 }

@@ -6,6 +6,9 @@
 //! * parse/validation failures -> **400** (client mistake, don't retry)
 //! * pool saturation ([`crate::util::error::Error::Saturated`]) -> **503**
 //!   with `Retry-After` (server transient, retry later)
+//! * deadline expiry ([`crate::util::error::Error::Deadline`]) -> **504**
+//!   (the request's own budget elapsed; retrying with the same budget
+//!   will likely 504 again, so no `Retry-After` hint)
 //! * runtime faults (I/O, XLA) -> **500**
 
 use std::time::Instant;
@@ -52,14 +55,18 @@ pub fn route(
                     return error_response(&e);
                 }
             };
-            match pool.solve(parsed.clone(), defaults.clone()) {
-                Ok(out) => {
+            match pool.solve_timed(parsed.clone(), defaults.clone()) {
+                Ok(s) => {
                     metrics.record_ok(
                         t0.elapsed().as_secs_f64() * 1000.0,
-                        out.ledger.total_flops(),
-                        out.correct,
+                        s.queue_wait_ms,
+                        s.outcome.ledger.total_flops(),
+                        s.outcome.correct,
                     );
-                    http::Response::json(200, api::render_solve(&parsed, &out))
+                    http::Response::json(
+                        200,
+                        api::render_solve(&parsed, &s.outcome, s.queue_wait_ms),
+                    )
                 }
                 Err(e) => {
                     metrics.record_error(e.http_status());
@@ -88,5 +95,13 @@ mod tests {
         let r = error_response(&Error::parse("bad json"));
         assert_eq!(r.status, 400);
         assert!(r.headers.is_empty());
+    }
+
+    #[test]
+    fn deadline_renders_504_without_retry_after() {
+        let r = error_response(&Error::deadline("budget was 100ms"));
+        assert_eq!(r.status, 504);
+        assert!(r.headers.is_empty(), "504 is not a back-off-and-retry signal");
+        assert!(String::from_utf8(r.body).unwrap().contains("deadline"));
     }
 }

@@ -64,6 +64,7 @@ impl Response {
             429 => "429 Too Many Requests",
             500 => "500 Internal Server Error",
             503 => "503 Service Unavailable",
+            504 => "504 Gateway Timeout",
             _ => "200 OK",
         }
     }

@@ -1,9 +1,17 @@
-//! Serving metrics: counters + latency/FLOPs histograms, text-exposable.
+//! Serving metrics: counters + latency/queue-wait/FLOPs histograms,
+//! text-exposable.
 //!
 //! Error counters are split by class so backpressure (5xx, retryable) is
 //! distinguishable from client mistakes (4xx) on dashboards; pool-level
-//! gauges (per-shard queue depth, cache hits) are appended by
-//! `EnginePool::render_metrics`.
+//! gauges (per-shard queue depth, fleet slot occupancy, cache hits) are
+//! appended by `EnginePool::render_metrics`.
+//!
+//! Latency and queue wait are fixed-bucket histograms (0–60s in 100ms
+//! bins), so p50/p95/p99 tails are derivable on `/metrics` instead of the
+//! sums-only view that hid tail latency entirely. Queue wait is recorded
+//! separately from end-to-end latency: under load the difference between
+//! "the solver is slow" and "the queue is long" is the difference between
+//! adding shards and adding capacity.
 
 use std::sync::Mutex;
 
@@ -22,6 +30,7 @@ struct Inner {
     errors_5xx: u64,
     correct: u64,
     latency_ms: Histogram,
+    queue_wait_ms: Histogram,
     flops: Histogram,
     started: std::time::Instant,
 }
@@ -36,6 +45,7 @@ impl Default for Metrics {
                 errors_5xx: 0,
                 correct: 0,
                 latency_ms: Histogram::new(0.0, 60_000.0, 600),
+                queue_wait_ms: Histogram::new(0.0, 60_000.0, 600),
                 flops: Histogram::new(0.0, 1e12, 200),
                 started: std::time::Instant::now(),
             }),
@@ -44,11 +54,14 @@ impl Default for Metrics {
 }
 
 impl Metrics {
-    pub fn record_ok(&self, latency_ms: f64, flops: f64, correct: bool) {
+    /// Record a served request: end-to-end latency, time it spent queued
+    /// before a shard picked it up, compute spent, and correctness.
+    pub fn record_ok(&self, latency_ms: f64, queue_wait_ms: f64, flops: f64, correct: bool) {
         let mut m = self.inner.lock().unwrap();
         m.requests += 1;
         m.correct += correct as u64;
         m.latency_ms.record(latency_ms);
+        m.queue_wait_ms.record(queue_wait_ms);
         m.flops.record(flops);
     }
 
@@ -81,6 +94,11 @@ impl Metrics {
              erprm_latency_ms_mean {:.2}\n\
              erprm_latency_ms_p50 {:.2}\n\
              erprm_latency_ms_p95 {:.2}\n\
+             erprm_latency_ms_p99 {:.2}\n\
+             erprm_queue_wait_ms_mean {:.2}\n\
+             erprm_queue_wait_ms_p50 {:.2}\n\
+             erprm_queue_wait_ms_p95 {:.2}\n\
+             erprm_queue_wait_ms_p99 {:.2}\n\
              erprm_flops_mean {:.3e}\n",
             m.requests,
             m.errors,
@@ -92,6 +110,11 @@ impl Metrics {
             m.latency_ms.mean(),
             m.latency_ms.quantile(0.5),
             m.latency_ms.quantile(0.95),
+            m.latency_ms.quantile(0.99),
+            m.queue_wait_ms.mean(),
+            m.queue_wait_ms.quantile(0.5),
+            m.queue_wait_ms.quantile(0.95),
+            m.queue_wait_ms.quantile(0.99),
             m.flops.mean(),
         )
     }
@@ -106,6 +129,17 @@ impl Metrics {
         let m = self.inner.lock().unwrap();
         (m.errors_4xx, m.errors_5xx)
     }
+
+    /// (mean, p50, p95, p99) of recorded queue wait, for tests/reports.
+    pub fn queue_wait_summary(&self) -> (f64, f64, f64, f64) {
+        let m = self.inner.lock().unwrap();
+        (
+            m.queue_wait_ms.mean(),
+            m.queue_wait_ms.quantile(0.5),
+            m.queue_wait_ms.quantile(0.95),
+            m.queue_wait_ms.quantile(0.99),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -115,8 +149,8 @@ mod tests {
     #[test]
     fn records_and_renders() {
         let m = Metrics::default();
-        m.record_ok(12.0, 1e9, true);
-        m.record_ok(20.0, 2e9, false);
+        m.record_ok(12.0, 1.5, 1e9, true);
+        m.record_ok(20.0, 2.5, 2e9, false);
         m.record_error(400);
         let (req, err, corr) = m.snapshot();
         assert_eq!((req, err, corr), (3, 1, 1));
@@ -124,6 +158,8 @@ mod tests {
         assert!(text.contains("erprm_requests_total 3"));
         assert!(text.contains("erprm_errors_total 1"));
         assert!(text.contains("latency_ms_p50"));
+        assert!(text.contains("latency_ms_p99"));
+        assert!(text.contains("queue_wait_ms_p99"));
     }
 
     #[test]
@@ -137,5 +173,30 @@ mod tests {
         assert!(text.contains("erprm_errors_4xx_total 2"));
         assert!(text.contains("erprm_errors_5xx_total 1"));
         assert!(text.contains("erprm_errors_total 3"));
+    }
+
+    #[test]
+    fn tail_latency_is_derivable() {
+        // 99 fast requests and one slow one: p50 stays low, p99 sees the
+        // straggler — the sums-only view couldn't show this at all.
+        let m = Metrics::default();
+        for _ in 0..99 {
+            m.record_ok(100.0, 10.0, 1e9, true);
+        }
+        m.record_ok(5_000.0, 4_000.0, 1e9, true);
+        let text = m.render();
+        let grab = |key: &str| -> f64 {
+            text.lines()
+                .find(|l| l.starts_with(key))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| panic!("missing {key} in {text}"))
+        };
+        assert!(grab("erprm_latency_ms_p50") < 200.0);
+        assert!(grab("erprm_latency_ms_p99") > 1_000.0);
+        let (mean, p50, _p95, p99) = m.queue_wait_summary();
+        assert!(p50 < 100.0, "p50 queue wait {p50}");
+        assert!(p99 > 1_000.0, "p99 queue wait {p99}");
+        assert!(mean > 10.0 && mean < p99, "mean {mean} must sit between bulk and tail");
     }
 }

@@ -9,10 +9,16 @@
 //!   each of N shard threads owns its own engine; a least-loaded
 //!   dispatcher places requests onto per-shard bounded queues, rejecting
 //!   with `Error::Saturated` (HTTP 503) when all are full, and a
-//!   seed-stable LRU solve cache short-circuits repeated requests.
+//!   seed-stable LRU solve cache short-circuits repeated requests. With
+//!   `--fleet`, shard threads run the continuous scheduler in
+//!   [`crate::fleet`] instead of one-request-at-a-time dispatch:
+//!   `max_inflight` resumable solves interleave per shard, freed slots
+//!   backfill from the queue, duplicates coalesce, deadlines abort.
 //! * [`handler`] — the shared `/solve` / `/healthz` / `/metrics` routing
 //!   and error→status mapping used by `erprm serve` and the examples.
-//! * [`api`] — request/response JSON schema for `/solve`.
+//! * [`api`] — request/response JSON schema for `/solve`, including the
+//!   `deadline_ms`/`priority` scheduling envelope and the
+//!   `queue_wait_ms` telemetry field.
 
 pub mod api;
 pub mod handler;
@@ -21,4 +27,4 @@ pub mod metrics;
 pub mod router;
 
 pub use handler::{error_response, route};
-pub use router::EnginePool;
+pub use router::{EnginePool, PoolOptions};

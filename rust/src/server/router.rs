@@ -1,14 +1,24 @@
 //! The engine shard pool + request router.
 //!
 //! The PJRT engine is `!Send` (Rc-based client), so each engine lives on a
-//! dedicated *shard* thread that owns it outright and executes solve
-//! requests sequentially from its own bounded mpsc queue. [`EnginePool`]
-//! fronts N such shards with a least-loaded dispatcher: HTTP workers
-//! reserve a slot on the shallowest shard queue, enqueue the request, and
-//! block on a oneshot-style reply channel. When every shard queue is at
-//! capacity the pool rejects immediately with [`Error::Saturated`], which
-//! the HTTP layer renders as **503 Service Unavailable** (never 4xx — 400
-//! stays reserved for parse/validation mistakes).
+//! dedicated *shard* thread that owns it outright. [`EnginePool`] fronts N
+//! such shards with a least-loaded dispatcher: HTTP workers reserve a slot
+//! on the shallowest shard queue, enqueue the request, and block on a
+//! oneshot-style reply channel. When every shard queue is at capacity the
+//! pool rejects immediately with [`Error::Saturated`], which the HTTP
+//! layer renders as **503 Service Unavailable** (never 4xx — 400 stays
+//! reserved for parse/validation mistakes).
+//!
+//! A shard thread drains its queue in one of two modes:
+//!
+//! * **sequential** (the default): one request runs to completion before
+//!   the next is dequeued — simple, but a long solve head-of-line blocks
+//!   the queue and compute freed by early rejection mid-request is lost.
+//! * **fleet** (`--fleet`): the thread runs the continuous scheduler in
+//!   [`crate::fleet`] — up to `max_inflight` requests interleave as
+//!   resumable [`crate::coordinator::task::SolveTask`]s, slots freed by
+//!   completion or deadline abort are backfilled from the queue, and
+//!   identical in-flight requests coalesce onto one engine run.
 //!
 //! Queue-depth accounting is leak-proof by construction: the caller that
 //! reserves a slot holds a [`DepthGuard`] whose `Drop` releases it, so the
@@ -26,21 +36,33 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::config::SearchConfig;
+use crate::config::SearchMode;
 use crate::coordinator::search::SolveOutcome;
 use crate::coordinator::{solve_early_rejection, solve_vanilla};
-use crate::config::SearchMode;
+use crate::fleet::{self, FleetJob, FleetOptions, FleetStats, FleetTotals, Solved, TaskSpec};
 use crate::harness::temp_for;
 use crate::log_error;
 use crate::runtime::{Engine, EngineStats};
 use crate::server::api::SolveRequest;
 use crate::util::error::{Error, Result};
 
-type Reply = mpsc::Sender<Result<SolveOutcome>>;
+type Reply = mpsc::Sender<Result<Solved>>;
+
+/// One enqueued request: the parsed solve plus its scheduling envelope.
+struct SolveJob {
+    req: SolveRequest,
+    cfg: SearchConfig,
+    enqueued: Instant,
+    deadline: Option<Duration>,
+    priority: i64,
+    reply: Reply,
+}
 
 enum Msg {
-    Solve(SolveRequest, SearchConfig, Reply),
+    Solve(Box<SolveJob>),
     Shutdown,
 }
 
@@ -54,6 +76,8 @@ struct Shard {
     solved: Arc<AtomicU64>,
     /// Latest engine-stats snapshot published by the shard thread.
     stats: Arc<Mutex<EngineStats>>,
+    /// Fleet-mode telemetry (all-zero when the shard runs sequentially).
+    fstats: Arc<FleetStats>,
     /// Set when the shard thread is observed dead (send/reply failure);
     /// placement skips dead shards so they can't keep attracting traffic
     /// with their permanently-empty queues.
@@ -63,6 +87,8 @@ struct Shard {
 struct PoolInner {
     shards: Vec<Shard>,
     capacity: usize,
+    default_deadline_ms: u64,
+    fleet: Option<FleetOptions>,
     cache: Option<Mutex<SolveCache>>,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
@@ -73,6 +99,22 @@ struct PoolInner {
 #[derive(Clone)]
 pub struct EnginePool {
     inner: Arc<PoolInner>,
+}
+
+/// Everything `spawn_with` needs to build a pool.
+#[derive(Debug, Clone)]
+pub struct PoolOptions {
+    /// Engine shard threads.
+    pub shards: usize,
+    /// Queue slots per shard (must be positive).
+    pub capacity: usize,
+    /// LRU solve-cache entries; 0 disables caching.
+    pub cache_entries: usize,
+    /// Default per-request deadline (ms) applied when a request carries
+    /// none; 0 disables the default. Honored in both dispatch modes.
+    pub default_deadline_ms: u64,
+    /// `Some` switches every shard to the fleet scheduler.
+    pub fleet: Option<FleetOptions>,
 }
 
 /// RAII slot reservation against one shard's depth gauge. Dropping the
@@ -113,19 +155,38 @@ fn placement_order(depths: &[usize]) -> Vec<usize> {
 }
 
 impl EnginePool {
-    /// Spawn `n_shards` engine threads (each loads its own `Engine` from
-    /// `artifacts_dir`), with `capacity` queue slots per shard and an LRU
-    /// solve cache of `cache_entries` entries (0 disables caching).
-    /// Fails fast (in the caller) if any shard's artifacts are unloadable.
+    /// Spawn a sequential pool: `n_shards` engine threads (each loads its
+    /// own `Engine` from `artifacts_dir`), `capacity` queue slots per
+    /// shard, an LRU solve cache of `cache_entries` entries (0 disables).
     pub fn spawn(
         artifacts_dir: PathBuf,
         n_shards: usize,
         capacity: usize,
         cache_entries: usize,
     ) -> Result<EnginePool> {
-        let n_shards = n_shards.max(1);
-        if capacity == 0 {
+        EnginePool::spawn_with(
+            artifacts_dir,
+            PoolOptions {
+                shards: n_shards,
+                capacity,
+                cache_entries,
+                default_deadline_ms: 0,
+                fleet: None,
+            },
+        )
+    }
+
+    /// Spawn with full options (fleet mode included). Fails fast (in the
+    /// caller) if any shard's artifacts are unloadable.
+    pub fn spawn_with(artifacts_dir: PathBuf, opts: PoolOptions) -> Result<EnginePool> {
+        let n_shards = opts.shards.max(1);
+        if opts.capacity == 0 {
             return Err(Error::invalid("shard queue capacity must be positive"));
+        }
+        if let Some(f) = &opts.fleet {
+            if f.max_inflight == 0 {
+                return Err(Error::invalid("fleet max_inflight must be positive"));
+            }
         }
         let mut shards = Vec::with_capacity(n_shards);
         let mut joins = Vec::with_capacity(n_shards);
@@ -136,13 +197,25 @@ impl EnginePool {
             let depth = Arc::new(AtomicUsize::new(0));
             let solved = Arc::new(AtomicU64::new(0));
             let stats = Arc::new(Mutex::new(EngineStats::default()));
+            let fstats = Arc::new(FleetStats::default());
             let dir = artifacts_dir.clone();
             let solved2 = Arc::clone(&solved);
             let stats2 = Arc::clone(&stats);
+            let fstats2 = Arc::clone(&fstats);
+            let fleet_opts = opts.fleet.clone();
             let join = std::thread::Builder::new()
                 .name(format!("erprm-shard-{i}"))
-                .spawn(move || shard_main(i, dir, rx, ready_tx, solved2, stats2))?;
-            shards.push(Shard { tx, depth, solved, stats, dead: AtomicBool::new(false) });
+                .spawn(move || {
+                    shard_main(i, dir, rx, ready_tx, solved2, stats2, fleet_opts, fstats2)
+                })?;
+            shards.push(Shard {
+                tx,
+                depth,
+                solved,
+                stats,
+                fstats,
+                dead: AtomicBool::new(false),
+            });
             joins.push(join);
             readies.push(ready_rx);
         }
@@ -166,15 +239,17 @@ impl EnginePool {
             }
             return Err(e);
         }
-        let cache = if cache_entries > 0 {
-            Some(Mutex::new(SolveCache::new(cache_entries)))
+        let cache = if opts.cache_entries > 0 {
+            Some(Mutex::new(SolveCache::new(opts.cache_entries)))
         } else {
             None
         };
         Ok(EnginePool {
             inner: Arc::new(PoolInner {
                 shards,
-                capacity,
+                capacity: opts.capacity,
+                default_deadline_ms: opts.default_deadline_ms,
+                fleet: opts.fleet,
                 cache,
                 cache_hits: AtomicU64::new(0),
                 cache_misses: AtomicU64::new(0),
@@ -189,7 +264,13 @@ impl EnginePool {
     /// chosen shard thread turns out to be dead, the request fails over
     /// to the next live shard instead of surfacing the infrastructure
     /// fault to the client.
-    pub fn solve(&self, req: SolveRequest, mut cfg: SearchConfig) -> Result<SolveOutcome> {
+    pub fn solve(&self, req: SolveRequest, cfg: SearchConfig) -> Result<SolveOutcome> {
+        self.solve_timed(req, cfg).map(|s| s.outcome)
+    }
+
+    /// Like [`EnginePool::solve`], but also reports how long the request
+    /// waited for scheduling (`queue_wait_ms`; 0 on a cache hit).
+    pub fn solve_timed(&self, req: SolveRequest, mut cfg: SearchConfig) -> Result<Solved> {
         cfg.mode = req.mode;
         cfg.n_beams = req.n_beams;
         cfg.tau = req.tau;
@@ -198,7 +279,7 @@ impl EnginePool {
         if let Some(cache) = &self.inner.cache {
             if let Some(hit) = cache.lock().unwrap().get(&key) {
                 self.inner.cache_hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(hit);
+                return Ok(Solved { outcome: hit, queue_wait_ms: 0.0 });
             }
             self.inner.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
@@ -214,7 +295,7 @@ impl EnginePool {
                 }
                 Ok(out) => {
                     if let Some(cache) = &self.inner.cache {
-                        cache.lock().unwrap().put(key, out.clone());
+                        cache.lock().unwrap().put(key, out.outcome.clone());
                     }
                     return Ok(out);
                 }
@@ -243,7 +324,7 @@ impl EnginePool {
         cfg.validate()?;
         let guard = try_reserve(&self.inner.shards[idx].depth, self.inner.capacity)
             .ok_or_else(|| Error::saturated(format!("shard {idx} queue full")))?;
-        self.dispatch(idx, req, cfg, guard)
+        self.dispatch(idx, req, cfg, guard).map(|s| s.outcome)
     }
 
     /// Claim a queue slot on the shallowest live, non-full shard.
@@ -270,6 +351,16 @@ impl EnginePool {
         )))
     }
 
+    /// The deadline applied to a request: its own `deadline_ms` if given,
+    /// else the pool default (when nonzero). Applies in both modes —
+    /// sequential shards enforce it at dequeue and on completion, fleet
+    /// shards additionally abort mid-solve.
+    fn effective_deadline(&self, req: &SolveRequest) -> Option<Duration> {
+        req.deadline_ms
+            .or(Some(self.inner.default_deadline_ms).filter(|&ms| ms > 0))
+            .map(Duration::from_millis)
+    }
+
     /// Enqueue on shard `idx` and await the reply. The guard is held for
     /// the whole round trip, so the depth gauge releases on every exit
     /// path, including a dead shard thread — which is also marked dead
@@ -281,11 +372,19 @@ impl EnginePool {
         req: SolveRequest,
         cfg: SearchConfig,
         guard: DepthGuard,
-    ) -> Result<SolveOutcome> {
+    ) -> Result<Solved> {
         let _guard = guard;
         let shard = &self.inner.shards[idx];
         let (rtx, rrx) = mpsc::channel();
-        if shard.tx.send(Msg::Solve(req, cfg, rtx)).is_err() {
+        let job = SolveJob {
+            deadline: self.effective_deadline(&req),
+            priority: req.priority,
+            req,
+            cfg,
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        if shard.tx.send(Msg::Solve(Box::new(job))).is_err() {
             shard.dead.store(true, Ordering::Relaxed);
             return Err(Error::internal(format!("engine shard {idx} gone")));
         }
@@ -304,6 +403,21 @@ impl EnginePool {
 
     pub fn capacity_per_shard(&self) -> usize {
         self.inner.capacity
+    }
+
+    /// Whether shards run the fleet scheduler (vs sequential dispatch).
+    pub fn fleet_enabled(&self) -> bool {
+        self.inner.fleet.is_some()
+    }
+
+    /// Aggregate fleet counters across shards; `None` in sequential mode.
+    pub fn fleet_totals(&self) -> Option<FleetTotals> {
+        self.inner.fleet.as_ref()?;
+        let mut agg = FleetTotals::default();
+        for s in &self.inner.shards {
+            FleetStats::merge_totals(&mut agg, s.fstats.totals());
+        }
+        Some(agg)
     }
 
     /// Total reserved slots across all shards.
@@ -354,11 +468,37 @@ impl EnginePool {
         let mut out = String::new();
         out.push_str(&format!("erprm_pool_shards {}\n", self.n_shards()));
         out.push_str(&format!("erprm_pool_capacity_per_shard {}\n", self.inner.capacity));
+        out.push_str(&format!("erprm_fleet_enabled {}\n", self.fleet_enabled() as u8));
         let alive = self.shard_alive();
         for (i, (d, n)) in self.shard_depths().iter().zip(self.shard_solves()).enumerate() {
             out.push_str(&format!("erprm_shard_queue_depth{{shard=\"{i}\"}} {d}\n"));
             out.push_str(&format!("erprm_shard_solves_total{{shard=\"{i}\"}} {n}\n"));
             out.push_str(&format!("erprm_shard_alive{{shard=\"{i}\"}} {}\n", alive[i] as u8));
+        }
+        if self.fleet_enabled() {
+            for (i, s) in self.inner.shards.iter().enumerate() {
+                let f = &s.fstats;
+                out.push_str(&format!(
+                    "erprm_fleet_inflight{{shard=\"{i}\"}} {}\n",
+                    f.inflight.load(Ordering::Relaxed)
+                ));
+                out.push_str(&format!(
+                    "erprm_fleet_queued{{shard=\"{i}\"}} {}\n",
+                    f.queued.load(Ordering::Relaxed)
+                ));
+                out.push_str(&format!(
+                    "erprm_fleet_slot_occupancy{{shard=\"{i}\"}} {:.4}\n",
+                    f.occupancy()
+                ));
+            }
+            if let Some(t) = self.fleet_totals() {
+                out.push_str(&format!("erprm_fleet_admitted_total {}\n", t.admitted));
+                out.push_str(&format!("erprm_fleet_backfill_total {}\n", t.backfill));
+                out.push_str(&format!("erprm_fleet_coalesced_total {}\n", t.coalesced));
+                out.push_str(&format!("erprm_fleet_expired_total {}\n", t.expired));
+                out.push_str(&format!("erprm_fleet_completed_total {}\n", t.completed));
+                out.push_str(&format!("erprm_fleet_failed_total {}\n", t.failed));
+            }
         }
         let (hits, misses) = self.cache_counters();
         out.push_str(&format!("erprm_cache_hits_total {hits}\n"));
@@ -385,7 +525,9 @@ impl EnginePool {
 }
 
 /// Body of one shard thread: load the engine, then serve solves until
-/// shutdown. Publishes an engine-stats snapshot after every solve.
+/// shutdown — sequentially, or through the fleet scheduler when
+/// configured. Publishes an engine-stats snapshot after every solve.
+#[allow(clippy::too_many_arguments)]
 fn shard_main(
     idx: usize,
     artifacts_dir: PathBuf,
@@ -393,6 +535,8 @@ fn shard_main(
     ready_tx: mpsc::Sender<Result<()>>,
     solved: Arc<AtomicU64>,
     stats: Arc<Mutex<EngineStats>>,
+    fleet_opts: Option<FleetOptions>,
+    fstats: Arc<FleetStats>,
 ) {
     let engine = match Engine::load(&artifacts_dir) {
         Ok(e) => {
@@ -404,19 +548,84 @@ fn shard_main(
             return;
         }
     };
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Msg::Shutdown => break,
-            Msg::Solve(req, cfg, reply) => {
-                let res = run_solve(&engine, &req, &cfg);
-                solved.fetch_add(1, Ordering::Relaxed);
-                *stats.lock().unwrap() = engine.stats();
-                if let Err(e) = &res {
-                    log_error!("shard {idx}: solve failed: {e}");
+    match fleet_opts {
+        Some(opts) => fleet::drive(&engine, &opts, &fstats, &solved, &stats, |block| {
+            let msg = if block {
+                rx.recv().map_err(|_| mpsc::TryRecvError::Disconnected)
+            } else {
+                rx.try_recv()
+            };
+            match msg {
+                Ok(Msg::Solve(job)) => fleet::Poll::Job(Box::new(to_fleet_job(*job))),
+                Ok(Msg::Shutdown) => fleet::Poll::Shutdown,
+                Err(mpsc::TryRecvError::Empty) => fleet::Poll::Empty,
+                Err(mpsc::TryRecvError::Disconnected) => fleet::Poll::Closed,
+            }
+        }),
+        None => {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Shutdown => break,
+                    Msg::Solve(job) => {
+                        let now = Instant::now();
+                        let queue_wait_ms =
+                            now.saturating_duration_since(job.enqueued).as_secs_f64() * 1000.0;
+                        if let Some(d) = job.deadline {
+                            if now.saturating_duration_since(job.enqueued) >= d {
+                                let _ = job.reply.send(Err(Error::deadline(format!(
+                                    "spent {queue_wait_ms:.0}ms queued, budget was {}ms",
+                                    d.as_millis()
+                                ))));
+                                continue;
+                            }
+                        }
+                        let res = run_solve(&engine, &job.req, &job.cfg)
+                            .and_then(|outcome| {
+                                // a sequential solve can't be aborted
+                                // mid-flight, but the end-to-end 504
+                                // contract still holds: never a late 200
+                                match job.deadline {
+                                    Some(d) if job.enqueued.elapsed() >= d => {
+                                        Err(Error::deadline(format!(
+                                            "solve finished after the {}ms budget",
+                                            d.as_millis()
+                                        )))
+                                    }
+                                    _ => Ok(Solved { outcome, queue_wait_ms }),
+                                }
+                            });
+                        solved.fetch_add(1, Ordering::Relaxed);
+                        *stats.lock().unwrap() = engine.stats();
+                        if let Err(e) = &res {
+                            log_error!("shard {idx}: solve failed: {e}");
+                        }
+                        let _ = job.reply.send(res);
+                    }
                 }
-                let _ = reply.send(res);
             }
         }
+    }
+}
+
+/// Convert a pool job into the fleet scheduler's envelope. The coalescing
+/// key is the solve-cache key: equal keys are proven byte-identical, so
+/// riding a duplicate's task is exactly as correct as a cache hit.
+fn to_fleet_job(job: SolveJob) -> FleetJob {
+    let key = job.req.cache_key(&job.cfg);
+    FleetJob {
+        spec: TaskSpec {
+            problem: job.req.problem.clone(),
+            mode: job.cfg.mode,
+            lm: job.req.lm.clone(),
+            prm: job.req.prm.clone(),
+            temp: temp_for(&job.req.lm),
+            cfg: job.cfg,
+        },
+        key: Some(key),
+        enqueued: job.enqueued,
+        deadline: job.deadline,
+        priority: job.priority,
+        reply: job.reply,
     }
 }
 
@@ -524,8 +733,8 @@ impl<T> FifoQueue<T> {
 mod tests {
     use super::*;
     use crate::coordinator::flops::FlopsLedger;
-    use crate::workload::{OpStep, Problem};
     use crate::tokenizer as tk;
+    use crate::workload::{OpStep, Problem};
 
     #[test]
     fn fifo_order() {
@@ -543,6 +752,43 @@ mod tests {
     #[test]
     fn spawn_fails_fast_without_artifacts() {
         let r = EnginePool::spawn(PathBuf::from("/nonexistent-artifacts"), 2, 4, 0);
+        assert!(r.is_err());
+        let r = EnginePool::spawn_with(
+            PathBuf::from("/nonexistent-artifacts"),
+            PoolOptions {
+                shards: 1,
+                capacity: 4,
+                cache_entries: 0,
+                default_deadline_ms: 0,
+                fleet: Some(FleetOptions::default()),
+            },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn spawn_with_rejects_zero_knobs() {
+        let r = EnginePool::spawn_with(
+            PathBuf::from("/nonexistent-artifacts"),
+            PoolOptions {
+                shards: 1,
+                capacity: 0,
+                cache_entries: 0,
+                default_deadline_ms: 0,
+                fleet: None,
+            },
+        );
+        assert!(r.is_err());
+        let r = EnginePool::spawn_with(
+            PathBuf::from("/nonexistent-artifacts"),
+            PoolOptions {
+                shards: 1,
+                capacity: 4,
+                cache_entries: 0,
+                default_deadline_ms: 0,
+                fleet: Some(FleetOptions { max_inflight: 0, ..FleetOptions::default() }),
+            },
+        );
         assert!(r.is_err());
     }
 
@@ -606,7 +852,36 @@ mod tests {
             depth: Arc::new(AtomicUsize::new(0)),
             solved: Arc::new(AtomicU64::new(0)),
             stats: Arc::new(Mutex::new(EngineStats::default())),
+            fstats: Arc::new(FleetStats::default()),
             dead: AtomicBool::new(false),
+        }
+    }
+
+    fn fake_pool(shards: Vec<Shard>, joins: Vec<JoinHandle<()>>) -> EnginePool {
+        EnginePool {
+            inner: Arc::new(PoolInner {
+                shards,
+                capacity: 4,
+                default_deadline_ms: 0,
+                fleet: None,
+                cache: None,
+                cache_hits: AtomicU64::new(0),
+                cache_misses: AtomicU64::new(0),
+                joins: Mutex::new(joins),
+            }),
+        }
+    }
+
+    fn request() -> SolveRequest {
+        SolveRequest {
+            problem: Problem { v0: 5, ops: vec![OpStep { op: tk::PLUS, d: 3 }] },
+            mode: SearchMode::EarlyRejection,
+            n_beams: 8,
+            tau: 8,
+            lm: "lm-concise".into(),
+            prm: "prm-large".into(),
+            deadline_ms: None,
+            priority: 0,
         }
     }
 
@@ -621,33 +896,16 @@ mod tests {
             while let Ok(msg) = rx1.recv() {
                 match msg {
                     Msg::Shutdown => break,
-                    Msg::Solve(_, _, reply) => {
-                        let _ = reply.send(Err(Error::invalid("fake engine")));
+                    Msg::Solve(job) => {
+                        let _ = job.reply.send(Err(Error::invalid("fake engine")));
                     }
                 }
             }
         });
-        let pool = EnginePool {
-            inner: Arc::new(PoolInner {
-                shards: vec![fake_shard(tx0), fake_shard(tx1)],
-                capacity: 4,
-                cache: None,
-                cache_hits: AtomicU64::new(0),
-                cache_misses: AtomicU64::new(0),
-                joins: Mutex::new(vec![join]),
-            }),
-        };
-        let req = SolveRequest {
-            problem: Problem { v0: 5, ops: vec![OpStep { op: tk::PLUS, d: 3 }] },
-            mode: SearchMode::EarlyRejection,
-            n_beams: 8,
-            tau: 8,
-            lm: "lm-concise".into(),
-            prm: "prm-large".into(),
-        };
+        let pool = fake_pool(vec![fake_shard(tx0), fake_shard(tx1)], vec![join]);
         // Placement tries shard 0 first (tie -> lowest index), discovers it
         // dead, and fails over to shard 1, whose reply comes through.
-        let err = pool.solve(req, SearchConfig::default()).unwrap_err();
+        let err = pool.solve(request(), SearchConfig::default()).unwrap_err();
         assert!(err.to_string().contains("fake engine"), "{err}");
         assert_eq!(pool.shard_alive(), vec![false, true]);
         assert_eq!(pool.queue_depth(), 0, "guards released on both paths");
@@ -658,31 +916,60 @@ mod tests {
     fn all_shards_dead_is_internal_not_client_error() {
         let (tx0, rx0) = mpsc::channel::<Msg>();
         drop(rx0);
-        let pool = EnginePool {
-            inner: Arc::new(PoolInner {
-                shards: vec![fake_shard(tx0)],
-                capacity: 4,
-                cache: None,
-                cache_hits: AtomicU64::new(0),
-                cache_misses: AtomicU64::new(0),
-                joins: Mutex::new(Vec::new()),
-            }),
-        };
-        let req = SolveRequest {
-            problem: Problem { v0: 5, ops: vec![OpStep { op: tk::PLUS, d: 3 }] },
-            mode: SearchMode::EarlyRejection,
-            n_beams: 8,
-            tau: 8,
-            lm: "lm-concise".into(),
-            prm: "prm-large".into(),
-        };
+        let pool = fake_pool(vec![fake_shard(tx0)], Vec::new());
         // First call trips over the dead shard; both calls must surface a
         // 500-class error, never a 4xx.
-        let e1 = pool.solve(req.clone(), SearchConfig::default()).unwrap_err();
+        let e1 = pool.solve(request(), SearchConfig::default()).unwrap_err();
         assert_eq!(e1.http_status(), 500, "{e1}");
-        let e2 = pool.solve(req, SearchConfig::default()).unwrap_err();
+        let e2 = pool.solve(request(), SearchConfig::default()).unwrap_err();
         assert_eq!(e2.http_status(), 500, "{e2}");
         assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn solve_timed_passes_queue_wait_through() {
+        // fake shard replies with a canned Solved carrying queue telemetry
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Shutdown => break,
+                    Msg::Solve(job) => {
+                        let wait = job.enqueued.elapsed().as_secs_f64() * 1000.0;
+                        let _ = job
+                            .reply
+                            .send(Ok(Solved { outcome: outcome(7), queue_wait_ms: wait }));
+                    }
+                }
+            }
+        });
+        let pool = fake_pool(vec![fake_shard(tx)], vec![join]);
+        let s = pool.solve_timed(request(), SearchConfig::default()).unwrap();
+        assert_eq!(s.outcome.answer, Some(7));
+        assert!(s.queue_wait_ms >= 0.0);
+        assert_eq!(pool.queue_depth(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn effective_deadline_prefers_request_over_pool_default() {
+        let (tx, _rx) = mpsc::channel::<Msg>();
+        let mut pool = fake_pool(vec![fake_shard(tx)], Vec::new());
+        // no pool default: only per-request deadlines apply
+        assert_eq!(pool.effective_deadline(&request()), None);
+        let mut req = request();
+        req.deadline_ms = Some(250);
+        assert_eq!(pool.effective_deadline(&req), Some(Duration::from_millis(250)));
+        // a pool default applies when the request has none — in either
+        // dispatch mode, which is why it lives on the pool, not the fleet
+        let inner = Arc::get_mut(&mut pool.inner).unwrap();
+        inner.default_deadline_ms = 1000;
+        assert_eq!(pool.effective_deadline(&request()), Some(Duration::from_millis(1000)));
+        assert_eq!(pool.effective_deadline(&req), Some(Duration::from_millis(250)));
+        // a zero default means "no default"
+        let inner = Arc::get_mut(&mut pool.inner).unwrap();
+        inner.default_deadline_ms = 0;
+        assert_eq!(pool.effective_deadline(&request()), None);
     }
 
     #[test]
@@ -694,6 +981,8 @@ mod tests {
             tau: 8,
             lm: "lm-concise".into(),
             prm: "prm-large".into(),
+            deadline_ms: None,
+            priority: 0,
         };
         let cfg = SearchConfig { n_beams: 8, tau: 8, ..SearchConfig::default() };
         let k1 = req.cache_key(&cfg);

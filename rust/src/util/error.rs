@@ -16,6 +16,10 @@ pub enum Error {
     /// Serving backpressure: every shard queue is at capacity. Maps to
     /// HTTP 503 Service Unavailable (retryable), never 4xx.
     Saturated(String),
+    /// The request's deadline elapsed before a result was produced
+    /// (queued too long or aborted mid-solve by the fleet scheduler).
+    /// Maps to HTTP 504 Gateway Timeout.
+    Deadline(String),
     /// Server-side infrastructure fault (e.g. an engine shard thread
     /// died). Maps to HTTP 500 — never blamed on the client.
     Internal(String),
@@ -31,6 +35,7 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Invalid(m) => write!(f, "invalid: {m}"),
             Error::Saturated(m) => write!(f, "saturated: {m}"),
+            Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
             Error::Internal(m) => write!(f, "internal: {m}"),
         }
     }
@@ -61,17 +66,21 @@ impl Error {
     pub fn saturated(m: impl Into<String>) -> Self {
         Error::Saturated(m.into())
     }
+    pub fn deadline(m: impl Into<String>) -> Self {
+        Error::Deadline(m.into())
+    }
     pub fn internal(m: impl Into<String>) -> Self {
         Error::Internal(m.into())
     }
 
     /// The HTTP status this error renders as: client mistakes are 4xx,
-    /// backpressure is 503 (retryable), runtime/infrastructure faults
-    /// are 500.
+    /// backpressure is 503 (retryable), deadline expiry is 504,
+    /// runtime/infrastructure faults are 500.
     pub fn http_status(&self) -> u16 {
         match self {
             Error::Parse(_) | Error::Invalid(_) => 400,
             Error::Saturated(_) => 503,
+            Error::Deadline(_) => 504,
             Error::Io(_) | Error::Xla(_) | Error::Internal(_) => 500,
         }
     }
@@ -86,6 +95,7 @@ mod tests {
         assert!(Error::parse("x").to_string().contains("parse"));
         assert!(Error::invalid("y").to_string().contains("invalid"));
         assert!(Error::saturated("z").to_string().contains("saturated"));
+        assert!(Error::deadline("w").to_string().contains("deadline"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("gone"));
     }
@@ -95,6 +105,7 @@ mod tests {
         assert_eq!(Error::parse("x").http_status(), 400);
         assert_eq!(Error::invalid("x").http_status(), 400);
         assert_eq!(Error::saturated("x").http_status(), 503);
+        assert_eq!(Error::deadline("x").http_status(), 504);
         assert_eq!(Error::internal("x").http_status(), 500);
         assert_eq!(Error::Xla("x".into()).http_status(), 500);
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();

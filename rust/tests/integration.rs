@@ -10,9 +10,11 @@ use erprm::config::{SearchConfig, SearchMode};
 use erprm::coordinator::{solve_early_rejection, solve_vanilla};
 use erprm::coordinator::early_reject::solve_early_rejection_with_policy;
 use erprm::coordinator::policy::RejectPolicy;
+use erprm::fleet::FleetOptions;
 use erprm::harness;
 use erprm::runtime::Engine;
 use erprm::server::{api, error_response, http, metrics::Metrics, route, router::EnginePool};
+use erprm::server::PoolOptions;
 use erprm::tokenizer as tk;
 use erprm::util::error::Error;
 use erprm::util::threadpool::ThreadPool;
@@ -379,8 +381,8 @@ fn cache_hit_returns_identical_body_and_counts() {
     let second = epool.solve(req.clone(), cfg.clone()).unwrap();
     assert_eq!(epool.cache_counters(), (1, 1), "second solve must hit the cache");
     assert_eq!(
-        api::render_solve(&req, &first),
-        api::render_solve(&req, &second),
+        api::render_solve(&req, &first, 0.0),
+        api::render_solve(&req, &second, 0.0),
         "cache hit must render a byte-identical body"
     );
     assert_eq!(
@@ -389,6 +391,162 @@ fn cache_hit_returns_identical_body_and_counts() {
         "the engine must only have run once"
     );
     assert!(epool.render_metrics().contains("erprm_cache_hits_total 1"));
+    epool.shutdown();
+}
+
+// ------------------------------------------------------------------ fleet
+
+fn fleet_pool(dir: PathBuf, shards: usize, max_inflight: usize, cache: usize) -> EnginePool {
+    EnginePool::spawn_with(
+        dir,
+        PoolOptions {
+            shards,
+            capacity: 64,
+            cache_entries: cache,
+            default_deadline_ms: 0,
+            fleet: Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
+        },
+    )
+    .expect("fleet pool spawn")
+}
+
+// The acceptance gate for the fleet refactor: a solve interleaved with
+// other in-flight requests must produce the same outcome, byte for byte
+// (modulo wall-clock), as the same (problem, cfg, seed) solved alone.
+#[test]
+fn fleet_interleaving_preserves_sequential_outcomes() {
+    let Some(dir) = artifacts() else { return };
+    let e = Engine::load(&dir).expect("engine load");
+    let cfg = cfg(SearchMode::EarlyRejection, 8, 8);
+    let problems = problem_set(&SATMATH, 4, 99);
+    let reference: Vec<_> = problems
+        .iter()
+        .map(|p| solve_early_rejection(&e, "lm-concise", "prm-large", p, &cfg, 0.5).unwrap())
+        .collect();
+
+    // Same problems through a 1-shard fleet pool, all in flight at once,
+    // so their tasks interleave on one engine.
+    let epool = fleet_pool(dir, 1, 4, 0);
+    let joins: Vec<_> = problems
+        .iter()
+        .cloned()
+        .map(|p| {
+            let pool = epool.clone();
+            let c = cfg.clone();
+            std::thread::spawn(move || {
+                let req = api::SolveRequest {
+                    problem: p,
+                    mode: SearchMode::EarlyRejection,
+                    n_beams: 8,
+                    tau: 8,
+                    lm: "lm-concise".into(),
+                    prm: "prm-large".into(),
+                    deadline_ms: None,
+                    priority: 0,
+                };
+                pool.solve(req, c).unwrap()
+            })
+        })
+        .collect();
+    for (i, j) in joins.into_iter().enumerate() {
+        let out = j.join().unwrap();
+        assert_eq!(out.answer, reference[i].answer, "problem {i}: answer diverged");
+        assert_eq!(
+            out.best_trace, reference[i].best_trace,
+            "problem {i}: trace diverged under interleaving"
+        );
+        assert_eq!(
+            out.ledger, reference[i].ledger,
+            "problem {i}: FLOPs accounting diverged under interleaving"
+        );
+    }
+    let t = epool.fleet_totals().expect("fleet totals");
+    assert_eq!(
+        t.completed + t.coalesced,
+        4,
+        "every request must have been served by a completed task"
+    );
+    assert_eq!(t.failed + t.expired, 0);
+    epool.shutdown();
+}
+
+#[test]
+fn fleet_coalesces_duplicate_inflight_requests() {
+    let Some(dir) = artifacts() else { return };
+    let epool = fleet_pool(dir, 1, 4, 0);
+    let cfg = SearchConfig::default();
+    let req = api::parse_solve(solve_body(), &cfg).unwrap();
+    let joins: Vec<_> = (0..4)
+        .map(|_| {
+            let pool = epool.clone();
+            let c = cfg.clone();
+            let r = req.clone();
+            std::thread::spawn(move || pool.solve(r, c).unwrap())
+        })
+        .collect();
+    let outs: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for o in &outs[1..] {
+        assert_eq!(o.best_trace, outs[0].best_trace, "duplicates must agree");
+        assert_eq!(o.ledger, outs[0].ledger);
+    }
+    let t = epool.fleet_totals().expect("fleet totals");
+    assert_eq!(
+        t.admitted + t.coalesced,
+        4,
+        "every duplicate either ran its own task or rode an in-flight one"
+    );
+    assert_eq!(t.failed + t.expired, 0);
+    epool.shutdown();
+}
+
+#[test]
+fn fleet_deadline_expires_as_504() {
+    let Some(dir) = artifacts() else { return };
+    let epool = fleet_pool(dir, 1, 2, 0);
+    let cfg = SearchConfig::default();
+    let mut req = api::parse_solve(solve_body(), &cfg).unwrap();
+    req.deadline_ms = Some(1); // a real solve takes far longer than 1ms
+    let err = epool.solve(req, cfg.clone()).unwrap_err();
+    assert_eq!(err.http_status(), 504, "{err}");
+    let t = epool.fleet_totals().expect("fleet totals");
+    assert!(t.expired >= 1, "the abort must be counted: {t:?}");
+    // the pool stays healthy for bounded requests afterwards
+    let ok = epool.solve(api::parse_solve(solve_body(), &cfg).unwrap(), cfg).unwrap();
+    assert!(ok.ledger.total_flops() > 0.0);
+    epool.shutdown();
+}
+
+#[test]
+fn fleet_serves_over_http_with_queue_wait_and_metrics() {
+    let Some(dir) = artifacts() else { return };
+    let epool = fleet_pool(dir, 1, 4, 0);
+    let metrics = std::sync::Arc::new(Metrics::default());
+    let tpool = ThreadPool::new(4);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let p2 = epool.clone();
+    let m2 = std::sync::Arc::clone(&metrics);
+    let addr = http::serve(
+        "127.0.0.1:0",
+        &tpool,
+        1 << 20,
+        std::sync::Arc::clone(&stop),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), req)),
+    )
+    .unwrap();
+    let req = format!(
+        "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        solve_body().len(),
+        std::str::from_utf8(solve_body()).unwrap()
+    );
+    let out = http_get(addr, req.as_bytes());
+    assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+    assert!(out.contains("queue_wait_ms"), "response must carry scheduling delay: {out}");
+    let metrics_text = http_get(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+    assert!(metrics_text.contains("erprm_fleet_enabled 1"), "{metrics_text}");
+    assert!(metrics_text.contains("erprm_fleet_admitted_total 1"), "{metrics_text}");
+    assert!(metrics_text.contains("erprm_queue_wait_ms_p95"), "{metrics_text}");
+    assert!(metrics_text.contains("erprm_latency_ms_p99"), "{metrics_text}");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
     epool.shutdown();
 }
 
