@@ -1,20 +1,26 @@
-//! Fleet-vs-sequential serving benchmark (the acceptance driver for the
-//! fleet scheduler): fires one mixed-concurrency workload at two pools
-//! with the *same shard count* — one dispatching sequentially, one running
-//! the fleet scheduler — and reports aggregate solves/sec, latency
-//! percentiles, queue wait, and the fleet's backfill/coalescing counters.
+//! Fleet-vs-sequential-vs-gang serving benchmark (the acceptance driver
+//! for the fleet scheduler and the gang batcher): fires one mixed
+//! workload at three pools with the *same shard count* — sequential
+//! dispatch, the fleet scheduler, and the fleet scheduler with gang
+//! batching (`--gang` semantics of `erprm serve`) — and reports aggregate
+//! solves/sec, latency percentiles, queue wait, scheduler counters, and
+//! the gang batcher's acceptance metric: **engine decode invocations per
+//! completed request** (shared batches must lower it, not just shuffle
+//! work).
 //!
 //! The workload is deliberately mixed: requests vary in beam width (long
 //! and short solves interleaved, so sequential dispatch head-of-line
-//! blocks) and popular problems repeat (`--dup`, so the fleet's
-//! single-flight coalescing pays once for duplicate in-flight work, like
-//! production traffic hitting a hot prompt).
+//! blocks) and popular problems repeat (`--dup`, so single-flight
+//! coalescing pays once for duplicate in-flight work, like production
+//! traffic hitting a hot prompt).
 //!
 //!     make artifacts && cargo run --release --example fleet_benchmark -- \
 //!         --requests 32 --clients 8 --shards 2 --max-inflight 8 --dup 4
 //!
-//! The LRU cache is off in both pools so the comparison measures the
-//! scheduler, not the cache.
+//! The LRU cache is off in all pools so the comparison measures the
+//! schedulers, not the cache. Gang mode needs artifacts exported with
+//! `merge_bA_bB_to_bC` programs; older artifact sets degrade to all-solo
+//! calls (the gang counters will read zero).
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -38,7 +44,10 @@ struct Report {
     mean_queue_wait_ms: f64,
     errors: usize,
     engine_solves: u64,
+    decode_calls: u64,
+    score_calls: u64,
     fleet_line: String,
+    gang_line: String,
 }
 
 fn run_mode(
@@ -85,6 +94,14 @@ fn run_mode(
         ),
         None => "-".to_string(),
     };
+    let gang_line = match pool.batch_totals() {
+        Some(b) => format!(
+            "gangs {} ganged {} solo {} merged-slots {} padding {}",
+            b.gangs, b.ganged_intents, b.solo_intents, b.merged_slots, b.padding_slots
+        ),
+        None => "-".to_string(),
+    };
+    let es = pool.engine_stats();
     let report = Report {
         label: label.to_string(),
         wall_s,
@@ -94,7 +111,10 @@ fn run_mode(
         mean_queue_wait_ms: stats::mean(&queue_waits),
         errors,
         engine_solves: pool.shard_solves().iter().sum(),
+        decode_calls: es.decode_calls,
+        score_calls: es.score_calls,
         fleet_line,
+        gang_line,
     };
     pool.shutdown();
     Ok(report)
@@ -110,13 +130,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let max_inflight = args.get_usize_min("max-inflight", 8, 1)?;
     // every unique problem is requested `dup` times (hot-prompt traffic)
     let dup = args.get_usize_min("dup", 4, 1)?;
+    let gang_max_wait = args.get_u64("gang-max-wait", 1)?;
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("artifacts missing; run `make artifacts` first (skipping benchmark)");
         return Ok(());
     }
 
-    // One shared workload so both modes see identical requests: unique
+    // One shared workload so every mode sees identical requests: unique
     // problems at mixed beam widths, each repeated `dup` times, then
     // shuffled so duplicates overlap in flight instead of back-to-back.
     let widths = [4usize, 8, 16];
@@ -169,15 +190,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         clients,
         &requests,
     )?;
+    let gang = run_mode(
+        "gang",
+        "artifacts".into(),
+        shards,
+        capacity,
+        Some(FleetOptions { max_inflight, gang: true, gang_max_wait, ..FleetOptions::default() }),
+        clients,
+        &requests,
+    )?;
 
-    println!("\n== fleet vs sequential (equal shard count) ==");
+    println!("\n== sequential vs fleet vs gang (equal shard count) ==");
     println!(
-        "{:<12} {:>10} {:>12} {:>9} {:>9} {:>12} {:>7} {:>13}  fleet counters",
-        "mode", "wall s", "solves/sec", "p50 ms", "p95 ms", "queue-wait", "errors", "engine solves"
+        "{:<12} {:>8} {:>11} {:>8} {:>8} {:>11} {:>6} {:>8} {:>10} {:>10}",
+        "mode", "wall s", "solves/sec", "p50 ms", "p95 ms", "queue-wait", "errs", "solves",
+        "decodes", "decode/req"
     );
-    for r in [&seq, &fleet] {
+    for r in [&seq, &fleet, &gang] {
         println!(
-            "{:<12} {:>10.2} {:>12.2} {:>9.0} {:>9.0} {:>12.1} {:>7} {:>13}  {}",
+            "{:<12} {:>8.2} {:>11.2} {:>8.0} {:>8.0} {:>11.1} {:>6} {:>8} {:>10} {:>10.1}",
             r.label,
             r.wall_s,
             r.rps,
@@ -186,16 +217,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             r.mean_queue_wait_ms,
             r.errors,
             r.engine_solves,
-            r.fleet_line
+            r.decode_calls,
+            r.decode_calls as f64 / requests.len() as f64,
         );
     }
-    let ratio = fleet.rps / seq.rps.max(1e-9);
+    println!("\nfleet counters: fleet [{}]  gang [{}]", fleet.fleet_line, gang.fleet_line);
+    println!("gang counters:  {}", gang.gang_line);
+    let ratio = gang.rps / seq.rps.max(1e-9);
+    let decode_ratio = gang.decode_calls as f64 / fleet.decode_calls.max(1) as f64;
     println!(
-        "\nfleet / sequential = {ratio:.2}x aggregate solves/sec \
-         (engine ran {} vs {} solves for the same {} requests)",
-        fleet.engine_solves,
-        seq.engine_solves,
-        requests.len()
+        "\ngang / sequential = {ratio:.2}x aggregate solves/sec; gang ran {:.2}x the decode \
+         invocations of plain fleet for the same {} requests ({} vs {}; score calls {} vs {})",
+        decode_ratio,
+        requests.len(),
+        gang.decode_calls,
+        fleet.decode_calls,
+        gang.score_calls,
+        fleet.score_calls,
     );
     Ok(())
 }

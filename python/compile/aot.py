@@ -105,6 +105,38 @@ def export_resize(out_dir: str, cfg: M.ModelCfg, programs: dict):
             )
 
 
+def merge_pairs(batches=None):
+    """(src_a, src_b, dst) merge variants worth exporting: every ordered
+    pair with src_a >= src_b whose combined real slots still fit an
+    exported batch variant (dst is the smallest variant >= a + b). The
+    gang planner sorts members largest-first, so the a >= b half of the
+    grid is sufficient and halves the program count."""
+    bs = sorted(batches or BATCHES)
+    out = []
+    for a in bs:
+        for b in bs:
+            if b > a:
+                continue
+            fits = [c for c in bs if c >= a + b]
+            if fits:
+                out.append((a, b, min(fits)))
+    return out
+
+
+def export_merge(out_dir: str, cfg: M.ModelCfg, programs: dict):
+    """Cross-cache concat programs: `merge_bA_bB_to_bC` gathers `C` slots
+    out of the union of two caches (batches A and B) so two concurrent
+    requests' beams share one device batch (gang batching). The split back
+    to per-request caches reuses the existing `resize`/`gather` programs."""
+    for a, b, c in merge_pairs():
+        kv_a = [spec(sh) for sh in M.kv_shapes(cfg, a)]
+        kv_b = [spec(sh) for sh in M.kv_shapes(cfg, b)]
+        programs[f"merge_b{a}_b{b}_to_b{c}"] = export(
+            out_dir, f"{cfg.name}_merge_b{a}_b{b}_to_b{c}",
+            M.kv_merge, [spec((c,), I32)] + kv_a + kv_b,
+        )
+
+
 def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
     nw = len(M.weight_specs(cfg))
     nkv = 2 * cfg.n_layers
@@ -143,6 +175,7 @@ def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
             [spec(sh) for sh in M.kv_shapes(cfg, 1)],
         )
     export_resize(out_dir, cfg, programs)
+    export_merge(out_dir, cfg, programs)
     return programs
 
 
@@ -184,6 +217,7 @@ def export_prm(out_dir: str, cfg: M.ModelCfg) -> dict:
             [spec(sh) for sh in M.kv_shapes(cfg, 1)],
         )
     export_resize(out_dir, cfg, programs)
+    export_merge(out_dir, cfg, programs)
     programs[f"fullseq_b{FULLSEQ_BATCH}"] = export(
         out_dir, f"{cfg.name}_fullseq_b{FULLSEQ_BATCH}",
         wrap(lambda p, t, l: M.prm_fullseq(cfg, p, t, l)),

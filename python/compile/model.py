@@ -371,3 +371,19 @@ def kv_broadcast(batch: int, *kvs):
         _, h, s, d = kv.shape
         out.append(jnp.broadcast_to(kv, (batch, h, s, d)) + 0.0)
     return tuple(out)
+
+
+def kv_merge(idx, *kvs):
+    """Concat two caches along the batch axis and gather slots from the
+    union: `out[slot] = concat(A, B)[idx[slot]]` with `idx` in
+    `[0, A_batch + B_batch)`. `kvs` is A's 2*L arrays followed by B's 2*L
+    arrays (same layer order). This is the device half of gang batching:
+    two requests' beam slots land in one shared batch for a merged
+    decode/score call, then split back out with `resize`/`gather`."""
+    n = len(kvs) // 2
+    assert len(kvs) == 2 * n, "kv_merge wants two equal cache lists"
+    out = []
+    for a, b in zip(kvs[:n], kvs[n:]):
+        cat = jnp.concatenate([a, b], axis=0)
+        out.append(jnp.take(cat, idx, axis=0))
+    return tuple(out)

@@ -43,6 +43,65 @@ def test_donated_kv_alias_in_hlo(tmp_path):
     assert "input_output_alias" in txt
 
 
+def test_merge_pairs_cover_variant_grid():
+    pairs = aot.merge_pairs([4, 8, 16, 32, 64])
+    # ordered largest-first, and every dst is the smallest variant >= a+b
+    for a, b, c in pairs:
+        assert a >= b
+        assert c >= a + b
+        smaller = [v for v in [4, 8, 16, 32, 64] if a + b <= v < c]
+        assert not smaller, f"dst {c} not minimal for {a}+{b}"
+    # the extremes: two smallest merge into the next variant up; anything
+    # past the largest variant is simply not exported
+    assert (4, 4, 8) in pairs
+    assert (32, 32, 64) in pairs
+    assert all(a + b <= 64 for a, b, _ in pairs)
+    assert not any(a == 64 for a, b, _ in pairs), "64+anything cannot fit"
+
+
+def test_kv_merge_concats_then_gathers():
+    a = jnp.arange(2 * 1 * 3 * 2, dtype=jnp.float32).reshape(2, 1, 3, 2)
+    b = a + 100.0
+    idx = jnp.array([1, 2, 0, 3], dtype=jnp.int32)  # [a1, b0, a0, b1]
+    (k_out, v_out) = M.kv_merge(idx, a, a * 2, b, b * 2)
+    cat = np.concatenate([a, b], axis=0)
+    np.testing.assert_array_equal(np.asarray(k_out), cat[np.asarray(idx)])
+    cat2 = np.concatenate([a * 2, b * 2], axis=0)
+    np.testing.assert_array_equal(np.asarray(v_out), cat2[np.asarray(idx)])
+
+
+def test_merge_program_lowers_with_both_cache_arg_sets(tmp_path):
+    """A merge program must take idx + 2 * n_kv cache args and emit the
+    dst-batch shapes, so the Rust engine can feed two requests' caches."""
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    cfg = M.PRM_SMALL_CFG
+    a, b, c = 4, 4, 8
+    kv_a = [aot.spec(sh) for sh in M.kv_shapes(cfg, a)]
+    kv_b = [aot.spec(sh) for sh in M.kv_shapes(cfg, b)]
+    p = aot.export(
+        str(tmp_path), f"toy_merge_b{a}_b{b}_to_b{c}",
+        M.kv_merge, [aot.spec((c,), jnp.int32)] + kv_a + kv_b,
+    )
+    txt = open(p).read()
+    assert "HloModule" in txt and "ENTRY" in txt
+    h, s, d = cfg.n_heads, cfg.cache_len, cfg.head_dim
+    assert f"f32[{a},{h},{s},{d}]" in txt  # source cache params
+    assert f"f32[{c},{h},{s},{d}]" in txt  # merged outputs
+
+
+def test_export_merge_registers_manifest_entries(tmp_path):
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    programs = {}
+    aot.export_merge(str(tmp_path), M.PRM_SMALL_CFG, programs)
+    assert "merge_b4_b4_to_b8" in programs
+    assert "merge_b32_b32_to_b64" in programs
+    assert "merge_b4_b8_to_b16" not in programs  # only a >= b exported
+    assert "merge_b8_b4_to_b16" in programs
+    for name, path in programs.items():
+        assert name.startswith("merge_b")
+        assert os.path.exists(path)
+
+
 def test_write_weights_bin_order(tmp_path):
     cfg = M.PRM_SMALL_CFG
     params = M.init_params(cfg, jax.random.PRNGKey(0))

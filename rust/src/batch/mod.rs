@@ -1,0 +1,40 @@
+//! Gang batching: true cross-request device batching.
+//!
+//! The fleet scheduler interleaves many requests on one engine, but until
+//! this module each request still *decoded in its own device batch* — the
+//! compute early rejection frees mid-step could backfill another request's
+//! turn, yet never its batch. The gang batcher closes that gap:
+//!
+//! * a [`crate::coordinator::task::SolveTask`] driven cooperatively
+//!   (`poll`) *yields* its prepared engine calls as
+//!   [`crate::coordinator::task::DecodeIntent`]s instead of executing
+//!   them;
+//! * the [`planner`] groups compatible intents — same checkpoint, same
+//!   program class (decode vs score), same temperature — and packs them
+//!   largest-first into one merged batch variant via the exported
+//!   `merge_bA_bB_to_bC` KV-concat programs;
+//! * one shared `decode_bN`/`score_bN` call runs for the whole gang; the
+//!   outputs are split back per member (`resize`/`gather` programs) and
+//!   absorbed into each task exactly as a solo call would have been.
+//!
+//! Determinism: every per-slot computation in the exported programs reads
+//! only its own row (RoPE positions, validity mask, RNG keys are per-slot
+//! arguments), so a member's sampled tokens and scores are the same
+//! whether its slots ran alone or inside a shared batch — gang-batched
+//! [`crate::coordinator::search::SolveOutcome`]s are byte-identical to
+//! solo solves, which the integration suite pins. The one observable
+//! difference is cache pacing: a merged call writes at the *max* of the
+//! members' lockstep frontiers, so a request ganged with longer partners
+//! spends physical cache positions faster and could hit the (gracefully
+//! handled) exhaustion path earlier than it would alone.
+//!
+//! Scheduling: a yielded intent may wait up to `gang_max_wait` scheduler
+//! rounds for partners; after that (or when it is the only task in
+//! flight) it executes solo, so a lone request never stalls. Old artifact
+//! sets without merge programs degrade to all-solo execution.
+
+pub mod planner;
+pub mod stats;
+
+pub use planner::{execute_gang, plan_gangs, Gang};
+pub use stats::{BatchStats, BatchTotals};

@@ -1,0 +1,244 @@
+//! Gang planning (pure, host-side) and merged execution (device-side).
+//!
+//! Planning packs one compatibility group's pending intents into gangs
+//! greedily, largest batch first: the seed opens a merge chain and every
+//! later intent that still fits an exported merge variant joins it. The
+//! chain's destination variant is fixed by the exporter per source pair
+//! (`merge_bA_bB_to_bC` with `c = variant(a + b)`), so feasibility is a
+//! manifest probe, injected as a closure to keep planning testable
+//! without artifacts.
+//!
+//! Execution turns a planned gang into exactly one shared `decode_bN` /
+//! `score_bN` invocation: chain-merge the member caches (packing live
+//! slots densely at the front), run the shared call with concatenated
+//! per-slot inputs, split each member's slot range back out, and let each
+//! task absorb its own output rows. Per-slot math in the exported
+//! programs never crosses rows, so each member's results are the ones its
+//! solo call would have produced.
+
+use crate::coordinator::task::{GangOut, IntentKind, SolveTask};
+use crate::runtime::{Engine, KvSet};
+use crate::util::error::{Error, Result};
+
+/// One planned gang: positions into the planner's input list in merge
+/// order (largest batch first, stable by arrival), plus the merged batch
+/// variant the chain lands in.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Gang {
+    pub members: Vec<usize>,
+    pub variant: usize,
+}
+
+/// Pack one compatible group's pending intents (their cache batches, in
+/// arrival order) into gangs of >= 2 members. `can_merge(a, b)` reports
+/// the merged variant when the artifact set can merge an `a`-batch cache
+/// with a `b`-batch cache (`a >= b`), else `None`. Inputs left out of
+/// every gang are the caller's to execute solo.
+pub fn plan_gangs(
+    batches: &[usize],
+    can_merge: impl Fn(usize, usize) -> Option<usize>,
+) -> Vec<Gang> {
+    let mut order: Vec<usize> = (0..batches.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(batches[i]), i));
+    let mut assigned = vec![false; batches.len()];
+    let mut gangs = Vec::new();
+    for si in 0..order.len() {
+        let seed = order[si];
+        if assigned[seed] {
+            continue;
+        }
+        let mut members = vec![seed];
+        let mut chain = batches[seed];
+        for &cand in order.iter().skip(si + 1) {
+            if assigned[cand] {
+                continue;
+            }
+            if let Some(v) = can_merge(chain, batches[cand]) {
+                members.push(cand);
+                chain = v;
+                assigned[cand] = true;
+            }
+        }
+        if members.len() >= 2 {
+            assigned[seed] = true;
+            gangs.push(Gang { members, variant: chain });
+        }
+        // a 1-member chain stays unassigned: the caller executes it solo
+    }
+    gangs
+}
+
+/// Union-gather index for one merge step: the accumulator's `a_real` live
+/// slots stay packed at the front, all of the joiner's `b_batch` slots
+/// follow (offset by the accumulator's full device batch `a_batch`), and
+/// variant padding replays slot 0.
+fn merge_index(a_real: usize, a_batch: usize, b_batch: usize, c: usize) -> Vec<i32> {
+    let mut idx = Vec::with_capacity(c);
+    idx.extend((0..a_real).map(|i| i as i32));
+    idx.extend((0..b_batch).map(|j| (a_batch + j) as i32));
+    idx.resize(c, 0);
+    idx
+}
+
+/// Execute one gang as a single merged device call and route each
+/// member's output rows back into its task. `tasks` must be in the
+/// planner's merge order with their intents still parked; on error the
+/// caller fails every member (their intents are unusable afterwards).
+/// Returns the merged batch variant actually dispatched.
+pub fn execute_gang(engine: &Engine, tasks: &mut [&mut SolveTask]) -> Result<usize> {
+    if tasks.len() < 2 {
+        return Err(Error::internal("execute_gang wants >= 2 members"));
+    }
+    let (kind, ckpt, temp) = {
+        let i0 = tasks[0]
+            .intent()
+            .ok_or_else(|| Error::internal("gang member lost its intent"))?;
+        (i0.kind, i0.ckpt.clone(), i0.temp)
+    };
+    let mut batches = Vec::with_capacity(tasks.len());
+    for t in tasks.iter() {
+        let it = t.intent().ok_or_else(|| Error::internal("gang member lost its intent"))?;
+        if (it.kind, it.ckpt.as_str(), it.temp.to_bits())
+            != (kind, ckpt.as_str(), temp.to_bits())
+        {
+            return Err(Error::internal("incompatible intents packed into one gang"));
+        }
+        batches.push(it.batch);
+    }
+    let mut offsets = Vec::with_capacity(batches.len());
+    let mut real = 0usize;
+    for &b in &batches {
+        offsets.push(real);
+        real += b;
+    }
+
+    // 1. chain-merge the member caches (live slots densely packed).
+    let mut merged = {
+        let mut kvs: Vec<&KvSet> = Vec::with_capacity(tasks.len());
+        for t in tasks.iter() {
+            kvs.push(t.gang_kv()?);
+        }
+        let c = engine.manifest.merge_variant(batches[0], batches[1])?;
+        let idx = merge_index(batches[0], batches[0], batches[1], c);
+        let mut acc = engine.kv_merge(&ckpt, kvs[0], kvs[1], &idx)?;
+        let mut acc_real = batches[0] + batches[1];
+        for (i, kv) in kvs.iter().enumerate().skip(2) {
+            let c = engine.manifest.merge_variant(acc.batch, batches[i])?;
+            let idx = merge_index(acc_real, acc.batch, batches[i], c);
+            acc = engine.kv_merge(&ckpt, &acc, kv, &idx)?;
+            acc_real += batches[i];
+        }
+        acc
+    };
+
+    // 2. one shared device call, 3. split back + absorb per member.
+    match kind {
+        IntentKind::Decode => {
+            let db = engine.manifest.decode_block;
+            let mut prev = vec![crate::tokenizer::PAD; merged.batch];
+            let mut keys = vec![0u32; merged.batch * 2];
+            for (t, (&off, &b)) in tasks.iter().zip(offsets.iter().zip(&batches)) {
+                let (p, k) = t
+                    .intent()
+                    .and_then(|i| i.decode_inputs())
+                    .ok_or_else(|| Error::internal("decode gang holds a non-decode intent"))?;
+                prev[off..off + b].copy_from_slice(p);
+                keys[off * 2..(off + b) * 2].copy_from_slice(k);
+            }
+            let sampled = engine.lm_decode_block(&ckpt, &mut merged, &prev, temp, &keys)?;
+            for i in 0..tasks.len() {
+                let kv = engine.kv_split(&ckpt, &merged, offsets[i], batches[i])?;
+                let rows = &sampled[offsets[i] * db..(offsets[i] + batches[i]) * db];
+                tasks[i].gang_absorb(kv, GangOut::Tokens(rows))?;
+            }
+        }
+        IntentKind::Score => {
+            let sb = engine.manifest.score_block;
+            let mut toks = vec![crate::tokenizer::PAD; merged.batch * sb];
+            for (t, (&off, &b)) in tasks.iter().zip(offsets.iter().zip(&batches)) {
+                let mt = t
+                    .intent()
+                    .and_then(|i| i.score_tokens())
+                    .ok_or_else(|| Error::internal("score gang holds a non-score intent"))?;
+                toks[off * sb..(off + b) * sb].copy_from_slice(mt);
+            }
+            let scores = engine.prm_score_block(&ckpt, &mut merged, &toks)?;
+            for i in 0..tasks.len() {
+                let kv = engine.kv_split(&ckpt, &merged, offsets[i], batches[i])?;
+                let rows = &scores[offsets[i] * sb..(offsets[i] + batches[i]) * sb];
+                tasks[i].gang_absorb(kv, GangOut::Scores(rows))?;
+            }
+        }
+    }
+    Ok(merged.batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Merge-capability model of the standard export: variants
+    /// [4, 8, 16, 32, 64], every a >= b pair whose sum fits.
+    fn cm(a: usize, b: usize) -> Option<usize> {
+        const V: [usize; 5] = [4, 8, 16, 32, 64];
+        if a < b {
+            return None;
+        }
+        V.iter().copied().find(|&c| c >= a + b)
+    }
+
+    #[test]
+    fn pairs_same_width_gang_up() {
+        let gangs = plan_gangs(&[8, 8], cm);
+        assert_eq!(gangs, vec![Gang { members: vec![0, 1], variant: 16 }]);
+    }
+
+    #[test]
+    fn largest_fit_packs_mixed_widths() {
+        // sorted largest-first: 16 seeds, 8 joins (-> 32), 4 joins (-> 64)
+        let gangs = plan_gangs(&[8, 4, 16], cm);
+        assert_eq!(gangs, vec![Gang { members: vec![2, 0, 1], variant: 64 }]);
+    }
+
+    #[test]
+    fn equal_widths_keep_arrival_order() {
+        let gangs = plan_gangs(&[8, 8, 8], cm);
+        assert_eq!(gangs, vec![Gang { members: vec![0, 1, 2], variant: 32 }]);
+    }
+
+    #[test]
+    fn oversize_members_stay_solo() {
+        // two b64 caches cannot share any exported variant
+        assert!(plan_gangs(&[64, 64], cm).is_empty());
+        // one lone intent never forms a gang
+        assert!(plan_gangs(&[8], cm).is_empty());
+        assert!(plan_gangs(&[], cm).is_empty());
+    }
+
+    #[test]
+    fn no_merge_programs_degrades_to_all_solo() {
+        assert!(plan_gangs(&[8, 8, 4], |_, _| None).is_empty());
+    }
+
+    #[test]
+    fn chain_respects_capability_holes() {
+        // capability that only merges equal widths (a == b)
+        let eq = |a: usize, b: usize| if a == b { cm(a, b) } else { None };
+        let gangs = plan_gangs(&[8, 4, 8, 4], eq);
+        // 8s pair into 16; the 16-chain can't take the 4s, but the 4s
+        // then pair with each other
+        assert_eq!(gangs.len(), 2);
+        assert_eq!(gangs[0], Gang { members: vec![0, 2], variant: 16 });
+        assert_eq!(gangs[1], Gang { members: vec![1, 3], variant: 8 });
+    }
+
+    #[test]
+    fn merge_index_packs_live_slots_and_pads_with_zero() {
+        assert_eq!(merge_index(4, 4, 4, 8), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        // accumulator at variant 8 with 6 live slots + a b4 joiner -> b16
+        assert_eq!(
+            merge_index(6, 8, 4, 16),
+            vec![0, 1, 2, 3, 4, 5, 8, 9, 10, 11, 0, 0, 0, 0, 0, 0]
+        );
+    }
+}

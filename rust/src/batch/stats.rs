@@ -1,0 +1,101 @@
+//! Gang-batcher telemetry: lock-free per-shard counters rendered under
+//! `erprm_batch_*` on `/metrics`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters for one shard's gang batcher (all-zero when `--gang` is off).
+#[derive(Debug, Default)]
+pub struct BatchStats {
+    /// Merged device calls dispatched (each served >= 2 requests).
+    pub gangs_total: AtomicU64,
+    /// Intents that rode a merged call.
+    pub ganged_intents_total: AtomicU64,
+    /// Intents executed solo (no compatible partner in time).
+    pub solo_intents_total: AtomicU64,
+    /// Real beam slots shipped inside merged batches…
+    pub merged_slots_total: AtomicU64,
+    /// …and the padding slots the merge variants carried along.
+    pub padding_slots_total: AtomicU64,
+    /// Scheduler rounds intents spent parked waiting for partners.
+    pub wait_rounds_total: AtomicU64,
+    /// Gangs whose merged execution failed (every member surfaced the
+    /// error).
+    pub gang_failures_total: AtomicU64,
+}
+
+/// Plain snapshot for `/metrics` aggregation and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchTotals {
+    pub gangs: u64,
+    pub ganged_intents: u64,
+    pub solo_intents: u64,
+    pub merged_slots: u64,
+    pub padding_slots: u64,
+    pub wait_rounds: u64,
+    pub gang_failures: u64,
+}
+
+impl BatchStats {
+    /// Record one dispatched gang of `members` intents totalling
+    /// `real_slots` beam slots inside a `variant`-sized device batch.
+    pub fn record_gang(&self, members: usize, real_slots: usize, variant: usize) {
+        self.gangs_total.fetch_add(1, Ordering::Relaxed);
+        self.ganged_intents_total.fetch_add(members as u64, Ordering::Relaxed);
+        self.merged_slots_total.fetch_add(real_slots as u64, Ordering::Relaxed);
+        self.padding_slots_total
+            .fetch_add(variant.saturating_sub(real_slots) as u64, Ordering::Relaxed);
+    }
+
+    pub fn totals(&self) -> BatchTotals {
+        BatchTotals {
+            gangs: self.gangs_total.load(Ordering::Relaxed),
+            ganged_intents: self.ganged_intents_total.load(Ordering::Relaxed),
+            solo_intents: self.solo_intents_total.load(Ordering::Relaxed),
+            merged_slots: self.merged_slots_total.load(Ordering::Relaxed),
+            padding_slots: self.padding_slots_total.load(Ordering::Relaxed),
+            wait_rounds: self.wait_rounds_total.load(Ordering::Relaxed),
+            gang_failures: self.gang_failures_total.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold another shard's totals into an aggregate (for `/metrics`).
+    pub fn merge_totals(into: &mut BatchTotals, other: BatchTotals) {
+        into.gangs += other.gangs;
+        into.ganged_intents += other.ganged_intents;
+        into.solo_intents += other.solo_intents;
+        into.merged_slots += other.merged_slots;
+        into.padding_slots += other.padding_slots;
+        into.wait_rounds += other.wait_rounds;
+        into.gang_failures += other.gang_failures;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_gang_accumulates_slots_and_padding() {
+        let s = BatchStats::default();
+        s.record_gang(2, 12, 16); // 8+4 real slots inside a b16 variant
+        s.record_gang(3, 24, 32);
+        let t = s.totals();
+        assert_eq!(t.gangs, 2);
+        assert_eq!(t.ganged_intents, 5);
+        assert_eq!(t.merged_slots, 36);
+        assert_eq!(t.padding_slots, 4 + 8);
+    }
+
+    #[test]
+    fn totals_merge() {
+        let s = BatchStats::default();
+        s.record_gang(2, 8, 8);
+        s.solo_intents_total.fetch_add(3, Ordering::Relaxed);
+        let mut agg = BatchTotals::default();
+        BatchStats::merge_totals(&mut agg, s.totals());
+        BatchStats::merge_totals(&mut agg, s.totals());
+        assert_eq!(agg.gangs, 2);
+        assert_eq!(agg.solo_intents, 6);
+        assert_eq!(agg.padding_slots, 0);
+    }
+}

@@ -180,6 +180,9 @@ pub struct ServerConfig {
     pub fleet: bool,
     /// Fleet slot-table size per shard: how many requests interleave.
     pub max_inflight: usize,
+    /// Gang batching (fleet mode only): merge compatible in-flight
+    /// requests' decode/score calls into shared device batches.
+    pub gang: bool,
     /// Default per-request deadline in ms, honored in both dispatch
     /// modes; 0 = unbounded.
     pub deadline_ms: u64,
@@ -196,6 +199,7 @@ impl Default for ServerConfig {
             cache_entries: 128,
             fleet: false,
             max_inflight: 8,
+            gang: false,
             deadline_ms: 0,
         }
     }
@@ -300,6 +304,9 @@ impl Config {
             if let Some(n) = s.get("max_inflight").and_then(Json::as_usize) {
                 cfg.server.max_inflight = n;
             }
+            if let Some(b) = s.get("gang").and_then(Json::as_bool) {
+                cfg.server.gang = b;
+            }
             if let Some(n) = s.get("deadline_ms").and_then(Json::as_i64) {
                 cfg.server.deadline_ms = n.max(0) as u64;
             }
@@ -376,14 +383,16 @@ mod tests {
         let d = ServerConfig::default();
         assert!(!d.fleet, "fleet is opt-in; the sequential path is the fallback");
         assert_eq!(d.max_inflight, 8);
+        assert!(!d.gang, "gang batching is opt-in on top of the fleet");
         assert_eq!(d.deadline_ms, 0, "no deadline unless configured");
         let j = Json::parse(
-            r#"{"server": {"fleet": true, "max_inflight": 16, "deadline_ms": 2000}}"#,
+            r#"{"server": {"fleet": true, "max_inflight": 16, "gang": true, "deadline_ms": 2000}}"#,
         )
         .unwrap();
         let c = Config::from_json(&j).unwrap();
         assert!(c.server.fleet);
         assert_eq!(c.server.max_inflight, 16);
+        assert!(c.server.gang);
         assert_eq!(c.server.deadline_ms, 2000);
     }
 

@@ -33,4 +33,4 @@ pub use bon::solve_best_of_n;
 pub use early_reject::solve_early_rejection;
 pub use flops::{FlopsLedger, FlopsReport};
 pub use search::{solve_vanilla, SolveOutcome};
-pub use task::{Progress, SolveTask};
+pub use task::{DecodeIntent, IntentKind, Progress, SolveTask, Step};

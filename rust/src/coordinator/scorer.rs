@@ -14,8 +14,80 @@ use crate::runtime::{Engine, KvSet};
 use crate::tokenizer as tk;
 use crate::util::error::Result;
 
+/// One prepared PRM scoring round: the lockstep `[batch, score_block]`
+/// token matrix plus how many tokens each slot contributes. Built by
+/// [`prepare_round`], consumed by [`absorb_round`] after the engine call —
+/// which the caller may run alone or merged into a gang batch.
+#[derive(Debug, Clone)]
+pub struct ScoreRound {
+    /// Row-major `[batch * score_block]`, PAD beyond each slot's span.
+    pub tokens: Vec<i32>,
+    /// Tokens contributed per slot (0 = idle slot this round).
+    pub counts: Vec<usize>,
+}
+
+/// Build the next scoring round, or `None` when every backlog is drained.
+/// Includes finished beams (their final step still needs scores) but not
+/// dead ones.
+pub fn prepare_round(beams: &BeamSet, batch: usize, score_block: usize) -> Option<ScoreRound> {
+    let t = score_block;
+    let mut any = false;
+    for beam in &beams.beams {
+        if !beam.dead && beam.prm_fed < beam.gen.len() {
+            any = true;
+            break;
+        }
+    }
+    if !any {
+        return None;
+    }
+    let mut tokens = vec![tk::PAD; batch * t];
+    let mut counts = vec![0usize; batch];
+    for (slot, beam) in beams.beams.iter().enumerate().take(batch) {
+        if beam.dead {
+            continue;
+        }
+        let backlog = &beam.gen[beam.prm_fed..];
+        let n = backlog.len().min(t);
+        tokens[slot * t..slot * t + n].copy_from_slice(&backlog[..n]);
+        counts[slot] = n;
+    }
+    Some(ScoreRound { tokens, counts })
+}
+
+/// Fold one round's scores back into the beams and the cache bookkeeping.
+/// `prm_kv` must already hold the post-call frontier (the engine call
+/// advanced it by `score_block`), which is also what makes this correct
+/// for gang-merged calls: the write frontier is wherever the shared batch
+/// actually wrote, not where this request's solo cache stood.
+pub fn absorb_round(
+    round: &ScoreRound,
+    scores: &[f32],
+    score_block: usize,
+    prm_kv: &mut KvSet,
+    beams: &mut BeamSet,
+    ledger: &mut FlopsLedger,
+) {
+    let t = score_block;
+    let frontier = prm_kv.pos_phys - t;
+    ledger.call();
+    for (slot, beam) in beams.beams.iter_mut().enumerate().take(round.counts.len()) {
+        let n = round.counts[slot];
+        if n == 0 {
+            continue;
+        }
+        for i in 0..n {
+            beam.scores.push(scores[slot * t + i]);
+        }
+        beam.prm_fed += n;
+        ledger.prm_score(n);
+        prm_kv.commit(slot, frontier, n);
+    }
+}
+
 /// Drain every active beam's unscored-token backlog through the PRM.
-/// Appends scores to `beam.scores` (aligned with `beam.gen`).
+/// Appends scores to `beam.scores` (aligned with `beam.gen`). Blocking
+/// composition of [`prepare_round`] + [`absorb_round`].
 pub fn catch_up(
     engine: &Engine,
     prm_ckpt: &str,
@@ -25,46 +97,11 @@ pub fn catch_up(
 ) -> Result<()> {
     let t = engine.manifest.score_block;
     let b = prm_kv.batch;
-    loop {
-        // find slots with backlog; include finished beams (their final step
-        // still needs scores) but not dead ones.
-        let mut any = false;
-        for beam in &beams.beams {
-            if !beam.dead && beam.prm_fed < beam.gen.len() {
-                any = true;
-                break;
-            }
-        }
-        if !any {
-            return Ok(());
-        }
-        let mut tokens = vec![tk::PAD; b * t];
-        let mut counts = vec![0usize; b];
-        for (slot, beam) in beams.beams.iter().enumerate().take(b) {
-            if beam.dead {
-                continue;
-            }
-            let backlog = &beam.gen[beam.prm_fed..];
-            let n = backlog.len().min(t);
-            tokens[slot * t..slot * t + n].copy_from_slice(&backlog[..n]);
-            counts[slot] = n;
-        }
-        let frontier = prm_kv.pos_phys;
-        let scores = engine.prm_score_block(prm_ckpt, prm_kv, &tokens)?;
-        ledger.call();
-        for (slot, beam) in beams.beams.iter_mut().enumerate().take(b) {
-            let n = counts[slot];
-            if n == 0 {
-                continue;
-            }
-            for i in 0..n {
-                beam.scores.push(scores[slot * t + i]);
-            }
-            beam.prm_fed += n;
-            ledger.prm_score(n);
-            prm_kv.commit(slot, frontier, n);
-        }
+    while let Some(round) = prepare_round(beams, b, t) {
+        let scores = engine.prm_score_block(prm_ckpt, prm_kv, &round.tokens)?;
+        absorb_round(&round, &scores, t, prm_kv, beams, ledger);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -72,6 +109,38 @@ mod tests {
     // The scorer's device interaction is covered by the integration tests
     // (rust/tests/integration.rs) which run against real artifacts. Here we
     // verify the backlog arithmetic via a pure model of the loop.
+
+    #[test]
+    fn prepare_and_absorb_round_trip() {
+        use crate::coordinator::beam::BeamSet;
+        use crate::coordinator::flops::FlopsLedger;
+        use crate::runtime::KvSet;
+        use crate::tokenizer as tk;
+        let mut beams = BeamSet::new(2, tk::DIG0, 1);
+        beams.beams[0].gen = vec![tk::DIG0; 5];
+        beams.beams[1].gen = vec![tk::DIG0; 1];
+        let t = 4usize;
+        let round = super::prepare_round(&beams, 2, t).unwrap();
+        assert_eq!(round.counts, vec![4, 1]);
+        let mut kv = KvSet::new(Vec::new(), 2, 16);
+        kv.pos_phys = t; // as if the engine call already advanced the frontier
+        let scores: Vec<f32> = (0..2 * t).map(|i| i as f32 / 10.0).collect();
+        let mut ledger = FlopsLedger::new(1, 1);
+        super::absorb_round(&round, &scores, t, &mut kv, &mut beams, &mut ledger);
+        assert_eq!(beams.beams[0].prm_fed, 4);
+        assert_eq!(beams.beams[1].prm_fed, 1);
+        assert_eq!(beams.beams[0].scores, vec![0.0, 0.1, 0.2, 0.3]);
+        assert_eq!(beams.beams[1].scores, vec![0.4]);
+        assert_eq!(ledger.prm_score_tokens, 5);
+        assert_eq!(&kv.valid[0..4], &[1, 1, 1, 1], "slot 0 committed at the old frontier");
+        assert_eq!(&kv.valid[16..20], &[1, 0, 0, 0]);
+        // the second round drains the remainder; nothing pends after it
+        let round2 = super::prepare_round(&beams, 2, t).unwrap();
+        assert_eq!(round2.counts, vec![1, 0]);
+        kv.pos_phys += t;
+        super::absorb_round(&round2, &scores, t, &mut kv, &mut beams, &mut ledger);
+        assert!(super::prepare_round(&beams, 2, t).is_none());
+    }
 
     #[test]
     fn backlog_draining_model() {

@@ -57,6 +57,7 @@ pub(crate) struct SearchCtx {
     pub ledger: FlopsLedger,
     pub call_counter: u64,
     pub decode_block: usize,
+    pub score_block: usize,
 }
 
 /// What a decode phase is driving each beam toward.
@@ -77,6 +78,28 @@ pub(crate) enum DecodeTick {
     Exhausted,
     /// One block was decoded; more ticks needed.
     Progress,
+}
+
+/// The host half of one decode tick, prepared before the engine call so
+/// the call itself can be executed solo or merged into a gang batch. The
+/// inputs are exactly what `Engine::lm_decode_block` takes for this
+/// cache's batch.
+#[derive(Debug, Clone)]
+pub(crate) struct DecodePrep {
+    /// Slots the current phase is driving (others idle through the block).
+    pub pending: Vec<usize>,
+    /// Previous token per slot, `[batch]`.
+    pub prev: Vec<i32>,
+    /// Per-slot RNG key material, `[batch * 2]`.
+    pub keys: Vec<u32>,
+    pub target: PhaseTarget,
+}
+
+/// What `decode_prepare` decided for this tick.
+pub(crate) enum DecodeStage {
+    Done,
+    Exhausted,
+    Call(DecodePrep),
 }
 
 impl SearchCtx {
@@ -131,6 +154,7 @@ impl SearchCtx {
             ledger,
             call_counter: 0,
             decode_block: engine.manifest.decode_block,
+            score_block: engine.manifest.score_block,
         })
     }
 
@@ -147,31 +171,38 @@ impl SearchCtx {
         }
     }
 
-    /// Run one lockstep decode block toward `target` — the resumable unit
-    /// the fleet scheduler interleaves across requests. Beams that exceed
-    /// `max_step_tokens` without a boundary are killed (runaway guard).
-    pub fn decode_tick(&mut self, engine: &Engine, target: PhaseTarget) -> Result<DecodeTick> {
+    /// Host side of one decode tick: decide whether the phase is complete
+    /// or out of cache, otherwise assemble the engine inputs (and burn one
+    /// key-stream counter — prepare/absorb must pair one-to-one).
+    pub fn decode_prepare(&mut self, target: PhaseTarget) -> DecodeStage {
         let pending: Vec<usize> = (0..self.beams.beams.len())
             .filter(|&i| self.phase_pending(&self.beams.beams[i], target))
             .collect();
         if pending.is_empty() {
-            return Ok(DecodeTick::Done);
+            return DecodeStage::Done;
         }
         if self.lm_kv.remaining() < self.decode_block {
             log_debug!("LM KV cache exhausted; stopping decode phase");
-            return Ok(DecodeTick::Exhausted);
+            return DecodeStage::Exhausted;
         }
-        let b = self.lm_kv.batch;
         let prev: Vec<i32> = self.beams.beams.iter().map(|bm| bm.pending).collect();
         let keys: Vec<u64> = self.beams.beams.iter().map(|bm| bm.key).collect();
         let key_mat = sampler::decode_keys(&keys, self.call_counter);
         self.call_counter += 1;
-        let old_frontier = self.lm_kv.pos_phys;
-        let sampled =
-            engine.lm_decode_block(&self.lm_ckpt, &mut self.lm_kv, &prev, self.temp, &key_mat)?;
+        DecodeStage::Call(DecodePrep { pending, prev, keys: key_mat, target })
+    }
+
+    /// Fold one decode call's sampled tokens back into the beams and the
+    /// cache bookkeeping. `lm_kv` must already hold the post-call frontier
+    /// (the engine call advanced it), which also makes this correct after
+    /// a gang-merged call where the shared batch wrote at the merged
+    /// frontier. Beams that exceed `max_step_tokens` without a boundary
+    /// are killed (runaway guard).
+    pub fn decode_absorb(&mut self, prep: &DecodePrep, sampled: &[i32]) {
         self.ledger.call();
-        debug_assert_eq!(sampled.len(), b * self.decode_block);
-        for &slot in &pending {
+        debug_assert_eq!(sampled.len(), self.lm_kv.batch * self.decode_block);
+        let old_frontier = self.lm_kv.pos_phys - self.decode_block;
+        for &slot in &prep.pending {
             let blk = &sampled[slot * self.decode_block..(slot + 1) * self.decode_block];
             let beam = &mut self.beams.beams[slot];
             let (fed, boundary) = beam.accept_block(blk);
@@ -179,12 +210,33 @@ impl SearchCtx {
             self.ledger.lm_decode(fed);
             if boundary.is_none()
                 && beam.current_step_len() >= self.cfg.max_step_tokens
-                && matches!(target, PhaseTarget::Boundary)
+                && matches!(prep.target, PhaseTarget::Boundary)
             {
                 beam.dead = true; // runaway: never closed the step
             }
         }
-        Ok(DecodeTick::Progress)
+    }
+
+    /// Run one lockstep decode block toward `target` — the resumable unit
+    /// the fleet scheduler interleaves across requests. Blocking
+    /// composition of [`SearchCtx::decode_prepare`] +
+    /// [`SearchCtx::decode_absorb`].
+    pub fn decode_tick(&mut self, engine: &Engine, target: PhaseTarget) -> Result<DecodeTick> {
+        match self.decode_prepare(target) {
+            DecodeStage::Done => Ok(DecodeTick::Done),
+            DecodeStage::Exhausted => Ok(DecodeTick::Exhausted),
+            DecodeStage::Call(prep) => {
+                let sampled = engine.lm_decode_block(
+                    &self.lm_ckpt,
+                    &mut self.lm_kv,
+                    &prep.prev,
+                    self.temp,
+                    &prep.keys,
+                )?;
+                self.decode_absorb(&prep, &sampled);
+                Ok(DecodeTick::Progress)
+            }
+        }
     }
 
     /// Run lockstep decode blocks until every beam satisfies `target`.
@@ -200,9 +252,10 @@ impl SearchCtx {
         }
     }
 
-    /// Drain PRM backlogs (scores for all clean tokens).
-    pub fn score_catch_up(&mut self, engine: &Engine) -> Result<bool> {
-        // bound: each round advances the PRM frontier by score_block
+    /// The upfront KV-budget check applied before draining PRM backlogs:
+    /// false when the cache cannot hold every round the worst backlog
+    /// needs (each round advances the lockstep frontier by `score_block`).
+    pub fn score_budget_ok(&self) -> bool {
         let max_backlog = self
             .beams
             .beams
@@ -211,8 +264,43 @@ impl SearchCtx {
             .map(|b| b.gen.len() - b.prm_fed)
             .max()
             .unwrap_or(0);
-        let rounds = max_backlog.div_ceil(engine.manifest.score_block);
-        if self.prm_kv.remaining() < rounds * engine.manifest.score_block {
+        let rounds = max_backlog.div_ceil(self.score_block);
+        self.prm_kv.remaining() >= rounds * self.score_block
+    }
+
+    /// Mid-phase recheck of the per-round budget. A gang-merged call can
+    /// advance the PRM frontier faster than this task's own pacing
+    /// (merged writes land at the max of the members' frontiers), so the
+    /// upfront [`SearchCtx::score_budget_ok`] verdict can go stale
+    /// between rounds. True when no round is pending or the next one
+    /// still fits; always true on the solo path, where the upfront check
+    /// already covered every round.
+    pub fn score_round_fits(&self) -> bool {
+        let backlog = self.beams.beams.iter().any(|b| !b.dead && b.prm_fed < b.gen.len());
+        !backlog || self.prm_kv.remaining() >= self.score_block
+    }
+
+    /// Next PRM scoring round, or `None` once every backlog is drained.
+    pub fn score_prepare(&self) -> Option<scorer::ScoreRound> {
+        scorer::prepare_round(&self.beams, self.prm_kv.batch, self.score_block)
+    }
+
+    /// Fold one scoring round's results back (post-call frontier already
+    /// in `prm_kv`, as with [`SearchCtx::decode_absorb`]).
+    pub fn score_absorb(&mut self, round: &scorer::ScoreRound, scores: &[f32]) {
+        scorer::absorb_round(
+            round,
+            scores,
+            self.score_block,
+            &mut self.prm_kv,
+            &mut self.beams,
+            &mut self.ledger,
+        );
+    }
+
+    /// Drain PRM backlogs (scores for all clean tokens).
+    pub fn score_catch_up(&mut self, engine: &Engine) -> Result<bool> {
+        if !self.score_budget_ok() {
             log_debug!("PRM KV cache exhausted; stopping scoring");
             return Ok(false);
         }

@@ -22,8 +22,9 @@ use crate::config::{Aggregation, SearchConfig};
 use crate::coordinator::beam::BeamSet;
 use crate::coordinator::policy::RejectPolicy;
 use crate::coordinator::scheduler::TwoTierPlan;
-use crate::coordinator::search::{DecodeTick, PhaseTarget, SearchCtx, SolveOutcome};
-use crate::runtime::Engine;
+use crate::coordinator::scorer::ScoreRound;
+use crate::coordinator::search::{DecodePrep, DecodeStage, PhaseTarget, SearchCtx, SolveOutcome};
+use crate::runtime::{Engine, KvSet};
 use crate::util::error::{Error, Result};
 use crate::workload::Problem;
 
@@ -36,6 +37,81 @@ pub enum Progress {
     Done,
 }
 
+/// What one cooperative `poll` call produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// The task parked a prepared engine call (see [`SolveTask::intent`]).
+    /// The caller must run it — alone via [`SolveTask::execute_intent`],
+    /// or merged with other tasks' compatible intents by the gang batcher
+    /// (`crate::batch`) — before the next `poll`.
+    Yielded,
+    /// A host-side transition (or a terminal event) happened.
+    Progressed(Progress),
+}
+
+/// Which engine program class a yielded intent targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IntentKind {
+    /// `decode_bN` on the LM cache.
+    Decode,
+    /// `score_bN` on the PRM cache.
+    Score,
+}
+
+/// A prepared engine call a [`SolveTask`] has yielded to its scheduler
+/// instead of executing itself — the unit the gang batcher packs into
+/// shared device batches. Carries only host data; the device cache it
+/// targets stays inside the task (see `gang_kv`/`gang_absorb`).
+#[derive(Debug)]
+pub struct DecodeIntent {
+    pub kind: IntentKind,
+    /// Checkpoint the call runs against (LM for decode, PRM for score).
+    pub ckpt: String,
+    /// Device batch of this task's own cache.
+    pub batch: usize,
+    /// Sampling temperature. Part of the gang key because the decode
+    /// program takes one scalar for the whole (possibly shared) batch.
+    pub temp: f32,
+    payload: Payload,
+}
+
+#[derive(Debug)]
+enum Payload {
+    Decode(DecodePrep),
+    Score(ScoreRound),
+}
+
+impl DecodeIntent {
+    /// Grouping key: only intents agreeing on all of these may share one
+    /// device call.
+    pub fn gang_key(&self) -> (IntentKind, &str, u32) {
+        (self.kind, &self.ckpt, self.temp.to_bits())
+    }
+
+    /// Decode inputs `(prev_tok, keys)`, if this is a decode intent.
+    pub(crate) fn decode_inputs(&self) -> Option<(&[i32], &[u32])> {
+        match &self.payload {
+            Payload::Decode(p) => Some((&p.prev, &p.keys)),
+            Payload::Score(_) => None,
+        }
+    }
+
+    /// Score token matrix `[batch * score_block]`, if a score intent.
+    pub(crate) fn score_tokens(&self) -> Option<&[i32]> {
+        match &self.payload {
+            Payload::Score(r) => Some(&r.tokens),
+            Payload::Decode(_) => None,
+        }
+    }
+}
+
+/// One member's slice of a (possibly merged) call's outputs, routed back
+/// by the gang executor.
+pub(crate) enum GangOut<'a> {
+    Tokens(&'a [i32]),
+    Scores(&'a [f32]),
+}
+
 /// Which decoder drives the task.
 #[derive(Debug, Clone, Copy)]
 enum Mode {
@@ -45,20 +121,23 @@ enum Mode {
 
 /// The resumable-solve state. Decode states tick one block per advance;
 /// host-side transitions (reject, finalize, expand) are one advance each.
+/// `score_ok` is the PRM KV-budget verdict, taken once at the decode →
+/// score transition (the same point the blocking path checked it) so the
+/// round-at-a-time cooperative scoring keeps the blocking semantics.
 #[derive(Debug, Clone, Copy)]
 enum State {
     Init,
     // vanilla: decode to boundary, score, select + expand
     VDecode,
-    VScore { decode_ok: bool },
+    VScore { decode_ok: bool, score_ok: bool },
     VSelect,
     // early rejection: prefix decode, score, reject (+shrink),
     // completion decode, score, finalize (+expand)
     ADecode,
-    AScore { decode_ok: bool },
+    AScore { decode_ok: bool, score_ok: bool },
     Reject,
     BDecode { plan: TwoTierPlan },
-    BScore { plan: TwoTierPlan, decode_ok: bool },
+    BScore { plan: TwoTierPlan, decode_ok: bool, score_ok: bool },
     Finalize { plan: TwoTierPlan },
     Done,
 }
@@ -78,6 +157,8 @@ pub struct SolveTask {
     mode: Mode,
     state: State,
     ctx: Option<SearchCtx>,
+    /// Engine call parked by the last `poll` (see [`Step::Yielded`]).
+    pending: Option<DecodeIntent>,
     t0: Instant,
     /// Steps counted the same way the blocking solvers counted them.
     steps: usize,
@@ -142,6 +223,7 @@ impl SolveTask {
             mode,
             state: State::Init,
             ctx: None,
+            pending: None,
             t0: Instant::now(),
             steps: 0,
             iters: 0,
@@ -202,11 +284,163 @@ impl SolveTask {
         Ok(Progress::Done)
     }
 
-    /// Perform one bounded unit of work. Errors are terminal: the caller
-    /// should drop the task and surface the error.
+    /// Perform one bounded unit of work, executing any yielded engine call
+    /// immediately on `engine` (the sequential path — byte-identical to
+    /// the pre-gang dispatch). Errors are terminal: the caller should drop
+    /// the task and surface the error.
     pub fn advance(&mut self, engine: &Engine) -> Result<Progress> {
+        match self.poll(engine)? {
+            Step::Progressed(p) => Ok(p),
+            Step::Yielded => {
+                self.execute_intent(engine)?;
+                Ok(Progress::Working)
+            }
+        }
+    }
+
+    /// The engine call parked by the last `poll`, if any.
+    pub fn intent(&self) -> Option<&DecodeIntent> {
+        self.pending.as_ref()
+    }
+
+    /// Execute the parked engine call on this task's own cache — the solo
+    /// path. Performs exactly the call `decode_tick`/`score_catch_up`
+    /// would have made.
+    pub fn execute_intent(&mut self, engine: &Engine) -> Result<()> {
+        let intent = self
+            .pending
+            .take()
+            .ok_or_else(|| Error::internal("execute_intent without a pending intent"))?;
+        let ctx = self
+            .ctx
+            .as_mut()
+            .ok_or_else(|| Error::internal("pending intent without a SearchCtx"))?;
+        match intent.payload {
+            Payload::Decode(prep) => {
+                let sampled = engine.lm_decode_block(
+                    &ctx.lm_ckpt,
+                    &mut ctx.lm_kv,
+                    &prep.prev,
+                    intent.temp,
+                    &prep.keys,
+                )?;
+                ctx.decode_absorb(&prep, &sampled);
+            }
+            Payload::Score(round) => {
+                let scores = engine.prm_score_block(&ctx.prm_ckpt, &mut ctx.prm_kv, &round.tokens)?;
+                ctx.score_absorb(&round, &scores);
+            }
+        }
+        Ok(())
+    }
+
+    /// The device cache the parked intent targets (gang-merge input).
+    pub(crate) fn gang_kv(&self) -> Result<&KvSet> {
+        let intent = self
+            .pending
+            .as_ref()
+            .ok_or_else(|| Error::internal("gang_kv without a pending intent"))?;
+        let ctx = self
+            .ctx
+            .as_ref()
+            .ok_or_else(|| Error::internal("pending intent without a SearchCtx"))?;
+        Ok(match intent.kind {
+            IntentKind::Decode => &ctx.lm_kv,
+            IntentKind::Score => &ctx.prm_kv,
+        })
+    }
+
+    /// Complete the parked intent after a gang-merged call: install the
+    /// split-back cache (carrying the merged post-call frontier) and fold
+    /// this member's output slice into the beams.
+    pub(crate) fn gang_absorb(&mut self, kv: KvSet, out: GangOut) -> Result<()> {
+        let intent = self
+            .pending
+            .take()
+            .ok_or_else(|| Error::internal("gang_absorb without a pending intent"))?;
+        let ctx = self
+            .ctx
+            .as_mut()
+            .ok_or_else(|| Error::internal("pending intent without a SearchCtx"))?;
+        match (intent.payload, out) {
+            (Payload::Decode(prep), GangOut::Tokens(toks)) => {
+                ctx.lm_kv = kv;
+                ctx.decode_absorb(&prep, toks);
+                Ok(())
+            }
+            (Payload::Score(round), GangOut::Scores(scores)) => {
+                ctx.prm_kv = kv;
+                ctx.score_absorb(&round, scores);
+                Ok(())
+            }
+            _ => Err(Error::internal("gang output kind mismatched the intent")),
+        }
+    }
+
+    /// Shared decode-state driver: yield the prepared call, or take the
+    /// decode → score transition (fixing the PRM budget verdict at the
+    /// same point the blocking path checked it).
+    fn poll_decode(
+        &mut self,
+        target: PhaseTarget,
+        next: impl FnOnce(bool, bool) -> State,
+    ) -> Result<Step> {
+        match self.ctx_mut().decode_prepare(target) {
+            DecodeStage::Call(prep) => {
+                let ctx = self.ctx.as_ref().expect("decode_prepare ran on a ctx");
+                self.pending = Some(DecodeIntent {
+                    kind: IntentKind::Decode,
+                    ckpt: ctx.lm_ckpt.clone(),
+                    batch: ctx.lm_kv.batch,
+                    temp: self.temp,
+                    payload: Payload::Decode(prep),
+                });
+                Ok(Step::Yielded)
+            }
+            DecodeStage::Done => {
+                let score_ok = self.ctx_mut().score_budget_ok();
+                self.state = next(true, score_ok);
+                Ok(Step::Progressed(Progress::Working))
+            }
+            DecodeStage::Exhausted => {
+                let score_ok = self.ctx_mut().score_budget_ok();
+                self.state = next(false, score_ok);
+                Ok(Step::Progressed(Progress::Working))
+            }
+        }
+    }
+
+    /// Shared score-state driver: yield the next scoring round, or report
+    /// the phase drained (after harvesting finished beams, like the
+    /// blocking path did right after `score_catch_up`).
+    fn poll_score(&mut self, score_ok: bool) -> Option<Step> {
+        if score_ok {
+            if let Some(round) = self.ctx_mut().score_prepare() {
+                let ctx = self.ctx.as_ref().expect("score_prepare ran on a ctx");
+                self.pending = Some(DecodeIntent {
+                    kind: IntentKind::Score,
+                    ckpt: ctx.prm_ckpt.clone(),
+                    batch: ctx.prm_kv.batch,
+                    temp: 0.0,
+                    payload: Payload::Score(round),
+                });
+                return Some(Step::Yielded);
+            }
+        }
+        self.ctx_mut().harvest_finished();
+        None
+    }
+
+    /// One cooperative unit of work: either a host transition happened
+    /// ([`Step::Progressed`]) or an engine call was prepared and parked
+    /// ([`Step::Yielded`]) for the caller to execute solo or gang-merged.
+    /// Engine-call order is identical to the blocking path in both cases.
+    pub fn poll(&mut self, engine: &Engine) -> Result<Step> {
+        if self.pending.is_some() {
+            return Err(Error::internal("poll while an intent is still pending"));
+        }
         match self.state {
-            State::Done => Ok(Progress::Done),
+            State::Done => Ok(Step::Progressed(Progress::Done)),
             State::Init => {
                 let ctx = SearchCtx::init(
                     engine,
@@ -220,33 +454,32 @@ impl SolveTask {
                 if self.cfg.max_steps == 0 {
                     // parity with the blocking `for _ in 0..max_steps`
                     // loops: zero iterations, finish on the sampled beams
-                    return self.complete();
+                    return self.complete().map(Step::Progressed);
                 }
                 self.state = match self.mode {
                     Mode::Vanilla => State::VDecode,
                     Mode::Er { .. } => State::ADecode,
                 };
-                Ok(Progress::Working)
+                Ok(Step::Progressed(Progress::Working))
             }
 
             // ---------------------------------------------------- vanilla
-            State::VDecode => {
-                match self.ctx_mut().decode_tick(engine, PhaseTarget::Boundary)? {
-                    DecodeTick::Progress => {}
-                    DecodeTick::Done => self.state = State::VScore { decode_ok: true },
-                    DecodeTick::Exhausted => self.state = State::VScore { decode_ok: false },
+            State::VDecode => self.poll_decode(PhaseTarget::Boundary, |decode_ok, score_ok| {
+                State::VScore { decode_ok, score_ok }
+            }),
+            State::VScore { decode_ok, score_ok } => {
+                // gang merges can blow the budget mid-phase; recheck
+                // (no-op on the solo path — see score_round_fits)
+                let score_ok = score_ok && self.ctx_mut().score_round_fits();
+                if let Some(step) = self.poll_score(score_ok) {
+                    return Ok(step);
                 }
-                Ok(Progress::Working)
-            }
-            State::VScore { decode_ok } => {
-                let ok2 = self.ctx_mut().score_catch_up(engine)?;
-                self.ctx_mut().harvest_finished();
-                if !decode_ok || !ok2 {
-                    return self.complete();
+                if !decode_ok || !score_ok {
+                    return self.complete().map(Step::Progressed);
                 }
                 self.steps += 1;
                 self.state = State::VSelect;
-                Ok(Progress::Working)
+                Ok(Step::Progressed(Progress::Working))
             }
             State::VSelect => {
                 let agg = self.cfg.agg;
@@ -260,38 +493,37 @@ impl SolveTask {
                     }
                 }
                 if scored.is_empty() {
-                    return self.complete(); // every beam finished or died
+                    return self.complete().map(Step::Progressed); // every beam finished or died
                 }
                 scored.sort_by(crate::coordinator::policy::rank_desc);
                 let survivors: Vec<usize> = scored.iter().take(keep).map(|&(s, _)| s).collect();
                 self.ctx_mut().expand(engine, &survivors)?;
                 self.iters += 1;
                 if self.iters >= self.cfg.max_steps {
-                    return self.complete();
+                    return self.complete().map(Step::Progressed);
                 }
                 self.state = State::VDecode;
-                Ok(Progress::Working)
+                Ok(Step::Progressed(Progress::Working))
             }
 
             // -------------------------------------------- early rejection
             State::ADecode => {
                 let tau = self.cfg.tau;
-                match self.ctx_mut().decode_tick(engine, PhaseTarget::Prefix { tau })? {
-                    DecodeTick::Progress => {}
-                    DecodeTick::Done => self.state = State::AScore { decode_ok: true },
-                    DecodeTick::Exhausted => self.state = State::AScore { decode_ok: false },
-                }
-                Ok(Progress::Working)
+                self.poll_decode(PhaseTarget::Prefix { tau }, |decode_ok, score_ok| {
+                    State::AScore { decode_ok, score_ok }
+                })
             }
-            State::AScore { decode_ok } => {
-                let ok2 = self.ctx_mut().score_catch_up(engine)?;
-                self.ctx_mut().harvest_finished();
-                if !decode_ok || !ok2 {
-                    return self.complete();
+            State::AScore { decode_ok, score_ok } => {
+                let score_ok = score_ok && self.ctx_mut().score_round_fits();
+                if let Some(step) = self.poll_score(score_ok) {
+                    return Ok(step);
+                }
+                if !decode_ok || !score_ok {
+                    return self.complete().map(Step::Progressed);
                 }
                 self.steps += 1;
                 self.state = State::Reject;
-                Ok(Progress::Working)
+                Ok(Step::Progressed(Progress::Working))
             }
             State::Reject => {
                 let Mode::Er { policy, two_tier } = self.mode else {
@@ -300,7 +532,8 @@ impl SolveTask {
                 let (tau, agg) = (self.cfg.tau, self.cfg.agg);
                 let scored = partial_scores(&self.ctx_mut().beams, tau, agg);
                 if scored.is_empty() {
-                    return self.complete(); // pool exhausted (all finished or dead)
+                    // pool exhausted (all finished or dead)
+                    return self.complete().map(Step::Progressed);
                 }
                 let survivors = policy.select(&scored);
                 let ctx = self.ctx_mut();
@@ -319,24 +552,25 @@ impl SolveTask {
                     self.ctx_mut().shrink_to_b2(engine, &survivors, plan)?;
                 }
                 self.state = State::BDecode { plan };
-                Ok(Progress::Working)
+                Ok(Step::Progressed(Progress::Working))
             }
             State::BDecode { plan } => {
-                match self.ctx_mut().decode_tick(engine, PhaseTarget::Boundary)? {
-                    DecodeTick::Progress => {}
-                    DecodeTick::Done => self.state = State::BScore { plan, decode_ok: true },
-                    DecodeTick::Exhausted => self.state = State::BScore { plan, decode_ok: false },
-                }
-                Ok(Progress::Working)
+                self.poll_decode(PhaseTarget::Boundary, |decode_ok, score_ok| State::BScore {
+                    plan,
+                    decode_ok,
+                    score_ok,
+                })
             }
-            State::BScore { plan, decode_ok } => {
-                let ok2 = self.ctx_mut().score_catch_up(engine)?;
-                self.ctx_mut().harvest_finished();
-                if !decode_ok || !ok2 {
-                    return self.complete();
+            State::BScore { plan, decode_ok, score_ok } => {
+                let score_ok = score_ok && self.ctx_mut().score_round_fits();
+                if let Some(step) = self.poll_score(score_ok) {
+                    return Ok(step);
+                }
+                if !decode_ok || !score_ok {
+                    return self.complete().map(Step::Progressed);
                 }
                 self.state = State::Finalize { plan };
-                Ok(Progress::Working)
+                Ok(Step::Progressed(Progress::Working))
             }
             State::Finalize { plan } => {
                 let agg = self.cfg.agg;
@@ -349,7 +583,7 @@ impl SolveTask {
                     }
                 }
                 if final_survivors.is_empty() {
-                    return self.complete();
+                    return self.complete().map(Step::Progressed);
                 }
                 final_survivors.sort_by(crate::coordinator::policy::rank_desc);
                 let order: Vec<usize> = final_survivors.iter().map(|&(s, _)| s).collect();
@@ -360,10 +594,10 @@ impl SolveTask {
                 }
                 self.iters += 1;
                 if self.iters >= self.cfg.max_steps {
-                    return self.complete();
+                    return self.complete().map(Step::Progressed);
                 }
                 self.state = State::ADecode;
-                Ok(Progress::Working)
+                Ok(Step::Progressed(Progress::Working))
             }
         }
     }
@@ -418,6 +652,21 @@ mod tests {
         // active beams whose scorer hasn't caught up are also excluded
         let set2 = beamset(2); // fresh beams: 1 gen token, 0 scores
         assert!(partial_scores(&set2, 4, Aggregation::Mean).is_empty());
+    }
+
+    #[test]
+    fn cooperative_surface_guards() {
+        let p = Problem { v0: 5, ops: vec![crate::workload::OpStep { op: tk::PLUS, d: 3 }] };
+        let mut task =
+            SolveTask::early_rejection(p, "lm", "prm", &SearchConfig::default(), 0.5).unwrap();
+        // nothing parked before the first poll reaches a decode/score state
+        assert!(task.intent().is_none());
+        assert!(task.gang_kv().is_err(), "gang access without a pending intent");
+        let e = task.gang_absorb(
+            crate::runtime::KvSet::new(Vec::new(), 1, 4),
+            super::GangOut::Tokens(&[]),
+        );
+        assert!(e.is_err());
     }
 
     #[test]

@@ -34,10 +34,14 @@
 //! byte-identical (modulo wall-clock) whether it ran alone or interleaved
 //! with any number of other tasks — the integration suite pins this.
 //!
-//! What this is *not* (yet): requests still decode in separate device
-//! batches. Merging concurrent requests' beams into one shared device
-//! batch needs KV-merge programs the artifact exporter does not emit;
-//! that follow-up is tracked in ROADMAP.md.
+//! With `--gang`, the shard loop goes one level deeper than interleaving:
+//! tasks are driven cooperatively (`SolveTask::poll`) so their decode and
+//! score calls are *yielded* as intents, and the gang batcher
+//! ([`crate::batch`]) merges compatible intents (same checkpoint, same
+//! program class, same temperature) into one shared device batch via the
+//! exported `merge_bA_bB_to_bC` KV programs — true cross-request device
+//! batching, not just time-slicing. An intent waits at most
+//! `gang_max_wait` rounds for partners before running solo.
 
 pub mod queue;
 pub mod shard;
@@ -68,10 +72,18 @@ pub struct FleetOptions {
     /// Aging guard: a queued request older than this is scheduled next
     /// regardless of priority, so nothing starves.
     pub fair_after_ms: u64,
+    /// Gang batching: merge compatible in-flight tasks' decode/score
+    /// calls into shared device batches (needs artifacts exported with
+    /// merge programs; degrades to solo calls without them).
+    pub gang: bool,
+    /// Scheduler rounds a yielded intent may wait for gang partners
+    /// before executing solo (0 = never wait). A task that is alone in
+    /// the slot table never waits at all.
+    pub gang_max_wait: u64,
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
-        FleetOptions { max_inflight: 8, fair_after_ms: 500 }
+        FleetOptions { max_inflight: 8, fair_after_ms: 500, gang: false, gang_max_wait: 1 }
     }
 }

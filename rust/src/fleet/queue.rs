@@ -13,17 +13,19 @@
 //! wasting a slot. All methods take `now` explicitly, which keeps the
 //! policy deterministic and directly testable without sleeping.
 
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::config::{SearchConfig, SearchMode};
 use crate::coordinator::task::SolveTask;
 use crate::fleet::Solved;
 use crate::util::error::Result;
+use crate::util::oneshot;
 use crate::workload::Problem;
 
-/// Reply channel a solve result is delivered on.
-pub type ReplyTx = mpsc::Sender<Result<Solved>>;
+/// Reply channel a solve result is delivered on. A oneshot with hang-up
+/// detection: `is_closed()` is how the drive loop notices a client
+/// disconnect mid-flight and reclaims the slot (see `shard.rs`).
+pub type ReplyTx = oneshot::Sender<Result<Solved>>;
 
 /// Everything needed to build a [`SolveTask`] shard-side. Host data only,
 /// so it crosses the HTTP-worker → shard-thread boundary (the task itself
@@ -84,6 +86,24 @@ impl FleetJob {
     pub fn waited_ms(&self, now: Instant) -> f64 {
         now.saturating_duration_since(self.enqueued).as_secs_f64() * 1000.0
     }
+}
+
+/// Queue-wait forecast for a newly arrived job: everything ahead of it
+/// (queued + in flight) drains `slots` wide at `mean_service_ms` apiece.
+/// Deadline-aware admission bounces a bounded job whose forecast already
+/// exceeds its remaining budget, so it fails fast with 504 instead of
+/// burning slot time before the inevitable abort. Returns 0 until a
+/// service-time estimate exists (never reject on no data).
+pub fn admission_forecast_ms(
+    queued: usize,
+    inflight: usize,
+    slots: usize,
+    mean_service_ms: f64,
+) -> f64 {
+    if slots == 0 || mean_service_ms <= 0.0 {
+        return 0.0;
+    }
+    ((queued + inflight) as f64 / slots as f64) * mean_service_ms
 }
 
 /// The per-shard admission queue. O(n) selection per pop — queues are
@@ -191,8 +211,8 @@ mod tests {
         key: &str,
         priority: i64,
         deadline_ms: Option<u64>,
-    ) -> (FleetJob, mpsc::Receiver<Result<Solved>>) {
-        let (tx, rx) = mpsc::channel();
+    ) -> (FleetJob, oneshot::Receiver<Result<Solved>>) {
+        let (tx, rx) = oneshot::channel();
         (
             FleetJob {
                 spec: spec(),
@@ -304,6 +324,34 @@ mod tests {
         let (u, _r2) = job(base, "y", 0, None);
         assert!(u.deadline_at().is_none());
         assert!(!u.expired(base + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn forecast_scales_with_pressure_and_never_fires_blind() {
+        // no service-time estimate yet: never reject
+        assert_eq!(admission_forecast_ms(10, 8, 4, 0.0), 0.0);
+        // zero slots can't forecast either
+        assert_eq!(admission_forecast_ms(10, 8, 0, 100.0), 0.0);
+        // 12 jobs ahead draining 4 wide at 100ms each -> ~300ms wait
+        let f = admission_forecast_ms(8, 4, 4, 100.0);
+        assert!((f - 300.0).abs() < 1e-9);
+        // more slots, shorter forecast
+        assert!(admission_forecast_ms(8, 4, 8, 100.0) < f);
+    }
+
+    #[test]
+    fn closed_reply_channels_are_observable_for_queue_sweeps() {
+        let base = Instant::now();
+        let mut q = AdmissionQueue::new(Duration::from_millis(500));
+        let (alive, _keep) = job(base, "alive", 0, None);
+        let (gone, dead_rx) = job(base, "gone", 0, None);
+        drop(dead_rx); // client hung up while queued
+        q.push(alive);
+        q.push(gone);
+        let dropped = q.drain_matching(|j| j.reply.is_closed());
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(key_of(&dropped[0]), "gone");
+        assert_eq!(q.len(), 1);
     }
 
     #[test]

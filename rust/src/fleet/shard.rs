@@ -5,13 +5,26 @@
 //!
 //! 1. **Ingest** — drain newly arrived jobs into the admission queue
 //!    (blocking only when completely idle, so the loop never spins).
-//! 2. **Expire** — bounce queued jobs whose deadline elapsed (HTTP 504).
+//!    Deadline-aware admission bounces bounded jobs whose queue-wait
+//!    forecast (slot pressure x mean service time) already exceeds their
+//!    budget — 504 at the door instead of a doomed slot occupation.
+//! 2. **Expire / cancel** — bounce queued jobs whose deadline elapsed
+//!    (HTTP 504) and drop queued jobs whose client already hung up.
 //! 3. **Coalesce** — fold queued duplicates of an in-flight task onto it.
 //! 4. **Backfill** — admit queued jobs into free slots, building each a
 //!    resumable [`SolveTask`].
 //! 5. **Advance** — give every occupied slot one bounded unit of engine
-//!    work; completed/failed/expired tasks reply and free their slot for
-//!    the next round's backfill.
+//!    work; completed/failed/expired tasks reply and free their slot.
+//!    A slot whose every attached reply channel is closed (client
+//!    disconnect) is treated like an expired deadline: cancelled, freed,
+//!    backfilled next round. With gang batching on, tasks are *polled*
+//!    cooperatively instead: yielded decode/score intents park in the
+//!    slot and step 6 packs them.
+//! 6. **Gang dispatch** (`--gang`) — group parked intents by
+//!    (checkpoint, program, temperature), pack them largest-first into
+//!    merged batch variants ([`crate::batch::plan_gangs`]), and run one
+//!    shared device call per gang; leftovers execute solo once they have
+//!    waited `gang_max_wait` rounds (immediately when the task is alone).
 //!
 //! The engine stays `!Send`-confined to this thread; only host-side job
 //! envelopes cross the channel.
@@ -20,8 +33,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::task::{Progress, SolveTask};
-use crate::fleet::queue::{AdmissionQueue, FleetJob, ReplyTx};
+use crate::batch::{self, BatchStats};
+use crate::coordinator::task::{IntentKind, Progress, SolveTask, Step};
+use crate::fleet::queue::{admission_forecast_ms, AdmissionQueue, FleetJob, ReplyTx};
 use crate::fleet::stats::FleetStats;
 use crate::fleet::{FleetOptions, Solved};
 use crate::log_error;
@@ -57,6 +71,11 @@ struct Running {
     deadline_at: Option<Instant>,
     /// True once any attached request is unbounded (no deadline).
     unbounded: bool,
+    /// When the task entered its slot (service-time estimation).
+    admitted_at: Instant,
+    /// Rounds the task's yielded intent has been parked awaiting gang
+    /// partners; `None` = no intent parked (gang mode only).
+    parked: Option<u64>,
     primary: Waiter,
     riders: Vec<Waiter>,
 }
@@ -78,16 +97,36 @@ impl Running {
     fn expired(&self, now: Instant) -> bool {
         !self.unbounded && self.deadline_at.map(|t| now >= t).unwrap_or(false)
     }
+
+    /// Every attached client hung up: nobody will read a result, so the
+    /// slot is better spent on queued work (ROADMAP: client disconnect
+    /// cancellation).
+    fn abandoned(&self) -> bool {
+        self.primary.reply.is_closed() && self.riders.iter().all(|w| w.reply.is_closed())
+    }
+}
+
+/// What one slot's turn in the advance pass produced.
+enum SlotTick {
+    /// Task parked an intent (gang mode) or simply progressed.
+    Working,
+    /// Task finished; run the completion protocol.
+    Done,
+    /// Task errored terminally.
+    Failed(Error),
 }
 
 /// Drive one shard's fleet loop until the source closes. `poll(true)`
 /// must block for the next message; `poll(false)` must return
 /// immediately. `solved`/`engine_stats` are the pool-level per-shard
-/// counters the sequential path also maintains.
+/// counters the sequential path also maintains; `bstats` is the gang
+/// batcher's telemetry (all-zero with `gang` off).
+#[allow(clippy::too_many_arguments)]
 pub fn drive(
     engine: &Engine,
     opts: &FleetOptions,
     stats: &FleetStats,
+    bstats: &BatchStats,
     solved: &AtomicU64,
     engine_stats: &Mutex<EngineStats>,
     mut poll: impl FnMut(bool) -> Poll,
@@ -97,6 +136,10 @@ pub fn drive(
     let mut queue = AdmissionQueue::new(Duration::from_millis(opts.fair_after_ms.max(1)));
     let mut inflight = 0usize;
     let mut shutdown = false;
+    // running mean of task service time (admission -> completion), the
+    // admission forecast's per-job cost estimate
+    let mut mean_service_ms = 0.0f64;
+    let mut completed_n = 0u64;
 
     loop {
         // ---- 1. ingest
@@ -105,7 +148,9 @@ pub fn drive(
                 break;
             }
             match poll(true) {
-                Poll::Job(j) => queue.push(*j),
+                Poll::Job(j) => {
+                    admit(*j, &mut queue, &slots, inflight, n_slots, mean_service_ms, stats)
+                }
                 Poll::Shutdown => shutdown = true,
                 Poll::Closed => break,
                 Poll::Empty => {}
@@ -114,7 +159,9 @@ pub fn drive(
         }
         loop {
             match poll(false) {
-                Poll::Job(j) => queue.push(*j),
+                Poll::Job(j) => {
+                    admit(*j, &mut queue, &slots, inflight, n_slots, mean_service_ms, stats)
+                }
                 Poll::Shutdown => shutdown = true,
                 Poll::Closed => {
                     shutdown = true;
@@ -125,7 +172,7 @@ pub fn drive(
         }
         let now = Instant::now();
 
-        // ---- 2. expire queued work
+        // ---- 2. expire queued work; drop queued work nobody waits for
         for job in queue.expire(now) {
             stats.expired_total.fetch_add(1, Ordering::Relaxed);
             let _ = job.reply.send(Err(Error::deadline(format!(
@@ -133,6 +180,10 @@ pub fn drive(
                 job.waited_ms(now),
                 job.deadline.map(|d| d.as_millis()).unwrap_or(0)
             ))));
+        }
+        for _job in queue.drain_matching(|j| j.reply.is_closed()) {
+            // the receiver is gone; there is nobody to reply to
+            stats.cancelled_total.fetch_add(1, Ordering::Relaxed);
         }
 
         // ---- 3. coalesce queued duplicates onto in-flight tasks
@@ -189,6 +240,8 @@ pub fn drive(
                         key: job.key,
                         deadline_at: None,
                         unbounded: false,
+                        admitted_at: now,
+                        parked: None,
                         primary: Waiter { reply: job.reply, queue_wait_ms: wait_ms },
                         riders: Vec::new(),
                     };
@@ -205,6 +258,12 @@ pub fn drive(
         }
         for idx in 0..slots.len() {
             let Some(r) = slots[idx].as_mut() else { continue };
+            if r.abandoned() {
+                slots[idx] = None;
+                inflight -= 1;
+                stats.cancelled_total.fetch_add(1, Ordering::Relaxed);
+                continue; // no reply possible: every receiver is gone
+            }
             if r.expired(Instant::now()) {
                 let r = slots[idx].take().expect("checked occupied");
                 inflight -= 1;
@@ -212,44 +271,45 @@ pub fn drive(
                 reply_error(r, Error::deadline("aborted mid-solve: deadline elapsed"));
                 continue;
             }
-            match r.task.advance(engine) {
-                Ok(Progress::Working) => {}
-                Ok(Progress::Done) => {
-                    let mut r = slots[idx].take().expect("checked occupied");
-                    inflight -= 1;
-                    solved.fetch_add(1, Ordering::Relaxed);
-                    *engine_stats.lock().unwrap() = engine.stats();
-                    if r.expired(Instant::now()) {
-                        // budget blew during the final advance: the 504
-                        // contract beats returning a too-late 200
-                        stats.expired_total.fetch_add(1, Ordering::Relaxed);
-                        reply_error(
-                            r,
-                            Error::deadline("deadline elapsed during the final solve step"),
-                        );
-                        continue;
-                    }
-                    match r.task.take_outcome() {
-                        Some(out) => {
-                            stats.completed_total.fetch_add(1, Ordering::Relaxed);
-                            for w in r.riders {
-                                let _ = w.reply.send(Ok(Solved {
-                                    outcome: out.clone(),
-                                    queue_wait_ms: w.queue_wait_ms,
-                                }));
-                            }
-                            let _ = r.primary.reply.send(Ok(Solved {
-                                outcome: out,
-                                queue_wait_ms: r.primary.queue_wait_ms,
-                            }));
+            let tick = if opts.gang {
+                if let Some(age) = r.parked {
+                    // intent still waiting for partners; step 6 decides
+                    r.parked = Some(age + 1);
+                    SlotTick::Working
+                } else {
+                    match r.task.poll(engine) {
+                        Ok(Step::Yielded) => {
+                            r.parked = Some(0);
+                            SlotTick::Working
                         }
-                        None => {
-                            stats.failed_total.fetch_add(1, Ordering::Relaxed);
-                            reply_error(r, Error::internal("finished task lost its outcome"));
-                        }
+                        Ok(Step::Progressed(Progress::Working)) => SlotTick::Working,
+                        Ok(Step::Progressed(Progress::Done)) => SlotTick::Done,
+                        Err(e) => SlotTick::Failed(e),
                     }
                 }
-                Err(e) => {
+            } else {
+                match r.task.advance(engine) {
+                    Ok(Progress::Working) => SlotTick::Working,
+                    Ok(Progress::Done) => SlotTick::Done,
+                    Err(e) => SlotTick::Failed(e),
+                }
+            };
+            match tick {
+                SlotTick::Working => {}
+                SlotTick::Done => {
+                    let r = slots[idx].take().expect("checked occupied");
+                    inflight -= 1;
+                    finish_task(
+                        r,
+                        engine,
+                        stats,
+                        solved,
+                        engine_stats,
+                        &mut mean_service_ms,
+                        &mut completed_n,
+                    );
+                }
+                SlotTick::Failed(e) => {
                     let r = slots[idx].take().expect("checked occupied");
                     inflight -= 1;
                     stats.failed_total.fetch_add(1, Ordering::Relaxed);
@@ -259,6 +319,19 @@ pub fn drive(
                 }
             }
         }
+
+        // ---- 6. gang dispatch: pack parked intents into shared batches
+        if opts.gang && inflight > 0 {
+            dispatch_gangs(
+                engine,
+                &mut slots,
+                &mut inflight,
+                opts.gang_max_wait,
+                stats,
+                bstats,
+                engine_stats,
+            );
+        }
         stats.inflight.store(inflight, Ordering::Relaxed);
         stats.queued.store(queue.len(), Ordering::Relaxed);
     }
@@ -266,23 +339,226 @@ pub fn drive(
     stats.queued.store(0, Ordering::Relaxed);
 }
 
-/// Deliver one error to every request attached to a slot. `Error` is not
-/// `Clone`, so riders get a reconstructed copy — same variant where the
-/// message suffices to rebuild it, so a deadline abort renders 504 for
-/// every attached request, never a retry-suggesting 500.
-fn reply_error(r: Running, e: Error) {
-    fn same_class(e: &Error) -> Error {
-        match e {
-            Error::Parse(m) => Error::Parse(m.clone()),
-            Error::Xla(m) => Error::Xla(m.clone()),
-            Error::Invalid(m) => Error::Invalid(m.clone()),
-            Error::Saturated(m) => Error::Saturated(m.clone()),
-            Error::Deadline(m) => Error::Deadline(m.clone()),
-            other => Error::Internal(other.to_string()),
+/// Deadline-aware admission (step 1): bounce a bounded job whose
+/// queue-wait forecast already exceeds its remaining budget. A duplicate
+/// of an in-flight task is exempt — it never waits for a slot, it rides
+/// the running task at the next coalesce pass (step 3).
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    job: FleetJob,
+    queue: &mut AdmissionQueue,
+    slots: &[Option<Running>],
+    inflight: usize,
+    n_slots: usize,
+    mean_service_ms: f64,
+    stats: &FleetStats,
+) {
+    let coalescible = job.key.is_some() && slots.iter().flatten().any(|r| r.key == job.key);
+    if coalescible {
+        queue.push(job);
+        return;
+    }
+    if let Some(d) = job.deadline {
+        let now = Instant::now();
+        let remaining_ms = (d.as_secs_f64() * 1000.0 - job.waited_ms(now)).max(0.0);
+        let forecast = admission_forecast_ms(queue.len(), inflight, n_slots, mean_service_ms);
+        if forecast > remaining_ms {
+            stats.forecast_rejected_total.fetch_add(1, Ordering::Relaxed);
+            let _ = job.reply.send(Err(Error::deadline(format!(
+                "queue-wait forecast {forecast:.0}ms exceeds the remaining \
+                 {remaining_ms:.0}ms budget"
+            ))));
+            return;
         }
     }
+    queue.push(job);
+}
+
+/// Completion protocol for a finished task: publish stats, fold the
+/// service-time sample into the admission forecast, honor the 504
+/// contract, and fan the outcome out to every attached request.
+fn finish_task(
+    mut r: Running,
+    engine: &Engine,
+    stats: &FleetStats,
+    solved: &AtomicU64,
+    engine_stats: &Mutex<EngineStats>,
+    mean_service_ms: &mut f64,
+    completed_n: &mut u64,
+) {
+    solved.fetch_add(1, Ordering::Relaxed);
+    *engine_stats.lock().unwrap() = engine.stats();
+    let service_ms = r.admitted_at.elapsed().as_secs_f64() * 1000.0;
+    *completed_n += 1;
+    *mean_service_ms += (service_ms - *mean_service_ms) / *completed_n as f64;
+    if r.expired(Instant::now()) {
+        // budget blew during the final advance: the 504 contract beats
+        // returning a too-late 200
+        stats.expired_total.fetch_add(1, Ordering::Relaxed);
+        reply_error(r, Error::deadline("deadline elapsed during the final solve step"));
+        return;
+    }
+    match r.task.take_outcome() {
+        Some(out) => {
+            stats.completed_total.fetch_add(1, Ordering::Relaxed);
+            for w in r.riders {
+                let _ = w.reply.send(Ok(Solved {
+                    outcome: out.clone(),
+                    queue_wait_ms: w.queue_wait_ms,
+                }));
+            }
+            let _ = r.primary.reply.send(Ok(Solved {
+                outcome: out,
+                queue_wait_ms: r.primary.queue_wait_ms,
+            }));
+        }
+        None => {
+            stats.failed_total.fetch_add(1, Ordering::Relaxed);
+            reply_error(r, Error::internal("finished task lost its outcome"));
+        }
+    }
+}
+
+/// Step 6: group parked intents by gang key, pack each group largest-fit
+/// into merge variants, dispatch each gang as one shared device call, and
+/// solo-execute leftovers that waited long enough (or are alone).
+fn dispatch_gangs(
+    engine: &Engine,
+    slots: &mut [Option<Running>],
+    inflight: &mut usize,
+    max_wait: u64,
+    stats: &FleetStats,
+    bstats: &BatchStats,
+    engine_stats: &Mutex<EngineStats>,
+) {
+    /// One parked intent's scheduling view.
+    struct ParkedIntent {
+        slot: usize,
+        key: (IntentKind, String, u32),
+        batch: usize,
+        age: u64,
+    }
+    let mut parked: Vec<ParkedIntent> = Vec::new();
+    for (i, s) in slots.iter().enumerate() {
+        let Some(r) = s else { continue };
+        let (Some(age), Some(intent)) = (r.parked, r.task.intent()) else { continue };
+        let (kind, ckpt, temp_bits) = intent.gang_key();
+        parked.push(ParkedIntent {
+            slot: i,
+            key: (kind, ckpt.to_string(), temp_bits),
+            batch: intent.batch,
+            age,
+        });
+    }
+    let mut keys: Vec<(IntentKind, String, u32)> = Vec::new();
+    for p in &parked {
+        if !keys.contains(&p.key) {
+            keys.push(p.key.clone());
+        }
+    }
+    for key in keys {
+        let group: Vec<&ParkedIntent> = parked.iter().filter(|p| p.key == key).collect();
+        let batches: Vec<usize> = group.iter().map(|p| p.batch).collect();
+        let Ok(arch) = engine.manifest.arch_for_checkpoint(&key.1) else { continue };
+        let gangs = batch::plan_gangs(&batches, |a, b| {
+            engine.manifest.merge_variant(a, b).ok().filter(|&c| arch.has_merge(a, b, c))
+        });
+        let mut in_gang = vec![false; group.len()];
+        for g in &gangs {
+            for &m in &g.members {
+                in_gang[m] = true;
+            }
+            let member_slots: Vec<usize> = g.members.iter().map(|&m| group[m].slot).collect();
+            let real_slots: usize = g.members.iter().map(|&m| group[m].batch).sum();
+            // borrow the member tasks in the planner's merge order
+            let mut grabbed: Vec<(usize, &mut SolveTask)> = slots
+                .iter_mut()
+                .enumerate()
+                .filter_map(|(i, s)| {
+                    if member_slots.contains(&i) {
+                        s.as_mut().map(|r| (i, &mut r.task))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            grabbed.sort_by_key(|(i, _)| {
+                member_slots.iter().position(|&x| x == *i).expect("member slot")
+            });
+            let mut tasks: Vec<&mut SolveTask> = grabbed.into_iter().map(|(_, t)| t).collect();
+            match batch::execute_gang(engine, &mut tasks) {
+                Ok(variant) => {
+                    bstats.record_gang(g.members.len(), real_slots, variant);
+                    for &si in &member_slots {
+                        if let Some(r) = slots[si].as_mut() {
+                            r.parked = None;
+                        }
+                    }
+                }
+                Err(e) => {
+                    // a merged call cannot attribute the fault: every
+                    // member surfaces the error and frees its slot
+                    bstats.gang_failures_total.fetch_add(1, Ordering::Relaxed);
+                    log_error!("gang of {} failed: {e}", member_slots.len());
+                    for &si in &member_slots {
+                        if let Some(r) = slots[si].take() {
+                            *inflight -= 1;
+                            stats.failed_total.fetch_add(1, Ordering::Relaxed);
+                            reply_error(r, clone_class(&e));
+                        }
+                    }
+                }
+            }
+            *engine_stats.lock().unwrap() = engine.stats();
+        }
+        // leftovers: solo once they waited max_wait rounds, or when no
+        // partner can exist (the task is alone in the slot table)
+        for (gi, p) in group.iter().enumerate() {
+            if in_gang[gi] {
+                continue;
+            }
+            let alone = *inflight <= 1;
+            if p.age >= max_wait || alone {
+                let Some(r) = slots[p.slot].as_mut() else { continue };
+                match r.task.execute_intent(engine) {
+                    Ok(()) => {
+                        r.parked = None;
+                        bstats.solo_intents_total.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        let r = slots[p.slot].take().expect("checked occupied");
+                        *inflight -= 1;
+                        stats.failed_total.fetch_add(1, Ordering::Relaxed);
+                        *engine_stats.lock().unwrap() = engine.stats();
+                        log_error!("fleet task failed in state '{}': {e}", r.task.state_name());
+                        reply_error(r, e);
+                    }
+                }
+            } else {
+                bstats.wait_rounds_total.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Rebuild an error of the same class so every attached request renders
+/// the same HTTP status (`Error` is not `Clone`); a deadline abort stays
+/// 504 for riders, never a retry-suggesting 500.
+fn clone_class(e: &Error) -> Error {
+    match e {
+        Error::Parse(m) => Error::Parse(m.clone()),
+        Error::Xla(m) => Error::Xla(m.clone()),
+        Error::Invalid(m) => Error::Invalid(m.clone()),
+        Error::Saturated(m) => Error::Saturated(m.clone()),
+        Error::Deadline(m) => Error::Deadline(m.clone()),
+        other => Error::Internal(other.to_string()),
+    }
+}
+
+/// Deliver one error to every request attached to a slot.
+fn reply_error(r: Running, e: Error) {
     for w in r.riders {
-        let _ = w.reply.send(Err(same_class(&e)));
+        let _ = w.reply.send(Err(clone_class(&e)));
     }
     let _ = r.primary.reply.send(Err(e));
 }

@@ -26,6 +26,13 @@ pub struct FleetStats {
     pub coalesced_total: AtomicU64,
     /// Requests rejected or aborted because their deadline elapsed.
     pub expired_total: AtomicU64,
+    /// Requests dropped because every attached client hung up (closed
+    /// reply channel) before completion — queued or mid-flight.
+    pub cancelled_total: AtomicU64,
+    /// Bounded requests bounced at admission because the queue-wait
+    /// forecast (slot pressure x mean service time) already exceeded
+    /// their deadline budget.
+    pub forecast_rejected_total: AtomicU64,
     /// Tasks that ran to a successful outcome.
     pub completed_total: AtomicU64,
     /// Tasks that ended in an engine/validation error.
@@ -43,6 +50,8 @@ pub struct FleetTotals {
     pub backfill: u64,
     pub coalesced: u64,
     pub expired: u64,
+    pub cancelled: u64,
+    pub forecast_rejected: u64,
     pub completed: u64,
     pub failed: u64,
 }
@@ -72,6 +81,8 @@ impl FleetStats {
             backfill: self.backfill_total.load(Ordering::Relaxed),
             coalesced: self.coalesced_total.load(Ordering::Relaxed),
             expired: self.expired_total.load(Ordering::Relaxed),
+            cancelled: self.cancelled_total.load(Ordering::Relaxed),
+            forecast_rejected: self.forecast_rejected_total.load(Ordering::Relaxed),
             completed: self.completed_total.load(Ordering::Relaxed),
             failed: self.failed_total.load(Ordering::Relaxed),
         }
@@ -83,6 +94,8 @@ impl FleetStats {
         into.backfill += other.backfill;
         into.coalesced += other.coalesced;
         into.expired += other.expired;
+        into.cancelled += other.cancelled;
+        into.forecast_rejected += other.forecast_rejected;
         into.completed += other.completed;
         into.failed += other.failed;
     }

@@ -20,6 +20,7 @@
 //! thread pool, property testing, bench harness): the offline build
 //! environment provides no serde/clap/tokio/criterion/proptest.
 
+pub mod batch;
 pub mod config;
 pub mod coordinator;
 pub mod fleet;

@@ -5,6 +5,7 @@
 //!   erprm solve --artifacts artifacts --v0 61 --ops -5,*6,+4 --mode er --n 16 --tau 8
 //!   erprm serve --artifacts artifacts --addr 127.0.0.1:8377 --shards 4 --cache 128
 //!   erprm serve --artifacts artifacts --fleet --max-inflight 8 --deadline-ms 5000
+//!   erprm serve --artifacts artifacts --gang --max-inflight 8
 //!   erprm sweep --artifacts artifacts --bench satmath-s --n-list 4,8 --problems 10
 //!   erprm theory
 //!
@@ -157,6 +158,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // whichever concurrency the pool can actually absorb.
     let fleet = args.flag("fleet") || scfg.fleet;
     let max_inflight = args.get_usize_min("max-inflight", scfg.max_inflight, 1)?;
+    // --gang: merge compatible in-flight requests' decode/score calls
+    // into shared device batches (implies --fleet).
+    let gang = args.flag("gang") || scfg.gang;
+    let fleet = fleet || gang;
+    let gang_max_wait = args.get_u64("gang-max-wait", FleetOptions::default().gang_max_wait)?;
     let deadline_ms = args.get_u64("deadline-ms", scfg.deadline_ms)?;
     let worker_default = if fleet { shards * max_inflight + 2 } else { shards + 2 };
     let workers = args.get_usize_min("workers", worker_default, 1)?;
@@ -170,7 +176,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             capacity,
             cache_entries: cache,
             default_deadline_ms: deadline_ms,
-            fleet: fleet.then(|| FleetOptions { max_inflight, ..FleetOptions::default() }),
+            fleet: fleet.then(|| FleetOptions {
+                max_inflight,
+                gang,
+                gang_max_wait,
+                ..FleetOptions::default()
+            }),
         },
     )?;
     let metrics = Arc::new(Metrics::default());
@@ -188,7 +199,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Arc::new(move |req| route(&p2, &m2, &d2, req)),
     )?;
     let mode = if fleet {
-        format!("fleet: {max_inflight} in-flight/shard, default deadline {deadline_ms}ms")
+        let g = if gang {
+            format!(", gang batching (max wait {gang_max_wait})")
+        } else {
+            String::new()
+        };
+        format!("fleet: {max_inflight} in-flight/shard{g}, default deadline {deadline_ms}ms")
     } else {
         format!("sequential dispatch, default deadline {deadline_ms}ms")
     };

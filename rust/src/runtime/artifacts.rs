@@ -47,6 +47,18 @@ impl ModelArch {
             .get(name)
             .ok_or_else(|| Error::invalid(format!("model '{}' has no program '{name}'", self.name)))
     }
+
+    /// Whether the artifact set exported a given program. The gang
+    /// batcher probes this to degrade gracefully on artifacts built
+    /// before the merge programs existed.
+    pub fn has_program(&self, name: &str) -> bool {
+        self.programs.contains_key(name)
+    }
+
+    /// Whether `merge_bA_bB_to_bC` exists for a source pair (a >= b).
+    pub fn has_merge(&self, a: usize, b: usize, c: usize) -> bool {
+        self.has_program(&format!("merge_b{a}_b{b}_to_b{c}"))
+    }
 }
 
 /// The whole manifest.
@@ -150,6 +162,13 @@ impl Manifest {
             .values()
             .find(|m| m.weights.contains_key(ckpt))
             .ok_or_else(|| Error::invalid(format!("no model has checkpoint '{ckpt}'")))
+    }
+
+    /// The batch a `merge_bA_bB` program lands in: the smallest exported
+    /// variant holding both source batches' slots. (The exporter pins the
+    /// destination per (a, b) pair, so this is the ABI, not a heuristic.)
+    pub fn merge_variant(&self, a: usize, b: usize) -> Result<usize> {
+        self.batch_variant(a + b)
     }
 
     /// Smallest exported batch variant >= n.
@@ -269,6 +288,21 @@ mod tests {
         assert_eq!(m.batch_variant(5).unwrap(), 16);
         assert_eq!(m.batch_variant(64).unwrap(), 64);
         assert!(m.batch_variant(65).is_err());
+    }
+
+    #[test]
+    fn merge_variant_and_program_probes() {
+        let dir = std::env::temp_dir().join("erprm-manifest-test-merge");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = load_toy(&dir);
+        // toy variants are [4, 16, 64]
+        assert_eq!(m.merge_variant(4, 4).unwrap(), 16);
+        assert_eq!(m.merge_variant(16, 16).unwrap(), 64);
+        assert!(m.merge_variant(64, 4).is_err(), "no variant can hold 68 slots");
+        let lm = m.model("lm").unwrap();
+        assert!(lm.has_program("prefill_b1"));
+        assert!(!lm.has_program("merge_b4_b4_to_b16"));
+        assert!(!lm.has_merge(4, 4, 16), "old artifacts lack merge programs");
     }
 
     #[test]

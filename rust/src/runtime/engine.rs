@@ -38,6 +38,14 @@ fn copy_bookkeeping(src: &KvSet, dst: &mut KvSet, idx: &[i32]) {
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
     pub executions: u64,
+    /// `decode_bN` invocations — the gang batcher's acceptance metric:
+    /// merging requests into shared batches must lower decode (and score)
+    /// invocations per completed request, not just shuffle work around.
+    pub decode_calls: u64,
+    /// `score_bN` invocations.
+    pub score_calls: u64,
+    /// `merge_bA_bB_to_bC` invocations (gang assembly overhead).
+    pub merge_calls: u64,
     pub compiles: u64,
     pub compile_wall_s: f64,
     pub execute_wall_s: f64,
@@ -52,6 +60,9 @@ impl EngineStats {
     /// engine-seconds across shards, not elapsed time).
     pub fn merge(&mut self, other: &EngineStats) {
         self.executions += other.executions;
+        self.decode_calls += other.decode_calls;
+        self.score_calls += other.score_calls;
+        self.merge_calls += other.merge_calls;
         self.compiles += other.compiles;
         self.compile_wall_s += other.compile_wall_s;
         self.execute_wall_s += other.execute_wall_s;
@@ -351,6 +362,65 @@ impl Engine {
         Ok(new)
     }
 
+    /// Merge two caches of the same model into one batch (gang batching):
+    /// `new[slot] = concat(a, b)[idx[slot]]` with `idx` indexing the union
+    /// `[0, a.batch + b.batch)`. The destination is the exported merge
+    /// variant for `(a.batch, b.batch)`; the exporter only emits the
+    /// `a.batch >= b.batch` half of the grid, so callers merge
+    /// largest-first. The merged frontier is `max` of the two — the
+    /// laggard's unwritten gap stays junk under its validity rows.
+    pub fn kv_merge(&self, ckpt: &str, a: &KvSet, b: &KvSet, idx: &[i32]) -> Result<KvSet> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        if a.batch < b.batch {
+            return Err(Error::invalid(format!(
+                "kv_merge wants the larger cache first (got {} < {})",
+                a.batch, b.batch
+            )));
+        }
+        let c = self.manifest.merge_variant(a.batch, b.batch)?;
+        if idx.len() != c {
+            return Err(Error::invalid(format!(
+                "merge idx len {} != merge variant {c}",
+                idx.len()
+            )));
+        }
+        let exe = self.program(&arch, &format!("merge_b{}_b{}_to_b{c}", a.batch, b.batch))?;
+        let i = self.buf_i32(idx, &[idx.len()])?;
+        let mut args: Vec<&PjRtBuffer> = vec![&i];
+        args.extend(a.bufs.iter());
+        args.extend(b.bufs.iter());
+        let out = self.run(&exe, &args)?;
+        self.stats.borrow_mut().merge_calls += 1;
+        let mut new = KvSet::new(out, c, arch.cache_len);
+        let (pos_phys, pos_log, valid) = KvSet::merge_bookkeeping(a, b, idx);
+        new.pos_phys = pos_phys;
+        new.pos_log = pos_log;
+        new.valid = valid;
+        Ok(new)
+    }
+
+    /// Extract one request's contiguous slot range `[start, start + dst_batch)`
+    /// out of a merged cache back into its own batch variant — the inverse
+    /// of [`Engine::kv_merge`] after a ganged decode/score call. Reuses the
+    /// `resize`/`gather` programs, so it needs nothing new exported.
+    pub fn kv_split(
+        &self,
+        ckpt: &str,
+        merged: &KvSet,
+        start: usize,
+        dst_batch: usize,
+    ) -> Result<KvSet> {
+        if start + dst_batch > merged.batch {
+            return Err(Error::invalid(format!(
+                "split [{start}, {}) out of merged batch {}",
+                start + dst_batch,
+                merged.batch
+            )));
+        }
+        let idx: Vec<i32> = (start..start + dst_batch).map(|i| i as i32).collect();
+        self.kv_resize(ckpt, merged, &idx, dst_batch)
+    }
+
     /// Sample `decode_block` tokens for every slot. Consumes and replaces
     /// the KV buffers (they are donated to the execution). Caller commits
     /// accepted tokens into the bookkeeping afterwards.
@@ -385,6 +455,7 @@ impl Engine {
         args.extend([&pos_phys, &pos_log, &valid, &tok, &t, &k]);
         args.extend(kv.bufs.iter());
         let mut out = self.run(&exe, &args)?;
+        self.stats.borrow_mut().decode_calls += 1;
         if out.len() != 1 + arch.n_kv() {
             return Err(Error::Xla(format!("decode returned {} outputs", out.len())));
         }
@@ -424,6 +495,7 @@ impl Engine {
         args.extend([&pos_phys, &pos_log, &valid, &toks]);
         args.extend(kv.bufs.iter());
         let mut out = self.run(&exe, &args)?;
+        self.stats.borrow_mut().score_calls += 1;
         if out.len() != 1 + arch.n_kv() {
             return Err(Error::Xla(format!("score returned {} outputs", out.len())));
         }
@@ -477,6 +549,9 @@ mod tests {
     fn stats_merge_accumulates() {
         let mut a = EngineStats {
             executions: 2,
+            decode_calls: 1,
+            score_calls: 1,
+            merge_calls: 0,
             compiles: 1,
             compile_wall_s: 0.5,
             execute_wall_s: 1.0,
@@ -485,6 +560,9 @@ mod tests {
         };
         let b = EngineStats {
             executions: 3,
+            decode_calls: 2,
+            score_calls: 0,
+            merge_calls: 4,
             compiles: 0,
             compile_wall_s: 0.25,
             execute_wall_s: 2.0,
@@ -493,6 +571,9 @@ mod tests {
         };
         a.merge(&b);
         assert_eq!(a.executions, 5);
+        assert_eq!(a.decode_calls, 3);
+        assert_eq!(a.score_calls, 1);
+        assert_eq!(a.merge_calls, 4);
         assert_eq!(a.compiles, 1);
         assert!((a.compile_wall_s - 0.75).abs() < 1e-12);
         assert!((a.execute_wall_s - 3.0).abs() < 1e-12);

@@ -79,6 +79,32 @@ impl KvSet {
         }
     }
 
+    /// Host bookkeeping for a device `merge(idx)` of two caches: dest slot
+    /// `d` copies from `a[idx[d]]` when `idx[d] < a.batch`, else from
+    /// `b[idx[d] - a.batch]` — the same union indexing the
+    /// `merge_bA_bB_to_bC` programs apply to the device arrays. The merged
+    /// frontier is the max of the two (lockstep discipline: future writes
+    /// land at a common physical position; the gap below the laggard's own
+    /// frontier stays junk, which its validity rows already encode).
+    pub fn merge_bookkeeping(a: &KvSet, b: &KvSet, idx: &[i32]) -> (usize, Vec<i32>, Vec<i32>) {
+        assert_eq!(a.cache_len, b.cache_len, "merging caches of different models");
+        let s = a.cache_len;
+        let mut pos_log = Vec::with_capacity(idx.len());
+        let mut valid = Vec::with_capacity(idx.len() * s);
+        for &i in idx {
+            let i = i as usize;
+            let (src, row) = if i < a.batch {
+                (a, i)
+            } else {
+                assert!(i - a.batch < b.batch, "merge index {i} out of union range");
+                (b, i - a.batch)
+            };
+            pos_log.push(src.pos_log[row]);
+            valid.extend_from_slice(&src.valid[row * s..(row + 1) * s]);
+        }
+        (a.pos_phys.max(b.pos_phys), pos_log, valid)
+    }
+
     /// Resize bookkeeping after broadcast b=1 -> n (device side handled by
     /// the broadcast program).
     pub fn broadcast_bookkeeping(&self, n: usize) -> (Vec<i32>, Vec<i32>) {
@@ -136,6 +162,100 @@ mod tests {
         assert_eq!(kv.pos_log, vec![3, 3, 1]);
         assert_eq!(&kv.valid[0..4], &[1, 1, 1, 0]); // slot0 = old slot2
         assert_eq!(&kv.valid[8..12], &[1, 0, 0, 0]); // slot2 = old slot0
+    }
+
+    #[test]
+    fn merge_bookkeeping_unions_two_caches() {
+        let mut a = toy(2, 4);
+        a.commit(0, 0, 1);
+        a.commit(1, 0, 2);
+        a.pos_phys = 2;
+        let mut b = toy(2, 4);
+        b.commit(0, 0, 3);
+        b.pos_phys = 3;
+        // dest = [a0, a1, b0, b1], padding slot replays a0
+        let (pos, log, valid) = KvSet::merge_bookkeeping(&a, &b, &[0, 1, 2, 3, 0]);
+        assert_eq!(pos, 3, "merged frontier is the max of the two");
+        assert_eq!(log, vec![1, 2, 3, 0, 1]);
+        assert_eq!(&valid[0..4], &[1, 0, 0, 0]); // a0
+        assert_eq!(&valid[4..8], &[1, 1, 0, 0]); // a1
+        assert_eq!(&valid[8..12], &[1, 1, 1, 0]); // b0
+        assert_eq!(&valid[12..16], &[0, 0, 0, 0]); // b1 (uncommitted)
+        assert_eq!(&valid[16..20], &[1, 0, 0, 0]); // padding replays a0
+    }
+
+    #[test]
+    #[should_panic(expected = "out of union range")]
+    fn merge_bookkeeping_rejects_out_of_range() {
+        let a = toy(2, 4);
+        let b = toy(2, 4);
+        let _ = KvSet::merge_bookkeeping(&a, &b, &[4]);
+    }
+
+    /// The gang-batching correctness core, as a property over the host
+    /// model: merging two caches and then gathering a slot out of the
+    /// union must read exactly the bookkeeping a per-cache gather of the
+    /// source slot would have read.
+    #[test]
+    fn prop_merge_then_gather_equals_per_cache_gather() {
+        use crate::util::propcheck::check_simple;
+        check_simple(
+            "merge-then-gather",
+            |rng| {
+                let s = 4 + rng.below(4); // cache_len
+                let ba = 1 + rng.below(4);
+                let bb = 1 + rng.below(4);
+                let mk = |rng: &mut crate::util::rng::Rng, batch: usize| {
+                    let mut kv = KvSet::new(Vec::new(), batch, s);
+                    kv.pos_phys = rng.below(s);
+                    for slot in 0..batch {
+                        let n = rng.below(s + 1);
+                        if n > 0 {
+                            kv.commit(slot, 0, n);
+                        }
+                    }
+                    (kv.pos_phys, kv.pos_log, kv.valid)
+                };
+                let a = mk(rng, ba);
+                let b = mk(rng, bb);
+                let pick = rng.below(ba + bb);
+                (s, ba, bb, a, b, pick)
+            },
+            |&(s, ba, bb, ref a, ref b, pick)| {
+                let rebuild = |batch: usize, st: &(usize, Vec<i32>, Vec<i32>)| {
+                    let mut kv = KvSet::new(Vec::new(), batch, s);
+                    kv.pos_phys = st.0;
+                    kv.pos_log = st.1.clone();
+                    kv.valid = st.2.clone();
+                    kv
+                };
+                let ka = rebuild(ba, a);
+                let kb = rebuild(bb, b);
+                // merge the full union, then gather `pick`
+                let idx: Vec<i32> = (0..(ba + bb) as i32).collect();
+                let (pos, log, valid) = KvSet::merge_bookkeeping(&ka, &kb, &idx);
+                let mut merged = KvSet::new(Vec::new(), ba + bb, s);
+                merged.pos_phys = pos;
+                merged.pos_log = log;
+                merged.valid = valid;
+                merged.permute_bookkeeping(&vec![pick as i32; ba + bb]);
+                // reference: gather straight out of the source cache
+                let (src, row) = if pick < ba { (&ka, pick) } else { (&kb, pick - ba) };
+                if merged.pos_log[0] != src.pos_log[row] {
+                    return Err(format!(
+                        "pos_log {} != source {}",
+                        merged.pos_log[0], src.pos_log[row]
+                    ));
+                }
+                if merged.valid[0..s] != src.valid[row * s..(row + 1) * s] {
+                    return Err("valid row diverged from per-cache gather".into());
+                }
+                if merged.pos_phys < src.pos_phys {
+                    return Err("merged frontier went backwards".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

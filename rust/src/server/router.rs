@@ -38,18 +38,21 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::batch::{BatchStats, BatchTotals};
 use crate::config::SearchConfig;
 use crate::config::SearchMode;
 use crate::coordinator::search::SolveOutcome;
 use crate::coordinator::{solve_early_rejection, solve_vanilla};
 use crate::fleet::{self, FleetJob, FleetOptions, FleetStats, FleetTotals, Solved, TaskSpec};
 use crate::harness::temp_for;
+use crate::log_debug;
 use crate::log_error;
 use crate::runtime::{Engine, EngineStats};
 use crate::server::api::SolveRequest;
 use crate::util::error::{Error, Result};
+use crate::util::oneshot;
 
-type Reply = mpsc::Sender<Result<Solved>>;
+type Reply = oneshot::Sender<Result<Solved>>;
 
 /// One enqueued request: the parsed solve plus its scheduling envelope.
 struct SolveJob {
@@ -78,6 +81,8 @@ struct Shard {
     stats: Arc<Mutex<EngineStats>>,
     /// Fleet-mode telemetry (all-zero when the shard runs sequentially).
     fstats: Arc<FleetStats>,
+    /// Gang-batcher telemetry (all-zero unless fleet gang mode is on).
+    bstats: Arc<BatchStats>,
     /// Set when the shard thread is observed dead (send/reply failure);
     /// placement skips dead shards so they can't keep attracting traffic
     /// with their permanently-empty queues.
@@ -146,11 +151,12 @@ fn try_reserve(depth: &Arc<AtomicUsize>, capacity: usize) -> Option<DepthGuard> 
     }
 }
 
-/// Indices of shards in least-loaded-first order (stable on ties, so an
-/// idle pool drains deterministically from shard 0).
-fn placement_order(depths: &[usize]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..depths.len()).collect();
-    idx.sort_by_key(|&i| depths[i]);
+/// Indices of shards in least-loaded-first order over `(primary,
+/// tiebreak)` load signals (stable, so an idle pool drains
+/// deterministically from shard 0).
+fn placement_order(loads: &[(usize, usize)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..loads.len()).collect();
+    idx.sort_by_key(|&i| loads[i]);
     idx
 }
 
@@ -198,15 +204,17 @@ impl EnginePool {
             let solved = Arc::new(AtomicU64::new(0));
             let stats = Arc::new(Mutex::new(EngineStats::default()));
             let fstats = Arc::new(FleetStats::default());
+            let bstats = Arc::new(BatchStats::default());
             let dir = artifacts_dir.clone();
             let solved2 = Arc::clone(&solved);
             let stats2 = Arc::clone(&stats);
             let fstats2 = Arc::clone(&fstats);
+            let bstats2 = Arc::clone(&bstats);
             let fleet_opts = opts.fleet.clone();
             let join = std::thread::Builder::new()
                 .name(format!("erprm-shard-{i}"))
                 .spawn(move || {
-                    shard_main(i, dir, rx, ready_tx, solved2, stats2, fleet_opts, fstats2)
+                    shard_main(i, dir, rx, ready_tx, solved2, stats2, fleet_opts, fstats2, bstats2)
                 })?;
             shards.push(Shard {
                 tx,
@@ -214,6 +222,7 @@ impl EnginePool {
                 solved,
                 stats,
                 fstats,
+                bstats,
                 dead: AtomicBool::new(false),
             });
             joins.push(join);
@@ -327,11 +336,39 @@ impl EnginePool {
         self.dispatch(idx, req, cfg, guard).map(|s| s.outcome)
     }
 
-    /// Claim a queue slot on the shallowest live, non-full shard.
+    /// Placement signal per shard, `(primary, tiebreak)`. Sequential
+    /// shards place by reserved queue depth. Fleet shards add *projected
+    /// slot pressure* — inflight + queued demand against the slot table
+    /// (ROADMAP: fleet-aware placement) — to the depth: the depth gauge
+    /// alone overstates load on a shard whose requests coalesced onto few
+    /// tasks and understates a slot table about to saturate, while the
+    /// fleet gauges only refresh once per scheduler round, so keeping the
+    /// per-reservation depth inside the primary signal is what spreads a
+    /// same-round burst across shards instead of piling it onto whichever
+    /// shard last published the lowest projection.
+    fn placement_loads(&self) -> Vec<(usize, usize)> {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| {
+                let depth = s.depth.load(Ordering::Relaxed);
+                if self.inner.fleet.is_some() {
+                    let f = &s.fstats;
+                    let projected =
+                        f.inflight.load(Ordering::Relaxed) + f.queued.load(Ordering::Relaxed);
+                    (projected + depth, depth)
+                } else {
+                    (depth, 0)
+                }
+            })
+            .collect()
+    }
+
+    /// Claim a queue slot on the least-loaded live, non-full shard.
     fn reserve(&self) -> Result<(usize, DepthGuard)> {
-        let depths = self.shard_depths();
+        let loads = self.placement_loads();
         let mut any_alive = false;
-        for idx in placement_order(&depths) {
+        for idx in placement_order(&loads) {
             let shard = &self.inner.shards[idx];
             if shard.dead.load(Ordering::Relaxed) {
                 continue;
@@ -375,7 +412,7 @@ impl EnginePool {
     ) -> Result<Solved> {
         let _guard = guard;
         let shard = &self.inner.shards[idx];
-        let (rtx, rrx) = mpsc::channel();
+        let (rtx, rrx) = oneshot::channel();
         let job = SolveJob {
             deadline: self.effective_deadline(&req),
             priority: req.priority,
@@ -416,6 +453,25 @@ impl EnginePool {
         let mut agg = FleetTotals::default();
         for s in &self.inner.shards {
             FleetStats::merge_totals(&mut agg, s.fstats.totals());
+        }
+        Some(agg)
+    }
+
+    /// Whether shards gang-batch compatible requests into shared device
+    /// batches (fleet mode with `gang` on).
+    pub fn gang_enabled(&self) -> bool {
+        self.inner.fleet.as_ref().map(|f| f.gang).unwrap_or(false)
+    }
+
+    /// Aggregate gang-batcher counters across shards; `None` unless gang
+    /// mode is on.
+    pub fn batch_totals(&self) -> Option<BatchTotals> {
+        if !self.gang_enabled() {
+            return None;
+        }
+        let mut agg = BatchTotals::default();
+        for s in &self.inner.shards {
+            BatchStats::merge_totals(&mut agg, s.bstats.totals());
         }
         Some(agg)
     }
@@ -496,15 +552,33 @@ impl EnginePool {
                 out.push_str(&format!("erprm_fleet_backfill_total {}\n", t.backfill));
                 out.push_str(&format!("erprm_fleet_coalesced_total {}\n", t.coalesced));
                 out.push_str(&format!("erprm_fleet_expired_total {}\n", t.expired));
+                out.push_str(&format!("erprm_fleet_cancelled_total {}\n", t.cancelled));
+                out.push_str(&format!(
+                    "erprm_fleet_forecast_rejected_total {}\n",
+                    t.forecast_rejected
+                ));
                 out.push_str(&format!("erprm_fleet_completed_total {}\n", t.completed));
                 out.push_str(&format!("erprm_fleet_failed_total {}\n", t.failed));
             }
+        }
+        out.push_str(&format!("erprm_batch_gang_enabled {}\n", self.gang_enabled() as u8));
+        if let Some(b) = self.batch_totals() {
+            out.push_str(&format!("erprm_batch_gangs_total {}\n", b.gangs));
+            out.push_str(&format!("erprm_batch_ganged_intents_total {}\n", b.ganged_intents));
+            out.push_str(&format!("erprm_batch_solo_intents_total {}\n", b.solo_intents));
+            out.push_str(&format!("erprm_batch_merged_slots_total {}\n", b.merged_slots));
+            out.push_str(&format!("erprm_batch_padding_slots_total {}\n", b.padding_slots));
+            out.push_str(&format!("erprm_batch_wait_rounds_total {}\n", b.wait_rounds));
+            out.push_str(&format!("erprm_batch_gang_failures_total {}\n", b.gang_failures));
         }
         let (hits, misses) = self.cache_counters();
         out.push_str(&format!("erprm_cache_hits_total {hits}\n"));
         out.push_str(&format!("erprm_cache_misses_total {misses}\n"));
         let s = self.engine_stats();
         out.push_str(&format!("erprm_engine_executions_total {}\n", s.executions));
+        out.push_str(&format!("erprm_engine_decode_calls_total {}\n", s.decode_calls));
+        out.push_str(&format!("erprm_engine_score_calls_total {}\n", s.score_calls));
+        out.push_str(&format!("erprm_engine_merge_calls_total {}\n", s.merge_calls));
         out.push_str(&format!("erprm_engine_compiles_total {}\n", s.compiles));
         out.push_str(&format!("erprm_engine_compile_wall_seconds {:.3}\n", s.compile_wall_s));
         out.push_str(&format!("erprm_engine_execute_wall_seconds {:.3}\n", s.execute_wall_s));
@@ -537,6 +611,7 @@ fn shard_main(
     stats: Arc<Mutex<EngineStats>>,
     fleet_opts: Option<FleetOptions>,
     fstats: Arc<FleetStats>,
+    bstats: Arc<BatchStats>,
 ) {
     let engine = match Engine::load(&artifacts_dir) {
         Ok(e) => {
@@ -549,7 +624,7 @@ fn shard_main(
         }
     };
     match fleet_opts {
-        Some(opts) => fleet::drive(&engine, &opts, &fstats, &solved, &stats, |block| {
+        Some(opts) => fleet::drive(&engine, &opts, &fstats, &bstats, &solved, &stats, |block| {
             let msg = if block {
                 rx.recv().map_err(|_| mpsc::TryRecvError::Disconnected)
             } else {
@@ -568,6 +643,12 @@ fn shard_main(
                     Msg::Shutdown => break,
                     Msg::Solve(job) => {
                         let now = Instant::now();
+                        if job.reply.is_closed() {
+                            // the client hung up while the job sat in the
+                            // queue: don't burn the engine for nobody
+                            log_debug!("shard {idx}: dropping abandoned request");
+                            continue;
+                        }
                         let queue_wait_ms =
                             now.saturating_duration_since(job.enqueued).as_secs_f64() * 1000.0;
                         if let Some(d) = job.deadline {
@@ -806,9 +887,37 @@ mod tests {
 
     #[test]
     fn placement_prefers_least_loaded_stably() {
-        assert_eq!(placement_order(&[3, 0, 2, 0]), vec![1, 3, 2, 0]);
-        assert_eq!(placement_order(&[0, 0]), vec![0, 1]);
+        let loads = |v: &[usize]| v.iter().map(|&d| (d, 0)).collect::<Vec<_>>();
+        assert_eq!(placement_order(&loads(&[3, 0, 2, 0])), vec![1, 3, 2, 0]);
+        assert_eq!(placement_order(&loads(&[0, 0])), vec![0, 1]);
         assert_eq!(placement_order(&[]), Vec::<usize>::new());
+        // the secondary signal (queue depth) breaks projected-load ties:
+        // fleet gauges update once per round, depth moves per reservation
+        assert_eq!(placement_order(&[(2, 1), (2, 0), (0, 9)]), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn fleet_placement_uses_projected_slot_pressure() {
+        let (tx0, _rx0) = mpsc::channel::<Msg>();
+        let (tx1, _rx1) = mpsc::channel::<Msg>();
+        let shard0 = fake_shard(tx0);
+        let shard1 = fake_shard(tx1);
+        // shard 0 looks empty by depth but its slot table is loaded;
+        // shard 1 has a reservation in flight but free slots
+        shard0.fstats.inflight.store(6, Ordering::Relaxed);
+        shard0.fstats.queued.store(2, Ordering::Relaxed);
+        shard0.depth.store(0, Ordering::Relaxed);
+        shard1.fstats.inflight.store(1, Ordering::Relaxed);
+        shard1.depth.store(1, Ordering::Relaxed);
+        let mut pool = fake_pool(vec![shard0, shard1], Vec::new());
+        // sequential pools still place by raw depth
+        assert_eq!(pool.placement_loads(), vec![(0, 0), (1, 0)]);
+        // fleet pools place by inflight + queued + depth: slot pressure
+        // dominates, and depth keeps same-round bursts spreading
+        let inner = Arc::get_mut(&mut pool.inner).unwrap();
+        inner.fleet = Some(FleetOptions::default());
+        assert_eq!(pool.placement_loads(), vec![(8, 0), (2, 1)]);
+        assert_eq!(placement_order(&pool.placement_loads()), vec![1, 0]);
     }
 
     fn outcome(answer: i64) -> SolveOutcome {
@@ -853,6 +962,7 @@ mod tests {
             solved: Arc::new(AtomicU64::new(0)),
             stats: Arc::new(Mutex::new(EngineStats::default())),
             fstats: Arc::new(FleetStats::default()),
+            bstats: Arc::new(BatchStats::default()),
             dead: AtomicBool::new(false),
         }
     }

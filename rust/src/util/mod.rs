@@ -5,6 +5,7 @@ pub mod cli;
 pub mod error;
 pub mod json;
 pub mod logging;
+pub mod oneshot;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,142 @@
+//! One-shot reply channel with hang-up detection.
+//!
+//! `std::sync::mpsc` gives a sender no way to learn that the receiver was
+//! dropped short of actually sending — but the fleet drive loop needs to
+//! notice *mid-solve* that every client waiting on a task has gone away
+//! (HTTP connection died, dispatcher thread unwound) so the slot can be
+//! reclaimed instead of running to completion for nobody. This channel is
+//! the mpsc-oneshot we actually need: `send`/`recv` once, plus
+//! [`Sender::is_closed`] observable at any time.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    value: Option<T>,
+    sender_gone: bool,
+    receiver_gone: bool,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+/// Sending half; deliver at most one value with [`Sender::send`].
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Receiving half; consume the value with [`Receiver::recv`].
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// The sender hung up without delivering a value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        state: Mutex::new(State { value: None, sender_gone: false, receiver_gone: false }),
+        cv: Condvar::new(),
+    });
+    (Sender { inner: Arc::clone(&inner) }, Receiver { inner })
+}
+
+impl<T> Sender<T> {
+    /// Deliver the value. `Err(v)` hands it back when the receiver is
+    /// gone or a value was already delivered.
+    pub fn send(&self, v: T) -> Result<(), T> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.receiver_gone || st.value.is_some() {
+            return Err(v);
+        }
+        st.value = Some(v);
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(())
+    }
+
+    /// Whether the receiving side has hung up (nobody will ever read a
+    /// reply) — the fleet loop's client-disconnect signal.
+    pub fn is_closed(&self) -> bool {
+        self.inner.state.lock().unwrap().receiver_gone
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        self.inner.state.lock().unwrap().sender_gone = true;
+        self.inner.cv.notify_all();
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until the value arrives; `Err(RecvError)` if the sender
+    /// dropped without delivering one.
+    pub fn recv(self) -> Result<T, RecvError> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.value.take() {
+                return Ok(v);
+            }
+            if st.sender_gone {
+                return Err(RecvError);
+            }
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.inner.state.lock().unwrap().receiver_gone = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_round_trips() {
+        let (tx, rx) = channel();
+        assert!(!tx.is_closed());
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv(), Ok(7));
+    }
+
+    #[test]
+    fn receiver_drop_observable_by_sender() {
+        let (tx, rx) = channel::<i32>();
+        drop(rx);
+        assert!(tx.is_closed(), "hang-up must be visible before any send");
+        assert_eq!(tx.send(1), Err(1), "send hands the value back");
+    }
+
+    #[test]
+    fn sender_drop_unblocks_receiver() {
+        let (tx, rx) = channel::<i32>();
+        let j = std::thread::spawn(move || rx.recv());
+        drop(tx);
+        assert_eq!(j.join().unwrap(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_before_recv_across_threads() {
+        let (tx, rx) = channel();
+        let j = std::thread::spawn(move || {
+            tx.send("done").unwrap();
+        });
+        assert_eq!(rx.recv(), Ok("done"));
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn second_send_is_rejected() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        assert_eq!(tx.send(2), Err(2));
+        assert_eq!(rx.recv(), Ok(1));
+    }
+}

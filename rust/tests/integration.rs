@@ -18,7 +18,7 @@ use erprm::server::PoolOptions;
 use erprm::tokenizer as tk;
 use erprm::util::error::Error;
 use erprm::util::threadpool::ThreadPool;
-use erprm::workload::{gen_problem, problem_set, Problem, SATMATH};
+use erprm::workload::{gen_problem, problem_set, OpStep, Problem, SATMATH};
 use erprm::util::rng::Rng;
 
 fn artifacts() -> Option<PathBuf> {
@@ -548,6 +548,270 @@ fn fleet_serves_over_http_with_queue_wait_and_metrics() {
     assert!(metrics_text.contains("erprm_latency_ms_p99"), "{metrics_text}");
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     epool.shutdown();
+}
+
+// ------------------------------------------------------------------- gang
+
+// Engine-level core of gang batching: two requests' caches merged into
+// one shared batch must decode exactly the tokens each would have sampled
+// alone (per-slot math never crosses rows), and split back into caches
+// whose bookkeeping matches the sources.
+#[test]
+fn kv_merge_decode_matches_solo_decode() {
+    let Some(e) = engine() else { return };
+    if !e.manifest.model("lm").unwrap().has_program("merge_b4_b4_to_b8") {
+        eprintln!("[integration] artifacts lack merge programs; skipping gang engine test");
+        return;
+    }
+    let pa = Problem { v0: 25, ops: vec![OpStep { op: tk::PLUS, d: 4 }] };
+    let pb = Problem { v0: 61, ops: vec![OpStep { op: tk::MINUS, d: 5 }] };
+    let (_, ka1) = e.lm_prefill("lm-concise", &pa.prompt_tokens()).unwrap();
+    let (_, kb1) = e.lm_prefill("lm-concise", &pb.prompt_tokens()).unwrap();
+    let prev_a = vec![tk::DIG0 + 2; 4];
+    let prev_b = vec![tk::DIG0 + 3; 4];
+    let keys_a: Vec<u32> = (0..8).collect();
+    let keys_b: Vec<u32> = (100..108).collect();
+    // solo references
+    let mut ka = e.kv_broadcast("lm-concise", &ka1, 4).unwrap();
+    let solo_a = e.lm_decode_block("lm-concise", &mut ka, &prev_a, 0.7, &keys_a).unwrap();
+    let mut kb = e.kv_broadcast("lm-concise", &kb1, 4).unwrap();
+    let solo_b = e.lm_decode_block("lm-concise", &mut kb, &prev_b, 0.7, &keys_b).unwrap();
+    // merged: fresh caches, one shared b8 call
+    let ka = e.kv_broadcast("lm-concise", &ka1, 4).unwrap();
+    let kb = e.kv_broadcast("lm-concise", &kb1, 4).unwrap();
+    let idx: Vec<i32> = (0..8).collect();
+    let mut merged = e.kv_merge("lm-concise", &ka, &kb, &idx).unwrap();
+    assert_eq!(merged.batch, 8);
+    assert_eq!(merged.pos_phys, ka.pos_phys.max(kb.pos_phys));
+    assert_eq!(&merged.pos_log[..4], &ka.pos_log[..]);
+    assert_eq!(&merged.pos_log[4..], &kb.pos_log[..]);
+    let mut prev = prev_a.clone();
+    prev.extend(&prev_b);
+    let mut keys = keys_a.clone();
+    keys.extend(&keys_b);
+    let sampled = e.lm_decode_block("lm-concise", &mut merged, &prev, 0.7, &keys).unwrap();
+    let db = e.manifest.decode_block;
+    assert_eq!(&sampled[..4 * db], &solo_a[..], "member A rows diverged in the shared batch");
+    assert_eq!(&sampled[4 * db..], &solo_b[..], "member B rows diverged in the shared batch");
+    // split back restores per-request caches with the merged frontier
+    let sa = e.kv_split("lm-concise", &merged, 0, 4).unwrap();
+    let sb = e.kv_split("lm-concise", &merged, 4, 4).unwrap();
+    assert_eq!(sa.batch, 4);
+    assert_eq!(sa.pos_phys, merged.pos_phys);
+    assert_eq!(sa.pos_log, ka.pos_log);
+    assert_eq!(sb.pos_log, kb.pos_log);
+}
+
+// The gang acceptance gate (extending the fleet interleaving-determinism
+// proof one level deeper): a solve whose decode/score calls ran inside
+// shared device batches must produce the same SolveOutcome, byte for
+// byte (modulo wall-clock), as the same (problem, cfg, seed) solved
+// alone.
+#[test]
+fn gang_batched_solves_are_byte_identical_to_solo() {
+    let Some(dir) = artifacts() else { return };
+    let e = Engine::load(&dir).expect("engine load");
+    let has_merge =
+        e.manifest.model("lm").map(|m| m.has_program("merge_b8_b8_to_b16")).unwrap_or(false);
+    let c = cfg(SearchMode::EarlyRejection, 8, 8);
+    let problems = problem_set(&SATMATH, 4, 99);
+    let reference: Vec<_> = problems
+        .iter()
+        .map(|p| solve_early_rejection(&e, "lm-concise", "prm-large", p, &c, 0.5).unwrap())
+        .collect();
+    drop(e);
+
+    let epool = EnginePool::spawn_with(
+        dir,
+        PoolOptions {
+            shards: 1,
+            capacity: 64,
+            cache_entries: 0,
+            default_deadline_ms: 0,
+            fleet: Some(FleetOptions { max_inflight: 4, gang: true, ..FleetOptions::default() }),
+        },
+    )
+    .expect("gang pool spawn");
+    let joins: Vec<_> = problems
+        .iter()
+        .cloned()
+        .map(|p| {
+            let pool = epool.clone();
+            let cc = c.clone();
+            std::thread::spawn(move || {
+                let req = api::SolveRequest {
+                    problem: p,
+                    mode: SearchMode::EarlyRejection,
+                    n_beams: 8,
+                    tau: 8,
+                    lm: "lm-concise".into(),
+                    prm: "prm-large".into(),
+                    deadline_ms: None,
+                    priority: 0,
+                };
+                pool.solve(req, cc).unwrap()
+            })
+        })
+        .collect();
+    for (i, j) in joins.into_iter().enumerate() {
+        let out = j.join().unwrap();
+        assert_eq!(out.answer, reference[i].answer, "problem {i}: answer diverged under gang");
+        assert_eq!(
+            out.best_trace, reference[i].best_trace,
+            "problem {i}: trace diverged under gang batching"
+        );
+        assert_eq!(
+            out.ledger, reference[i].ledger,
+            "problem {i}: FLOPs accounting diverged under gang batching"
+        );
+    }
+    let t = epool.fleet_totals().expect("fleet totals");
+    assert_eq!(t.failed + t.expired, 0, "{t:?}");
+    let b = epool.batch_totals().expect("batch totals in gang mode");
+    if has_merge {
+        assert!(
+            b.gangs >= 1,
+            "4 concurrent same-shape requests never shared a batch: {b:?}"
+        );
+        assert!(b.merged_slots >= 16, "{b:?}");
+    } else {
+        eprintln!("[integration] artifacts lack merge programs; gang degraded to solo: {b:?}");
+    }
+    epool.shutdown();
+}
+
+// Client disconnect cancellation: a request whose every reply channel is
+// closed must be dropped (queued) or cancelled (mid-flight) so the slot
+// goes back to real work — never run to completion for nobody.
+#[test]
+fn fleet_cancels_abandoned_requests() {
+    let Some(e) = engine() else { return };
+    let stats = erprm::fleet::FleetStats::default();
+    let bstats = erprm::batch::BatchStats::default();
+    let solved = std::sync::atomic::AtomicU64::new(0);
+    let estats = std::sync::Mutex::new(erprm::runtime::EngineStats::default());
+    let (tx, rx) = erprm::util::oneshot::channel();
+    let job = erprm::fleet::FleetJob {
+        spec: erprm::fleet::TaskSpec {
+            problem: Problem { v0: 61, ops: vec![OpStep { op: tk::MINUS, d: 5 }] },
+            mode: SearchMode::EarlyRejection,
+            lm: "lm-concise".into(),
+            prm: "prm-large".into(),
+            cfg: cfg(SearchMode::EarlyRejection, 8, 8),
+            temp: 0.5,
+        },
+        key: None,
+        enqueued: std::time::Instant::now(),
+        deadline: None,
+        priority: 0,
+        reply: tx,
+    };
+    let mut pending = vec![job];
+    let mut rx_holder = Some(rx);
+    let mut calls = 0u64;
+    erprm::fleet::drive(&e, &FleetOptions::default(), &stats, &bstats, &solved, &estats, |_| {
+        calls += 1;
+        if let Some(j) = pending.pop() {
+            return erprm::fleet::Poll::Job(Box::new(j));
+        }
+        if calls > 3 {
+            // the client hangs up while the task is mid-flight
+            rx_holder.take();
+        }
+        if calls > 5_000 {
+            erprm::fleet::Poll::Closed
+        } else {
+            erprm::fleet::Poll::Empty
+        }
+    });
+    let t = stats.totals();
+    assert_eq!(t.cancelled, 1, "{t:?}");
+    assert_eq!(t.completed, 0, "{t:?}");
+    assert_eq!(t.failed, 0, "{t:?}");
+    assert_eq!(
+        solved.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "the abandoned solve must not run to completion"
+    );
+}
+
+// Deadline-aware admission: once a service-time estimate exists, a
+// bounded job whose queue-wait forecast exceeds its budget bounces with
+// 504 at the door (distinct counter from queue expiry) instead of
+// occupying a slot it cannot finish in.
+#[test]
+fn fleet_rejects_doomed_deadlines_at_admission() {
+    let Some(e) = engine() else { return };
+    let stats = erprm::fleet::FleetStats::default();
+    let bstats = erprm::batch::BatchStats::default();
+    let solved = std::sync::atomic::AtomicU64::new(0);
+    let estats = std::sync::Mutex::new(erprm::runtime::EngineStats::default());
+    let spec = erprm::fleet::TaskSpec {
+        problem: Problem { v0: 61, ops: vec![OpStep { op: tk::MINUS, d: 5 }] },
+        mode: SearchMode::EarlyRejection,
+        lm: "lm-concise".into(),
+        prm: "prm-large".into(),
+        cfg: cfg(SearchMode::EarlyRejection, 8, 8),
+        temp: 0.5,
+    };
+    let mk = |deadline: Option<std::time::Duration>| {
+        let (tx, rx) = erprm::util::oneshot::channel();
+        (
+            erprm::fleet::FleetJob {
+                spec: spec.clone(),
+                key: None,
+                enqueued: std::time::Instant::now(),
+                deadline,
+                priority: 0,
+                reply: tx,
+            },
+            rx,
+        )
+    };
+    let (warm, _warm_rx) = mk(None);
+    let (long, _long_rx) = mk(None);
+    let (doomed, doomed_rx) = mk(Some(std::time::Duration::from_millis(1)));
+    let opts = FleetOptions { max_inflight: 1, ..FleetOptions::default() };
+    let mut phase = 0u32;
+    let mut warm = Some(warm);
+    let mut long = Some(long);
+    let mut doomed = Some(doomed);
+    erprm::fleet::drive(&e, &opts, &stats, &bstats, &solved, &estats, |_| {
+        use std::sync::atomic::Ordering;
+        match phase {
+            // 1. one warm-up solve teaches the loop its mean service time
+            0 => {
+                phase = 1;
+                erprm::fleet::Poll::Job(Box::new(warm.take().unwrap()))
+            }
+            1 => {
+                if stats.completed_total.load(Ordering::Relaxed) >= 1 {
+                    phase = 2;
+                    erprm::fleet::Poll::Job(Box::new(long.take().unwrap()))
+                } else {
+                    erprm::fleet::Poll::Empty
+                }
+            }
+            // 2. with `long` ahead of it, the 1ms job's forecast is hopeless
+            2 => {
+                phase = 3;
+                erprm::fleet::Poll::Job(Box::new(doomed.take().unwrap()))
+            }
+            _ => {
+                if stats.completed_total.load(Ordering::Relaxed) >= 2 {
+                    erprm::fleet::Poll::Closed
+                } else {
+                    erprm::fleet::Poll::Empty
+                }
+            }
+        }
+    });
+    let t = stats.totals();
+    assert_eq!(t.forecast_rejected, 1, "{t:?}");
+    assert_eq!(t.completed, 2, "{t:?}");
+    assert_eq!(t.expired, 0, "rejection must use the forecast path, not queue expiry: {t:?}");
+    let err = doomed_rx.recv().expect("a reply").unwrap_err();
+    assert_eq!(err.http_status(), 504, "{err}");
 }
 
 #[test]
