@@ -3,10 +3,13 @@
 //! workload at three pools with the *same shard count* — sequential
 //! dispatch, the fleet scheduler, and the fleet scheduler with gang
 //! batching (`--gang` semantics of `erprm serve`) — and reports aggregate
-//! solves/sec, latency percentiles, queue wait, scheduler counters, and
-//! the gang batcher's acceptance metric: **engine decode invocations per
+//! solves/sec, latency percentiles, queue wait, scheduler counters, the
+//! gang batcher's acceptance metric — **engine decode invocations per
 //! completed request** (shared batches must lower it, not just shuffle
-//! work).
+//! work) — and **effective cache utilization** (1 - junk share of
+//! attended positions): gang mode's max-frontier union gap must be
+//! reclaimed by KV re-compaction, not paid as shrinking effective cache
+//! length.
 //!
 //! The workload is deliberately mixed: requests vary in beam width (long
 //! and short solves interleaved, so sequential dispatch head-of-line
@@ -46,6 +49,12 @@ struct Report {
     engine_solves: u64,
     decode_calls: u64,
     score_calls: u64,
+    /// Effective cache utilization: 1 - junk share of all cache positions
+    /// the engines attended over (compaction's acceptance metric — gang
+    /// mode must not pay for its max-frontier union gap in junk).
+    cache_util: f64,
+    compact_calls: u64,
+    compact_reclaimed: u64,
     fleet_line: String,
     gang_line: String,
 }
@@ -59,9 +68,18 @@ fn run_mode(
     clients: usize,
     requests: &[SolveRequest],
 ) -> Result<Report, Box<dyn std::error::Error>> {
+    // LRU cache and pool single-flight both off: the comparison measures
+    // the schedulers (and in-shard coalescing), not pool-level dedup
     let pool = EnginePool::spawn_with(
         dir,
-        PoolOptions { shards, capacity, cache_entries: 0, default_deadline_ms: 0, fleet },
+        PoolOptions {
+            shards,
+            capacity,
+            cache_entries: 0,
+            default_deadline_ms: 0,
+            fleet,
+            singleflight: false,
+        },
     )?;
     let client_pool = ThreadPool::new(clients);
     let p2 = pool.clone();
@@ -96,8 +114,9 @@ fn run_mode(
     };
     let gang_line = match pool.batch_totals() {
         Some(b) => format!(
-            "gangs {} ganged {} solo {} merged-slots {} padding {}",
-            b.gangs, b.ganged_intents, b.solo_intents, b.merged_slots, b.padding_slots
+            "gangs {} ganged {} solo {} merged-slots {} padding {} precompacts {}",
+            b.gangs, b.ganged_intents, b.solo_intents, b.merged_slots, b.padding_slots,
+            b.precompacts
         ),
         None => "-".to_string(),
     };
@@ -113,6 +132,9 @@ fn run_mode(
         engine_solves: pool.shard_solves().iter().sum(),
         decode_calls: es.decode_calls,
         score_calls: es.score_calls,
+        cache_util: 1.0 - es.junk_fraction(),
+        compact_calls: es.compact_calls,
+        compact_reclaimed: es.compact_reclaimed,
         fleet_line,
         gang_line,
     };
@@ -202,13 +224,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     println!("\n== sequential vs fleet vs gang (equal shard count) ==");
     println!(
-        "{:<12} {:>8} {:>11} {:>8} {:>8} {:>11} {:>6} {:>8} {:>10} {:>10}",
+        "{:<12} {:>8} {:>11} {:>8} {:>8} {:>11} {:>6} {:>8} {:>10} {:>10} {:>10}",
         "mode", "wall s", "solves/sec", "p50 ms", "p95 ms", "queue-wait", "errs", "solves",
-        "decodes", "decode/req"
+        "decodes", "decode/req", "cache-util"
     );
     for r in [&seq, &fleet, &gang] {
         println!(
-            "{:<12} {:>8.2} {:>11.2} {:>8.0} {:>8.0} {:>11.1} {:>6} {:>8} {:>10} {:>10.1}",
+            "{:<12} {:>8.2} {:>11.2} {:>8.0} {:>8.0} {:>11.1} {:>6} {:>8} {:>10} {:>10.1} \
+             {:>9.1}%",
             r.label,
             r.wall_s,
             r.rps,
@@ -219,21 +242,34 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             r.engine_solves,
             r.decode_calls,
             r.decode_calls as f64 / requests.len() as f64,
+            100.0 * r.cache_util,
         );
     }
     println!("\nfleet counters: fleet [{}]  gang [{}]", fleet.fleet_line, gang.fleet_line);
     println!("gang counters:  {}", gang.gang_line);
+    println!(
+        "kv compaction:  seq {} calls/{} reclaimed  fleet {}/{}  gang {}/{}",
+        seq.compact_calls,
+        seq.compact_reclaimed,
+        fleet.compact_calls,
+        fleet.compact_reclaimed,
+        gang.compact_calls,
+        gang.compact_reclaimed,
+    );
     let ratio = gang.rps / seq.rps.max(1e-9);
     let decode_ratio = gang.decode_calls as f64 / fleet.decode_calls.max(1) as f64;
     println!(
         "\ngang / sequential = {ratio:.2}x aggregate solves/sec; gang ran {:.2}x the decode \
-         invocations of plain fleet for the same {} requests ({} vs {}; score calls {} vs {})",
+         invocations of plain fleet for the same {} requests ({} vs {}; score calls {} vs {}); \
+         effective cache utilization gang {:.1}% vs fleet {:.1}%",
         decode_ratio,
         requests.len(),
         gang.decode_calls,
         fleet.decode_calls,
         gang.score_calls,
         fleet.score_calls,
+        100.0 * gang.cache_util,
+        100.0 * fleet.cache_util,
     );
     Ok(())
 }

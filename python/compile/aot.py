@@ -137,6 +137,22 @@ def export_merge(out_dir: str, cfg: M.ModelCfg, programs: dict):
         )
 
 
+def export_compact(out_dir: str, cfg: M.ModelCfg, programs: dict):
+    """Per-slot cache re-compaction programs: `compact_bN` gathers every
+    slot's valid positions down to a dense prefix along the cache axis,
+    taking a host-computed `[N, S]` index matrix. KV args are donated
+    (input_output_alias, like decode/score) so the runtime repacks caches
+    in place instead of copying ~MBs per compaction."""
+    nkv = 2 * cfg.n_layers
+    for b in BATCHES:
+        kv = [spec(sh) for sh in M.kv_shapes(cfg, b)]
+        programs[f"compact_b{b}"] = export(
+            out_dir, f"{cfg.name}_compact_b{b}",
+            M.kv_compact, [spec((b, cfg.cache_len), I32)] + kv,
+            donate=range(1, 1 + nkv),
+        )
+
+
 def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
     nw = len(M.weight_specs(cfg))
     nkv = 2 * cfg.n_layers
@@ -176,6 +192,7 @@ def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
         )
     export_resize(out_dir, cfg, programs)
     export_merge(out_dir, cfg, programs)
+    export_compact(out_dir, cfg, programs)
     return programs
 
 
@@ -218,6 +235,7 @@ def export_prm(out_dir: str, cfg: M.ModelCfg) -> dict:
         )
     export_resize(out_dir, cfg, programs)
     export_merge(out_dir, cfg, programs)
+    export_compact(out_dir, cfg, programs)
     programs[f"fullseq_b{FULLSEQ_BATCH}"] = export(
         out_dir, f"{cfg.name}_fullseq_b{FULLSEQ_BATCH}",
         wrap(lambda p, t, l: M.prm_fullseq(cfg, p, t, l)),

@@ -373,6 +373,22 @@ def kv_broadcast(batch: int, *kvs):
     return tuple(out)
 
 
+def kv_compact(idx, *kvs):
+    """Per-slot re-compaction along the cache axis: `out[b, h, p, d] =
+    kv[b, h, idx[b, p], d]` with a host-computed `[B, S]` index matrix that
+    packs each slot's valid positions down to a dense prefix (original
+    order preserved; dest positions past a slot's dense length replay
+    junk the packed validity row masks out). This is the device half of
+    frontier re-compaction: ganged requests spend physical positions at
+    the fastest member's rate, and this gather reclaims the junk gap so
+    the lockstep frontier can drop back to the max dense length. KV args
+    are donated at export (same aliasing as decode/score)."""
+    out = []
+    for kv in kvs:
+        out.append(jnp.take_along_axis(kv, idx[:, None, :, None], axis=2))
+    return tuple(out)
+
+
 def kv_merge(idx, *kvs):
     """Concat two caches along the batch axis and gather slots from the
     union: `out[slot] = concat(A, B)[idx[slot]]` with `idx` in

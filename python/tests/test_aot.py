@@ -102,6 +102,51 @@ def test_export_merge_registers_manifest_entries(tmp_path):
         assert os.path.exists(path)
 
 
+def test_kv_compact_packs_along_cache_axis():
+    """Host semantics: out[b, h, p, d] = kv[b, h, idx[b, p], d]."""
+    B, H, S, D = 2, 1, 4, 2
+    kv = jnp.arange(B * H * S * D, dtype=jnp.float32).reshape(B, H, S, D)
+    # slot0 packs positions {1, 3} down; slot1 packs {2} down
+    idx = jnp.array([[1, 3, 0, 0], [2, 0, 0, 0]], dtype=jnp.int32)
+    (out,) = M.kv_compact(idx, kv)
+    ref = np.asarray(kv)
+    got = np.asarray(out)
+    for b in range(B):
+        for p in range(S):
+            np.testing.assert_array_equal(got[b, :, p], ref[b, :, int(idx[b, p])])
+
+
+def test_compact_program_lowers_with_donated_kv(tmp_path):
+    """compact_bN must take a [N, S] index matrix + n_kv donated cache
+    args and emit same-shape outputs (in-place repack under aliasing)."""
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    cfg = M.PRM_SMALL_CFG
+    b = 4
+    nkv = 2 * cfg.n_layers
+    kv = [aot.spec(sh) for sh in M.kv_shapes(cfg, b)]
+    p = aot.export(
+        str(tmp_path), f"toy_compact_b{b}",
+        M.kv_compact, [aot.spec((b, cfg.cache_len), jnp.int32)] + kv,
+        donate=range(1, 1 + nkv),
+    )
+    txt = open(p).read()
+    assert "HloModule" in txt and "ENTRY" in txt
+    h, s, d = cfg.n_heads, cfg.cache_len, cfg.head_dim
+    assert f"s32[{b},{s}]" in txt  # index matrix param
+    assert f"f32[{b},{h},{s},{d}]" in txt  # cache params/outputs, same shape
+    assert "input_output_alias" in txt, "KV donation must survive lowering"
+
+
+def test_export_compact_registers_manifest_entries(tmp_path):
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    programs = {}
+    aot.export_compact(str(tmp_path), M.PRM_SMALL_CFG, programs)
+    for b in aot.BATCHES:
+        assert f"compact_b{b}" in programs, "every batch variant gets a compactor"
+        assert os.path.exists(programs[f"compact_b{b}"])
+    assert len(programs) == len(aot.BATCHES)
+
+
 def test_write_weights_bin_order(tmp_path):
     cfg = M.PRM_SMALL_CFG
     params = M.init_params(cfg, jax.random.PRNGKey(0))

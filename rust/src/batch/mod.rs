@@ -32,9 +32,20 @@
 //! rounds for partners; after that (or when it is the only task in
 //! flight) it executes solo, so a lone request never stalls. Old artifact
 //! sets without merge programs degrade to all-solo execution.
+//!
+//! Packing is wall-clock-aware: joins that save an invocation but lose
+//! wall time to padding (a narrow joiner forcing a chain into the next
+//! variant up) are rejected by the [`planner::WallModel`], calibrated
+//! live from the engine's per-width call timings. And because merged
+//! writes land at the max of the members' frontiers, the executor
+//! re-compacts junk-heavy member caches before each chain-merge
+//! (`compact_bN` programs) so the union gap — the cache-pacing tax the
+//! module doc above describes — is reclaimed instead of compounding.
 
 pub mod planner;
 pub mod stats;
 
-pub use planner::{execute_gang, plan_gangs, Gang};
+pub use planner::{
+    execute_gang, plan_gangs, plan_gangs_costed, Gang, WallModel, GANG_PRECOMPACT_JUNK,
+};
 pub use stats::{BatchStats, BatchTotals};

@@ -8,17 +8,39 @@
 //! manifest probe, injected as a closure to keep planning testable
 //! without artifacts.
 //!
+//! Packing is wall-clock-aware, not invocation-count-aware: a feasible
+//! join is only taken when the [`WallModel`] — calibrated from the
+//! engine's observed per-width decode/score walls plus merge/split
+//! overhead — estimates the merged call cheaper than letting the joiner
+//! run solo. Folding a b4 joiner into a b32 chain that must widen to b64
+//! saves one invocation but pays 28 padding rows of attention; on real
+//! accelerators that loses wall-clock, which is the objective that
+//! matters (ROADMAP: gang-aware packing cost model). Until enough
+//! timings exist the model is `None` and planning degrades to the old
+//! largest-first accept-all.
+//!
 //! Execution turns a planned gang into exactly one shared `decode_bN` /
-//! `score_bN` invocation: chain-merge the member caches (packing live
-//! slots densely at the front), run the shared call with concatenated
-//! per-slot inputs, split each member's slot range back out, and let each
-//! task absorb its own output rows. Per-slot math in the exported
-//! programs never crosses rows, so each member's results are the ones its
-//! solo call would have produced.
+//! `score_bN` invocation: re-compact members whose junk share crossed
+//! [`GANG_PRECOMPACT_JUNK`] (aligned dense frontiers shrink the
+//! max-frontier union gap the laggards would otherwise inherit),
+//! chain-merge the member caches (packing live slots densely at the
+//! front), run the shared call with concatenated per-slot inputs, split
+//! each member's slot range back out, and let each task absorb its own
+//! output rows. Per-slot math in the exported programs never crosses
+//! rows, so each member's results are the ones its solo call would have
+//! produced.
 
 use crate::coordinator::task::{GangOut, IntentKind, SolveTask};
-use crate::runtime::{Engine, KvSet};
+use crate::runtime::{Engine, EngineStats, KvSet};
 use crate::util::error::{Error, Result};
+
+/// Junk share above which a gang member's cache is re-compacted before
+/// the chain-merge. Low enough to keep merged frontiers aligned, high
+/// enough that a nearly-dense cache never pays a repack call. Pre-merge
+/// compaction is proactive, so `SearchConfig::compact_junk = 1.0` (the
+/// documented proactive-off switch) disables it too — enforced in
+/// `SolveTask::gang_precompact`.
+pub const GANG_PRECOMPACT_JUNK: f64 = 0.25;
 
 /// One planned gang: positions into the planner's input list in merge
 /// order (largest batch first, stable by arrival), plus the merged batch
@@ -29,14 +51,132 @@ pub struct Gang {
     pub variant: usize,
 }
 
+/// Wall-clock cost model for gang packing, calibrated from the engine's
+/// observed timings: per-batch-width mean decode/score call walls plus
+/// the mean merge and gather (split-back) overheads. `None` until the
+/// engine has samples for the program class — planning then falls back
+/// to accept-all, and the model sharpens as traffic flows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WallModel {
+    /// `(batch_width, mean_call_wall_s)`, ascending by width.
+    points: Vec<(usize, f64)>,
+    /// Mean wall of one `merge_bA_bB_to_bC` step.
+    merge_step_s: f64,
+    /// Mean wall of one gather/resize call (the per-member split-back).
+    split_step_s: f64,
+}
+
+impl WallModel {
+    /// Calibrate from engine counters for one program class. Returns
+    /// `None` until calls at two distinct batch widths exist: with no
+    /// samples there is nothing to estimate from, and with a single
+    /// width the only available extrapolation is proportional-through-
+    /// zero, which attributes no fixed per-call overhead, rejects every
+    /// join, and would then never collect the wider-width samples that
+    /// could correct it. Accept-all is the right prior for both.
+    pub fn from_stats(stats: &EngineStats, kind: IntentKind) -> Option<WallModel> {
+        let map = match kind {
+            IntentKind::Decode => &stats.decode_wall,
+            IntentKind::Score => &stats.score_wall,
+            IntentKind::Compact => return None, // compactions are never ganged
+        };
+        let points: Vec<(usize, f64)> = map
+            .iter()
+            .filter(|(_, w)| w.calls > 0)
+            .map(|(&b, w)| (b, w.mean_s()))
+            .collect();
+        if points.len() < 2 {
+            return None;
+        }
+        let merge_step_s = if stats.merge_calls > 0 {
+            stats.merge_wall_s / stats.merge_calls as f64
+        } else {
+            0.0
+        };
+        let split_step_s = if stats.gather_calls > 0 {
+            stats.gather_wall_s / stats.gather_calls as f64
+        } else {
+            0.0
+        };
+        Some(WallModel { points, merge_step_s, split_step_s })
+    }
+
+    /// Build directly from calibration points (tests / simulations).
+    pub fn from_points(
+        points: Vec<(usize, f64)>,
+        merge_step_s: f64,
+        split_step_s: f64,
+    ) -> Option<WallModel> {
+        if points.is_empty() {
+            return None;
+        }
+        let mut points = points;
+        points.sort_by_key(|&(b, _)| b);
+        Some(WallModel { points, merge_step_s, split_step_s })
+    }
+
+    /// Estimated wall of one call at `width`: observed mean when sampled,
+    /// linear interpolation between neighbours, slope extrapolation past
+    /// the edges (proportional scaling when only one point exists).
+    pub fn call_s(&self, width: usize) -> f64 {
+        let pts = &self.points;
+        if let Some(&(_, w)) = pts.iter().find(|&&(b, _)| b == width) {
+            return w;
+        }
+        if pts.len() == 1 {
+            let (b0, w0) = pts[0];
+            return w0 * width as f64 / b0 as f64;
+        }
+        // neighbours around `width` (pts ascending)
+        let hi = pts.iter().position(|&(b, _)| b > width).unwrap_or(pts.len() - 1).max(1);
+        let (b0, w0) = pts[hi - 1];
+        let (b1, w1) = pts[hi];
+        let slope = (w1 - w0) / (b1 - b0) as f64;
+        (w0 + slope * (width as f64 - b0 as f64)).max(0.0)
+    }
+
+    /// Whether folding a `joiner`-batch intent into a chain currently at
+    /// `chain_variant` (landing in `new_variant`) is estimated cheaper
+    /// than running the joiner solo: the gang pays one merge, the
+    /// joiner's split-back, and the widening of the shared call, and
+    /// saves the joiner's own invocation. `first_join` additionally
+    /// charges the seed's split-back — a k-member gang performs k splits
+    /// but only k-1 joins, and the seed pays no split when it stays solo.
+    pub fn join_pays(
+        &self,
+        chain_variant: usize,
+        joiner: usize,
+        new_variant: usize,
+        first_join: bool,
+    ) -> bool {
+        let widen = self.call_s(new_variant) - self.call_s(chain_variant);
+        let splits = if first_join { 2.0 } else { 1.0 };
+        let gang_extra = self.merge_step_s + splits * self.split_step_s + widen;
+        gang_extra < self.call_s(joiner)
+    }
+}
+
 /// Pack one compatible group's pending intents (their cache batches, in
 /// arrival order) into gangs of >= 2 members. `can_merge(a, b)` reports
 /// the merged variant when the artifact set can merge an `a`-batch cache
 /// with a `b`-batch cache (`a >= b`), else `None`. Inputs left out of
-/// every gang are the caller's to execute solo.
+/// every gang are the caller's to execute solo. Accepts every feasible
+/// join (invocation-count objective) — the serving path uses
+/// [`plan_gangs_costed`] with a calibrated [`WallModel`] instead.
 pub fn plan_gangs(
     batches: &[usize],
     can_merge: impl Fn(usize, usize) -> Option<usize>,
+) -> Vec<Gang> {
+    plan_gangs_costed(batches, can_merge, None)
+}
+
+/// [`plan_gangs`] with a wall-clock acceptance test: a feasible join is
+/// taken only when `model` estimates the merged call cheaper than the
+/// joiner's solo invocation (`None` = accept all, the cold-start prior).
+pub fn plan_gangs_costed(
+    batches: &[usize],
+    can_merge: impl Fn(usize, usize) -> Option<usize>,
+    model: Option<&WallModel>,
 ) -> Vec<Gang> {
     let mut order: Vec<usize> = (0..batches.len()).collect();
     order.sort_by_key(|&i| (std::cmp::Reverse(batches[i]), i));
@@ -54,6 +194,11 @@ pub fn plan_gangs(
                 continue;
             }
             if let Some(v) = can_merge(chain, batches[cand]) {
+                if let Some(m) = model {
+                    if !m.join_pays(chain, batches[cand], v, members.len() == 1) {
+                        continue;
+                    }
+                }
                 members.push(cand);
                 chain = v;
                 assigned[cand] = true;
@@ -84,8 +229,9 @@ fn merge_index(a_real: usize, a_batch: usize, b_batch: usize, c: usize) -> Vec<i
 /// member's output rows back into its task. `tasks` must be in the
 /// planner's merge order with their intents still parked; on error the
 /// caller fails every member (their intents are unusable afterwards).
-/// Returns the merged batch variant actually dispatched.
-pub fn execute_gang(engine: &Engine, tasks: &mut [&mut SolveTask]) -> Result<usize> {
+/// Returns the merged batch variant actually dispatched and how many
+/// members were re-compacted before the merge.
+pub fn execute_gang(engine: &Engine, tasks: &mut [&mut SolveTask]) -> Result<(usize, usize)> {
     if tasks.len() < 2 {
         return Err(Error::internal("execute_gang wants >= 2 members"));
     }
@@ -95,6 +241,18 @@ pub fn execute_gang(engine: &Engine, tasks: &mut [&mut SolveTask]) -> Result<usi
             .ok_or_else(|| Error::internal("gang member lost its intent"))?;
         (i0.kind, i0.ckpt.clone(), i0.temp)
     };
+    if kind == IntentKind::Compact {
+        return Err(Error::internal("compact intents are never ganged"));
+    }
+    // Align frontiers before the union: a member whose cache is mostly
+    // junk would drag every laggard's effective length down (the merged
+    // frontier is the max), so re-compact the junk-heavy ones first.
+    let mut precompacted = 0usize;
+    for t in tasks.iter_mut() {
+        if t.gang_precompact(engine, GANG_PRECOMPACT_JUNK)? {
+            precompacted += 1;
+        }
+    }
     let mut batches = Vec::with_capacity(tasks.len());
     for t in tasks.iter() {
         let it = t.intent().ok_or_else(|| Error::internal("gang member lost its intent"))?;
@@ -169,8 +327,9 @@ pub fn execute_gang(engine: &Engine, tasks: &mut [&mut SolveTask]) -> Result<usi
                 tasks[i].gang_absorb(kv, GangOut::Scores(rows))?;
             }
         }
+        IntentKind::Compact => unreachable!("rejected above"),
     }
-    Ok(merged.batch)
+    Ok((merged.batch, precompacted))
 }
 
 #[cfg(test)]
@@ -230,6 +389,108 @@ mod tests {
         assert_eq!(gangs.len(), 2);
         assert_eq!(gangs[0], Gang { members: vec![0, 2], variant: 16 });
         assert_eq!(gangs[1], Gang { members: vec![1, 3], variant: 8 });
+    }
+
+    /// An overhead-free model with linear per-slot cost: every feasible
+    /// join pays (widening by the joiner's slots costs what the joiner's
+    /// solo call would, minus its share of fixed overhead), so costed
+    /// planning matches accept-all.
+    fn linear_model() -> WallModel {
+        WallModel::from_points(
+            vec![(4, 0.05), (8, 0.06), (16, 0.08), (32, 0.12), (64, 0.20)],
+            0.001,
+            0.001,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn costed_planning_without_model_matches_accept_all() {
+        let batches = [8usize, 4, 16, 8];
+        assert_eq!(plan_gangs(&batches, cm), plan_gangs_costed(&batches, cm, None));
+    }
+
+    #[test]
+    fn cheap_overhead_model_accepts_the_same_gangs() {
+        let m = linear_model();
+        let batches = [8usize, 8];
+        assert_eq!(plan_gangs_costed(&batches, cm, Some(&m)), plan_gangs(&batches, cm));
+    }
+
+    #[test]
+    fn padding_blowup_is_rejected_by_wall_clock() {
+        // b32 chain + b4 joiner must widen 32 -> 64: +0.08s of width for a
+        // joiner whose solo call costs 0.05s. Invocation counting says
+        // merge; wall-clock says don't.
+        let m = linear_model();
+        assert!(!m.join_pays(32, 4, 64, true));
+        let gangs = plan_gangs_costed(&[32, 4], cm, Some(&m));
+        assert!(gangs.is_empty(), "{gangs:?}");
+        // the same joiner into a b8 chain lands in b16: +0.02s of width
+        // for 0.05s saved -> pays
+        assert!(m.join_pays(8, 4, 16, true));
+        assert_eq!(
+            plan_gangs_costed(&[8, 4], cm, Some(&m)),
+            vec![Gang { members: vec![0, 1], variant: 16 }]
+        );
+    }
+
+    #[test]
+    fn heavy_merge_overhead_disables_ganging() {
+        // merge + split cost more than any solo call saves
+        let m = WallModel::from_points(vec![(8, 0.05), (16, 0.06)], 0.5, 0.5).unwrap();
+        assert!(plan_gangs_costed(&[8, 8, 8], cm, Some(&m)).is_empty());
+    }
+
+    #[test]
+    fn first_join_charges_the_seeds_split_back() {
+        // zero widening (flat walls), merge free, split 0.04s, solo call
+        // 0.05s: one split alone would pay, but a 2-member gang performs
+        // TWO kv_split calls (seed + joiner) = 0.08s for 0.05s saved
+        let m = WallModel::from_points(vec![(8, 0.05), (16, 0.05)], 0.0, 0.04).unwrap();
+        assert!(!m.join_pays(8, 8, 16, true), "seed's split must be charged");
+        assert!(m.join_pays(16, 8, 32, false), "later joins pay one split only");
+        assert!(plan_gangs_costed(&[8, 8], cm, Some(&m)).is_empty());
+    }
+
+    #[test]
+    fn wall_model_interpolates_and_extrapolates() {
+        let m = WallModel::from_points(vec![(8, 0.1), (16, 0.2)], 0.0, 0.0).unwrap();
+        assert!((m.call_s(8) - 0.1).abs() < 1e-12, "exact point");
+        assert!((m.call_s(12) - 0.15).abs() < 1e-12, "midpoint interpolation");
+        assert!((m.call_s(32) - 0.4).abs() < 1e-12, "slope extrapolation up");
+        assert!((m.call_s(4) - 0.05).abs() < 1e-12, "slope extrapolation down");
+        let single = WallModel::from_points(vec![(8, 0.1)], 0.0, 0.0).unwrap();
+        assert!((single.call_s(16) - 0.2).abs() < 1e-12, "proportional from one point");
+        assert!(WallModel::from_points(vec![], 0.0, 0.0).is_none());
+    }
+
+    #[test]
+    fn wall_model_calibrates_from_engine_stats() {
+        use crate::runtime::CallWall;
+        let mut s = EngineStats::default();
+        assert!(WallModel::from_stats(&s, IntentKind::Decode).is_none(), "cold start");
+        s.decode_wall.insert(8, CallWall { calls: 4, wall_s: 0.4 });
+        assert!(
+            WallModel::from_stats(&s, IntentKind::Decode).is_none(),
+            "one width cannot separate overhead from per-slot cost; a proportional model \
+             would veto every join and starve itself of wider samples forever"
+        );
+        s.decode_wall.insert(16, CallWall { calls: 2, wall_s: 0.4 });
+        s.merge_calls = 2;
+        s.merge_wall_s = 0.02;
+        s.gather_calls = 4;
+        s.gather_wall_s = 0.02;
+        let m = WallModel::from_stats(&s, IntentKind::Decode).unwrap();
+        assert!((m.call_s(8) - 0.1).abs() < 1e-12);
+        assert!((m.call_s(16) - 0.2).abs() < 1e-12);
+        assert!((m.merge_step_s - 0.01).abs() < 1e-12);
+        assert!((m.split_step_s - 0.005).abs() < 1e-12);
+        assert!(
+            WallModel::from_stats(&s, IntentKind::Score).is_none(),
+            "score side has no samples yet"
+        );
+        assert!(WallModel::from_stats(&s, IntentKind::Compact).is_none());
     }
 
     #[test]

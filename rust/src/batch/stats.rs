@@ -18,6 +18,9 @@ pub struct BatchStats {
     pub padding_slots_total: AtomicU64,
     /// Scheduler rounds intents spent parked waiting for partners.
     pub wait_rounds_total: AtomicU64,
+    /// Member caches re-compacted right before a chain-merge (frontier
+    /// alignment; see `planner::GANG_PRECOMPACT_JUNK`).
+    pub precompact_total: AtomicU64,
     /// Gangs whose merged execution failed (every member surfaced the
     /// error).
     pub gang_failures_total: AtomicU64,
@@ -32,6 +35,7 @@ pub struct BatchTotals {
     pub merged_slots: u64,
     pub padding_slots: u64,
     pub wait_rounds: u64,
+    pub precompacts: u64,
     pub gang_failures: u64,
 }
 
@@ -54,6 +58,7 @@ impl BatchStats {
             merged_slots: self.merged_slots_total.load(Ordering::Relaxed),
             padding_slots: self.padding_slots_total.load(Ordering::Relaxed),
             wait_rounds: self.wait_rounds_total.load(Ordering::Relaxed),
+            precompacts: self.precompact_total.load(Ordering::Relaxed),
             gang_failures: self.gang_failures_total.load(Ordering::Relaxed),
         }
     }
@@ -66,6 +71,7 @@ impl BatchStats {
         into.merged_slots += other.merged_slots;
         into.padding_slots += other.padding_slots;
         into.wait_rounds += other.wait_rounds;
+        into.precompacts += other.precompacts;
         into.gang_failures += other.gang_failures;
     }
 }

@@ -113,6 +113,15 @@ pub struct SearchConfig {
     pub max_steps: usize,
     /// RNG seed for sampling.
     pub seed: u64,
+    /// Proactive KV re-compaction threshold: when the junk share of a
+    /// cache's spent positions reaches this fraction (and the reclaimable
+    /// gap is worth a device call), the solve yields a compaction intent.
+    /// 1.0 disables the proactive trigger; the exhaustion-rescue trigger
+    /// (compact instead of truncating when the cache cannot fit the next
+    /// block) is always on. Compaction is semantically invisible — it
+    /// never changes a solve's outcome, only extends effective cache
+    /// length — so this is a pure perf knob.
+    pub compact_junk: f32,
 }
 
 impl Default for SearchConfig {
@@ -128,6 +137,7 @@ impl Default for SearchConfig {
             max_step_tokens: 64,
             max_steps: 8,
             seed: 0,
+            compact_junk: 0.6,
         }
     }
 }
@@ -159,6 +169,12 @@ impl SearchConfig {
                 self.tau, self.max_step_tokens
             )));
         }
+        if !(0.0..=1.0).contains(&self.compact_junk) || self.compact_junk.is_nan() {
+            return Err(Error::invalid(format!(
+                "compact_junk ({}) must be a fraction in 0.0..=1.0",
+                self.compact_junk
+            )));
+        }
         Ok(())
     }
 }
@@ -186,6 +202,10 @@ pub struct ServerConfig {
     /// Default per-request deadline in ms, honored in both dispatch
     /// modes; 0 = unbounded.
     pub deadline_ms: u64,
+    /// Pool-level single-flight: identical requests that would land on
+    /// different shards coalesce onto one engine run (the shard-local
+    /// fleet coalescer only sees duplicates placed on its own shard).
+    pub singleflight: bool,
 }
 
 impl Default for ServerConfig {
@@ -201,6 +221,7 @@ impl Default for ServerConfig {
             max_inflight: 8,
             gang: false,
             deadline_ms: 0,
+            singleflight: true,
         }
     }
 }
@@ -281,6 +302,9 @@ impl Config {
             if let Some(n) = s.get("max_step_tokens").and_then(Json::as_usize) {
                 cfg.search.max_step_tokens = n;
             }
+            if let Some(f) = s.get("compact_junk").and_then(Json::as_f64) {
+                cfg.search.compact_junk = f as f32;
+            }
         }
         if let Some(s) = v.get("server") {
             if let Some(a) = s.get("addr").and_then(Json::as_str) {
@@ -309,6 +333,9 @@ impl Config {
             }
             if let Some(n) = s.get("deadline_ms").and_then(Json::as_i64) {
                 cfg.server.deadline_ms = n.max(0) as u64;
+            }
+            if let Some(b) = s.get("singleflight").and_then(Json::as_bool) {
+                cfg.server.singleflight = b;
             }
         }
         cfg.search.validate()?;
@@ -359,6 +386,30 @@ mod tests {
         let mut s = SearchConfig::default();
         s.tau = 0;
         assert!(s.validate().is_err());
+        let mut s = SearchConfig::default();
+        s.compact_junk = 1.5;
+        assert!(s.validate().is_err()); // not a fraction
+        let mut s = SearchConfig::default();
+        s.compact_junk = -0.1;
+        assert!(s.validate().is_err());
+        let mut s = SearchConfig::default();
+        s.compact_junk = f32::NAN;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn compact_and_singleflight_knobs_parse_and_default() {
+        let d = SearchConfig::default();
+        assert!(d.compact_junk > 0.0 && d.compact_junk < 1.0, "proactive compaction on");
+        assert!(ServerConfig::default().singleflight, "pool single-flight on by default");
+        let j = Json::parse(
+            r#"{"search": {"compact_junk": 1.0},
+                "server": {"singleflight": false}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.search.compact_junk, 1.0, "1.0 disables proactive compaction");
+        assert!(!c.server.singleflight);
     }
 
     #[test]

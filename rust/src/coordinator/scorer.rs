@@ -2,17 +2,16 @@
 //!
 //! The PRM is a causal decoder with its own KV cache mirroring the beam
 //! slots. Each beam accumulates a backlog of clean generated tokens not
-//! yet scored; `catch_up` drains all backlogs with as few `score_block`
-//! calls as necessary (each call scores up to `score_block` tokens per
-//! slot, lockstep). This is the serving optimization that replaces the
+//! yet scored; `SearchCtx::score_catch_up` drains all backlogs with as few
+//! `score_block` calls as necessary (each call scores up to `score_block`
+//! tokens per slot, lockstep). This is the serving optimization that replaces the
 //! naive "re-run the PRM on the whole prefix at every decision point" —
 //! per decision the PRM pays only for new tokens.
 
 use crate::coordinator::beam::BeamSet;
 use crate::coordinator::flops::FlopsLedger;
-use crate::runtime::{Engine, KvSet};
+use crate::runtime::KvSet;
 use crate::tokenizer as tk;
-use crate::util::error::Result;
 
 /// One prepared PRM scoring round: the lockstep `[batch, score_block]`
 /// token matrix plus how many tokens each slot contributes. Built by
@@ -85,24 +84,10 @@ pub fn absorb_round(
     }
 }
 
-/// Drain every active beam's unscored-token backlog through the PRM.
-/// Appends scores to `beam.scores` (aligned with `beam.gen`). Blocking
-/// composition of [`prepare_round`] + [`absorb_round`].
-pub fn catch_up(
-    engine: &Engine,
-    prm_ckpt: &str,
-    prm_kv: &mut KvSet,
-    beams: &mut BeamSet,
-    ledger: &mut FlopsLedger,
-) -> Result<()> {
-    let t = engine.manifest.score_block;
-    let b = prm_kv.batch;
-    while let Some(round) = prepare_round(beams, b, t) {
-        let scores = engine.prm_score_block(prm_ckpt, prm_kv, &round.tokens)?;
-        absorb_round(&round, &scores, t, prm_kv, beams, ledger);
-    }
-    Ok(())
-}
+// The blocking drain loop lives in `SearchCtx::score_catch_up`, which
+// interleaves rounds with KV re-compaction when a round would not fit —
+// a plain prepare/call/absorb loop here would error on caches compaction
+// could have rescued.
 
 #[cfg(test)]
 mod tests {

@@ -42,6 +42,21 @@ pub struct SolveOutcome {
     pub finished_beams: usize,
 }
 
+/// Which model's cache a compaction intent targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) enum CompactTarget {
+    Lm,
+    Prm,
+}
+
+/// A proactive compaction must reclaim at least this many future blocks'
+/// worth of positions to be worth its device call (a repack is one
+/// gather — cheap next to a decode/score — but not free); the
+/// exhaustion-rescue trigger only needs one block. Also the anti-thrash
+/// guard: right after a compaction `reclaimable()` is 0, so the trigger
+/// cannot re-fire until at least this much junk has re-accrued.
+const COMPACT_MIN_GAIN_BLOCKS: usize = 2;
+
 /// Per-problem search state shared by both algorithms. Owns its config
 /// and checkpoint names so a parked [`SolveTask`] carries everything it
 /// needs between `advance` calls.
@@ -58,6 +73,12 @@ pub(crate) struct SearchCtx {
     pub call_counter: u64,
     pub decode_block: usize,
     pub score_block: usize,
+    /// Whether the artifact set exported `compact_bN` programs for each
+    /// model (false on pre-compaction artifacts, or after a compaction
+    /// call reported itself unavailable — both degrade gracefully to the
+    /// old truncate-on-exhaustion behavior).
+    pub lm_compact: bool,
+    pub prm_compact: bool,
 }
 
 /// What a decode phase is driving each beam toward.
@@ -99,7 +120,41 @@ pub(crate) struct DecodePrep {
 pub(crate) enum DecodeStage {
     Done,
     Exhausted,
+    /// The LM cache should be re-compacted before the next block: either
+    /// it cannot fit one more block but the junk gap can (exhaustion
+    /// rescue), or the junk share crossed the proactive threshold.
+    Compact,
     Call(DecodePrep),
+}
+
+/// Shared compaction trigger: rescue when the cache cannot fit the next
+/// `block` but post-compaction capacity (`remaining + reclaimable`) can
+/// — the same headroom arithmetic `score_budget_ok` promises — and
+/// proactive when the junk share crossed `threshold` and the reclaimable
+/// gap pays for the device call. Runs per scheduler tick, so it
+/// early-outs before touching the bitmask whenever neither trigger could
+/// possibly fire, and takes one fused scan otherwise.
+fn wants_compact(kv: &KvSet, block: usize, enabled: bool, threshold: f32) -> bool {
+    if !enabled {
+        return false;
+    }
+    // rescue needs remaining < block; proactive needs at least
+    // COMPACT_MIN_GAIN_BLOCKS * block reclaimable, impossible while the
+    // frontier itself is below that — both checkable without a scan
+    if kv.remaining() >= block && kv.pos_phys < COMPACT_MIN_GAIN_BLOCKS * block {
+        return false;
+    }
+    let (spent, valid_total, max_dense) = kv.junk_stats();
+    let reclaimable = kv.pos_phys.saturating_sub(max_dense);
+    let rescue = kv.remaining() < block && kv.remaining() + reclaimable >= block;
+    let junk = if spent == 0 {
+        0.0
+    } else {
+        (spent - valid_total) as f64 / spent as f64
+    };
+    let proactive =
+        junk >= threshold as f64 && reclaimable >= COMPACT_MIN_GAIN_BLOCKS * block;
+    rescue || proactive
 }
 
 impl SearchCtx {
@@ -127,6 +182,11 @@ impl SearchCtx {
         let prm_kv = engine.kv_broadcast(prm_ckpt, &prm_kv1, b1)?;
         ledger.call();
         ledger.call();
+        // compaction availability probe; the exporter emits compact_bN for
+        // every batch variant, so one probe per model covers b1 and the
+        // two-tier b2 alike (pre-compaction artifacts: both false)
+        let lm_compact = lm_arch.has_program(&format!("compact_b{b1}"));
+        let prm_compact = prm_arch.has_program(&format!("compact_b{b1}"));
 
         let mut rng = crate::util::rng::Rng::new(cfg.seed ^ hash_problem(problem));
         let first = sampler::sample_first_tokens(&logits, b1, temp, &mut rng);
@@ -155,6 +215,8 @@ impl SearchCtx {
             call_counter: 0,
             decode_block: engine.manifest.decode_block,
             score_block: engine.manifest.score_block,
+            lm_compact,
+            prm_compact,
         })
     }
 
@@ -180,6 +242,9 @@ impl SearchCtx {
             .collect();
         if pending.is_empty() {
             return DecodeStage::Done;
+        }
+        if wants_compact(&self.lm_kv, self.decode_block, self.lm_compact, self.cfg.compact_junk) {
+            return DecodeStage::Compact;
         }
         if self.lm_kv.remaining() < self.decode_block {
             log_debug!("LM KV cache exhausted; stopping decode phase");
@@ -225,6 +290,11 @@ impl SearchCtx {
         match self.decode_prepare(target) {
             DecodeStage::Done => Ok(DecodeTick::Done),
             DecodeStage::Exhausted => Ok(DecodeTick::Exhausted),
+            DecodeStage::Compact => {
+                let changed = engine.kv_compact(&self.lm_ckpt, &mut self.lm_kv)?;
+                self.note_compact(CompactTarget::Lm, changed);
+                Ok(DecodeTick::Progress)
+            }
             DecodeStage::Call(prep) => {
                 let sampled = engine.lm_decode_block(
                     &self.lm_ckpt,
@@ -255,6 +325,10 @@ impl SearchCtx {
     /// The upfront KV-budget check applied before draining PRM backlogs:
     /// false when the cache cannot hold every round the worst backlog
     /// needs (each round advances the lockstep frontier by `score_block`).
+    /// When the artifact set can re-compact, the junk gap counts as
+    /// headroom — what used to be a hard capacity wall becomes reclaimable
+    /// (the mid-drain compaction happens in [`SearchCtx::score_catch_up`]
+    /// or via a yielded compact intent on the cooperative path).
     pub fn score_budget_ok(&self) -> bool {
         let max_backlog = self
             .beams
@@ -265,16 +339,45 @@ impl SearchCtx {
             .max()
             .unwrap_or(0);
         let rounds = max_backlog.div_ceil(self.score_block);
-        self.prm_kv.remaining() >= rounds * self.score_block
+        let headroom = self.prm_kv.remaining()
+            + if self.prm_compact { self.prm_kv.reclaimable() } else { 0 };
+        headroom >= rounds * self.score_block
+    }
+
+    /// Whether the PRM cache should be re-compacted before the next
+    /// scoring round (gated on an actual backlog so phase tails never
+    /// spend a device call on a cache nothing will read).
+    pub fn prm_wants_compact(&self) -> bool {
+        let backlog = self.beams.beams.iter().any(|b| !b.dead && b.prm_fed < b.gen.len());
+        backlog
+            && wants_compact(
+                &self.prm_kv,
+                self.score_block,
+                self.prm_compact,
+                self.cfg.compact_junk,
+            )
+    }
+
+    /// Record a compaction attempt's outcome: an unavailable program
+    /// (`changed == false` with junk still present) disables further
+    /// proposals for that model, so old artifact sets can never loop.
+    pub fn note_compact(&mut self, target: CompactTarget, changed: bool) {
+        if !changed {
+            match target {
+                CompactTarget::Lm => self.lm_compact = false,
+                CompactTarget::Prm => self.prm_compact = false,
+            }
+        }
     }
 
     /// Mid-phase recheck of the per-round budget. A gang-merged call can
     /// advance the PRM frontier faster than this task's own pacing
-    /// (merged writes land at the max of the members' frontiers), so the
-    /// upfront [`SearchCtx::score_budget_ok`] verdict can go stale
-    /// between rounds. True when no round is pending or the next one
-    /// still fits; always true on the solo path, where the upfront check
-    /// already covered every round.
+    /// (merged writes land at the max of the members' frontiers), and the
+    /// upfront [`SearchCtx::score_budget_ok`] verdict may have counted
+    /// reclaimable junk that a compaction has yet to return, so the
+    /// verdict can go stale between rounds. True when no round is pending
+    /// or the next one still fits physically; a false here is what
+    /// triggers the mid-drain compaction.
     pub fn score_round_fits(&self) -> bool {
         let backlog = self.beams.beams.iter().any(|b| !b.dead && b.prm_fed < b.gen.len());
         !backlog || self.prm_kv.remaining() >= self.score_block
@@ -298,19 +401,26 @@ impl SearchCtx {
         );
     }
 
-    /// Drain PRM backlogs (scores for all clean tokens).
+    /// Drain PRM backlogs (scores for all clean tokens), re-compacting the
+    /// cache between rounds when a round would not fit otherwise (the
+    /// blocking mirror of the cooperative path's yielded compact intents).
     pub fn score_catch_up(&mut self, engine: &Engine) -> Result<bool> {
         if !self.score_budget_ok() {
             log_debug!("PRM KV cache exhausted; stopping scoring");
             return Ok(false);
         }
-        scorer::catch_up(
-            engine,
-            &self.prm_ckpt,
-            &mut self.prm_kv,
-            &mut self.beams,
-            &mut self.ledger,
-        )?;
+        while let Some(round) = self.score_prepare() {
+            if !self.score_round_fits() {
+                let changed = engine.kv_compact(&self.prm_ckpt, &mut self.prm_kv)?;
+                self.note_compact(CompactTarget::Prm, changed);
+                if !self.score_round_fits() {
+                    log_debug!("PRM KV cache exhausted mid-drain; stopping scoring");
+                    return Ok(false);
+                }
+            }
+            let scores = engine.prm_score_block(&self.prm_ckpt, &mut self.prm_kv, &round.tokens)?;
+            self.score_absorb(&round, &scores);
+        }
         Ok(true)
     }
 

@@ -23,7 +23,9 @@ use crate::coordinator::beam::BeamSet;
 use crate::coordinator::policy::RejectPolicy;
 use crate::coordinator::scheduler::TwoTierPlan;
 use crate::coordinator::scorer::ScoreRound;
-use crate::coordinator::search::{DecodePrep, DecodeStage, PhaseTarget, SearchCtx, SolveOutcome};
+use crate::coordinator::search::{
+    CompactTarget, DecodePrep, DecodeStage, PhaseTarget, SearchCtx, SolveOutcome,
+};
 use crate::runtime::{Engine, KvSet};
 use crate::util::error::{Error, Result};
 use crate::workload::Problem;
@@ -56,6 +58,11 @@ pub enum IntentKind {
     Decode,
     /// `score_bN` on the PRM cache.
     Score,
+    /// `compact_bN` on one of this task's caches (frontier
+    /// re-compaction). Never ganged — a compaction is a per-cache repack
+    /// with nothing to share — so the dispatcher executes these solo
+    /// immediately instead of parking them for partners.
+    Compact,
 }
 
 /// A prepared engine call a [`SolveTask`] has yielded to its scheduler
@@ -79,11 +86,13 @@ pub struct DecodeIntent {
 enum Payload {
     Decode(DecodePrep),
     Score(ScoreRound),
+    Compact(CompactTarget),
 }
 
 impl DecodeIntent {
     /// Grouping key: only intents agreeing on all of these may share one
-    /// device call.
+    /// device call. (Compact intents carry a key too, but the dispatcher
+    /// never gangs them — see [`IntentKind::Compact`].)
     pub fn gang_key(&self) -> (IntentKind, &str, u32) {
         (self.kind, &self.ckpt, self.temp.to_bits())
     }
@@ -92,7 +101,7 @@ impl DecodeIntent {
     pub(crate) fn decode_inputs(&self) -> Option<(&[i32], &[u32])> {
         match &self.payload {
             Payload::Decode(p) => Some((&p.prev, &p.keys)),
-            Payload::Score(_) => None,
+            _ => None,
         }
     }
 
@@ -100,7 +109,7 @@ impl DecodeIntent {
     pub(crate) fn score_tokens(&self) -> Option<&[i32]> {
         match &self.payload {
             Payload::Score(r) => Some(&r.tokens),
-            Payload::Decode(_) => None,
+            _ => None,
         }
     }
 }
@@ -330,6 +339,13 @@ impl SolveTask {
                 let scores = engine.prm_score_block(&ctx.prm_ckpt, &mut ctx.prm_kv, &round.tokens)?;
                 ctx.score_absorb(&round, &scores);
             }
+            Payload::Compact(target) => {
+                let changed = match target {
+                    CompactTarget::Lm => engine.kv_compact(&ctx.lm_ckpt, &mut ctx.lm_kv)?,
+                    CompactTarget::Prm => engine.kv_compact(&ctx.prm_ckpt, &mut ctx.prm_kv)?,
+                };
+                ctx.note_compact(target, changed);
+            }
         }
         Ok(())
     }
@@ -344,10 +360,55 @@ impl SolveTask {
             .ctx
             .as_ref()
             .ok_or_else(|| Error::internal("pending intent without a SearchCtx"))?;
-        Ok(match intent.kind {
-            IntentKind::Decode => &ctx.lm_kv,
-            IntentKind::Score => &ctx.prm_kv,
+        Ok(match &intent.payload {
+            Payload::Decode(_) | Payload::Compact(CompactTarget::Lm) => &ctx.lm_kv,
+            Payload::Score(_) | Payload::Compact(CompactTarget::Prm) => &ctx.prm_kv,
         })
+    }
+
+    /// Re-compact the cache the parked decode/score intent targets when
+    /// its junk share crossed `threshold` — the gang executor calls this
+    /// on every member before chain-merging, so aligned (dense) frontiers
+    /// shrink the max-frontier union gap and the padding waste merged
+    /// batches carry. Returns whether the cache actually changed.
+    pub(crate) fn gang_precompact(&mut self, engine: &Engine, threshold: f64) -> Result<bool> {
+        let intent = self
+            .pending
+            .as_ref()
+            .ok_or_else(|| Error::internal("gang_precompact without a pending intent"))?;
+        let target = match intent.kind {
+            IntentKind::Decode => CompactTarget::Lm,
+            IntentKind::Score => CompactTarget::Prm,
+            IntentKind::Compact => return Ok(false), // executes solo anyway
+        };
+        let ctx = self
+            .ctx
+            .as_mut()
+            .ok_or_else(|| Error::internal("pending intent without a SearchCtx"))?;
+        let (enabled, kv) = match target {
+            CompactTarget::Lm => (ctx.lm_compact, &ctx.lm_kv),
+            CompactTarget::Prm => (ctx.prm_compact, &ctx.prm_kv),
+        };
+        // compact_junk = 1.0 is the documented proactive-compaction off
+        // switch; pre-merge alignment is proactive, so it obeys it too
+        if !enabled || ctx.cfg.compact_junk >= 1.0 {
+            return Ok(false);
+        }
+        let (spent, valid_total, max_dense) = kv.junk_stats();
+        let junk = if spent == 0 {
+            0.0
+        } else {
+            (spent - valid_total) as f64 / spent as f64
+        };
+        if kv.pos_phys <= max_dense || junk < threshold {
+            return Ok(false);
+        }
+        let changed = match target {
+            CompactTarget::Lm => engine.kv_compact(&ctx.lm_ckpt, &mut ctx.lm_kv)?,
+            CompactTarget::Prm => engine.kv_compact(&ctx.prm_ckpt, &mut ctx.prm_kv)?,
+        };
+        ctx.note_compact(target, changed);
+        Ok(changed)
     }
 
     /// Complete the parked intent after a gang-merged call: install the
@@ -377,15 +438,34 @@ impl SolveTask {
         }
     }
 
-    /// Shared decode-state driver: yield the prepared call, or take the
-    /// decode → score transition (fixing the PRM budget verdict at the
-    /// same point the blocking path checked it).
+    /// Park a compaction of `target`'s cache as the pending intent.
+    fn yield_compact(&mut self, target: CompactTarget) -> Step {
+        let ctx = self.ctx.as_ref().expect("compaction proposed without a SearchCtx");
+        let (ckpt, batch) = match target {
+            CompactTarget::Lm => (ctx.lm_ckpt.clone(), ctx.lm_kv.batch),
+            CompactTarget::Prm => (ctx.prm_ckpt.clone(), ctx.prm_kv.batch),
+        };
+        self.pending = Some(DecodeIntent {
+            kind: IntentKind::Compact,
+            ckpt,
+            batch,
+            temp: 0.0,
+            payload: Payload::Compact(target),
+        });
+        Step::Yielded
+    }
+
+    /// Shared decode-state driver: yield the prepared call (or the cache
+    /// compaction that must precede it), or take the decode → score
+    /// transition (fixing the PRM budget verdict at the same point the
+    /// blocking path checked it).
     fn poll_decode(
         &mut self,
         target: PhaseTarget,
         next: impl FnOnce(bool, bool) -> State,
     ) -> Result<Step> {
         match self.ctx_mut().decode_prepare(target) {
+            DecodeStage::Compact => Ok(self.yield_compact(CompactTarget::Lm)),
             DecodeStage::Call(prep) => {
                 let ctx = self.ctx.as_ref().expect("decode_prepare ran on a ctx");
                 self.pending = Some(DecodeIntent {
@@ -410,21 +490,28 @@ impl SolveTask {
         }
     }
 
-    /// Shared score-state driver: yield the next scoring round, or report
-    /// the phase drained (after harvesting finished beams, like the
-    /// blocking path did right after `score_catch_up`).
+    /// Shared score-state driver: yield the PRM compaction the next round
+    /// needs (exhaustion rescue / proactive junk threshold), yield the
+    /// next scoring round, or report the phase drained (after harvesting
+    /// finished beams, like the blocking path did right after
+    /// `score_catch_up`).
     fn poll_score(&mut self, score_ok: bool) -> Option<Step> {
         if score_ok {
-            if let Some(round) = self.ctx_mut().score_prepare() {
-                let ctx = self.ctx.as_ref().expect("score_prepare ran on a ctx");
-                self.pending = Some(DecodeIntent {
-                    kind: IntentKind::Score,
-                    ckpt: ctx.prm_ckpt.clone(),
-                    batch: ctx.prm_kv.batch,
-                    temp: 0.0,
-                    payload: Payload::Score(round),
-                });
-                return Some(Step::Yielded);
+            if self.ctx_mut().prm_wants_compact() {
+                return Some(self.yield_compact(CompactTarget::Prm));
+            }
+            if self.ctx_mut().score_round_fits() {
+                if let Some(round) = self.ctx_mut().score_prepare() {
+                    let ctx = self.ctx.as_ref().expect("score_prepare ran on a ctx");
+                    self.pending = Some(DecodeIntent {
+                        kind: IntentKind::Score,
+                        ckpt: ctx.prm_ckpt.clone(),
+                        batch: ctx.prm_kv.batch,
+                        temp: 0.0,
+                        payload: Payload::Score(round),
+                    });
+                    return Some(Step::Yielded);
+                }
             }
         }
         self.ctx_mut().harvest_finished();
@@ -468,12 +555,14 @@ impl SolveTask {
                 State::VScore { decode_ok, score_ok }
             }),
             State::VScore { decode_ok, score_ok } => {
-                // gang merges can blow the budget mid-phase; recheck
-                // (no-op on the solo path — see score_round_fits)
-                let score_ok = score_ok && self.ctx_mut().score_round_fits();
                 if let Some(step) = self.poll_score(score_ok) {
                     return Ok(step);
                 }
+                // gang merges (and budget verdicts that counted
+                // reclaimable junk) can leave a round that doesn't fit
+                // even after the compaction attempts above: truncate,
+                // exactly like the blocking path
+                let score_ok = score_ok && self.ctx_mut().score_round_fits();
                 if !decode_ok || !score_ok {
                     return self.complete().map(Step::Progressed);
                 }
@@ -514,10 +603,10 @@ impl SolveTask {
                 })
             }
             State::AScore { decode_ok, score_ok } => {
-                let score_ok = score_ok && self.ctx_mut().score_round_fits();
                 if let Some(step) = self.poll_score(score_ok) {
                     return Ok(step);
                 }
+                let score_ok = score_ok && self.ctx_mut().score_round_fits();
                 if !decode_ok || !score_ok {
                     return self.complete().map(Step::Progressed);
                 }
@@ -562,10 +651,10 @@ impl SolveTask {
                 })
             }
             State::BScore { plan, decode_ok, score_ok } => {
-                let score_ok = score_ok && self.ctx_mut().score_round_fits();
                 if let Some(step) = self.poll_score(score_ok) {
                     return Ok(step);
                 }
+                let score_ok = score_ok && self.ctx_mut().score_round_fits();
                 if !decode_ok || !score_ok {
                     return self.complete().map(Step::Progressed);
                 }

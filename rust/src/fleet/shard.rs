@@ -22,9 +22,13 @@
 //!    slot and step 6 packs them.
 //! 6. **Gang dispatch** (`--gang`) — group parked intents by
 //!    (checkpoint, program, temperature), pack them largest-first into
-//!    merged batch variants ([`crate::batch::plan_gangs`]), and run one
-//!    shared device call per gang; leftovers execute solo once they have
-//!    waited `gang_max_wait` rounds (immediately when the task is alone).
+//!    merged batch variants ([`crate::batch::plan_gangs_costed`], gated
+//!    by the wall-clock cost model calibrated from this engine's own
+//!    call timings), and run one shared device call per gang; leftovers
+//!    execute solo once they have waited `gang_max_wait` rounds
+//!    (immediately when the task is alone). Yielded KV re-compaction
+//!    intents also run here — always solo and immediately, since a
+//!    repack has nothing to share and everything behind it waits.
 //!
 //! The engine stays `!Send`-confined to this thread; only host-side job
 //! envelopes cross the channel.
@@ -456,13 +460,36 @@ fn dispatch_gangs(
             keys.push(p.key.clone());
         }
     }
+    // one stats snapshot per round: every group's cost model derives
+    // from it (cloning the per-width maps per group per round would be
+    // pure churn on the scheduler hot path)
+    let stats_snapshot = if keys.iter().any(|k| k.0 != IntentKind::Compact) {
+        Some(engine.stats())
+    } else {
+        None
+    };
     for key in keys {
         let group: Vec<&ParkedIntent> = parked.iter().filter(|p| p.key == key).collect();
+        if key.0 == IntentKind::Compact {
+            // compactions are per-cache repacks with nothing to share:
+            // execute each immediately, never waiting for partners
+            for p in &group {
+                solo_execute(engine, slots, inflight, p.slot, stats, engine_stats);
+            }
+            continue;
+        }
         let batches: Vec<usize> = group.iter().map(|p| p.batch).collect();
         let Ok(arch) = engine.manifest.arch_for_checkpoint(&key.1) else { continue };
-        let gangs = batch::plan_gangs(&batches, |a, b| {
-            engine.manifest.merge_variant(a, b).ok().filter(|&c| arch.has_merge(a, b, c))
-        });
+        // wall-clock packing: joins that would lose time to padding or
+        // merge overhead stay solo (accept-all until timings exist)
+        let model = stats_snapshot
+            .as_ref()
+            .and_then(|s| batch::WallModel::from_stats(s, key.0));
+        let gangs = batch::plan_gangs_costed(
+            &batches,
+            |a, b| engine.manifest.merge_variant(a, b).ok().filter(|&c| arch.has_merge(a, b, c)),
+            model.as_ref(),
+        );
         let mut in_gang = vec![false; group.len()];
         for g in &gangs {
             for &m in &g.members {
@@ -487,8 +514,9 @@ fn dispatch_gangs(
             });
             let mut tasks: Vec<&mut SolveTask> = grabbed.into_iter().map(|(_, t)| t).collect();
             match batch::execute_gang(engine, &mut tasks) {
-                Ok(variant) => {
+                Ok((variant, precompacted)) => {
                     bstats.record_gang(g.members.len(), real_slots, variant);
+                    bstats.precompact_total.fetch_add(precompacted as u64, Ordering::Relaxed);
                     for &si in &member_slots {
                         if let Some(r) = slots[si].as_mut() {
                             r.parked = None;
@@ -504,7 +532,7 @@ fn dispatch_gangs(
                         if let Some(r) = slots[si].take() {
                             *inflight -= 1;
                             stats.failed_total.fetch_add(1, Ordering::Relaxed);
-                            reply_error(r, clone_class(&e));
+                            reply_error(r, e.clone_class());
                         }
                     }
                 }
@@ -519,20 +547,8 @@ fn dispatch_gangs(
             }
             let alone = *inflight <= 1;
             if p.age >= max_wait || alone {
-                let Some(r) = slots[p.slot].as_mut() else { continue };
-                match r.task.execute_intent(engine) {
-                    Ok(()) => {
-                        r.parked = None;
-                        bstats.solo_intents_total.fetch_add(1, Ordering::Relaxed);
-                    }
-                    Err(e) => {
-                        let r = slots[p.slot].take().expect("checked occupied");
-                        *inflight -= 1;
-                        stats.failed_total.fetch_add(1, Ordering::Relaxed);
-                        *engine_stats.lock().unwrap() = engine.stats();
-                        log_error!("fleet task failed in state '{}': {e}", r.task.state_name());
-                        reply_error(r, e);
-                    }
+                if solo_execute(engine, slots, inflight, p.slot, stats, engine_stats) {
+                    bstats.solo_intents_total.fetch_add(1, Ordering::Relaxed);
                 }
             } else {
                 bstats.wait_rounds_total.fetch_add(1, Ordering::Relaxed);
@@ -541,24 +557,39 @@ fn dispatch_gangs(
     }
 }
 
-/// Rebuild an error of the same class so every attached request renders
-/// the same HTTP status (`Error` is not `Clone`); a deadline abort stays
-/// 504 for riders, never a retry-suggesting 500.
-fn clone_class(e: &Error) -> Error {
-    match e {
-        Error::Parse(m) => Error::Parse(m.clone()),
-        Error::Xla(m) => Error::Xla(m.clone()),
-        Error::Invalid(m) => Error::Invalid(m.clone()),
-        Error::Saturated(m) => Error::Saturated(m.clone()),
-        Error::Deadline(m) => Error::Deadline(m.clone()),
-        other => Error::Internal(other.to_string()),
+/// Execute one slot's parked intent on its own cache with the shared
+/// failure protocol (errors free the slot and reply to every rider).
+/// Returns whether the intent executed successfully.
+fn solo_execute(
+    engine: &Engine,
+    slots: &mut [Option<Running>],
+    inflight: &mut usize,
+    slot: usize,
+    stats: &FleetStats,
+    engine_stats: &Mutex<EngineStats>,
+) -> bool {
+    let Some(r) = slots[slot].as_mut() else { return false };
+    match r.task.execute_intent(engine) {
+        Ok(()) => {
+            r.parked = None;
+            true
+        }
+        Err(e) => {
+            let r = slots[slot].take().expect("checked occupied");
+            *inflight -= 1;
+            stats.failed_total.fetch_add(1, Ordering::Relaxed);
+            *engine_stats.lock().unwrap() = engine.stats();
+            log_error!("fleet task failed in state '{}': {e}", r.task.state_name());
+            reply_error(r, e);
+            false
+        }
     }
 }
 
 /// Deliver one error to every request attached to a slot.
 fn reply_error(r: Running, e: Error) {
     for w in r.riders {
-        let _ = w.reply.send(Err(clone_class(&e)));
+        let _ = w.reply.send(Err(e.clone_class()));
     }
     let _ = r.primary.reply.send(Err(e));
 }

@@ -164,6 +164,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let fleet = fleet || gang;
     let gang_max_wait = args.get_u64("gang-max-wait", FleetOptions::default().gang_max_wait)?;
     let deadline_ms = args.get_u64("deadline-ms", scfg.deadline_ms)?;
+    // pool-level single-flight (cross-shard duplicate coalescing) is on
+    // by default; `--no-singleflight` or the config file disable it
+    let singleflight = scfg.singleflight && !args.flag("no-singleflight");
     let worker_default = if fleet { shards * max_inflight + 2 } else { shards + 2 };
     let workers = args.get_usize_min("workers", worker_default, 1)?;
     // --cache N sets the LRU solve-cache size; --cache 0 disables it.
@@ -182,6 +185,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 gang_max_wait,
                 ..FleetOptions::default()
             }),
+            singleflight,
         },
     )?;
     let metrics = Arc::new(Metrics::default());

@@ -4,7 +4,7 @@
 //! between calls via `execute_b_untuple` (see `third_party/xla-rs`).
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
@@ -34,6 +34,24 @@ fn copy_bookkeeping(src: &KvSet, dst: &mut KvSet, idx: &[i32]) {
     }
 }
 
+/// Wall-clock samples for one program class at one batch width — the
+/// gang planner's cost-model calibration data.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct CallWall {
+    pub calls: u64,
+    pub wall_s: f64,
+}
+
+impl CallWall {
+    pub fn mean_s(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.wall_s / self.calls as f64
+        }
+    }
+}
+
 /// Aggregate runtime counters (for /metrics and perf work).
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
@@ -46,6 +64,24 @@ pub struct EngineStats {
     pub score_calls: u64,
     /// `merge_bA_bB_to_bC` invocations (gang assembly overhead).
     pub merge_calls: u64,
+    /// `compact_bN` invocations (frontier re-compaction).
+    pub compact_calls: u64,
+    /// Physical cache positions reclaimed by compactions.
+    pub compact_reclaimed: u64,
+    /// Junk positions observed below the lockstep frontier at decode and
+    /// score time, over all positions spent — `junk_positions /
+    /// cache_positions` is the live cache-utilization gauge
+    /// (`erprm_kv_junk_fraction` on /metrics).
+    pub junk_positions: u64,
+    pub cache_positions: u64,
+    /// Per-batch-width wall samples of decode/score calls, and aggregate
+    /// merge and gather/resize/split walls — the calibration inputs of
+    /// the gang planner's wall-clock packing cost model.
+    pub decode_wall: BTreeMap<usize, CallWall>,
+    pub score_wall: BTreeMap<usize, CallWall>,
+    pub merge_wall_s: f64,
+    pub gather_calls: u64,
+    pub gather_wall_s: f64,
     pub compiles: u64,
     pub compile_wall_s: f64,
     pub execute_wall_s: f64,
@@ -63,11 +99,39 @@ impl EngineStats {
         self.decode_calls += other.decode_calls;
         self.score_calls += other.score_calls;
         self.merge_calls += other.merge_calls;
+        self.compact_calls += other.compact_calls;
+        self.compact_reclaimed += other.compact_reclaimed;
+        self.junk_positions += other.junk_positions;
+        self.cache_positions += other.cache_positions;
+        for (&b, w) in &other.decode_wall {
+            let e = self.decode_wall.entry(b).or_default();
+            e.calls += w.calls;
+            e.wall_s += w.wall_s;
+        }
+        for (&b, w) in &other.score_wall {
+            let e = self.score_wall.entry(b).or_default();
+            e.calls += w.calls;
+            e.wall_s += w.wall_s;
+        }
+        self.merge_wall_s += other.merge_wall_s;
+        self.gather_calls += other.gather_calls;
+        self.gather_wall_s += other.gather_wall_s;
         self.compiles += other.compiles;
         self.compile_wall_s += other.compile_wall_s;
         self.execute_wall_s += other.execute_wall_s;
         self.host_bytes_up += other.host_bytes_up;
         self.host_bytes_down += other.host_bytes_down;
+    }
+
+    /// Junk share of all cache positions spent by decode/score calls so
+    /// far (0.0 before any call) — effective cache utilization is its
+    /// complement.
+    pub fn junk_fraction(&self) -> f64 {
+        if self.cache_positions == 0 {
+            0.0
+        } else {
+            self.junk_positions as f64 / self.cache_positions as f64
+        }
     }
 }
 
@@ -138,6 +202,9 @@ impl Engine {
             self.program(&arch, &format!("{body}_b{b}"))?;
             self.program(&arch, &format!("gather_b{b}"))?;
             self.program(&arch, &format!("broadcast_b{b}"))?;
+            if arch.has_program(&format!("compact_b{b}")) {
+                self.program(&arch, &format!("compact_b{b}"))?;
+            }
         }
         let _ = self.weights_for(ckpt)?;
         Ok(())
@@ -220,6 +287,16 @@ impl Engine {
         let v = lit.to_vec::<f32>()?;
         self.stats.borrow_mut().host_bytes_down += (v.len() * 4) as u64;
         Ok(v)
+    }
+
+    /// Fold one cache's junk-vs-spent position counts into the live
+    /// utilization gauge (taken right before each decode/score call, where
+    /// the junk actually costs attention bandwidth).
+    fn observe_cache(&self, kv: &KvSet) {
+        let (spent, valid_total, _) = kv.junk_stats();
+        let mut s = self.stats.borrow_mut();
+        s.cache_positions += spent as u64;
+        s.junk_positions += spent.saturating_sub(valid_total) as u64;
     }
 
     fn pad_prompt(&self, prompt: &[i32]) -> Result<(Vec<i32>, i32)> {
@@ -322,10 +399,16 @@ impl Engine {
             )));
         }
         let exe = self.program(&arch, &format!("gather_b{}", kv.batch))?;
+        let t0 = Instant::now();
         let i = self.buf_i32(idx, &[idx.len()])?;
         let mut args: Vec<&PjRtBuffer> = vec![&i];
         args.extend(kv.bufs.iter());
         let out = self.run(&exe, &args)?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.gather_calls += 1;
+            s.gather_wall_s += t0.elapsed().as_secs_f64();
+        }
         kv.bufs = out;
         kv.permute_bookkeeping(idx);
         Ok(())
@@ -339,23 +422,22 @@ impl Engine {
         if idx.len() != dst_batch {
             return Err(Error::invalid("resize idx len must equal dst batch"));
         }
-        if dst_batch == kv.batch {
+        let exe = if dst_batch == kv.batch {
             // same-variant: plain gather into a fresh KvSet
-            let exe = self.program(&arch, &format!("gather_b{}", kv.batch))?;
-            let i = self.buf_i32(idx, &[idx.len()])?;
-            let mut args: Vec<&PjRtBuffer> = vec![&i];
-            args.extend(kv.bufs.iter());
-            let out = self.run(&exe, &args)?;
-            let mut new = KvSet::new(out, dst_batch, arch.cache_len);
-            new.pos_phys = kv.pos_phys;
-            copy_bookkeeping(kv, &mut new, idx);
-            return Ok(new);
-        }
-        let exe = self.program(&arch, &format!("resize_b{}_to_b{}", kv.batch, dst_batch))?;
+            self.program(&arch, &format!("gather_b{}", kv.batch))?
+        } else {
+            self.program(&arch, &format!("resize_b{}_to_b{}", kv.batch, dst_batch))?
+        };
+        let t0 = Instant::now();
         let i = self.buf_i32(idx, &[idx.len()])?;
         let mut args: Vec<&PjRtBuffer> = vec![&i];
         args.extend(kv.bufs.iter());
         let out = self.run(&exe, &args)?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.gather_calls += 1;
+            s.gather_wall_s += t0.elapsed().as_secs_f64();
+        }
         let mut new = KvSet::new(out, dst_batch, arch.cache_len);
         new.pos_phys = kv.pos_phys;
         copy_bookkeeping(kv, &mut new, idx);
@@ -385,12 +467,17 @@ impl Engine {
             )));
         }
         let exe = self.program(&arch, &format!("merge_b{}_b{}_to_b{c}", a.batch, b.batch))?;
+        let t0 = Instant::now();
         let i = self.buf_i32(idx, &[idx.len()])?;
         let mut args: Vec<&PjRtBuffer> = vec![&i];
         args.extend(a.bufs.iter());
         args.extend(b.bufs.iter());
         let out = self.run(&exe, &args)?;
-        self.stats.borrow_mut().merge_calls += 1;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.merge_calls += 1;
+            s.merge_wall_s += t0.elapsed().as_secs_f64();
+        }
         let mut new = KvSet::new(out, c, arch.cache_len);
         let (pos_phys, pos_log, valid) = KvSet::merge_bookkeeping(a, b, idx);
         new.pos_phys = pos_phys;
@@ -421,6 +508,49 @@ impl Engine {
         self.kv_resize(ckpt, merged, &idx, dst_batch)
     }
 
+    /// Re-compact a cache in place: gather every slot's valid positions
+    /// down to a dense prefix (device `compact_bN` program, KV buffers
+    /// donated) and lower the lockstep frontier to the max dense length,
+    /// reclaiming the junk gap merged/diverged writes left behind. The
+    /// attendable (position -> K/V) sequence of every slot is preserved
+    /// exactly, so the call is semantically invisible to future decodes
+    /// and scores. Returns `false` without touching anything when the
+    /// artifact set lacks the program (pre-compaction exports) or there
+    /// is no junk to reclaim.
+    pub fn kv_compact(&self, ckpt: &str, kv: &mut KvSet) -> Result<bool> {
+        let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        let name = format!("compact_b{}", kv.batch);
+        if !arch.has_program(&name) {
+            return Ok(false);
+        }
+        let Some(plan) = kv.compact_plan() else {
+            return Ok(false);
+        };
+        let exe = self.program(&arch, &name)?;
+        let t0 = Instant::now();
+        let i = self.buf_i32(&plan.idx, &[kv.batch, kv.cache_len])?;
+        let mut args: Vec<&PjRtBuffer> = vec![&i];
+        args.extend(kv.bufs.iter());
+        let out = self.run(&exe, &args)?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compact_calls += 1;
+            s.compact_reclaimed += plan.reclaimed as u64;
+            s.gather_calls += 1;
+            s.gather_wall_s += t0.elapsed().as_secs_f64();
+        }
+        kv.bufs = out;
+        kv.apply_compact(&plan);
+        log_debug!(
+            "compacted '{ckpt}' b{}: frontier {} -> {} (+{} positions)",
+            kv.batch,
+            plan.new_frontier + plan.reclaimed,
+            plan.new_frontier,
+            plan.reclaimed
+        );
+        Ok(true)
+    }
+
     /// Sample `decode_block` tokens for every slot. Consumes and replaces
     /// the KV buffers (they are donated to the execution). Caller commits
     /// accepted tokens into the bookkeeping afterwards.
@@ -445,6 +575,8 @@ impl Engine {
         }
         let exe = self.program(&arch, &format!("decode_b{b}"))?;
         let w = self.weights_for(ckpt)?;
+        self.observe_cache(kv);
+        let t0 = Instant::now();
         let pos_phys = self.buf_i32(&[kv.pos_phys as i32], &[1])?;
         let pos_log = self.buf_i32(&kv.pos_log, &[b])?;
         let valid = self.buf_i32(&kv.valid, &[b, kv.cache_len])?;
@@ -455,7 +587,13 @@ impl Engine {
         args.extend([&pos_phys, &pos_log, &valid, &tok, &t, &k]);
         args.extend(kv.bufs.iter());
         let mut out = self.run(&exe, &args)?;
-        self.stats.borrow_mut().decode_calls += 1;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.decode_calls += 1;
+            let e = s.decode_wall.entry(b).or_default();
+            e.calls += 1;
+            e.wall_s += t0.elapsed().as_secs_f64();
+        }
         if out.len() != 1 + arch.n_kv() {
             return Err(Error::Xla(format!("decode returned {} outputs", out.len())));
         }
@@ -487,6 +625,8 @@ impl Engine {
         }
         let exe = self.program(&arch, &format!("score_b{b}"))?;
         let w = self.weights_for(ckpt)?;
+        self.observe_cache(kv);
+        let t0 = Instant::now();
         let pos_phys = self.buf_i32(&[kv.pos_phys as i32], &[1])?;
         let pos_log = self.buf_i32(&kv.pos_log, &[b])?;
         let valid = self.buf_i32(&kv.valid, &[b, kv.cache_len])?;
@@ -495,7 +635,13 @@ impl Engine {
         args.extend([&pos_phys, &pos_log, &valid, &toks]);
         args.extend(kv.bufs.iter());
         let mut out = self.run(&exe, &args)?;
-        self.stats.borrow_mut().score_calls += 1;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.score_calls += 1;
+            let e = s.score_wall.entry(b).or_default();
+            e.calls += 1;
+            e.wall_s += t0.elapsed().as_secs_f64();
+        }
         if out.len() != 1 + arch.n_kv() {
             return Err(Error::Xla(format!("score returned {} outputs", out.len())));
         }
@@ -552,28 +698,57 @@ mod tests {
             decode_calls: 1,
             score_calls: 1,
             merge_calls: 0,
+            compact_calls: 1,
+            compact_reclaimed: 8,
+            junk_positions: 4,
+            cache_positions: 16,
             compiles: 1,
             compile_wall_s: 0.5,
             execute_wall_s: 1.0,
             host_bytes_up: 100,
             host_bytes_down: 10,
+            ..EngineStats::default()
         };
-        let b = EngineStats {
+        a.decode_wall.insert(8, CallWall { calls: 2, wall_s: 0.2 });
+        let mut b = EngineStats {
             executions: 3,
             decode_calls: 2,
             score_calls: 0,
             merge_calls: 4,
+            compact_calls: 2,
+            compact_reclaimed: 3,
+            junk_positions: 2,
+            cache_positions: 8,
+            merge_wall_s: 0.4,
+            gather_calls: 5,
+            gather_wall_s: 0.1,
             compiles: 0,
             compile_wall_s: 0.25,
             execute_wall_s: 2.0,
             host_bytes_up: 50,
             host_bytes_down: 5,
+            ..EngineStats::default()
         };
+        b.decode_wall.insert(8, CallWall { calls: 1, wall_s: 0.1 });
+        b.decode_wall.insert(16, CallWall { calls: 1, wall_s: 0.3 });
+        b.score_wall.insert(4, CallWall { calls: 1, wall_s: 0.05 });
         a.merge(&b);
         assert_eq!(a.executions, 5);
         assert_eq!(a.decode_calls, 3);
         assert_eq!(a.score_calls, 1);
         assert_eq!(a.merge_calls, 4);
+        assert_eq!(a.compact_calls, 3);
+        assert_eq!(a.compact_reclaimed, 11);
+        assert_eq!(a.junk_positions, 6);
+        assert_eq!(a.cache_positions, 24);
+        assert!((a.junk_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(a.decode_wall[&8].calls, 3);
+        assert!((a.decode_wall[&8].wall_s - 0.3).abs() < 1e-12);
+        assert!((a.decode_wall[&8].mean_s() - 0.1).abs() < 1e-12);
+        assert_eq!(a.decode_wall[&16].calls, 1);
+        assert_eq!(a.score_wall[&4].calls, 1);
+        assert!((a.merge_wall_s - 0.4).abs() < 1e-12);
+        assert_eq!(a.gather_calls, 5);
         assert_eq!(a.compiles, 1);
         assert!((a.compile_wall_s - 0.75).abs() < 1e-12);
         assert!((a.execute_wall_s - 3.0).abs() < 1e-12);
@@ -587,5 +762,8 @@ mod tests {
         a.merge(&EngineStats::default());
         assert_eq!(a.executions, 0);
         assert_eq!(a.host_bytes_up, 0);
+        assert_eq!(a.junk_fraction(), 0.0, "no positions observed yet");
+        assert_eq!(a.compact_calls, 0);
+        assert!(a.decode_wall.is_empty());
     }
 }

@@ -21,6 +21,29 @@ pub struct KvSet {
     pub pos_log: Vec<i32>,
     /// Per-slot validity bitmask, row-major `[batch, cache_len]`.
     pub valid: Vec<i32>,
+    /// Reusable gather scratch for `permute_bookkeeping` (beam prunes run
+    /// at `batch * cache_len` cost per call; cloning `valid` there showed
+    /// up on the hot path). Capacity persists across calls.
+    scratch_valid: Vec<i32>,
+    scratch_log: Vec<i32>,
+}
+
+/// A host-computed re-compaction of one cache: for every slot, the gather
+/// index matrix packs its valid (attendable) positions down to a dense
+/// prefix, in their original order, so the junk gap under the lockstep
+/// frontier is reclaimed. Built by [`KvSet::compact_plan`] (pure), applied
+/// to the bookkeeping with [`KvSet::apply_compact`] after the matching
+/// `compact_bN` device gather ran.
+#[derive(Debug, Clone)]
+pub struct CompactPlan {
+    /// Row-major `[batch, cache_len]` source position per (slot, dest);
+    /// dest positions past a slot's dense length replay position 0 (junk —
+    /// the packed validity row masks them out).
+    pub idx: Vec<i32>,
+    /// Post-compaction lockstep frontier: the max dense length over slots.
+    pub new_frontier: usize,
+    /// Physical positions reclaimed (`pos_phys - new_frontier`).
+    pub reclaimed: usize,
 }
 
 impl KvSet {
@@ -32,6 +55,8 @@ impl KvSet {
             pos_phys: 0,
             pos_log: vec![0; batch],
             valid: vec![0; batch * cache_len],
+            scratch_valid: Vec::new(),
+            scratch_log: Vec::new(),
         }
     }
 
@@ -63,20 +88,110 @@ impl KvSet {
         self.cache_len - self.pos_phys
     }
 
+    /// Attendable positions per slot (dense length after a compaction).
+    pub fn valid_count(&self, slot: usize) -> usize {
+        let row = slot * self.cache_len;
+        self.valid[row..row + self.cache_len].iter().filter(|&&v| v != 0).count()
+    }
+
+    /// One-pass junk statistics: `(spent, valid_total, max_dense)`. The
+    /// compaction triggers and the utilization gauge each need all three,
+    /// and they run per scheduler tick on the hot path — one fused scan
+    /// of the bitmask (the same order of work as the bitmask upload every
+    /// decode/score call already pays) instead of one per derived value.
+    pub fn junk_stats(&self) -> (usize, usize, usize) {
+        let spent = self.batch * self.pos_phys;
+        let mut valid_total = 0usize;
+        let mut max_dense = 0usize;
+        for slot in 0..self.batch {
+            let c = self.valid_count(slot);
+            valid_total += c;
+            max_dense = max_dense.max(c);
+        }
+        (spent, valid_total, max_dense)
+    }
+
+    /// Junk share of the spent cache: positions below the lockstep
+    /// frontier that no slot may attend (block overshoot, PAD, dead-slot
+    /// rows), over all spent positions. 0.0 on a fresh cache.
+    pub fn junk_fraction(&self) -> f64 {
+        let (spent, valid_total, _) = self.junk_stats();
+        if spent == 0 {
+            return 0.0;
+        }
+        (spent - valid_total) as f64 / spent as f64
+    }
+
+    /// Physical positions a re-compaction would reclaim: the frontier
+    /// drops to the max dense length over slots.
+    pub fn reclaimable(&self) -> usize {
+        let (_, _, max_dense) = self.junk_stats();
+        self.pos_phys.saturating_sub(max_dense)
+    }
+
+    /// Plan a re-compaction (pure — bookkeeping is untouched until
+    /// [`KvSet::apply_compact`]). Each slot's valid positions pack down to
+    /// a dense prefix *in their original order*, which is what keeps the
+    /// device gather semantically invisible: the attendable (position ->
+    /// K/V) sequence every future attention call reads is unchanged, only
+    /// the junk holes between entries disappear. Returns `None` when
+    /// nothing would be reclaimed.
+    pub fn compact_plan(&self) -> Option<CompactPlan> {
+        let s = self.cache_len;
+        let mut idx = vec![0i32; self.batch * s];
+        let mut max_dense = 0usize;
+        for slot in 0..self.batch {
+            let row = slot * s;
+            let mut dense = 0usize;
+            for p in 0..s {
+                if self.valid[row + p] != 0 {
+                    idx[row + dense] = p as i32;
+                    dense += 1;
+                }
+            }
+            max_dense = max_dense.max(dense);
+        }
+        let reclaimed = self.pos_phys.saturating_sub(max_dense);
+        if reclaimed == 0 {
+            return None;
+        }
+        Some(CompactPlan { idx, new_frontier: max_dense, reclaimed })
+    }
+
+    /// Apply a plan to the host bookkeeping after the device gather ran:
+    /// validity rows become dense prefixes, the lockstep frontier drops to
+    /// the max dense length, and `pos_log` is untouched (RoPE positions
+    /// are logical; moving K/V between physical slots never changes them).
+    pub fn apply_compact(&mut self, plan: &CompactPlan) {
+        assert_eq!(plan.idx.len(), self.batch * self.cache_len);
+        assert!(plan.new_frontier <= self.pos_phys, "compaction cannot grow the frontier");
+        for slot in 0..self.batch {
+            let row = slot * self.cache_len;
+            let dense = self.valid_count(slot);
+            self.valid[row..row + dense].fill(1);
+            self.valid[row + dense..row + self.cache_len].fill(0);
+        }
+        self.pos_phys = plan.new_frontier;
+    }
+
     /// Permute host bookkeeping to match a device `gather(idx)`:
-    /// `new[slot] = old[idx[slot]]`.
+    /// `new[slot] = old[idx[slot]]`. Gathers through reusable scratch
+    /// buffers (no per-call `valid` clone — this runs on every beam prune
+    /// at `batch * cache_len` cost).
     pub fn permute_bookkeeping(&mut self, idx: &[i32]) {
         assert_eq!(idx.len(), self.batch);
-        let old_log = self.pos_log.clone();
-        let old_valid = self.valid.clone();
-        for (dst, &src) in idx.iter().enumerate() {
+        let s = self.cache_len;
+        self.scratch_log.clear();
+        self.scratch_valid.clear();
+        self.scratch_valid.reserve(self.valid.len());
+        for &src in idx {
             let src = src as usize;
             assert!(src < self.batch, "gather index {src} out of range");
-            self.pos_log[dst] = old_log[src];
-            let (d0, s0) = (dst * self.cache_len, src * self.cache_len);
-            self.valid[d0..d0 + self.cache_len]
-                .copy_from_slice(&old_valid[s0..s0 + self.cache_len]);
+            self.scratch_log.push(self.pos_log[src]);
+            self.scratch_valid.extend_from_slice(&self.valid[src * s..(src + 1) * s]);
         }
+        std::mem::swap(&mut self.pos_log, &mut self.scratch_log);
+        std::mem::swap(&mut self.valid, &mut self.scratch_valid);
     }
 
     /// Host bookkeeping for a device `merge(idx)` of two caches: dest slot
@@ -256,6 +371,223 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn junk_fraction_and_reclaimable_track_the_gap() {
+        let mut kv = toy(2, 8);
+        assert_eq!(kv.junk_fraction(), 0.0, "fresh cache has no spent positions");
+        assert_eq!(kv.reclaimable(), 0);
+        // frontier at 6; slot0 holds 4 clean tokens, slot1 holds 2
+        kv.commit(0, 0, 2);
+        kv.commit(0, 3, 2);
+        kv.commit(1, 1, 2);
+        kv.pos_phys = 6;
+        assert_eq!(kv.valid_count(0), 4);
+        assert_eq!(kv.valid_count(1), 2);
+        assert!((kv.junk_fraction() - 0.5).abs() < 1e-12, "6 junk of 12 spent");
+        assert_eq!(kv.reclaimable(), 2, "frontier 6 drops to max dense 4");
+    }
+
+    #[test]
+    fn compact_plan_packs_valid_positions_in_order() {
+        let mut kv = toy(2, 8);
+        kv.commit(0, 0, 2); // slot0 valid at {0,1,4}
+        kv.commit(0, 4, 1);
+        kv.commit(1, 3, 1); // slot1 valid at {3}
+        kv.pos_phys = 6;
+        let plan = kv.compact_plan().expect("junk to reclaim");
+        assert_eq!(plan.new_frontier, 3);
+        assert_eq!(plan.reclaimed, 3);
+        assert_eq!(&plan.idx[0..3], &[0, 1, 4], "slot0 sources, original order");
+        assert_eq!(plan.idx[8], 3, "slot1 source");
+        kv.apply_compact(&plan);
+        assert_eq!(kv.pos_phys, 3);
+        assert_eq!(&kv.valid[0..4], &[1, 1, 1, 0], "slot0 packed dense");
+        assert_eq!(&kv.valid[8..12], &[1, 0, 0, 0], "slot1 packed dense");
+        assert_eq!(kv.pos_log, vec![3, 1], "logical positions untouched");
+        assert_eq!(kv.remaining(), 5, "capacity reclaimed");
+        assert!(kv.compact_plan().is_none(), "a packed cache has nothing left to reclaim");
+    }
+
+    #[test]
+    fn compact_plan_none_when_dense() {
+        let mut kv = toy(2, 8);
+        kv.commit(0, 0, 3);
+        kv.pos_phys = 3; // slot0 dense up to the frontier
+        assert!(kv.compact_plan().is_none());
+    }
+
+    /// The re-compaction correctness core, over a host model of the device
+    /// arrays: gathering a cache through `CompactPlan::idx` and then
+    /// reading each slot's valid positions must yield exactly the token
+    /// sequence the uncompacted cache's valid positions held (same values,
+    /// same order), with the frontier lowered to the max dense length —
+    /// i.e. compact-then-read is indistinguishable from never having
+    /// fragmented.
+    #[test]
+    fn prop_compact_preserves_attendable_sequence() {
+        use crate::util::propcheck::check_simple;
+        check_simple(
+            "compact-preserves-attendable",
+            |rng| {
+                let s = 4 + rng.below(8);
+                let batch = 1 + rng.below(4);
+                let mut kv = KvSet::new(Vec::new(), batch, s);
+                kv.pos_phys = rng.below(s + 1);
+                // random valid bits strictly below the frontier (the
+                // lockstep discipline: commits never pass pos_phys)
+                for slot in 0..batch {
+                    for p in 0..kv.pos_phys {
+                        if rng.below(2) == 1 {
+                            kv.valid[slot * s + p] = 1;
+                        }
+                    }
+                    kv.pos_log[slot] = kv.valid_count(slot) as i32;
+                }
+                // host model of one device plane: cell = encoded position
+                let cells: Vec<i32> =
+                    (0..batch * s).map(|i| (i % s) as i32 + 1000 * (i / s) as i32).collect();
+                (s, batch, kv.pos_phys, kv.pos_log.clone(), kv.valid.clone(), cells)
+            },
+            |&(s, batch, pos_phys, ref pos_log, ref valid, ref cells)| {
+                let mut kv = KvSet::new(Vec::new(), batch, s);
+                kv.pos_phys = pos_phys;
+                kv.pos_log = pos_log.clone();
+                kv.valid = valid.clone();
+                let before: Vec<Vec<i32>> = (0..batch)
+                    .map(|slot| {
+                        (0..s)
+                            .filter(|&p| kv.valid[slot * s + p] != 0)
+                            .map(|p| cells[slot * s + p])
+                            .collect()
+                    })
+                    .collect();
+                let Some(plan) = kv.compact_plan() else {
+                    // nothing reclaimed: every slot's dense length must
+                    // already reach the frontier
+                    let max_dense = (0..batch).map(|sl| kv.valid_count(sl)).max().unwrap_or(0);
+                    return if max_dense == pos_phys {
+                        Ok(())
+                    } else {
+                        Err("no plan despite a junk gap".into())
+                    };
+                };
+                // device-gather model: out[slot][p] = cells[slot][idx[slot][p]]
+                let gathered: Vec<i32> = (0..batch * s)
+                    .map(|i| cells[(i / s) * s + plan.idx[i] as usize])
+                    .collect();
+                kv.apply_compact(&plan);
+                if kv.pos_phys != plan.new_frontier {
+                    return Err("frontier not lowered to max dense length".into());
+                }
+                for slot in 0..batch {
+                    let after: Vec<i32> = (0..s)
+                        .filter(|&p| kv.valid[slot * s + p] != 0)
+                        .map(|p| gathered[slot * s + p])
+                        .collect();
+                    if after != before[slot] {
+                        return Err(format!(
+                            "slot {slot}: attendable sequence changed {:?} -> {:?}",
+                            before[slot], after
+                        ));
+                    }
+                    // packed rows must be dense prefixes ending below the
+                    // new frontier
+                    let dense = kv.valid_count(slot);
+                    if kv.valid[slot * s..slot * s + dense].iter().any(|&v| v == 0) {
+                        return Err(format!("slot {slot}: validity row not dense"));
+                    }
+                    if dense > kv.pos_phys {
+                        return Err(format!("slot {slot}: dense length passes the frontier"));
+                    }
+                    if kv.pos_log[slot] != pos_log[slot] {
+                        return Err("pos_log changed under compaction".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Compaction then a further gather must agree with gathering first
+    /// and compacting after — the ordering-freedom the coordinator relies
+    /// on when gang members compact right before a merge.
+    #[test]
+    fn prop_compact_commutes_with_gather_on_valid_tokens() {
+        use crate::util::propcheck::check_simple;
+        check_simple(
+            "compact-gather-commute",
+            |rng| {
+                let s = 4 + rng.below(6);
+                let batch = 2 + rng.below(3);
+                let mut kv = KvSet::new(Vec::new(), batch, s);
+                kv.pos_phys = rng.below(s + 1);
+                for slot in 0..batch {
+                    for p in 0..kv.pos_phys {
+                        if rng.below(2) == 1 {
+                            kv.valid[slot * s + p] = 1;
+                        }
+                    }
+                }
+                let perm: Vec<i32> = (0..batch).map(|_| rng.below(batch) as i32).collect();
+                (s, batch, kv.pos_phys, kv.valid.clone(), perm)
+            },
+            |&(s, batch, pos_phys, ref valid, ref perm)| {
+                let rebuild = |valid: &[i32]| {
+                    let mut kv = KvSet::new(Vec::new(), batch, s);
+                    kv.pos_phys = pos_phys;
+                    kv.valid = valid.to_vec();
+                    kv
+                };
+                let attendable = |kv: &KvSet, slot: usize| -> usize { kv.valid_count(slot) };
+                // path A: gather, then compact
+                let mut a = rebuild(valid);
+                a.permute_bookkeeping(perm);
+                if let Some(p) = a.compact_plan() {
+                    a.apply_compact(&p);
+                }
+                // path B: compact, then gather
+                let mut b = rebuild(valid);
+                if let Some(p) = b.compact_plan() {
+                    b.apply_compact(&p);
+                }
+                b.permute_bookkeeping(perm);
+                for slot in 0..batch {
+                    if attendable(&a, slot) != attendable(&b, slot) {
+                        return Err(format!(
+                            "slot {slot}: attendable count diverged ({} vs {})",
+                            attendable(&a, slot),
+                            attendable(&b, slot)
+                        ));
+                    }
+                }
+                // path A may pack tighter (post-gather junk rows gone), but
+                // never looser than B's frontier
+                if a.pos_phys > b.pos_phys {
+                    return Err(format!(
+                        "gather-then-compact frontier {} above compact-then-gather {}",
+                        a.pos_phys, b.pos_phys
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn permute_reuses_scratch_without_reallocating() {
+        let mut kv = toy(4, 16);
+        kv.commit(0, 0, 3);
+        kv.permute_bookkeeping(&[3, 2, 1, 0]);
+        let cap_v = kv.scratch_valid.capacity();
+        let cap_l = kv.scratch_log.capacity();
+        assert!(cap_v >= 4 * 16, "scratch holds a full bitmask after one call");
+        for _ in 0..4 {
+            kv.permute_bookkeeping(&[0, 1, 2, 3]);
+        }
+        assert_eq!(kv.scratch_valid.capacity(), cap_v, "steady state allocates nothing");
+        assert_eq!(kv.scratch_log.capacity(), cap_l);
     }
 
     #[test]

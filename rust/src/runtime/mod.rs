@@ -20,5 +20,5 @@ pub mod engine;
 pub mod kv;
 
 pub use artifacts::{Manifest, ModelArch};
-pub use engine::{Engine, EngineStats, ModelKind};
-pub use kv::KvSet;
+pub use engine::{CallWall, Engine, EngineStats, ModelKind};
+pub use kv::{CompactPlan, KvSet};

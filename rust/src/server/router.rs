@@ -89,6 +89,9 @@ struct Shard {
     dead: AtomicBool,
 }
 
+/// Followers of one in-flight single-flight key, waiting on the leader.
+type SfWaiters = Vec<oneshot::Sender<Result<Solved>>>;
+
 struct PoolInner {
     shards: Vec<Shard>,
     capacity: usize,
@@ -97,6 +100,15 @@ struct PoolInner {
     cache: Option<Mutex<SolveCache>>,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    /// Pool-level single-flight table (ROADMAP: cross-shard coalescing).
+    /// The shard-local fleet coalescer only folds duplicates placed on
+    /// its own shard; this table catches identical in-flight requests
+    /// *before placement*, so duplicates that least-loaded dispatch would
+    /// have scattered across shards ride one engine run instead. `None`
+    /// disables (the dedup contract is the same determinism the solve
+    /// cache relies on: equal keys are proven byte-identical).
+    singleflight: Option<Mutex<HashMap<String, SfWaiters>>>,
+    pool_coalesced: AtomicU64,
     joins: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -120,6 +132,10 @@ pub struct PoolOptions {
     pub default_deadline_ms: u64,
     /// `Some` switches every shard to the fleet scheduler.
     pub fleet: Option<FleetOptions>,
+    /// Pool-level single-flight: identical requests coalesce onto one
+    /// engine run before placement, so duplicates landing on different
+    /// shards no longer both execute.
+    pub singleflight: bool,
 }
 
 /// RAII slot reservation against one shard's depth gauge. Dropping the
@@ -133,6 +149,29 @@ struct DepthGuard {
 impl Drop for DepthGuard {
     fn drop(&mut self) {
         self.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// RAII cleanup of one single-flight leadership: removes the key from the
+/// table on drop, so followers of a leader that panicked mid-dispatch see
+/// their senders dropped (-> internal error on `recv`) instead of hanging
+/// on a key nobody owns.
+struct SingleFlightGuard<'a> {
+    table: &'a Mutex<HashMap<String, SfWaiters>>,
+    key: String,
+}
+
+impl SingleFlightGuard<'_> {
+    /// Claim the accumulated followers (the normal completion path); the
+    /// Drop that follows finds nothing left to clean.
+    fn take_waiters(self) -> SfWaiters {
+        self.table.lock().unwrap().remove(&self.key).unwrap_or_default()
+    }
+}
+
+impl Drop for SingleFlightGuard<'_> {
+    fn drop(&mut self) {
+        let _ = self.table.lock().unwrap().remove(&self.key);
     }
 }
 
@@ -178,6 +217,7 @@ impl EnginePool {
                 cache_entries,
                 default_deadline_ms: 0,
                 fleet: None,
+                singleflight: false,
             },
         )
     }
@@ -262,6 +302,8 @@ impl EnginePool {
                 cache,
                 cache_hits: AtomicU64::new(0),
                 cache_misses: AtomicU64::new(0),
+                singleflight: opts.singleflight.then(|| Mutex::new(HashMap::new())),
+                pool_coalesced: AtomicU64::new(0),
                 joins: Mutex::new(joins),
             }),
         })
@@ -278,7 +320,9 @@ impl EnginePool {
     }
 
     /// Like [`EnginePool::solve`], but also reports how long the request
-    /// waited for scheduling (`queue_wait_ms`; 0 on a cache hit).
+    /// waited for scheduling (`queue_wait_ms`; 0 on a cache hit, the
+    /// leader's value when this request coalesced onto an in-flight
+    /// single-flight run).
     pub fn solve_timed(&self, req: SolveRequest, mut cfg: SearchConfig) -> Result<Solved> {
         cfg.mode = req.mode;
         cfg.n_beams = req.n_beams;
@@ -292,8 +336,58 @@ impl EnginePool {
             }
             self.inner.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
-        // One placement attempt per shard: a dispatch that dies marks its
-        // shard dead, and the next reserve() skips it.
+        // Pool-level single-flight: follow an in-flight leader for the
+        // same key instead of dispatching a second engine run (possibly
+        // onto a different shard, where the shard-local coalescer could
+        // never see the duplicate). Deadline-bounded requests bypass the
+        // table in both roles — including those bounded only by the pool
+        // default: a follower has no timed wait (it would inherit the
+        // leader's deadline fate and break its own end-to-end 504
+        // contract — a leader admitted earlier exhausts its budget
+        // earlier), and a tightly-bounded leader would impose its 504 on
+        // unbounded followers. The shard-local fleet coalescer still
+        // folds bounded duplicates, with proper per-rider deadline
+        // accounting.
+        let sf_guard = if let (None, Some(sf)) =
+            (self.effective_deadline(&req), &self.inner.singleflight)
+        {
+            let mut table = sf.lock().unwrap();
+            if let Some(waiters) = table.get_mut(&key) {
+                let (tx, rx) = oneshot::channel();
+                waiters.push(tx);
+                drop(table);
+                self.inner.pool_coalesced.fetch_add(1, Ordering::Relaxed);
+                return rx
+                    .recv()
+                    .map_err(|_| Error::internal("single-flight leader vanished"))?;
+            }
+            table.insert(key.clone(), Vec::new());
+            Some(SingleFlightGuard { table: sf, key: key.clone() })
+        } else {
+            None
+        };
+        let res = self.dispatch_with_failover(req, cfg);
+        if let Some(g) = sf_guard {
+            // fan the leader's result out to every follower; the guard's
+            // Drop (which runs even when dispatch panicked) only cleans
+            // the table, so followers of a crashed leader error out
+            // instead of hanging
+            for w in g.take_waiters() {
+                let _ = w.send(match &res {
+                    Ok(s) => Ok(s.clone()),
+                    Err(e) => Err(e.clone_class()),
+                });
+            }
+        }
+        if let (Ok(out), Some(cache)) = (&res, &self.inner.cache) {
+            cache.lock().unwrap().put(key, out.outcome.clone());
+        }
+        res
+    }
+
+    /// One placement attempt per shard: a dispatch that dies marks its
+    /// shard dead, and the next reserve() skips it.
+    fn dispatch_with_failover(&self, req: SolveRequest, cfg: SearchConfig) -> Result<Solved> {
         let mut last_err = None;
         for _ in 0..self.inner.shards.len() {
             let (idx, guard) = self.reserve()?;
@@ -302,13 +396,7 @@ impl EnginePool {
                     log_error!("shard {idx} dead; failing request over: {e}");
                     last_err = Some(e);
                 }
-                Ok(out) => {
-                    if let Some(cache) = &self.inner.cache {
-                        cache.lock().unwrap().put(key, out.outcome.clone());
-                    }
-                    return Ok(out);
-                }
-                Err(e) => return Err(e),
+                other => return other,
             }
         }
         Err(last_err.unwrap_or_else(|| Error::internal("every engine shard is dead")))
@@ -497,6 +585,17 @@ impl EnginePool {
         self.inner.shards.iter().map(|s| !s.dead.load(Ordering::Relaxed)).collect()
     }
 
+    /// Identical requests that coalesced onto an in-flight engine run at
+    /// the pool level (cross-shard single-flight).
+    pub fn pool_coalesced(&self) -> u64 {
+        self.inner.pool_coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Whether the pool-level single-flight table is on.
+    pub fn singleflight_enabled(&self) -> bool {
+        self.inner.singleflight.is_some()
+    }
+
     /// (hits, misses) of the solve cache; (0, 0) when disabled.
     pub fn cache_counters(&self) -> (u64, u64) {
         (
@@ -569,8 +668,14 @@ impl EnginePool {
             out.push_str(&format!("erprm_batch_merged_slots_total {}\n", b.merged_slots));
             out.push_str(&format!("erprm_batch_padding_slots_total {}\n", b.padding_slots));
             out.push_str(&format!("erprm_batch_wait_rounds_total {}\n", b.wait_rounds));
+            out.push_str(&format!("erprm_batch_precompact_total {}\n", b.precompacts));
             out.push_str(&format!("erprm_batch_gang_failures_total {}\n", b.gang_failures));
         }
+        out.push_str(&format!(
+            "erprm_pool_singleflight_enabled {}\n",
+            self.singleflight_enabled() as u8
+        ));
+        out.push_str(&format!("erprm_pool_coalesced_total {}\n", self.pool_coalesced()));
         let (hits, misses) = self.cache_counters();
         out.push_str(&format!("erprm_cache_hits_total {hits}\n"));
         out.push_str(&format!("erprm_cache_misses_total {misses}\n"));
@@ -579,6 +684,14 @@ impl EnginePool {
         out.push_str(&format!("erprm_engine_decode_calls_total {}\n", s.decode_calls));
         out.push_str(&format!("erprm_engine_score_calls_total {}\n", s.score_calls));
         out.push_str(&format!("erprm_engine_merge_calls_total {}\n", s.merge_calls));
+        // KV re-compaction: junk share of spent cache positions (live
+        // utilization signal), compactions run, and positions reclaimed
+        out.push_str(&format!("erprm_kv_junk_fraction {:.4}\n", s.junk_fraction()));
+        out.push_str(&format!("erprm_kv_compact_total {}\n", s.compact_calls));
+        out.push_str(&format!(
+            "erprm_kv_reclaimed_positions_total {}\n",
+            s.compact_reclaimed
+        ));
         out.push_str(&format!("erprm_engine_compiles_total {}\n", s.compiles));
         out.push_str(&format!("erprm_engine_compile_wall_seconds {:.3}\n", s.compile_wall_s));
         out.push_str(&format!("erprm_engine_execute_wall_seconds {:.3}\n", s.execute_wall_s));
@@ -842,6 +955,7 @@ mod tests {
                 cache_entries: 0,
                 default_deadline_ms: 0,
                 fleet: Some(FleetOptions::default()),
+                singleflight: false,
             },
         );
         assert!(r.is_err());
@@ -857,6 +971,7 @@ mod tests {
                 cache_entries: 0,
                 default_deadline_ms: 0,
                 fleet: None,
+                singleflight: false,
             },
         );
         assert!(r.is_err());
@@ -868,6 +983,7 @@ mod tests {
                 cache_entries: 0,
                 default_deadline_ms: 0,
                 fleet: Some(FleetOptions { max_inflight: 0, ..FleetOptions::default() }),
+                singleflight: false,
             },
         );
         assert!(r.is_err());
@@ -977,9 +1093,16 @@ mod tests {
                 cache: None,
                 cache_hits: AtomicU64::new(0),
                 cache_misses: AtomicU64::new(0),
+                singleflight: None,
+                pool_coalesced: AtomicU64::new(0),
                 joins: Mutex::new(joins),
             }),
         }
+    }
+
+    fn enable_singleflight(pool: &mut EnginePool) {
+        let inner = Arc::get_mut(&mut pool.inner).unwrap();
+        inner.singleflight = Some(Mutex::new(HashMap::new()));
     }
 
     fn request() -> SolveRequest {
@@ -1080,6 +1203,106 @@ mod tests {
         let inner = Arc::get_mut(&mut pool.inner).unwrap();
         inner.default_deadline_ms = 0;
         assert_eq!(pool.effective_deadline(&request()), None);
+    }
+
+    #[test]
+    fn singleflight_coalesces_concurrent_identical_requests() {
+        // fake shard: counts solves, replies after a pause long enough
+        // for the followers to pile onto the leader's key
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let served = Arc::new(AtomicU64::new(0));
+        let served2 = Arc::clone(&served);
+        let join = std::thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Shutdown => break,
+                    Msg::Solve(job) => {
+                        served2.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(300));
+                        let _ = job
+                            .reply
+                            .send(Ok(Solved { outcome: outcome(7), queue_wait_ms: 1.0 }));
+                    }
+                }
+            }
+        });
+        let mut pool = fake_pool(vec![fake_shard(tx)], vec![join]);
+        enable_singleflight(&mut pool);
+        assert!(pool.singleflight_enabled());
+        let leader = {
+            let p = pool.clone();
+            std::thread::spawn(move || p.solve_timed(request(), SearchConfig::default()))
+        };
+        std::thread::sleep(Duration::from_millis(50)); // leader holds the key
+        let followers: Vec<_> = (0..3)
+            .map(|_| {
+                let p = pool.clone();
+                std::thread::spawn(move || p.solve_timed(request(), SearchConfig::default()))
+            })
+            .collect();
+        // an identical request with an explicit deadline must bypass the
+        // table even while the leader is in flight (no timed wait exists;
+        // it must not inherit the leader's deadline fate)
+        let bounded = {
+            let p = pool.clone();
+            std::thread::spawn(move || {
+                let mut r = request();
+                r.deadline_ms = Some(60_000);
+                p.solve_timed(r, SearchConfig::default())
+            })
+        };
+        let lead = leader.join().unwrap().unwrap();
+        assert_eq!(lead.outcome.answer, Some(7));
+        for f in followers {
+            let s = f.join().unwrap().expect("follower rides the leader");
+            assert_eq!(s.outcome.answer, Some(7));
+        }
+        bounded.join().unwrap().expect("bounded duplicate dispatches its own run");
+        assert_eq!(
+            served.load(Ordering::Relaxed),
+            2,
+            "one engine run served the three unbounded requests; the bounded \
+             duplicate ran alone"
+        );
+        assert_eq!(pool.pool_coalesced(), 3);
+        assert!(pool.render_metrics().contains("erprm_pool_coalesced_total 3"));
+        // the table drained: a later request dispatches fresh
+        let again = pool.solve_timed(request(), SearchConfig::default()).unwrap();
+        assert_eq!(again.outcome.answer, Some(7));
+        assert_eq!(served.load(Ordering::Relaxed), 3);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn singleflight_followers_surface_leader_errors_by_class() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Shutdown => break,
+                    Msg::Solve(job) => {
+                        std::thread::sleep(Duration::from_millis(120));
+                        let _ = job.reply.send(Err(Error::deadline("budget spent")));
+                    }
+                }
+            }
+        });
+        let mut pool = fake_pool(vec![fake_shard(tx)], vec![join]);
+        enable_singleflight(&mut pool);
+        let leader = {
+            let p = pool.clone();
+            std::thread::spawn(move || p.solve_timed(request(), SearchConfig::default()))
+        };
+        std::thread::sleep(Duration::from_millis(40));
+        let follower = {
+            let p = pool.clone();
+            std::thread::spawn(move || p.solve_timed(request(), SearchConfig::default()))
+        };
+        let le = leader.join().unwrap().unwrap_err();
+        let fe = follower.join().unwrap().unwrap_err();
+        assert_eq!(le.http_status(), 504);
+        assert_eq!(fe.http_status(), 504, "follower renders the leader's class: {fe}");
+        pool.shutdown();
     }
 
     #[test]

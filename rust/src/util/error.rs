@@ -73,6 +73,22 @@ impl Error {
         Error::Internal(m.into())
     }
 
+    /// Rebuild an error of the same class (`Error` is not `Clone` because
+    /// of the `Io` payload) so every request attached to one engine run —
+    /// fleet riders, pool single-flight followers — renders the same HTTP
+    /// status: a deadline abort stays 504, backpressure stays 503, never
+    /// a retry-suggesting 500.
+    pub fn clone_class(&self) -> Error {
+        match self {
+            Error::Parse(m) => Error::Parse(m.clone()),
+            Error::Xla(m) => Error::Xla(m.clone()),
+            Error::Invalid(m) => Error::Invalid(m.clone()),
+            Error::Saturated(m) => Error::Saturated(m.clone()),
+            Error::Deadline(m) => Error::Deadline(m.clone()),
+            other => Error::Internal(other.to_string()),
+        }
+    }
+
     /// The HTTP status this error renders as: client mistakes are 4xx,
     /// backpressure is 503 (retryable), deadline expiry is 504,
     /// runtime/infrastructure faults are 500.
@@ -98,6 +114,23 @@ mod tests {
         assert!(Error::deadline("w").to_string().contains("deadline"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn clone_class_preserves_http_status() {
+        for e in [
+            Error::parse("a"),
+            Error::invalid("b"),
+            Error::saturated("c"),
+            Error::deadline("d"),
+            Error::internal("e"),
+            Error::Xla("f".into()),
+        ] {
+            assert_eq!(e.clone_class().http_status(), e.http_status(), "{e}");
+        }
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert_eq!(io.clone_class().http_status(), 500);
+        assert!(io.clone_class().to_string().contains("gone"), "message survives");
     }
 
     #[test]

@@ -405,6 +405,9 @@ fn fleet_pool(dir: PathBuf, shards: usize, max_inflight: usize, cache: usize) ->
             cache_entries: cache,
             default_deadline_ms: 0,
             fleet: Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
+            // off so these tests keep exercising the *shard-local*
+            // coalescer; the pool-level table has its own tests
+            singleflight: false,
         },
     )
     .expect("fleet pool spawn")
@@ -629,6 +632,7 @@ fn gang_batched_solves_are_byte_identical_to_solo() {
             cache_entries: 0,
             default_deadline_ms: 0,
             fleet: Some(FleetOptions { max_inflight: 4, gang: true, ..FleetOptions::default() }),
+            singleflight: false,
         },
     )
     .expect("gang pool spawn");
@@ -812,6 +816,149 @@ fn fleet_rejects_doomed_deadlines_at_admission() {
     assert_eq!(t.expired, 0, "rejection must use the forecast path, not queue expiry: {t:?}");
     let err = doomed_rx.recv().expect("a reply").unwrap_err();
     assert_eq!(err.http_status(), 504, "{err}");
+}
+
+// ------------------------------------------------------------- compaction
+
+// The compaction acceptance gate: a solve that re-compacts its KV caches
+// mid-flight must produce the same SolveOutcome, byte for byte (modulo
+// wall-clock), as one that never compacts — equivalently, as a solve
+// whose cache was always large enough to never fragment. Compaction only
+// moves K/V entries whose junk neighbours the validity mask already
+// excludes (contributing exact zeros to attention), and preserves each
+// slot's attendable sequence in order, so it is semantically invisible.
+#[test]
+fn compaction_mid_flight_is_byte_identical_to_uncompacted() {
+    let Some(dir) = artifacts() else { return };
+    let e = Engine::load(&dir).expect("engine load");
+    if !e.manifest.model("lm").map(|m| m.has_program("compact_b8")).unwrap_or(false) {
+        eprintln!("[integration] artifacts lack compact programs; skipping compaction test");
+        return;
+    }
+    let base = cfg(SearchMode::EarlyRejection, 8, 8);
+    let never = SearchConfig { compact_junk: 1.0, ..base.clone() };
+    let eager = SearchConfig { compact_junk: 0.0, ..base };
+    let problems = problem_set(&SATMATH, 3, 4242);
+    let reference: Vec<_> = problems
+        .iter()
+        .map(|p| solve_early_rejection(&e, "lm-concise", "prm-large", p, &never, 0.5).unwrap())
+        .collect();
+    assert_eq!(
+        e.stats().compact_calls,
+        0,
+        "threshold 1.0 must not compact these short workloads (rescue never fires)"
+    );
+    for (i, p) in problems.iter().enumerate() {
+        let out =
+            solve_early_rejection(&e, "lm-concise", "prm-large", p, &eager, 0.5).unwrap();
+        assert_eq!(out.answer, reference[i].answer, "problem {i}: answer diverged");
+        assert_eq!(
+            out.best_trace, reference[i].best_trace,
+            "problem {i}: trace diverged under mid-flight compaction"
+        );
+        assert_eq!(
+            out.ledger, reference[i].ledger,
+            "problem {i}: FLOPs accounting diverged under compaction (compaction must \
+             never be charged)"
+        );
+        assert_eq!(out.steps_executed, reference[i].steps_executed, "problem {i}");
+        assert_eq!(out.finished_beams, reference[i].finished_beams, "problem {i}");
+    }
+    let s = e.stats();
+    assert!(
+        s.compact_calls >= 1,
+        "threshold 0.0 must have compacted mid-flight (reclaimed {}, calls {})",
+        s.compact_reclaimed,
+        s.compact_calls
+    );
+    assert!(s.compact_reclaimed > 0, "compactions must reclaim positions: {s:?}");
+}
+
+// Engine-level compaction semantics against real device buffers: a
+// decode after compaction samples exactly what it would have sampled
+// without one, and the cache regains the reclaimed headroom.
+#[test]
+fn kv_compact_is_invisible_to_decode() {
+    let Some(e) = engine() else { return };
+    if !e.manifest.model("lm").unwrap().has_program("compact_b4") {
+        eprintln!("[integration] artifacts lack compact programs; skipping");
+        return;
+    }
+    let p = Problem { v0: 25, ops: vec![OpStep { op: tk::PLUS, d: 4 }] };
+    let (_, kv1) = e.lm_prefill("lm-concise", &p.prompt_tokens()).unwrap();
+    let prev = vec![tk::DIG0 + 2; 4];
+    let keys: Vec<u32> = (0..8).collect();
+    // reference: decode on the fragmented cache (prompt junk up to
+    // PROMPT_PAD stays in place)
+    let mut plain = e.kv_broadcast("lm-concise", &kv1, 4).unwrap();
+    let ref_toks = e.lm_decode_block("lm-concise", &mut plain, &prev, 0.7, &keys).unwrap();
+    // compacted: same cache repacked first
+    let mut packed = e.kv_broadcast("lm-concise", &kv1, 4).unwrap();
+    let frontier_before = packed.pos_phys;
+    let changed = e.kv_compact("lm-concise", &mut packed).unwrap();
+    assert!(changed, "prompt padding junk must be reclaimable");
+    assert!(packed.pos_phys < frontier_before, "frontier must drop");
+    assert_eq!(
+        packed.pos_phys as i32, packed.pos_log[0],
+        "dense frontier equals the prompt length"
+    );
+    let toks = e.lm_decode_block("lm-concise", &mut packed, &prev, 0.7, &keys).unwrap();
+    assert_eq!(toks, ref_toks, "compaction changed sampled tokens");
+    // idempotence: a dense cache has nothing to reclaim
+    let mut again = e.kv_broadcast("lm-concise", &kv1, 4).unwrap();
+    e.kv_compact("lm-concise", &mut again).unwrap();
+    assert!(!e.kv_compact("lm-concise", &mut again).unwrap());
+}
+
+// ------------------------------------------------- pool single-flight
+
+// Cross-shard coalescing (ROADMAP): identical concurrent requests must
+// share one engine run even when least-loaded placement would have
+// scattered them across different shards. The accounting identity is
+// race-free: every request either ran on a shard or coalesced at the
+// pool.
+#[test]
+fn pool_singleflight_coalesces_across_shards() {
+    let Some(dir) = artifacts() else { return };
+    let epool = EnginePool::spawn_with(
+        dir,
+        PoolOptions {
+            shards: 2,
+            capacity: 8,
+            cache_entries: 0,
+            default_deadline_ms: 0,
+            fleet: None,
+            singleflight: true,
+        },
+    )
+    .expect("pool spawn");
+    let cfg = SearchConfig::default();
+    let req = api::parse_solve(solve_body(), &cfg).unwrap();
+    let joins: Vec<_> = (0..4)
+        .map(|_| {
+            let pool = epool.clone();
+            let c = cfg.clone();
+            let r = req.clone();
+            std::thread::spawn(move || pool.solve(r, c).unwrap())
+        })
+        .collect();
+    let outs: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for o in &outs[1..] {
+        assert_eq!(o.best_trace, outs[0].best_trace, "followers must agree with the leader");
+        assert_eq!(o.ledger, outs[0].ledger);
+    }
+    let engine_runs: u64 = epool.shard_solves().iter().sum();
+    assert_eq!(
+        engine_runs + epool.pool_coalesced(),
+        4,
+        "every request either led an engine run or coalesced at the pool"
+    );
+    assert!(engine_runs >= 1);
+    let text = epool.render_metrics();
+    assert!(text.contains("erprm_pool_singleflight_enabled 1"), "{text}");
+    assert!(text.contains("erprm_kv_junk_fraction"), "{text}");
+    assert!(text.contains("erprm_kv_compact_total"), "{text}");
+    epool.shutdown();
 }
 
 #[test]
