@@ -17,6 +17,14 @@
 //! coalescing pays once for duplicate in-flight work, like production
 //! traffic hitting a hot prompt).
 //!
+//! A fourth run, `fleet+paged` (`--kv-pool-blocks`, default 4096 per
+//! shard; 0 disables), replays the same traffic through the fleet
+//! scheduler with KV in a shared per-shard block pool. Its acceptance
+//! criteria are printed at the end: every outcome byte-identical to the
+//! dense fleet run, and the pool's high-water mark below the dense-cache
+//! equivalent (per-slot caches padded to the batch variant and pinned for
+//! the full cache length across `max_inflight` requests per shard).
+//!
 //!     make artifacts && cargo run --release --example fleet_benchmark -- \
 //!         --requests 32 --clients 8 --shards 2 --max-inflight 8 --dup 4
 //!
@@ -25,11 +33,12 @@
 //! `merge_bA_bB_to_bC` programs; older artifact sets degrade to all-solo
 //! calls (the gang counters will read zero).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use erprm::config::{SearchConfig, SearchMode};
 use erprm::fleet::FleetOptions;
+use erprm::runtime::Manifest;
 use erprm::server::api::SolveRequest;
 use erprm::server::{EnginePool, PoolOptions};
 use erprm::util::cli::Args;
@@ -55,9 +64,17 @@ struct Report {
     cache_util: f64,
     compact_calls: u64,
     compact_reclaimed: u64,
+    /// Block-pool footprint (zero on dense runs): high-water mark and
+    /// total, summed across shards.
+    pool_hwm: u64,
+    pool_total: u64,
     fleet_line: String,
     gang_line: String,
 }
+
+/// Per-request outcome digest for cross-mode byte-identity checks
+/// (None where the request failed).
+type Digest = Option<(Option<i64>, usize, Vec<i32>)>;
 
 fn run_mode(
     label: &str,
@@ -65,9 +82,10 @@ fn run_mode(
     shards: usize,
     capacity: usize,
     fleet: Option<FleetOptions>,
+    kv_pool_blocks: usize,
     clients: usize,
     requests: &[SolveRequest],
-) -> Result<Report, Box<dyn std::error::Error>> {
+) -> Result<(Report, Vec<Digest>), Box<dyn std::error::Error>> {
     // LRU cache and pool single-flight both off: the comparison measures
     // the schedulers (and in-shard coalescing), not pool-level dedup
     let pool = EnginePool::spawn_with(
@@ -79,6 +97,7 @@ fn run_mode(
             default_deadline_ms: 0,
             fleet,
             singleflight: false,
+            kv_pool_blocks,
         },
     )?;
     let client_pool = ThreadPool::new(clients);
@@ -95,12 +114,21 @@ fn run_mode(
     let mut latencies = Vec::new();
     let mut queue_waits = Vec::new();
     let mut errors = 0usize;
+    let mut digests: Vec<Digest> = Vec::with_capacity(results.len());
     for (ms, res) in &results {
         latencies.push(*ms);
         match res {
-            Ok(s) => queue_waits.push(s.queue_wait_ms),
+            Ok(s) => {
+                queue_waits.push(s.queue_wait_ms);
+                digests.push(Some((
+                    s.outcome.answer,
+                    s.outcome.steps_executed,
+                    s.outcome.best_trace.clone(),
+                )));
+            }
             Err(e) => {
                 errors += 1;
+                digests.push(None);
                 eprintln!("[{label}] request failed: {e}");
             }
         }
@@ -135,11 +163,13 @@ fn run_mode(
         cache_util: 1.0 - es.junk_fraction(),
         compact_calls: es.compact_calls,
         compact_reclaimed: es.compact_reclaimed,
+        pool_hwm: es.pool_hwm,
+        pool_total: es.pool_blocks_total,
         fleet_line,
         gang_line,
     };
     pool.shutdown();
-    Ok(report)
+    Ok((report, digests))
 }
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -153,6 +183,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // every unique problem is requested `dup` times (hot-prompt traffic)
     let dup = args.get_usize_min("dup", 4, 1)?;
     let gang_max_wait = args.get_u64("gang-max-wait", 1)?;
+    // per-shard block-pool size for the fleet+paged run; 0 skips it
+    let kv_pool_blocks = args.get_usize("kv-pool-blocks", 4096)?;
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("artifacts missing; run `make artifacts` first (skipping benchmark)");
@@ -194,33 +226,58 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         uniques
     );
 
-    let seq = run_mode(
+    let (seq, _) = run_mode(
         "sequential",
         "artifacts".into(),
         shards,
         capacity,
         None,
+        0,
         clients,
         &requests,
     )?;
-    let fleet = run_mode(
+    let (fleet, fleet_digests) = run_mode(
         "fleet",
         "artifacts".into(),
         shards,
         capacity,
         Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
+        0,
         clients,
         &requests,
     )?;
-    let gang = run_mode(
+    let (gang, _) = run_mode(
         "gang",
         "artifacts".into(),
         shards,
         capacity,
         Some(FleetOptions { max_inflight, gang: true, gang_max_wait, ..FleetOptions::default() }),
+        0,
         clients,
         &requests,
     )?;
+
+    // fleet+paged: identical scheduler and traffic, KV in the block pool.
+    // Needs artifacts exported with kv_block; older sets skip (the runtime
+    // would silently fall back to dense, making the comparison vacuous).
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let paged = match (kv_pool_blocks, manifest.kv_block) {
+        (0, _) => None,
+        (_, None) => {
+            println!("\nartifacts predate paged export (no kv_block); skipping fleet+paged run");
+            None
+        }
+        (blocks, Some(_)) => Some(run_mode(
+            "fleet+paged",
+            "artifacts".into(),
+            shards,
+            capacity,
+            Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
+            blocks,
+            clients,
+            &requests,
+        )?),
+    };
 
     println!("\n== sequential vs fleet vs gang (equal shard count) ==");
     println!(
@@ -228,7 +285,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "mode", "wall s", "solves/sec", "p50 ms", "p95 ms", "queue-wait", "errs", "solves",
         "decodes", "decode/req", "cache-util"
     );
-    for r in [&seq, &fleet, &gang] {
+    let mut rows = vec![&seq, &fleet, &gang];
+    if let Some((r, _)) = &paged {
+        rows.push(r);
+    }
+    for r in rows {
         println!(
             "{:<12} {:>8.2} {:>11.2} {:>8.0} {:>8.0} {:>11.1} {:>6} {:>8} {:>10} {:>10.1} \
              {:>9.1}%",
@@ -271,5 +332,48 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         100.0 * gang.cache_util,
         100.0 * fleet.cache_util,
     );
+
+    if let Some((pr, paged_digests)) = &paged {
+        let bs = manifest.kv_block.unwrap();
+        // Dense-cache equivalent at equal traffic: per admitted request the
+        // dense engine pins LM + PRM caches padded to the batch variant for
+        // the full cache length, and the fleet admits up to max_inflight
+        // per shard. Sized at the widest request in the workload, like the
+        // capacity planning a dense deployment has to do.
+        let variant = |n: usize| {
+            manifest.batch_variants.iter().copied().filter(|&v| v >= n).min().unwrap_or(n)
+        };
+        let lm_nb = manifest.model("lm-concise")?.cache_len.div_ceil(bs);
+        let prm_nb = manifest.model("prm-large")?.cache_len.div_ceil(bs);
+        let widest = widths.iter().copied().max().unwrap();
+        let dense_equiv = (shards * max_inflight * variant(widest) * (lm_nb + prm_nb)) as u64;
+        let mismatches =
+            fleet_digests.iter().zip(paged_digests).filter(|(a, b)| a != b).count();
+        println!(
+            "\n== paged KV acceptance (fleet+paged vs fleet, {} blocks/shard of {} tokens) ==",
+            kv_pool_blocks, bs
+        );
+        println!(
+            "outcomes byte-identical: {} ({} of {} requests match)",
+            if mismatches == 0 { "yes" } else { "NO" },
+            requests.len() - mismatches,
+            requests.len(),
+        );
+        println!(
+            "pool high-water mark {} blocks vs dense-cache equivalent {} blocks \
+             ({} shards x {} inflight x b{} x {} blocks/request): {}",
+            pr.pool_hwm,
+            dense_equiv,
+            shards,
+            max_inflight,
+            variant(widest),
+            lm_nb + prm_nb,
+            if pr.pool_hwm < dense_equiv { "BELOW (pass)" } else { "not below" },
+        );
+        println!(
+            "pool total {} blocks/fleet; throughput {:.2} solves/sec vs fleet {:.2}",
+            pr.pool_total, pr.rps, fleet.rps,
+        );
+    }
     Ok(())
 }

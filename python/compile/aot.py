@@ -153,6 +153,69 @@ def export_compact(out_dir: str, cfg: M.ModelCfg, programs: dict):
         )
 
 
+def export_paged(out_dir: str, cfg: M.ModelCfg, programs: dict):
+    """Paged-KV programs, block-granular over KV_BLOCK-token cache blocks
+    (the device half of rust/src/runtime/blocks.rs):
+
+      gather_blocks_bN   per-slot block permutation (table -> dense view
+                         or its inverse), donated like compact
+      append_block_bN    write one fresh block span per slot at a per-slot
+                         destination block
+      decode_paged_bN /  the dense decode/score stack bracketed by
+      score_paged_bN     view/store block gathers, so paged solves stay
+                         byte-identical to dense ones
+
+    All cache args are donated (input_output_alias) — pure gathers, no
+    scatter, so the pool buffer updates in place."""
+    assert cfg.cache_len % M.KV_BLOCK == 0, (cfg.name, cfg.cache_len, M.KV_BLOCK)
+    nw = len(M.weight_specs(cfg))
+    nkv = 2 * cfg.n_layers
+    s = cfg.cache_len
+    nb = s // M.KV_BLOCK
+
+    def wrap(core):
+        def fn(*args):
+            params = M.args_to_params(cfg, args[:nw])
+            return core(params, *args[nw:])
+        return fn
+
+    for b in BATCHES:
+        kv = [spec(sh) for sh in M.kv_shapes(cfg, b)]
+        spans = [spec((b, cfg.n_heads, M.KV_BLOCK, cfg.head_dim)) for _ in range(nkv)]
+        programs[f"gather_blocks_b{b}"] = export(
+            out_dir, f"{cfg.name}_gather_blocks_b{b}",
+            M.kv_gather_blocks, [spec((b, nb), I32)] + kv,
+            donate=range(1, 1 + nkv),
+        )
+        programs[f"append_block_b{b}"] = export(
+            out_dir, f"{cfg.name}_append_block_b{b}",
+            M.kv_append_block, [spec((b,), I32)] + spans + kv,
+            donate=range(1 + nkv, 1 + 2 * nkv),
+        )
+        if cfg.scored:
+            programs[f"score_paged_b{b}"] = export(
+                out_dir, f"{cfg.name}_score_paged_b{b}",
+                wrap(lambda p, *a: M.prm_score_paged(cfg, p, *a)),
+                weight_arg_specs(cfg)
+                + [spec((b, nb), I32), spec((b, nb), I32),
+                   spec((1,), I32), spec((b,), I32), spec((b, s), I32),
+                   spec((b, M.SCORE_BLOCK), I32)]
+                + kv,
+                donate=range(nw + 6, nw + 6 + nkv),
+            )
+        else:
+            programs[f"decode_paged_b{b}"] = export(
+                out_dir, f"{cfg.name}_decode_paged_b{b}",
+                wrap(lambda p, *a: M.lm_decode_paged(cfg, p, *a)),
+                weight_arg_specs(cfg)
+                + [spec((b, nb), I32), spec((b, nb), I32),
+                   spec((1,), I32), spec((b,), I32), spec((b, s), I32),
+                   spec((b,), I32), spec((1,), F32), spec((b, 2), U32)]
+                + kv,
+                donate=range(nw + 8, nw + 8 + nkv),
+            )
+
+
 def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
     nw = len(M.weight_specs(cfg))
     nkv = 2 * cfg.n_layers
@@ -193,6 +256,7 @@ def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
     export_resize(out_dir, cfg, programs)
     export_merge(out_dir, cfg, programs)
     export_compact(out_dir, cfg, programs)
+    export_paged(out_dir, cfg, programs)
     return programs
 
 
@@ -236,6 +300,7 @@ def export_prm(out_dir: str, cfg: M.ModelCfg) -> dict:
     export_resize(out_dir, cfg, programs)
     export_merge(out_dir, cfg, programs)
     export_compact(out_dir, cfg, programs)
+    export_paged(out_dir, cfg, programs)
     programs[f"fullseq_b{FULLSEQ_BATCH}"] = export(
         out_dir, f"{cfg.name}_fullseq_b{FULLSEQ_BATCH}",
         wrap(lambda p, t, l: M.prm_fullseq(cfg, p, t, l)),
@@ -295,6 +360,10 @@ def main():
         "mod": g.MOD,
         "batch_variants": BATCHES,
         "fullseq_batch": FULLSEQ_BATCH,
+        # tokens per paged-KV block; runtimes that predate paging ignore
+        # it, and a manifest without it makes the Rust pool fall back to
+        # dense caches
+        "kv_block": M.KV_BLOCK,
         "models": {
             "lm": model_manifest(
                 M.LM_CFG, lm_programs,

@@ -16,6 +16,10 @@ Entry points (all pure, shapes static per export variant):
                   (correlation studies, Fig. 2 / Fig. 4)
   kv_gather       beam prune/expand slot permutation, on device
   kv_broadcast    b=1 prompt KV -> N beam slots, on device
+  paged kv        KV_BLOCK-granular ops for the Rust block pool:
+                  kv_gather_blocks / kv_append_block permute or fill
+                  blocks, lm_decode_paged / prm_score_paged wrap the dense
+                  block stack in view/store block gathers
 
 KV cache discipline (the L3 contract; see rust/src/runtime/):
   * The cache is 2*L separate arrays [B, H, S, D] (k and v per layer) —
@@ -387,6 +391,75 @@ def kv_compact(idx, *kvs):
     for kv in kvs:
         out.append(jnp.take_along_axis(kv, idx[:, None, :, None], axis=2))
     return tuple(out)
+
+
+KV_BLOCK = 32  # tokens per paged-KV block; must divide every cache_len
+
+
+def paged_view(idx, kv):
+    """Reorder one cache array's KV_BLOCK-wide blocks per slot: output
+    block j of slot b is input block `idx[b, j]`. idx: [B, S/KV_BLOCK] i32,
+    a per-slot block permutation (identity entries for untouched blocks).
+    A pure take_along_axis gather — no scatter, so the donated buffer
+    still aliases in place."""
+    b, h, s, d = kv.shape
+    nb = s // KV_BLOCK
+    blocks = kv.reshape(b, h, nb, KV_BLOCK, d)
+    out = jnp.take_along_axis(blocks, idx[:, None, :, None, None], axis=2)
+    return out.reshape(b, h, s, d)
+
+
+def kv_gather_blocks(idx, *kvs):
+    """Block-granular cache permutation — the paged analogue of
+    `kv_compact`. The host sends each slot's block table (logical block ->
+    physical block) and the device materializes the logical-dense view;
+    with the inverse table it stores a dense view back into pool layout."""
+    return tuple(paged_view(idx, kv) for kv in kvs)
+
+
+def kv_append_block(dst, *arrays):
+    """Write one fresh KV_BLOCK-wide span per slot into its destination
+    block: `out[b, :, dst[b]*KV_BLOCK:(dst[b]+1)*KV_BLOCK, :] = span[b]`.
+    `arrays` is 2*L spans [B, H, KV_BLOCK, D] followed by the 2*L caches
+    [B, H, S, D] (same layer order, like `kv_merge`). A one-hot select
+    over blocks — no scatter."""
+    n = len(arrays) // 2
+    assert len(arrays) == 2 * n, "kv_append_block wants spans then caches"
+    out = []
+    for span, kv in zip(arrays[:n], arrays[n:]):
+        b, h, s, d = kv.shape
+        nb = s // KV_BLOCK
+        blocks = kv.reshape(b, h, nb, KV_BLOCK, d)
+        hit = lax.broadcasted_iota(jnp.int32, (b, nb), 1) == dst[:, None]
+        mixed = jnp.where(hit[:, None, :, None, None], span[:, :, None, :, :], blocks)
+        out.append(mixed.reshape(b, h, s, d))
+    return tuple(out)
+
+
+def lm_decode_paged(cfg: ModelCfg, params, view_idx, store_idx, pos_phys, pos_log, valid, tok, temp, keys, *kvs):
+    """Paged decode: gather each slot's logical-dense cache view through
+    its block table, run the dense block stack (the frontier write lands
+    inside the view), then permute blocks back to pool layout through the
+    inverse table. `pos_phys`/`valid` are in logical-view coordinates;
+    everything between the two gathers is byte-for-byte the dense
+    `lm_decode_block` graph, which is what makes paged solves
+    byte-identical to dense ones."""
+    view = [paged_view(view_idx, kv) for kv in kvs]
+    outs, new_kvs = _block_stack(
+        cfg, params, view, pos_phys, pos_log, valid, DECODE_BLOCK,
+        mode="decode", temp=temp, keys=keys, keys_init_tok=tok,
+    )
+    return (outs, *(paged_view(store_idx, kv) for kv in new_kvs))
+
+
+def prm_score_paged(cfg: ModelCfg, params, view_idx, store_idx, pos_phys, pos_log, valid, tokens, *kvs):
+    """Paged analogue of `prm_score_block` (see `lm_decode_paged`)."""
+    view = [paged_view(view_idx, kv) for kv in kvs]
+    outs, new_kvs = _block_stack(
+        cfg, params, view, pos_phys, pos_log, valid, SCORE_BLOCK,
+        mode="score", tokens=tokens,
+    )
+    return (outs, *(paged_view(store_idx, kv) for kv in new_kvs))
 
 
 def kv_merge(idx, *kvs):

@@ -1,0 +1,237 @@
+"""Paged-KV exporter tests (the device half of rust/src/runtime/blocks.rs).
+
+What the Rust block pool depends on:
+  * KV_BLOCK divides every cache_len (block tables tile caches exactly)
+  * paged_view / kv_append_block have pure gather/select semantics
+  * decode/score bracketed by view/store gathers is *byte-identical* to the
+    dense programs — the paged runtime must not perturb outcomes
+  * export_paged registers the right manifest programs per model kind, and
+    the lowered HLO carries input_output_alias for the donated caches
+"""
+
+import os
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import grammar as g
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = M.LM_CFG
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def prm():
+    cfg = M.PRM_SMALL_CFG
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(1))
+
+
+def _problem(seed=0, bench="satmath-s"):
+    return g.gen_problem(random.Random(seed), bench)
+
+
+def _pad_prompt(prompt):
+    toks = jnp.array([prompt + [g.PAD] * (g.PROMPT_PAD - len(prompt))], jnp.int32)
+    return toks, jnp.array([len(prompt)], jnp.int32)
+
+
+def _block_perms(batch, nb, seed=0):
+    """Per-slot block permutation + inverse, as [B, nb] i32 index arrays."""
+    rng = np.random.default_rng(seed)
+    t = np.stack([rng.permutation(nb) for _ in range(batch)]).astype(np.int32)
+    inv = np.empty_like(t)
+    for b in range(batch):
+        inv[b, t[b]] = np.arange(nb, dtype=np.int32)
+    return jnp.array(t), jnp.array(inv)
+
+
+# ------------------------------------------------------------- block algebra
+
+
+@pytest.mark.parametrize("cfg", [M.LM_CFG, M.PRM_LARGE_CFG, M.PRM_SMALL_CFG])
+def test_kv_block_divides_every_cache_len(cfg):
+    assert cfg.cache_len % M.KV_BLOCK == 0, (cfg.name, cfg.cache_len)
+
+
+def test_paged_view_permutes_blocks():
+    B, H, nb, D = 2, 1, 4, 3
+    S = nb * M.KV_BLOCK
+    kv = jnp.arange(B * H * S * D, dtype=jnp.float32).reshape(B, H, S, D)
+    idx = jnp.array([[2, 0, 3, 1], [1, 1, 0, 2]], jnp.int32)
+    out = np.asarray(M.paged_view(idx, kv))
+    ref = np.asarray(kv).reshape(B, H, nb, M.KV_BLOCK, D)
+    for b in range(B):
+        for j in range(nb):
+            np.testing.assert_array_equal(
+                out.reshape(B, H, nb, M.KV_BLOCK, D)[b, :, j],
+                ref[b, :, int(idx[b, j])],
+            )
+
+
+def test_paged_view_roundtrips_through_inverse():
+    B, H, nb, D = 3, 2, 8, 2
+    S = nb * M.KV_BLOCK
+    kv = jnp.arange(B * H * S * D, dtype=jnp.float32).reshape(B, H, S, D)
+    t, inv = _block_perms(B, nb, seed=3)
+    back = M.paged_view(inv, M.paged_view(t, kv))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(kv))
+
+
+def test_kv_append_block_writes_one_block_span():
+    B, H, nb, D = 2, 1, 4, 2
+    S = nb * M.KV_BLOCK
+    kv = jnp.zeros((B, H, S, D), jnp.float32)
+    span = jnp.ones((B, H, M.KV_BLOCK, D), jnp.float32)
+    dst = jnp.array([1, 3], jnp.int32)
+    (out,) = M.kv_append_block(dst, span, kv)
+    got = np.asarray(out).reshape(B, H, nb, M.KV_BLOCK, D)
+    for b in range(B):
+        for j in range(nb):
+            want = 1.0 if j == int(dst[b]) else 0.0
+            assert (got[b, :, j] == want).all(), (b, j)
+
+
+# ----------------------------------------------- paged == dense, bit for bit
+
+
+def test_score_paged_matches_dense_bitwise(prm):
+    """Scores AND the stored cache must match the dense program exactly —
+    this is the exporter half of the runtime's byte-identity contract."""
+    cfg, params = prm
+    p = _problem(5, "math500-s")
+    prompt, sol = p.prompt_tokens(), g.solution_tokens(p)
+    toksP, lensP = _pad_prompt(prompt)
+    kvs1 = M.prm_prefill(cfg, params, toksP, lensP)
+    B = 2
+    dense = list(M.kv_broadcast(B, *kvs1))
+    S, nb = cfg.cache_len, cfg.cache_len // M.KV_BLOCK
+    valid = np.zeros((B, S), np.int32)
+    valid[:, : len(prompt)] = 1
+    T = M.SCORE_BLOCK
+    blk = (sol[:T] + [g.PAD] * T)[:T]
+    args = (
+        jnp.array([g.PROMPT_PAD], jnp.int32),
+        jnp.full((B,), len(prompt), jnp.int32),
+        jnp.array(valid),
+        jnp.array([blk] * B, jnp.int32),
+    )
+    out_d = M.prm_score_block(cfg, params, *args, *dense)
+
+    for seed in (0, 4):
+        t, inv = _block_perms(B, nb, seed=seed)
+        if seed == 0:
+            t = inv = jnp.tile(jnp.arange(nb, dtype=jnp.int32), (B, 1))  # identity
+        # lay the logical cache out in pool order: physical block p holds
+        # logical block inv[p]
+        pool = [M.paged_view(inv, kv) for kv in dense]
+        out_p = M.prm_score_paged(cfg, params, t, inv, *args, *pool)
+        np.testing.assert_array_equal(np.asarray(out_p[0]), np.asarray(out_d[0]))
+        for got, want in zip(out_p[1:], out_d[1:]):
+            np.testing.assert_array_equal(
+                np.asarray(M.paged_view(t, got)), np.asarray(want)
+            )
+
+
+def test_decode_paged_matches_dense_bitwise(lm):
+    """Sampled tokens are ints: any perturbation shows up whole, so this
+    pins byte-identical solves end to end."""
+    cfg, params = lm
+    p = _problem(7)
+    prompt = p.prompt_tokens()
+    toks, lens = _pad_prompt(prompt)
+    out = M.lm_prefill(cfg, params, toks, lens)
+    B = 4
+    dense = list(M.kv_broadcast(B, *out[1:]))
+    S, nb = cfg.cache_len, cfg.cache_len // M.KV_BLOCK
+    valid = np.zeros((B, S), np.int32)
+    valid[:, : len(prompt)] = 1
+    args = (
+        jnp.array([g.PROMPT_PAD], jnp.int32),
+        jnp.full((B,), len(prompt), jnp.int32),
+        jnp.array(valid),
+        jnp.full((B,), g.SEP, jnp.int32),
+        jnp.array([0.7], jnp.float32),
+        jnp.arange(B * 2, dtype=jnp.uint32).reshape(B, 2),
+    )
+    out_d = M.lm_decode_block(cfg, params, *args, *dense)
+    t, inv = _block_perms(B, nb, seed=11)
+    pool = [M.paged_view(inv, kv) for kv in dense]
+    out_p = M.lm_decode_paged(cfg, params, t, inv, *args, *pool)
+    np.testing.assert_array_equal(np.asarray(out_p[0]), np.asarray(out_d[0]))
+    for got, want in zip(out_p[1:], out_d[1:]):
+        np.testing.assert_array_equal(np.asarray(M.paged_view(t, got)), np.asarray(want))
+
+
+# ----------------------------------------------------------------- programs
+
+
+def test_paged_program_lowers_with_donated_kv(tmp_path):
+    """score_paged_bN takes two [N, S/KV_BLOCK] tables + the dense score
+    args + donated caches, and the aliasing survives lowering."""
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    cfg = M.PRM_SMALL_CFG
+    b = 4
+    nw = len(M.weight_specs(cfg))
+    nkv = 2 * cfg.n_layers
+    s, nb = cfg.cache_len, cfg.cache_len // M.KV_BLOCK
+    kv = [aot.spec(sh) for sh in M.kv_shapes(cfg, b)]
+
+    def fn(*args):
+        params = M.args_to_params(cfg, args[:nw])
+        return M.prm_score_paged(cfg, params, *args[nw:])
+
+    p = aot.export(
+        str(tmp_path), f"toy_score_paged_b{b}", fn,
+        [aot.spec(sh) for _, sh in M.weight_specs(cfg)]
+        + [aot.spec((b, nb), jnp.int32), aot.spec((b, nb), jnp.int32),
+           aot.spec((1,), jnp.int32), aot.spec((b,), jnp.int32),
+           aot.spec((b, s), jnp.int32), aot.spec((b, M.SCORE_BLOCK), jnp.int32)]
+        + kv,
+        donate=range(nw + 6, nw + 6 + nkv),
+    )
+    txt = open(p).read()
+    assert "HloModule" in txt and "ENTRY" in txt
+    h, d = cfg.n_heads, cfg.head_dim
+    assert f"s32[{b},{nb}]" in txt  # block-table params
+    assert f"f32[{b},{h},{s},{d}]" in txt  # cache params/outputs
+    assert "input_output_alias" in txt, "KV donation must survive lowering"
+
+
+@pytest.mark.parametrize(
+    "cfg", [M.LM_CFG, M.PRM_LARGE_CFG, M.PRM_SMALL_CFG], ids=lambda c: c.name
+)
+def test_export_paged_registers_manifest_entries(tmp_path, monkeypatch, cfg):
+    """Every model gets block gather/append; the LM gets decode_paged, the
+    PRMs score_paged — the program names rust/src/runtime keys on."""
+    monkeypatch.setattr(aot, "BATCHES", [4])  # one variant keeps this fast
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    programs = {}
+    aot.export_paged(str(tmp_path), cfg, programs)
+    assert "gather_blocks_b4" in programs
+    assert "append_block_b4" in programs
+    if cfg.scored:
+        assert "score_paged_b4" in programs
+        assert "decode_paged_b4" not in programs
+    else:
+        assert "decode_paged_b4" in programs
+        assert "score_paged_b4" not in programs
+    for path in programs.values():
+        assert os.path.exists(path)
+
+
+def test_manifest_carries_kv_block():
+    """The Rust manifest parser keys paging on a positive top-level
+    kv_block; main() must write it (a full export is too slow to run
+    here, so pin the expression in the source)."""
+    import inspect
+
+    assert M.KV_BLOCK > 0
+    assert '"kv_block": M.KV_BLOCK' in inspect.getsource(aot.main)

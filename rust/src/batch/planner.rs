@@ -52,18 +52,70 @@ pub struct Gang {
 }
 
 /// Wall-clock cost model for gang packing, calibrated from the engine's
-/// observed timings: per-batch-width mean decode/score call walls plus
-/// the mean merge and gather (split-back) overheads. `None` until the
-/// engine has samples for the program class — planning then falls back
-/// to accept-all, and the model sharpens as traffic flows.
+/// observed timings: a weighted least-squares regression `base + slope ×
+/// width` over the per-batch-width mean decode/score call walls, plus the
+/// mean merge and gather (split-back) overheads. A regression (rather
+/// than the old point interpolation) smooths single-width noise — one
+/// slow warmup call at b16 no longer carves a spike into the curve every
+/// estimate between b8 and b32 reads through — and cleanly separates the
+/// fixed per-call overhead (`base`) from the marginal per-slot cost
+/// (`slope`), which is exactly the decomposition `join_pays` reasons
+/// about. `None` until the engine has samples at two distinct widths for
+/// the program class — planning then falls back to accept-all, and the
+/// model sharpens as traffic flows.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WallModel {
-    /// `(batch_width, mean_call_wall_s)`, ascending by width.
-    points: Vec<(usize, f64)>,
+    /// Fixed per-call overhead (s): dispatch, host transfers, kernel launch.
+    base_s: f64,
+    /// Marginal cost of one more batch slot (s/slot).
+    slope_s: f64,
     /// Mean wall of one `merge_bA_bB_to_bC` step.
     merge_step_s: f64,
     /// Mean wall of one gather/resize call (the per-member split-back).
     split_step_s: f64,
+}
+
+/// Sample-decay constant for the regression weights: a width observed
+/// `calls` times carries weight `1 - SAMPLE_DECAY^calls`, saturating at 1.
+/// Influence grows with evidence, but a steady-state width hammered
+/// thousands of times can never outvote the rest of the grid by raw call
+/// count — the fit keeps tracking the full width range, not the mode.
+const SAMPLE_DECAY: f64 = 0.9;
+
+fn sample_weight(calls: u64) -> f64 {
+    1.0 - SAMPLE_DECAY.powi(calls.min(1 << 16) as i32)
+}
+
+/// Weighted least-squares fit of `y = base + slope * x` over
+/// `(width, mean_s, weight)` samples, clamped to the physically
+/// meaningful quadrant (walls are nonnegative and never shrink with
+/// width): a negative slope degrades to the flat weighted mean, a
+/// negative base to a through-origin fit.
+fn fit_line(samples: &[(usize, f64, f64)]) -> (f64, f64) {
+    let (mut sw, mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for &(b, y, w) in samples {
+        let x = b as f64;
+        sw += w;
+        sx += w * x;
+        sy += w * y;
+        sxx += w * x * x;
+        sxy += w * x * y;
+    }
+    let denom = sw * sxx - sx * sx;
+    if denom.abs() < 1e-12 || sw <= 0.0 {
+        // all weight at one width: proportional-through-zero
+        return if sx > 0.0 { (0.0, sy / sx) } else { (0.0, 0.0) };
+    }
+    let mut slope = (sw * sxy - sx * sy) / denom;
+    let mut base = (sy - slope * sx) / sw;
+    if slope < 0.0 {
+        slope = 0.0;
+        base = sy / sw;
+    } else if base < 0.0 {
+        base = 0.0;
+        slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    }
+    (base, slope)
 }
 
 impl WallModel {
@@ -80,14 +132,15 @@ impl WallModel {
             IntentKind::Score => &stats.score_wall,
             IntentKind::Compact => return None, // compactions are never ganged
         };
-        let points: Vec<(usize, f64)> = map
+        let samples: Vec<(usize, f64, f64)> = map
             .iter()
             .filter(|(_, w)| w.calls > 0)
-            .map(|(&b, w)| (b, w.mean_s()))
+            .map(|(&b, w)| (b, w.mean_s(), sample_weight(w.calls)))
             .collect();
-        if points.len() < 2 {
+        if samples.len() < 2 {
             return None;
         }
+        let (base_s, slope_s) = fit_line(&samples);
         let merge_step_s = if stats.merge_calls > 0 {
             stats.merge_wall_s / stats.merge_calls as f64
         } else {
@@ -98,10 +151,11 @@ impl WallModel {
         } else {
             0.0
         };
-        Some(WallModel { points, merge_step_s, split_step_s })
+        Some(WallModel { base_s, slope_s, merge_step_s, split_step_s })
     }
 
-    /// Build directly from calibration points (tests / simulations).
+    /// Build directly from calibration points (tests / simulations),
+    /// equally weighted. A single point fits proportional-through-zero.
     pub fn from_points(
         points: Vec<(usize, f64)>,
         merge_step_s: f64,
@@ -110,29 +164,30 @@ impl WallModel {
         if points.is_empty() {
             return None;
         }
-        let mut points = points;
-        points.sort_by_key(|&(b, _)| b);
-        Some(WallModel { points, merge_step_s, split_step_s })
+        let samples: Vec<(usize, f64, f64)> = points.iter().map(|&(b, w)| (b, w, 1.0)).collect();
+        let (base_s, slope_s) = if samples.len() == 1 {
+            let (b0, w0) = points[0];
+            (0.0, if b0 > 0 { w0 / b0 as f64 } else { 0.0 })
+        } else {
+            fit_line(&samples)
+        };
+        Some(WallModel { base_s, slope_s, merge_step_s, split_step_s })
     }
 
-    /// Estimated wall of one call at `width`: observed mean when sampled,
-    /// linear interpolation between neighbours, slope extrapolation past
-    /// the edges (proportional scaling when only one point exists).
+    /// Estimated wall of one call at `width`: the fitted
+    /// `base + slope × width`.
     pub fn call_s(&self, width: usize) -> f64 {
-        let pts = &self.points;
-        if let Some(&(_, w)) = pts.iter().find(|&&(b, _)| b == width) {
-            return w;
-        }
-        if pts.len() == 1 {
-            let (b0, w0) = pts[0];
-            return w0 * width as f64 / b0 as f64;
-        }
-        // neighbours around `width` (pts ascending)
-        let hi = pts.iter().position(|&(b, _)| b > width).unwrap_or(pts.len() - 1).max(1);
-        let (b0, w0) = pts[hi - 1];
-        let (b1, w1) = pts[hi];
-        let slope = (w1 - w0) / (b1 - b0) as f64;
-        (w0 + slope * (width as f64 - b0 as f64)).max(0.0)
+        (self.base_s + self.slope_s * width as f64).max(0.0)
+    }
+
+    /// Fitted fixed per-call overhead (s).
+    pub fn base_s(&self) -> f64 {
+        self.base_s
+    }
+
+    /// Fitted marginal per-slot cost (s/slot).
+    pub fn slope_s(&self) -> f64 {
+        self.slope_s
     }
 
     /// Whether folding a `joiner`-batch intent into a chain currently at
@@ -247,8 +302,14 @@ pub fn execute_gang(engine: &Engine, tasks: &mut [&mut SolveTask]) -> Result<(us
     // Align frontiers before the union: a member whose cache is mostly
     // junk would drag every laggard's effective length down (the merged
     // frontier is the max), so re-compact the junk-heavy ones first.
+    // Paged members skip this: their merge is a block-table
+    // concatenation, and a laggard's union gap costs free-list blocks it
+    // never reserves rather than a device-wide gather to avoid.
     let mut precompacted = 0usize;
     for t in tasks.iter_mut() {
+        if t.gang_kv()?.paged() {
+            continue;
+        }
         if t.gang_precompact(engine, GANG_PRECOMPACT_JUNK)? {
             precompacted += 1;
         }
@@ -454,15 +515,56 @@ mod tests {
     }
 
     #[test]
-    fn wall_model_interpolates_and_extrapolates() {
+    fn wall_model_fits_and_extrapolates() {
+        // two points determine the line exactly: base 0, slope 0.0125
         let m = WallModel::from_points(vec![(8, 0.1), (16, 0.2)], 0.0, 0.0).unwrap();
-        assert!((m.call_s(8) - 0.1).abs() < 1e-12, "exact point");
-        assert!((m.call_s(12) - 0.15).abs() < 1e-12, "midpoint interpolation");
-        assert!((m.call_s(32) - 0.4).abs() < 1e-12, "slope extrapolation up");
-        assert!((m.call_s(4) - 0.05).abs() < 1e-12, "slope extrapolation down");
+        assert!((m.call_s(8) - 0.1).abs() < 1e-12, "on the line");
+        assert!((m.call_s(12) - 0.15).abs() < 1e-12);
+        assert!((m.call_s(32) - 0.4).abs() < 1e-12, "extrapolation up");
+        assert!((m.call_s(4) - 0.05).abs() < 1e-12, "extrapolation down");
         let single = WallModel::from_points(vec![(8, 0.1)], 0.0, 0.0).unwrap();
         assert!((single.call_s(16) - 0.2).abs() < 1e-12, "proportional from one point");
         assert!(WallModel::from_points(vec![], 0.0, 0.0).is_none());
+    }
+
+    /// Pin the least-squares fit against synthetic timings worked out by
+    /// hand: x = {4, 8, 12}, y = {0.05, 0.06, 0.10} (equal weights) gives
+    /// x̄ = 8, ȳ = 0.07, Sxx = 32, Sxy = 0.2, so slope = 0.00625 and
+    /// base = 0.02 — the noisy middle point pulls the line, it does not
+    /// carve a spike the way point interpolation did.
+    #[test]
+    fn wall_model_regression_pins_synthetic_fit() {
+        let m = WallModel::from_points(vec![(4, 0.05), (8, 0.06), (12, 0.10)], 0.0, 0.0).unwrap();
+        assert!((m.base_s() - 0.02).abs() < 1e-12, "base {}", m.base_s());
+        assert!((m.slope_s() - 0.00625).abs() < 1e-12, "slope {}", m.slope_s());
+        assert!((m.call_s(8) - 0.07).abs() < 1e-12, "fit passes the centroid, not the sample");
+        assert!((m.call_s(0) - 0.02).abs() < 1e-12, "width 0 reads the fixed overhead");
+    }
+
+    #[test]
+    fn wall_model_clamps_unphysical_fits() {
+        // decreasing walls (measurement noise) degrade to the flat mean,
+        // never a negative slope that would make every join look free
+        let m = WallModel::from_points(vec![(8, 0.2), (16, 0.1)], 0.0, 0.0).unwrap();
+        assert!((m.slope_s() - 0.0).abs() < 1e-12);
+        assert!((m.call_s(64) - 0.15).abs() < 1e-12, "flat weighted mean");
+        // superlinear data would fit base < 0: degrade through-origin
+        let m = WallModel::from_points(vec![(8, 0.05), (16, 0.15)], 0.0, 0.0).unwrap();
+        assert!(m.base_s() >= 0.0);
+        assert!(m.call_s(1) >= 0.0);
+    }
+
+    #[test]
+    fn sample_weights_saturate_with_call_count() {
+        assert_eq!(super::sample_weight(0), 0.0, "no calls, no vote");
+        let w1 = super::sample_weight(1);
+        let w5 = super::sample_weight(5);
+        let w5k = super::sample_weight(5000);
+        assert!(w1 > 0.0 && w1 < w5 && w5 < w5k, "monotone in evidence");
+        assert!(w5k <= 1.0 && w5k > 0.999, "hammered widths cap at ~1");
+        // decayed weighting: a width with 10x the calls of another gets
+        // nowhere near 10x the vote
+        assert!(super::sample_weight(50) / super::sample_weight(5) < 3.0);
     }
 
     #[test]

@@ -206,6 +206,10 @@ pub struct ServerConfig {
     /// different shards coalesce onto one engine run (the shard-local
     /// fleet coalescer only sees duplicates placed on its own shard).
     pub singleflight: bool,
+    /// Paged-KV block pool size per shard, in blocks of the manifest's
+    /// `kv_block` tokens; 0 = dense per-slot caches (also the forced
+    /// fallback on artifact sets exported before paging existed).
+    pub kv_pool_blocks: usize,
 }
 
 impl Default for ServerConfig {
@@ -222,6 +226,7 @@ impl Default for ServerConfig {
             gang: false,
             deadline_ms: 0,
             singleflight: true,
+            kv_pool_blocks: 0,
         }
     }
 }
@@ -337,6 +342,9 @@ impl Config {
             if let Some(b) = s.get("singleflight").and_then(Json::as_bool) {
                 cfg.server.singleflight = b;
             }
+            if let Some(n) = s.get("kv_pool_blocks").and_then(Json::as_usize) {
+                cfg.server.kv_pool_blocks = n;
+            }
         }
         cfg.search.validate()?;
         Ok(cfg)
@@ -436,8 +444,9 @@ mod tests {
         assert_eq!(d.max_inflight, 8);
         assert!(!d.gang, "gang batching is opt-in on top of the fleet");
         assert_eq!(d.deadline_ms, 0, "no deadline unless configured");
+        assert_eq!(d.kv_pool_blocks, 0, "paged KV is opt-in; dense is the fallback");
         let j = Json::parse(
-            r#"{"server": {"fleet": true, "max_inflight": 16, "gang": true, "deadline_ms": 2000}}"#,
+            r#"{"server": {"fleet": true, "max_inflight": 16, "gang": true, "deadline_ms": 2000, "kv_pool_blocks": 512}}"#,
         )
         .unwrap();
         let c = Config::from_json(&j).unwrap();
@@ -445,6 +454,7 @@ mod tests {
         assert_eq!(c.server.max_inflight, 16);
         assert!(c.server.gang);
         assert_eq!(c.server.deadline_ms, 2000);
+        assert_eq!(c.server.kv_pool_blocks, 512);
     }
 
     #[test]

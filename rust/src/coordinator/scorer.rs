@@ -75,6 +75,14 @@ pub fn absorb_round(
         if n == 0 {
             continue;
         }
+        // paged: every position this slot just scored must be reachable
+        // through its block table (reserve_frontier grew it before the
+        // call); a freed slot can never appear here because prepare_round
+        // skips dead beams
+        debug_assert!(prm_kv
+            .pages
+            .as_ref()
+            .is_none_or(|p| !p.is_dead(slot) && p.table(slot).len_tokens() >= frontier + n));
         for i in 0..n {
             beam.scores.push(scores[slot * t + i]);
         }
@@ -125,6 +133,36 @@ mod tests {
         kv.pos_phys += t;
         super::absorb_round(&round2, &scores, t, &mut kv, &mut beams, &mut ledger);
         assert!(super::prepare_round(&beams, 2, t).is_none());
+    }
+
+    #[test]
+    fn paged_absorb_reads_through_the_block_table() {
+        use crate::coordinator::beam::BeamSet;
+        use crate::coordinator::flops::FlopsLedger;
+        use crate::runtime::{shared_pool, KvSet};
+        use crate::tokenizer as tk;
+        let t = 4usize;
+        let mut beams = BeamSet::new(2, tk::DIG0, 1);
+        beams.beams[0].gen = vec![tk::DIG0; 3];
+        beams.beams[1].gen = vec![tk::DIG0; 2];
+        let pool = shared_pool(8, 2);
+        let mut kv = KvSet::new(Vec::new(), 2, 16);
+        kv.attach_pages(pool.clone()).unwrap();
+        // the engine path: reserve the block write, run, advance
+        kv.reserve_frontier(t).unwrap();
+        kv.advance_frontier(t);
+        let round = super::prepare_round(&beams, 2, t).unwrap();
+        let scores = vec![0.5f32; 2 * t];
+        let mut ledger = FlopsLedger::new(1, 1);
+        super::absorb_round(&round, &scores, t, &mut kv, &mut beams, &mut ledger);
+        // every committed position resolves through the slot's table
+        let p = kv.pages.as_ref().unwrap();
+        for slot in 0..2 {
+            for pos in 0..beams.beams[slot].prm_fed {
+                assert!(p.table(slot).translate(pos, 2).is_some(), "slot {slot} pos {pos}");
+            }
+        }
+        assert_eq!(pool.borrow().allocated(), 4, "2 slots x 2 blocks of 2");
     }
 
     #[test]

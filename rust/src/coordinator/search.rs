@@ -341,7 +341,26 @@ impl SearchCtx {
         let rounds = max_backlog.div_ceil(self.score_block);
         let headroom = self.prm_kv.remaining()
             + if self.prm_compact { self.prm_kv.reclaimable() } else { 0 };
-        headroom >= rounds * self.score_block
+        if headroom < rounds * self.score_block {
+            return false;
+        }
+        // paged: the physical budget is the shard's shared pool, not this
+        // cache's fixed length — every live slot's table must be able to
+        // grow to the post-drain frontier out of the free list. (With
+        // ample blocks this changes nothing; under pool pressure scoring
+        // truncates exactly like the dense capacity wall.)
+        if let Some(ps) = self.prm_kv.pool_stats() {
+            let live = self.prm_kv.pages.as_ref().map_or(self.prm_kv.batch, |p| {
+                (0..self.prm_kv.batch).filter(|&s| !p.is_dead(s)).count()
+            });
+            let target = self.prm_kv.pos_phys + rounds * self.score_block;
+            let held = self.prm_kv.pos_phys.div_ceil(ps.block_size);
+            let need = target.div_ceil(ps.block_size).saturating_sub(held) * live;
+            if need > ps.blocks_free {
+                return false;
+            }
+        }
+        true
     }
 
     /// Whether the PRM cache should be re-compacted before the next

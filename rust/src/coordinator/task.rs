@@ -626,10 +626,19 @@ impl SolveTask {
                 }
                 let survivors = policy.select(&scored);
                 let ctx = self.ctx_mut();
+                let mut rejected: Vec<usize> = Vec::new();
                 for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
                     if beam.active() && !survivors.contains(&slot) {
                         beam.dead = true; // << the early rejection
+                        rejected.push(slot);
                     }
+                }
+                // paged KV: a rejected beam's blocks return to the shard
+                // pool *in this same tick* — the memory half of early
+                // rejection. No-op on dense caches.
+                for &slot in &rejected {
+                    ctx.lm_kv.free_slot(slot);
+                    ctx.prm_kv.free_slot(slot);
                 }
                 let plan = TwoTierPlan::plan(
                     self.cfg.n_beams,

@@ -12,7 +12,9 @@
 //!    (HTTP 504) and drop queued jobs whose client already hung up.
 //! 3. **Coalesce** — fold queued duplicates of an in-flight task onto it.
 //! 4. **Backfill** — admit queued jobs into free slots, building each a
-//!    resumable [`SolveTask`].
+//!    resumable [`SolveTask`]. With paged KV on, admission additionally
+//!    waits for block-pool headroom (two fresh caches' worth), so pool
+//!    exhaustion degrades to queueing rather than mid-flight failure.
 //! 5. **Advance** — give every occupied slot one bounded unit of engine
 //!    work; completed/failed/expired tasks reply and free their slot.
 //!    A slot whose every attached reply channel is closed (client
@@ -211,6 +213,17 @@ pub fn drive(
 
         // ---- 4. backfill free slots from the queue
         while inflight < n_slots {
+            // paged KV: admitting a request needs pool headroom for two
+            // fresh caches (LM + PRM). Without it the job stays queued —
+            // exhaustion degrades to queueing, never to a failed alloc
+            // mid-flight. In-flight rejections free blocks every tick, so
+            // the gate reopens on its own. Always true on dense engines.
+            if !engine.pool_has_headroom() {
+                if !queue.is_empty() {
+                    stats.pool_deferred_total.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
+            }
             let Some(job) = queue.pop(now) else { break };
             let wait_ms = job.waited_ms(now);
             // a duplicate of a slot filled earlier this same round (burst

@@ -33,6 +33,10 @@ pub struct FleetStats {
     /// forecast (slot pressure x mean service time) already exceeded
     /// their deadline budget.
     pub forecast_rejected_total: AtomicU64,
+    /// Backfill rounds deferred because the paged-KV pool lacked the
+    /// admission floor of free blocks — the job stays queued (degrade to
+    /// queueing, never corrupt) until in-flight work frees blocks.
+    pub pool_deferred_total: AtomicU64,
     /// Tasks that ran to a successful outcome.
     pub completed_total: AtomicU64,
     /// Tasks that ended in an engine/validation error.
@@ -52,6 +56,7 @@ pub struct FleetTotals {
     pub expired: u64,
     pub cancelled: u64,
     pub forecast_rejected: u64,
+    pub pool_deferred: u64,
     pub completed: u64,
     pub failed: u64,
 }
@@ -83,6 +88,7 @@ impl FleetStats {
             expired: self.expired_total.load(Ordering::Relaxed),
             cancelled: self.cancelled_total.load(Ordering::Relaxed),
             forecast_rejected: self.forecast_rejected_total.load(Ordering::Relaxed),
+            pool_deferred: self.pool_deferred_total.load(Ordering::Relaxed),
             completed: self.completed_total.load(Ordering::Relaxed),
             failed: self.failed_total.load(Ordering::Relaxed),
         }
@@ -96,6 +102,7 @@ impl FleetStats {
         into.expired += other.expired;
         into.cancelled += other.cancelled;
         into.forecast_rejected += other.forecast_rejected;
+        into.pool_deferred += other.pool_deferred;
         into.completed += other.completed;
         into.failed += other.failed;
     }

@@ -6,6 +6,7 @@
 //!   erprm serve --artifacts artifacts --addr 127.0.0.1:8377 --shards 4 --cache 128
 //!   erprm serve --artifacts artifacts --fleet --max-inflight 8 --deadline-ms 5000
 //!   erprm serve --artifacts artifacts --gang --max-inflight 8
+//!   erprm serve --artifacts artifacts --fleet --kv-pool-blocks 512
 //!   erprm sweep --artifacts artifacts --bench satmath-s --n-list 4,8 --problems 10
 //!   erprm theory
 //!
@@ -167,6 +168,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // pool-level single-flight (cross-shard duplicate coalescing) is on
     // by default; `--no-singleflight` or the config file disable it
     let singleflight = scfg.singleflight && !args.flag("no-singleflight");
+    // --kv-pool-blocks N: paged KV over a shared per-shard block pool
+    // (0 = dense per-slot caches; ignored when the artifacts predate
+    // paged export)
+    let kv_pool_blocks = args.get_usize("kv-pool-blocks", scfg.kv_pool_blocks)?;
     let worker_default = if fleet { shards * max_inflight + 2 } else { shards + 2 };
     let workers = args.get_usize_min("workers", worker_default, 1)?;
     // --cache N sets the LRU solve-cache size; --cache 0 disables it.
@@ -186,6 +191,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 ..FleetOptions::default()
             }),
             singleflight,
+            kv_pool_blocks,
         },
     )?;
     let metrics = Arc::new(Metrics::default());

@@ -72,6 +72,10 @@ pub struct Manifest {
     pub seq_train: usize,
     pub batch_variants: Vec<usize>,
     pub fullseq_batch: usize,
+    /// Paged-KV block size in tokens. `None` on artifact sets exported
+    /// before paging existed — the runtime then keeps the dense
+    /// fixed-length discipline (graceful fallback, no error).
+    pub kv_block: Option<usize>,
     pub models: BTreeMap<String, ModelArch>,
     /// Paper-scale parameter counts (narrative comparison only).
     pub paper_scale: BTreeMap<String, f64>,
@@ -120,6 +124,7 @@ impl Manifest {
                 .filter_map(Json::as_usize)
                 .collect(),
             fullseq_batch: j.req("fullseq_batch")?.as_usize().unwrap_or(8),
+            kv_block: j.get("kv_block").and_then(Json::as_usize).filter(|&b| b > 0),
             models,
             paper_scale,
         };
@@ -270,6 +275,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let m = load_toy(&dir);
         assert_eq!(m.prompt_pad, 16);
+        assert_eq!(m.kv_block, None, "pre-paging manifests parse without the field");
         let lm = m.model("lm").unwrap();
         assert_eq!(lm.n_kv(), 4);
         assert_eq!(lm.params, 102016);
@@ -303,6 +309,20 @@ mod tests {
         assert!(lm.has_program("prefill_b1"));
         assert!(!lm.has_program("merge_b4_b4_to_b16"));
         assert!(!lm.has_merge(4, 4, 16), "old artifacts lack merge programs");
+    }
+
+    #[test]
+    fn kv_block_parses_when_present() {
+        let dir = std::env::temp_dir().join("erprm-manifest-test-kvblock");
+        std::fs::create_dir_all(&dir).unwrap();
+        let src = toy_manifest_json().replacen("\"prompt_pad\": 16", "\"kv_block\": 32, \"prompt_pad\": 16", 1);
+        std::fs::write(dir.join("manifest.json"), src).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.kv_block, Some(32));
+        // kv_block = 0 is meaningless and reads as "dense"
+        let src = toy_manifest_json().replacen("\"prompt_pad\": 16", "\"kv_block\": 0, \"prompt_pad\": 16", 1);
+        std::fs::write(dir.join("manifest.json"), src).unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap().kv_block, None);
     }
 
     #[test]

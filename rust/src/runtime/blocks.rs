@@ -1,0 +1,613 @@
+//! Shared KV block pool + per-beam block tables (paged KV allocation).
+//!
+//! The dense cache discipline gives every slot `cache_len` physical
+//! positions up front, so a rejected beam's memory is only reclaimed by
+//! re-compaction and `--max-inflight` is bounded by worst-case cache
+//! length. Paged allocation replaces that with vLLM-style indirection:
+//!
+//! * a [`BlockPool`] owns a fixed population of fixed-size blocks with a
+//!   LIFO free list and per-block refcounts (refcounts > 1 are shared
+//!   blocks — the copy-on-write foundation for prefix sharing);
+//! * each beam slot holds a [`BlockTable`] mapping its logical cache
+//!   positions `[0, len)` to `(block, offset)` pairs, so beam
+//!   permute/merge/split/compact become table edits (retain/release on
+//!   block ids) instead of device-wide gathers;
+//! * freeing a rejected beam is [`BlockTable::release_all`] — its blocks
+//!   return to the pool in the same scheduler tick, ready for the next
+//!   request.
+//!
+//! The pool is host-side bookkeeping: it decides *which* physical block a
+//! logical position lives in; the device realization is the block-granular
+//! `*_paged_bN` / `gather_blocks_bN` programs exported by
+//! `python/compile/aot.py` (dense artifacts keep working — paging degrades
+//! gracefully when those programs are absent).
+//!
+//! Invariants (pinned by the property battery below):
+//! * `free + allocated == total` after any op sequence — no leak, and a
+//!   double-release panics rather than corrupting the free list;
+//! * a table's logical→physical mapping preserves the attendable sequence
+//!   in order (translate is monotone within a block and blocks never
+//!   alias while exclusively owned);
+//! * fork/merge/truncate commute with reads the same way the dense
+//!   `compact_plan` properties pin for gathers.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Index of a block inside its pool.
+pub type BlockId = u32;
+
+/// The pool could not cover a reservation; callers degrade to queueing
+/// (HTTP 503 / fleet admission back-off), never to corruption.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolExhausted {
+    pub wanted_blocks: usize,
+    pub free_blocks: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "kv block pool exhausted: wanted {} blocks, {} free",
+            self.wanted_blocks, self.free_blocks
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Point-in-time pool gauges (`/metrics`, `fleet_benchmark`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub blocks_total: usize,
+    pub blocks_free: usize,
+    /// High-water mark of simultaneously allocated blocks.
+    pub hwm: usize,
+    pub block_size: usize,
+}
+
+/// Fixed population of fixed-size KV blocks with refcounted ownership.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    /// Refcount per block; 0 = on the free list.
+    refs: Vec<u32>,
+    /// LIFO free list (hot blocks stay cache-warm on reuse).
+    free: Vec<BlockId>,
+    hwm: usize,
+}
+
+impl BlockPool {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block size must be positive");
+        BlockPool {
+            block_size,
+            refs: vec![0; total_blocks],
+            free: (0..total_blocks as BlockId).rev().collect(),
+            hwm: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.total() - self.free.len()
+    }
+
+    /// High-water mark of simultaneously allocated blocks.
+    pub fn hwm(&self) -> usize {
+        self.hwm
+    }
+
+    /// Blocks needed to cover `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            blocks_total: self.total(),
+            blocks_free: self.free_blocks(),
+            hwm: self.hwm,
+            block_size: self.block_size,
+        }
+    }
+
+    /// Take one block (refcount 1). `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refs[b as usize], 0, "free-list block had a live refcount");
+        self.refs[b as usize] = 1;
+        self.hwm = self.hwm.max(self.allocated());
+        Some(b)
+    }
+
+    /// Share an allocated block (copy-on-write fork).
+    pub fn retain(&mut self, b: BlockId) {
+        let r = &mut self.refs[b as usize];
+        assert!(*r > 0, "retain of a free block {b}");
+        *r += 1;
+    }
+
+    /// Drop one reference; the block returns to the free list when the
+    /// last owner releases it. Releasing a free block is a double-free —
+    /// panic rather than corrupt the free list.
+    pub fn release(&mut self, b: BlockId) {
+        let r = &mut self.refs[b as usize];
+        assert!(*r > 0, "double free of block {b}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(b);
+        }
+    }
+
+    /// Current refcount (tests / diagnostics).
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refs[b as usize]
+    }
+}
+
+/// Shared handle: one pool per engine shard, threaded through every cache
+/// the shard owns. The engine is `!Send`-confined to its thread, so
+/// `Rc<RefCell<..>>` is the right ownership (no cross-thread sharing).
+pub type SharedPool = Rc<RefCell<BlockPool>>;
+
+/// Build a shared pool.
+pub fn shared_pool(total_blocks: usize, block_size: usize) -> SharedPool {
+    Rc::new(RefCell::new(BlockPool::new(total_blocks, block_size)))
+}
+
+/// One beam slot's logical→physical mapping: logical position `p` lives at
+/// `(blocks[p / block_size], p % block_size)`.
+#[derive(Debug, Default, Clone)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+    /// Logical positions mapped (the slot's cache frontier).
+    len: usize,
+}
+
+impl BlockTable {
+    pub fn new() -> Self {
+        BlockTable::default()
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Mapped logical positions.
+    pub fn len_tokens(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions the current blocks can hold without another reservation.
+    pub fn capacity(&self, block_size: usize) -> usize {
+        self.blocks.len() * block_size
+    }
+
+    /// Translate a logical position to `(block, offset)`. `None` past the
+    /// mapped frontier.
+    pub fn translate(&self, pos: usize, block_size: usize) -> Option<(BlockId, usize)> {
+        if pos >= self.len {
+            return None;
+        }
+        Some((self.blocks[pos / block_size], pos % block_size))
+    }
+
+    /// Grow the mapping to cover `[0, upto_tokens)`, allocating blocks as
+    /// needed. All-or-nothing: on exhaustion the blocks grabbed by *this
+    /// call* go straight back and the table is unchanged, so a failed
+    /// reservation can simply be retried after other work frees blocks.
+    pub fn reserve(&mut self, pool: &mut BlockPool, upto_tokens: usize) -> Result<(), PoolExhausted> {
+        let need = pool.blocks_for(upto_tokens);
+        if need > self.blocks.len() {
+            let missing = need - self.blocks.len();
+            if missing > pool.free_blocks() {
+                return Err(PoolExhausted {
+                    wanted_blocks: missing,
+                    free_blocks: pool.free_blocks(),
+                });
+            }
+            for _ in 0..missing {
+                let b = pool.alloc().expect("free count checked above");
+                self.blocks.push(b);
+            }
+        }
+        self.len = self.len.max(upto_tokens);
+        Ok(())
+    }
+
+    /// Shrink the mapped frontier to `new_len` tokens, releasing blocks
+    /// that no longer back any mapped position (a compaction's table
+    /// edit: the device repack moved the attendable sequence into the
+    /// dense prefix, the tail blocks return to the pool).
+    pub fn truncate(&mut self, pool: &mut BlockPool, new_len: usize) {
+        if new_len >= self.len {
+            return;
+        }
+        let keep = pool.blocks_for(new_len);
+        while self.blocks.len() > keep {
+            let b = self.blocks.pop().expect("len checked");
+            pool.release(b);
+        }
+        self.len = new_len;
+    }
+
+    /// Release every block (the beam died / the cache dropped). The table
+    /// is empty afterwards; the blocks are reusable the moment this
+    /// returns — same-tick reclamation is the paged design's point.
+    pub fn release_all(&mut self, pool: &mut BlockPool) {
+        for b in self.blocks.drain(..) {
+            pool.release(b);
+        }
+        self.len = 0;
+    }
+
+    /// Share this table's blocks into a new table (beam expand / gather
+    /// duplicating a slot): O(blocks) refcount bumps, no device copy.
+    /// Writers must un-share before mutating a block (copy-on-write; the
+    /// lockstep coordinator only appends at fresh blocks, so shared
+    /// prefixes stay immutable).
+    pub fn fork(&self, pool: &mut BlockPool) -> BlockTable {
+        for &b in &self.blocks {
+            pool.retain(b);
+        }
+        BlockTable { blocks: self.blocks.clone(), len: self.len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, check_simple, shrink_vec, Config};
+
+    #[test]
+    fn alloc_free_round_trip() {
+        let mut pool = BlockPool::new(4, 16);
+        assert_eq!(pool.free_blocks(), 4);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(pool.allocated(), 2);
+        assert_eq!(pool.hwm(), 2);
+        pool.release(a);
+        assert_eq!(pool.free_blocks(), 3);
+        pool.release(b);
+        assert_eq!(pool.free_blocks(), 4);
+        assert_eq!(pool.hwm(), 2, "hwm survives the frees");
+    }
+
+    #[test]
+    fn exhaustion_returns_none_never_corrupts() {
+        let mut pool = BlockPool::new(2, 8);
+        let a = pool.alloc().unwrap();
+        let _b = pool.alloc().unwrap();
+        assert_eq!(pool.alloc(), None);
+        pool.release(a);
+        assert!(pool.alloc().is_some(), "freed block is immediately reusable");
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut pool = BlockPool::new(2, 8);
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        pool.release(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of a free block")]
+    fn retain_free_block_panics() {
+        let mut pool = BlockPool::new(2, 8);
+        pool.retain(0);
+    }
+
+    #[test]
+    fn refcount_shares_and_releases() {
+        let mut pool = BlockPool::new(2, 8);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        assert_eq!(pool.refcount(a), 2);
+        pool.release(a);
+        assert_eq!(pool.free_blocks(), 1, "still one owner");
+        pool.release(a);
+        assert_eq!(pool.free_blocks(), 2, "last release frees");
+    }
+
+    #[test]
+    fn table_reserve_translate_truncate() {
+        let mut pool = BlockPool::new(8, 4);
+        let mut t = BlockTable::new();
+        assert_eq!(t.translate(0, 4), None, "empty table maps nothing");
+        t.reserve(&mut pool, 6).unwrap();
+        assert_eq!(t.len_tokens(), 6);
+        assert_eq!(t.blocks().len(), 2);
+        let (b0, o0) = t.translate(0, 4).unwrap();
+        let (b1, o1) = t.translate(5, 4).unwrap();
+        assert_eq!((b0, o0), (t.blocks()[0], 0));
+        assert_eq!((b1, o1), (t.blocks()[1], 1));
+        assert_eq!(t.translate(6, 4), None, "past the frontier");
+        t.truncate(&mut pool, 3);
+        assert_eq!(t.blocks().len(), 1, "tail block released");
+        assert_eq!(pool.free_blocks(), 7);
+        t.release_all(&mut pool);
+        assert_eq!(pool.free_blocks(), 8);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn failed_reserve_is_all_or_nothing() {
+        let mut pool = BlockPool::new(2, 4);
+        let mut t = BlockTable::new();
+        let err = t.reserve(&mut pool, 12).unwrap_err();
+        assert_eq!(err.wanted_blocks, 3);
+        assert_eq!(err.free_blocks, 2);
+        assert_eq!(pool.free_blocks(), 2, "nothing leaked by the failed call");
+        assert!(t.is_empty(), "table unchanged");
+        t.reserve(&mut pool, 8).unwrap();
+        assert_eq!(t.blocks().len(), 2, "retry after the failure succeeds");
+    }
+
+    #[test]
+    fn fork_shares_blocks_by_refcount() {
+        let mut pool = BlockPool::new(4, 4);
+        let mut t = BlockTable::new();
+        t.reserve(&mut pool, 8).unwrap();
+        let mut u = t.fork(&mut pool);
+        assert_eq!(t.blocks(), u.blocks(), "fork maps the same physical blocks");
+        assert_eq!(pool.allocated(), 2, "no new blocks allocated by the fork");
+        t.release_all(&mut pool);
+        assert_eq!(pool.allocated(), 2, "fork keeps the blocks alive");
+        assert_eq!(u.translate(5, 4).unwrap().1, 1);
+        u.release_all(&mut pool);
+        assert_eq!(pool.free_blocks(), 4);
+    }
+
+    // ------------------------------------------------ property battery
+
+    /// Arbitrary op sequences never leak or double-free:
+    /// `free + allocated == total` holds after every step, refcounts
+    /// stay consistent with table ownership, and releasing everything
+    /// restores the full free list.
+    #[test]
+    fn prop_pool_conserves_blocks_under_arbitrary_ops() {
+        #[derive(Debug, Clone)]
+        enum Op {
+            Reserve(usize, usize), // (table, upto_tokens)
+            Truncate(usize, usize),
+            Fork(usize, usize), // (src, dst) — dst releases its blocks first
+            Free(usize),
+        }
+        check(
+            "pool-conservation",
+            Config::default(),
+            |rng| {
+                let n_tables = 1 + rng.below(4);
+                let ops: Vec<Op> = (0..rng.below(24))
+                    .map(|_| match rng.below(4) {
+                        0 => Op::Reserve(rng.below(n_tables), rng.below(40)),
+                        1 => Op::Truncate(rng.below(n_tables), rng.below(40)),
+                        2 => Op::Fork(rng.below(n_tables), rng.below(n_tables)),
+                        _ => Op::Free(rng.below(n_tables)),
+                    })
+                    .collect();
+                (n_tables, ops)
+            },
+            |&(n_tables, ref ops)| {
+                let mut pool = BlockPool::new(16, 4);
+                let mut tables: Vec<BlockTable> = (0..n_tables).map(|_| BlockTable::new()).collect();
+                for op in ops {
+                    match *op {
+                        Op::Reserve(t, upto) => {
+                            let _ = tables[t].reserve(&mut pool, upto);
+                        }
+                        Op::Truncate(t, len) => {
+                            let new_len = len.min(tables[t].len_tokens());
+                            tables[t].truncate(&mut pool, new_len);
+                        }
+                        Op::Fork(src, dst) => {
+                            if src != dst {
+                                let forked = tables[src].fork(&mut pool);
+                                tables[dst].release_all(&mut pool);
+                                tables[dst] = forked;
+                            }
+                        }
+                        Op::Free(t) => tables[t].release_all(&mut pool),
+                    }
+                    if pool.free_blocks() + pool.allocated() != pool.total() {
+                        return Err(format!(
+                            "conservation broken: {} free + {} allocated != {}",
+                            pool.free_blocks(),
+                            pool.allocated(),
+                            pool.total()
+                        ));
+                    }
+                    if pool.hwm() > pool.total() {
+                        return Err("hwm above pool size".into());
+                    }
+                }
+                // total refcount must equal the tables' block holdings
+                let held: usize = tables.iter().map(|t| t.blocks().len()).sum();
+                let refs: usize = (0..pool.total() as BlockId)
+                    .map(|b| pool.refcount(b) as usize)
+                    .sum();
+                if held != refs {
+                    return Err(format!("tables hold {held} block refs, pool counts {refs}"));
+                }
+                for t in &mut tables {
+                    t.release_all(&mut pool);
+                }
+                if pool.free_blocks() != pool.total() {
+                    return Err(format!(
+                        "leak: {} of {} blocks free after releasing every table",
+                        pool.free_blocks(),
+                        pool.total()
+                    ));
+                }
+                Ok(())
+            },
+            |&(n_tables, ref ops)| {
+                shrink_vec(ops).into_iter().map(|o| (n_tables, o)).collect()
+            },
+        );
+    }
+
+    /// The logical→physical mapping preserves the attendable sequence in
+    /// order: walking logical positions 0..len through `translate` visits
+    /// block offsets monotonically within each block, never revisits a
+    /// (block, offset) cell, and survives fork/truncate edits — the paged
+    /// analogue of `prop_compact_preserves_attendable_sequence`.
+    #[test]
+    fn prop_table_mapping_preserves_sequence_order() {
+        check_simple(
+            "table-order",
+            |rng| {
+                let bs = 1 + rng.below(8);
+                let grows: Vec<usize> = (0..1 + rng.below(6)).map(|_| rng.below(20)).collect();
+                (bs, grows)
+            },
+            |&(bs, ref grows)| {
+                let mut pool = BlockPool::new(64, bs);
+                let mut t = BlockTable::new();
+                let mut len = 0usize;
+                for &g in grows {
+                    len = len.max(g.min(64 * bs));
+                    t.reserve(&mut pool, len).map_err(|e| e.to_string())?;
+                }
+                let mut seen = std::collections::HashSet::new();
+                let mut prev: Option<(BlockId, usize)> = None;
+                for p in 0..len {
+                    let Some((blk, off)) = t.translate(p, bs) else {
+                        return Err(format!("mapped position {p} failed to translate"));
+                    };
+                    if off != p % bs {
+                        return Err(format!("offset {off} != {p} % {bs}"));
+                    }
+                    if !seen.insert((blk, off)) {
+                        return Err(format!("cell ({blk},{off}) aliased twice"));
+                    }
+                    if let Some((pb, po)) = prev {
+                        let same_block = pb == blk;
+                        if same_block && off != po + 1 {
+                            return Err("non-contiguous walk within a block".into());
+                        }
+                        if !same_block && (po != bs - 1 || off != 0) {
+                            return Err("block boundary crossed mid-block".into());
+                        }
+                    }
+                    prev = Some((blk, off));
+                }
+                // a fork reads the identical sequence through shared blocks
+                let f = t.fork(&mut pool);
+                for p in 0..len {
+                    if f.translate(p, bs) != t.translate(p, bs) {
+                        return Err(format!("fork diverged at position {p}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Paged permute/merge/compact commute with gather, mirroring the
+    /// dense `compact_plan` battery: permuting tables (fork along an
+    /// index vector) then reading equals reading then permuting; merge is
+    /// table concatenation; truncate (compact) never changes surviving
+    /// positions' mapping below the new frontier.
+    #[test]
+    fn prop_table_edits_commute_with_gather() {
+        check_simple(
+            "table-edits-commute",
+            |rng| {
+                let bs = 1 + rng.below(4);
+                let batch = 1 + rng.below(4);
+                let lens: Vec<usize> = (0..batch).map(|_| rng.below(16)).collect();
+                let perm: Vec<usize> = (0..batch).map(|_| rng.below(batch)).collect();
+                let cut = rng.below(16);
+                (bs, lens, perm, cut)
+            },
+            |&(bs, ref lens, ref perm, cut)| {
+                let mut pool = BlockPool::new(256, bs);
+                let mut tables: Vec<BlockTable> = Vec::new();
+                for &l in lens {
+                    let mut t = BlockTable::new();
+                    t.reserve(&mut pool, l).map_err(|e| e.to_string())?;
+                    tables.push(t);
+                }
+                let read = |t: &BlockTable| -> Vec<(BlockId, usize)> {
+                    (0..t.len_tokens()).map(|p| t.translate(p, bs).unwrap()).collect()
+                };
+                // permute = per-slot fork along the index vector (the
+                // table edit that replaces the device-wide gather_bN)
+                let permuted: Vec<BlockTable> =
+                    perm.iter().map(|&src| tables[src].fork(&mut pool)).collect();
+                for (dst, &src) in perm.iter().enumerate() {
+                    if read(&permuted[dst]) != read(&tables[src]) {
+                        return Err(format!("permute diverged at dst {dst} (src {src})"));
+                    }
+                }
+                // merge = concatenation of the two sides' tables; every
+                // member keeps its own mapping verbatim
+                let merged: Vec<&BlockTable> = tables.iter().chain(permuted.iter()).collect();
+                for (i, m) in merged.iter().enumerate() {
+                    let src = if i < tables.len() { &tables[i] } else { &permuted[i - tables.len()] };
+                    if read(m) != read(src) {
+                        return Err(format!("merge slot {i} lost its mapping"));
+                    }
+                }
+                // compact = truncate; the surviving prefix maps unchanged
+                let mut cut_table = tables[0].fork(&mut pool);
+                let before = read(&cut_table);
+                let new_len = cut.min(cut_table.len_tokens());
+                cut_table.truncate(&mut pool, new_len);
+                let after = read(&cut_table);
+                if after[..] != before[..new_len] {
+                    return Err("truncate disturbed the surviving prefix".into());
+                }
+                // cleanup without leaks (conservation re-checked here)
+                cut_table.release_all(&mut pool);
+                for mut t in permuted {
+                    t.release_all(&mut pool);
+                }
+                for t in &mut tables {
+                    t.release_all(&mut pool);
+                }
+                if pool.free_blocks() != pool.total() {
+                    return Err("leak after releasing every table".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shared_pool_handle_round_trips() {
+        let pool = shared_pool(4, 8);
+        let mut t = BlockTable::new();
+        t.reserve(&mut pool.borrow_mut(), 10).unwrap();
+        assert_eq!(pool.borrow().allocated(), 2);
+        let s = pool.borrow().stats();
+        assert_eq!(s.blocks_total, 4);
+        assert_eq!(s.blocks_free, 2);
+        assert_eq!(s.hwm, 2);
+        assert_eq!(s.block_size, 8);
+        t.release_all(&mut pool.borrow_mut());
+        assert_eq!(pool.borrow().free_blocks(), 4);
+    }
+}

@@ -12,6 +12,7 @@ use std::time::Instant;
 use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifacts::{Manifest, ModelArch};
+use super::blocks::{shared_pool, SharedPool};
 use super::kv::KvSet;
 use crate::log_debug;
 use crate::log_info;
@@ -87,6 +88,15 @@ pub struct EngineStats {
     pub execute_wall_s: f64,
     pub host_bytes_up: u64,
     pub host_bytes_down: u64,
+    /// Paged-KV pool gauges, snapshotted by [`Engine::stats`] (all zero
+    /// when paging is off). Each shard owns its own pool, so summing in
+    /// `merge` yields fleet-wide totals for `/metrics`.
+    pub pool_blocks_total: u64,
+    pub pool_blocks_free: u64,
+    /// High-water mark of blocks in use — the acceptance gauge paged
+    /// allocation is judged by (lower than the dense-equivalent footprint
+    /// at equal traffic).
+    pub pool_hwm: u64,
 }
 
 impl EngineStats {
@@ -121,6 +131,9 @@ impl EngineStats {
         self.execute_wall_s += other.execute_wall_s;
         self.host_bytes_up += other.host_bytes_up;
         self.host_bytes_down += other.host_bytes_down;
+        self.pool_blocks_total += other.pool_blocks_total;
+        self.pool_blocks_free += other.pool_blocks_free;
+        self.pool_hwm += other.pool_hwm;
     }
 
     /// Junk share of all cache positions spent by decode/score calls so
@@ -141,6 +154,10 @@ pub struct Engine {
     exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
     weights: RefCell<HashMap<String, Rc<Vec<PjRtBuffer>>>>,
     stats: RefCell<EngineStats>,
+    /// The shard's shared KV block pool. `None` runs the dense
+    /// fixed-length discipline; set by [`Engine::enable_paging`] when the
+    /// artifact set carries a `kv_block` size.
+    pool: RefCell<Option<SharedPool>>,
 }
 
 impl Engine {
@@ -159,11 +176,80 @@ impl Engine {
             exes: RefCell::new(HashMap::new()),
             weights: RefCell::new(HashMap::new()),
             stats: RefCell::new(EngineStats::default()),
+            pool: RefCell::new(None),
         })
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        let mut s = self.stats.borrow().clone();
+        if let Some(pool) = self.pool.borrow().as_ref() {
+            let ps = pool.borrow().stats();
+            s.pool_blocks_total = ps.blocks_total as u64;
+            s.pool_blocks_free = ps.blocks_free as u64;
+            s.pool_hwm = ps.hwm as u64;
+        }
+        s
+    }
+
+    /// Switch this engine to paged KV allocation over a shared pool of
+    /// `total_blocks` blocks (block size from the manifest's `kv_block`).
+    /// Returns `false` — leaving the dense discipline untouched — when
+    /// the artifact set predates paging (no `kv_block`) or `total_blocks`
+    /// is 0, so older artifact dirs keep working unchanged.
+    pub fn enable_paging(&self, total_blocks: usize) -> bool {
+        let Some(bs) = self.manifest.kv_block else {
+            return false;
+        };
+        if total_blocks == 0 {
+            return false;
+        }
+        *self.pool.borrow_mut() = Some(shared_pool(total_blocks, bs));
+        log_info!("paged KV on: {total_blocks} blocks x {bs} tokens");
+        true
+    }
+
+    pub fn paging_enabled(&self) -> bool {
+        self.pool.borrow().is_some()
+    }
+
+    /// Point-in-time pool gauges (`None` when paging is off).
+    pub fn pool_stats(&self) -> Option<super::blocks::PoolStats> {
+        self.pool.borrow().as_ref().map(|p| p.borrow().stats())
+    }
+
+    /// Free blocks a *new* request must find before admission: one LM plus
+    /// one PRM prompt cache, broadcast to the widest exported batch
+    /// variant. Conservative by construction — a request clearing this
+    /// floor can always prefill and broadcast without starving work
+    /// already in flight. 0 when paging is off (admission then falls back
+    /// to slot counting alone).
+    pub fn pool_admission_floor(&self) -> usize {
+        let Some(ps) = self.pool_stats() else {
+            return 0;
+        };
+        let per_cache = self.manifest.prompt_pad.div_ceil(ps.block_size);
+        let widest = self.manifest.batch_variants.iter().copied().max().unwrap_or(1);
+        2 * widest * per_cache
+    }
+
+    /// Whether the pool has admission headroom for one more request
+    /// (always `true` when paging is off).
+    pub fn pool_has_headroom(&self) -> bool {
+        match self.pool_stats() {
+            None => true,
+            Some(ps) => ps.blocks_free >= self.pool_admission_floor(),
+        }
+    }
+
+    /// Attach block tables to a fresh cache when paging is on. Pool
+    /// exhaustion at prefill time is backpressure, not corruption: the
+    /// request should have been queued, so surface `Saturated` (HTTP 503
+    /// + Retry-After) with the cache still dense and nothing leaked.
+    fn attach_pages(&self, kv: &mut KvSet) -> Result<()> {
+        if let Some(pool) = self.pool.borrow().as_ref() {
+            kv.attach_pages(pool.clone()).map_err(|e| Error::saturated(e.to_string()))?;
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------ plumbing
@@ -341,6 +427,7 @@ impl Engine {
         let mut kv = KvSet::new(kv_bufs, 1, arch.cache_len);
         kv.pos_phys = self.manifest.prompt_pad;
         kv.commit(0, 0, prompt.len());
+        self.attach_pages(&mut kv)?;
         Ok((logits, kv))
     }
 
@@ -369,6 +456,7 @@ impl Engine {
         let mut kv = KvSet::new(out, 1, arch.cache_len);
         kv.pos_phys = self.manifest.prompt_pad;
         kv.commit(0, 0, prompt.len());
+        self.attach_pages(&mut kv)?;
         Ok(kv)
     }
 
@@ -385,6 +473,8 @@ impl Engine {
         let (pos_log, valid) = kv.broadcast_bookkeeping(b);
         new.pos_log = pos_log;
         new.valid = valid;
+        // paged: replicas fork slot 0's table — shared blocks, no growth
+        new.pages = kv.broadcast_pages(b);
         Ok(new)
     }
 
@@ -441,6 +531,7 @@ impl Engine {
         let mut new = KvSet::new(out, dst_batch, arch.cache_len);
         new.pos_phys = kv.pos_phys;
         copy_bookkeeping(kv, &mut new, idx);
+        new.pages = kv.gather_pages(idx);
         Ok(new)
     }
 
@@ -483,6 +574,9 @@ impl Engine {
         new.pos_phys = pos_phys;
         new.pos_log = pos_log;
         new.valid = valid;
+        // paged: the union's tables fork the members' along the same
+        // index — gang merge becomes block-table concatenation
+        new.pages = KvSet::merge_pages(a, b, idx);
         Ok(new)
     }
 
@@ -573,6 +667,10 @@ impl Engine {
                 kv.pos_phys, kv.cache_len
             )));
         }
+        // paged: reserve the block write up front — exhaustion here is
+        // clean backpressure (503), with the cache untouched
+        kv.reserve_frontier(self.manifest.decode_block)
+            .map_err(|e| Error::saturated(e.to_string()))?;
         let exe = self.program(&arch, &format!("decode_b{b}"))?;
         let w = self.weights_for(ckpt)?;
         self.observe_cache(kv);
@@ -623,6 +721,7 @@ impl Engine {
                 kv.pos_phys, kv.cache_len
             )));
         }
+        kv.reserve_frontier(t).map_err(|e| Error::saturated(e.to_string()))?;
         let exe = self.program(&arch, &format!("score_b{b}"))?;
         let w = self.weights_for(ckpt)?;
         self.observe_cache(kv);
@@ -707,6 +806,9 @@ mod tests {
             execute_wall_s: 1.0,
             host_bytes_up: 100,
             host_bytes_down: 10,
+            pool_blocks_total: 64,
+            pool_blocks_free: 48,
+            pool_hwm: 20,
             ..EngineStats::default()
         };
         a.decode_wall.insert(8, CallWall { calls: 2, wall_s: 0.2 });
@@ -727,6 +829,9 @@ mod tests {
             execute_wall_s: 2.0,
             host_bytes_up: 50,
             host_bytes_down: 5,
+            pool_blocks_total: 64,
+            pool_blocks_free: 60,
+            pool_hwm: 4,
             ..EngineStats::default()
         };
         b.decode_wall.insert(8, CallWall { calls: 1, wall_s: 0.1 });
@@ -754,6 +859,9 @@ mod tests {
         assert!((a.execute_wall_s - 3.0).abs() < 1e-12);
         assert_eq!(a.host_bytes_up, 150);
         assert_eq!(a.host_bytes_down, 15);
+        assert_eq!(a.pool_blocks_total, 128, "per-shard pools sum to a fleet total");
+        assert_eq!(a.pool_blocks_free, 108);
+        assert_eq!(a.pool_hwm, 24);
     }
 
     #[test]

@@ -9,6 +9,8 @@
 
 use xla::PjRtBuffer;
 
+use crate::runtime::blocks::{BlockTable, PoolExhausted, PoolStats, SharedPool};
+
 /// Device KV cache + host bookkeeping for a batch of beam slots.
 pub struct KvSet {
     /// `[l0.k, l0.v, l1.k, l1.v, ...]`, each `[batch, heads, cache_len, hd]`.
@@ -21,11 +23,85 @@ pub struct KvSet {
     pub pos_log: Vec<i32>,
     /// Per-slot validity bitmask, row-major `[batch, cache_len]`.
     pub valid: Vec<i32>,
+    /// Paged allocation (block tables over the shard's shared pool);
+    /// `None` runs the dense fixed-length discipline unchanged.
+    pub pages: Option<PagedKv>,
     /// Reusable gather scratch for `permute_bookkeeping` (beam prunes run
     /// at `batch * cache_len` cost per call; cloning `valid` there showed
     /// up on the hot path). Capacity persists across calls.
     scratch_valid: Vec<i32>,
     scratch_log: Vec<i32>,
+}
+
+/// Paged extension of one cache: a block table per slot over the shard's
+/// shared [`crate::runtime::blocks::BlockPool`]. Slot edits — beam
+/// permute, gang merge, two-tier resize — fork tables (refcount bumps)
+/// instead of moving device rows, and a rejected beam's blocks return to
+/// the pool the moment [`KvSet::free_slot`] runs. Dropping the cache
+/// releases every table, so pool conservation holds on all exit paths.
+pub struct PagedKv {
+    pool: SharedPool,
+    tables: Vec<BlockTable>,
+    /// Slots whose beam died: their blocks are back in the pool and they
+    /// reserve nothing at future frontier advances.
+    dead: Vec<bool>,
+}
+
+impl PagedKv {
+    fn new(pool: SharedPool, batch: usize) -> Self {
+        PagedKv {
+            pool,
+            tables: (0..batch).map(|_| BlockTable::new()).collect(),
+            dead: vec![false; batch],
+        }
+    }
+
+    pub fn pool(&self) -> &SharedPool {
+        &self.pool
+    }
+
+    pub fn table(&self, slot: usize) -> &BlockTable {
+        &self.tables[slot]
+    }
+
+    pub fn is_dead(&self, slot: usize) -> bool {
+        self.dead[slot]
+    }
+
+    /// Blocks currently held across every live slot.
+    pub fn blocks_held(&self) -> usize {
+        self.tables.iter().map(|t| t.blocks().len()).sum()
+    }
+
+    /// Grow every live slot's table to cover `[0, upto)`. All-or-nothing
+    /// across slots: on exhaustion the slots already grown roll back, so
+    /// the caller can retry after other work frees blocks (or surface
+    /// backpressure) without leaking.
+    fn reserve_all(&mut self, upto: usize) -> Result<(), PoolExhausted> {
+        let mut pool = self.pool.borrow_mut();
+        let prior: Vec<usize> = self.tables.iter().map(|t| t.len_tokens()).collect();
+        for slot in 0..self.tables.len() {
+            if self.dead[slot] {
+                continue;
+            }
+            if let Err(e) = self.tables[slot].reserve(&mut pool, upto) {
+                for s in 0..slot {
+                    self.tables[s].truncate(&mut pool, prior[s]);
+                }
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for t in &mut self.tables {
+            t.release_all(&mut pool);
+        }
+    }
 }
 
 /// A host-computed re-compaction of one cache: for every slot, the gather
@@ -55,9 +131,120 @@ impl KvSet {
             pos_phys: 0,
             pos_log: vec![0; batch],
             valid: vec![0; batch * cache_len],
+            pages: None,
             scratch_valid: Vec::new(),
             scratch_log: Vec::new(),
         }
+    }
+
+    /// Whether this cache runs paged (block-table) allocation.
+    pub fn paged(&self) -> bool {
+        self.pages.is_some()
+    }
+
+    /// Attach paged allocation: one block table per slot, covering the
+    /// current physical frontier. All-or-nothing — on pool exhaustion the
+    /// cache stays dense (`pages` remains `None`) and nothing leaks.
+    pub fn attach_pages(&mut self, pool: SharedPool) -> Result<(), PoolExhausted> {
+        let mut pages = PagedKv::new(pool, self.batch);
+        pages.reserve_all(self.pos_phys)?;
+        self.pages = Some(pages);
+        Ok(())
+    }
+
+    /// Reserve pool blocks for the next lockstep block write of `n`
+    /// positions (no-op on a dense cache). Called *before*
+    /// `advance_frontier`; an `Err` means the pool cannot cover the write
+    /// and the caller must back off (queueing / 503), with the cache
+    /// untouched.
+    pub fn reserve_frontier(&mut self, n: usize) -> Result<(), PoolExhausted> {
+        let target = self.pos_phys + n;
+        if let Some(p) = self.pages.as_mut() {
+            p.reserve_all(target)?;
+        }
+        Ok(())
+    }
+
+    /// Return a dead beam's blocks to the pool — the early-rejection
+    /// reclaim, which runs in the same scheduler tick as the rejection
+    /// itself. The slot's validity row becomes all-junk (nobody attends a
+    /// freed slot again); dense caches only take the validity edit.
+    pub fn free_slot(&mut self, slot: usize) {
+        assert!(slot < self.batch, "slot {slot} out of range {}", self.batch);
+        let Some(p) = self.pages.as_mut() else { return };
+        if !p.dead[slot] {
+            let mut pool = p.pool.borrow_mut();
+            p.tables[slot].release_all(&mut pool);
+            p.dead[slot] = true;
+        }
+        let row = slot * self.cache_len;
+        self.valid[row..row + self.cache_len].fill(0);
+    }
+
+    /// Point-in-time pool gauges (`None` on a dense cache).
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        self.pages.as_ref().map(|p| p.pool.borrow().stats())
+    }
+
+    /// Paged half of a broadcast b=1 → n: the replicas' tables are forks
+    /// of slot 0's — shared blocks, refcount bumps, no device copy.
+    pub fn broadcast_pages(&self, n: usize) -> Option<PagedKv> {
+        let p = self.pages.as_ref()?;
+        let pool = p.pool.clone();
+        let mut tables = Vec::with_capacity(n);
+        {
+            let mut pool_ref = pool.borrow_mut();
+            for _ in 0..n {
+                tables.push(p.tables[0].fork(&mut pool_ref));
+            }
+        }
+        Some(PagedKv { pool, tables, dead: vec![false; n] })
+    }
+
+    /// Paged half of a gather/resize along `idx` (same indexing as
+    /// `permute_bookkeeping`, but producing a new cache's tables): forks
+    /// share blocks with the sources by refcount.
+    pub fn gather_pages(&self, idx: &[i32]) -> Option<PagedKv> {
+        let p = self.pages.as_ref()?;
+        let pool = p.pool.clone();
+        let mut tables = Vec::with_capacity(idx.len());
+        let mut dead = Vec::with_capacity(idx.len());
+        {
+            let mut pool_ref = pool.borrow_mut();
+            for &src in idx {
+                let src = src as usize;
+                assert!(src < self.batch, "gather index {src} out of range");
+                tables.push(p.tables[src].fork(&mut pool_ref));
+                dead.push(p.dead[src]);
+            }
+        }
+        Some(PagedKv { pool, tables, dead })
+    }
+
+    /// Paged half of a gang merge: the union cache's tables fork the
+    /// members' along the same union index as [`KvSet::merge_bookkeeping`]
+    /// — block-table concatenation instead of a device-wide gather.
+    /// `None` unless both members are paged (they share the shard pool).
+    pub fn merge_pages(a: &KvSet, b: &KvSet, idx: &[i32]) -> Option<PagedKv> {
+        let (pa, pb) = (a.pages.as_ref()?, b.pages.as_ref()?);
+        let pool = pa.pool.clone();
+        let mut tables = Vec::with_capacity(idx.len());
+        let mut dead = Vec::with_capacity(idx.len());
+        {
+            let mut pool_ref = pool.borrow_mut();
+            for &i in idx {
+                let i = i as usize;
+                let (src, row) = if i < a.batch {
+                    (pa, i)
+                } else {
+                    assert!(i - a.batch < b.batch, "merge index {i} out of union range");
+                    (pb, i - a.batch)
+                };
+                tables.push(src.tables[row].fork(&mut pool_ref));
+                dead.push(src.dead[row]);
+            }
+        }
+        Some(PagedKv { pool, tables, dead })
     }
 
     /// Mark `[start, start+n)` physical positions of `slot` attendable and
@@ -172,6 +359,16 @@ impl KvSet {
             self.valid[row + dense..row + self.cache_len].fill(0);
         }
         self.pos_phys = plan.new_frontier;
+        // paged: the repack moved every slot's attendable prefix below the
+        // new frontier, so the tail blocks return to the pool
+        if let Some(p) = self.pages.as_mut() {
+            let mut pool = p.pool.borrow_mut();
+            for slot in 0..p.tables.len() {
+                if !p.dead[slot] {
+                    p.tables[slot].truncate(&mut pool, plan.new_frontier);
+                }
+            }
+        }
     }
 
     /// Permute host bookkeeping to match a device `gather(idx)`:
@@ -192,6 +389,23 @@ impl KvSet {
         }
         std::mem::swap(&mut self.pos_log, &mut self.scratch_log);
         std::mem::swap(&mut self.valid, &mut self.scratch_valid);
+        // paged: the permute is a table edit — fork the source tables
+        // along idx (refcount bumps) and release the old generation
+        if let Some(p) = self.pages.as_mut() {
+            let mut pool = p.pool.borrow_mut();
+            let mut tables = Vec::with_capacity(idx.len());
+            let mut dead = Vec::with_capacity(idx.len());
+            for &src in idx {
+                let src = src as usize;
+                tables.push(p.tables[src].fork(&mut pool));
+                dead.push(p.dead[src]);
+            }
+            for t in &mut p.tables {
+                t.release_all(&mut pool);
+            }
+            p.tables = tables;
+            p.dead = dead;
+        }
     }
 
     /// Host bookkeeping for a device `merge(idx)` of two caches: dest slot
@@ -598,5 +812,254 @@ mod tests {
         assert_eq!(log, vec![2, 2, 2]);
         assert_eq!(valid.len(), 12);
         assert_eq!(&valid[4..8], &[1, 1, 0, 0]);
+    }
+
+    // ------------------------------------------------------ paged caches
+
+    use crate::runtime::blocks::shared_pool;
+
+    fn paged_toy(batch: usize, cache_len: usize, pool: &crate::runtime::blocks::SharedPool) -> KvSet {
+        let mut kv = toy(batch, cache_len);
+        kv.attach_pages(pool.clone()).expect("pool covers a fresh cache");
+        kv
+    }
+
+    #[test]
+    fn reserve_frontier_grows_tables_lockstep() {
+        let pool = shared_pool(16, 4);
+        let mut kv = paged_toy(2, 16, &pool);
+        assert_eq!(pool.borrow().allocated(), 0, "fresh cache holds nothing");
+        kv.reserve_frontier(6).unwrap();
+        kv.advance_frontier(6);
+        assert_eq!(pool.borrow().allocated(), 4, "2 slots x 2 blocks");
+        let p = kv.pages.as_ref().unwrap();
+        assert_eq!(p.table(0).len_tokens(), 6);
+        assert_eq!(p.table(0).translate(5, 4).unwrap().1, 1);
+    }
+
+    #[test]
+    fn free_slot_returns_blocks_same_tick_and_junks_the_row() {
+        let pool = shared_pool(16, 4);
+        let mut kv = paged_toy(2, 16, &pool);
+        kv.reserve_frontier(8).unwrap();
+        kv.advance_frontier(8);
+        kv.commit(0, 0, 8);
+        kv.commit(1, 0, 8);
+        assert_eq!(pool.borrow().allocated(), 4);
+        kv.free_slot(1);
+        // the rejected slot's blocks are free *now*, not after a compaction
+        assert_eq!(pool.borrow().allocated(), 2);
+        assert_eq!(pool.borrow().free_blocks(), 14);
+        assert_eq!(kv.valid_count(1), 0, "freed slot attends nothing");
+        assert_eq!(kv.valid_count(0), 8, "survivor untouched");
+        // freed slots reserve nothing at future frontier advances
+        kv.reserve_frontier(4).unwrap();
+        assert_eq!(pool.borrow().allocated(), 3, "only the live slot grew");
+        kv.free_slot(1); // idempotent
+        assert_eq!(pool.borrow().allocated(), 3);
+    }
+
+    #[test]
+    fn reserve_frontier_exhaustion_is_clean_backpressure() {
+        let pool = shared_pool(3, 4);
+        let mut kv = paged_toy(2, 32, &pool);
+        kv.reserve_frontier(4).unwrap();
+        kv.advance_frontier(4);
+        assert_eq!(pool.borrow().allocated(), 2);
+        // next block needs 2 more blocks; only 1 is free
+        let err = kv.reserve_frontier(4).unwrap_err();
+        assert_eq!(err.free_blocks, 1);
+        assert_eq!(pool.borrow().allocated(), 2, "failed reserve rolled back");
+        assert_eq!(kv.pos_phys, 4, "frontier untouched — caller backs off");
+        // freeing a slot makes the same reservation succeed (reject → reuse)
+        kv.free_slot(1);
+        kv.reserve_frontier(4).unwrap();
+        assert_eq!(kv.pages.as_ref().unwrap().table(0).len_tokens(), 8);
+    }
+
+    #[test]
+    fn permute_forks_tables_without_new_blocks() {
+        let pool = shared_pool(16, 4);
+        let mut kv = paged_toy(3, 16, &pool);
+        kv.reserve_frontier(4).unwrap();
+        kv.advance_frontier(4);
+        kv.commit(0, 0, 1);
+        kv.commit(1, 0, 2);
+        kv.commit(2, 0, 3);
+        let before = pool.borrow().allocated();
+        kv.permute_bookkeeping(&[2, 2, 0]);
+        assert_eq!(kv.pos_log, vec![3, 3, 1], "dense bookkeeping unchanged");
+        assert_eq!(
+            pool.borrow().allocated(),
+            before,
+            "permute is refcount edits, not allocation"
+        );
+        let p = kv.pages.as_ref().unwrap();
+        assert_eq!(p.table(0).blocks(), p.table(1).blocks(), "duplicated slot shares blocks");
+        let b = p.table(0).blocks()[0];
+        assert_eq!(pool.borrow().refcount(b), 2, "copy-on-write share");
+    }
+
+    #[test]
+    fn compact_truncates_tables_to_new_frontier() {
+        let pool = shared_pool(16, 2);
+        let mut kv = paged_toy(2, 16, &pool);
+        kv.reserve_frontier(6).unwrap();
+        kv.advance_frontier(6);
+        kv.commit(0, 0, 2);
+        kv.commit(1, 3, 1);
+        assert_eq!(pool.borrow().allocated(), 6, "2 slots x 3 blocks of 2");
+        let plan = kv.compact_plan().expect("junk to reclaim");
+        assert_eq!(plan.new_frontier, 2);
+        kv.apply_compact(&plan);
+        assert_eq!(pool.borrow().allocated(), 2, "tail blocks released by the table edit");
+        assert_eq!(kv.pages.as_ref().unwrap().table(0).len_tokens(), 2);
+    }
+
+    #[test]
+    fn dropping_a_paged_cache_releases_every_block() {
+        let pool = shared_pool(8, 4);
+        {
+            let mut kv = paged_toy(2, 16, &pool);
+            kv.reserve_frontier(8).unwrap();
+            kv.advance_frontier(8);
+            assert_eq!(pool.borrow().allocated(), 4);
+        }
+        assert_eq!(pool.borrow().free_blocks(), 8, "drop returned everything");
+    }
+
+    #[test]
+    fn broadcast_and_merge_pages_share_by_refcount() {
+        let pool = shared_pool(32, 4);
+        let mut one = paged_toy(1, 16, &pool);
+        one.reserve_frontier(4).unwrap();
+        one.advance_frontier(4);
+        one.commit(0, 0, 4);
+        let held = pool.borrow().allocated();
+        let bcast = one.broadcast_pages(3).expect("paged source");
+        assert_eq!(pool.borrow().allocated(), held, "broadcast allocates nothing");
+        assert_eq!(bcast.table(2).blocks(), one.pages.as_ref().unwrap().table(0).blocks());
+        // merge = table concatenation along the union index
+        let mut b = paged_toy(2, 16, &pool);
+        b.reserve_frontier(8).unwrap();
+        b.advance_frontier(8);
+        let merged = KvSet::merge_pages(&one, &b, &[0, 1, 2, 0]).expect("both paged");
+        assert_eq!(merged.table(0).blocks(), one.pages.as_ref().unwrap().table(0).blocks());
+        assert_eq!(merged.table(1).blocks(), b.pages.as_ref().unwrap().table(0).blocks());
+        assert_eq!(merged.table(3).blocks(), one.pages.as_ref().unwrap().table(0).blocks());
+        drop(merged);
+        drop(bcast);
+        drop(one);
+        drop(b);
+        assert_eq!(pool.borrow().free_blocks(), 32, "no leak through share edits");
+    }
+
+    /// Paged bookkeeping is invisible to the dense discipline: running an
+    /// arbitrary commit/advance/permute/compact sequence on a paged cache
+    /// and a dense twin yields byte-identical `pos_log`/`valid`/frontier,
+    /// while the pool conserves blocks throughout — the host half of the
+    /// paged-vs-dense byte-identity contract.
+    #[test]
+    fn prop_paged_bookkeeping_matches_dense_twin() {
+        use crate::util::propcheck::check_simple;
+        #[derive(Debug, Clone)]
+        enum Op {
+            Advance(usize),
+            Commit(usize, usize),
+            Permute(Vec<i32>),
+            Free(usize),
+            Compact,
+        }
+        check_simple(
+            "paged-matches-dense",
+            |rng| {
+                let s = 8 + rng.below(8);
+                let batch = 1 + rng.below(4);
+                let ops: Vec<Op> = (0..rng.below(16))
+                    .map(|_| match rng.below(5) {
+                        0 => Op::Advance(1 + rng.below(4)),
+                        1 => Op::Commit(rng.below(batch), 1 + rng.below(3)),
+                        2 => Op::Permute((0..batch).map(|_| rng.below(batch) as i32).collect()),
+                        3 => Op::Free(rng.below(batch)),
+                        _ => Op::Compact,
+                    })
+                    .collect();
+                (s, batch, ops)
+            },
+            |&(s, batch, ref ops)| {
+                let pool = shared_pool(batch * s, 4);
+                let mut paged = KvSet::new(Vec::new(), batch, s);
+                paged.attach_pages(pool.clone()).map_err(|e| e.to_string())?;
+                let mut dense = KvSet::new(Vec::new(), batch, s);
+                let mut freed = vec![false; batch];
+                for op in ops {
+                    match *op {
+                        Op::Advance(n) => {
+                            if paged.remaining() < n {
+                                continue;
+                            }
+                            paged.reserve_frontier(n).map_err(|e| e.to_string())?;
+                            paged.advance_frontier(n);
+                            dense.advance_frontier(n);
+                        }
+                        Op::Commit(slot, n) => {
+                            // lockstep discipline: commits stay below the frontier
+                            if freed[slot] || paged.pos_phys < n {
+                                continue;
+                            }
+                            let start = paged.pos_phys - n;
+                            paged.commit(slot, start, n);
+                            dense.commit(slot, start, n);
+                        }
+                        Op::Permute(ref idx) => {
+                            paged.permute_bookkeeping(idx);
+                            dense.permute_bookkeeping(idx);
+                            let old = freed.clone();
+                            for (d, &src) in idx.iter().enumerate() {
+                                freed[d] = old[src as usize];
+                            }
+                        }
+                        Op::Free(slot) => {
+                            paged.free_slot(slot);
+                            // mirror the validity edit on the dense twin
+                            dense.valid[slot * s..(slot + 1) * s].fill(0);
+                            freed[slot] = true;
+                        }
+                        Op::Compact => {
+                            if let Some(plan) = paged.compact_plan() {
+                                paged.apply_compact(&plan);
+                                let dplan = dense.compact_plan().expect("twins agree");
+                                if dplan.new_frontier != plan.new_frontier {
+                                    return Err("twins planned different frontiers".into());
+                                }
+                                dense.apply_compact(&dplan);
+                            }
+                        }
+                    }
+                    if paged.pos_phys != dense.pos_phys
+                        || paged.pos_log != dense.pos_log
+                        || paged.valid != dense.valid
+                    {
+                        return Err("paged bookkeeping diverged from the dense twin".into());
+                    }
+                    let pl = pool.borrow();
+                    if pl.free_blocks() + pl.allocated() != pl.total() {
+                        return Err("pool conservation broken".into());
+                    }
+                    // every live slot's table covers the frontier
+                    let p = paged.pages.as_ref().expect("attached");
+                    for slot in 0..batch {
+                        if !p.is_dead(slot) && p.table(slot).len_tokens() < paged.pos_phys {
+                            return Err(format!("slot {slot} table behind the frontier"));
+                        }
+                    }
+                }
+                drop(paged);
+                if pool.borrow().free_blocks() != pool.borrow().total() {
+                    return Err("blocks leaked after drop".into());
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -8,6 +8,11 @@
 //!   `score_block`, `gather`, `broadcast`, `fullseq`).
 //! * [`kv`] — `KvSet`: the device-resident cache handles threaded between
 //!   calls (never copied to host on the hot path).
+//! * [`blocks`] — `BlockPool` / `BlockTable`: paged KV allocation over a
+//!   shared per-shard block pool (refcounted, free-listed); `KvSet`
+//!   attaches per-slot tables so beam permute/merge/split/compact become
+//!   table edits and a rejected beam's blocks return to the pool in the
+//!   same tick.
 //!
 //! The engine is deliberately *not* `Send` (the `xla` crate's client is
 //! `Rc`-based): the serving front end talks to per-shard engine threads
@@ -16,9 +21,11 @@
 //! aggregates counters across shards for `/metrics`.
 
 pub mod artifacts;
+pub mod blocks;
 pub mod engine;
 pub mod kv;
 
 pub use artifacts::{Manifest, ModelArch};
+pub use blocks::{shared_pool, BlockId, BlockPool, BlockTable, PoolExhausted, PoolStats, SharedPool};
 pub use engine::{CallWall, Engine, EngineStats, ModelKind};
-pub use kv::{CompactPlan, KvSet};
+pub use kv::{CompactPlan, KvSet, PagedKv};

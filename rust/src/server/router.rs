@@ -136,6 +136,10 @@ pub struct PoolOptions {
     /// engine run before placement, so duplicates landing on different
     /// shards no longer both execute.
     pub singleflight: bool,
+    /// Paged-KV block pool size per shard (blocks of the manifest's
+    /// `kv_block` tokens); 0 = dense per-slot caches. Silently falls back
+    /// to dense on artifact sets exported before paging existed.
+    pub kv_pool_blocks: usize,
 }
 
 /// RAII slot reservation against one shard's depth gauge. Dropping the
@@ -218,6 +222,7 @@ impl EnginePool {
                 default_deadline_ms: 0,
                 fleet: None,
                 singleflight: false,
+                kv_pool_blocks: 0,
             },
         )
     }
@@ -251,10 +256,14 @@ impl EnginePool {
             let fstats2 = Arc::clone(&fstats);
             let bstats2 = Arc::clone(&bstats);
             let fleet_opts = opts.fleet.clone();
+            let kv_pool_blocks = opts.kv_pool_blocks;
             let join = std::thread::Builder::new()
                 .name(format!("erprm-shard-{i}"))
                 .spawn(move || {
-                    shard_main(i, dir, rx, ready_tx, solved2, stats2, fleet_opts, fstats2, bstats2)
+                    shard_main(
+                        i, dir, kv_pool_blocks, rx, ready_tx, solved2, stats2, fleet_opts,
+                        fstats2, bstats2,
+                    )
                 })?;
             shards.push(Shard {
                 tx,
@@ -656,6 +665,7 @@ impl EnginePool {
                     "erprm_fleet_forecast_rejected_total {}\n",
                     t.forecast_rejected
                 ));
+                out.push_str(&format!("erprm_fleet_pool_deferred_total {}\n", t.pool_deferred));
                 out.push_str(&format!("erprm_fleet_completed_total {}\n", t.completed));
                 out.push_str(&format!("erprm_fleet_failed_total {}\n", t.failed));
             }
@@ -692,6 +702,11 @@ impl EnginePool {
             "erprm_kv_reclaimed_positions_total {}\n",
             s.compact_reclaimed
         ));
+        // Paged-KV block pool (summed across shards; all-zero when the
+        // pool is off or the artifacts predate paged export)
+        out.push_str(&format!("erprm_kv_pool_blocks_total {}\n", s.pool_blocks_total));
+        out.push_str(&format!("erprm_kv_pool_blocks_free {}\n", s.pool_blocks_free));
+        out.push_str(&format!("erprm_kv_pool_hwm {}\n", s.pool_hwm));
         out.push_str(&format!("erprm_engine_compiles_total {}\n", s.compiles));
         out.push_str(&format!("erprm_engine_compile_wall_seconds {:.3}\n", s.compile_wall_s));
         out.push_str(&format!("erprm_engine_execute_wall_seconds {:.3}\n", s.execute_wall_s));
@@ -718,6 +733,7 @@ impl EnginePool {
 fn shard_main(
     idx: usize,
     artifacts_dir: PathBuf,
+    kv_pool_blocks: usize,
     rx: mpsc::Receiver<Msg>,
     ready_tx: mpsc::Sender<Result<()>>,
     solved: Arc<AtomicU64>,
@@ -736,6 +752,11 @@ fn shard_main(
             return;
         }
     };
+    if kv_pool_blocks > 0 && !engine.enable_paging(kv_pool_blocks) {
+        // artifacts predate paged export (no kv_block in the manifest):
+        // serve dense rather than refusing to start
+        log_debug!("shard {idx}: manifest has no kv_block; paged KV off, dense caches");
+    }
     match fleet_opts {
         Some(opts) => fleet::drive(&engine, &opts, &fstats, &bstats, &solved, &stats, |block| {
             let msg = if block {
@@ -956,6 +977,7 @@ mod tests {
                 default_deadline_ms: 0,
                 fleet: Some(FleetOptions::default()),
                 singleflight: false,
+                kv_pool_blocks: 0,
             },
         );
         assert!(r.is_err());
@@ -972,6 +994,7 @@ mod tests {
                 default_deadline_ms: 0,
                 fleet: None,
                 singleflight: false,
+                kv_pool_blocks: 0,
             },
         );
         assert!(r.is_err());
@@ -984,6 +1007,7 @@ mod tests {
                 default_deadline_ms: 0,
                 fleet: Some(FleetOptions { max_inflight: 0, ..FleetOptions::default() }),
                 singleflight: false,
+                kv_pool_blocks: 0,
             },
         );
         assert!(r.is_err());

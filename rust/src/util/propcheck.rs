@@ -18,11 +18,14 @@ pub struct Config {
 
 impl Default for Config {
     fn default() -> Self {
-        // ERPRM_PROPTEST_CASES scales coverage in CI vs local runs.
+        // ERPRM_PROPTEST_CASES scales coverage in CI vs local runs; the
+        // propcheck-long feature (the CI soak job) raises the default
+        // without touching the environment.
+        let default_cases = if cfg!(feature = "propcheck-long") { 1024 } else { 64 };
         let cases = std::env::var("ERPRM_PROPTEST_CASES")
             .ok()
             .and_then(|v| v.parse().ok())
-            .unwrap_or(64);
+            .unwrap_or(default_cases);
         Config { cases, seed: 0x5EED, max_shrink_iters: 200 }
     }
 }

@@ -408,6 +408,7 @@ fn fleet_pool(dir: PathBuf, shards: usize, max_inflight: usize, cache: usize) ->
             // off so these tests keep exercising the *shard-local*
             // coalescer; the pool-level table has its own tests
             singleflight: false,
+            kv_pool_blocks: 0,
         },
     )
     .expect("fleet pool spawn")
@@ -633,6 +634,7 @@ fn gang_batched_solves_are_byte_identical_to_solo() {
             default_deadline_ms: 0,
             fleet: Some(FleetOptions { max_inflight: 4, gang: true, ..FleetOptions::default() }),
             singleflight: false,
+            kv_pool_blocks: 0,
         },
     )
     .expect("gang pool spawn");
@@ -929,6 +931,7 @@ fn pool_singleflight_coalesces_across_shards() {
             default_deadline_ms: 0,
             fleet: None,
             singleflight: true,
+            kv_pool_blocks: 0,
         },
     )
     .expect("pool spawn");
@@ -958,6 +961,205 @@ fn pool_singleflight_coalesces_across_shards() {
     assert!(text.contains("erprm_pool_singleflight_enabled 1"), "{text}");
     assert!(text.contains("erprm_kv_junk_fraction"), "{text}");
     assert!(text.contains("erprm_kv_compact_total"), "{text}");
+    epool.shutdown();
+}
+
+// --------------------------------------------------------------- paged kv
+
+// The paged-KV acceptance gate: a solve whose caches live in block tables
+// over the shared device pool must produce the same SolveOutcome, byte
+// for byte (modulo wall-clock), as the same (problem, cfg, seed) solved
+// on dense per-slot caches — paging is pure bookkeeping. And when the
+// last solve's caches drop, every block must be back in the pool.
+#[test]
+fn paged_solves_are_byte_identical_to_dense() {
+    let Some(dir) = artifacts() else { return };
+    let dense = Engine::load(&dir).expect("engine load");
+    let paged = Engine::load(&dir).expect("engine load");
+    if !paged.enable_paging(4096) {
+        eprintln!("[integration] artifacts predate paged export (no kv_block); skipping");
+        return;
+    }
+    let problems = problem_set(&SATMATH, 3, 99);
+    for mode in [SearchMode::Vanilla, SearchMode::EarlyRejection] {
+        let c = cfg(mode, 8, 8);
+        for (i, p) in problems.iter().enumerate() {
+            let (a, b) = match mode {
+                SearchMode::Vanilla => (
+                    solve_vanilla(&dense, "lm-concise", "prm-large", p, &c, 0.5).unwrap(),
+                    solve_vanilla(&paged, "lm-concise", "prm-large", p, &c, 0.5).unwrap(),
+                ),
+                SearchMode::EarlyRejection => (
+                    solve_early_rejection(&dense, "lm-concise", "prm-large", p, &c, 0.5)
+                        .unwrap(),
+                    solve_early_rejection(&paged, "lm-concise", "prm-large", p, &c, 0.5)
+                        .unwrap(),
+                ),
+            };
+            assert_eq!(a.answer, b.answer, "problem {i} ({mode:?}): answer diverged");
+            assert_eq!(
+                a.best_trace, b.best_trace,
+                "problem {i} ({mode:?}): trace diverged under paging"
+            );
+            assert_eq!(
+                a.ledger, b.ledger,
+                "problem {i} ({mode:?}): FLOPs accounting diverged under paging"
+            );
+            assert_eq!(a.steps_executed, b.steps_executed, "problem {i} ({mode:?})");
+        }
+    }
+    let ps = paged.pool_stats().expect("pool stats while paging is on");
+    assert!(ps.hwm > 0, "solves must actually have drawn from the pool: {ps:?}");
+    assert_eq!(
+        ps.blocks_free, ps.blocks_total,
+        "dropped solves must return every block to the pool: {ps:?}"
+    );
+}
+
+// The memory half of early rejection: rejected beams' blocks go back to
+// the pool mid-flight and get reused by the survivors, without
+// perturbing them — and the pool high-water mark stays below what dense
+// per-slot caches would have pinned for the same traffic.
+#[test]
+fn paged_rejection_reuses_blocks_without_perturbing_survivors() {
+    let Some(dir) = artifacts() else { return };
+    let dense = Engine::load(&dir).expect("engine load");
+    let paged = Engine::load(&dir).expect("engine load");
+    if !paged.enable_paging(4096) {
+        eprintln!("[integration] artifacts predate paged export (no kv_block); skipping");
+        return;
+    }
+    let c = cfg(SearchMode::EarlyRejection, 8, 8);
+    for (i, p) in problem_set(&SATMATH, 4, 4242).iter().enumerate() {
+        let a = solve_early_rejection(&dense, "lm-concise", "prm-large", p, &c, 0.5).unwrap();
+        let b = solve_early_rejection(&paged, "lm-concise", "prm-large", p, &c, 0.5).unwrap();
+        assert_eq!(
+            a.best_trace, b.best_trace,
+            "problem {i}: survivors perturbed by mid-flight block reuse"
+        );
+        assert_eq!(a.ledger, b.ledger, "problem {i}");
+    }
+    let ps = paged.pool_stats().unwrap();
+    let m = &paged.manifest;
+    let bs = ps.block_size;
+    // dense-equivalent footprint of ONE solve at its base width: every
+    // slot of both caches pinned whole, whether or not it was rejected
+    let width = m.batch_variants.iter().copied().filter(|&v| v >= 8).min().unwrap_or(8);
+    let lm_blocks = m.model("lm").unwrap().cache_len.div_ceil(bs);
+    let prm_blocks = m.model("prm-large").unwrap().cache_len.div_ceil(bs);
+    let dense_equiv = width * (lm_blocks + prm_blocks);
+    assert!(
+        ps.hwm < dense_equiv,
+        "paged high-water mark {} must undercut the dense footprint {dense_equiv}",
+        ps.hwm
+    );
+    assert_eq!(ps.blocks_free, ps.blocks_total, "leaked blocks: {ps:?}");
+}
+
+// Pool exhaustion must surface as Saturated (HTTP 503 + Retry-After, the
+// same backpressure contract as full shard queues) and never corrupt
+// engine state: after widening the pool the very same engine solves
+// byte-identically to dense.
+#[test]
+fn paged_pool_exhaustion_saturates_then_recovers() {
+    let Some(dir) = artifacts() else { return };
+    let e = Engine::load(&dir).expect("engine load");
+    if !e.enable_paging(2) {
+        eprintln!("[integration] artifacts predate paged export (no kv_block); skipping");
+        return;
+    }
+    let p = Problem { v0: 61, ops: vec![OpStep { op: tk::MINUS, d: 5 }] };
+    let c = cfg(SearchMode::EarlyRejection, 8, 8);
+    let err = solve_early_rejection(&e, "lm-concise", "prm-large", &p, &c, 0.5)
+        .expect_err("a 2-block pool cannot host an 8-beam solve");
+    assert_eq!(err.http_status(), 503, "exhaustion must map to Saturated: {err}");
+    // all-or-nothing reservation: the failed solve must not leak blocks
+    let ps = e.pool_stats().unwrap();
+    assert_eq!(ps.blocks_free, ps.blocks_total, "{ps:?}");
+    // widen the pool on the same engine — state must be unscathed
+    assert!(e.enable_paging(4096));
+    let out = solve_early_rejection(&e, "lm-concise", "prm-large", &p, &c, 0.5).unwrap();
+    let dense = Engine::load(&dir).expect("engine load");
+    let want = solve_early_rejection(&dense, "lm-concise", "prm-large", &p, &c, 0.5).unwrap();
+    assert_eq!(out.best_trace, want.best_trace, "post-exhaustion solve corrupted");
+    assert_eq!(out.ledger, want.ledger);
+}
+
+// Fleet admission under a tight pool: requests that would overdraw the
+// pool stay *queued* (degrade to queueing, not failure), admit as blocks
+// free up, and still finish byte-identical to dense solves.
+#[test]
+fn paged_fleet_exhaustion_degrades_to_queueing() {
+    let Some(dir) = artifacts() else { return };
+    let e = Engine::load(&dir).expect("engine load");
+    let Some(bs) = e.manifest.kv_block else {
+        eprintln!("[integration] artifacts predate paged export (no kv_block); skipping");
+        return;
+    };
+    // exactly the admission floor: one request admits, then the gate
+    // stays shut until its caches drop
+    let widest = e.manifest.batch_variants.iter().copied().max().unwrap_or(1);
+    let floor = 2 * widest * e.manifest.prompt_pad.div_ceil(bs);
+    let c = cfg(SearchMode::EarlyRejection, 8, 8);
+    let problems = problem_set(&SATMATH, 3, 7171);
+    let reference: Vec<_> = problems
+        .iter()
+        .map(|p| solve_early_rejection(&e, "lm-concise", "prm-large", p, &c, 0.5).unwrap())
+        .collect();
+    drop(e);
+
+    let epool = EnginePool::spawn_with(
+        dir,
+        PoolOptions {
+            shards: 1,
+            capacity: 64,
+            cache_entries: 0,
+            default_deadline_ms: 0,
+            fleet: Some(FleetOptions { max_inflight: 4, ..FleetOptions::default() }),
+            singleflight: false,
+            kv_pool_blocks: floor,
+        },
+    )
+    .expect("paged fleet pool spawn");
+    let joins: Vec<_> = problems
+        .iter()
+        .cloned()
+        .map(|p| {
+            let pool = epool.clone();
+            let cc = c.clone();
+            std::thread::spawn(move || {
+                let req = api::SolveRequest {
+                    problem: p,
+                    mode: SearchMode::EarlyRejection,
+                    n_beams: 8,
+                    tau: 8,
+                    lm: "lm-concise".into(),
+                    prm: "prm-large".into(),
+                    deadline_ms: None,
+                    priority: 0,
+                };
+                pool.solve(req, cc).unwrap()
+            })
+        })
+        .collect();
+    for (i, j) in joins.into_iter().enumerate() {
+        let out = j.join().unwrap();
+        assert_eq!(
+            out.best_trace, reference[i].best_trace,
+            "problem {i}: trace diverged under pool-gated admission"
+        );
+        assert_eq!(out.ledger, reference[i].ledger, "problem {i}");
+    }
+    let t = epool.fleet_totals().expect("fleet totals");
+    assert_eq!(t.completed, 3, "every request must complete, none may fail: {t:?}");
+    assert_eq!(t.failed + t.expired, 0, "{t:?}");
+    assert!(
+        t.pool_deferred >= 1,
+        "a floor-sized pool under 3 concurrent requests must have deferred admission: {t:?}"
+    );
+    let text = epool.render_metrics();
+    assert!(text.contains(&format!("erprm_kv_pool_blocks_total {floor}")), "{text}");
+    assert!(text.contains("erprm_fleet_pool_deferred_total"), "{text}");
     epool.shutdown();
 }
 
