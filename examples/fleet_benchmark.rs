@@ -25,6 +25,13 @@
 //! equivalent (per-slot caches padded to the batch variant and pinned for
 //! the full cache length across `max_inflight` requests per shard).
 //!
+//! A fifth run, `gang+native`, replays the traffic through the gang
+//! scheduler with the manifest-default block pool — block-native
+//! attention when the artifact set exports blocktab programs. Its
+//! acceptance criteria: outcomes byte-identical to the dense gang run
+//! with (near-)zero merge/compact *device* calls, the gang assembly
+//! having collapsed into block-table edits.
+//!
 //!     make artifacts && cargo run --release --example fleet_benchmark -- \
 //!         --requests 32 --clients 8 --shards 2 --max-inflight 8 --dup 4
 //!
@@ -62,8 +69,16 @@ struct Report {
     /// the engines attended over (compaction's acceptance metric — gang
     /// mode must not pay for its max-frontier union gap in junk).
     cache_util: f64,
+    /// Device KV-concat merge calls (gang assembly). Block-native runs
+    /// must hold this at ~0 for ganged traffic — merges become table
+    /// edits, counted separately below.
+    merge_calls: u64,
     compact_calls: u64,
     compact_reclaimed: u64,
+    /// Host block-table edits (block-native runs only; zero elsewhere).
+    table_merges: u64,
+    table_splits: u64,
+    table_compacts: u64,
     /// Block-pool footprint (zero on dense runs): high-water mark and
     /// total, summed across shards.
     pool_hwm: u64,
@@ -82,7 +97,7 @@ fn run_mode(
     shards: usize,
     capacity: usize,
     fleet: Option<FleetOptions>,
-    kv_pool_blocks: usize,
+    kv_pool_blocks: Option<usize>,
     clients: usize,
     requests: &[SolveRequest],
 ) -> Result<(Report, Vec<Digest>), Box<dyn std::error::Error>> {
@@ -161,8 +176,12 @@ fn run_mode(
         decode_calls: es.decode_calls,
         score_calls: es.score_calls,
         cache_util: 1.0 - es.junk_fraction(),
+        merge_calls: es.merge_calls,
         compact_calls: es.compact_calls,
         compact_reclaimed: es.compact_reclaimed,
+        table_merges: es.table_merges,
+        table_splits: es.table_splits,
+        table_compacts: es.table_compacts,
         pool_hwm: es.pool_hwm,
         pool_total: es.pool_blocks_total,
         fleet_line,
@@ -226,13 +245,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         uniques
     );
 
+    // the three dense baselines force Some(0): with `None` the pool now
+    // defaults to the manifest's exported pool sizing, which would turn
+    // the dense runs paged on block-native artifact sets
     let (seq, _) = run_mode(
         "sequential",
         "artifacts".into(),
         shards,
         capacity,
         None,
-        0,
+        Some(0),
         clients,
         &requests,
     )?;
@@ -242,17 +264,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         shards,
         capacity,
         Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
-        0,
+        Some(0),
         clients,
         &requests,
     )?;
-    let (gang, _) = run_mode(
+    let (gang, gang_digests) = run_mode(
         "gang",
         "artifacts".into(),
         shards,
         capacity,
         Some(FleetOptions { max_inflight, gang: true, gang_max_wait, ..FleetOptions::default() }),
-        0,
+        Some(0),
         clients,
         &requests,
     )?;
@@ -273,7 +295,29 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             shards,
             capacity,
             Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
-            blocks,
+            Some(blocks),
+            clients,
+            &requests,
+        )?),
+    };
+
+    // gang+native: gang batching over the manifest-default block pool —
+    // block-native attention when the artifact set exports blocktab
+    // programs. Tentpole acceptance: outcomes byte-identical to the
+    // dense gang run with zero merge/compact device calls.
+    let native = match (kv_pool_blocks, manifest.pool_blocks) {
+        (0, _) => None,
+        (_, None) => {
+            println!("\nartifacts predate block-native export (no pool_blocks); skipping gang+native run");
+            None
+        }
+        (_, Some(_)) => Some(run_mode(
+            "gang+native",
+            "artifacts".into(),
+            shards,
+            capacity,
+            Some(FleetOptions { max_inflight, gang: true, gang_max_wait, ..FleetOptions::default() }),
+            None, // manifest-default pool sizing
             clients,
             &requests,
         )?),
@@ -287,6 +331,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     let mut rows = vec![&seq, &fleet, &gang];
     if let Some((r, _)) = &paged {
+        rows.push(r);
+    }
+    if let Some((r, _)) = &native {
         rows.push(r);
     }
     for r in rows {
@@ -373,6 +420,41 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!(
             "pool total {} blocks/fleet; throughput {:.2} solves/sec vs fleet {:.2}",
             pr.pool_total, pr.rps, fleet.rps,
+        );
+    }
+
+    if let Some((nr, native_digests)) = &native {
+        let mismatches =
+            gang_digests.iter().zip(native_digests).filter(|(a, b)| a != b).count();
+        println!("\n== block-native acceptance (gang+native vs gang, manifest-default pool) ==");
+        println!(
+            "outcomes byte-identical: {} ({} of {} requests match)",
+            if mismatches == 0 { "yes" } else { "NO" },
+            requests.len() - mismatches,
+            requests.len(),
+        );
+        println!(
+            "device calls: merges {} (dense gang ran {}), compactions {} (dense gang ran {}): {}",
+            nr.merge_calls,
+            gang.merge_calls,
+            nr.compact_calls,
+            gang.compact_calls,
+            if nr.merge_calls == 0 && nr.compact_calls == 0 {
+                "ZERO (pass)"
+            } else {
+                "not zero — gather-paged fallback?"
+            },
+        );
+        println!(
+            "table edits instead: merges {}, splits {}, compactions {}; pool hwm {} of {} blocks; \
+             throughput {:.2} solves/sec vs dense gang {:.2}",
+            nr.table_merges,
+            nr.table_splits,
+            nr.table_compacts,
+            nr.pool_hwm,
+            nr.pool_total,
+            nr.rps,
+            gang.rps,
         );
     }
     Ok(())

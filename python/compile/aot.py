@@ -40,6 +40,35 @@ from . import train as T
 BATCHES = [int(x) for x in os.environ.get("ERPRM_BATCHES", "4,8,16,32,64").split(",")]
 FULLSEQ_BATCH = 8
 
+
+def pool_blocks_default(budget_bytes=None):
+    """Derive the exported block-pool size from a device-memory budget:
+    (budget - weights - dense workspace) / per-block bytes, clamped to a
+    sane range. The dense workspace term reserves room for the widest
+    dense decode/score variant's caches (prefill staging and the dense
+    fallback path both still allocate them), so the pool can't starve the
+    programs that feed it. `ERPRM_DEVICE_MEM_MB` overrides the budget.
+    The result is baked into the blocktab program shapes and written to
+    the manifest as `pool_blocks` — the Rust `--kv-pool-blocks` default."""
+    if budget_bytes is None:
+        budget_bytes = int(os.environ.get("ERPRM_DEVICE_MEM_MB", "512")) * 1024 * 1024
+    cfgs = (M.LM_CFG, M.PRM_LARGE_CFG, M.PRM_SMALL_CFG)
+    weights = sum(4 * cfg.param_count() for cfg in cfgs)
+    widest = max(BATCHES)
+    workspace = sum(
+        2  # donation double-buffer
+        * 4 * widest * cfg.n_heads * cfg.cache_len * cfg.head_dim
+        * 2 * cfg.n_layers
+        for cfg in cfgs
+    )
+    per_block = sum(
+        4 * cfg.n_heads * M.KV_BLOCK * cfg.head_dim * 2 * cfg.n_layers for cfg in cfgs
+    )
+    return max(64, min(4096, (budget_bytes - weights - workspace) // per_block))
+
+
+POOL_BLOCKS = pool_blocks_default()
+
 F32 = jnp.float32
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -216,6 +245,78 @@ def export_paged(out_dir: str, cfg: M.ModelCfg, programs: dict):
             )
 
 
+def pool_shapes(cfg: M.ModelCfg):
+    """Shapes of the 2*L shared pool arrays: POOL_BLOCKS rows plus one
+    trash row that absorbs writes from padded table entries and dead
+    slots (id POOL_BLOCKS — reads from it are always masked)."""
+    nkv = 2 * cfg.n_layers
+    return [(POOL_BLOCKS + 1, cfg.n_heads, M.KV_BLOCK, cfg.head_dim)] * nkv
+
+
+def export_blocktab(out_dir: str, cfg: M.ModelCfg, programs: dict):
+    """Block-native programs — the cache is a shared per-shard pool, so
+    cross-request merge/split/compact need no device program at all (the
+    runtime edits block tables); what remains on device is:
+
+      decode_blocktab_bN /  decode/score against (block_table, per-slot
+      score_blocktab_bN     frontier) operands; only the written frontier
+                            span is scattered back, no view round-trip
+      adopt_blocktab_bN     install a dense b=1 prefill cache into every
+                            slot's pool rows (prefill + broadcast in one)
+      copy_blocktab_bN      pool row -> pool row block copies; one program
+                            per dest width replaces the whole
+                            gather/resize/broadcast family
+
+    Pool args are donated (input_output_alias) so the shard's pool updates
+    in place."""
+    assert cfg.cache_len % M.KV_BLOCK == 0, (cfg.name, cfg.cache_len, M.KV_BLOCK)
+    nw = len(M.weight_specs(cfg))
+    nkv = 2 * cfg.n_layers
+    s = cfg.cache_len
+    nb = s // M.KV_BLOCK
+    pools = [spec(sh) for sh in pool_shapes(cfg)]
+
+    def wrap(core):
+        def fn(*args):
+            params = M.args_to_params(cfg, args[:nw])
+            return core(params, *args[nw:])
+        return fn
+
+    for b in BATCHES:
+        tab = spec((b, nb), I32)
+        programs[f"adopt_blocktab_b{b}"] = export(
+            out_dir, f"{cfg.name}_adopt_blocktab_b{b}",
+            M.kv_adopt_blocks,
+            [tab] + [spec(sh) for sh in M.kv_shapes(cfg, 1)] + pools,
+            donate=range(1 + nkv, 1 + 2 * nkv),
+        )
+        programs[f"copy_blocktab_b{b}"] = export(
+            out_dir, f"{cfg.name}_copy_blocktab_b{b}",
+            M.kv_copy_blocks, [tab, tab] + pools,
+            donate=range(2, 2 + nkv),
+        )
+        if cfg.scored:
+            programs[f"score_blocktab_b{b}"] = export(
+                out_dir, f"{cfg.name}_score_blocktab_b{b}",
+                wrap(lambda p, *a: M.prm_score_blocktab(cfg, p, *a)),
+                weight_arg_specs(cfg)
+                + [tab, spec((b,), I32), spec((b,), I32), spec((b, s), I32),
+                   spec((b, M.SCORE_BLOCK), I32)]
+                + pools,
+                donate=range(nw + 5, nw + 5 + nkv),
+            )
+        else:
+            programs[f"decode_blocktab_b{b}"] = export(
+                out_dir, f"{cfg.name}_decode_blocktab_b{b}",
+                wrap(lambda p, *a: M.lm_decode_blocktab(cfg, p, *a)),
+                weight_arg_specs(cfg)
+                + [tab, spec((b,), I32), spec((b,), I32), spec((b, s), I32),
+                   spec((b,), I32), spec((1,), F32), spec((b, 2), U32)]
+                + pools,
+                donate=range(nw + 7, nw + 7 + nkv),
+            )
+
+
 def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
     nw = len(M.weight_specs(cfg))
     nkv = 2 * cfg.n_layers
@@ -257,6 +358,7 @@ def export_lm(out_dir: str, cfg: M.ModelCfg) -> dict:
     export_merge(out_dir, cfg, programs)
     export_compact(out_dir, cfg, programs)
     export_paged(out_dir, cfg, programs)
+    export_blocktab(out_dir, cfg, programs)
     return programs
 
 
@@ -301,6 +403,7 @@ def export_prm(out_dir: str, cfg: M.ModelCfg) -> dict:
     export_merge(out_dir, cfg, programs)
     export_compact(out_dir, cfg, programs)
     export_paged(out_dir, cfg, programs)
+    export_blocktab(out_dir, cfg, programs)
     programs[f"fullseq_b{FULLSEQ_BATCH}"] = export(
         out_dir, f"{cfg.name}_fullseq_b{FULLSEQ_BATCH}",
         wrap(lambda p, t, l: M.prm_fullseq(cfg, p, t, l)),
@@ -364,6 +467,11 @@ def main():
         # it, and a manifest without it makes the Rust pool fall back to
         # dense caches
         "kv_block": M.KV_BLOCK,
+        # rows in the exported shared block-pool arrays (excluding the
+        # trash row) — geometry-derived (device memory minus weights and
+        # workspace) and the Rust --kv-pool-blocks default; absent or 0
+        # disables block-native mode
+        "pool_blocks": POOL_BLOCKS,
         "models": {
             "lm": model_manifest(
                 M.LM_CFG, lm_programs,

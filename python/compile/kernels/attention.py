@@ -106,3 +106,87 @@ def causal_attention(q, k, v, lengths=None, *, block_q=64, block_k=64):
         interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
     )(lens, qf, kf, vf)
     return out.reshape(b, h, s, d)
+
+
+def _blocktab_kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref, *, block_q, block_k):
+    """One (batch*head, q-block) grid step over a *block pool*: the k loop
+    resolves each logical K/V block to its pool row through the slot's
+    block-table row before loading the tile — the paged-attention gather,
+    done inside the kernel instead of as a device-wide pre-pass."""
+    qi = pl.program_id(1)
+    q = q_ref[...]  # [block_q, D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+
+    acc = jnp.zeros((block_q, d), jnp.float32)
+    m_i = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((block_q,), jnp.float32)
+
+    q_pos = qi * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        phys = tab_ref[kb]  # logical block kb -> pool row (per-slot table)
+        k_tile = pl.load(k_ref, (pl.dslice(phys * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(phys * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32) * scale
+        k_pos = kb * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        # Causal within the slot, and nothing at or past the slot's own
+        # frontier: gang members share the pool but not a write clock.
+        mask = (k_pos <= q_pos) & (k_pos < len_ref[0])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v_tile, preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    # Only k blocks overlapping [0, (qi+1)*block_q) can contribute.
+    n_kb = (qi * block_q + block_q + block_k - 1) // block_k
+    acc, m_i, l_i = lax.fori_loop(0, n_kb, body, (acc, m_i, l_i))
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def blocktab_attention(q, k_pool, v_pool, table, lengths, *, block_q=64, block_k=32):
+    """Block-table-indexed causal attention over a shared K/V block pool.
+
+    q: [B, H, S, D] logical-order queries; k_pool, v_pool: [P, H, block_k, D]
+    pool arrays shared across slots; table: [B, S/block_k] i32 pool row per
+    logical block; lengths: [B] per-slot frontier (attendable prefix).
+    Accumulation order matches `causal_attention` at the same block sizes,
+    so on a pool laid out from a dense cache the outputs agree bitwise.
+    """
+    b, h, s, d = q.shape
+    p1 = k_pool.shape[0]
+    block_q = min(block_q, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    assert k_pool.shape == v_pool.shape == (p1, h, block_k, d)
+    assert table.shape == (b, s // block_k), (table.shape, b, s // block_k)
+
+    qf = q.reshape(b * h, s, d)
+    # Pool rows flattened per head: row p of head hh lives at
+    # [hh, p*block_k : (p+1)*block_k) — the kernel's dslice coordinates.
+    kf = k_pool.transpose(1, 0, 2, 3).reshape(h, p1 * block_k, d)
+    vf = v_pool.transpose(1, 0, 2, 3).reshape(h, p1 * block_k, d)
+    tabs = jnp.repeat(table.astype(jnp.int32), h, axis=0)  # [b*h, S/block_k]
+    lens = jnp.repeat(lengths.astype(jnp.int32), h)
+
+    kernel = functools.partial(_blocktab_kernel, block_q=block_q, block_k=block_k)
+    nb = s // block_k
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),  # per-slot frontier
+            pl.BlockSpec((None, nb), lambda i, j: (i, 0)),  # block-table row
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),  # q tile
+            pl.BlockSpec((None, p1 * block_k, d), lambda i, j: (i % h, 0, 0)),  # k pool, head plane
+            pl.BlockSpec((None, p1 * block_k, d), lambda i, j: (i % h, 0, 0)),  # v pool, head plane
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(lens, tabs, qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -20,6 +20,11 @@ Entry points (all pure, shapes static per export variant):
                   kv_gather_blocks / kv_append_block permute or fill
                   blocks, lm_decode_paged / prm_score_paged wrap the dense
                   block stack in view/store block gathers
+  block-native    the cache lives in one shared pool array per shard:
+                  lm_decode_blocktab / prm_score_blocktab take
+                  (block_table, per-slot frontier) operands and write only
+                  the frontier span; kv_adopt_blocks installs prefill
+                  output, kv_copy_blocks moves blocks inside the pool
 
 KV cache discipline (the L3 contract; see rust/src/runtime/):
   * The cache is 2*L separate arrays [B, H, S, D] (k and v per layer) —
@@ -232,7 +237,7 @@ def prm_prefill(cfg: ModelCfg, params, tokens, lengths):
 # ----------------------------------------------------------------- decode
 
 
-def _block_stack(cfg, params, kvs, pos_phys, pos_log, valid, n_tokens, mode, tokens=None, temp=None, keys=None, keys_init_tok=None):
+def _block_stack(cfg, params, kvs, pos_phys, pos_log, valid, n_tokens, mode, tokens=None, temp=None, keys=None, keys_init_tok=None, frontier=None):
     """Shared autoregressive block driver as a `lax.scan`.
 
     One scan step = one token through the whole stack: embed, per-layer
@@ -247,12 +252,21 @@ def _block_stack(cfg, params, kvs, pos_phys, pos_log, valid, n_tokens, mode, tok
 
     Attention mask per sub-step s: `valid` (committed clean positions)
     OR physical positions [pos_phys, pos_phys+s] (this block's own prefix).
+
+    `frontier` ([B] i32) selects the block-native write discipline: each
+    slot writes at its *own* frontier (a where-select at per-slot positions
+    instead of the scalar dynamic_update_slice), and the block's own-prefix
+    mask window is per-slot too. With a uniform frontier the computed
+    values are bitwise-identical to the scalar path — every cell holds the
+    same numbers, and the attention contractions are the same ops over
+    elementwise-equal arrays — which is what lets gang members keep their
+    own pacing (no union gap) without perturbing solo outcomes.
     Returns (outputs [B, T], new kv list).
     """
     bsz = valid.shape[0]
     s = cfg.cache_len
     scale = 1.0 / math.sqrt(cfg.head_dim)
-    p0 = pos_phys[0]
+    p0 = pos_phys[0] if frontier is None else None
     idx = lax.broadcasted_iota(jnp.int32, (1, s), 1)  # [1, S]
     vmask = valid > 0  # [B, S]
     t_eff = jnp.maximum(temp[0], 1e-2) if temp is not None else None
@@ -263,8 +277,13 @@ def _block_stack(cfg, params, kvs, pos_phys, pos_log, valid, n_tokens, mode, tok
             tok = tokens[:, step]
         h = params["emb"][tok]  # [B, d]
         logpos = pos_log + step
-        phys = p0 + step
-        mask = vmask | ((idx >= p0) & (idx <= phys))  # [B, S]
+        if frontier is None:
+            phys = p0 + step
+            mask = vmask | ((idx >= p0) & (idx <= phys))  # [B, S]
+        else:
+            wpos = frontier + step  # [B] per-slot write positions
+            mask = vmask | ((idx >= frontier[:, None]) & (idx <= wpos[:, None]))
+            hit = (idx == wpos[:, None])[:, None, :, None]  # [B, 1, S, 1]
         new_kvs = list(kvs)
         for i in range(cfg.n_layers):
             x = layer_norm(h, params[f"l{i}.ln1_s"], params[f"l{i}.ln1_b"])
@@ -273,8 +292,12 @@ def _block_stack(cfg, params, kvs, pos_phys, pos_log, valid, n_tokens, mode, tok
             v = (x @ params[f"l{i}.wv"]).reshape(bsz, cfg.n_heads, cfg.head_dim)
             q = rope(q[:, None], logpos[:, None])[:, 0]
             k = rope(k[:, None], logpos[:, None])[:, 0]
-            kk = lax.dynamic_update_slice(new_kvs[2 * i], k[:, :, None, :], (0, 0, phys, 0))
-            vv = lax.dynamic_update_slice(new_kvs[2 * i + 1], v[:, :, None, :], (0, 0, phys, 0))
+            if frontier is None:
+                kk = lax.dynamic_update_slice(new_kvs[2 * i], k[:, :, None, :], (0, 0, phys, 0))
+                vv = lax.dynamic_update_slice(new_kvs[2 * i + 1], v[:, :, None, :], (0, 0, phys, 0))
+            else:
+                kk = jnp.where(hit, k[:, :, None, :], new_kvs[2 * i])
+                vv = jnp.where(hit, v[:, :, None, :], new_kvs[2 * i + 1])
             new_kvs[2 * i] = kk
             new_kvs[2 * i + 1] = vv
             sc = jnp.einsum("bhd,bhsd->bhs", q, kk) * scale
@@ -460,6 +483,109 @@ def prm_score_paged(cfg: ModelCfg, params, view_idx, store_idx, pos_phys, pos_lo
         mode="score", tokens=tokens,
     )
     return (outs, *(paged_view(store_idx, kv) for kv in new_kvs))
+
+
+# ----------------------------------------------------- block-native (tables)
+#
+# The gather-bracketed paged programs above still materialize the dense
+# view on every call and force the runtime to keep one device cache per
+# request. Block-native programs instead take the shared per-shard block
+# pool itself as an argument — 2*L arrays [P+1, H, KV_BLOCK, D], where row
+# P is a trash block that absorbs writes from padded table entries and
+# dead slots — plus a per-slot block table and a *per-slot* write
+# frontier. Cross-request merge/split then needs no device call at all
+# (the Rust side concatenates table rows), and each gang member keeps its
+# own frontier, so the union junk gap the compaction machinery existed to
+# reclaim is never created.
+
+
+def pool_view(table, pool):
+    """Gather one logical-dense view [B, H, S, D] out of a shared block
+    pool [P+1, H, KV_BLOCK, D]: logical block j of slot b is pool row
+    `table[b, j]`. A pure `take` — bitwise-exact, like `paged_view`."""
+    b, nb = table.shape
+    _, h, kb, d = pool.shape
+    blocks = jnp.take(pool, table, axis=0)  # [B, nb, H, KB, D]
+    return blocks.transpose(0, 2, 1, 3, 4).reshape(b, h, nb * kb, d)
+
+
+def _pool_store_span(pool, table, frontier, view, n):
+    """Scatter view positions [frontier_b, frontier_b + n) of every slot
+    back into its pool rows — the only cells a block call writes, so the
+    full-cache store gather of the paged path disappears. Slots whose
+    table entries point at the trash row scatter harmlessly there."""
+    b, h, s, d = view.shape
+    for t in range(n):
+        p = frontier + t  # [B]
+        blk = jnp.take_along_axis(table, (p // KV_BLOCK)[:, None], axis=1)[:, 0]
+        off = p % KV_BLOCK
+        span = jnp.broadcast_to(p[:, None, None, None], (b, h, 1, d))
+        vals = jnp.take_along_axis(view, span, axis=2)[:, :, 0, :]  # [B, H, D]
+        pool = pool.at[blk, :, off, :].set(vals)
+    return pool
+
+
+def lm_decode_blocktab(cfg: ModelCfg, params, table, frontier, pos_log, valid, tok, temp, keys, *pools):
+    """Block-native decode. table: [B, S/KV_BLOCK] i32 pool row ids
+    (trash-padded past each slot's allocation); frontier: [B] i32 per-slot
+    write frontier; remaining args as `lm_decode_block`; `pools` are the
+    shared 2*L pool arrays (donated). With a uniform frontier the sampled
+    tokens and written cells are bitwise-identical to the dense program."""
+    views = [pool_view(table, p) for p in pools]
+    outs, new_views = _block_stack(
+        cfg, params, views, None, pos_log, valid, DECODE_BLOCK,
+        mode="decode", temp=temp, keys=keys, keys_init_tok=tok, frontier=frontier,
+    )
+    new_pools = [
+        _pool_store_span(p, table, frontier, v, DECODE_BLOCK)
+        for p, v in zip(pools, new_views)
+    ]
+    return (outs, *new_pools)
+
+
+def prm_score_blocktab(cfg: ModelCfg, params, table, frontier, pos_log, valid, tokens, *pools):
+    """Block-native analogue of `prm_score_block` (see `lm_decode_blocktab`)."""
+    views = [pool_view(table, p) for p in pools]
+    outs, new_views = _block_stack(
+        cfg, params, views, None, pos_log, valid, SCORE_BLOCK,
+        mode="score", tokens=tokens, frontier=frontier,
+    )
+    new_pools = [
+        _pool_store_span(p, table, frontier, v, SCORE_BLOCK)
+        for p, v in zip(pools, new_views)
+    ]
+    return (outs, *new_pools)
+
+
+def kv_adopt_blocks(table, *arrays):
+    """Install a dense b=1 cache (the prefill output) into pool rows for
+    every slot: `pool[table[s, j]] = dense_block_j` — prefill + broadcast
+    in one scatter. `arrays` is 2*L dense caches [1, H, S, D] followed by
+    the 2*L pool arrays [P+1, H, KV_BLOCK, D] (donated)."""
+    n = len(arrays) // 2
+    assert len(arrays) == 2 * n, "kv_adopt_blocks wants dense caches then pools"
+    b, nb = table.shape
+    out = []
+    for kv, pool in zip(arrays[:n], arrays[n:]):
+        _, h, s, d = kv.shape
+        blocks = kv[0].reshape(h, s // KV_BLOCK, KV_BLOCK, d).transpose(1, 0, 2, 3)
+        src = jnp.broadcast_to(blocks[None], (b, nb, h, KV_BLOCK, d))
+        out.append(pool.at[table.reshape(-1)].set(src.reshape(b * nb, h, KV_BLOCK, d)))
+    return tuple(out)
+
+
+def kv_copy_blocks(src_table, dst_table, *pools):
+    """Physical block copy inside the pool: `pool[dst_table[s, j]] =
+    pool[src_table[s, j]]`. One program per batch variant replaces the
+    whole gather/resize family in block-native mode — permutation, beam
+    expansion, and cross-variant resize are all just host-chosen source
+    rows, since the pool is shared across every request on the shard."""
+    flat_src, flat_dst = src_table.reshape(-1), dst_table.reshape(-1)
+    out = []
+    for pool in pools:
+        vals = jnp.take(pool, flat_src, axis=0)
+        out.append(pool.at[flat_dst].set(vals))
+    return tuple(out)
 
 
 def kv_merge(idx, *kvs):

@@ -7,6 +7,17 @@ What the Rust block pool depends on:
     dense programs — the paged runtime must not perturb outcomes
   * export_paged registers the right manifest programs per model kind, and
     the lowered HLO carries input_output_alias for the donated caches
+
+Block-native contract (the device half of table-edit merge/split/compact):
+  * decode_blocktab/score_blocktab read and write a *shared* pool array
+    through (block_table, per-slot frontier) operands and are bitwise-equal
+    to both the dense and the gather-bracketed paged programs
+  * slot rows are independent: a merged (gang) call's rows equal the solo
+    calls' rows bitwise, even at diverged frontiers — which is what makes
+    merge/split pure table edits on the Rust side
+  * adopt/copy programs have pure gather/scatter semantics over pool rows
+  * export_blocktab registers the manifest programs and pool geometry
+    (`pool_blocks`) that rust/src/runtime keys block-native mode on
 """
 
 import os
@@ -170,6 +181,211 @@ def test_decode_paged_matches_dense_bitwise(lm):
         np.testing.assert_array_equal(np.asarray(M.paged_view(t, got)), np.asarray(want))
 
 
+# ------------------------------------------------------------- block-native
+
+
+def _alloc_tables(batch, nb, seed=0):
+    """Disjoint per-slot block tables over a pool of batch*nb rows (+1
+    trash row at id batch*nb), in a random allocation order."""
+    rng = np.random.default_rng(seed)
+    t = rng.permutation(batch * nb).reshape(batch, nb).astype(np.int32)
+    return jnp.array(t), batch * nb + 1
+
+
+def _pool_from_dense(table, dense, p1):
+    """Lay a dense [B, H, S, D] cache out into pool rows per `table`."""
+    bsz, h, s, d = dense.shape
+    nb = s // M.KV_BLOCK
+    pool = np.zeros((p1, h, M.KV_BLOCK, d), np.float32)
+    blocks = np.asarray(dense).reshape(bsz, h, nb, M.KV_BLOCK, d).transpose(0, 2, 1, 3, 4)
+    pool[np.asarray(table).reshape(-1)] = blocks.reshape(bsz * nb, h, M.KV_BLOCK, d)
+    return jnp.array(pool)
+
+
+def test_blocktab_attention_matches_gathered_dense():
+    """The Pallas block-table kernel (gather per K/V block inside the loop)
+    agrees with the dense kernel run on the gathered view — same block
+    sizes, same online-softmax accumulation order, so bitwise."""
+    from compile.kernels.attention import blocktab_attention, causal_attention
+
+    B, H, S, D = 2, 2, 128, 8
+    nb = S // M.KV_BLOCK
+    rng = np.random.default_rng(0)
+    q = jnp.array(rng.standard_normal((B, H, S, D)), jnp.float32)
+    dense_k = jnp.array(rng.standard_normal((B, H, S, D)), jnp.float32)
+    dense_v = jnp.array(rng.standard_normal((B, H, S, D)), jnp.float32)
+    lengths = jnp.array([S // 2 + 3, S - 7], jnp.int32)
+    table, p1 = _alloc_tables(B, nb, seed=2)
+    k_pool = _pool_from_dense(table, dense_k, p1)
+    v_pool = _pool_from_dense(table, dense_v, p1)
+
+    got = blocktab_attention(
+        q, k_pool, v_pool, table, lengths, block_q=M.KV_BLOCK, block_k=M.KV_BLOCK
+    )
+    want = causal_attention(
+        q, dense_k, dense_v, lengths, block_q=M.KV_BLOCK, block_k=M.KV_BLOCK
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_decode_blocktab_matches_dense_and_paged_bitwise(lm):
+    """Same tokens and same written cells as the dense program AND the
+    gather-bracketed paged program — the pin that lets the Rust runtime
+    swap per-request caches for shared-pool tables without perturbing a
+    single solve."""
+    cfg, params = lm
+    p = _problem(7)
+    prompt = p.prompt_tokens()
+    toks, lens = _pad_prompt(prompt)
+    out = M.lm_prefill(cfg, params, toks, lens)
+    B = 4
+    dense = list(M.kv_broadcast(B, *out[1:]))
+    S, nb = cfg.cache_len, cfg.cache_len // M.KV_BLOCK
+    valid = np.zeros((B, S), np.int32)
+    valid[:, : len(prompt)] = 1
+    args = (
+        jnp.full((B,), len(prompt), jnp.int32),
+        jnp.array(valid),
+        jnp.full((B,), g.SEP, jnp.int32),
+        jnp.array([0.7], jnp.float32),
+        jnp.arange(B * 2, dtype=jnp.uint32).reshape(B, 2),
+    )
+    out_d = M.lm_decode_block(cfg, params, jnp.array([g.PROMPT_PAD], jnp.int32), *args, *dense)
+    t, inv = _block_perms(B, nb, seed=11)
+    paged = [M.paged_view(inv, kv) for kv in dense]
+    out_p = M.lm_decode_paged(cfg, params, t, inv, jnp.array([g.PROMPT_PAD], jnp.int32), *args, *paged)
+
+    table, p1 = _alloc_tables(B, nb, seed=5)
+    pools = [_pool_from_dense(table, kv, p1) for kv in dense]
+    frontier = jnp.full((B,), g.PROMPT_PAD, jnp.int32)
+    out_b = M.lm_decode_blocktab(cfg, params, table, frontier, *args, *pools)
+
+    np.testing.assert_array_equal(np.asarray(out_b[0]), np.asarray(out_d[0]))
+    np.testing.assert_array_equal(np.asarray(out_b[0]), np.asarray(out_p[0]))
+    for got_pool, want_dense, got_paged in zip(out_b[1:], out_d[1:], out_p[1:]):
+        np.testing.assert_array_equal(
+            np.asarray(M.pool_view(table, got_pool)), np.asarray(want_dense)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(M.paged_view(t, got_paged)), np.asarray(want_dense)
+        )
+
+
+def test_score_blocktab_matches_dense_bitwise(prm):
+    cfg, params = prm
+    p = _problem(5, "math500-s")
+    prompt, sol = p.prompt_tokens(), g.solution_tokens(p)
+    toksP, lensP = _pad_prompt(prompt)
+    kvs1 = M.prm_prefill(cfg, params, toksP, lensP)
+    B = 2
+    dense = list(M.kv_broadcast(B, *kvs1))
+    S, nb = cfg.cache_len, cfg.cache_len // M.KV_BLOCK
+    valid = np.zeros((B, S), np.int32)
+    valid[:, : len(prompt)] = 1
+    T = M.SCORE_BLOCK
+    blk = (sol[:T] + [g.PAD] * T)[:T]
+    args = (
+        jnp.full((B,), len(prompt), jnp.int32),
+        jnp.array(valid),
+        jnp.array([blk] * B, jnp.int32),
+    )
+    out_d = M.prm_score_block(cfg, params, jnp.array([g.PROMPT_PAD], jnp.int32), *args, *dense)
+
+    table, p1 = _alloc_tables(B, nb, seed=9)
+    pools = [_pool_from_dense(table, kv, p1) for kv in dense]
+    frontier = jnp.full((B,), g.PROMPT_PAD, jnp.int32)
+    out_b = M.prm_score_blocktab(cfg, params, table, frontier, *args, *pools)
+    np.testing.assert_array_equal(np.asarray(out_b[0]), np.asarray(out_d[0]))
+    for got, want in zip(out_b[1:], out_d[1:]):
+        np.testing.assert_array_equal(
+            np.asarray(M.pool_view(table, got)), np.asarray(want)
+        )
+
+
+def test_blocktab_gang_rows_match_solo(lm):
+    """Two requests at *diverged* frontiers share one merged call: every
+    merged row must equal its solo row bitwise, and each request's pool
+    writes must land exactly where its solo call would put them. This is
+    the device-side fact that makes gang merge/split pure table edits."""
+    cfg, params = lm
+    p = _problem(3)
+    prompt = p.prompt_tokens()
+    toks, lens = _pad_prompt(prompt)
+    out = M.lm_prefill(cfg, params, toks, lens)
+    S, nb = cfg.cache_len, cfg.cache_len // M.KV_BLOCK
+
+    valid2 = np.zeros((2, S), np.int32)
+    valid2[:, : len(prompt)] = 1
+    mk_args = lambda keys: (
+        jnp.full((2,), len(prompt), jnp.int32),
+        jnp.array(valid2),
+        jnp.full((2,), g.SEP, jnp.int32),
+        jnp.array([0.7], jnp.float32),
+        keys,
+    )
+    keys_x = jnp.arange(4, dtype=jnp.uint32).reshape(2, 2)
+    keys_y = jnp.arange(100, 104, dtype=jnp.uint32).reshape(2, 2)
+    # request X at the prompt frontier; request Y four junk positions
+    # later, as if it had idled a round (positions [16, 20) uncommitted)
+    fx, fy = g.PROMPT_PAD, g.PROMPT_PAD + 4
+
+    table4, p1 = _alloc_tables(4, nb, seed=13)
+    tab_x, tab_y = table4[:2], table4[2:]
+    pools0 = [_pool_from_dense(table4, kv, p1) for kv in M.kv_broadcast(4, *out[1:])]
+
+    solo_x = M.lm_decode_blocktab(
+        cfg, params, tab_x, jnp.full((2,), fx, jnp.int32), *mk_args(keys_x), *pools0)
+    solo_y = M.lm_decode_blocktab(
+        cfg, params, tab_y, jnp.full((2,), fy, jnp.int32), *mk_args(keys_y), *pools0)
+
+    frontier = jnp.array([fx, fx, fy, fy], jnp.int32)
+    valid4 = np.concatenate([valid2, valid2])
+    merged = M.lm_decode_blocktab(
+        cfg, params, table4, frontier,
+        jnp.full((4,), len(prompt), jnp.int32), jnp.array(valid4),
+        jnp.full((4,), g.SEP, jnp.int32), jnp.array([0.7], jnp.float32),
+        jnp.concatenate([keys_x, keys_y]), *pools0)
+
+    np.testing.assert_array_equal(np.asarray(merged[0][:2]), np.asarray(solo_x[0]))
+    np.testing.assert_array_equal(np.asarray(merged[0][2:]), np.asarray(solo_y[0]))
+    for mp, sx, sy in zip(merged[1:], solo_x[1:], solo_y[1:]):
+        np.testing.assert_array_equal(
+            np.asarray(M.pool_view(tab_x, mp)), np.asarray(M.pool_view(tab_x, sx)))
+        np.testing.assert_array_equal(
+            np.asarray(M.pool_view(tab_y, mp)), np.asarray(M.pool_view(tab_y, sy)))
+
+
+def test_kv_adopt_blocks_installs_prefix_everywhere():
+    H, D, nb = 2, 3, 2
+    S = nb * M.KV_BLOCK
+    rng = np.random.default_rng(4)
+    dense = jnp.array(rng.standard_normal((1, H, S, D)), jnp.float32)
+    B = 3
+    table, p1 = _alloc_tables(B, nb, seed=1)
+    pools = [jnp.zeros((p1, H, M.KV_BLOCK, D), jnp.float32)]
+    (out,) = M.kv_adopt_blocks(table, dense, *pools)
+    view = M.pool_view(table, out)
+    for b in range(B):
+        np.testing.assert_array_equal(np.asarray(view[b]), np.asarray(dense[0]))
+
+
+def test_kv_copy_blocks_moves_rows():
+    H, D, nb = 1, 2, 2
+    B = 2
+    p1 = 2 * B * nb + 1
+    rng = np.random.default_rng(6)
+    pool = jnp.array(rng.standard_normal((p1, H, M.KV_BLOCK, D)), jnp.float32)
+    src = jnp.array([[0, 1], [2, 3]], jnp.int32)
+    dst = jnp.array([[4, 5], [6, 7]], jnp.int32)
+    (out,) = M.kv_copy_blocks(src, dst, pool)
+    np.testing.assert_array_equal(
+        np.asarray(M.pool_view(dst, out)), np.asarray(M.pool_view(src, pool))
+    )
+    # untouched rows (including the trash row) are preserved
+    np.testing.assert_array_equal(np.asarray(out[:4]), np.asarray(pool[:4]))
+    np.testing.assert_array_equal(np.asarray(out[8:]), np.asarray(pool[8:]))
+
+
 # ----------------------------------------------------------------- programs
 
 
@@ -235,3 +451,78 @@ def test_manifest_carries_kv_block():
 
     assert M.KV_BLOCK > 0
     assert '"kv_block": M.KV_BLOCK' in inspect.getsource(aot.main)
+
+
+def test_blocktab_program_lowers_with_donated_pool(tmp_path, monkeypatch):
+    """score_blocktab_bN takes one [N, S/KV_BLOCK] table + a per-slot
+    frontier + the dense score args + donated *pool* arrays, and the
+    aliasing survives lowering."""
+    monkeypatch.setattr(aot, "POOL_BLOCKS", 32)
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    cfg = M.PRM_SMALL_CFG
+    b = 4
+    nw = len(M.weight_specs(cfg))
+    nkv = 2 * cfg.n_layers
+    s, nb = cfg.cache_len, cfg.cache_len // M.KV_BLOCK
+    pools = [aot.spec(sh) for sh in aot.pool_shapes(cfg)]
+
+    def fn(*args):
+        params = M.args_to_params(cfg, args[:nw])
+        return M.prm_score_blocktab(cfg, params, *args[nw:])
+
+    p = aot.export(
+        str(tmp_path), f"toy_score_blocktab_b{b}", fn,
+        [aot.spec(sh) for _, sh in M.weight_specs(cfg)]
+        + [aot.spec((b, nb), jnp.int32), aot.spec((b,), jnp.int32),
+           aot.spec((b,), jnp.int32), aot.spec((b, s), jnp.int32),
+           aot.spec((b, M.SCORE_BLOCK), jnp.int32)]
+        + pools,
+        donate=range(nw + 5, nw + 5 + nkv),
+    )
+    txt = open(p).read()
+    assert "HloModule" in txt and "ENTRY" in txt
+    h, d = cfg.n_heads, cfg.head_dim
+    assert f"s32[{b},{nb}]" in txt  # block-table param
+    assert f"f32[33,{h},{M.KV_BLOCK},{d}]" in txt  # pool params/outputs (+1 trash row)
+    assert "input_output_alias" in txt, "pool donation must survive lowering"
+
+
+@pytest.mark.parametrize(
+    "cfg", [M.LM_CFG, M.PRM_LARGE_CFG, M.PRM_SMALL_CFG], ids=lambda c: c.name
+)
+def test_export_blocktab_registers_manifest_entries(tmp_path, monkeypatch, cfg):
+    """Every model gets adopt/copy; the LM gets decode_blocktab, the PRMs
+    score_blocktab — the names rust/src/runtime keys block-native mode on."""
+    monkeypatch.setattr(aot, "BATCHES", [4])  # one variant keeps this fast
+    monkeypatch.setattr(aot, "POOL_BLOCKS", 32)
+    os.makedirs(tmp_path / "hlo", exist_ok=True)
+    programs = {}
+    aot.export_blocktab(str(tmp_path), cfg, programs)
+    assert "adopt_blocktab_b4" in programs
+    assert "copy_blocktab_b4" in programs
+    if cfg.scored:
+        assert "score_blocktab_b4" in programs
+        assert "decode_blocktab_b4" not in programs
+    else:
+        assert "decode_blocktab_b4" in programs
+        assert "score_blocktab_b4" not in programs
+    for path in programs.values():
+        assert os.path.exists(path)
+
+
+def test_manifest_carries_pool_blocks():
+    """Block-native mode keys on a positive top-level pool_blocks whose
+    value matches the exported pool shapes; main() must write it."""
+    import inspect
+
+    assert aot.POOL_BLOCKS > 0
+    assert '"pool_blocks": POOL_BLOCKS' in inspect.getsource(aot.main)
+
+
+def test_pool_blocks_default_tracks_memory_budget():
+    """Geometry-derived sizing: more device memory -> more blocks, floor
+    and ceiling respected, and the floor survives an impossible budget."""
+    small = aot.pool_blocks_default(budget_bytes=128 * 1024 * 1024)
+    big = aot.pool_blocks_default(budget_bytes=1024 * 1024 * 1024)
+    assert 64 <= small <= big <= 4096
+    assert aot.pool_blocks_default(budget_bytes=0) == 64

@@ -41,6 +41,17 @@
 //! re-compacts junk-heavy member caches before each chain-merge
 //! (`compact_bN` programs) so the union gap — the cache-pacing tax the
 //! module doc above describes — is reclaimed instead of compounding.
+//!
+//! On a *block-native* engine (attention kernels index the shared block
+//! pool through per-call block tables) the entire gang assembly
+//! collapses into host bookkeeping: `kv_merge` concatenates the members'
+//! block tables, `kv_split` forks each member's slice back out, and the
+//! merged call is just `decode_blocktab_bN` over the concatenated table
+//! — zero merge/split device invocations, no union-gap copies, and no
+//! pre-compaction (per-slot frontiers mean a merged gang never forms a
+//! junk gap to reclaim). The [`planner::WallModel`] reflects this by
+//! zeroing its merge/split cost terms, so joins are judged on padding
+//! alone.
 
 pub mod planner;
 pub mod stats;

@@ -29,6 +29,15 @@
 //! output rows. Per-slot math in the exported programs never crosses
 //! rows, so each member's results are the ones its solo call would have
 //! produced.
+//!
+//! On a *block-native* engine the entire assembly collapses into host
+//! bookkeeping: `kv_merge` concatenates the members' block tables,
+//! `kv_split` forks each member's slice back out, and the shared call
+//! indexes the device pool through the union table — zero merge/split
+//! device invocations, no union-gap copies, and no pre-compaction (each
+//! slot keeps its own write frontier, so the laggard gap never forms).
+//! The [`WallModel`] reflects this by zeroing its merge/split terms,
+//! which widens the set of joins that pay.
 
 use crate::coordinator::task::{GangOut, IntentKind, SolveTask};
 use crate::runtime::{Engine, EngineStats, KvSet};
@@ -126,7 +135,18 @@ impl WallModel {
     /// zero, which attributes no fixed per-call overhead, rejects every
     /// join, and would then never collect the wider-width samples that
     /// could correct it. Accept-all is the right prior for both.
-    pub fn from_stats(stats: &EngineStats, kind: IntentKind) -> Option<WallModel> {
+    ///
+    /// `block_native` engines pay no merge or split device calls — gang
+    /// assembly and teardown are host block-table edits — so those terms
+    /// are zero and `join_pays` reduces to the pure widening-vs-solo-call
+    /// trade. (The engine's `gather_wall_s` still accumulates from
+    /// `copy_blocktab` beam-divergence copies, which would otherwise leak
+    /// into the split term and veto gangs for a cost they never pay.)
+    pub fn from_stats(
+        stats: &EngineStats,
+        kind: IntentKind,
+        block_native: bool,
+    ) -> Option<WallModel> {
         let map = match kind {
             IntentKind::Decode => &stats.decode_wall,
             IntentKind::Score => &stats.score_wall,
@@ -141,6 +161,9 @@ impl WallModel {
             return None;
         }
         let (base_s, slope_s) = fit_line(&samples);
+        if block_native {
+            return Some(WallModel { base_s, slope_s, merge_step_s: 0.0, split_step_s: 0.0 });
+        }
         let merge_step_s = if stats.merge_calls > 0 {
             stats.merge_wall_s / stats.merge_calls as f64
         } else {
@@ -571,10 +594,10 @@ mod tests {
     fn wall_model_calibrates_from_engine_stats() {
         use crate::runtime::CallWall;
         let mut s = EngineStats::default();
-        assert!(WallModel::from_stats(&s, IntentKind::Decode).is_none(), "cold start");
+        assert!(WallModel::from_stats(&s, IntentKind::Decode, false).is_none(), "cold start");
         s.decode_wall.insert(8, CallWall { calls: 4, wall_s: 0.4 });
         assert!(
-            WallModel::from_stats(&s, IntentKind::Decode).is_none(),
+            WallModel::from_stats(&s, IntentKind::Decode, false).is_none(),
             "one width cannot separate overhead from per-slot cost; a proportional model \
              would veto every join and starve itself of wider samples forever"
         );
@@ -583,16 +606,42 @@ mod tests {
         s.merge_wall_s = 0.02;
         s.gather_calls = 4;
         s.gather_wall_s = 0.02;
-        let m = WallModel::from_stats(&s, IntentKind::Decode).unwrap();
+        let m = WallModel::from_stats(&s, IntentKind::Decode, false).unwrap();
         assert!((m.call_s(8) - 0.1).abs() < 1e-12);
         assert!((m.call_s(16) - 0.2).abs() < 1e-12);
         assert!((m.merge_step_s - 0.01).abs() < 1e-12);
         assert!((m.split_step_s - 0.005).abs() < 1e-12);
         assert!(
-            WallModel::from_stats(&s, IntentKind::Score).is_none(),
+            WallModel::from_stats(&s, IntentKind::Score, false).is_none(),
             "score side has no samples yet"
         );
-        assert!(WallModel::from_stats(&s, IntentKind::Compact).is_none());
+        assert!(WallModel::from_stats(&s, IntentKind::Compact, false).is_none());
+    }
+
+    #[test]
+    fn block_native_model_drops_merge_and_split_terms() {
+        use crate::runtime::CallWall;
+        let mut s = EngineStats::default();
+        // two points pin the line exactly: base 0.1s, slope 0.00625 s/slot
+        s.decode_wall.insert(8, CallWall { calls: 4, wall_s: 0.6 });
+        s.decode_wall.insert(16, CallWall { calls: 2, wall_s: 0.4 });
+        // heavy observed merge/gather walls (e.g. beam-divergence copies)
+        s.merge_calls = 1;
+        s.merge_wall_s = 0.5;
+        s.gather_calls = 1;
+        s.gather_wall_s = 0.5;
+        let m = WallModel::from_stats(&s, IntentKind::Decode, true).unwrap();
+        assert!((m.merge_step_s - 0.0).abs() < 1e-12, "table merges are free");
+        assert!((m.split_step_s - 0.0).abs() < 1e-12, "table splits are free");
+        // the same fitted call curve as the non-native model
+        assert!((m.call_s(8) - 0.15).abs() < 1e-12);
+        assert!((m.base_s() - 0.1).abs() < 1e-12);
+        // with free assembly, widening 8 -> 16 costs 0.05s to save a
+        // 0.15s solo call; the device-merge model's 1.5s of merge+split
+        // overhead vetoes the same join
+        let veto = WallModel::from_stats(&s, IntentKind::Decode, false).unwrap();
+        assert!(!veto.join_pays(8, 8, 16, true), "0.5s merge dwarfs a 0.15s solo call");
+        assert!(m.join_pays(8, 8, 16, true), "table edits make the same join pay");
     }
 
     #[test]

@@ -207,8 +207,10 @@ pub struct ServerConfig {
     /// fleet coalescer only sees duplicates placed on its own shard).
     pub singleflight: bool,
     /// Paged-KV block pool size per shard, in blocks of the manifest's
-    /// `kv_block` tokens; 0 = dense per-slot caches (also the forced
-    /// fallback on artifact sets exported before paging existed).
+    /// `kv_block` tokens; 0 = defer to the manifest's exported
+    /// `pool_blocks` sizing, falling back to dense per-slot caches when
+    /// the artifact set predates paged export. An explicit
+    /// `--kv-pool-blocks 0` on the CLI still forces dense.
     pub kv_pool_blocks: usize,
 }
 
@@ -444,7 +446,7 @@ mod tests {
         assert_eq!(d.max_inflight, 8);
         assert!(!d.gang, "gang batching is opt-in on top of the fleet");
         assert_eq!(d.deadline_ms, 0, "no deadline unless configured");
-        assert_eq!(d.kv_pool_blocks, 0, "paged KV is opt-in; dense is the fallback");
+        assert_eq!(d.kv_pool_blocks, 0, "0 = defer to the manifest's pool sizing");
         let j = Json::parse(
             r#"{"server": {"fleet": true, "max_inflight": 16, "gang": true, "deadline_ms": 2000, "kv_pool_blocks": 512}}"#,
         )

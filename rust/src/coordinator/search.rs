@@ -131,9 +131,12 @@ pub(crate) enum DecodeStage {
 /// `block` but post-compaction capacity (`remaining + reclaimable`) can
 /// — the same headroom arithmetic `score_budget_ok` promises — and
 /// proactive when the junk share crossed `threshold` and the reclaimable
-/// gap pays for the device call. Runs per scheduler tick, so it
-/// early-outs before touching the bitmask whenever neither trigger could
-/// possibly fire, and takes one fused scan otherwise.
+/// gap pays for the compaction. Reclaim is [`KvSet::reclaimable`], the
+/// mode-aware figure: the dense-repack number on gather-paged/dense
+/// caches, the junk-tail number on block-native ones — promising repack
+/// reclaim that a table truncation cannot deliver would livelock the
+/// rescue trigger. Runs per scheduler tick, so it early-outs before
+/// touching the bitmask whenever neither trigger could possibly fire.
 fn wants_compact(kv: &KvSet, block: usize, enabled: bool, threshold: f32) -> bool {
     if !enabled {
         return false;
@@ -144,14 +147,9 @@ fn wants_compact(kv: &KvSet, block: usize, enabled: bool, threshold: f32) -> boo
     if kv.remaining() >= block && kv.pos_phys < COMPACT_MIN_GAIN_BLOCKS * block {
         return false;
     }
-    let (spent, valid_total, max_dense) = kv.junk_stats();
-    let reclaimable = kv.pos_phys.saturating_sub(max_dense);
+    let reclaimable = kv.reclaimable();
     let rescue = kv.remaining() < block && kv.remaining() + reclaimable >= block;
-    let junk = if spent == 0 {
-        0.0
-    } else {
-        (spent - valid_total) as f64 / spent as f64
-    };
+    let junk = kv.junk_fraction();
     let proactive =
         junk >= threshold as f64 && reclaimable >= COMPACT_MIN_GAIN_BLOCKS * block;
     rescue || proactive

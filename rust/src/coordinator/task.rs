@@ -394,13 +394,10 @@ impl SolveTask {
         if !enabled || ctx.cfg.compact_junk >= 1.0 {
             return Ok(false);
         }
-        let (spent, valid_total, max_dense) = kv.junk_stats();
-        let junk = if spent == 0 {
-            0.0
-        } else {
-            (spent - valid_total) as f64 / spent as f64
-        };
-        if kv.pos_phys <= max_dense || junk < threshold {
+        // mode-aware reclaim: on a block-native cache the dense-repack
+        // figure would propose truncations that reclaim nothing and get
+        // compaction permanently disabled by `note_compact`
+        if kv.reclaimable() == 0 || kv.junk_fraction() < threshold {
             return Ok(false);
         }
         let changed = match target {
@@ -438,6 +435,20 @@ impl SolveTask {
         }
     }
 
+    /// Run a proposed compaction inline — the block-native path, where a
+    /// re-compaction is a pure host table truncation (tail blocks release
+    /// by refcount, no device call) and parking it as a schedulable
+    /// intent would only add a scheduler round-trip around free work.
+    fn compact_now(&mut self, engine: &Engine, target: CompactTarget) -> Result<()> {
+        let ctx = self.ctx_mut();
+        let changed = match target {
+            CompactTarget::Lm => engine.kv_compact(&ctx.lm_ckpt, &mut ctx.lm_kv)?,
+            CompactTarget::Prm => engine.kv_compact(&ctx.prm_ckpt, &mut ctx.prm_kv)?,
+        };
+        ctx.note_compact(target, changed);
+        Ok(())
+    }
+
     /// Park a compaction of `target`'s cache as the pending intent.
     fn yield_compact(&mut self, target: CompactTarget) -> Step {
         let ctx = self.ctx.as_ref().expect("compaction proposed without a SearchCtx");
@@ -461,11 +472,18 @@ impl SolveTask {
     /// blocking path checked it).
     fn poll_decode(
         &mut self,
+        engine: &Engine,
         target: PhaseTarget,
         next: impl FnOnce(bool, bool) -> State,
     ) -> Result<Step> {
         match self.ctx_mut().decode_prepare(target) {
-            DecodeStage::Compact => Ok(self.yield_compact(CompactTarget::Lm)),
+            DecodeStage::Compact => {
+                if engine.block_native() {
+                    self.compact_now(engine, CompactTarget::Lm)?;
+                    return Ok(Step::Progressed(Progress::Working));
+                }
+                Ok(self.yield_compact(CompactTarget::Lm))
+            }
             DecodeStage::Call(prep) => {
                 let ctx = self.ctx.as_ref().expect("decode_prepare ran on a ctx");
                 self.pending = Some(DecodeIntent {
@@ -491,14 +509,20 @@ impl SolveTask {
     }
 
     /// Shared score-state driver: yield the PRM compaction the next round
-    /// needs (exhaustion rescue / proactive junk threshold), yield the
-    /// next scoring round, or report the phase drained (after harvesting
+    /// needs (exhaustion rescue / proactive junk threshold) — or run it
+    /// inline when the engine is block-native, since a table truncation
+    /// has no device call worth scheduling around — yield the next
+    /// scoring round, or report the phase drained (after harvesting
     /// finished beams, like the blocking path did right after
     /// `score_catch_up`).
-    fn poll_score(&mut self, score_ok: bool) -> Option<Step> {
+    fn poll_score(&mut self, engine: &Engine, score_ok: bool) -> Result<Option<Step>> {
         if score_ok {
             if self.ctx_mut().prm_wants_compact() {
-                return Some(self.yield_compact(CompactTarget::Prm));
+                if engine.block_native() {
+                    self.compact_now(engine, CompactTarget::Prm)?;
+                    return Ok(Some(Step::Progressed(Progress::Working)));
+                }
+                return Ok(Some(self.yield_compact(CompactTarget::Prm)));
             }
             if self.ctx_mut().score_round_fits() {
                 if let Some(round) = self.ctx_mut().score_prepare() {
@@ -510,12 +534,12 @@ impl SolveTask {
                         temp: 0.0,
                         payload: Payload::Score(round),
                     });
-                    return Some(Step::Yielded);
+                    return Ok(Some(Step::Yielded));
                 }
             }
         }
         self.ctx_mut().harvest_finished();
-        None
+        Ok(None)
     }
 
     /// One cooperative unit of work: either a host transition happened
@@ -551,11 +575,11 @@ impl SolveTask {
             }
 
             // ---------------------------------------------------- vanilla
-            State::VDecode => self.poll_decode(PhaseTarget::Boundary, |decode_ok, score_ok| {
+            State::VDecode => self.poll_decode(engine, PhaseTarget::Boundary, |decode_ok, score_ok| {
                 State::VScore { decode_ok, score_ok }
             }),
             State::VScore { decode_ok, score_ok } => {
-                if let Some(step) = self.poll_score(score_ok) {
+                if let Some(step) = self.poll_score(engine, score_ok)? {
                     return Ok(step);
                 }
                 // gang merges (and budget verdicts that counted
@@ -598,12 +622,12 @@ impl SolveTask {
             // -------------------------------------------- early rejection
             State::ADecode => {
                 let tau = self.cfg.tau;
-                self.poll_decode(PhaseTarget::Prefix { tau }, |decode_ok, score_ok| {
+                self.poll_decode(engine, PhaseTarget::Prefix { tau }, |decode_ok, score_ok| {
                     State::AScore { decode_ok, score_ok }
                 })
             }
             State::AScore { decode_ok, score_ok } => {
-                if let Some(step) = self.poll_score(score_ok) {
+                if let Some(step) = self.poll_score(engine, score_ok)? {
                     return Ok(step);
                 }
                 let score_ok = score_ok && self.ctx_mut().score_round_fits();
@@ -653,14 +677,14 @@ impl SolveTask {
                 Ok(Step::Progressed(Progress::Working))
             }
             State::BDecode { plan } => {
-                self.poll_decode(PhaseTarget::Boundary, |decode_ok, score_ok| State::BScore {
+                self.poll_decode(engine, PhaseTarget::Boundary, |decode_ok, score_ok| State::BScore {
                     plan,
                     decode_ok,
                     score_ok,
                 })
             }
             State::BScore { plan, decode_ok, score_ok } => {
-                if let Some(step) = self.poll_score(score_ok) {
+                if let Some(step) = self.poll_score(engine, score_ok)? {
                     return Ok(step);
                 }
                 let score_ok = score_ok && self.ctx_mut().score_round_fits();

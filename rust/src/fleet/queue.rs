@@ -94,16 +94,31 @@ impl FleetJob {
 /// exceeds its remaining budget, so it fails fast with 504 instead of
 /// burning slot time before the inevitable abort. Returns 0 until a
 /// service-time estimate exists (never reject on no data).
+///
+/// `queued` should exclude coalescible duplicates of in-flight tasks —
+/// those never occupy a slot, they ride the running task at the next
+/// coalesce pass, so counting them as full jobs inflates the forecast
+/// and 504s work the shard would have absorbed for free.
+///
+/// `pool_pressure` in `[0, 1]` stretches the forecast by the KV block
+/// pool's scarcity: backfill defers admissions whenever the pool lacks
+/// two fresh caches' worth of headroom, so under pressure the effective
+/// drain rate drops even with slots free. Modeled as a `1 / (1 - p)`
+/// slowdown (clamped at 0.95 so a saturated pool forecasts 20x, not
+/// infinity — blocks do return as in-flight work completes). Pass 0.0
+/// on dense engines.
 pub fn admission_forecast_ms(
     queued: usize,
     inflight: usize,
     slots: usize,
     mean_service_ms: f64,
+    pool_pressure: f64,
 ) -> f64 {
     if slots == 0 || mean_service_ms <= 0.0 {
         return 0.0;
     }
-    ((queued + inflight) as f64 / slots as f64) * mean_service_ms
+    let slowdown = 1.0 / (1.0 - pool_pressure.clamp(0.0, 0.95));
+    ((queued + inflight) as f64 / slots as f64) * mean_service_ms * slowdown
 }
 
 /// The per-shard admission queue. O(n) selection per pop — queues are
@@ -171,6 +186,13 @@ impl AdmissionQueue {
             }
         }
         out
+    }
+
+    /// How many queued jobs match `pred`, without removing them (used by
+    /// the admission forecast to discount coalescible duplicates that
+    /// will never occupy a slot).
+    pub fn count_matching(&self, mut pred: impl FnMut(&FleetJob) -> bool) -> usize {
+        self.jobs.iter().filter(|(_, j)| pred(j)).count()
     }
 
     /// Remove and return every queued job matching `pred` (used to
@@ -329,14 +351,42 @@ mod tests {
     #[test]
     fn forecast_scales_with_pressure_and_never_fires_blind() {
         // no service-time estimate yet: never reject
-        assert_eq!(admission_forecast_ms(10, 8, 4, 0.0), 0.0);
+        assert_eq!(admission_forecast_ms(10, 8, 4, 0.0, 0.0), 0.0);
         // zero slots can't forecast either
-        assert_eq!(admission_forecast_ms(10, 8, 0, 100.0), 0.0);
+        assert_eq!(admission_forecast_ms(10, 8, 0, 100.0, 0.0), 0.0);
         // 12 jobs ahead draining 4 wide at 100ms each -> ~300ms wait
-        let f = admission_forecast_ms(8, 4, 4, 100.0);
+        let f = admission_forecast_ms(8, 4, 4, 100.0, 0.0);
         assert!((f - 300.0).abs() < 1e-9);
         // more slots, shorter forecast
-        assert!(admission_forecast_ms(8, 4, 8, 100.0) < f);
+        assert!(admission_forecast_ms(8, 4, 8, 100.0, 0.0) < f);
+    }
+
+    #[test]
+    fn forecast_stretches_under_pool_pressure() {
+        let base = admission_forecast_ms(8, 4, 4, 100.0, 0.0);
+        // half-scarce pool: drain rate halves, forecast doubles
+        let half = admission_forecast_ms(8, 4, 4, 100.0, 0.5);
+        assert!((half - base * 2.0).abs() < 1e-9);
+        // saturated pool clamps at a 20x slowdown, never infinity/NaN
+        let sat = admission_forecast_ms(8, 4, 4, 100.0, 1.0);
+        assert!((sat - base * 20.0).abs() < 1e-6);
+        assert!(sat.is_finite());
+        // out-of-range inputs clamp rather than shrink the forecast
+        assert_eq!(admission_forecast_ms(8, 4, 4, 100.0, -3.0), base);
+    }
+
+    #[test]
+    fn count_matching_leaves_queue_intact() {
+        let base = Instant::now();
+        let mut q = AdmissionQueue::new(Duration::from_millis(500));
+        let (a, _r1) = job(base, "dup", 0, None);
+        let (b, _r2) = job(base, "other", 0, None);
+        let (c, _r3) = job(base, "dup", 0, None);
+        q.push(a);
+        q.push(b);
+        q.push(c);
+        assert_eq!(q.count_matching(|j| j.key.as_deref() == Some("dup")), 2);
+        assert_eq!(q.len(), 3, "counting must not drain");
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! 1. **Ingest** — drain newly arrived jobs into the admission queue
 //!    (blocking only when completely idle, so the loop never spins).
 //!    Deadline-aware admission bounces bounded jobs whose queue-wait
-//!    forecast (slot pressure x mean service time) already exceeds their
-//!    budget — 504 at the door instead of a doomed slot occupation.
+//!    forecast (slot pressure x mean service time, stretched by KV
+//!    block-pool scarcity, discounting queued duplicates that will ride
+//!    in-flight tasks) already exceeds their budget — 504 at the door
+//!    instead of a doomed slot occupation.
 //! 2. **Expire / cancel** — bounce queued jobs whose deadline elapsed
 //!    (HTTP 504) and drop queued jobs whose client already hung up.
 //! 3. **Coalesce** — fold queued duplicates of an in-flight task onto it.
@@ -155,7 +157,7 @@ pub fn drive(
             }
             match poll(true) {
                 Poll::Job(j) => {
-                    admit(*j, &mut queue, &slots, inflight, n_slots, mean_service_ms, stats)
+                    admit(*j, engine, &mut queue, &slots, inflight, n_slots, mean_service_ms, stats)
                 }
                 Poll::Shutdown => shutdown = true,
                 Poll::Closed => break,
@@ -166,7 +168,7 @@ pub fn drive(
         loop {
             match poll(false) {
                 Poll::Job(j) => {
-                    admit(*j, &mut queue, &slots, inflight, n_slots, mean_service_ms, stats)
+                    admit(*j, engine, &mut queue, &slots, inflight, n_slots, mean_service_ms, stats)
                 }
                 Poll::Shutdown => shutdown = true,
                 Poll::Closed => {
@@ -356,13 +358,32 @@ pub fn drive(
     stats.queued.store(0, Ordering::Relaxed);
 }
 
+/// Instantaneous KV pool pressure in `[0, 1]` for the admission
+/// forecast: 0 with ample free blocks, 1 once free blocks fall to the
+/// backfill gate's admission floor (the point where backfill stops
+/// draining the queue entirely). Ramps linearly over three floors of
+/// headroom above the gate so forecasts stretch *before* the gate
+/// closes. Always 0 on dense engines.
+fn pool_pressure(engine: &Engine) -> f64 {
+    let Some(ps) = engine.pool_stats() else { return 0.0 };
+    let floor = engine.pool_admission_floor();
+    if floor == 0 {
+        return 0.0;
+    }
+    let above = ps.blocks_free.saturating_sub(floor) as f64;
+    (1.0 - above / (3.0 * floor as f64)).clamp(0.0, 1.0)
+}
+
 /// Deadline-aware admission (step 1): bounce a bounded job whose
 /// queue-wait forecast already exceeds its remaining budget. A duplicate
 /// of an in-flight task is exempt — it never waits for a slot, it rides
-/// the running task at the next coalesce pass (step 3).
+/// the running task at the next coalesce pass (step 3) — and queued
+/// duplicates of in-flight tasks are likewise discounted from the drain
+/// this job waits behind.
 #[allow(clippy::too_many_arguments)]
 fn admit(
     job: FleetJob,
+    engine: &Engine,
     queue: &mut AdmissionQueue,
     slots: &[Option<Running>],
     inflight: usize,
@@ -378,7 +399,16 @@ fn admit(
     if let Some(d) = job.deadline {
         let now = Instant::now();
         let remaining_ms = (d.as_secs_f64() * 1000.0 - job.waited_ms(now)).max(0.0);
-        let forecast = admission_forecast_ms(queue.len(), inflight, n_slots, mean_service_ms);
+        let dup_riders = queue.count_matching(|j| {
+            j.key.is_some() && slots.iter().flatten().any(|r| r.key == j.key)
+        });
+        let forecast = admission_forecast_ms(
+            queue.len() - dup_riders,
+            inflight,
+            n_slots,
+            mean_service_ms,
+            pool_pressure(engine),
+        );
         if forecast > remaining_ms {
             stats.forecast_rejected_total.fetch_add(1, Ordering::Relaxed);
             let _ = job.reply.send(Err(Error::deadline(format!(
@@ -497,7 +527,7 @@ fn dispatch_gangs(
         // merge overhead stay solo (accept-all until timings exist)
         let model = stats_snapshot
             .as_ref()
-            .and_then(|s| batch::WallModel::from_stats(s, key.0));
+            .and_then(|s| batch::WallModel::from_stats(s, key.0, engine.block_native()));
         let gangs = batch::plan_gangs_costed(
             &batches,
             |a, b| engine.manifest.merge_variant(a, b).ok().filter(|&c| arch.has_merge(a, b, c)),

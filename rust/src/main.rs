@@ -168,10 +168,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // pool-level single-flight (cross-shard duplicate coalescing) is on
     // by default; `--no-singleflight` or the config file disable it
     let singleflight = scfg.singleflight && !args.flag("no-singleflight");
-    // --kv-pool-blocks N: paged KV over a shared per-shard block pool
-    // (0 = dense per-slot caches; ignored when the artifacts predate
-    // paged export)
-    let kv_pool_blocks = args.get_usize("kv-pool-blocks", scfg.kv_pool_blocks)?;
+    // --kv-pool-blocks N: paged KV over a shared per-shard block pool.
+    // An explicit 0 forces dense per-slot caches; with the flag absent
+    // the config value applies, and when that is 0 too each shard
+    // defaults to the manifest's exported `pool_blocks` sizing (if any —
+    // artifact sets predating paged export stay dense).
+    let kv_pool_blocks = match args.get("kv-pool-blocks") {
+        Some(_) => Some(args.get_usize("kv-pool-blocks", 0)?),
+        None if scfg.kv_pool_blocks > 0 => Some(scfg.kv_pool_blocks),
+        None => None,
+    };
     let worker_default = if fleet { shards * max_inflight + 2 } else { shards + 2 };
     let workers = args.get_usize_min("workers", worker_default, 1)?;
     // --cache N sets the LRU solve-cache size; --cache 0 disables it.

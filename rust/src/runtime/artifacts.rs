@@ -59,6 +59,26 @@ impl ModelArch {
     pub fn has_merge(&self, a: usize, b: usize, c: usize) -> bool {
         self.has_program(&format!("merge_b{a}_b{b}_to_b{c}"))
     }
+
+    /// Whether the block-native program set exists for one batch variant:
+    /// the pool install (`adopt_blocktab`), the pool row copy
+    /// (`copy_blocktab`), and the arch's own stepper (`decode_blocktab`
+    /// for LMs, `score_blocktab` for PRMs) — the calls that replace the
+    /// gather-bracketed paged path.
+    pub fn has_blocktab(&self, b: usize) -> bool {
+        let stepper = if self.kind == "lm" { "decode_blocktab" } else { "score_blocktab" };
+        self.has_program(&format!("adopt_blocktab_b{b}"))
+            && self.has_program(&format!("copy_blocktab_b{b}"))
+            && self.has_program(&format!("{stepper}_b{b}"))
+    }
+
+    /// Block-native readiness over a whole variant ladder: every exported
+    /// batch width must have its blocktab programs, or the engine falls
+    /// back to the gather-bracketed paged mode for *all* widths (mixing
+    /// modes per-width would break merge/split table-edit invariants).
+    pub fn block_native_ready(&self, variants: &[usize]) -> bool {
+        !variants.is_empty() && variants.iter().all(|&b| self.has_blocktab(b))
+    }
 }
 
 /// The whole manifest.
@@ -76,6 +96,11 @@ pub struct Manifest {
     /// before paging existed — the runtime then keeps the dense
     /// fixed-length discipline (graceful fallback, no error).
     pub kv_block: Option<usize>,
+    /// Device pool size (blocks) the block-native programs were exported
+    /// against: the pool arrays are `[pool_blocks + 1, ...]` with the last
+    /// row as the trash row. `None` on artifact sets without the blocktab
+    /// programs; also the geometry-derived default for `--kv-pool-blocks`.
+    pub pool_blocks: Option<usize>,
     pub models: BTreeMap<String, ModelArch>,
     /// Paper-scale parameter counts (narrative comparison only).
     pub paper_scale: BTreeMap<String, f64>,
@@ -125,6 +150,7 @@ impl Manifest {
                 .collect(),
             fullseq_batch: j.req("fullseq_batch")?.as_usize().unwrap_or(8),
             kv_block: j.get("kv_block").and_then(Json::as_usize).filter(|&b| b > 0),
+            pool_blocks: j.get("pool_blocks").and_then(Json::as_usize).filter(|&b| b > 0),
             models,
             paper_scale,
         };
@@ -309,6 +335,36 @@ mod tests {
         assert!(lm.has_program("prefill_b1"));
         assert!(!lm.has_program("merge_b4_b4_to_b16"));
         assert!(!lm.has_merge(4, 4, 16), "old artifacts lack merge programs");
+    }
+
+    #[test]
+    fn pool_blocks_and_blocktab_probes() {
+        let dir = std::env::temp_dir().join("erprm-manifest-test-blocktab");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = load_toy(&dir);
+        assert_eq!(m.pool_blocks, None, "pre-blocktab manifests parse without the field");
+        let lm = m.model("lm").unwrap();
+        assert!(!lm.has_blocktab(4), "old artifacts lack blocktab programs");
+        assert!(!lm.block_native_ready(&[4, 16]));
+        assert!(!lm.block_native_ready(&[]), "an empty ladder is never ready");
+        // inject pool_blocks + the full blocktab program set for b=4
+        let src = toy_manifest_json()
+            .replacen("\"prompt_pad\": 16", "\"pool_blocks\": 256, \"prompt_pad\": 16", 1)
+            .replacen(
+                "\"prefill_b1\": \"hlo/lm_prefill_b1.hlo.txt\"",
+                "\"prefill_b1\": \"hlo/lm_prefill_b1.hlo.txt\",
+                 \"adopt_blocktab_b4\": \"hlo/lm_adopt_blocktab_b4.hlo.txt\",
+                 \"copy_blocktab_b4\": \"hlo/lm_copy_blocktab_b4.hlo.txt\",
+                 \"decode_blocktab_b4\": \"hlo/lm_decode_blocktab_b4.hlo.txt\"",
+                1,
+            );
+        std::fs::write(dir.join("manifest.json"), src).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pool_blocks, Some(256));
+        let lm = m.model("lm").unwrap();
+        assert!(lm.has_blocktab(4));
+        assert!(lm.block_native_ready(&[4]));
+        assert!(!lm.block_native_ready(&[4, 16]), "one missing width blocks all widths");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! coordinator drives. All state (KV caches, weights) stays device-resident
 //! between calls via `execute_b_untuple` (see `third_party/xla-rs`).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::rc::Rc;
@@ -67,8 +67,18 @@ pub struct EngineStats {
     pub merge_calls: u64,
     /// `compact_bN` invocations (frontier re-compaction).
     pub compact_calls: u64,
-    /// Physical cache positions reclaimed by compactions.
+    /// Physical cache positions reclaimed by compactions (device-program
+    /// repacks and block-native table truncations both count here).
     pub compact_reclaimed: u64,
+    /// Block-native gang merges done as pure block-table edits — each one
+    /// replaces a `merge_bA_bB_to_bC` device call with zero device work.
+    pub table_merges: u64,
+    /// Block-native gang splits done as pure block-table edits (replacing
+    /// `resize`/`gather` device calls).
+    pub table_splits: u64,
+    /// Block-native compactions done as uniform table truncations
+    /// (replacing `compact_bN` device repacks).
+    pub table_compacts: u64,
     /// Junk positions observed below the lockstep frontier at decode and
     /// score time, over all positions spent — `junk_positions /
     /// cache_positions` is the live cache-utilization gauge
@@ -111,6 +121,9 @@ impl EngineStats {
         self.merge_calls += other.merge_calls;
         self.compact_calls += other.compact_calls;
         self.compact_reclaimed += other.compact_reclaimed;
+        self.table_merges += other.table_merges;
+        self.table_splits += other.table_splits;
+        self.table_compacts += other.table_compacts;
         self.junk_positions += other.junk_positions;
         self.cache_positions += other.cache_positions;
         for (&b, w) in &other.decode_wall {
@@ -158,6 +171,17 @@ pub struct Engine {
     /// fixed-length discipline; set by [`Engine::enable_paging`] when the
     /// artifact set carries a `kv_block` size.
     pool: RefCell<Option<SharedPool>>,
+    /// Block-native mode: attention programs index the shared device pool
+    /// through block-table operands, so gang merge/split/compact become
+    /// pure host table edits. Set by [`Engine::enable_paging`] when the
+    /// artifact set exports the `*_blocktab_b{b}` program family for every
+    /// batch variant.
+    block_native: Cell<bool>,
+    /// Per-arch device-resident KV pool arrays (`[pool_blocks + 1, heads,
+    /// kv_block, head_dim]` per layer K/V; last row is the trash block).
+    /// Taken out of the map for each blocktab call (the buffers are
+    /// donated) and replaced with the call's outputs.
+    pool_dev: RefCell<HashMap<String, Vec<PjRtBuffer>>>,
 }
 
 impl Engine {
@@ -177,6 +201,8 @@ impl Engine {
             weights: RefCell::new(HashMap::new()),
             stats: RefCell::new(EngineStats::default()),
             pool: RefCell::new(None),
+            block_native: Cell::new(false),
+            pool_dev: RefCell::new(HashMap::new()),
         })
     }
 
@@ -203,13 +229,49 @@ impl Engine {
         if total_blocks == 0 {
             return false;
         }
-        *self.pool.borrow_mut() = Some(shared_pool(total_blocks, bs));
-        log_info!("paged KV on: {total_blocks} blocks x {bs} tokens");
+        // Block-native needs the full blocktab program family for every
+        // batch variant of every model — mixing table-indexed and dense
+        // calls against one cache would corrupt it, so the mode is
+        // all-or-nothing per engine.
+        let native = self.manifest.pool_blocks.is_some()
+            && self
+                .manifest
+                .models
+                .values()
+                .all(|m| m.block_native_ready(&self.manifest.batch_variants));
+        let total = match (native, self.manifest.pool_blocks) {
+            // device pool geometry is baked into the exported programs:
+            // host block ids must stay below `pool_blocks` (the last row
+            // is the trash block), so clamp the host pool to fit
+            (true, Some(p)) => total_blocks.min(p),
+            _ => total_blocks,
+        };
+        *self.pool.borrow_mut() = Some(shared_pool(total, bs));
+        self.block_native.set(native);
+        log_info!(
+            "paged KV on: {total} blocks x {bs} tokens{}",
+            if native { " (block-native attention)" } else { "" }
+        );
         true
     }
 
     pub fn paging_enabled(&self) -> bool {
         self.pool.borrow().is_some()
+    }
+
+    /// Whether attention runs block-native (table-indexed device pool;
+    /// merge/split/compact are host table edits).
+    pub fn block_native(&self) -> bool {
+        self.block_native.get()
+    }
+
+    /// Drop back to gather-paged execution after [`Engine::enable_paging`]
+    /// selected block-native attention. The equivalence suite uses this
+    /// to pin all three execution modes — dense, gather-paged,
+    /// block-native — to byte-identical outcomes on one artifact set;
+    /// production paths have no reason to call it.
+    pub fn disable_block_native(&self) {
+        self.block_native.set(false);
     }
 
     /// Point-in-time pool gauges (`None` when paging is off).
@@ -252,6 +314,71 @@ impl Engine {
         Ok(())
     }
 
+    /// Attach block-native tables (fresh, unshared, covering the current
+    /// frontier) to a cache. Only meaningful in block-native mode.
+    fn attach_native(&self, kv: &mut KvSet) -> Result<()> {
+        let pool = self
+            .pool
+            .borrow()
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| Error::invalid("block-native cache without a pool"))?;
+        kv.attach_native_tables(pool).map_err(|e| Error::saturated(e.to_string()))
+    }
+
+    /// `(blocks per table row, trash block id)` for blocktab operands.
+    fn blocktab_geometry(&self, arch: &ModelArch) -> Result<(usize, i32)> {
+        let bs = self
+            .manifest
+            .kv_block
+            .ok_or_else(|| Error::invalid("block-native artifacts without kv_block"))?;
+        let p = self
+            .manifest
+            .pool_blocks
+            .ok_or_else(|| Error::invalid("block-native artifacts without pool_blocks"))?;
+        Ok((arch.cache_len / bs, p as i32))
+    }
+
+    /// Take an arch's device pool arrays out of the cache for a blocktab
+    /// call (they are donated operands), zero-initializing them on first
+    /// use. If the call then fails, the arrays stay absent and the next
+    /// call re-creates them zeroed — every in-flight cache on this engine
+    /// is invalidated, which matches the dense path's behaviour where a
+    /// failed execution consumes the donated KV buffers.
+    fn take_pools(&self, arch: &ModelArch) -> Result<Vec<PjRtBuffer>> {
+        if let Some(bufs) = self.pool_dev.borrow_mut().remove(&arch.name) {
+            return Ok(bufs);
+        }
+        let bs = self
+            .manifest
+            .kv_block
+            .ok_or_else(|| Error::invalid("block-native artifacts without kv_block"))?;
+        let p = self
+            .manifest
+            .pool_blocks
+            .ok_or_else(|| Error::invalid("block-native artifacts without pool_blocks"))?;
+        let dims = [p + 1, arch.n_heads, bs, arch.head_dim];
+        let zeros = vec![0f32; dims.iter().product()];
+        let mut bufs = Vec::with_capacity(arch.n_kv());
+        for _ in 0..arch.n_kv() {
+            bufs.push(self.client.buffer_from_host_buffer(&zeros, &dims, None)?);
+        }
+        log_info!(
+            "device KV pool for '{}': {} arrays of [{} {} {} {}] f32",
+            arch.name,
+            arch.n_kv(),
+            p + 1,
+            arch.n_heads,
+            bs,
+            arch.head_dim
+        );
+        Ok(bufs)
+    }
+
+    fn put_pools(&self, arch: &ModelArch, bufs: Vec<PjRtBuffer>) {
+        self.pool_dev.borrow_mut().insert(arch.name.clone(), bufs);
+    }
+
     // ------------------------------------------------------------ plumbing
 
     fn program(&self, arch: &ModelArch, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
@@ -282,6 +409,19 @@ impl Engine {
     pub fn warmup(&self, ckpt: &str, batches: &[usize]) -> Result<()> {
         let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
         self.program(&arch, "prefill_b1")?;
+        if self.block_native.get() {
+            // block-native hot path: adopt/copy/stepper over table operands
+            // (gather/broadcast/compact/merge never run in this mode)
+            let body = if arch.kind == "lm" { "decode_blocktab" } else { "score_blocktab" };
+            for &b in batches {
+                let b = self.manifest.batch_variant(b)?;
+                self.program(&arch, &format!("{body}_b{b}"))?;
+                self.program(&arch, &format!("adopt_blocktab_b{b}"))?;
+                self.program(&arch, &format!("copy_blocktab_b{b}"))?;
+            }
+            let _ = self.weights_for(ckpt)?;
+            return Ok(());
+        }
         let body = if arch.kind == "lm" { "decode" } else { "score" };
         for &b in batches {
             let b = self.manifest.batch_variant(b)?;
@@ -427,7 +567,11 @@ impl Engine {
         let mut kv = KvSet::new(kv_bufs, 1, arch.cache_len);
         kv.pos_phys = self.manifest.prompt_pad;
         kv.commit(0, 0, prompt.len());
-        self.attach_pages(&mut kv)?;
+        // block-native: the b=1 prompt cache stays dense — broadcast
+        // adopts it into the device pool through a fresh block table
+        if !self.block_native.get() {
+            self.attach_pages(&mut kv)?;
+        }
         Ok((logits, kv))
     }
 
@@ -456,15 +600,41 @@ impl Engine {
         let mut kv = KvSet::new(out, 1, arch.cache_len);
         kv.pos_phys = self.manifest.prompt_pad;
         kv.commit(0, 0, prompt.len());
-        self.attach_pages(&mut kv)?;
+        if !self.block_native.get() {
+            self.attach_pages(&mut kv)?;
+        }
         Ok(kv)
     }
 
     /// Broadcast a b=1 prompt cache into `n` beam slots (rounded up to an
     /// exported batch variant). Device-side replicate + bookkeeping copy.
+    /// Block-native: every replica gets a freshly allocated table and the
+    /// `adopt_blocktab_bN` program scatters the dense prefill rows into
+    /// the device pool through it — the only copy the prompt ever takes.
     pub fn kv_broadcast(&self, ckpt: &str, kv: &KvSet, n: usize) -> Result<KvSet> {
         let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
         let b = self.manifest.batch_variant(n)?;
+        if self.block_native.get() {
+            let mut new = KvSet::new(Vec::new(), b, arch.cache_len);
+            new.pos_phys = kv.pos_phys;
+            let (pos_log, valid) = kv.broadcast_bookkeeping(b);
+            new.pos_log = pos_log;
+            new.valid = valid;
+            self.attach_native(&mut new)?;
+            let (nbl, trash) = self.blocktab_geometry(&arch)?;
+            let exe = self.program(&arch, &format!("adopt_blocktab_b{b}"))?;
+            let tab = self.buf_i32(&new.table_operand(nbl, trash), &[b, nbl])?;
+            let pools = self.take_pools(&arch)?;
+            let mut args: Vec<&PjRtBuffer> = vec![&tab];
+            args.extend(kv.bufs.iter());
+            args.extend(pools.iter());
+            let out = self.run(&exe, &args)?;
+            if out.len() != arch.n_kv() {
+                return Err(Error::Xla(format!("adopt returned {} outputs", out.len())));
+            }
+            self.put_pools(&arch, out);
+            return Ok(new);
+        }
         let exe = self.program(&arch, &format!("broadcast_b{b}"))?;
         let args: Vec<&PjRtBuffer> = kv.bufs.iter().collect();
         let out = self.run(&exe, &args)?;
@@ -478,6 +648,43 @@ impl Engine {
         Ok(new)
     }
 
+    /// Run `copy_blocktab_b{dst}` moving pool rows from the cache's tables
+    /// gathered along `idx` into `fresh`'s (freshly allocated, unshared)
+    /// tables. The table operands are host-built; the device only copies
+    /// rows pool-to-pool.
+    fn blocktab_copy(
+        &self,
+        arch: &ModelArch,
+        kv: &KvSet,
+        fresh: &super::kv::PagedKv,
+        idx: &[i32],
+    ) -> Result<()> {
+        let (nbl, trash) = self.blocktab_geometry(arch)?;
+        let full = kv.table_operand(nbl, trash);
+        let mut src = vec![trash; idx.len() * nbl];
+        for (d, &s) in idx.iter().enumerate() {
+            let s = s as usize;
+            src[d * nbl..(d + 1) * nbl].copy_from_slice(&full[s * nbl..(s + 1) * nbl]);
+        }
+        let dst = fresh.operand(nbl, trash);
+        let exe = self.program(arch, &format!("copy_blocktab_b{}", idx.len()))?;
+        let t0 = Instant::now();
+        let sb = self.buf_i32(&src, &[idx.len(), nbl])?;
+        let db = self.buf_i32(&dst, &[idx.len(), nbl])?;
+        let pools = self.take_pools(arch)?;
+        let mut args: Vec<&PjRtBuffer> = vec![&sb, &db];
+        args.extend(pools.iter());
+        let out = self.run(&exe, &args)?;
+        if out.len() != arch.n_kv() {
+            return Err(Error::Xla(format!("copy returned {} outputs", out.len())));
+        }
+        self.put_pools(arch, out);
+        let mut s = self.stats.borrow_mut();
+        s.gather_calls += 1;
+        s.gather_wall_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
     /// Permute beam slots on device: `new[slot] = old[idx[slot]]`.
     pub fn kv_gather(&self, ckpt: &str, kv: &mut KvSet, idx: &[i32]) -> Result<()> {
         let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
@@ -487,6 +694,14 @@ impl Engine {
                 idx.len(),
                 kv.batch
             )));
+        }
+        if kv.block_native() {
+            let fresh =
+                kv.gather_fresh_tables(idx).map_err(|e| Error::saturated(e.to_string()))?;
+            self.blocktab_copy(&arch, kv, &fresh, idx)?;
+            kv.permute_host(idx);
+            kv.pages = Some(fresh);
+            return Ok(());
         }
         let exe = self.program(&arch, &format!("gather_b{}", kv.batch))?;
         let t0 = Instant::now();
@@ -511,6 +726,16 @@ impl Engine {
         let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
         if idx.len() != dst_batch {
             return Err(Error::invalid("resize idx len must equal dst batch"));
+        }
+        if kv.block_native() {
+            let fresh =
+                kv.gather_fresh_tables(idx).map_err(|e| Error::saturated(e.to_string()))?;
+            self.blocktab_copy(&arch, kv, &fresh, idx)?;
+            let mut new = KvSet::new(Vec::new(), dst_batch, arch.cache_len);
+            new.pos_phys = kv.pos_phys;
+            copy_bookkeeping(kv, &mut new, idx);
+            new.pages = Some(fresh);
+            return Ok(new);
         }
         let exe = if dst_batch == kv.batch {
             // same-variant: plain gather into a fresh KvSet
@@ -557,6 +782,15 @@ impl Engine {
                 idx.len()
             )));
         }
+        if a.block_native() && b.block_native() {
+            // block-native: the K/V rows already live in the shared device
+            // pool — the union cache is just the members' tables
+            // concatenated along `idx`. No device call, nothing copied.
+            let new = KvSet::merge_tables(a, b, idx)
+                .ok_or_else(|| Error::invalid("table merge on incompatible caches"))?;
+            self.stats.borrow_mut().table_merges += 1;
+            return Ok(new);
+        }
         let exe = self.program(&arch, &format!("merge_b{}_b{}_to_b{c}", a.batch, b.batch))?;
         let t0 = Instant::now();
         let i = self.buf_i32(idx, &[idx.len()])?;
@@ -598,6 +832,16 @@ impl Engine {
                 merged.batch
             )));
         }
+        if merged.block_native() {
+            // block-native: forking the member's slice of the union's
+            // tables *is* the split — the transient union cache is dropped
+            // right after, so the shared refcounts unwind immediately.
+            let new = merged
+                .split_tables(start, dst_batch)
+                .ok_or_else(|| Error::invalid("table split on a non-native cache"))?;
+            self.stats.borrow_mut().table_splits += 1;
+            return Ok(new);
+        }
         let idx: Vec<i32> = (start..start + dst_batch).map(|i| i as i32).collect();
         self.kv_resize(ckpt, merged, &idx, dst_batch)
     }
@@ -613,6 +857,27 @@ impl Engine {
     /// is no junk to reclaim.
     pub fn kv_compact(&self, ckpt: &str, kv: &mut KvSet) -> Result<bool> {
         let arch = self.manifest.arch_for_checkpoint(ckpt)?.clone();
+        if kv.block_native() {
+            // block-native: valid rows never move — reclaiming the common
+            // junk tail is a uniform table truncation, done synchronously
+            // on the host with zero device work.
+            let (reclaimed, freed) = kv.compact_tables();
+            if reclaimed == 0 {
+                return Ok(false);
+            }
+            {
+                let mut s = self.stats.borrow_mut();
+                s.table_compacts += 1;
+                s.compact_reclaimed += reclaimed as u64;
+            }
+            log_debug!(
+                "table-compacted '{ckpt}' b{}: frontier -> {} (+{} positions, {freed} blocks freed)",
+                kv.batch,
+                kv.pos_phys,
+                reclaimed
+            );
+            return Ok(true);
+        }
         let name = format!("compact_b{}", kv.batch);
         if !arch.has_program(&name) {
             return Ok(false);
@@ -667,6 +932,43 @@ impl Engine {
                 kv.pos_phys, kv.cache_len
             )));
         }
+        if kv.block_native() {
+            // per-slot write positions — captured *before* the reserve
+            // grows the tables (a slot writes at its own frontier, which
+            // is its table's pre-write token length)
+            let frontiers = kv.slot_frontiers();
+            kv.reserve_frontier(self.manifest.decode_block)
+                .map_err(|e| Error::saturated(e.to_string()))?;
+            let exe = self.program(&arch, &format!("decode_blocktab_b{b}"))?;
+            let w = self.weights_for(ckpt)?;
+            self.observe_cache(kv);
+            let t0 = Instant::now();
+            let (nbl, trash) = self.blocktab_geometry(&arch)?;
+            let tab = self.buf_i32(&kv.table_operand(nbl, trash), &[b, nbl])?;
+            let fr = self.buf_i32(&frontiers, &[b])?;
+            let pos_log = self.buf_i32(&kv.pos_log, &[b])?;
+            let valid = self.buf_i32(&kv.valid, &[b, kv.cache_len])?;
+            let tok = self.buf_i32(prev_tok, &[b])?;
+            let t = self.buf_f32(&[temp], &[1])?;
+            let k = self.buf_u32(keys, &[b, 2])?;
+            let pools = self.take_pools(&arch)?;
+            let mut args: Vec<&PjRtBuffer> = w.iter().collect();
+            args.extend([&tab, &fr, &pos_log, &valid, &tok, &t, &k]);
+            args.extend(pools.iter());
+            let mut out = self.run(&exe, &args)?;
+            if out.len() != 1 + arch.n_kv() {
+                return Err(Error::Xla(format!("decode returned {} outputs", out.len())));
+            }
+            let tokens = self.download_i32(&out[0])?;
+            self.put_pools(&arch, out.drain(1..).collect());
+            kv.advance_frontier(self.manifest.decode_block);
+            let mut s = self.stats.borrow_mut();
+            s.decode_calls += 1;
+            let e = s.decode_wall.entry(b).or_default();
+            e.calls += 1;
+            e.wall_s += t0.elapsed().as_secs_f64();
+            return Ok(tokens);
+        }
         // paged: reserve the block write up front — exhaustion here is
         // clean backpressure (503), with the cache untouched
         kv.reserve_frontier(self.manifest.decode_block)
@@ -720,6 +1022,37 @@ impl Engine {
                 "PRM KV cache exhausted (frontier {} of {})",
                 kv.pos_phys, kv.cache_len
             )));
+        }
+        if kv.block_native() {
+            let frontiers = kv.slot_frontiers();
+            kv.reserve_frontier(t).map_err(|e| Error::saturated(e.to_string()))?;
+            let exe = self.program(&arch, &format!("score_blocktab_b{b}"))?;
+            let w = self.weights_for(ckpt)?;
+            self.observe_cache(kv);
+            let t0 = Instant::now();
+            let (nbl, trash) = self.blocktab_geometry(&arch)?;
+            let tab = self.buf_i32(&kv.table_operand(nbl, trash), &[b, nbl])?;
+            let fr = self.buf_i32(&frontiers, &[b])?;
+            let pos_log = self.buf_i32(&kv.pos_log, &[b])?;
+            let valid = self.buf_i32(&kv.valid, &[b, kv.cache_len])?;
+            let toks = self.buf_i32(tokens, &[b, t])?;
+            let pools = self.take_pools(&arch)?;
+            let mut args: Vec<&PjRtBuffer> = w.iter().collect();
+            args.extend([&tab, &fr, &pos_log, &valid, &toks]);
+            args.extend(pools.iter());
+            let mut out = self.run(&exe, &args)?;
+            if out.len() != 1 + arch.n_kv() {
+                return Err(Error::Xla(format!("score returned {} outputs", out.len())));
+            }
+            let scores = self.download_f32(&out[0])?;
+            self.put_pools(&arch, out.drain(1..).collect());
+            kv.advance_frontier(t);
+            let mut s = self.stats.borrow_mut();
+            s.score_calls += 1;
+            let e = s.score_wall.entry(b).or_default();
+            e.calls += 1;
+            e.wall_s += t0.elapsed().as_secs_f64();
+            return Ok(scores);
         }
         kv.reserve_frontier(t).map_err(|e| Error::saturated(e.to_string()))?;
         let exe = self.program(&arch, &format!("score_b{b}"))?;
@@ -799,6 +1132,9 @@ mod tests {
             merge_calls: 0,
             compact_calls: 1,
             compact_reclaimed: 8,
+            table_merges: 2,
+            table_splits: 3,
+            table_compacts: 1,
             junk_positions: 4,
             cache_positions: 16,
             compiles: 1,
@@ -819,6 +1155,9 @@ mod tests {
             merge_calls: 4,
             compact_calls: 2,
             compact_reclaimed: 3,
+            table_merges: 4,
+            table_splits: 4,
+            table_compacts: 2,
             junk_positions: 2,
             cache_positions: 8,
             merge_wall_s: 0.4,
@@ -844,6 +1183,9 @@ mod tests {
         assert_eq!(a.merge_calls, 4);
         assert_eq!(a.compact_calls, 3);
         assert_eq!(a.compact_reclaimed, 11);
+        assert_eq!(a.table_merges, 6);
+        assert_eq!(a.table_splits, 7);
+        assert_eq!(a.table_compacts, 3);
         assert_eq!(a.junk_positions, 6);
         assert_eq!(a.cache_positions, 24);
         assert!((a.junk_fraction() - 0.25).abs() < 1e-12);

@@ -45,6 +45,13 @@ pub struct PagedKv {
     /// Slots whose beam died: their blocks are back in the pool and they
     /// reserve nothing at future frontier advances.
     dead: Vec<bool>,
+    /// Block-native mode: the attention programs index these tables
+    /// *directly* (`decode_blocktab_bN` / `score_blocktab_bN`), so each
+    /// slot writes at its own frontier (= its table's token length) and
+    /// merge/split/compact are pure table edits with no device call.
+    /// `false` is the gather-bracketed mode where tables are host-side
+    /// accounting only.
+    device: bool,
 }
 
 impl PagedKv {
@@ -53,6 +60,7 @@ impl PagedKv {
             pool,
             tables: (0..batch).map(|_| BlockTable::new()).collect(),
             dead: vec![false; batch],
+            device: false,
         }
     }
 
@@ -92,6 +100,48 @@ impl PagedKv {
             }
         }
         Ok(())
+    }
+
+    /// Block-native frontier growth: every live slot's table grows by `n`
+    /// tokens *from its own length*. Slot frontiers diverge inside a
+    /// transient merged gang cache (each member kept its own write clock),
+    /// so a lockstep `reserve_all(pos_phys + n)` would under-reserve the
+    /// widest member. Same all-or-nothing rollback contract.
+    fn reserve_step(&mut self, n: usize) -> Result<(), PoolExhausted> {
+        let mut pool = self.pool.borrow_mut();
+        let prior: Vec<usize> = self.tables.iter().map(|t| t.len_tokens()).collect();
+        for slot in 0..self.tables.len() {
+            if self.dead[slot] {
+                continue;
+            }
+            if let Err(e) = self.tables[slot].reserve(&mut pool, prior[slot] + n) {
+                for s in 0..slot {
+                    self.tables[s].truncate(&mut pool, prior[s]);
+                }
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Flatten the tables into the `[batch, nbl]` i32 operand the
+    /// block-native programs take. Rows pad with `trash` — the pool's
+    /// spare row that absorbs dead-slot and overshoot writes and is never
+    /// attended (the frontier mask sits below any padded entry).
+    pub fn operand(&self, nbl: usize, trash: i32) -> Vec<i32> {
+        let batch = self.tables.len();
+        let mut out = vec![trash; batch * nbl];
+        for slot in 0..batch {
+            if self.dead[slot] {
+                continue;
+            }
+            let blocks = self.tables[slot].blocks();
+            assert!(blocks.len() <= nbl, "table of {} blocks exceeds operand {nbl}", blocks.len());
+            for (j, &b) in blocks.iter().enumerate() {
+                out[slot * nbl + j] = b as i32;
+            }
+        }
+        out
     }
 }
 
@@ -142,6 +192,12 @@ impl KvSet {
         self.pages.is_some()
     }
 
+    /// Whether this cache is block-native: the device programs index its
+    /// block tables directly, so merge/split/compact are table edits.
+    pub fn block_native(&self) -> bool {
+        self.pages.as_ref().is_some_and(|p| p.device)
+    }
+
     /// Attach paged allocation: one block table per slot, covering the
     /// current physical frontier. All-or-nothing — on pool exhaustion the
     /// cache stays dense (`pages` remains `None`) and nothing leaks.
@@ -152,17 +208,56 @@ impl KvSet {
         Ok(())
     }
 
-    /// Reserve pool blocks for the next lockstep block write of `n`
-    /// positions (no-op on a dense cache). Called *before*
-    /// `advance_frontier`; an `Err` means the pool cannot cover the write
-    /// and the caller must back off (queueing / 503), with the cache
-    /// untouched.
+    /// Attach *block-native* paged allocation: every slot gets a freshly
+    /// allocated table covering the current frontier (no block sharing —
+    /// slots write divergent tokens at the shared frontier block, so the
+    /// CoW forks the gather-bracketed mode uses would collide). The device
+    /// half — scattering the dense prefill into the pool rows — is the
+    /// engine's `adopt_blocktab_bN` call.
+    pub fn attach_native_tables(&mut self, pool: SharedPool) -> Result<(), PoolExhausted> {
+        let mut pages = PagedKv::new(pool, self.batch);
+        pages.device = true;
+        pages.reserve_all(self.pos_phys)?;
+        self.pages = Some(pages);
+        Ok(())
+    }
+
+    /// Reserve pool blocks for the next block write of `n` positions
+    /// (no-op on a dense cache). Called *before* `advance_frontier`; an
+    /// `Err` means the pool cannot cover the write and the caller must
+    /// back off (queueing / 503), with the cache untouched. Block-native
+    /// caches grow each live slot from its *own* frontier (slot clocks
+    /// diverge inside a merged gang cache); gather-bracketed caches grow
+    /// lockstep to `pos_phys + n`.
     pub fn reserve_frontier(&mut self, n: usize) -> Result<(), PoolExhausted> {
         let target = self.pos_phys + n;
         if let Some(p) = self.pages.as_mut() {
-            p.reserve_all(target)?;
+            if p.device {
+                p.reserve_step(n)?;
+            } else {
+                p.reserve_all(target)?;
+            }
         }
         Ok(())
+    }
+
+    /// Per-slot write frontiers for the block-native programs' `frontier`
+    /// operand: a live slot writes (and attends) at its table's token
+    /// length; dead slots report 0, which masks every position out.
+    pub fn slot_frontiers(&self) -> Vec<i32> {
+        let p = self.pages.as_ref().expect("slot_frontiers needs a paged cache");
+        (0..self.batch)
+            .map(|s| if p.dead[s] { 0 } else { p.tables[s].len_tokens() as i32 })
+            .collect()
+    }
+
+    /// Flatten the block tables into the `[batch, nbl]` i32 operand the
+    /// block-native programs take. Rows pad with `trash` — the pool's
+    /// spare row that absorbs dead-slot and overshoot writes and is never
+    /// attended (the frontier mask sits below any padded entry).
+    pub fn table_operand(&self, nbl: usize, trash: i32) -> Vec<i32> {
+        let p = self.pages.as_ref().expect("table_operand needs a paged cache");
+        p.operand(nbl, trash)
     }
 
     /// Return a dead beam's blocks to the pool — the early-rejection
@@ -198,7 +293,7 @@ impl KvSet {
                 tables.push(p.tables[0].fork(&mut pool_ref));
             }
         }
-        Some(PagedKv { pool, tables, dead: vec![false; n] })
+        Some(PagedKv { pool, tables, dead: vec![false; n], device: p.device })
     }
 
     /// Paged half of a gather/resize along `idx` (same indexing as
@@ -218,7 +313,39 @@ impl KvSet {
                 dead.push(p.dead[src]);
             }
         }
-        Some(PagedKv { pool, tables, dead })
+        Some(PagedKv { pool, tables, dead, device: p.device })
+    }
+
+    /// Block-native half of a gather/resize: *freshly allocated* tables
+    /// sized like the sources along `idx` — no sharing, because gathered
+    /// children immediately write divergent tokens into their frontier
+    /// blocks and a refcount fork would make those writes collide. The
+    /// device half (row copies through the pool) is the engine's
+    /// `copy_blocktab_bN` call. All-or-nothing on exhaustion.
+    pub fn gather_fresh_tables(&self, idx: &[i32]) -> Result<PagedKv, PoolExhausted> {
+        let p = self.pages.as_ref().expect("gather_fresh_tables needs a paged cache");
+        let pool = p.pool.clone();
+        let mut tables: Vec<BlockTable> = Vec::with_capacity(idx.len());
+        let mut dead = Vec::with_capacity(idx.len());
+        {
+            let mut pool_ref = pool.borrow_mut();
+            for &src in idx {
+                let src = src as usize;
+                assert!(src < self.batch, "gather index {src} out of range");
+                let mut t = BlockTable::new();
+                if !p.dead[src] {
+                    if let Err(e) = t.reserve(&mut pool_ref, p.tables[src].len_tokens()) {
+                        for ft in &mut tables {
+                            ft.release_all(&mut pool_ref);
+                        }
+                        return Err(e);
+                    }
+                }
+                tables.push(t);
+                dead.push(p.dead[src]);
+            }
+        }
+        Ok(PagedKv { pool, tables, dead, device: true })
     }
 
     /// Paged half of a gang merge: the union cache's tables fork the
@@ -244,7 +371,91 @@ impl KvSet {
                 dead.push(src.dead[row]);
             }
         }
-        Some(PagedKv { pool, tables, dead })
+        Some(PagedKv { pool, tables, dead, device: pa.device })
+    }
+
+    /// Block-native gang merge: build the union cache as *pure table
+    /// edits* — live member slots fork their tables (refcount bumps, zero
+    /// device work), padding slots become dead slots with empty tables.
+    /// Padding detection: the `merge_index` contract packs each live slot
+    /// exactly once, so any repeat occurrence of an index is a pad. The
+    /// dense path replays slot 0's rows for pads, which is harmless when
+    /// the device write lands at a lockstep frontier — but a block-native
+    /// pad forking slot 0's table would *write into slot 0's frontier
+    /// block*, so pads here own nothing and write to the pool's trash row
+    /// instead. `None` unless both members are block-native.
+    pub fn merge_tables(a: &KvSet, b: &KvSet, idx: &[i32]) -> Option<KvSet> {
+        if !a.block_native() || !b.block_native() {
+            return None;
+        }
+        let (pa, pb) = (a.pages.as_ref()?, b.pages.as_ref()?);
+        let s = a.cache_len;
+        let (pos, mut pos_log, mut valid) = KvSet::merge_bookkeeping(a, b, idx);
+        let pool = pa.pool.clone();
+        let mut tables = Vec::with_capacity(idx.len());
+        let mut dead = Vec::with_capacity(idx.len());
+        let mut seen = vec![false; a.batch + b.batch];
+        {
+            let mut pool_ref = pool.borrow_mut();
+            for (d, &i) in idx.iter().enumerate() {
+                let i = i as usize;
+                if seen[i] {
+                    // padding replay: a dead slot that attends nothing and
+                    // writes only to the trash row
+                    tables.push(BlockTable::new());
+                    dead.push(true);
+                    pos_log[d] = 0;
+                    valid[d * s..(d + 1) * s].fill(0);
+                    continue;
+                }
+                seen[i] = true;
+                let (src, row) =
+                    if i < a.batch { (pa, i) } else { (pb, i - a.batch) };
+                tables.push(src.tables[row].fork(&mut pool_ref));
+                dead.push(src.dead[row]);
+            }
+        }
+        let mut kv = KvSet::new(Vec::new(), idx.len(), s);
+        kv.pos_phys = pos;
+        kv.pos_log = pos_log;
+        kv.valid = valid;
+        kv.pages = Some(PagedKv { pool, tables, dead, device: true });
+        Some(kv)
+    }
+
+    /// Block-native gang split: carve member slots `[start, start + n)`
+    /// back out of a merged cache as table forks — the inverse of
+    /// [`KvSet::merge_tables`], again zero device work. The member's
+    /// frontier is its own live slots' table length (all equal: a member
+    /// entered the merge lockstep and every live slot advanced by the same
+    /// block writes), *not* the union max — so the union gap the lockstep
+    /// merge used to create never exists here.
+    pub fn split_tables(&self, start: usize, n: usize) -> Option<KvSet> {
+        let p = self.pages.as_ref()?;
+        if !p.device {
+            return None;
+        }
+        assert!(start + n <= self.batch, "split range {start}+{n} out of batch {}", self.batch);
+        let s = self.cache_len;
+        let mut tables = Vec::with_capacity(n);
+        let mut dead = Vec::with_capacity(n);
+        let mut frontier = 0usize;
+        {
+            let mut pool_ref = p.pool.borrow_mut();
+            for i in start..start + n {
+                tables.push(p.tables[i].fork(&mut pool_ref));
+                dead.push(p.dead[i]);
+                if !p.dead[i] {
+                    frontier = frontier.max(p.tables[i].len_tokens());
+                }
+            }
+        }
+        let mut kv = KvSet::new(Vec::new(), n, s);
+        kv.pos_phys = frontier;
+        kv.pos_log = self.pos_log[start..start + n].to_vec();
+        kv.valid = self.valid[start * s..(start + n) * s].to_vec();
+        kv.pages = Some(PagedKv { pool: p.pool.clone(), tables, dead, device: true });
+        Some(kv)
     }
 
     /// Mark `[start, start+n)` physical positions of `slot` attendable and
@@ -309,11 +520,64 @@ impl KvSet {
         (spent - valid_total) as f64 / spent as f64
     }
 
-    /// Physical positions a re-compaction would reclaim: the frontier
-    /// drops to the max dense length over slots.
+    /// Last attendable position of a slot, exclusive (0 when the slot
+    /// attends nothing). The block-native truncation target: everything at
+    /// or past the max tail over slots is junk in *every* slot.
+    fn tail_len(&self, slot: usize) -> usize {
+        let row = slot * self.cache_len;
+        (0..self.cache_len)
+            .rev()
+            .find(|&p| self.valid[row + p] != 0)
+            .map_or(0, |p| p + 1)
+    }
+
+    /// Physical positions a re-compaction would reclaim — mode-aware,
+    /// because the two compaction mechanisms reclaim different things. The
+    /// device-gather repack packs each slot's valid positions dense, so
+    /// the frontier drops to the max *dense* length; the block-native
+    /// table truncation keeps interior holes (no rows move) and only
+    /// reclaims the common junk tail, so the frontier drops to the max
+    /// *tail* length. Reporting the repack number on a block-native cache
+    /// would promise reclaim the truncation cannot deliver and livelock
+    /// the coordinator's rescue trigger.
     pub fn reclaimable(&self) -> usize {
-        let (_, _, max_dense) = self.junk_stats();
-        self.pos_phys.saturating_sub(max_dense)
+        if self.block_native() {
+            let tail = (0..self.batch).map(|s| self.tail_len(s)).max().unwrap_or(0);
+            self.pos_phys.saturating_sub(tail)
+        } else {
+            let (_, _, max_dense) = self.junk_stats();
+            self.pos_phys.saturating_sub(max_dense)
+        }
+    }
+
+    /// Block-native re-compaction: truncate every live slot's table to the
+    /// common max tail length and drop the frontier to match — a pure
+    /// table edit (tail blocks release by refcount), no device gather, no
+    /// validity repack. Uniform across slots because the lockstep commit
+    /// discipline (`decode_absorb` commits at `pos_phys - decode_block`
+    /// for every pending slot) requires live tables to share one frontier
+    /// outside transient merges. Returns `(positions_reclaimed,
+    /// blocks_freed)`; `(0, 0)` when the junk tail is empty.
+    pub fn compact_tables(&mut self) -> (usize, usize) {
+        assert!(self.block_native(), "compact_tables is the block-native path");
+        let target = (0..self.batch).map(|s| self.tail_len(s)).max().unwrap_or(0);
+        let reclaimed = self.pos_phys.saturating_sub(target);
+        if reclaimed == 0 {
+            return (0, 0);
+        }
+        let p = self.pages.as_mut().expect("block_native implies pages");
+        let mut pool = p.pool.borrow_mut();
+        let free_before = pool.free_blocks();
+        for slot in 0..p.tables.len() {
+            if !p.dead[slot] {
+                let keep = target.min(p.tables[slot].len_tokens());
+                p.tables[slot].truncate(&mut pool, keep);
+            }
+        }
+        let freed = pool.free_blocks() - free_before;
+        drop(pool);
+        self.pos_phys = target;
+        (reclaimed, freed)
     }
 
     /// Plan a re-compaction (pure — bookkeeping is untouched until
@@ -376,19 +640,7 @@ impl KvSet {
     /// buffers (no per-call `valid` clone — this runs on every beam prune
     /// at `batch * cache_len` cost).
     pub fn permute_bookkeeping(&mut self, idx: &[i32]) {
-        assert_eq!(idx.len(), self.batch);
-        let s = self.cache_len;
-        self.scratch_log.clear();
-        self.scratch_valid.clear();
-        self.scratch_valid.reserve(self.valid.len());
-        for &src in idx {
-            let src = src as usize;
-            assert!(src < self.batch, "gather index {src} out of range");
-            self.scratch_log.push(self.pos_log[src]);
-            self.scratch_valid.extend_from_slice(&self.valid[src * s..(src + 1) * s]);
-        }
-        std::mem::swap(&mut self.pos_log, &mut self.scratch_log);
-        std::mem::swap(&mut self.valid, &mut self.scratch_valid);
+        self.permute_host(idx);
         // paged: the permute is a table edit — fork the source tables
         // along idx (refcount bumps) and release the old generation
         if let Some(p) = self.pages.as_mut() {
@@ -406,6 +658,28 @@ impl KvSet {
             p.tables = tables;
             p.dead = dead;
         }
+    }
+
+    /// The dense half of [`KvSet::permute_bookkeeping`]: gather `pos_log`
+    /// and `valid` along `idx` through the reusable scratch, leaving any
+    /// block tables alone. The block-native gather path calls this
+    /// directly — its tables are freshly allocated *copies*
+    /// ([`KvSet::gather_fresh_tables`]), not forks, so the fork branch
+    /// above must not run over them.
+    pub fn permute_host(&mut self, idx: &[i32]) {
+        assert_eq!(idx.len(), self.batch);
+        let s = self.cache_len;
+        self.scratch_log.clear();
+        self.scratch_valid.clear();
+        self.scratch_valid.reserve(self.valid.len());
+        for &src in idx {
+            let src = src as usize;
+            assert!(src < self.batch, "gather index {src} out of range");
+            self.scratch_log.push(self.pos_log[src]);
+            self.scratch_valid.extend_from_slice(&self.valid[src * s..(src + 1) * s]);
+        }
+        std::mem::swap(&mut self.pos_log, &mut self.scratch_log);
+        std::mem::swap(&mut self.valid, &mut self.scratch_valid);
     }
 
     /// Host bookkeeping for a device `merge(idx)` of two caches: dest slot
@@ -952,6 +1226,332 @@ mod tests {
         drop(one);
         drop(b);
         assert_eq!(pool.borrow().free_blocks(), 32, "no leak through share edits");
+    }
+
+    // ---------------------------------------------- block-native caches
+
+    fn native_toy(batch: usize, cache_len: usize, pool: &crate::runtime::blocks::SharedPool) -> KvSet {
+        let mut kv = toy(batch, cache_len);
+        kv.attach_native_tables(pool.clone()).expect("pool covers a fresh cache");
+        kv
+    }
+
+    #[test]
+    fn native_reserve_grows_each_slot_from_its_own_frontier() {
+        let pool = shared_pool(32, 4);
+        let mut a = native_toy(1, 32, &pool);
+        a.reserve_frontier(8).unwrap();
+        a.advance_frontier(8);
+        a.commit(0, 0, 8);
+        let mut b = native_toy(1, 32, &pool);
+        b.reserve_frontier(4).unwrap();
+        b.advance_frontier(4);
+        b.commit(0, 0, 4);
+        let merged = KvSet::merge_tables(&a, &b, &[0, 1]).expect("both native");
+        assert_eq!(merged.slot_frontiers(), vec![8, 4], "members keep their own clocks");
+        let mut merged = merged;
+        merged.reserve_frontier(4).unwrap();
+        merged.advance_frontier(4);
+        assert_eq!(merged.slot_frontiers(), vec![12, 8], "per-slot growth, no union gap");
+        assert_eq!(merged.pos_phys, 12);
+    }
+
+    #[test]
+    fn merge_tables_pads_are_dead_and_own_nothing() {
+        let pool = shared_pool(32, 4);
+        let mut a = native_toy(2, 16, &pool);
+        a.reserve_frontier(4).unwrap();
+        a.advance_frontier(4);
+        a.commit(0, 0, 4);
+        a.commit(1, 0, 4);
+        let mut b = native_toy(1, 16, &pool);
+        b.reserve_frontier(4).unwrap();
+        b.advance_frontier(4);
+        b.commit(0, 0, 4);
+        let held = pool.borrow().allocated();
+        // variant 4 packs [a0, a1, b0] + one pad replaying index 0
+        let merged = KvSet::merge_tables(&a, &b, &[0, 1, 2, 0]).expect("both native");
+        assert_eq!(pool.borrow().allocated(), held, "merge is refcount edits only");
+        let p = merged.pages.as_ref().unwrap();
+        assert!(p.is_dead(3), "pad slot is dead");
+        assert!(p.table(3).is_empty(), "pad forks nothing — no frontier-block collision");
+        assert_eq!(merged.pos_log[3], 0);
+        assert_eq!(merged.valid_count(3), 0);
+        assert_eq!(p.table(0).blocks(), a.pages.as_ref().unwrap().table(0).blocks());
+        assert_eq!(p.table(2).blocks(), b.pages.as_ref().unwrap().table(0).blocks());
+        drop(merged);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.borrow().free_blocks(), 32, "no leak through the merge");
+    }
+
+    #[test]
+    fn split_tables_restores_member_frontier_and_bookkeeping() {
+        let pool = shared_pool(64, 4);
+        let mut a = native_toy(2, 32, &pool);
+        a.reserve_frontier(8).unwrap();
+        a.advance_frontier(8);
+        a.commit(0, 0, 8);
+        a.commit(1, 0, 6);
+        let mut b = native_toy(1, 32, &pool);
+        b.reserve_frontier(4).unwrap();
+        b.advance_frontier(4);
+        b.commit(0, 0, 4);
+        let mut merged = KvSet::merge_tables(&a, &b, &[0, 1, 2, 0]).expect("both native");
+        // one shared block write of 4: every live slot advances by 4
+        merged.reserve_frontier(4).unwrap();
+        merged.advance_frontier(4);
+        let ma = merged.split_tables(0, 2).expect("native split");
+        let mb = merged.split_tables(2, 1).expect("native split");
+        assert_eq!(ma.pos_phys, 12, "member a frontier = own 8 + 4, not union max");
+        assert_eq!(mb.pos_phys, 8, "member b frontier = own 4 + 4");
+        assert_eq!(ma.pos_log, a.pos_log);
+        assert_eq!(mb.pos_log, b.pos_log);
+        assert_eq!(ma.valid, a.valid);
+        assert_eq!(mb.valid, b.valid);
+        drop(merged);
+        drop(ma);
+        drop(mb);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.borrow().free_blocks(), 64, "split/merge conserve the pool");
+    }
+
+    #[test]
+    fn compact_tables_truncates_uniformly_and_keeps_rows_in_place() {
+        let pool = shared_pool(32, 2);
+        let mut kv = native_toy(2, 16, &pool);
+        kv.reserve_frontier(10).unwrap();
+        kv.advance_frontier(10);
+        kv.commit(0, 0, 2); // slot0 tail ends at 2
+        kv.commit(1, 3, 3); // slot1 tail ends at 6 — the common target
+        let valid_before = kv.valid.clone();
+        assert_eq!(kv.reclaimable(), 4, "tail reclaim, not the repack number");
+        let (reclaimed, freed) = kv.compact_tables();
+        assert_eq!(reclaimed, 4);
+        assert!(freed > 0, "tail blocks went back to the pool");
+        assert_eq!(kv.pos_phys, 6);
+        assert_eq!(kv.valid, valid_before, "no repack: rows stay in place");
+        let p = kv.pages.as_ref().unwrap();
+        assert_eq!(p.table(0).len_tokens(), 6, "uniform truncation keeps slots lockstep");
+        assert_eq!(p.table(1).len_tokens(), 6);
+        assert_eq!(kv.compact_tables(), (0, 0), "nothing left to truncate");
+    }
+
+    #[test]
+    fn native_reclaimable_counts_only_the_common_tail() {
+        let pool = shared_pool(32, 4);
+        let mut kv = native_toy(2, 16, &pool);
+        kv.reserve_frontier(8).unwrap();
+        kv.advance_frontier(8);
+        kv.commit(0, 0, 2);
+        kv.commit(0, 6, 2); // interior hole at {2..6}, tail reaches 8
+        kv.commit(1, 0, 2);
+        assert_eq!(kv.reclaimable(), 0, "tail occupied: truncation reclaims nothing");
+        let dense_twin = {
+            let mut d = toy(2, 16);
+            d.pos_phys = kv.pos_phys;
+            d.valid = kv.valid.clone();
+            d
+        };
+        assert_eq!(dense_twin.reclaimable(), 4, "the repack would reclaim the holes");
+    }
+
+    #[test]
+    fn gather_fresh_tables_copies_instead_of_sharing() {
+        let pool = shared_pool(32, 4);
+        let mut kv = native_toy(2, 16, &pool);
+        kv.reserve_frontier(8).unwrap();
+        kv.advance_frontier(8);
+        let held = pool.borrow().allocated();
+        let fresh = kv.gather_fresh_tables(&[0, 0]).expect("pool has room");
+        assert_eq!(pool.borrow().allocated(), held + 4, "two fresh 2-block tables");
+        let orig = kv.pages.as_ref().unwrap();
+        assert_ne!(fresh.table(0).blocks(), orig.table(0).blocks(), "no sharing");
+        assert_ne!(fresh.table(0).blocks(), fresh.table(1).blocks(), "children independent");
+        for &b in fresh.table(0).blocks() {
+            assert_eq!(pool.borrow().refcount(b), 1, "fresh blocks are unshared");
+        }
+        drop(fresh);
+        assert_eq!(pool.borrow().allocated(), held, "fresh generation released cleanly");
+    }
+
+    /// Observational identity of the table-edit gang path: merging two
+    /// random members with [`KvSet::merge_tables`] and splitting them back
+    /// out must reproduce each member's bookkeeping exactly (the device
+    /// rows never moved, so bookkeeping identity *is* observational
+    /// identity), with pad slots dead, per-slot frontiers preserved
+    /// through a shared block write, and the pool refcount-balanced after
+    /// every cache drops.
+    #[test]
+    fn prop_merge_split_tables_round_trips_members() {
+        use crate::util::propcheck::check_simple;
+        check_simple(
+            "merge-split-tables-round-trip",
+            |rng| {
+                let s = 16 + 4 * rng.below(4);
+                let ba = 1 + rng.below(3);
+                let bb = 1 + rng.below(3);
+                let fa = 4 * (1 + rng.below(2)); // member frontiers (block multiples)
+                let fb = 4 * (1 + rng.below(2));
+                let commits_a: Vec<usize> = (0..ba).map(|_| rng.below(fa + 1)).collect();
+                let commits_b: Vec<usize> = (0..bb).map(|_| rng.below(fb + 1)).collect();
+                let pad = rng.below(3); // extra pad slots in the variant
+                (s, ba, bb, fa, fb, commits_a, commits_b, pad)
+            },
+            |&(s, ba, bb, fa, fb, ref commits_a, ref commits_b, pad)| {
+                let pool = shared_pool(4 * (ba + bb) * (s / 4), 4);
+                let build = |batch: usize, f: usize, commits: &[usize]| {
+                    let mut kv = KvSet::new(Vec::new(), batch, s);
+                    kv.attach_native_tables(pool.clone()).expect("sized for the run");
+                    kv.reserve_frontier(f).map_err(|e| e.to_string())?;
+                    kv.advance_frontier(f);
+                    for (slot, &n) in commits.iter().enumerate() {
+                        if n > 0 {
+                            kv.commit(slot, 0, n);
+                        }
+                    }
+                    Ok::<KvSet, String>(kv)
+                };
+                let a = build(ba, fa, commits_a)?;
+                let b = build(bb, fb, commits_b)?;
+                let mut idx: Vec<i32> = (0..(ba + bb) as i32).collect();
+                idx.extend(std::iter::repeat(0).take(pad));
+                let mut merged =
+                    KvSet::merge_tables(&a, &b, &idx).ok_or("members are block-native")?;
+                if merged.pos_phys != fa.max(fb) {
+                    return Err("merged frontier is not the member max".into());
+                }
+                // one shared block write: every live slot advances by 4
+                merged.reserve_frontier(4).map_err(|e| e.to_string())?;
+                merged.advance_frontier(4);
+                let sa = merged.split_tables(0, ba).ok_or("native split")?;
+                let sb = merged.split_tables(ba, bb).ok_or("native split")?;
+                for (m, src, f) in [(&sa, &a, fa), (&sb, &b, fb)] {
+                    if m.pos_phys != f + 4 {
+                        return Err(format!(
+                            "member frontier {} != own clock {}",
+                            m.pos_phys,
+                            f + 4
+                        ));
+                    }
+                    if m.pos_log != src.pos_log || m.valid != src.valid {
+                        return Err("member bookkeeping changed through merge+split".into());
+                    }
+                    let mp = m.pages.as_ref().expect("split is paged");
+                    for slot in 0..m.batch {
+                        if !mp.is_dead(slot) && mp.table(slot).len_tokens() != m.pos_phys {
+                            return Err(format!("slot {slot} table off the member frontier"));
+                        }
+                    }
+                }
+                for d in (ba + bb)..idx.len() {
+                    let mp = merged.pages.as_ref().expect("paged");
+                    if !mp.is_dead(d) || !mp.table(d).is_empty() {
+                        return Err("pad slot owns blocks".into());
+                    }
+                }
+                drop(merged);
+                drop(sa);
+                drop(sb);
+                drop(a);
+                drop(b);
+                let pl = pool.borrow();
+                if pl.free_blocks() != pl.total() {
+                    return Err("blocks leaked through merge/split".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Observational identity of the table-edit compaction: on a cache
+    /// whose junk is all *tail* (the shape gang pacing produces),
+    /// `compact_tables` must reclaim exactly what the device-gather repack
+    /// would, leave every attendable (position -> value) pair untouched
+    /// (nothing moves, so this is immediate — the property pins it), and
+    /// keep live tables covering the frontier with the pool conserved.
+    #[test]
+    fn prop_compact_tables_matches_repack_on_tail_junk() {
+        use crate::util::propcheck::check_simple;
+        check_simple(
+            "compact-tables-vs-repack",
+            |rng| {
+                let s = 16 + 4 * rng.below(4);
+                let batch = 1 + rng.below(4);
+                let f = 4 * (1 + rng.below(s / 4));
+                // dense prefixes only — tail-junk shape, where truncation
+                // and repack agree on the reclaim
+                let dense: Vec<usize> = (0..batch).map(|_| rng.below(f + 1)).collect();
+                (s, batch, f, dense)
+            },
+            |&(s, batch, f, ref dense)| {
+                let pool = shared_pool(batch * s / 4 + batch, 4);
+                let mut kv = KvSet::new(Vec::new(), batch, s);
+                kv.attach_native_tables(pool.clone()).map_err(|e| e.to_string())?;
+                kv.reserve_frontier(f).map_err(|e| e.to_string())?;
+                kv.advance_frontier(f);
+                for (slot, &n) in dense.iter().enumerate() {
+                    if n > 0 {
+                        kv.commit(slot, 0, n);
+                    }
+                }
+                let mut twin = KvSet::new(Vec::new(), batch, s);
+                twin.pos_phys = kv.pos_phys;
+                twin.pos_log = kv.pos_log.clone();
+                twin.valid = kv.valid.clone();
+                let valid_before = kv.valid.clone();
+                let want = twin.reclaimable();
+                if kv.reclaimable() != want {
+                    return Err("tail-junk reclaim estimate diverged from repack".into());
+                }
+                let (reclaimed, _) = kv.compact_tables();
+                if reclaimed != want {
+                    return Err(format!("truncation reclaimed {reclaimed}, repack {want}"));
+                }
+                if let Some(plan) = twin.compact_plan() {
+                    twin.apply_compact(&plan);
+                }
+                if kv.pos_phys != twin.pos_phys {
+                    return Err("frontiers diverged from the repack twin".into());
+                }
+                if kv.valid != valid_before {
+                    return Err("truncation moved validity rows".into());
+                }
+                let p = kv.pages.as_ref().expect("paged");
+                for slot in 0..batch {
+                    if !p.is_dead(slot) && p.table(slot).len_tokens() != kv.pos_phys {
+                        return Err(format!("slot {slot} table off the frontier"));
+                    }
+                }
+                drop(kv);
+                let pl = pool.borrow();
+                if pl.free_blocks() != pl.total() {
+                    return Err("pool conservation broken".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn table_operand_pads_with_trash_and_masks_dead_slots() {
+        let pool = shared_pool(16, 4);
+        let mut kv = native_toy(2, 16, &pool);
+        kv.reserve_frontier(8).unwrap();
+        kv.advance_frontier(8);
+        kv.commit(0, 0, 8);
+        kv.commit(1, 0, 8);
+        kv.free_slot(1);
+        let trash = 16i32; // pool row P in a P=16 pool
+        let op = kv.table_operand(4, trash);
+        assert_eq!(op.len(), 8);
+        let p = kv.pages.as_ref().unwrap();
+        let live: Vec<i32> = p.table(0).blocks().iter().map(|&b| b as i32).collect();
+        assert_eq!(&op[0..2], &live[..], "live blocks verbatim");
+        assert_eq!(&op[2..4], &[trash, trash], "unreserved logical blocks pad with trash");
+        assert_eq!(&op[4..8], &[trash; 4], "dead slot is all trash");
+        assert_eq!(kv.slot_frontiers(), vec![8, 0], "dead slot frontier masks everything");
     }
 
     /// Paged bookkeeping is invisible to the dense discipline: running an

@@ -137,9 +137,13 @@ pub struct PoolOptions {
     /// shards no longer both execute.
     pub singleflight: bool,
     /// Paged-KV block pool size per shard (blocks of the manifest's
-    /// `kv_block` tokens); 0 = dense per-slot caches. Silently falls back
-    /// to dense on artifact sets exported before paging existed.
-    pub kv_pool_blocks: usize,
+    /// `kv_block` tokens). `None` defaults to the manifest's exported
+    /// `pool_blocks` sizing when present (the geometry block-native
+    /// device pools were compiled for) and dense otherwise; `Some(0)`
+    /// forces dense per-slot caches; `Some(n)` sets an explicit pool.
+    /// Silently falls back to dense on artifact sets exported before
+    /// paging existed.
+    pub kv_pool_blocks: Option<usize>,
 }
 
 /// RAII slot reservation against one shard's depth gauge. Dropping the
@@ -222,7 +226,7 @@ impl EnginePool {
                 default_deadline_ms: 0,
                 fleet: None,
                 singleflight: false,
-                kv_pool_blocks: 0,
+                kv_pool_blocks: None,
             },
         )
     }
@@ -694,6 +698,13 @@ impl EnginePool {
         out.push_str(&format!("erprm_engine_decode_calls_total {}\n", s.decode_calls));
         out.push_str(&format!("erprm_engine_score_calls_total {}\n", s.score_calls));
         out.push_str(&format!("erprm_engine_merge_calls_total {}\n", s.merge_calls));
+        // Block-native table edits: gang merges/splits and compactions
+        // that were pure host bookkeeping (zero device calls). With
+        // block-native attention on, these grow while the device-call
+        // counters above stay flat for ganged traffic.
+        out.push_str(&format!("erprm_kv_table_merges_total {}\n", s.table_merges));
+        out.push_str(&format!("erprm_kv_table_splits_total {}\n", s.table_splits));
+        out.push_str(&format!("erprm_kv_table_compacts_total {}\n", s.table_compacts));
         // KV re-compaction: junk share of spent cache positions (live
         // utilization signal), compactions run, and positions reclaimed
         out.push_str(&format!("erprm_kv_junk_fraction {:.4}\n", s.junk_fraction()));
@@ -707,6 +718,26 @@ impl EnginePool {
         out.push_str(&format!("erprm_kv_pool_blocks_total {}\n", s.pool_blocks_total));
         out.push_str(&format!("erprm_kv_pool_blocks_free {}\n", s.pool_blocks_free));
         out.push_str(&format!("erprm_kv_pool_hwm {}\n", s.pool_hwm));
+        // Admission-facing pool pressure in [0, 1]: how close the pool
+        // has come to exhaustion (high-water mark over capacity), or the
+        // deferred-admission rate when the fleet loop is holding jobs
+        // back for block headroom — whichever signal is stronger. 0 on
+        // dense engines.
+        let occupancy = if s.pool_blocks_total == 0 {
+            0.0
+        } else {
+            s.pool_hwm as f64 / s.pool_blocks_total as f64
+        };
+        let deferred_rate = match self.fleet_totals() {
+            Some(t) if t.pool_deferred + t.admitted > 0 => {
+                t.pool_deferred as f64 / (t.pool_deferred + t.admitted) as f64
+            }
+            _ => 0.0,
+        };
+        out.push_str(&format!(
+            "erprm_kv_pool_pressure {:.4}\n",
+            occupancy.max(deferred_rate).min(1.0)
+        ));
         out.push_str(&format!("erprm_engine_compiles_total {}\n", s.compiles));
         out.push_str(&format!("erprm_engine_compile_wall_seconds {:.3}\n", s.compile_wall_s));
         out.push_str(&format!("erprm_engine_execute_wall_seconds {:.3}\n", s.execute_wall_s));
@@ -733,7 +764,7 @@ impl EnginePool {
 fn shard_main(
     idx: usize,
     artifacts_dir: PathBuf,
-    kv_pool_blocks: usize,
+    kv_pool_blocks: Option<usize>,
     rx: mpsc::Receiver<Msg>,
     ready_tx: mpsc::Sender<Result<()>>,
     solved: Arc<AtomicU64>,
@@ -752,7 +783,11 @@ fn shard_main(
             return;
         }
     };
-    if kv_pool_blocks > 0 && !engine.enable_paging(kv_pool_blocks) {
+    // pool sizing: an explicit CLI/config value wins; absent one, the
+    // manifest's exported `pool_blocks` (the geometry the block-native
+    // device pools were compiled for) is the default
+    let pool_request = kv_pool_blocks.or(engine.manifest.pool_blocks).unwrap_or(0);
+    if pool_request > 0 && !engine.enable_paging(pool_request) {
         // artifacts predate paged export (no kv_block in the manifest):
         // serve dense rather than refusing to start
         log_debug!("shard {idx}: manifest has no kv_block; paged KV off, dense caches");
@@ -977,7 +1012,7 @@ mod tests {
                 default_deadline_ms: 0,
                 fleet: Some(FleetOptions::default()),
                 singleflight: false,
-                kv_pool_blocks: 0,
+                kv_pool_blocks: None,
             },
         );
         assert!(r.is_err());
@@ -994,7 +1029,7 @@ mod tests {
                 default_deadline_ms: 0,
                 fleet: None,
                 singleflight: false,
-                kv_pool_blocks: 0,
+                kv_pool_blocks: None,
             },
         );
         assert!(r.is_err());
@@ -1007,7 +1042,7 @@ mod tests {
                 default_deadline_ms: 0,
                 fleet: Some(FleetOptions { max_inflight: 0, ..FleetOptions::default() }),
                 singleflight: false,
-                kv_pool_blocks: 0,
+                kv_pool_blocks: None,
             },
         );
         assert!(r.is_err());

@@ -408,7 +408,7 @@ fn fleet_pool(dir: PathBuf, shards: usize, max_inflight: usize, cache: usize) ->
             // off so these tests keep exercising the *shard-local*
             // coalescer; the pool-level table has its own tests
             singleflight: false,
-            kv_pool_blocks: 0,
+            kv_pool_blocks: None,
         },
     )
     .expect("fleet pool spawn")
@@ -634,7 +634,7 @@ fn gang_batched_solves_are_byte_identical_to_solo() {
             default_deadline_ms: 0,
             fleet: Some(FleetOptions { max_inflight: 4, gang: true, ..FleetOptions::default() }),
             singleflight: false,
-            kv_pool_blocks: 0,
+            kv_pool_blocks: None,
         },
     )
     .expect("gang pool spawn");
@@ -931,7 +931,7 @@ fn pool_singleflight_coalesces_across_shards() {
             default_deadline_ms: 0,
             fleet: None,
             singleflight: true,
-            kv_pool_blocks: 0,
+            kv_pool_blocks: None,
         },
     )
     .expect("pool spawn");
@@ -1117,7 +1117,7 @@ fn paged_fleet_exhaustion_degrades_to_queueing() {
             default_deadline_ms: 0,
             fleet: Some(FleetOptions { max_inflight: 4, ..FleetOptions::default() }),
             singleflight: false,
-            kv_pool_blocks: floor,
+            kv_pool_blocks: Some(floor),
         },
     )
     .expect("paged fleet pool spawn");
@@ -1172,4 +1172,139 @@ fn deterministic_solves_with_same_seed() {
     let b = solve_early_rejection(&e, "lm-concise", "prm-large", &problems[0], &c, 0.5).unwrap();
     assert_eq!(a.best_trace, b.best_trace);
     assert_eq!(a.ledger, b.ledger);
+}
+
+// Tentpole equivalence gate, primitive level: one merged decode must
+// sample identical tokens whether the member caches are dense (device
+// KV-concat merge programs), gather-paged (same device programs over
+// pool-accounted caches), or block-native (host table concatenation +
+// table-indexed attention kernel). The block-native leg must do it with
+// zero merge/split device calls.
+#[test]
+fn merged_decode_identical_across_dense_gather_and_block_native() {
+    let Some(dir) = artifacts() else { return };
+    let dense = Engine::load(&dir).expect("engine load");
+    if !dense.manifest.model("lm").unwrap().has_program("merge_b4_b4_to_b8") {
+        eprintln!("[integration] artifacts lack merge programs; skipping 3-way merge test");
+        return;
+    }
+    let pa = Problem { v0: 25, ops: vec![OpStep { op: tk::PLUS, d: 4 }] };
+    let pb = Problem { v0: 61, ops: vec![OpStep { op: tk::MINUS, d: 5 }] };
+    let prev: Vec<i32> = [vec![tk::DIG0 + 2; 4], vec![tk::DIG0 + 3; 4]].concat();
+    let keys: Vec<u32> = (0..16).collect();
+    let run = |e: &Engine| {
+        let (_, ka1) = e.lm_prefill("lm-concise", &pa.prompt_tokens()).unwrap();
+        let (_, kb1) = e.lm_prefill("lm-concise", &pb.prompt_tokens()).unwrap();
+        let ka = e.kv_broadcast("lm-concise", &ka1, 4).unwrap();
+        let kb = e.kv_broadcast("lm-concise", &kb1, 4).unwrap();
+        let idx: Vec<i32> = (0..8).collect();
+        let mut merged = e.kv_merge("lm-concise", &ka, &kb, &idx).unwrap();
+        let sampled = e.lm_decode_block("lm-concise", &mut merged, &prev, 0.7, &keys).unwrap();
+        let sa = e.kv_split("lm-concise", &merged, 0, 4).unwrap();
+        let sb = e.kv_split("lm-concise", &merged, 4, 4).unwrap();
+        (sampled, merged.pos_phys, sa.pos_log.clone(), sb.pos_log.clone())
+    };
+    let reference = run(&dense);
+    drop(dense);
+
+    let gather = Engine::load(&dir).expect("engine load");
+    if !gather.enable_paging(4096) {
+        eprintln!("[integration] artifacts predate paging; skipping paged legs");
+        return;
+    }
+    gather.disable_block_native();
+    assert_eq!(run(&gather), reference, "gather-paged merge/decode/split diverged from dense");
+    drop(gather);
+
+    let native = Engine::load(&dir).expect("engine load");
+    assert!(native.enable_paging(4096));
+    if !native.block_native() {
+        eprintln!("[integration] artifacts lack blocktab programs; skipping block-native leg");
+        return;
+    }
+    assert_eq!(run(&native), reference, "block-native merge/decode/split diverged from dense");
+    let s = native.stats();
+    assert_eq!(s.merge_calls, 0, "block-native gang merge must not touch the device: {s:?}");
+    assert!(s.table_merges >= 1, "{s:?}");
+    assert!(s.table_splits >= 2, "{s:?}");
+}
+
+// Tentpole equivalence gate, end-to-end: ganged fleet traffic must
+// produce byte-identical SolveOutcomes whether the shard runs dense
+// caches or the manifest-default paged pool (block-native when the
+// artifact set exports blocktab programs) — and in the block-native
+// case the whole run must finish with zero device merge/compact calls.
+#[test]
+fn gang_outcomes_identical_between_dense_and_block_native_pools() {
+    let Some(dir) = artifacts() else { return };
+    let e = Engine::load(&dir).expect("engine load");
+    let native_ready = e.manifest.pool_blocks.is_some()
+        && e.enable_paging(4096)
+        && e.block_native();
+    let c = cfg(SearchMode::EarlyRejection, 8, 8);
+    let problems = problem_set(&SATMATH, 3, 4242);
+    drop(e);
+
+    let run_pool = |kv_pool_blocks: Option<usize>| {
+        let epool = EnginePool::spawn_with(
+            dir.clone(),
+            PoolOptions {
+                shards: 1,
+                capacity: 64,
+                cache_entries: 0,
+                default_deadline_ms: 0,
+                fleet: Some(FleetOptions {
+                    max_inflight: 3,
+                    gang: true,
+                    ..FleetOptions::default()
+                }),
+                singleflight: false,
+                kv_pool_blocks,
+            },
+        )
+        .expect("pool spawn");
+        let joins: Vec<_> = problems
+            .iter()
+            .cloned()
+            .map(|p| {
+                let pool = epool.clone();
+                let cc = c.clone();
+                std::thread::spawn(move || {
+                    let req = api::SolveRequest {
+                        problem: p,
+                        mode: SearchMode::EarlyRejection,
+                        n_beams: 8,
+                        tau: 8,
+                        lm: "lm-concise".into(),
+                        prm: "prm-large".into(),
+                        deadline_ms: None,
+                        priority: 0,
+                    };
+                    pool.solve(req, cc).unwrap()
+                })
+            })
+            .collect();
+        let outs: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let stats = epool.engine_stats();
+        epool.shutdown();
+        (outs, stats)
+    };
+
+    let (dense_outs, _) = run_pool(Some(0));
+    let (paged_outs, paged_stats) = run_pool(None);
+    for (i, (d, p)) in dense_outs.iter().zip(&paged_outs).enumerate() {
+        assert_eq!(p.answer, d.answer, "problem {i}: answer diverged dense vs paged gang");
+        assert_eq!(p.best_trace, d.best_trace, "problem {i}: trace diverged dense vs paged gang");
+        assert_eq!(p.ledger, d.ledger, "problem {i}: FLOPs diverged dense vs paged gang");
+    }
+    if native_ready {
+        assert_eq!(
+            paged_stats.merge_calls, 0,
+            "block-native ganged traffic ran a device merge: {paged_stats:?}"
+        );
+        assert_eq!(
+            paged_stats.compact_calls, 0,
+            "block-native compaction must be a table edit: {paged_stats:?}"
+        );
+    }
 }
