@@ -35,19 +35,28 @@
 //!     make artifacts && cargo run --release --example fleet_benchmark -- \
 //!         --requests 32 --clients 8 --shards 2 --max-inflight 8 --dup 4
 //!
+//! `--trace-out trace.json` additionally writes the gang run's request
+//! traces as a Chrome `trace_event` timeline (open in Perfetto or
+//! chrome://tracing; shards are processes, slots are threads). Each run
+//! also reports the early-rejection ledger — beams rejected and
+//! estimated FLOPs saved — from the per-request trace recorder.
+//!
 //! The LRU cache is off in all pools so the comparison measures the
 //! schedulers, not the cache. Gang mode needs artifacts exported with
 //! `merge_bA_bB_to_bC` programs; older artifact sets degrade to all-solo
 //! calls (the gang counters will read zero).
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use erprm::config::{SearchConfig, SearchMode};
 use erprm::fleet::FleetOptions;
+use erprm::obs::{chrome_trace, SamplePolicy, Trace, TraceOptions};
 use erprm::runtime::Manifest;
 use erprm::server::api::SolveRequest;
 use erprm::server::{EnginePool, PoolOptions};
+use erprm::util::benchkit::fmt_flops;
 use erprm::util::cli::Args;
 use erprm::util::rng::Rng;
 use erprm::util::stats;
@@ -83,6 +92,12 @@ struct Report {
     /// total, summed across shards.
     pool_hwm: u64,
     pool_total: u64,
+    /// Early-rejection ledger rollups from the pool's trace recorder
+    /// (exact — accumulated before trace sampling).
+    er_beams_rejected: u64,
+    er_flops_saved: f64,
+    /// Retained request traces, for the `--trace-out` Chrome export.
+    traces: Vec<Arc<Trace>>,
     fleet_line: String,
     gang_line: String,
 }
@@ -91,6 +106,7 @@ struct Report {
 /// (None where the request failed).
 type Digest = Option<(Option<i64>, usize, Vec<i32>)>;
 
+#[allow(clippy::too_many_arguments)]
 fn run_mode(
     label: &str,
     dir: PathBuf,
@@ -98,6 +114,7 @@ fn run_mode(
     capacity: usize,
     fleet: Option<FleetOptions>,
     kv_pool_blocks: Option<usize>,
+    trace: TraceOptions,
     clients: usize,
     requests: &[SolveRequest],
 ) -> Result<(Report, Vec<Digest>), Box<dyn std::error::Error>> {
@@ -113,6 +130,7 @@ fn run_mode(
             fleet,
             singleflight: false,
             kv_pool_blocks,
+            trace,
         },
     )?;
     let client_pool = ThreadPool::new(clients);
@@ -164,6 +182,7 @@ fn run_mode(
         None => "-".to_string(),
     };
     let es = pool.engine_stats();
+    let tr = pool.tracer().totals();
     let report = Report {
         label: label.to_string(),
         wall_s,
@@ -184,6 +203,9 @@ fn run_mode(
         table_compacts: es.table_compacts,
         pool_hwm: es.pool_hwm,
         pool_total: es.pool_blocks_total,
+        er_beams_rejected: tr.er_beams_rejected,
+        er_flops_saved: tr.er_flops_saved,
+        traces: pool.tracer().all(),
         fleet_line,
         gang_line,
     };
@@ -204,9 +226,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let gang_max_wait = args.get_u64("gang-max-wait", 1)?;
     // per-shard block-pool size for the fleet+paged run; 0 skips it
     let kv_pool_blocks = args.get_usize("kv-pool-blocks", 4096)?;
+    // --trace-out PATH: Chrome trace_event timeline of the gang run
+    // (load it in Perfetto / chrome://tracing)
+    let trace_out = args.get("trace-out").map(str::to_string);
+    // --trace-sample F: success-trace retention rate (failures always kept)
+    let trace_sample = args.get_f64("trace-sample", 1.0)?.clamp(0.0, 1.0);
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("artifacts missing; run `make artifacts` first (skipping benchmark)");
+        // still honor --trace-out so trace-consuming pipelines (CI smoke
+        // included) get a valid, if empty, Chrome trace document
+        if let Some(path) = &trace_out {
+            std::fs::write(path, chrome_trace(&[]).to_string())?;
+            println!("wrote empty Chrome trace to {path}");
+        }
         return Ok(());
     }
 
@@ -233,10 +266,24 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 prm: "prm-large".into(),
                 deadline_ms: None,
                 priority: 0,
+                request_id: String::new(),
             });
         }
     }
     rng.shuffle(&mut requests); // duplicates spread out, not back-to-back
+
+    // Retain every request's trace (modulo --trace-sample) with the rate
+    // limiter effectively off — a benchmark burst is exactly the traffic
+    // the serve-time default would clip, and we want a full timeline.
+    let topts = TraceOptions {
+        capacity: requests.len().max(1),
+        sample: SamplePolicy {
+            success_rate: trace_sample,
+            max_per_sec: 1e12,
+            burst: 1e12,
+            ..SamplePolicy::default()
+        },
+    };
 
     println!(
         "firing {} requests ({} unique problems x{dup}, widths {widths:?}) from {clients} \
@@ -255,6 +302,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         capacity,
         None,
         Some(0),
+        topts,
         clients,
         &requests,
     )?;
@@ -265,6 +313,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         capacity,
         Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
         Some(0),
+        topts,
         clients,
         &requests,
     )?;
@@ -275,6 +324,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         capacity,
         Some(FleetOptions { max_inflight, gang: true, gang_max_wait, ..FleetOptions::default() }),
         Some(0),
+        topts,
         clients,
         &requests,
     )?;
@@ -296,6 +346,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             capacity,
             Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
             Some(blocks),
+            topts,
             clients,
             &requests,
         )?),
@@ -318,6 +369,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             capacity,
             Some(FleetOptions { max_inflight, gang: true, gang_max_wait, ..FleetOptions::default() }),
             None, // manifest-default pool sizing
+            topts,
             clients,
             &requests,
         )?),
@@ -336,7 +388,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     if let Some((r, _)) = &native {
         rows.push(r);
     }
-    for r in rows {
+    for r in &rows {
         println!(
             "{:<12} {:>8.2} {:>11.2} {:>8.0} {:>8.0} {:>11.1} {:>6} {:>8} {:>10} {:>10.1} \
              {:>9.1}%",
@@ -353,6 +405,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             100.0 * r.cache_util,
         );
     }
+    // Per-mode early-rejection ledger, from the per-request trace
+    // recorder rather than engine counters: same ER search, so the modes
+    // should agree — a divergence means a scheduler dropped or duplicated
+    // rejection work.
+    println!("\n== early-rejection ledger (per mode, from request traces) ==");
+    for r in &rows {
+        println!(
+            "{:<12} beams rejected {:>8}  est FLOPs saved {:>10}",
+            r.label,
+            r.er_beams_rejected,
+            fmt_flops(r.er_flops_saved),
+        );
+    }
+
     println!("\nfleet counters: fleet [{}]  gang [{}]", fleet.fleet_line, gang.fleet_line);
     println!("gang counters:  {}", gang.gang_line);
     println!(
@@ -455,6 +521,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             nr.pool_total,
             nr.rps,
             gang.rps,
+        );
+    }
+
+    if let Some(path) = &trace_out {
+        // Export the gang run: it exercises the widest span vocabulary
+        // (queue, gang:decode/gang:score members, compaction, ER events).
+        std::fs::write(path, chrome_trace(&gang.traces).to_string())?;
+        println!(
+            "\nwrote Chrome trace_event timeline of the gang run ({} traces) to {path} \
+             — open in Perfetto or chrome://tracing",
+            gang.traces.len()
         );
     }
     Ok(())

@@ -60,6 +60,10 @@ struct RunReport {
     p95_ms: f64,
     errors: usize,
     shard_solves: Vec<u64>,
+    /// Early-rejection ledger from the pool's per-request trace recorder:
+    /// beams rejected and the estimated FLOPs those rejections saved.
+    er_beams_rejected: u64,
+    er_flops_saved: f64,
 }
 
 /// Run the full workload against a fresh pool with `shards` shards and
@@ -127,6 +131,8 @@ fn run_once(
         p95_ms: stats::quantile(&latencies, 0.95),
         errors,
         shard_solves: pool.shard_solves(),
+        er_beams_rejected: pool.tracer().totals().er_beams_rejected,
+        er_flops_saved: pool.tracer().totals().er_flops_saved,
     };
     println!(
         "\nserver metrics ({shards} shard run):\n{}{}",
@@ -198,6 +204,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             "{:<8} {:>12.2} {:>10.1} {:>9.0} {:>9.0} {:>7}  {:?}",
             r.shards, r.throughput_rps, r.accuracy_pct, r.p50_ms, r.p95_ms, r.errors,
             r.shard_solves
+        );
+    }
+    println!("\nearly-rejection ledger (from request traces):");
+    for r in &reports {
+        println!(
+            "  {} shard(s): {} beams rejected, est FLOPs saved {}",
+            r.shards,
+            r.er_beams_rejected,
+            erprm::util::benchkit::fmt_flops(r.er_flops_saved)
         );
     }
     if reports.len() >= 2 {

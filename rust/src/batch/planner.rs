@@ -353,6 +353,19 @@ pub fn execute_gang(engine: &Engine, tasks: &mut [&mut SolveTask]) -> Result<(us
         offsets.push(real);
         real += b;
     }
+    // every member's timeline shows the shared call it rode (on error
+    // the span stays open; the failure path seals it at finish)
+    let span_name = match kind {
+        IntentKind::Decode => "gang:decode",
+        IntentKind::Score => "gang:score",
+        IntentKind::Compact => unreachable!("rejected above"),
+    };
+    let span_detail = format!("members={} slots={real}", tasks.len());
+    for t in tasks.iter_mut() {
+        if let Some(tb) = t.trace.as_mut() {
+            tb.begin_detail(span_name, span_detail.clone());
+        }
+    }
 
     // 1. chain-merge the member caches (live slots densely packed).
     let mut merged = {
@@ -412,6 +425,11 @@ pub fn execute_gang(engine: &Engine, tasks: &mut [&mut SolveTask]) -> Result<(us
             }
         }
         IntentKind::Compact => unreachable!("rejected above"),
+    }
+    for t in tasks.iter_mut() {
+        if let Some(tb) = t.trace.as_mut() {
+            tb.end();
+        }
     }
     Ok((merged.batch, precompacted))
 }

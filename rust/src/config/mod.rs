@@ -212,6 +212,13 @@ pub struct ServerConfig {
     /// the artifact set predates paged export. An explicit
     /// `--kv-pool-blocks 0` on the CLI still forces dense.
     pub kv_pool_blocks: usize,
+    /// Request traces retained in the in-memory ring served by
+    /// `GET /trace/<id>`; 0 disables retention (rollup counters still
+    /// accumulate on `/metrics`).
+    pub trace_capacity: usize,
+    /// Fraction of *successful* requests whose trace is retained
+    /// (failures are always kept). 1.0 keeps everything.
+    pub trace_sample: f64,
 }
 
 impl Default for ServerConfig {
@@ -229,6 +236,8 @@ impl Default for ServerConfig {
             deadline_ms: 0,
             singleflight: true,
             kv_pool_blocks: 0,
+            trace_capacity: 256,
+            trace_sample: 1.0,
         }
     }
 }
@@ -347,6 +356,12 @@ impl Config {
             if let Some(n) = s.get("kv_pool_blocks").and_then(Json::as_usize) {
                 cfg.server.kv_pool_blocks = n;
             }
+            if let Some(n) = s.get("trace_capacity").and_then(Json::as_usize) {
+                cfg.server.trace_capacity = n;
+            }
+            if let Some(f) = s.get("trace_sample").and_then(Json::as_f64) {
+                cfg.server.trace_sample = f.clamp(0.0, 1.0);
+            }
         }
         cfg.search.validate()?;
         Ok(cfg)
@@ -437,6 +452,20 @@ mod tests {
         assert_eq!(c.server.effective_shards(), 4);
         assert_eq!(c.server.capacity, 8);
         assert_eq!(c.server.cache_entries, 0);
+    }
+
+    #[test]
+    fn trace_knobs_parse_default_and_clamp() {
+        let d = ServerConfig::default();
+        assert_eq!(d.trace_capacity, 256);
+        assert_eq!(d.trace_sample, 1.0, "keep every trace unless told otherwise");
+        let j = Json::parse(
+            r#"{"server": {"trace_capacity": 16, "trace_sample": 2.5}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.server.trace_capacity, 16);
+        assert_eq!(c.server.trace_sample, 1.0, "sample rate clamps to [0,1]");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::coordinator::scorer::ScoreRound;
 use crate::coordinator::search::{
     CompactTarget, DecodePrep, DecodeStage, PhaseTarget, SearchCtx, SolveOutcome,
 };
+use crate::obs::{ErEvent, TraceBuilder};
 use crate::runtime::{Engine, KvSet};
 use crate::util::error::{Error, Result};
 use crate::workload::Problem;
@@ -174,6 +175,11 @@ pub struct SolveTask {
     /// Completed select/expand rounds (the blocking `for` loop index).
     iters: usize,
     outcome: Option<SolveOutcome>,
+    /// Request trace riding the task (owned, lock-free). `None` leaves
+    /// every record site a no-op; the determinism contract above extends
+    /// to tracing — recording never touches RNG, beams, or engine-call
+    /// order, so a traced solve is byte-identical to an untraced one.
+    pub trace: Option<Box<TraceBuilder>>,
 }
 
 impl SolveTask {
@@ -237,6 +243,7 @@ impl SolveTask {
             steps: 0,
             iters: 0,
             outcome: None,
+            trace: None,
         }
     }
 
@@ -320,6 +327,14 @@ impl SolveTask {
             .pending
             .take()
             .ok_or_else(|| Error::internal("execute_intent without a pending intent"))?;
+        if let Some(tb) = self.trace.as_mut() {
+            let name = match intent.kind {
+                IntentKind::Decode => "decode",
+                IntentKind::Score => "score",
+                IntentKind::Compact => "compact",
+            };
+            tb.begin_detail(name, format!("batch={}", intent.batch));
+        }
         let ctx = self
             .ctx
             .as_mut()
@@ -346,6 +361,9 @@ impl SolveTask {
                 };
                 ctx.note_compact(target, changed);
             }
+        }
+        if let Some(tb) = self.trace.as_mut() {
+            tb.end();
         }
         Ok(())
     }
@@ -553,6 +571,9 @@ impl SolveTask {
         match self.state {
             State::Done => Ok(Step::Progressed(Progress::Done)),
             State::Init => {
+                if let Some(tb) = self.trace.as_mut() {
+                    tb.begin_detail("prefill", format!("beams={}", self.cfg.n_beams));
+                }
                 let ctx = SearchCtx::init(
                     engine,
                     &self.lm_ckpt,
@@ -561,6 +582,9 @@ impl SolveTask {
                     &self.cfg,
                     self.temp,
                 )?;
+                if let Some(tb) = self.trace.as_mut() {
+                    tb.end();
+                }
                 self.ctx = Some(ctx);
                 if self.cfg.max_steps == 0 {
                     // parity with the blocking `for _ in 0..max_steps`
@@ -663,6 +687,40 @@ impl SolveTask {
                 for &slot in &rejected {
                     ctx.lm_kv.free_slot(slot);
                     ctx.prm_kv.free_slot(slot);
+                }
+                let (lm_rate, prm_rate) =
+                    (ctx.ledger.lm_flops_per_token, ctx.ledger.prm_flops_per_token);
+                if !rejected.is_empty() {
+                    if let Some(tb) = self.trace.as_mut() {
+                        // Estimated compute the rejection avoided: each
+                        // dead beam skips this round's completion tokens
+                        // (max_step_tokens - tau) plus every remaining
+                        // round, decoded by the LM and scored by the PRM.
+                        // An upper bound — a beam might have finished
+                        // early (same accounting as ErEvent docs).
+                        let this_round =
+                            self.cfg.max_step_tokens.saturating_sub(self.cfg.tau) as f64;
+                        let future = self.cfg.max_steps.saturating_sub(self.iters + 1) as f64
+                            * self.cfg.max_step_tokens as f64;
+                        let per_beam =
+                            (this_round + future) * (lm_rate as f64 + prm_rate as f64);
+                        let scores: Vec<f32> = rejected
+                            .iter()
+                            .map(|&slot| {
+                                scored
+                                    .iter()
+                                    .find(|&&(s, _)| s == slot)
+                                    .map(|&(_, r)| r)
+                                    .unwrap_or(0.0)
+                            })
+                            .collect();
+                        tb.reject(ErEvent {
+                            depth: self.iters,
+                            rejected: rejected.clone(),
+                            scores,
+                            flops_saved: per_beam * rejected.len() as f64,
+                        });
+                    }
                 }
                 let plan = TwoTierPlan::plan(
                     self.cfg.n_beams,

@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 use crate::config::{SearchConfig, SearchMode};
 use crate::coordinator::task::SolveTask;
 use crate::fleet::Solved;
+use crate::obs::TraceBuilder;
 use crate::util::error::Result;
 use crate::util::oneshot;
 use crate::workload::Problem;
@@ -70,6 +71,10 @@ pub struct FleetJob {
     /// Higher runs first (0 = default class).
     pub priority: i64,
     pub reply: ReplyTx,
+    /// Request trace, begun at the door with its "queue" span open; moves
+    /// into the task at admission (or is sealed here on the bounce paths:
+    /// forecast 504, queue expiry, client hang-up, coalesce).
+    pub trace: Option<Box<TraceBuilder>>,
 }
 
 impl FleetJob {
@@ -243,6 +248,7 @@ mod tests {
                 deadline: deadline_ms.map(Duration::from_millis),
                 priority,
                 reply: tx,
+                trace: None,
             },
             rx,
         )

@@ -47,8 +47,10 @@ use crate::fleet::queue::{admission_forecast_ms, AdmissionQueue, FleetJob, Reply
 use crate::fleet::stats::FleetStats;
 use crate::fleet::{FleetOptions, Solved};
 use crate::log_error;
+use crate::obs::{PhaseFlops, TraceRecorder};
 use crate::runtime::{Engine, EngineStats};
 use crate::util::error::Error;
+use crate::util::logging;
 
 /// One poll of the shard's message source.
 pub enum Poll {
@@ -137,6 +139,8 @@ pub fn drive(
     bstats: &BatchStats,
     solved: &AtomicU64,
     engine_stats: &Mutex<EngineStats>,
+    shard: usize,
+    tracer: &TraceRecorder,
     mut poll: impl FnMut(bool) -> Poll,
 ) {
     let n_slots = opts.max_inflight.max(1);
@@ -156,9 +160,17 @@ pub fn drive(
                 break;
             }
             match poll(true) {
-                Poll::Job(j) => {
-                    admit(*j, engine, &mut queue, &slots, inflight, n_slots, mean_service_ms, stats)
-                }
+                Poll::Job(j) => admit(
+                    *j,
+                    engine,
+                    &mut queue,
+                    &slots,
+                    inflight,
+                    n_slots,
+                    mean_service_ms,
+                    stats,
+                    tracer,
+                ),
                 Poll::Shutdown => shutdown = true,
                 Poll::Closed => break,
                 Poll::Empty => {}
@@ -167,9 +179,17 @@ pub fn drive(
         }
         loop {
             match poll(false) {
-                Poll::Job(j) => {
-                    admit(*j, engine, &mut queue, &slots, inflight, n_slots, mean_service_ms, stats)
-                }
+                Poll::Job(j) => admit(
+                    *j,
+                    engine,
+                    &mut queue,
+                    &slots,
+                    inflight,
+                    n_slots,
+                    mean_service_ms,
+                    stats,
+                    tracer,
+                ),
                 Poll::Shutdown => shutdown = true,
                 Poll::Closed => {
                     shutdown = true;
@@ -181,17 +201,25 @@ pub fn drive(
         let now = Instant::now();
 
         // ---- 2. expire queued work; drop queued work nobody waits for
-        for job in queue.expire(now) {
+        for mut job in queue.expire(now) {
             stats.expired_total.fetch_add(1, Ordering::Relaxed);
+            if let Some(mut tb) = job.trace.take() {
+                tb.set_queue_wait(job.waited_ms(now));
+                tracer.submit(tb.finish("deadline", 504, PhaseFlops::default()));
+            }
             let _ = job.reply.send(Err(Error::deadline(format!(
                 "spent {:.0}ms queued, budget was {}ms",
                 job.waited_ms(now),
                 job.deadline.map(|d| d.as_millis()).unwrap_or(0)
             ))));
         }
-        for _job in queue.drain_matching(|j| j.reply.is_closed()) {
+        for mut job in queue.drain_matching(|j| j.reply.is_closed()) {
             // the receiver is gone; there is nobody to reply to
             stats.cancelled_total.fetch_add(1, Ordering::Relaxed);
+            if let Some(mut tb) = job.trace.take() {
+                tb.set_queue_wait(job.waited_ms(now));
+                tracer.submit(tb.finish("cancelled", 0, PhaseFlops::default()));
+            }
         }
 
         // ---- 3. coalesce queued duplicates onto in-flight tasks
@@ -202,13 +230,20 @@ pub fn drive(
                     .flatten()
                     .any(|r| r.key.is_some() && r.key == j.key)
         });
-        for job in dups {
+        for mut job in dups {
             let r = slots
                 .iter_mut()
                 .flatten()
                 .find(|r| r.key == job.key)
                 .expect("matched above");
             r.extend_deadline(job.deadline_at());
+            // the rider's own trace ends here: its outcome is whatever
+            // the in-flight task it joined produces
+            if let Some(mut tb) = job.trace.take() {
+                tb.end(); // close the door-side "queue" span
+                tb.set_queue_wait(job.waited_ms(now));
+                tracer.submit(tb.finish("coalesced", 200, PhaseFlops::default()));
+            }
             r.riders.push(Waiter { reply: job.reply, queue_wait_ms: job.waited_ms(now) });
             stats.coalesced_total.fetch_add(1, Ordering::Relaxed);
         }
@@ -226,7 +261,7 @@ pub fn drive(
                 }
                 break;
             }
-            let Some(job) = queue.pop(now) else { break };
+            let Some(mut job) = queue.pop(now) else { break };
             let wait_ms = job.waited_ms(now);
             // a duplicate of a slot filled earlier this same round (burst
             // of identical requests hitting an idle shard) rides it too —
@@ -234,6 +269,11 @@ pub fn drive(
             if job.key.is_some() {
                 if let Some(r) = slots.iter_mut().flatten().find(|r| r.key == job.key) {
                     r.extend_deadline(job.deadline_at());
+                    if let Some(mut tb) = job.trace.take() {
+                        tb.end();
+                        tb.set_queue_wait(wait_ms);
+                        tracer.submit(tb.finish("coalesced", 200, PhaseFlops::default()));
+                    }
                     r.riders.push(Waiter { reply: job.reply, queue_wait_ms: wait_ms });
                     stats.coalesced_total.fetch_add(1, Ordering::Relaxed);
                     continue;
@@ -242,9 +282,13 @@ pub fn drive(
             match job.spec.build() {
                 Err(e) => {
                     stats.failed_total.fetch_add(1, Ordering::Relaxed);
+                    if let Some(mut tb) = job.trace.take() {
+                        tb.set_queue_wait(wait_ms);
+                        tracer.submit(tb.finish("error", e.http_status(), PhaseFlops::default()));
+                    }
                     let _ = job.reply.send(Err(e));
                 }
-                Ok(task) => {
+                Ok(mut task) => {
                     if inflight > 0 {
                         stats.backfill_total.fetch_add(1, Ordering::Relaxed);
                     }
@@ -253,6 +297,15 @@ pub fn drive(
                         .iter()
                         .position(Option::is_none)
                         .expect("inflight < n_slots implies a free slot");
+                    // hand the trace to the task: the door-side "queue"
+                    // span closes, placement is pinned, and every span
+                    // from here on is recorded by the task itself
+                    if let Some(mut tb) = job.trace.take() {
+                        tb.end();
+                        tb.set_queue_wait(wait_ms);
+                        tb.set_placement(shard, idx);
+                        task.trace = Some(tb);
+                    }
                     let deadline_at = job.deadline_at();
                     let mut running = Running {
                         task,
@@ -278,18 +331,26 @@ pub fn drive(
         for idx in 0..slots.len() {
             let Some(r) = slots[idx].as_mut() else { continue };
             if r.abandoned() {
-                slots[idx] = None;
+                let mut r = slots[idx].take().expect("checked occupied");
                 inflight -= 1;
                 stats.cancelled_total.fetch_add(1, Ordering::Relaxed);
+                if let Some(tb) = r.task.trace.take() {
+                    tracer.submit(tb.finish("cancelled", 0, PhaseFlops::default()));
+                }
                 continue; // no reply possible: every receiver is gone
             }
             if r.expired(Instant::now()) {
                 let r = slots[idx].take().expect("checked occupied");
                 inflight -= 1;
                 stats.expired_total.fetch_add(1, Ordering::Relaxed);
-                reply_error(r, Error::deadline("aborted mid-solve: deadline elapsed"));
+                reply_error_traced(
+                    r,
+                    Error::deadline("aborted mid-solve: deadline elapsed"),
+                    tracer,
+                );
                 continue;
             }
+            let _scope = r.task.trace.as_ref().map(|tb| logging::request_scope(tb.id()));
             let tick = if opts.gang {
                 if let Some(age) = r.parked {
                     // intent still waiting for partners; step 6 decides
@@ -326,6 +387,7 @@ pub fn drive(
                         engine_stats,
                         &mut mean_service_ms,
                         &mut completed_n,
+                        tracer,
                     );
                 }
                 SlotTick::Failed(e) => {
@@ -334,7 +396,7 @@ pub fn drive(
                     stats.failed_total.fetch_add(1, Ordering::Relaxed);
                     *engine_stats.lock().unwrap() = engine.stats();
                     log_error!("fleet task failed in state '{}': {e}", r.task.state_name());
-                    reply_error(r, e);
+                    reply_error_traced(r, e, tracer);
                 }
             }
         }
@@ -349,6 +411,7 @@ pub fn drive(
                 stats,
                 bstats,
                 engine_stats,
+                tracer,
             );
         }
         stats.inflight.store(inflight, Ordering::Relaxed);
@@ -382,7 +445,7 @@ fn pool_pressure(engine: &Engine) -> f64 {
 /// this job waits behind.
 #[allow(clippy::too_many_arguments)]
 fn admit(
-    job: FleetJob,
+    mut job: FleetJob,
     engine: &Engine,
     queue: &mut AdmissionQueue,
     slots: &[Option<Running>],
@@ -390,6 +453,7 @@ fn admit(
     n_slots: usize,
     mean_service_ms: f64,
     stats: &FleetStats,
+    tracer: &TraceRecorder,
 ) {
     let coalescible = job.key.is_some() && slots.iter().flatten().any(|r| r.key == job.key);
     if coalescible {
@@ -411,6 +475,10 @@ fn admit(
         );
         if forecast > remaining_ms {
             stats.forecast_rejected_total.fetch_add(1, Ordering::Relaxed);
+            if let Some(mut tb) = job.trace.take() {
+                tb.event("forecast_reject", format!("forecast_ms={forecast:.0}"));
+                tracer.submit(tb.finish("deadline", 504, PhaseFlops::default()));
+            }
             let _ = job.reply.send(Err(Error::deadline(format!(
                 "queue-wait forecast {forecast:.0}ms exceeds the remaining \
                  {remaining_ms:.0}ms budget"
@@ -423,7 +491,9 @@ fn admit(
 
 /// Completion protocol for a finished task: publish stats, fold the
 /// service-time sample into the admission forecast, honor the 504
-/// contract, and fan the outcome out to every attached request.
+/// contract, seal + submit the trace, and fan the outcome out to every
+/// attached request.
+#[allow(clippy::too_many_arguments)]
 fn finish_task(
     mut r: Running,
     engine: &Engine,
@@ -432,6 +502,7 @@ fn finish_task(
     engine_stats: &Mutex<EngineStats>,
     mean_service_ms: &mut f64,
     completed_n: &mut u64,
+    tracer: &TraceRecorder,
 ) {
     solved.fetch_add(1, Ordering::Relaxed);
     *engine_stats.lock().unwrap() = engine.stats();
@@ -442,12 +513,19 @@ fn finish_task(
         // budget blew during the final advance: the 504 contract beats
         // returning a too-late 200
         stats.expired_total.fetch_add(1, Ordering::Relaxed);
-        reply_error(r, Error::deadline("deadline elapsed during the final solve step"));
+        reply_error_traced(
+            r,
+            Error::deadline("deadline elapsed during the final solve step"),
+            tracer,
+        );
         return;
     }
     match r.task.take_outcome() {
         Some(out) => {
             stats.completed_total.fetch_add(1, Ordering::Relaxed);
+            if let Some(tb) = r.task.trace.take() {
+                tracer.submit(tb.finish("ok", 200, PhaseFlops::from_ledger(&out.ledger)));
+            }
             for w in r.riders {
                 let _ = w.reply.send(Ok(Solved {
                     outcome: out.clone(),
@@ -461,7 +539,7 @@ fn finish_task(
         }
         None => {
             stats.failed_total.fetch_add(1, Ordering::Relaxed);
-            reply_error(r, Error::internal("finished task lost its outcome"));
+            reply_error_traced(r, Error::internal("finished task lost its outcome"), tracer);
         }
     }
 }
@@ -469,6 +547,7 @@ fn finish_task(
 /// Step 6: group parked intents by gang key, pack each group largest-fit
 /// into merge variants, dispatch each gang as one shared device call, and
 /// solo-execute leftovers that waited long enough (or are alone).
+#[allow(clippy::too_many_arguments)]
 fn dispatch_gangs(
     engine: &Engine,
     slots: &mut [Option<Running>],
@@ -477,6 +556,7 @@ fn dispatch_gangs(
     stats: &FleetStats,
     bstats: &BatchStats,
     engine_stats: &Mutex<EngineStats>,
+    tracer: &TraceRecorder,
 ) {
     /// One parked intent's scheduling view.
     struct ParkedIntent {
@@ -517,7 +597,7 @@ fn dispatch_gangs(
             // compactions are per-cache repacks with nothing to share:
             // execute each immediately, never waiting for partners
             for p in &group {
-                solo_execute(engine, slots, inflight, p.slot, stats, engine_stats);
+                solo_execute(engine, slots, inflight, p.slot, stats, engine_stats, tracer);
             }
             continue;
         }
@@ -575,7 +655,7 @@ fn dispatch_gangs(
                         if let Some(r) = slots[si].take() {
                             *inflight -= 1;
                             stats.failed_total.fetch_add(1, Ordering::Relaxed);
-                            reply_error(r, e.clone_class());
+                            reply_error_traced(r, e.clone_class(), tracer);
                         }
                     }
                 }
@@ -590,7 +670,7 @@ fn dispatch_gangs(
             }
             let alone = *inflight <= 1;
             if p.age >= max_wait || alone {
-                if solo_execute(engine, slots, inflight, p.slot, stats, engine_stats) {
+                if solo_execute(engine, slots, inflight, p.slot, stats, engine_stats, tracer) {
                     bstats.solo_intents_total.fetch_add(1, Ordering::Relaxed);
                 }
             } else {
@@ -603,6 +683,7 @@ fn dispatch_gangs(
 /// Execute one slot's parked intent on its own cache with the shared
 /// failure protocol (errors free the slot and reply to every rider).
 /// Returns whether the intent executed successfully.
+#[allow(clippy::too_many_arguments)]
 fn solo_execute(
     engine: &Engine,
     slots: &mut [Option<Running>],
@@ -610,6 +691,7 @@ fn solo_execute(
     slot: usize,
     stats: &FleetStats,
     engine_stats: &Mutex<EngineStats>,
+    tracer: &TraceRecorder,
 ) -> bool {
     let Some(r) = slots[slot].as_mut() else { return false };
     match r.task.execute_intent(engine) {
@@ -623,10 +705,21 @@ fn solo_execute(
             stats.failed_total.fetch_add(1, Ordering::Relaxed);
             *engine_stats.lock().unwrap() = engine.stats();
             log_error!("fleet task failed in state '{}': {e}", r.task.state_name());
-            reply_error(r, e);
+            reply_error_traced(r, e, tracer);
             false
         }
     }
+}
+
+/// Seal + submit the slot's trace with the error's outcome class, then
+/// deliver the error to every attached request. `finish` closes any
+/// spans the abnormal exit left open.
+fn reply_error_traced(mut r: Running, e: Error, tracer: &TraceRecorder) {
+    if let Some(tb) = r.task.trace.take() {
+        let outcome = if e.http_status() == 504 { "deadline" } else { "error" };
+        tracer.submit(tb.finish(outcome, e.http_status(), PhaseFlops::default()));
+    }
+    reply_error(r, e);
 }
 
 /// Deliver one error to every request attached to a slot.

@@ -25,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod fleet;
 pub mod harness;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sim;

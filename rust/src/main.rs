@@ -19,6 +19,7 @@ use std::sync::Arc;
 use erprm::config::{SearchConfig, SearchMode, ServerConfig};
 use erprm::coordinator::{solve_early_rejection, solve_vanilla};
 use erprm::fleet::FleetOptions;
+use erprm::obs::{SamplePolicy, TraceOptions};
 use erprm::harness::{self, Cell};
 use erprm::runtime::Engine;
 use erprm::server::{http, metrics::Metrics, route, router::EnginePool, PoolOptions};
@@ -178,6 +179,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None if scfg.kv_pool_blocks > 0 => Some(scfg.kv_pool_blocks),
         None => None,
     };
+    // --trace-capacity N: request traces retained for GET /trace/<id>
+    // (0 disables retention; rollups still hit /metrics).
+    // --trace-sample F: fraction of successful requests traced
+    // (failures are always kept).
+    let trace_capacity = args.get_usize("trace-capacity", scfg.trace_capacity)?;
+    let trace_sample =
+        args.get_f64("trace-sample", scfg.trace_sample)?.clamp(0.0, 1.0);
     let worker_default = if fleet { shards * max_inflight + 2 } else { shards + 2 };
     let workers = args.get_usize_min("workers", worker_default, 1)?;
     // --cache N sets the LRU solve-cache size; --cache 0 disables it.
@@ -198,6 +206,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }),
             singleflight,
             kv_pool_blocks,
+            trace: TraceOptions {
+                capacity: trace_capacity,
+                sample: SamplePolicy { success_rate: trace_sample, ..SamplePolicy::default() },
+            },
         },
     )?;
     let metrics = Arc::new(Metrics::default());
@@ -226,7 +238,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     println!(
         "erprm serving on http://{local}  ({} engine shards, {capacity} queue slots/shard, \
-         cache {cache}, {mode})  (POST /solve, GET /metrics, GET /healthz)",
+         cache {cache}, {mode})  (POST /solve, GET /metrics, GET /healthz, \
+         GET /trace/<id>, GET /traces, GET /traces/chrome)",
         pool.n_shards()
     );
     // run until killed

@@ -1,0 +1,149 @@
+//! Chrome `trace_event` export — renders retained traces as a
+//! per-shard / per-slot timeline loadable in `chrome://tracing` or
+//! Perfetto (`GET /traces/chrome`, `fleet_benchmark --trace-out`).
+//!
+//! Mapping: process id = engine shard (pid 0 is the router/door for
+//! work that never reached a shard: cache hits, admission rejects),
+//! thread id = fleet slot within the shard (tid 0 for door/queue work
+//! recorded before placement). Spans become complete `"X"` events,
+//! instant markers (rejections, cache hits) become `"i"` events.
+
+use std::sync::Arc;
+
+use crate::obs::trace::Trace;
+use crate::util::json::Json;
+
+fn pid(t: &Trace) -> f64 {
+    t.shard.map(|s| s as f64 + 1.0).unwrap_or(0.0)
+}
+
+fn tid(t: &Trace) -> f64 {
+    t.slot.map(|s| s as f64 + 1.0).unwrap_or(0.0)
+}
+
+fn args(t: &Trace, detail: &str) -> Json {
+    let mut pairs = vec![("request_id", Json::str(&t.id))];
+    if !detail.is_empty() {
+        pairs.push(("detail", Json::str(detail)));
+    }
+    Json::obj(pairs)
+}
+
+/// Render traces (oldest first) into one Chrome trace JSON document.
+pub fn chrome_trace(traces: &[Arc<Trace>]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    // name the rows once per (pid, tid) pair seen
+    let mut rows: Vec<(f64, f64)> = Vec::new();
+    for t in traces {
+        let (p, d) = (pid(t), tid(t));
+        if !rows.contains(&(p, d)) {
+            rows.push((p, d));
+        }
+        for s in &t.spans {
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.name)),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(s.start_us as f64)),
+                ("dur", Json::num(s.dur_us.max(1) as f64)),
+                ("pid", Json::num(p)),
+                ("tid", Json::num(d)),
+                ("args", args(t, &s.detail)),
+            ]));
+        }
+        for e in &t.events {
+            events.push(Json::obj(vec![
+                ("name", Json::str(e.name)),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("ts", Json::num(e.ts_us as f64)),
+                ("pid", Json::num(p)),
+                ("tid", Json::num(d)),
+                ("args", args(t, &e.detail)),
+            ]));
+        }
+    }
+    let mut meta: Vec<Json> = Vec::new();
+    for &(p, d) in &rows {
+        let pname = if p == 0.0 { "router".to_string() } else { format!("shard {}", p - 1.0) };
+        meta.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(p)),
+            ("args", Json::obj(vec![("name", Json::str(pname))])),
+        ]));
+        let tname = if d == 0.0 { "door".to_string() } else { format!("slot {}", d - 1.0) };
+        meta.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(p)),
+            ("tid", Json::num(d)),
+            ("args", Json::obj(vec![("name", Json::str(tname))])),
+        ]));
+    }
+    meta.extend(events);
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(meta)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{PhaseFlops, TraceBuilder};
+
+    fn traced(id: &str, shard: usize, slot: usize) -> Arc<Trace> {
+        let mut tb = TraceBuilder::start(id);
+        tb.set_placement(shard, slot);
+        tb.begin("solve");
+        tb.begin_detail("decode", "b8");
+        tb.end();
+        tb.event("reject", "depth=0 rejected=2");
+        tb.end();
+        Arc::new(tb.finish("ok", 200, PhaseFlops::default()))
+    }
+
+    #[test]
+    fn export_parses_and_carries_rows_and_spans() {
+        let traces = vec![traced("r0", 0, 1), traced("r1", 1, 0)];
+        let doc = chrome_trace(&traces);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let Some(Json::Arr(evs)) = parsed.get("traceEvents") else {
+            panic!("no traceEvents array")
+        };
+        // 2 rows x 2 metadata + 2 x (2 spans + 1 instant)
+        let metas = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .count();
+        let spans: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        let instants = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .count();
+        assert_eq!(metas, 4);
+        assert_eq!(spans.len(), 4);
+        assert_eq!(instants, 2);
+        for s in &spans {
+            assert!(s.get("dur").and_then(Json::as_f64).unwrap() >= 1.0);
+            assert!(s.get("args").and_then(|a| a.get("request_id")).is_some());
+        }
+        // shard 0 → pid 1, slot 1 → tid 2
+        assert!(evs.iter().any(|e| {
+            e.get("pid").and_then(Json::as_f64) == Some(1.0)
+                && e.get("tid").and_then(Json::as_f64) == Some(2.0)
+        }));
+    }
+
+    #[test]
+    fn doorwork_lands_on_pid_zero() {
+        let t = Arc::new(TraceBuilder::start("d").finish("cache_hit", 200, PhaseFlops::default()));
+        let doc = chrome_trace(&[t]);
+        let s = doc.to_string();
+        assert!(s.contains("\"router\""));
+        assert!(s.contains("\"door\""));
+    }
+}

@@ -1,0 +1,221 @@
+//! Prometheus exposition-format writer.
+//!
+//! Every `/metrics` renderer in the crate (`server::metrics`, the pool
+//! gauges in `server::router`, the trace recorder rollups) goes through
+//! [`MetricWriter`] so each `erprm_*` series carries its `# HELP` /
+//! `# TYPE` header exactly once — including labelled families, where
+//! the header precedes the first sample only. [`check_exposition`] is
+//! the validity oracle the golden test pins the full render against.
+
+use std::collections::HashSet;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+}
+
+impl MetricKind {
+    fn name(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// Accumulates exposition text; emits the HELP/TYPE header the first
+/// time each series name is written.
+#[derive(Default)]
+pub struct MetricWriter {
+    out: String,
+    seen: HashSet<String>,
+}
+
+/// Float formatting matching the crate's historical `/metrics` output:
+/// integral values render without a fraction, others with enough
+/// precision to round-trip.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+impl MetricWriter {
+    pub fn new() -> MetricWriter {
+        MetricWriter::default()
+    }
+
+    /// Core emitter: `labels` is the rendered label set without braces
+    /// (e.g. `shard="0"`), empty for unlabelled series.
+    pub fn write(
+        &mut self,
+        name: &str,
+        kind: MetricKind,
+        help: &str,
+        labels: &str,
+        value: impl std::fmt::Display,
+    ) {
+        if self.seen.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {}", kind.name());
+        }
+        if labels.is_empty() {
+            let _ = writeln!(self.out, "{name} {value}");
+        } else {
+            let _ = writeln!(self.out, "{name}{{{labels}}} {value}");
+        }
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.write(name, MetricKind::Counter, help, "", fmt_value(v));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.write(name, MetricKind::Gauge, help, "", fmt_value(v));
+    }
+
+    pub fn counter_labeled(&mut self, name: &str, help: &str, labels: &str, v: f64) {
+        self.write(name, MetricKind::Counter, help, labels, fmt_value(v));
+    }
+
+    pub fn gauge_labeled(&mut self, name: &str, help: &str, labels: &str, v: f64) {
+        self.write(name, MetricKind::Gauge, help, labels, fmt_value(v));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Validate Prometheus text exposition format (the subset this crate
+/// emits): every sample's series carries `# HELP` and `# TYPE` headers
+/// before its first sample, types are legal, headers aren't duplicated,
+/// and every sample line parses as `name[{labels}] value`.
+pub fn check_exposition(text: &str) -> Result<(), String> {
+    let mut helped: HashSet<&str> = HashSet::new();
+    let mut typed: HashSet<&str> = HashSet::new();
+    let mut sampled: HashSet<&str> = HashSet::new();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().ok_or(format!("line {ln}: empty HELP"))?;
+            if !helped.insert(name) {
+                return Err(format!("line {ln}: duplicate # HELP for {name}"));
+            }
+            if sampled.contains(name) {
+                return Err(format!("line {ln}: # HELP for {name} after its samples"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or(format!("line {ln}: empty TYPE"))?;
+            let kind = it.next().ok_or(format!("line {ln}: TYPE {name} missing a type"))?;
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {ln}: illegal type '{kind}' for {name}"));
+            }
+            if !typed.insert(name) {
+                return Err(format!("line {ln}: duplicate # TYPE for {name}"));
+            }
+            if sampled.contains(name) {
+                return Err(format!("line {ln}: # TYPE for {name} after its samples"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        // sample line: name[{labels}] value
+        let name_end = line
+            .find(|c: char| c == '{' || c.is_whitespace())
+            .ok_or(format!("line {ln}: no value on sample line '{line}'"))?;
+        let name = &line[..name_end];
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return Err(format!("line {ln}: bad metric name '{name}'"));
+        }
+        let rest = &line[name_end..];
+        let value_part = if let Some(r) = rest.strip_prefix('{') {
+            let close = r.find('}').ok_or(format!("line {ln}: unclosed label set"))?;
+            &r[close + 1..]
+        } else {
+            rest
+        };
+        let value = value_part.trim();
+        if value.parse::<f64>().is_err() && !matches!(value, "NaN" | "+Inf" | "-Inf") {
+            return Err(format!("line {ln}: unparseable value '{value}' for {name}"));
+        }
+        if !helped.contains(name) {
+            return Err(format!("line {ln}: sample for {name} without # HELP"));
+        }
+        if !typed.contains(name) {
+            return Err(format!("line {ln}: sample for {name} without # TYPE"));
+        }
+        sampled.insert(name);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headers_emitted_once_per_series() {
+        let mut w = MetricWriter::new();
+        w.counter("erprm_requests_total", "Requests.", 3.0);
+        w.gauge_labeled("erprm_shard_depth", "Depth.", "shard=\"0\"", 1.0);
+        w.gauge_labeled("erprm_shard_depth", "Depth.", "shard=\"1\"", 2.0);
+        let text = w.finish();
+        assert_eq!(text.matches("# TYPE erprm_shard_depth").count(), 1);
+        assert_eq!(text.matches("# HELP erprm_shard_depth").count(), 1);
+        assert!(text.contains("erprm_shard_depth{shard=\"0\"} 1"));
+        assert!(text.contains("erprm_shard_depth{shard=\"1\"} 2"));
+        check_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn value_formatting_matches_historic_output() {
+        let mut w = MetricWriter::new();
+        w.counter("a_total", "A.", 12.0);
+        w.gauge("b", "B.", 0.25);
+        let text = w.finish();
+        assert!(text.contains("a_total 12\n"), "{text}");
+        assert!(text.contains("b 0.250000\n"), "{text}");
+    }
+
+    #[test]
+    fn checker_rejects_missing_or_misplaced_headers() {
+        assert!(check_exposition("erprm_x 1\n").is_err(), "sample without headers");
+        assert!(check_exposition("# TYPE erprm_x gauge\nerprm_x 1\n").is_err(), "no HELP");
+        assert!(check_exposition("# HELP erprm_x X.\nerprm_x 1\n").is_err(), "no TYPE");
+        assert!(
+            check_exposition("# HELP erprm_x X.\n# TYPE erprm_x bogus\nerprm_x 1\n").is_err(),
+            "illegal type"
+        );
+        assert!(
+            check_exposition(
+                "# HELP erprm_x X.\n# TYPE erprm_x gauge\nerprm_x 1\n# TYPE erprm_x gauge\n"
+            )
+            .is_err(),
+            "header after samples"
+        );
+        assert!(
+            check_exposition("# HELP erprm_x X.\n# TYPE erprm_x gauge\nerprm_x oops\n").is_err(),
+            "bad value"
+        );
+        let good = "# HELP erprm_x X.\n# TYPE erprm_x gauge\nerprm_x{shard=\"0\"} 1\nerprm_x{shard=\"1\"} 2.5\n";
+        check_exposition(good).unwrap();
+    }
+}

@@ -1,0 +1,108 @@
+//! Request-lifecycle observability: span/event tracing with per-request
+//! FLOPs attribution.
+//!
+//! * [`trace`] — the lock-free [`TraceBuilder`] that rides inside a
+//!   request (admission → queue → slot placement → decode/score ticks →
+//!   early rejection → reply), the phase-split [`PhaseFlops`] ledger
+//!   derived from the coordinator's `FlopsLedger` token counters, and
+//!   the per-depth early-rejection ledger ([`ErEvent`]).
+//! * [`recorder`] — the bounded [`TraceRecorder`] ring buffer behind
+//!   `GET /trace/<id>` / `GET /traces`, with deterministic
+//!   success-sampling + token-bucket retention and exact aggregate
+//!   rollups (`erprm_er_flops_saved_total`, `erprm_trace_dropped_total`).
+//! * [`chrome`] — Chrome `trace_event` export (`GET /traces/chrome`,
+//!   `fleet_benchmark --trace-out`) rendering a fleet run as a
+//!   per-shard / per-slot timeline in Perfetto.
+//! * [`metrics`] — the Prometheus exposition writer every `/metrics`
+//!   renderer shares, plus the format-validity checker the golden test
+//!   pins.
+//!
+//! Requests are keyed by an id minted at the HTTP door (or accepted
+//! from the client via an `X-Request-Id` header / `request_id` body
+//! field) and echoed in the `/solve` response.
+
+pub mod chrome;
+pub mod metrics;
+pub mod recorder;
+pub mod trace;
+
+pub use chrome::chrome_trace;
+pub use metrics::{check_exposition, MetricKind, MetricWriter};
+pub use recorder::{RecorderTotals, SamplePolicy, TraceOptions, TraceRecorder};
+pub use trace::{ErEvent, PhaseFlops, Span, SpanEvent, Trace, TraceBuilder};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-wide monotonic epoch all trace timestamps are relative to,
+/// so spans from different requests and shards share one timeline.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the trace epoch.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Mint a process-unique request id: a per-process salt (wall clock at
+/// first mint, so ids don't collide across restarts) plus a sequence
+/// number.
+pub fn mint_request_id() -> String {
+    static SALT: OnceLock<u64> = OnceLock::new();
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let salt = *SALT.get_or_init(|| {
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+            & 0xffff_ffff
+    });
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("r{salt:08x}-{n:06}")
+}
+
+/// Validate a client-supplied request id: printable ASCII, sane length.
+/// Returns `None` (caller mints instead) when unusable.
+pub fn sanitize_request_id(id: &str) -> Option<String> {
+    let id = id.trim();
+    if id.is_empty() || id.len() > 128 {
+        return None;
+    }
+    if !id.bytes().all(|b| (0x21..=0x7e).contains(&b)) {
+        return None;
+    }
+    Some(id.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minted_ids_are_unique_and_sane() {
+        let a = mint_request_id();
+        let b = mint_request_id();
+        assert_ne!(a, b);
+        assert_eq!(sanitize_request_id(&a), Some(a));
+    }
+
+    #[test]
+    fn sanitize_rejects_garbage() {
+        assert_eq!(sanitize_request_id(""), None);
+        assert_eq!(sanitize_request_id("   "), None);
+        assert_eq!(sanitize_request_id("has space"), None);
+        assert_eq!(sanitize_request_id("ctl\x07char"), None);
+        assert_eq!(sanitize_request_id(&"x".repeat(200)), None);
+        assert_eq!(sanitize_request_id(" ok-id_42 "), Some("ok-id_42".into()));
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

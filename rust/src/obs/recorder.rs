@@ -1,0 +1,358 @@
+//! The bounded trace ring buffer and its sampling policy.
+//!
+//! One recorder per engine pool. `submit` is the only synchronized call
+//! on the request path (one mutex acquisition per completed request);
+//! reads (`/trace/<id>`, `/traces`, `/traces/chrome`, `/metrics`) clone
+//! `Arc<Trace>` handles out under the same lock.
+//!
+//! Aggregate rollups (requests recorded, early-rejection FLOPs saved)
+//! are accumulated for **every** submitted trace, before sampling — the
+//! `/metrics` counters stay exact even when the ring keeps only a
+//! sample of successful traces.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::obs::now_us;
+use crate::obs::trace::Trace;
+
+/// Retention policy: errors, deadline misses and cancellations are
+/// always kept; successes pass a deterministic per-id sampler and a
+/// token-bucket rate limit.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplePolicy {
+    /// Probability a successful request's trace is retained (0..=1).
+    /// Deterministic in the request id: the same id under the same seed
+    /// always gets the same verdict.
+    pub success_rate: f64,
+    /// Seed for the sampling hash (fixed seed ⇒ reproducible keep-set).
+    pub seed: u64,
+    /// Sustained retained-successes per second (token bucket refill);
+    /// 0 disables rate limiting.
+    pub max_per_sec: f64,
+    /// Token-bucket burst capacity.
+    pub burst: f64,
+}
+
+impl Default for SamplePolicy {
+    fn default() -> Self {
+        // keep everything by default, but bound the sustained rate so a
+        // saturating fleet can't spend its time churning the ring
+        SamplePolicy { success_rate: 1.0, seed: 0x5eed_cafe, max_per_sec: 64.0, burst: 128.0 }
+    }
+}
+
+/// splitmix64 over the id bytes — cheap, seed-keyed, stable across runs.
+fn sample_hash(id: &str, seed: u64) -> u64 {
+    let mut h = seed ^ 0x9e37_79b9_7f4a_7c15;
+    for &b in id.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        h ^= h >> 27;
+        h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+        h ^= h >> 31;
+    }
+    h
+}
+
+impl SamplePolicy {
+    /// Deterministic success-sampling verdict for a request id.
+    pub fn sample_success(&self, id: &str) -> bool {
+        if self.success_rate >= 1.0 {
+            return true;
+        }
+        if self.success_rate <= 0.0 {
+            return false;
+        }
+        // top 53 bits → uniform in [0,1)
+        let u = (sample_hash(id, self.seed) >> 11) as f64 / (1u64 << 53) as f64;
+        u < self.success_rate
+    }
+}
+
+/// Recorder construction knobs (the `--trace-capacity`/`--trace-sample`
+/// surface, carried through `PoolOptions`).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceOptions {
+    /// Ring capacity in traces; 0 disables retention (rollups still run).
+    pub capacity: usize,
+    pub sample: SamplePolicy,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        TraceOptions { capacity: 256, sample: SamplePolicy::default() }
+    }
+}
+
+#[derive(Default)]
+struct Ring {
+    traces: VecDeque<Arc<Trace>>,
+    /// Token bucket for retained successes.
+    bucket: f64,
+    last_refill_us: u64,
+    // -------- rollups (exact, accumulated before sampling) --------
+    recorded: u64,
+    retained: u64,
+    dropped: u64,
+    er_flops_saved: f64,
+    er_beams_rejected: u64,
+}
+
+/// Cumulative recorder counters (feed `/metrics` and the benchmarks'
+/// per-mode FLOPs-saved reporting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecorderTotals {
+    /// Traces submitted (every completed request).
+    pub recorded: u64,
+    /// Traces currently admitted to the ring (before eviction).
+    pub retained: u64,
+    /// Traces not retained: sampled out, rate-limited, or evicted.
+    pub dropped: u64,
+    /// Estimated FLOPs early rejection saved, summed over all requests.
+    pub er_flops_saved: f64,
+    /// Beams early-rejected, summed over all requests.
+    pub er_beams_rejected: u64,
+}
+
+pub struct TraceRecorder {
+    capacity: usize,
+    policy: SamplePolicy,
+    inner: Mutex<Ring>,
+}
+
+impl TraceRecorder {
+    pub fn new(opts: TraceOptions) -> TraceRecorder {
+        let ring = Ring { bucket: opts.sample.burst, ..Ring::default() };
+        TraceRecorder { capacity: opts.capacity, policy: opts.sample, inner: Mutex::new(ring) }
+    }
+
+    pub fn policy(&self) -> &SamplePolicy {
+        &self.policy
+    }
+
+    /// Record a completed trace (rollups always; retention per policy).
+    pub fn submit(&self, trace: Trace) {
+        self.submit_at(trace, now_us());
+    }
+
+    /// `submit` with an explicit clock, so rate-limit behavior is
+    /// testable without sleeping.
+    pub fn submit_at(&self, trace: Trace, now_us: u64) {
+        debug_assert!(trace.well_formed(), "submitted trace has open spans");
+        let mut g = self.inner.lock().unwrap();
+        g.recorded += 1;
+        g.er_flops_saved += trace.er_flops_saved();
+        g.er_beams_rejected += trace.er_rejected() as u64;
+
+        let keep = self.capacity > 0 && self.admit(&mut g, &trace, now_us);
+        if !keep {
+            g.dropped += 1;
+            return;
+        }
+        g.retained += 1;
+        if g.traces.len() == self.capacity {
+            g.traces.pop_front();
+            g.dropped += 1; // evicted
+        }
+        g.traces.push_back(Arc::new(trace));
+    }
+
+    /// Sampling verdict: failures always kept, successes sampled then
+    /// rate-limited.
+    fn admit(&self, g: &mut Ring, trace: &Trace, now_us: u64) -> bool {
+        // errors, deadline misses, cancellations: always retained
+        if trace.status != 200 || trace.outcome != "ok" {
+            return true;
+        }
+        if !self.policy.sample_success(&trace.id) {
+            return false;
+        }
+        if self.policy.max_per_sec <= 0.0 {
+            return true;
+        }
+        // refill, then spend one token per retained success
+        let dt_s = now_us.saturating_sub(g.last_refill_us) as f64 / 1e6;
+        g.last_refill_us = now_us;
+        g.bucket = (g.bucket + dt_s * self.policy.max_per_sec).min(self.policy.burst);
+        if g.bucket < 1.0 {
+            return false;
+        }
+        g.bucket -= 1.0;
+        true
+    }
+
+    /// Look a retained trace up by request id (newest match wins, in
+    /// case a client reused an id).
+    pub fn get(&self, id: &str) -> Option<Arc<Trace>> {
+        let g = self.inner.lock().unwrap();
+        g.traces.iter().rev().find(|t| t.id == id).cloned()
+    }
+
+    /// Newest-first summaries for `/traces`.
+    pub fn recent(&self, n: usize) -> Vec<Arc<Trace>> {
+        let g = self.inner.lock().unwrap();
+        g.traces.iter().rev().take(n).cloned().collect()
+    }
+
+    /// Every retained trace, oldest first (the Chrome export input).
+    pub fn all(&self) -> Vec<Arc<Trace>> {
+        let g = self.inner.lock().unwrap();
+        g.traces.iter().cloned().collect()
+    }
+
+    pub fn totals(&self) -> RecorderTotals {
+        let g = self.inner.lock().unwrap();
+        RecorderTotals {
+            recorded: g.recorded,
+            retained: g.retained,
+            dropped: g.dropped,
+            er_flops_saved: g.er_flops_saved,
+            er_beams_rejected: g.er_beams_rejected,
+        }
+    }
+
+    /// The recorder's `/metrics` rollups, exposition-format complete.
+    pub fn render_metrics(&self) -> String {
+        use crate::obs::metrics::MetricWriter;
+        let t = self.totals();
+        let mut w = MetricWriter::new();
+        w.counter(
+            "erprm_er_flops_saved_total",
+            "Estimated FLOPs saved by early beam rejection (trace ledger).",
+            t.er_flops_saved,
+        );
+        w.counter(
+            "erprm_er_beams_rejected_total",
+            "Beams early-rejected across all requests.",
+            t.er_beams_rejected as f64,
+        );
+        w.counter(
+            "erprm_traces_recorded_total",
+            "Request traces submitted to the recorder.",
+            t.recorded as f64,
+        );
+        w.counter(
+            "erprm_trace_dropped_total",
+            "Request traces not retained (sampled out, rate-limited, or evicted).",
+            t.dropped as f64,
+        );
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{ErEvent, PhaseFlops, TraceBuilder};
+
+    fn ok_trace(id: &str) -> Trace {
+        TraceBuilder::start(id).finish("ok", 200, PhaseFlops::default())
+    }
+
+    fn no_limit(capacity: usize, rate: f64, seed: u64) -> TraceRecorder {
+        TraceRecorder::new(TraceOptions {
+            capacity,
+            sample: SamplePolicy { success_rate: rate, seed, max_per_sec: 0.0, burst: 0.0 },
+        })
+    }
+
+    #[test]
+    fn ring_evicts_oldest_under_overflow() {
+        let r = no_limit(4, 1.0, 1);
+        for i in 0..10 {
+            r.submit(ok_trace(&format!("r{i}")));
+        }
+        let t = r.totals();
+        assert_eq!(t.recorded, 10);
+        assert_eq!(t.retained, 10);
+        assert_eq!(t.dropped, 6); // evictions
+        let recent = r.recent(100);
+        assert_eq!(recent.len(), 4);
+        assert_eq!(recent[0].id, "r9"); // newest first
+        assert_eq!(recent[3].id, "r6");
+        assert!(r.get("r0").is_none(), "evicted traces are gone");
+        assert!(r.get("r9").is_some());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_under_a_fixed_seed() {
+        let ids: Vec<String> = (0..200).map(|i| format!("req-{i:04}")).collect();
+        let p = SamplePolicy { success_rate: 0.3, seed: 42, max_per_sec: 0.0, burst: 0.0 };
+        let first: Vec<bool> = ids.iter().map(|i| p.sample_success(i)).collect();
+        let second: Vec<bool> = ids.iter().map(|i| p.sample_success(i)).collect();
+        assert_eq!(first, second, "same seed must give the same keep-set");
+        let kept = first.iter().filter(|&&k| k).count();
+        assert!(kept > 20 && kept < 120, "rate 0.3 kept {kept}/200");
+        // a different seed picks a different set
+        let p2 = SamplePolicy { seed: 43, ..p };
+        let third: Vec<bool> = ids.iter().map(|i| p2.sample_success(i)).collect();
+        assert_ne!(first, third);
+        // and the recorder applies the same verdicts
+        let r = no_limit(1000, 0.3, 42);
+        for id in &ids {
+            r.submit(ok_trace(id));
+        }
+        assert_eq!(r.totals().retained, kept as u64);
+    }
+
+    #[test]
+    fn failures_bypass_sampling_and_rate_limits() {
+        let r = TraceRecorder::new(TraceOptions {
+            capacity: 100,
+            sample: SamplePolicy { success_rate: 0.0, seed: 7, max_per_sec: 1.0, burst: 1.0 },
+        });
+        r.submit(ok_trace("s1")); // sampled out
+        r.submit(TraceBuilder::start("e1").finish("error", 500, PhaseFlops::default()));
+        r.submit(TraceBuilder::start("d1").finish("deadline", 504, PhaseFlops::default()));
+        r.submit(TraceBuilder::start("c1").finish("cancelled", 200, PhaseFlops::default()));
+        let t = r.totals();
+        assert_eq!(t.retained, 3);
+        assert_eq!(t.dropped, 1);
+        assert!(r.get("e1").is_some());
+        assert!(r.get("d1").is_some());
+        assert!(r.get("c1").is_some(), "non-ok outcome kept even with status 200");
+        assert!(r.get("s1").is_none());
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_successes() {
+        let r = TraceRecorder::new(TraceOptions {
+            capacity: 100,
+            sample: SamplePolicy { success_rate: 1.0, seed: 7, max_per_sec: 10.0, burst: 2.0 },
+        });
+        // burst of 2, then dry at t=0
+        for i in 0..5 {
+            r.submit_at(ok_trace(&format!("a{i}")), 0);
+        }
+        assert_eq!(r.totals().retained, 2);
+        // 100ms later one token refilled (10/s)
+        r.submit_at(ok_trace("b0"), 100_000);
+        r.submit_at(ok_trace("b1"), 100_000);
+        assert_eq!(r.totals().retained, 3);
+        assert!(r.get("b0").is_some());
+        assert!(r.get("b1").is_none());
+    }
+
+    #[test]
+    fn rollups_count_sampled_out_traces() {
+        let r = no_limit(100, 0.0, 1);
+        let mut tb = TraceBuilder::start("x");
+        tb.reject(ErEvent { depth: 0, rejected: vec![0, 1], scores: vec![0.1, 0.2], flops_saved: 5.0 });
+        r.submit(tb.finish("ok", 200, PhaseFlops::default()));
+        let t = r.totals();
+        assert_eq!(t.retained, 0, "sampled out");
+        assert_eq!(t.er_beams_rejected, 2, "rollups still exact");
+        assert_eq!(t.er_flops_saved, 5.0);
+        assert_eq!(t.dropped, 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables_retention() {
+        let r = no_limit(0, 1.0, 1);
+        r.submit(ok_trace("z"));
+        assert_eq!(r.totals().retained, 0);
+        assert_eq!(r.totals().recorded, 1);
+        assert!(r.recent(10).is_empty());
+    }
+}

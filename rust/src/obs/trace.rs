@@ -1,0 +1,452 @@
+//! Per-request trace assembly: spans, instant events, the phase-split
+//! FLOPs ledger, and the early-rejection ledger.
+//!
+//! A [`TraceBuilder`] is plain owned data with no interior locking — it
+//! rides inside the request (through `SolveTask` and the fleet job) and
+//! every record call is a `Vec` push plus one monotonic-clock read. The
+//! only synchronized operation in a request's life is the single
+//! [`crate::obs::TraceRecorder::submit`] at completion.
+//!
+//! Determinism contract: recording never touches RNG streams, beam
+//! state, or engine-call order — a traced solve is byte-identical to an
+//! untraced one (pinned by the integration suite).
+
+use crate::coordinator::flops::FlopsLedger;
+use crate::obs::now_us;
+use crate::util::json::Json;
+
+/// A closed (or still-open) interval on the request's timeline.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: &'static str,
+    /// Microseconds since the process trace epoch ([`crate::obs::now_us`]).
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Free-form annotation ("" when none): batch width, gang size, ...
+    pub detail: String,
+    /// Nesting depth at open time (0 = top level).
+    pub depth: usize,
+    /// True only while the span is open; a submitted trace must have
+    /// every span closed (the well-formedness test pins this).
+    pub open: bool,
+}
+
+/// A zero-duration marker (admission verdict, cache hit, rejection, ...).
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub ts_us: u64,
+    pub detail: String,
+}
+
+/// One early-rejection round: which beams died at which depth, their
+/// partial scores (kept for later regret analysis against final
+/// outcomes), and the estimated FLOPs the rejection saved.
+#[derive(Debug, Clone)]
+pub struct ErEvent {
+    /// Completed select/expand rounds when the rejection fired (the
+    /// blocking loop index — rejection depth in paper terms).
+    pub depth: usize,
+    /// Beam slots rejected this round.
+    pub rejected: Vec<usize>,
+    /// Partial rewards of the rejected beams, same order as `rejected`.
+    pub scores: Vec<f32>,
+    /// Estimated FLOPs not spent because these beams stopped here:
+    /// the phase-B completion tokens of this round plus every remaining
+    /// round, charged at the ledger's per-token rates for both models.
+    /// An upper bound — a rejected beam might have finished early.
+    pub flops_saved: f64,
+}
+
+impl ErEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("depth", Json::num(self.depth as f64)),
+            (
+                "rejected",
+                Json::Arr(self.rejected.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            (
+                "scores",
+                Json::Arr(self.scores.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            ("flops_saved", Json::num(self.flops_saved)),
+        ])
+    }
+}
+
+/// The per-request FLOPs ledger split by lifecycle phase. Derived from
+/// the same token counters [`FlopsLedger`] charges, so by construction
+/// `prefill + decode + score == FlopsLedger::total_flops()` — the
+/// `/solve` response's `flops` field and the trace ledger can never
+/// disagree.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseFlops {
+    /// LM + PRM prompt ingestion.
+    pub prefill: f64,
+    /// LM generation tokens.
+    pub decode: f64,
+    /// PRM scoring tokens.
+    pub score: f64,
+}
+
+impl PhaseFlops {
+    pub fn from_ledger(l: &FlopsLedger) -> PhaseFlops {
+        PhaseFlops {
+            prefill: l.lm_prefill_tokens as f64 * l.lm_flops_per_token as f64
+                + l.prm_prefill_tokens as f64 * l.prm_flops_per_token as f64,
+            decode: l.lm_decode_tokens as f64 * l.lm_flops_per_token as f64,
+            score: l.prm_score_tokens as f64 * l.prm_flops_per_token as f64,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.prefill + self.decode + self.score
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prefill", Json::num(self.prefill)),
+            ("decode", Json::num(self.decode)),
+            ("score", Json::num(self.score)),
+            ("total", Json::num(self.total())),
+        ])
+    }
+}
+
+/// In-flight trace state. Created where the request enters the system,
+/// carried by value through the queue / task, sealed with
+/// [`TraceBuilder::finish`] and submitted to the recorder exactly once.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    id: String,
+    start_us: u64,
+    spans: Vec<Span>,
+    /// Stack of indices into `spans` that are still open.
+    open: Vec<usize>,
+    events: Vec<SpanEvent>,
+    er: Vec<ErEvent>,
+    shard: Option<usize>,
+    slot: Option<usize>,
+    queue_wait_ms: f64,
+}
+
+impl TraceBuilder {
+    pub fn start(id: impl Into<String>) -> TraceBuilder {
+        TraceBuilder {
+            id: id.into(),
+            start_us: now_us(),
+            spans: Vec::new(),
+            open: Vec::new(),
+            events: Vec::new(),
+            er: Vec::new(),
+            shard: None,
+            slot: None,
+            queue_wait_ms: 0.0,
+        }
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Open a span at the current nesting depth.
+    pub fn begin(&mut self, name: &'static str) {
+        self.begin_detail(name, String::new());
+    }
+
+    pub fn begin_detail(&mut self, name: &'static str, detail: impl Into<String>) {
+        let idx = self.spans.len();
+        self.spans.push(Span {
+            name,
+            start_us: now_us(),
+            dur_us: 0,
+            detail: detail.into(),
+            depth: self.open.len(),
+            open: true,
+        });
+        self.open.push(idx);
+    }
+
+    /// Close the innermost open span (no-op if none are open — the
+    /// error paths call [`TraceBuilder::end_all`] defensively and must
+    /// not panic over already-closed spans).
+    pub fn end(&mut self) {
+        if let Some(idx) = self.open.pop() {
+            let s = &mut self.spans[idx];
+            s.dur_us = now_us().saturating_sub(s.start_us);
+            s.open = false;
+        }
+    }
+
+    /// Annotate-and-close: replaces the innermost open span's detail.
+    pub fn end_detail(&mut self, detail: impl Into<String>) {
+        if let Some(&idx) = self.open.last() {
+            self.spans[idx].detail = detail.into();
+        }
+        self.end();
+    }
+
+    /// Close every open span — the one call every termination path
+    /// (success, error, cancellation, deadline) must make, so no
+    /// submitted trace carries an open span.
+    pub fn end_all(&mut self) {
+        while !self.open.is_empty() {
+            self.end();
+        }
+    }
+
+    pub fn open_spans(&self) -> usize {
+        self.open.len()
+    }
+
+    pub fn event(&mut self, name: &'static str, detail: impl Into<String>) {
+        self.events.push(SpanEvent { name, ts_us: now_us(), detail: detail.into() });
+    }
+
+    pub fn reject(&mut self, ev: ErEvent) {
+        self.events.push(SpanEvent {
+            name: "reject",
+            ts_us: now_us(),
+            detail: format!("depth={} rejected={}", ev.depth, ev.rejected.len()),
+        });
+        self.er.push(ev);
+    }
+
+    /// Record where the fleet placed this request (Chrome-trace row).
+    pub fn set_placement(&mut self, shard: usize, slot: usize) {
+        self.shard = Some(shard);
+        self.slot = Some(slot);
+    }
+
+    pub fn set_queue_wait(&mut self, ms: f64) {
+        self.queue_wait_ms = ms;
+    }
+
+    /// Seal the trace. Closes any spans an abnormal exit left open.
+    pub fn finish(mut self, outcome: &'static str, status: u16, phase: PhaseFlops) -> Trace {
+        self.end_all();
+        Trace {
+            id: self.id,
+            outcome,
+            status,
+            start_us: self.start_us,
+            end_us: now_us(),
+            shard: self.shard,
+            slot: self.slot,
+            queue_wait_ms: self.queue_wait_ms,
+            spans: self.spans,
+            events: self.events,
+            er: self.er,
+            phase,
+        }
+    }
+}
+
+/// A completed, immutable request trace as served by `/trace/<id>`.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub id: String,
+    /// "ok" | "error" | "deadline" | "cancelled" | "cache_hit" | "coalesced".
+    pub outcome: &'static str,
+    /// HTTP status the request resolved to.
+    pub status: u16,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub shard: Option<usize>,
+    pub slot: Option<usize>,
+    pub queue_wait_ms: f64,
+    pub spans: Vec<Span>,
+    pub events: Vec<SpanEvent>,
+    pub er: Vec<ErEvent>,
+    pub phase: PhaseFlops,
+}
+
+impl Trace {
+    /// Total estimated FLOPs early rejection saved on this request.
+    pub fn er_flops_saved(&self) -> f64 {
+        self.er.iter().map(|e| e.flops_saved).sum()
+    }
+
+    /// Total beams rejected across all depths.
+    pub fn er_rejected(&self) -> usize {
+        self.er.iter().map(|e| e.rejected.len()).sum()
+    }
+
+    /// Every span closed — true for every trace the builder seals.
+    pub fn well_formed(&self) -> bool {
+        self.spans.iter().all(|s| !s.open)
+    }
+
+    pub fn duration_ms(&self) -> f64 {
+        self.end_us.saturating_sub(self.start_us) as f64 / 1000.0
+    }
+
+    fn opt_idx(v: Option<usize>) -> Json {
+        match v {
+            Some(i) => Json::num(i as f64),
+            None => Json::Null,
+        }
+    }
+
+    /// The full per-request document (`GET /trace/<id>`).
+    pub fn to_json(&self) -> Json {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name)),
+                    ("start_us", Json::num(s.start_us as f64)),
+                    ("dur_us", Json::num(s.dur_us as f64)),
+                    ("depth", Json::num(s.depth as f64)),
+                    ("detail", Json::str(&s.detail)),
+                ])
+            })
+            .collect();
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("name", Json::str(e.name)),
+                    ("ts_us", Json::num(e.ts_us as f64)),
+                    ("detail", Json::str(&e.detail)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("request_id", Json::str(&self.id)),
+            ("outcome", Json::str(self.outcome)),
+            ("status", Json::num(self.status as f64)),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("duration_ms", Json::num(self.duration_ms())),
+            ("queue_wait_ms", Json::num(self.queue_wait_ms)),
+            ("shard", Self::opt_idx(self.shard)),
+            ("slot", Self::opt_idx(self.slot)),
+            ("flops", self.phase.to_json()),
+            (
+                "early_rejection",
+                Json::obj(vec![
+                    ("beams_rejected", Json::num(self.er_rejected() as f64)),
+                    ("flops_saved", Json::num(self.er_flops_saved())),
+                    ("events", Json::Arr(self.er.iter().map(ErEvent::to_json).collect())),
+                ]),
+            ),
+            ("spans", Json::Arr(spans)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// The one-line form (`GET /traces`).
+    pub fn summary(&self) -> Json {
+        Json::obj(vec![
+            ("request_id", Json::str(&self.id)),
+            ("outcome", Json::str(self.outcome)),
+            ("status", Json::num(self.status as f64)),
+            ("duration_ms", Json::num(self.duration_ms())),
+            ("queue_wait_ms", Json::num(self.queue_wait_ms)),
+            ("shard", Self::opt_idx(self.shard)),
+            ("slot", Self::opt_idx(self.slot)),
+            ("flops", Json::num(self.phase.total())),
+            ("beams_rejected", Json::num(self.er_rejected() as f64)),
+            ("er_flops_saved", Json::num(self.er_flops_saved())),
+            ("spans", Json::num(self.spans.len() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_close() {
+        let mut tb = TraceBuilder::start("r1");
+        tb.begin("solve");
+        tb.begin_detail("decode", "b8");
+        assert_eq!(tb.open_spans(), 2);
+        tb.end();
+        tb.begin("score");
+        tb.end();
+        tb.end();
+        assert_eq!(tb.open_spans(), 0);
+        let t = tb.finish("ok", 200, PhaseFlops::default());
+        assert!(t.well_formed());
+        assert_eq!(t.spans.len(), 3);
+        assert_eq!(t.spans[0].depth, 0);
+        assert_eq!(t.spans[1].depth, 1);
+        assert_eq!(t.spans[1].detail, "b8");
+    }
+
+    #[test]
+    fn abnormal_exit_closes_open_spans() {
+        // error / cancellation / 504 paths leave spans open; finish must
+        // seal them so every submitted trace is well-formed
+        let mut tb = TraceBuilder::start("r2");
+        tb.begin("solve");
+        tb.begin("decode");
+        let t = tb.finish("error", 504, PhaseFlops::default());
+        assert!(t.well_formed());
+        assert!(t.spans.iter().all(|s| !s.open));
+    }
+
+    #[test]
+    fn end_without_open_is_a_noop() {
+        let mut tb = TraceBuilder::start("r3");
+        tb.end();
+        tb.end_all();
+        tb.begin("a");
+        tb.end();
+        tb.end(); // extra
+        assert_eq!(tb.open_spans(), 0);
+    }
+
+    #[test]
+    fn phase_split_sums_to_ledger_total() {
+        let mut l = FlopsLedger::new(200, 700);
+        l.lm_prefill(10);
+        l.lm_decode(90);
+        l.prm_prefill(10);
+        l.prm_score(40);
+        let p = PhaseFlops::from_ledger(&l);
+        assert_eq!(p.total(), l.total_flops());
+        assert_eq!(p.prefill, 10.0 * 200.0 + 10.0 * 700.0);
+        assert_eq!(p.decode, 90.0 * 200.0);
+        assert_eq!(p.score, 40.0 * 700.0);
+    }
+
+    #[test]
+    fn er_ledger_accumulates() {
+        let mut tb = TraceBuilder::start("r4");
+        tb.reject(ErEvent {
+            depth: 0,
+            rejected: vec![1, 3],
+            scores: vec![0.2, 0.1],
+            flops_saved: 100.0,
+        });
+        tb.reject(ErEvent { depth: 1, rejected: vec![2], scores: vec![0.4], flops_saved: 40.0 });
+        let t = tb.finish("ok", 200, PhaseFlops::default());
+        assert_eq!(t.er_rejected(), 3);
+        assert_eq!(t.er_flops_saved(), 140.0);
+        // the reject instant events mirror the ledger
+        assert_eq!(t.events.iter().filter(|e| e.name == "reject").count(), 2);
+    }
+
+    #[test]
+    fn json_round_trip_parses(){
+        let mut tb = TraceBuilder::start("r5");
+        tb.begin("solve");
+        tb.set_placement(1, 2);
+        let t = tb.finish("ok", 200, PhaseFlops { prefill: 1.0, decode: 2.0, score: 3.0 });
+        let full = t.to_json().to_string();
+        let parsed = Json::parse(&full).unwrap();
+        assert_eq!(parsed.get("request_id").and_then(Json::as_str), Some("r5"));
+        assert_eq!(
+            parsed.get("flops").and_then(|f| f.get("total")).and_then(Json::as_f64),
+            Some(6.0)
+        );
+        let s = Json::parse(&t.summary().to_string()).unwrap();
+        assert_eq!(s.get("shard").and_then(Json::as_f64), Some(1.0));
+    }
+}

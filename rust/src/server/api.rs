@@ -42,6 +42,11 @@ pub struct SolveRequest {
     pub deadline_ms: Option<u64>,
     /// Admission priority (higher first, 0 = default class).
     pub priority: i64,
+    /// Trace key, echoed in the response. Minted at the HTTP door when
+    /// the client supplied neither an `X-Request-Id` header nor a
+    /// `request_id` body field. Not part of the cache key — it names
+    /// the request, it doesn't change the solve.
+    pub request_id: String,
 }
 
 impl SolveRequest {
@@ -120,6 +125,11 @@ pub fn parse_solve(body: &[u8], defaults: &SearchConfig) -> Result<SolveRequest>
         prm: j.get("prm").and_then(Json::as_str).unwrap_or("prm-large").to_string(),
         deadline_ms,
         priority,
+        request_id: j
+            .get("request_id")
+            .and_then(Json::as_str)
+            .and_then(crate::obs::sanitize_request_id)
+            .unwrap_or_default(),
     })
 }
 
@@ -129,6 +139,7 @@ pub fn parse_solve(body: &[u8], defaults: &SearchConfig) -> Result<SolveRequest>
 pub fn render_solve(req: &SolveRequest, out: &SolveOutcome, queue_wait_ms: f64) -> String {
     let r = out.ledger.report();
     Json::obj(vec![
+        ("request_id", Json::str(&req.request_id)),
         ("answer", out.answer.map(|a| Json::num(a as f64)).unwrap_or(Json::Null)),
         ("expected", Json::num(req.problem.answer() as f64)),
         ("correct", Json::Bool(out.correct)),
@@ -188,6 +199,29 @@ mod tests {
             .is_err());
         assert!(parse_solve(br#"{"v0": 5, "ops": [["+",3]], "priority": "high"}"#, &defaults())
             .is_err());
+    }
+
+    #[test]
+    fn parse_accepts_body_request_id() {
+        let body = br#"{"v0": 5, "ops": [["+",3]], "request_id": "client-7"}"#;
+        let r = parse_solve(body, &defaults()).unwrap();
+        assert_eq!(r.request_id, "client-7");
+        // absent or junk ids are left for the door to mint
+        let r = parse_solve(br#"{"v0": 5, "ops": [["+",3]]}"#, &defaults()).unwrap();
+        assert_eq!(r.request_id, "");
+        let r = parse_solve(br#"{"v0": 5, "ops": [["+",3]], "request_id": "  "}"#, &defaults())
+            .unwrap();
+        assert_eq!(r.request_id, "");
+    }
+
+    #[test]
+    fn cache_key_ignores_request_id() {
+        let a = parse_solve(br#"{"v0": 5, "ops": [["+",3]], "request_id": "a"}"#, &defaults())
+            .unwrap();
+        let b = parse_solve(br#"{"v0": 5, "ops": [["+",3]], "request_id": "b"}"#, &defaults())
+            .unwrap();
+        let cfg = defaults();
+        assert_eq!(a.cache_key(&cfg), b.cache_key(&cfg), "ids must not defeat caching");
     }
 
     #[test]

@@ -10,15 +10,25 @@
 //!   (the request's own budget elapsed; retrying with the same budget
 //!   will likely 504 again, so no `Retry-After` hint)
 //! * runtime faults (I/O, XLA) -> **500**
+//!
+//! Every `/solve` request is keyed by a request id — the client's
+//! `X-Request-Id` header or `request_id` body field when usable, a
+//! minted id otherwise — echoed back as an `X-Request-Id` response
+//! header and in the response body, and usable against the trace
+//! endpoints: `GET /trace/<id>` (full lifecycle document),
+//! `GET /traces` (recent summaries), `GET /traces/chrome` (Chrome
+//! `trace_event` timeline for Perfetto).
 
 use std::time::Instant;
 
 use crate::config::SearchConfig;
+use crate::obs::{self, PhaseFlops, TraceBuilder};
 use crate::server::api;
 use crate::server::http;
 use crate::server::metrics::Metrics;
 use crate::server::router::EnginePool;
 use crate::util::error::Error;
+use crate::util::json::Json;
 
 /// Render an error with the status from [`Error::http_status`]; 503s
 /// carry a `Retry-After` hint so well-behaved clients back off.
@@ -46,15 +56,49 @@ pub fn route(
             text.push_str(&pool.render_metrics());
             http::Response::text(200, &text)
         }
+        ("GET", "/traces") => {
+            let items: Vec<Json> =
+                pool.tracer().recent(100).iter().map(|t| t.summary()).collect();
+            http::Response::json(200, Json::obj(vec![("traces", Json::Arr(items))]).to_string())
+        }
+        ("GET", "/traces/chrome") => {
+            http::Response::json(200, obs::chrome_trace(&pool.tracer().all()).to_string())
+        }
+        ("GET", p) if p.starts_with("/trace/") => {
+            let id = &p["/trace/".len()..];
+            match pool.tracer().get(id) {
+                Some(t) => http::Response::json(200, t.to_json().to_string()),
+                None => http::Response::json(
+                    404,
+                    "{\"error\":\"no trace retained for that id\"}".into(),
+                ),
+            }
+        }
         ("POST", "/solve") => {
             let t0 = Instant::now();
-            let parsed = match api::parse_solve(&req.body, defaults) {
+            // id precedence: X-Request-Id header > body request_id field
+            // > minted at the door
+            let header_rid =
+                req.request_id.as_deref().and_then(obs::sanitize_request_id);
+            let mut parsed = match api::parse_solve(&req.body, defaults) {
                 Ok(p) => p,
                 Err(e) => {
+                    // even a parse reject leaves a (failure, hence
+                    // always-retained) trace under the client's id
+                    let rid = header_rid.unwrap_or_else(obs::mint_request_id);
+                    let tb = TraceBuilder::start(rid);
+                    pool.tracer()
+                        .submit(tb.finish("error", e.http_status(), PhaseFlops::default()));
                     metrics.record_error(e.http_status());
                     return error_response(&e);
                 }
             };
+            if let Some(rid) = header_rid {
+                parsed.request_id = rid;
+            } else if parsed.request_id.is_empty() {
+                parsed.request_id = obs::mint_request_id();
+            }
+            let rid = parsed.request_id.clone();
             match pool.solve_timed(parsed.clone(), defaults.clone()) {
                 Ok(s) => {
                     metrics.record_ok(
@@ -67,10 +111,11 @@ pub fn route(
                         200,
                         api::render_solve(&parsed, &s.outcome, s.queue_wait_ms),
                     )
+                    .with_header("X-Request-Id", rid)
                 }
                 Err(e) => {
                     metrics.record_error(e.http_status());
-                    error_response(&e)
+                    error_response(&e).with_header("X-Request-Id", rid)
                 }
             }
         }

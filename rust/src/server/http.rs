@@ -18,6 +18,10 @@ pub struct Request {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// Client-supplied `X-Request-Id` header, if any — the handler
+    /// echoes it (or a minted id) on every `/solve` response and keys
+    /// the request's trace with it.
+    pub request_id: Option<String>,
 }
 
 #[derive(Debug, Clone)]
@@ -80,6 +84,7 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request> 
     let path = parts.next().ok_or_else(|| Error::parse("missing path"))?.to_string();
 
     let mut content_length = 0usize;
+    let mut request_id = None;
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
@@ -93,6 +98,8 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request> 
                     .trim()
                     .parse()
                     .map_err(|_| Error::parse("bad content-length"))?;
+            } else if k.eq_ignore_ascii_case("x-request-id") {
+                request_id = Some(v.trim().to_string());
             }
         }
     }
@@ -101,7 +108,7 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request> 
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok(Request { method, path, body })
+    Ok(Request { method, path, body, request_id })
 }
 
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
@@ -263,6 +270,21 @@ mod tests {
             elapsed < std::time::Duration::from_millis(350),
             "handlers did not overlap: {elapsed:?}"
         );
+    }
+
+    #[test]
+    fn request_id_header_is_captured() {
+        let out = roundtrip(b"GET /healthz HTTP/1.1\r\nX-Request-Id: abc-123\r\n\r\n", |req| {
+            assert_eq!(req.request_id.as_deref(), Some("abc-123"));
+            Response::text(200, "ok")
+        });
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+        // absent header -> None
+        let out = roundtrip(b"GET /healthz HTTP/1.1\r\n\r\n", |req| {
+            assert_eq!(req.request_id, None);
+            Response::text(200, "ok")
+        });
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
     }
 
     #[test]

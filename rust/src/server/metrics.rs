@@ -78,45 +78,40 @@ impl Metrics {
         }
     }
 
-    /// Render in a Prometheus-flavoured text format.
+    /// Render in Prometheus text exposition format: every series carries
+    /// its `# HELP`/`# TYPE` header (the golden test pins validity).
     pub fn render(&self) -> String {
+        use crate::obs::MetricWriter;
         let m = self.inner.lock().unwrap();
         let up = m.started.elapsed().as_secs_f64();
         let qps = if up > 0.0 { m.requests as f64 / up } else { 0.0 };
-        format!(
-            "erprm_requests_total {}\n\
-             erprm_errors_total {}\n\
-             erprm_errors_4xx_total {}\n\
-             erprm_errors_5xx_total {}\n\
-             erprm_correct_total {}\n\
-             erprm_uptime_seconds {:.1}\n\
-             erprm_throughput_rps {:.4}\n\
-             erprm_latency_ms_mean {:.2}\n\
-             erprm_latency_ms_p50 {:.2}\n\
-             erprm_latency_ms_p95 {:.2}\n\
-             erprm_latency_ms_p99 {:.2}\n\
-             erprm_queue_wait_ms_mean {:.2}\n\
-             erprm_queue_wait_ms_p50 {:.2}\n\
-             erprm_queue_wait_ms_p95 {:.2}\n\
-             erprm_queue_wait_ms_p99 {:.2}\n\
-             erprm_flops_mean {:.3e}\n",
-            m.requests,
-            m.errors,
-            m.errors_4xx,
-            m.errors_5xx,
-            m.correct,
-            up,
-            qps,
-            m.latency_ms.mean(),
-            m.latency_ms.quantile(0.5),
-            m.latency_ms.quantile(0.95),
-            m.latency_ms.quantile(0.99),
-            m.queue_wait_ms.mean(),
-            m.queue_wait_ms.quantile(0.5),
-            m.queue_wait_ms.quantile(0.95),
-            m.queue_wait_ms.quantile(0.99),
-            m.flops.mean(),
-        )
+        let mut w = MetricWriter::new();
+        w.counter("erprm_requests_total", "Requests served (including failures).", m.requests as f64);
+        w.counter("erprm_errors_total", "Requests that resolved to an error.", m.errors as f64);
+        w.counter("erprm_errors_4xx_total", "Client-error (4xx) responses.", m.errors_4xx as f64);
+        w.counter(
+            "erprm_errors_5xx_total",
+            "Server-fault / backpressure (5xx) responses.",
+            m.errors_5xx as f64,
+        );
+        w.counter("erprm_correct_total", "Solves whose answer was correct.", m.correct as f64);
+        w.gauge("erprm_uptime_seconds", "Seconds since metrics start.", up);
+        w.gauge("erprm_throughput_rps", "Requests per second since start.", qps);
+        let quants = |w: &mut MetricWriter, base: &str, help: &str, h: &Histogram| {
+            w.gauge(&format!("{base}_mean"), help, h.mean());
+            w.gauge(&format!("{base}_p50"), help, h.quantile(0.5));
+            w.gauge(&format!("{base}_p95"), help, h.quantile(0.95));
+            w.gauge(&format!("{base}_p99"), help, h.quantile(0.99));
+        };
+        quants(&mut w, "erprm_latency_ms", "End-to-end request latency (ms).", &m.latency_ms);
+        quants(
+            &mut w,
+            "erprm_queue_wait_ms",
+            "Scheduling delay before a shard picked the request up (ms).",
+            &m.queue_wait_ms,
+        );
+        w.gauge("erprm_flops_mean", "Mean analytic FLOPs per solved request.", m.flops.mean());
+        w.finish()
     }
 
     pub fn snapshot(&self) -> (u64, u64, u64) {
@@ -160,6 +155,31 @@ mod tests {
         assert!(text.contains("latency_ms_p50"));
         assert!(text.contains("latency_ms_p99"));
         assert!(text.contains("queue_wait_ms_p99"));
+    }
+
+    #[test]
+    fn render_is_valid_exposition_format() {
+        // golden gate: every erprm_* series must carry # HELP / # TYPE
+        let m = Metrics::default();
+        m.record_ok(12.0, 1.5, 1e9, true);
+        m.record_error(503);
+        let text = m.render();
+        crate::obs::check_exposition(&text).unwrap();
+        for series in [
+            "erprm_requests_total",
+            "erprm_errors_total",
+            "erprm_errors_4xx_total",
+            "erprm_errors_5xx_total",
+            "erprm_correct_total",
+            "erprm_uptime_seconds",
+            "erprm_throughput_rps",
+            "erprm_latency_ms_p99",
+            "erprm_queue_wait_ms_p95",
+            "erprm_flops_mean",
+        ] {
+            assert!(text.contains(&format!("# TYPE {series} ")), "missing TYPE for {series}");
+            assert!(text.contains(&format!("# HELP {series} ")), "missing HELP for {series}");
+        }
     }
 
     #[test]

@@ -40,16 +40,17 @@ use std::time::{Duration, Instant};
 
 use crate::batch::{BatchStats, BatchTotals};
 use crate::config::SearchConfig;
-use crate::config::SearchMode;
 use crate::coordinator::search::SolveOutcome;
-use crate::coordinator::{solve_early_rejection, solve_vanilla};
+use crate::coordinator::task::Progress;
 use crate::fleet::{self, FleetJob, FleetOptions, FleetStats, FleetTotals, Solved, TaskSpec};
 use crate::harness::temp_for;
 use crate::log_debug;
 use crate::log_error;
+use crate::obs::{mint_request_id, PhaseFlops, TraceBuilder, TraceOptions, TraceRecorder};
 use crate::runtime::{Engine, EngineStats};
 use crate::server::api::SolveRequest;
 use crate::util::error::{Error, Result};
+use crate::util::logging;
 use crate::util::oneshot;
 
 type Reply = oneshot::Sender<Result<Solved>>;
@@ -62,6 +63,10 @@ struct SolveJob {
     deadline: Option<Duration>,
     priority: i64,
     reply: Reply,
+    /// Request trace, opened at dispatch with the door-side "queue" span
+    /// running; the shard closes it and records the rest of the
+    /// lifecycle.
+    trace: Option<Box<TraceBuilder>>,
 }
 
 enum Msg {
@@ -109,6 +114,9 @@ struct PoolInner {
     /// cache relies on: equal keys are proven byte-identical).
     singleflight: Option<Mutex<HashMap<String, SfWaiters>>>,
     pool_coalesced: AtomicU64,
+    /// Request-trace ring + rollups, shared by every shard thread and the
+    /// HTTP layer (`/trace/<id>`, `/traces`, `/traces/chrome`).
+    tracer: Arc<TraceRecorder>,
     joins: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -144,6 +152,10 @@ pub struct PoolOptions {
     /// Silently falls back to dense on artifact sets exported before
     /// paging existed.
     pub kv_pool_blocks: Option<usize>,
+    /// Request-trace retention knobs (`--trace-capacity` /
+    /// `--trace-sample`): ring size and success-sampling policy. Failures
+    /// are always retained regardless of sampling.
+    pub trace: TraceOptions,
 }
 
 /// RAII slot reservation against one shard's depth gauge. Dropping the
@@ -227,6 +239,7 @@ impl EnginePool {
                 fleet: None,
                 singleflight: false,
                 kv_pool_blocks: None,
+                trace: TraceOptions::default(),
             },
         )
     }
@@ -243,6 +256,7 @@ impl EnginePool {
                 return Err(Error::invalid("fleet max_inflight must be positive"));
             }
         }
+        let tracer = Arc::new(TraceRecorder::new(opts.trace));
         let mut shards = Vec::with_capacity(n_shards);
         let mut joins = Vec::with_capacity(n_shards);
         let mut readies = Vec::with_capacity(n_shards);
@@ -261,12 +275,13 @@ impl EnginePool {
             let bstats2 = Arc::clone(&bstats);
             let fleet_opts = opts.fleet.clone();
             let kv_pool_blocks = opts.kv_pool_blocks;
+            let tracer2 = Arc::clone(&tracer);
             let join = std::thread::Builder::new()
                 .name(format!("erprm-shard-{i}"))
                 .spawn(move || {
                     shard_main(
                         i, dir, kv_pool_blocks, rx, ready_tx, solved2, stats2, fleet_opts,
-                        fstats2, bstats2,
+                        fstats2, bstats2, tracer2,
                     )
                 })?;
             shards.push(Shard {
@@ -317,6 +332,7 @@ impl EnginePool {
                 cache_misses: AtomicU64::new(0),
                 singleflight: opts.singleflight.then(|| Mutex::new(HashMap::new())),
                 pool_coalesced: AtomicU64::new(0),
+                tracer,
                 joins: Mutex::new(joins),
             }),
         })
@@ -336,15 +352,31 @@ impl EnginePool {
     /// waited for scheduling (`queue_wait_ms`; 0 on a cache hit, the
     /// leader's value when this request coalesced onto an in-flight
     /// single-flight run).
-    pub fn solve_timed(&self, req: SolveRequest, mut cfg: SearchConfig) -> Result<Solved> {
+    pub fn solve_timed(&self, mut req: SolveRequest, mut cfg: SearchConfig) -> Result<Solved> {
+        if req.request_id.is_empty() {
+            req.request_id = mint_request_id();
+        }
         cfg.mode = req.mode;
         cfg.n_beams = req.n_beams;
         cfg.tau = req.tau;
-        cfg.validate()?;
+        if let Err(e) = cfg.validate() {
+            // requests bounced at the door still leave a (failure, hence
+            // always-retained) trace keyed by their id
+            let tb = TraceBuilder::start(req.request_id.clone());
+            self.inner.tracer.submit(tb.finish("error", e.http_status(), PhaseFlops::default()));
+            return Err(e);
+        }
         let key = req.cache_key(&cfg);
         if let Some(cache) = &self.inner.cache {
             if let Some(hit) = cache.lock().unwrap().get(&key) {
                 self.inner.cache_hits.fetch_add(1, Ordering::Relaxed);
+                // mini-trace: the outcome's ledger is the phase split, so
+                // /trace/<id> agrees with the response's flops field
+                let mut tb = TraceBuilder::start(req.request_id.clone());
+                tb.event("cache_hit", "solve cache");
+                self.inner
+                    .tracer
+                    .submit(tb.finish("cache_hit", 200, PhaseFlops::from_ledger(&hit.ledger)));
                 return Ok(Solved { outcome: hit, queue_wait_ms: 0.0 });
             }
             self.inner.cache_misses.fetch_add(1, Ordering::Relaxed);
@@ -370,16 +402,40 @@ impl EnginePool {
                 waiters.push(tx);
                 drop(table);
                 self.inner.pool_coalesced.fetch_add(1, Ordering::Relaxed);
-                return rx
+                let res: Result<Solved> = rx
                     .recv()
                     .map_err(|_| Error::internal("single-flight leader vanished"))?;
+                // the follower's own trace ends at the door: it rode the
+                // leader's engine run and inherits its result
+                let mut tb = TraceBuilder::start(req.request_id.clone());
+                tb.event("coalesced", "pool single-flight follower");
+                let t = match &res {
+                    Ok(s) => {
+                        tb.finish("coalesced", 200, PhaseFlops::from_ledger(&s.outcome.ledger))
+                    }
+                    Err(e) if e.http_status() == 504 => {
+                        tb.finish("deadline", 504, PhaseFlops::default())
+                    }
+                    Err(e) => tb.finish("error", e.http_status(), PhaseFlops::default()),
+                };
+                self.inner.tracer.submit(t);
+                return res;
             }
             table.insert(key.clone(), Vec::new());
             Some(SingleFlightGuard { table: sf, key: key.clone() })
         } else {
             None
         };
+        let rid = req.request_id.clone();
         let res = self.dispatch_with_failover(req, cfg);
+        if let Err(e) = &res {
+            if e.http_status() == 503 {
+                // saturation bounces never reach a shard, so the shard
+                // can't seal their trace — the door does
+                let tb = TraceBuilder::start(rid);
+                self.inner.tracer.submit(tb.finish("error", 503, PhaseFlops::default()));
+            }
+        }
         if let Some(g) = sf_guard {
             // fan the leader's result out to every follower; the guard's
             // Drop (which runs even when dispatch panicked) only cleans
@@ -514,6 +570,16 @@ impl EnginePool {
         let _guard = guard;
         let shard = &self.inner.shards[idx];
         let (rtx, rrx) = oneshot::channel();
+        // the trace starts here with the "queue" span open; the shard
+        // closes it at admission and records the rest of the lifecycle.
+        // (solve_timed mints ids; the fallback covers solve_on_shard and
+        // direct callers.)
+        let mut tb = Box::new(TraceBuilder::start(if req.request_id.is_empty() {
+            mint_request_id()
+        } else {
+            req.request_id.clone()
+        }));
+        tb.begin("queue");
         let job = SolveJob {
             deadline: self.effective_deadline(&req),
             priority: req.priority,
@@ -521,6 +587,7 @@ impl EnginePool {
             cfg,
             enqueued: Instant::now(),
             reply: rtx,
+            trace: Some(tb),
         };
         if shard.tx.send(Msg::Solve(Box::new(job))).is_err() {
             shard.dead.store(true, Ordering::Relaxed);
@@ -621,6 +688,12 @@ impl EnginePool {
         self.inner.cache.is_some()
     }
 
+    /// The pool's request-trace recorder (`/trace/<id>`, `/traces`,
+    /// Chrome export, and the benchmarks' FLOPs-saved reporting).
+    pub fn tracer(&self) -> &TraceRecorder {
+        &self.inner.tracer
+    }
+
     /// Engine counters aggregated across all shards.
     pub fn engine_stats(&self) -> EngineStats {
         let mut agg = EngineStats::default();
@@ -630,94 +703,221 @@ impl EnginePool {
         agg
     }
 
-    /// Pool-level gauges in the same Prometheus-flavoured text format as
-    /// `server::metrics` (appended to `/metrics` output).
+    /// Pool-level gauges in Prometheus text exposition format (appended
+    /// to `/metrics` output; every series carries `# HELP`/`# TYPE`).
     pub fn render_metrics(&self) -> String {
-        let mut out = String::new();
-        out.push_str(&format!("erprm_pool_shards {}\n", self.n_shards()));
-        out.push_str(&format!("erprm_pool_capacity_per_shard {}\n", self.inner.capacity));
-        out.push_str(&format!("erprm_fleet_enabled {}\n", self.fleet_enabled() as u8));
+        use crate::obs::MetricWriter;
+        let mut w = MetricWriter::new();
+        w.gauge("erprm_pool_shards", "Engine shard threads.", self.n_shards() as f64);
+        w.gauge(
+            "erprm_pool_capacity_per_shard",
+            "Queue slots per shard.",
+            self.inner.capacity as f64,
+        );
+        w.gauge(
+            "erprm_fleet_enabled",
+            "1 when shards run the fleet scheduler.",
+            self.fleet_enabled() as u8 as f64,
+        );
         let alive = self.shard_alive();
         for (i, (d, n)) in self.shard_depths().iter().zip(self.shard_solves()).enumerate() {
-            out.push_str(&format!("erprm_shard_queue_depth{{shard=\"{i}\"}} {d}\n"));
-            out.push_str(&format!("erprm_shard_solves_total{{shard=\"{i}\"}} {n}\n"));
-            out.push_str(&format!("erprm_shard_alive{{shard=\"{i}\"}} {}\n", alive[i] as u8));
+            let l = format!("shard=\"{i}\"");
+            w.gauge_labeled(
+                "erprm_shard_queue_depth",
+                "Requests reserved against the shard (queued + executing).",
+                &l,
+                *d as f64,
+            );
+            w.counter_labeled(
+                "erprm_shard_solves_total",
+                "Solves completed by the shard.",
+                &l,
+                n as f64,
+            );
+            w.gauge_labeled(
+                "erprm_shard_alive",
+                "0 once the shard thread was observed dead.",
+                &l,
+                alive[i] as u8 as f64,
+            );
         }
         if self.fleet_enabled() {
             for (i, s) in self.inner.shards.iter().enumerate() {
                 let f = &s.fstats;
-                out.push_str(&format!(
-                    "erprm_fleet_inflight{{shard=\"{i}\"}} {}\n",
-                    f.inflight.load(Ordering::Relaxed)
-                ));
-                out.push_str(&format!(
-                    "erprm_fleet_queued{{shard=\"{i}\"}} {}\n",
-                    f.queued.load(Ordering::Relaxed)
-                ));
-                out.push_str(&format!(
-                    "erprm_fleet_slot_occupancy{{shard=\"{i}\"}} {:.4}\n",
-                    f.occupancy()
-                ));
+                let l = format!("shard=\"{i}\"");
+                w.gauge_labeled(
+                    "erprm_fleet_inflight",
+                    "Tasks occupying fleet slots.",
+                    &l,
+                    f.inflight.load(Ordering::Relaxed) as f64,
+                );
+                w.gauge_labeled(
+                    "erprm_fleet_queued",
+                    "Jobs in the shard's admission queue.",
+                    &l,
+                    f.queued.load(Ordering::Relaxed) as f64,
+                );
+                w.gauge_labeled(
+                    "erprm_fleet_slot_occupancy",
+                    "Mean slot-table occupancy over scheduler rounds.",
+                    &l,
+                    f.occupancy(),
+                );
             }
             if let Some(t) = self.fleet_totals() {
-                out.push_str(&format!("erprm_fleet_admitted_total {}\n", t.admitted));
-                out.push_str(&format!("erprm_fleet_backfill_total {}\n", t.backfill));
-                out.push_str(&format!("erprm_fleet_coalesced_total {}\n", t.coalesced));
-                out.push_str(&format!("erprm_fleet_expired_total {}\n", t.expired));
-                out.push_str(&format!("erprm_fleet_cancelled_total {}\n", t.cancelled));
-                out.push_str(&format!(
-                    "erprm_fleet_forecast_rejected_total {}\n",
-                    t.forecast_rejected
-                ));
-                out.push_str(&format!("erprm_fleet_pool_deferred_total {}\n", t.pool_deferred));
-                out.push_str(&format!("erprm_fleet_completed_total {}\n", t.completed));
-                out.push_str(&format!("erprm_fleet_failed_total {}\n", t.failed));
+                w.counter(
+                    "erprm_fleet_admitted_total",
+                    "Jobs admitted into fleet slots.",
+                    t.admitted as f64,
+                );
+                w.counter(
+                    "erprm_fleet_backfill_total",
+                    "Admissions into a slot freed mid-round.",
+                    t.backfill as f64,
+                );
+                w.counter(
+                    "erprm_fleet_coalesced_total",
+                    "Duplicates folded onto in-flight tasks.",
+                    t.coalesced as f64,
+                );
+                w.counter(
+                    "erprm_fleet_expired_total",
+                    "Jobs bounced for exhausted deadlines (504).",
+                    t.expired as f64,
+                );
+                w.counter(
+                    "erprm_fleet_cancelled_total",
+                    "Jobs dropped because every client hung up.",
+                    t.cancelled as f64,
+                );
+                w.counter(
+                    "erprm_fleet_forecast_rejected_total",
+                    "Jobs bounced by the admission queue-wait forecast.",
+                    t.forecast_rejected as f64,
+                );
+                w.counter(
+                    "erprm_fleet_pool_deferred_total",
+                    "Backfill rounds deferred for KV block-pool headroom.",
+                    t.pool_deferred as f64,
+                );
+                w.counter(
+                    "erprm_fleet_completed_total",
+                    "Tasks completed successfully.",
+                    t.completed as f64,
+                );
+                w.counter(
+                    "erprm_fleet_failed_total",
+                    "Tasks that errored terminally.",
+                    t.failed as f64,
+                );
             }
         }
-        out.push_str(&format!("erprm_batch_gang_enabled {}\n", self.gang_enabled() as u8));
+        w.gauge(
+            "erprm_batch_gang_enabled",
+            "1 when fleet shards gang-batch compatible intents.",
+            self.gang_enabled() as u8 as f64,
+        );
         if let Some(b) = self.batch_totals() {
-            out.push_str(&format!("erprm_batch_gangs_total {}\n", b.gangs));
-            out.push_str(&format!("erprm_batch_ganged_intents_total {}\n", b.ganged_intents));
-            out.push_str(&format!("erprm_batch_solo_intents_total {}\n", b.solo_intents));
-            out.push_str(&format!("erprm_batch_merged_slots_total {}\n", b.merged_slots));
-            out.push_str(&format!("erprm_batch_padding_slots_total {}\n", b.padding_slots));
-            out.push_str(&format!("erprm_batch_wait_rounds_total {}\n", b.wait_rounds));
-            out.push_str(&format!("erprm_batch_precompact_total {}\n", b.precompacts));
-            out.push_str(&format!("erprm_batch_gang_failures_total {}\n", b.gang_failures));
+            w.counter("erprm_batch_gangs_total", "Shared gang device calls.", b.gangs as f64);
+            w.counter(
+                "erprm_batch_ganged_intents_total",
+                "Intents executed inside a gang.",
+                b.ganged_intents as f64,
+            );
+            w.counter(
+                "erprm_batch_solo_intents_total",
+                "Intents executed solo after waiting.",
+                b.solo_intents as f64,
+            );
+            w.counter(
+                "erprm_batch_merged_slots_total",
+                "Real slots packed into gang batches.",
+                b.merged_slots as f64,
+            );
+            w.counter(
+                "erprm_batch_padding_slots_total",
+                "Padding slots wasted in gang batches.",
+                b.padding_slots as f64,
+            );
+            w.counter(
+                "erprm_batch_wait_rounds_total",
+                "Rounds parked intents waited for partners.",
+                b.wait_rounds as f64,
+            );
+            w.counter(
+                "erprm_batch_precompact_total",
+                "Caches re-compacted to enable a gang merge.",
+                b.precompacts as f64,
+            );
+            w.counter(
+                "erprm_batch_gang_failures_total",
+                "Gang device calls that failed.",
+                b.gang_failures as f64,
+            );
         }
-        out.push_str(&format!(
-            "erprm_pool_singleflight_enabled {}\n",
-            self.singleflight_enabled() as u8
-        ));
-        out.push_str(&format!("erprm_pool_coalesced_total {}\n", self.pool_coalesced()));
+        w.gauge(
+            "erprm_pool_singleflight_enabled",
+            "1 when the pool-level single-flight table is on.",
+            self.singleflight_enabled() as u8 as f64,
+        );
+        w.counter(
+            "erprm_pool_coalesced_total",
+            "Requests that rode an in-flight identical run (cross-shard).",
+            self.pool_coalesced() as f64,
+        );
         let (hits, misses) = self.cache_counters();
-        out.push_str(&format!("erprm_cache_hits_total {hits}\n"));
-        out.push_str(&format!("erprm_cache_misses_total {misses}\n"));
+        w.counter("erprm_cache_hits_total", "Solve-cache hits.", hits as f64);
+        w.counter("erprm_cache_misses_total", "Solve-cache misses.", misses as f64);
         let s = self.engine_stats();
-        out.push_str(&format!("erprm_engine_executions_total {}\n", s.executions));
-        out.push_str(&format!("erprm_engine_decode_calls_total {}\n", s.decode_calls));
-        out.push_str(&format!("erprm_engine_score_calls_total {}\n", s.score_calls));
-        out.push_str(&format!("erprm_engine_merge_calls_total {}\n", s.merge_calls));
+        w.counter(
+            "erprm_engine_executions_total",
+            "Device program executions.",
+            s.executions as f64,
+        );
+        w.counter("erprm_engine_decode_calls_total", "Decode calls.", s.decode_calls as f64);
+        w.counter("erprm_engine_score_calls_total", "Score calls.", s.score_calls as f64);
+        w.counter("erprm_engine_merge_calls_total", "KV merge calls.", s.merge_calls as f64);
         // Block-native table edits: gang merges/splits and compactions
         // that were pure host bookkeeping (zero device calls). With
         // block-native attention on, these grow while the device-call
         // counters above stay flat for ganged traffic.
-        out.push_str(&format!("erprm_kv_table_merges_total {}\n", s.table_merges));
-        out.push_str(&format!("erprm_kv_table_splits_total {}\n", s.table_splits));
-        out.push_str(&format!("erprm_kv_table_compacts_total {}\n", s.table_compacts));
+        w.counter(
+            "erprm_kv_table_merges_total",
+            "Gang merges done as pure block-table edits.",
+            s.table_merges as f64,
+        );
+        w.counter(
+            "erprm_kv_table_splits_total",
+            "Gang splits done as pure block-table edits.",
+            s.table_splits as f64,
+        );
+        w.counter(
+            "erprm_kv_table_compacts_total",
+            "Compactions done as pure block-table edits.",
+            s.table_compacts as f64,
+        );
         // KV re-compaction: junk share of spent cache positions (live
         // utilization signal), compactions run, and positions reclaimed
-        out.push_str(&format!("erprm_kv_junk_fraction {:.4}\n", s.junk_fraction()));
-        out.push_str(&format!("erprm_kv_compact_total {}\n", s.compact_calls));
-        out.push_str(&format!(
-            "erprm_kv_reclaimed_positions_total {}\n",
-            s.compact_reclaimed
-        ));
+        w.gauge(
+            "erprm_kv_junk_fraction",
+            "Junk share of spent KV cache positions.",
+            s.junk_fraction(),
+        );
+        w.counter("erprm_kv_compact_total", "KV re-compactions run.", s.compact_calls as f64);
+        w.counter(
+            "erprm_kv_reclaimed_positions_total",
+            "KV positions reclaimed by re-compaction.",
+            s.compact_reclaimed as f64,
+        );
         // Paged-KV block pool (summed across shards; all-zero when the
         // pool is off or the artifacts predate paged export)
-        out.push_str(&format!("erprm_kv_pool_blocks_total {}\n", s.pool_blocks_total));
-        out.push_str(&format!("erprm_kv_pool_blocks_free {}\n", s.pool_blocks_free));
-        out.push_str(&format!("erprm_kv_pool_hwm {}\n", s.pool_hwm));
+        w.gauge(
+            "erprm_kv_pool_blocks_total",
+            "Paged-KV block-pool capacity (all shards).",
+            s.pool_blocks_total as f64,
+        );
+        w.gauge("erprm_kv_pool_blocks_free", "Free paged-KV blocks.", s.pool_blocks_free as f64);
+        w.gauge("erprm_kv_pool_hwm", "Block-pool usage high-water mark.", s.pool_hwm as f64);
         // Admission-facing pool pressure in [0, 1]: how close the pool
         // has come to exhaustion (high-water mark over capacity), or the
         // deferred-admission rate when the fleet loop is holding jobs
@@ -734,15 +934,34 @@ impl EnginePool {
             }
             _ => 0.0,
         };
-        out.push_str(&format!(
-            "erprm_kv_pool_pressure {:.4}\n",
-            occupancy.max(deferred_rate).min(1.0)
-        ));
-        out.push_str(&format!("erprm_engine_compiles_total {}\n", s.compiles));
-        out.push_str(&format!("erprm_engine_compile_wall_seconds {:.3}\n", s.compile_wall_s));
-        out.push_str(&format!("erprm_engine_execute_wall_seconds {:.3}\n", s.execute_wall_s));
-        out.push_str(&format!("erprm_engine_host_bytes_up {}\n", s.host_bytes_up));
-        out.push_str(&format!("erprm_engine_host_bytes_down {}\n", s.host_bytes_down));
+        w.gauge(
+            "erprm_kv_pool_pressure",
+            "Admission-facing KV pool pressure in [0, 1].",
+            occupancy.max(deferred_rate).min(1.0),
+        );
+        w.counter("erprm_engine_compiles_total", "Program compilations.", s.compiles as f64);
+        w.gauge(
+            "erprm_engine_compile_wall_seconds",
+            "Wall seconds spent compiling.",
+            s.compile_wall_s,
+        );
+        w.gauge(
+            "erprm_engine_execute_wall_seconds",
+            "Wall seconds spent executing.",
+            s.execute_wall_s,
+        );
+        w.counter(
+            "erprm_engine_host_bytes_up",
+            "Host-to-device bytes transferred.",
+            s.host_bytes_up as f64,
+        );
+        w.counter(
+            "erprm_engine_host_bytes_down",
+            "Device-to-host bytes transferred.",
+            s.host_bytes_down as f64,
+        );
+        let mut out = w.finish();
+        out.push_str(&self.inner.tracer.render_metrics());
         out
     }
 
@@ -772,6 +991,7 @@ fn shard_main(
     fleet_opts: Option<FleetOptions>,
     fstats: Arc<FleetStats>,
     bstats: Arc<BatchStats>,
+    tracer: Arc<TraceRecorder>,
 ) {
     let engine = match Engine::load(&artifacts_dir) {
         Ok(e) => {
@@ -793,63 +1013,96 @@ fn shard_main(
         log_debug!("shard {idx}: manifest has no kv_block; paged KV off, dense caches");
     }
     match fleet_opts {
-        Some(opts) => fleet::drive(&engine, &opts, &fstats, &bstats, &solved, &stats, |block| {
-            let msg = if block {
-                rx.recv().map_err(|_| mpsc::TryRecvError::Disconnected)
-            } else {
-                rx.try_recv()
-            };
-            match msg {
-                Ok(Msg::Solve(job)) => fleet::Poll::Job(Box::new(to_fleet_job(*job))),
-                Ok(Msg::Shutdown) => fleet::Poll::Shutdown,
-                Err(mpsc::TryRecvError::Empty) => fleet::Poll::Empty,
-                Err(mpsc::TryRecvError::Disconnected) => fleet::Poll::Closed,
-            }
-        }),
+        Some(opts) => {
+            fleet::drive(&engine, &opts, &fstats, &bstats, &solved, &stats, idx, &tracer, |block| {
+                let msg = if block {
+                    rx.recv().map_err(|_| mpsc::TryRecvError::Disconnected)
+                } else {
+                    rx.try_recv()
+                };
+                match msg {
+                    Ok(Msg::Solve(job)) => fleet::Poll::Job(Box::new(to_fleet_job(*job))),
+                    Ok(Msg::Shutdown) => fleet::Poll::Shutdown,
+                    Err(mpsc::TryRecvError::Empty) => fleet::Poll::Empty,
+                    Err(mpsc::TryRecvError::Disconnected) => fleet::Poll::Closed,
+                }
+            })
+        }
         None => {
             while let Ok(msg) = rx.recv() {
                 match msg {
                     Msg::Shutdown => break,
                     Msg::Solve(job) => {
+                        let SolveJob { req, cfg, enqueued, deadline, reply, mut trace, .. } = *job;
                         let now = Instant::now();
-                        if job.reply.is_closed() {
+                        let queue_wait_ms =
+                            now.saturating_duration_since(enqueued).as_secs_f64() * 1000.0;
+                        if let Some(tb) = trace.as_mut() {
+                            tb.end(); // close the door-side "queue" span
+                            tb.set_queue_wait(queue_wait_ms);
+                            tb.set_placement(idx, 0); // sequential: one slot
+                        }
+                        if reply.is_closed() {
                             // the client hung up while the job sat in the
                             // queue: don't burn the engine for nobody
                             log_debug!("shard {idx}: dropping abandoned request");
+                            if let Some(tb) = trace.take() {
+                                tracer.submit(tb.finish("cancelled", 0, PhaseFlops::default()));
+                            }
                             continue;
                         }
-                        let queue_wait_ms =
-                            now.saturating_duration_since(job.enqueued).as_secs_f64() * 1000.0;
-                        if let Some(d) = job.deadline {
-                            if now.saturating_duration_since(job.enqueued) >= d {
-                                let _ = job.reply.send(Err(Error::deadline(format!(
+                        if let Some(d) = deadline {
+                            if now.saturating_duration_since(enqueued) >= d {
+                                if let Some(tb) = trace.take() {
+                                    tracer
+                                        .submit(tb.finish("deadline", 504, PhaseFlops::default()));
+                                }
+                                let _ = reply.send(Err(Error::deadline(format!(
                                     "spent {queue_wait_ms:.0}ms queued, budget was {}ms",
                                     d.as_millis()
                                 ))));
                                 continue;
                             }
                         }
-                        let res = run_solve(&engine, &job.req, &job.cfg)
-                            .and_then(|outcome| {
-                                // a sequential solve can't be aborted
-                                // mid-flight, but the end-to-end 504
-                                // contract still holds: never a late 200
-                                match job.deadline {
-                                    Some(d) if job.enqueued.elapsed() >= d => {
-                                        Err(Error::deadline(format!(
-                                            "solve finished after the {}ms budget",
-                                            d.as_millis()
-                                        )))
-                                    }
-                                    _ => Ok(Solved { outcome, queue_wait_ms }),
+                        let _scope = trace.as_ref().map(|tb| logging::request_scope(tb.id()));
+                        let (solve_res, trace) = run_solve_traced(&engine, &req, &cfg, trace);
+                        // capture the phase split before the 504 contract
+                        // can swallow the outcome: a too-late solve still
+                        // spent its FLOPs and the trace should say so
+                        let phase = solve_res
+                            .as_ref()
+                            .map(|o| PhaseFlops::from_ledger(&o.ledger))
+                            .unwrap_or_default();
+                        let res = solve_res.and_then(|outcome| {
+                            // a sequential solve can't be aborted
+                            // mid-flight, but the end-to-end 504
+                            // contract still holds: never a late 200
+                            match deadline {
+                                Some(d) if enqueued.elapsed() >= d => Err(Error::deadline(
+                                    format!(
+                                        "solve finished after the {}ms budget",
+                                        d.as_millis()
+                                    ),
+                                )),
+                                _ => Ok(Solved { outcome, queue_wait_ms }),
+                            }
+                        });
+                        if let Some(tb) = trace {
+                            let t = match &res {
+                                Ok(_) => tb.finish("ok", 200, phase),
+                                Err(e) if e.http_status() == 504 => {
+                                    tb.finish("deadline", 504, phase)
                                 }
-                            });
+                                Err(e) => tb.finish("error", e.http_status(), phase),
+                            };
+                            tracer.submit(t);
+                        }
                         solved.fetch_add(1, Ordering::Relaxed);
                         *stats.lock().unwrap() = engine.stats();
                         if let Err(e) = &res {
                             log_error!("shard {idx}: solve failed: {e}");
                         }
-                        let _ = job.reply.send(res);
+                        let _ = reply.send(res);
                     }
                 }
             }
@@ -876,17 +1129,45 @@ fn to_fleet_job(job: SolveJob) -> FleetJob {
         deadline: job.deadline,
         priority: job.priority,
         reply: job.reply,
+        trace: job.trace,
     }
 }
 
-fn run_solve(engine: &Engine, req: &SolveRequest, cfg: &SearchConfig) -> Result<SolveOutcome> {
-    let temp = temp_for(&req.lm);
-    match req.mode {
-        SearchMode::Vanilla => solve_vanilla(engine, &req.lm, &req.prm, &req.problem, cfg, temp),
-        SearchMode::EarlyRejection => {
-            solve_early_rejection(engine, &req.lm, &req.prm, &req.problem, cfg, temp)
+/// Run one solve as a [`crate::coordinator::task::SolveTask`] (the same
+/// engine-call sequence the old direct solver made — pinned by the
+/// integration suite's task-vs-direct equivalence tests) so the trace
+/// rides the task, and hand it back at the end. The loop replaces
+/// `run_to_completion`, which consumes the task along with the trace.
+fn run_solve_traced(
+    engine: &Engine,
+    req: &SolveRequest,
+    cfg: &SearchConfig,
+    trace: Option<Box<TraceBuilder>>,
+) -> (Result<SolveOutcome>, Option<Box<TraceBuilder>>) {
+    let spec = TaskSpec {
+        problem: req.problem.clone(),
+        mode: cfg.mode,
+        lm: req.lm.clone(),
+        prm: req.prm.clone(),
+        temp: temp_for(&req.lm),
+        cfg: cfg.clone(),
+    };
+    let mut task = match spec.build() {
+        Ok(t) => t,
+        Err(e) => return (Err(e), trace),
+    };
+    task.trace = trace;
+    loop {
+        match task.advance(engine) {
+            Ok(Progress::Working) => {}
+            Ok(Progress::Done) => break,
+            Err(e) => return (Err(e), task.trace.take()),
         }
     }
+    let out = task
+        .take_outcome()
+        .ok_or_else(|| Error::internal("finished task lost its outcome"));
+    (out, task.trace.take())
 }
 
 /// Seed-stable LRU cache of solve outcomes. Solves are deterministic for a
@@ -982,6 +1263,7 @@ impl<T> FifoQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::SearchMode;
     use crate::coordinator::flops::FlopsLedger;
     use crate::tokenizer as tk;
     use crate::workload::{OpStep, Problem};
@@ -1013,6 +1295,7 @@ mod tests {
                 fleet: Some(FleetOptions::default()),
                 singleflight: false,
                 kv_pool_blocks: None,
+                trace: TraceOptions::default(),
             },
         );
         assert!(r.is_err());
@@ -1030,6 +1313,7 @@ mod tests {
                 fleet: None,
                 singleflight: false,
                 kv_pool_blocks: None,
+                trace: TraceOptions::default(),
             },
         );
         assert!(r.is_err());
@@ -1043,6 +1327,7 @@ mod tests {
                 fleet: Some(FleetOptions { max_inflight: 0, ..FleetOptions::default() }),
                 singleflight: false,
                 kv_pool_blocks: None,
+                trace: TraceOptions::default(),
             },
         );
         assert!(r.is_err());
@@ -1154,6 +1439,7 @@ mod tests {
                 cache_misses: AtomicU64::new(0),
                 singleflight: None,
                 pool_coalesced: AtomicU64::new(0),
+                tracer: Arc::new(TraceRecorder::new(TraceOptions::default())),
                 joins: Mutex::new(joins),
             }),
         }
@@ -1174,6 +1460,7 @@ mod tests {
             prm: "prm-large".into(),
             deadline_ms: None,
             priority: 0,
+            request_id: String::new(),
         }
     }
 
@@ -1375,6 +1662,7 @@ mod tests {
             prm: "prm-large".into(),
             deadline_ms: None,
             priority: 0,
+            request_id: String::new(),
         };
         let cfg = SearchConfig { n_beams: 8, tau: 8, ..SearchConfig::default() };
         let k1 = req.cache_key(&cfg);

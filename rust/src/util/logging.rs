@@ -1,8 +1,16 @@
 //! Leveled stderr logger, configured via `ERPRM_LOG` (error|warn|info|debug).
+//!
+//! `ERPRM_LOG_FORMAT=json` switches output to one JSON object per line
+//! (`ts`, `level`, `module`, `msg`, and `request_id` when the emitting
+//! thread is inside a traced request scope — see [`request_scope`]), so
+//! fleet logs can be joined against `/trace/<id>` documents.
 
+use std::cell::RefCell;
 use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
 #[repr(u8)]
@@ -14,7 +22,15 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2);
+static JSON: AtomicBool = AtomicBool::new(false);
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+thread_local! {
+    /// Stack of request ids the current thread is working inside (a
+    /// stack, not a cell: a shard thread finishing one task can emit a
+    /// log mid-advance of another).
+    static REQUEST: RefCell<Vec<String>> = const { RefCell::new(Vec::new()) };
+}
 
 pub fn init_from_env() {
     let lvl = match std::env::var("ERPRM_LOG").as_deref() {
@@ -24,6 +40,7 @@ pub fn init_from_env() {
         _ => Level::Info,
     };
     set_level(lvl);
+    set_json(matches!(std::env::var("ERPRM_LOG_FORMAT").as_deref(), Ok("json")));
     START.get_or_init(Instant::now);
 }
 
@@ -31,8 +48,40 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Switch between human text and JSON-lines output.
+pub fn set_json(on: bool) {
+    JSON.store(on, Ordering::Relaxed);
+}
+
+pub fn json_mode() -> bool {
+    JSON.load(Ordering::Relaxed)
+}
+
 pub fn enabled(l: Level) -> bool {
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Tag every log line this thread emits with `id` until the returned
+/// guard drops. Scopes nest; the innermost wins.
+pub fn request_scope(id: &str) -> RequestScope {
+    REQUEST.with(|r| r.borrow_mut().push(id.to_string()));
+    RequestScope(())
+}
+
+/// The request id the current thread is scoped to, if any.
+pub fn current_request() -> Option<String> {
+    REQUEST.with(|r| r.borrow().last().cloned())
+}
+
+/// RAII guard popping the thread's request-id scope on drop.
+pub struct RequestScope(());
+
+impl Drop for RequestScope {
+    fn drop(&mut self) {
+        REQUEST.with(|r| {
+            r.borrow_mut().pop();
+        });
+    }
 }
 
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
@@ -40,13 +89,34 @@ pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
         return;
     }
     let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let mut err = std::io::stderr().lock();
+    if json_mode() {
+        let mut pairs = vec![
+            ("ts", Json::num(t)),
+            (
+                "level",
+                Json::str(match l {
+                    Level::Error => "error",
+                    Level::Warn => "warn",
+                    Level::Info => "info",
+                    Level::Debug => "debug",
+                }),
+            ),
+            ("module", Json::str(module)),
+            ("msg", Json::str(msg.to_string())),
+        ];
+        if let Some(rid) = current_request() {
+            pairs.push(("request_id", Json::str(rid)));
+        }
+        let _ = writeln!(err, "{}", Json::obj(pairs).to_string());
+        return;
+    }
     let tag = match l {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",
         Level::Info => "INFO ",
         Level::Debug => "DEBUG",
     };
-    let mut err = std::io::stderr().lock();
     let _ = writeln!(err, "[{t:9.3}s {tag} {module}] {msg}");
 }
 
@@ -91,5 +161,41 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn request_scopes_nest_and_unwind() {
+        assert_eq!(current_request(), None);
+        {
+            let _a = request_scope("outer");
+            assert_eq!(current_request().as_deref(), Some("outer"));
+            {
+                let _b = request_scope("inner");
+                assert_eq!(current_request().as_deref(), Some("inner"));
+            }
+            assert_eq!(current_request().as_deref(), Some("outer"));
+        }
+        assert_eq!(current_request(), None);
+    }
+
+    #[test]
+    fn json_line_shape() {
+        // render the same payload the json branch writes and check it
+        // parses with the expected fields (stderr itself isn't captured)
+        let _s = request_scope("r-1");
+        let mut pairs = vec![
+            ("ts", Json::num(1.5)),
+            ("level", Json::str("info")),
+            ("module", Json::str("erprm::test")),
+            ("msg", Json::str("hello \"quoted\" msg")),
+        ];
+        if let Some(rid) = current_request() {
+            pairs.push(("request_id", Json::str(rid)));
+        }
+        let line = Json::obj(pairs).to_string();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("request_id").and_then(Json::as_str), Some("r-1"));
+        assert_eq!(parsed.get("msg").and_then(Json::as_str), Some("hello \"quoted\" msg"));
+        assert!(!line.contains('\n'));
     }
 }

@@ -409,6 +409,7 @@ fn fleet_pool(dir: PathBuf, shards: usize, max_inflight: usize, cache: usize) ->
             // coalescer; the pool-level table has its own tests
             singleflight: false,
             kv_pool_blocks: None,
+            trace: erprm::obs::TraceOptions::default(),
         },
     )
     .expect("fleet pool spawn")
@@ -447,6 +448,7 @@ fn fleet_interleaving_preserves_sequential_outcomes() {
                     prm: "prm-large".into(),
                     deadline_ms: None,
                     priority: 0,
+                    request_id: String::new(),
                 };
                 pool.solve(req, c).unwrap()
             })
@@ -635,6 +637,7 @@ fn gang_batched_solves_are_byte_identical_to_solo() {
             fleet: Some(FleetOptions { max_inflight: 4, gang: true, ..FleetOptions::default() }),
             singleflight: false,
             kv_pool_blocks: None,
+            trace: erprm::obs::TraceOptions::default(),
         },
     )
     .expect("gang pool spawn");
@@ -654,6 +657,7 @@ fn gang_batched_solves_are_byte_identical_to_solo() {
                     prm: "prm-large".into(),
                     deadline_ms: None,
                     priority: 0,
+                    request_id: String::new(),
                 };
                 pool.solve(req, cc).unwrap()
             })
@@ -711,11 +715,13 @@ fn fleet_cancels_abandoned_requests() {
         deadline: None,
         priority: 0,
         reply: tx,
+        trace: None,
     };
     let mut pending = vec![job];
     let mut rx_holder = Some(rx);
     let mut calls = 0u64;
-    erprm::fleet::drive(&e, &FleetOptions::default(), &stats, &bstats, &solved, &estats, |_| {
+    let tracer = erprm::obs::TraceRecorder::new(erprm::obs::TraceOptions::default());
+    erprm::fleet::drive(&e, &FleetOptions::default(), &stats, &bstats, &solved, &estats, 0, &tracer, |_| {
         calls += 1;
         if let Some(j) = pending.pop() {
             return erprm::fleet::Poll::Job(Box::new(j));
@@ -770,6 +776,7 @@ fn fleet_rejects_doomed_deadlines_at_admission() {
                 deadline,
                 priority: 0,
                 reply: tx,
+                trace: None,
             },
             rx,
         )
@@ -782,7 +789,8 @@ fn fleet_rejects_doomed_deadlines_at_admission() {
     let mut warm = Some(warm);
     let mut long = Some(long);
     let mut doomed = Some(doomed);
-    erprm::fleet::drive(&e, &opts, &stats, &bstats, &solved, &estats, |_| {
+    let tracer = erprm::obs::TraceRecorder::new(erprm::obs::TraceOptions::default());
+    erprm::fleet::drive(&e, &opts, &stats, &bstats, &solved, &estats, 0, &tracer, |_| {
         use std::sync::atomic::Ordering;
         match phase {
             // 1. one warm-up solve teaches the loop its mean service time
@@ -932,6 +940,7 @@ fn pool_singleflight_coalesces_across_shards() {
             fleet: None,
             singleflight: true,
             kv_pool_blocks: None,
+            trace: erprm::obs::TraceOptions::default(),
         },
     )
     .expect("pool spawn");
@@ -1118,6 +1127,7 @@ fn paged_fleet_exhaustion_degrades_to_queueing() {
             fleet: Some(FleetOptions { max_inflight: 4, ..FleetOptions::default() }),
             singleflight: false,
             kv_pool_blocks: Some(floor),
+            trace: erprm::obs::TraceOptions::default(),
         },
     )
     .expect("paged fleet pool spawn");
@@ -1137,6 +1147,7 @@ fn paged_fleet_exhaustion_degrades_to_queueing() {
                     prm: "prm-large".into(),
                     deadline_ms: None,
                     priority: 0,
+                    request_id: String::new(),
                 };
                 pool.solve(req, cc).unwrap()
             })
@@ -1260,6 +1271,7 @@ fn gang_outcomes_identical_between_dense_and_block_native_pools() {
                 }),
                 singleflight: false,
                 kv_pool_blocks,
+                trace: erprm::obs::TraceOptions::default(),
             },
         )
         .expect("pool spawn");
@@ -1279,6 +1291,7 @@ fn gang_outcomes_identical_between_dense_and_block_native_pools() {
                         prm: "prm-large".into(),
                         deadline_ms: None,
                         priority: 0,
+                        request_id: String::new(),
                     };
                     pool.solve(req, cc).unwrap()
                 })
@@ -1307,4 +1320,142 @@ fn gang_outcomes_identical_between_dense_and_block_native_pools() {
             "block-native compaction must be a table edit: {paged_stats:?}"
         );
     }
+}
+
+// ---------------------------------------------------------------- tracing
+
+// Tracing must be a pure observer. The same (problem, cfg, seed) solved
+// through a recording pool and through a pool with retention disabled
+// and success sampling at zero must produce byte-identical outcomes —
+// the recorder may only watch the solve, never steer it.
+#[test]
+fn tracing_on_and_off_solve_byte_identically() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = SearchConfig::default();
+    let solve_with = |trace: erprm::obs::TraceOptions| {
+        let epool = EnginePool::spawn_with(
+            dir.clone(),
+            PoolOptions {
+                shards: 1,
+                capacity: 8,
+                cache_entries: 0,
+                default_deadline_ms: 0,
+                fleet: None,
+                singleflight: false,
+                kv_pool_blocks: None,
+                trace,
+            },
+        )
+        .expect("pool spawn");
+        let req = api::parse_solve(solve_body(), &cfg).unwrap();
+        let out = epool.solve(req, cfg.clone()).unwrap();
+        epool.shutdown();
+        out
+    };
+    let on = solve_with(erprm::obs::TraceOptions::default());
+    let off = solve_with(erprm::obs::TraceOptions {
+        capacity: 0,
+        sample: erprm::obs::SamplePolicy {
+            success_rate: 0.0,
+            ..erprm::obs::SamplePolicy::default()
+        },
+    });
+    assert_eq!(on.answer, off.answer, "tracing changed the answer");
+    assert_eq!(on.best_trace, off.best_trace, "tracing perturbed the search");
+    assert_eq!(on.ledger, off.ledger, "tracing perturbed the FLOPs accounting");
+    assert_eq!(on.steps_executed, off.steps_executed);
+}
+
+// The trace endpoints close the loop end to end: a /solve response's
+// X-Request-Id resolves at GET /trace/<id> to a lifecycle document whose
+// per-phase FLOPs sum to the response's own `flops` field, /traces lists
+// the id, /traces/chrome renders a parseable Chrome trace_event
+// document, and the full /metrics page stays exposition-valid with the
+// tracer rollups appended.
+#[test]
+fn trace_endpoints_serve_lifecycle_and_chrome_export() {
+    let Some(dir) = artifacts() else { return };
+    let epool = fleet_pool(dir, 1, 2, 0);
+    let metrics = std::sync::Arc::new(Metrics::default());
+    let tpool = ThreadPool::new(4);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let p2 = epool.clone();
+    let m2 = std::sync::Arc::clone(&metrics);
+    let addr = http::serve(
+        "127.0.0.1:0",
+        &tpool,
+        1 << 20,
+        std::sync::Arc::clone(&stop),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), req)),
+    )
+    .unwrap();
+    let req = format!(
+        "POST /solve HTTP/1.1\r\nX-Request-Id: trace-me-1\r\nContent-Length: {}\r\n\r\n{}",
+        solve_body().len(),
+        std::str::from_utf8(solve_body()).unwrap()
+    );
+    let out = http_get(addr, req.as_bytes());
+    assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+    assert!(
+        out.to_ascii_lowercase().contains("x-request-id: trace-me-1"),
+        "the response must echo the client's id: {out}"
+    );
+    let body = out.split("\r\n\r\n").nth(1).expect("response body");
+    let solve_json = erprm::util::json::Json::parse(body).unwrap();
+    assert_eq!(
+        solve_json.get("request_id").and_then(erprm::util::json::Json::as_str),
+        Some("trace-me-1")
+    );
+    let solve_flops =
+        solve_json.get("flops").and_then(erprm::util::json::Json::as_f64).expect("flops");
+
+    let trace_out = http_get(addr, b"GET /trace/trace-me-1 HTTP/1.1\r\n\r\n");
+    assert!(trace_out.starts_with("HTTP/1.1 200"), "{trace_out}");
+    let trace_body = trace_out.split("\r\n\r\n").nth(1).expect("trace body");
+    let tj = erprm::util::json::Json::parse(trace_body).unwrap();
+    assert_eq!(
+        tj.get("outcome").and_then(erprm::util::json::Json::as_str),
+        Some("ok"),
+        "{trace_body}"
+    );
+    let phase_total = tj
+        .get("flops")
+        .and_then(|f| f.get("total"))
+        .and_then(erprm::util::json::Json::as_f64)
+        .expect("trace flops.total");
+    // both sides derive from the same token counters; only float
+    // association order may differ
+    assert!(
+        (phase_total - solve_flops).abs() <= 1e-9 * solve_flops.max(1.0),
+        "trace phase FLOPs {phase_total} != response flops {solve_flops}"
+    );
+    let spans = tj.get("spans").map(|s| s.to_string()).unwrap_or_default();
+    for name in ["queue", "prefill", "decode"] {
+        assert!(spans.contains(name), "lifecycle span '{name}' missing: {spans}");
+    }
+
+    let list_out = http_get(addr, b"GET /traces HTTP/1.1\r\n\r\n");
+    assert!(list_out.contains("trace-me-1"), "{list_out}");
+
+    let chrome_out = http_get(addr, b"GET /traces/chrome HTTP/1.1\r\n\r\n");
+    let chrome_body = chrome_out.split("\r\n\r\n").nth(1).expect("chrome body");
+    let cj = erprm::util::json::Json::parse(chrome_body).expect("chrome JSON must parse");
+    match cj.get("traceEvents") {
+        Some(erprm::util::json::Json::Arr(evs)) => {
+            assert!(!evs.is_empty(), "chrome export must carry events")
+        }
+        other => panic!("traceEvents must be an array, got {other:?}"),
+    }
+
+    let metrics_out = http_get(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+    let metrics_body = metrics_out.split("\r\n\r\n").nth(1).expect("metrics body");
+    erprm::obs::check_exposition(metrics_body).expect("/metrics must stay exposition-valid");
+    assert!(metrics_body.contains("erprm_er_flops_saved_total"), "{metrics_body}");
+    assert!(metrics_body.contains("erprm_trace_dropped_total"), "{metrics_body}");
+
+    let miss = http_get(addr, b"GET /trace/never-seen HTTP/1.1\r\n\r\n");
+    assert!(miss.starts_with("HTTP/1.1 404"), "{miss}");
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    epool.shutdown();
 }
