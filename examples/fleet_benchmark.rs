@@ -52,12 +52,13 @@ use std::time::Instant;
 
 use erprm::config::{SearchConfig, SearchMode};
 use erprm::fleet::FleetOptions;
-use erprm::obs::{chrome_trace, SamplePolicy, Trace, TraceOptions};
+use erprm::obs::{chrome_trace, CalibOptions, SamplePolicy, Trace, TraceOptions};
 use erprm::runtime::Manifest;
 use erprm::server::api::SolveRequest;
 use erprm::server::{EnginePool, PoolOptions};
 use erprm::util::benchkit::fmt_flops;
 use erprm::util::cli::Args;
+use erprm::util::json::Json;
 use erprm::util::rng::Rng;
 use erprm::util::stats;
 use erprm::util::threadpool::{parallel_map, ThreadPool};
@@ -105,6 +106,21 @@ struct Report {
 /// Per-request outcome digest for cross-mode byte-identity checks
 /// (None where the request failed).
 type Digest = Option<(Option<i64>, usize, Vec<i32>)>;
+
+/// Results of the adaptive-tau leg (two passes over one pool, so the
+/// warm pass's calibration table carries into the measured pass).
+struct AdaptiveLeg {
+    wall_s: f64,
+    rps: f64,
+    errors: usize,
+    er_beams_rejected: u64,
+    er_flops_saved: f64,
+    /// Requests whose measured-pass final answer matches the static
+    /// fleet run's answer for the same request.
+    answers_match: usize,
+    /// `GET /calibration` document of the warmed table.
+    calib_json: String,
+}
 
 #[allow(clippy::too_many_arguments)]
 fn run_mode(
@@ -229,6 +245,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // --trace-out PATH: Chrome trace_event timeline of the gang run
     // (load it in Perfetto / chrome://tracing)
     let trace_out = args.get("trace-out").map(str::to_string);
+    // --json-out PATH: machine-readable run summary (per-mode throughput,
+    // decode invocations/request, ER ledger, adaptive-tau acceptance and
+    // the warmed calibration table) for CI smoke legs and dashboards
+    let json_out = args.get("json-out").map(str::to_string);
     // --trace-sample F: success-trace retention rate (failures always kept)
     let trace_sample = args.get_f64("trace-sample", 1.0)?.clamp(0.0, 1.0);
 
@@ -239,6 +259,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         if let Some(path) = &trace_out {
             std::fs::write(path, chrome_trace(&[]).to_string())?;
             println!("wrote empty Chrome trace to {path}");
+        }
+        // likewise --json-out: a schema-valid, if empty, summary
+        if let Some(path) = &json_out {
+            let doc = Json::obj(vec![
+                ("requests", Json::num(0.0)),
+                ("modes", Json::Arr(vec![])),
+                ("adaptive", Json::Null),
+            ]);
+            std::fs::write(path, doc.to_string())?;
+            println!("wrote empty benchmark summary to {path}");
         }
         return Ok(());
     }
@@ -283,6 +313,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             burst: 1e12,
             ..SamplePolicy::default()
         },
+        calib: CalibOptions::default(),
     };
 
     println!(
@@ -373,6 +404,80 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             clients,
             &requests,
         )?),
+    };
+
+    // fleet+adaptive: the same scheduler and traffic with the
+    // calibration loop closed. Two passes over ONE pool: the warm pass
+    // streams partial↔final pairs into the table (the controller stays
+    // effectively static until buckets prove out), then the measured
+    // pass runs with the warmed table, each request's plan frozen at
+    // dispatch. Shadow sampling is off so the measured pass decodes
+    // nothing beyond what its plans call for.
+    let adaptive: AdaptiveLeg = {
+        let calib = CalibOptions {
+            adaptive: true,
+            // the bench workload is small; trust buckets sooner than the
+            // serve-time default so one warm pass can prove them out
+            min_samples: 16,
+            shadow_rate: 0.0,
+            ..CalibOptions::default()
+        };
+        let pool = EnginePool::spawn_with(
+            "artifacts".into(),
+            PoolOptions {
+                shards,
+                capacity,
+                cache_entries: 0,
+                default_deadline_ms: 0,
+                fleet: Some(FleetOptions { max_inflight, ..FleetOptions::default() }),
+                singleflight: false,
+                kv_pool_blocks: Some(0),
+                trace: TraceOptions { calib, ..topts },
+            },
+        )?;
+        let client_pool = ThreadPool::new(clients);
+        let pass = |reqs: &[SolveRequest]| {
+            let p2 = pool.clone();
+            let t0 = Instant::now();
+            let results = parallel_map(&client_pool, reqs.to_vec(), move |req| {
+                let cfg = SearchConfig { seed: 7, ..SearchConfig::default() };
+                p2.solve_timed(req, cfg)
+            });
+            (t0.elapsed().as_secs_f64(), results)
+        };
+        let (warm_s, warm_results) = pass(&requests);
+        let warm_errors = warm_results.iter().filter(|r| r.is_err()).count();
+        let warm_tr = pool.tracer().totals();
+        let (wall_s, results) = pass(&requests);
+        let tr = pool.tracer().totals();
+        let errors = results.iter().filter(|r| r.is_err()).count();
+        let answers_match = fleet_digests
+            .iter()
+            .zip(&results)
+            .filter(|(d, r)| match (d, r) {
+                (Some((ans, _, _)), Ok(s)) => *ans == s.outcome.answer,
+                _ => false,
+            })
+            .count();
+        let calib_json = pool.calibration_json();
+        pool.shutdown();
+        println!(
+            "\nadaptive warm pass: {warm_s:.2}s, {warm_errors} errors \
+             ({} samples streamed into the calibration table)",
+            Json::parse(&calib_json)
+                .ok()
+                .and_then(|j| j.get("samples_total").and_then(Json::as_f64))
+                .unwrap_or(0.0)
+        );
+        AdaptiveLeg {
+            wall_s,
+            rps: requests.len() as f64 / wall_s,
+            errors,
+            er_beams_rejected: tr.er_beams_rejected - warm_tr.er_beams_rejected,
+            er_flops_saved: tr.er_flops_saved - warm_tr.er_flops_saved,
+            answers_match,
+            calib_json,
+        }
     };
 
     println!("\n== sequential vs fleet vs gang (equal shard count) ==");
@@ -524,6 +629,30 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
     }
 
+    println!("\n== adaptive tau (fleet+adaptive vs fleet, warmed calibration table) ==");
+    println!(
+        "measured pass {:.2}s, {:.2} solves/sec, {} errors",
+        adaptive.wall_s, adaptive.rps, adaptive.errors
+    );
+    println!(
+        "ER FLOPs saved: adaptive {} (beams {}) vs static fleet {} (beams {}): {}",
+        fmt_flops(adaptive.er_flops_saved),
+        adaptive.er_beams_rejected,
+        fmt_flops(fleet.er_flops_saved),
+        fleet.er_beams_rejected,
+        if adaptive.er_flops_saved >= fleet.er_flops_saved {
+            "GEQ (pass)"
+        } else {
+            "below static"
+        },
+    );
+    println!(
+        "final answers identical to static fleet: {} of {} ({})",
+        adaptive.answers_match,
+        requests.len(),
+        if adaptive.answers_match == requests.len() { "pass" } else { "DIVERGED" },
+    );
+
     if let Some(path) = &trace_out {
         // Export the gang run: it exercises the widest span vocabulary
         // (queue, gang:decode/gang:score members, compaction, ER events).
@@ -533,6 +662,56 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
              — open in Perfetto or chrome://tracing",
             gang.traces.len()
         );
+    }
+
+    if let Some(path) = &json_out {
+        let mode_json = |r: &Report| {
+            Json::obj(vec![
+                ("label", Json::str(r.label.clone())),
+                ("wall_s", Json::num(r.wall_s)),
+                ("solves_per_sec", Json::num(r.rps)),
+                ("p50_ms", Json::num(r.p50_ms)),
+                ("p95_ms", Json::num(r.p95_ms)),
+                ("errors", Json::num(r.errors as f64)),
+                ("engine_solves", Json::num(r.engine_solves as f64)),
+                ("decode_calls", Json::num(r.decode_calls as f64)),
+                (
+                    "decode_per_request",
+                    Json::num(r.decode_calls as f64 / requests.len().max(1) as f64),
+                ),
+                ("er_beams_rejected", Json::num(r.er_beams_rejected as f64)),
+                ("er_flops_saved", Json::num(r.er_flops_saved)),
+            ])
+        };
+        let doc = Json::obj(vec![
+            ("requests", Json::num(requests.len() as f64)),
+            ("unique_problems", Json::num(uniques as f64)),
+            ("dup", Json::num(dup as f64)),
+            ("shards", Json::num(shards as f64)),
+            ("modes", Json::Arr(rows.iter().map(|r| mode_json(r)).collect())),
+            (
+                "adaptive",
+                Json::obj(vec![
+                    ("wall_s", Json::num(adaptive.wall_s)),
+                    ("solves_per_sec", Json::num(adaptive.rps)),
+                    ("errors", Json::num(adaptive.errors as f64)),
+                    ("er_beams_rejected", Json::num(adaptive.er_beams_rejected as f64)),
+                    ("er_flops_saved", Json::num(adaptive.er_flops_saved)),
+                    ("static_er_flops_saved", Json::num(fleet.er_flops_saved)),
+                    (
+                        "flops_saved_geq_static",
+                        Json::Bool(adaptive.er_flops_saved >= fleet.er_flops_saved),
+                    ),
+                    ("answers_match_static", Json::num(adaptive.answers_match as f64)),
+                    (
+                        "calibration",
+                        Json::parse(&adaptive.calib_json).unwrap_or(Json::Null),
+                    ),
+                ]),
+            ),
+        ]);
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote machine-readable summary to {path}");
     }
     Ok(())
 }

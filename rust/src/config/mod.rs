@@ -8,6 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::obs::calibration::CalibOptions;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -219,6 +220,10 @@ pub struct ServerConfig {
     /// Fraction of *successful* requests whose trace is retained
     /// (failures are always kept). 1.0 keeps everything.
     pub trace_sample: f64,
+    /// Calibration observatory knobs: the partial↔final correlation
+    /// table always streams; `calib.adaptive` additionally lets the
+    /// router shave per-depth taus where the table has proven itself.
+    pub calib: CalibOptions,
 }
 
 impl Default for ServerConfig {
@@ -238,6 +243,7 @@ impl Default for ServerConfig {
             kv_pool_blocks: 0,
             trace_capacity: 256,
             trace_sample: 1.0,
+            calib: CalibOptions::default(),
         }
     }
 }
@@ -362,6 +368,27 @@ impl Config {
             if let Some(f) = s.get("trace_sample").and_then(Json::as_f64) {
                 cfg.server.trace_sample = f.clamp(0.0, 1.0);
             }
+            if let Some(b) = s.get("adaptive_tau").and_then(Json::as_bool) {
+                cfg.server.calib.adaptive = b;
+            }
+            if let Some(n) = s.get("calib_min_samples").and_then(Json::as_i64) {
+                cfg.server.calib.min_samples = n.max(1) as u64;
+            }
+            if let Some(f) = s.get("calib_conf_floor").and_then(Json::as_f64) {
+                cfg.server.calib.conf_floor = f.clamp(-1.0, 1.0);
+            }
+            if let Some(f) = s.get("calib_aggressiveness").and_then(Json::as_f64) {
+                cfg.server.calib.aggressiveness = f.clamp(0.0, 1.0);
+            }
+            if let Some(n) = s.get("calib_min_tau").and_then(Json::as_usize) {
+                cfg.server.calib.min_tau = n.max(1);
+            }
+            if let Some(f) = s.get("calib_shadow_rate").and_then(Json::as_f64) {
+                cfg.server.calib.shadow_rate = f.clamp(0.0, 1.0);
+            }
+            if let Some(n) = s.get("calib_depth_buckets").and_then(Json::as_usize) {
+                cfg.server.calib.depth_buckets = n.max(1);
+            }
         }
         cfg.search.validate()?;
         Ok(cfg)
@@ -466,6 +493,29 @@ mod tests {
         let c = Config::from_json(&j).unwrap();
         assert_eq!(c.server.trace_capacity, 16);
         assert_eq!(c.server.trace_sample, 1.0, "sample rate clamps to [0,1]");
+    }
+
+    #[test]
+    fn calib_knobs_parse_default_and_clamp() {
+        let d = ServerConfig::default();
+        assert!(!d.calib.adaptive, "the controller is observe-only until opted in");
+        assert_eq!(d.calib.min_samples, 64);
+        assert_eq!(d.calib.min_tau, 2);
+        let j = Json::parse(
+            r#"{"server": {"adaptive_tau": true, "calib_min_samples": 8,
+                "calib_conf_floor": 0.2, "calib_aggressiveness": 3.0,
+                "calib_min_tau": 0, "calib_shadow_rate": 0.5,
+                "calib_depth_buckets": 6}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert!(c.server.calib.adaptive);
+        assert_eq!(c.server.calib.min_samples, 8);
+        assert_eq!(c.server.calib.conf_floor, 0.2);
+        assert_eq!(c.server.calib.aggressiveness, 1.0, "aggressiveness clamps to [0,1]");
+        assert_eq!(c.server.calib.min_tau, 1, "a zero floor would reject on no evidence");
+        assert_eq!(c.server.calib.shadow_rate, 0.5);
+        assert_eq!(c.server.calib.depth_buckets, 6);
     }
 
     #[test]

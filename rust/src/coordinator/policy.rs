@@ -79,6 +79,119 @@ impl RejectPolicy {
     }
 }
 
+/// One depth bucket's resolved rejection checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BucketTau {
+    /// Effective tau for rounds falling in this bucket.
+    pub tau: usize,
+    /// Whether the calibration evidence cleared the confidence gate
+    /// (false ⇒ `tau == base`, the static fallback).
+    pub confident: bool,
+    /// The Fisher-z lower confidence bound the decision was made on
+    /// (-1 = no evidence).
+    pub conf_low: f64,
+}
+
+/// A frozen per-request rejection schedule.
+///
+/// Resolved once at admission from a calibration snapshot and never
+/// mutated mid-request — two requests that resolved against the same
+/// table epoch carry byte-identical plans, which is what keeps the solve
+/// cache and single-flight coalescing sound (their keys embed `epoch`).
+/// `None` plan on a task ⇒ the static `cfg.tau` everywhere, bit-for-bit
+/// the pre-controller behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TauPlan {
+    /// The request's static `cfg.tau` (fallback and shadow checkpoint).
+    pub base: usize,
+    /// Effective tau per depth bucket; the last bucket absorbs all
+    /// deeper rounds.
+    pub by_bucket: Vec<BucketTau>,
+    /// Run the shadow regret check: decode phase A to `base`, reject at
+    /// the effective tau, and count rejections the base-tau
+    /// counterfactual would have kept.
+    pub shadow: bool,
+    /// Calibration table epoch the plan was frozen against.
+    pub epoch: u64,
+}
+
+impl TauPlan {
+    /// An all-static plan (controller on but no proven bucket).
+    pub fn static_plan(base: usize, buckets: usize, epoch: u64) -> TauPlan {
+        TauPlan {
+            base,
+            by_bucket: vec![BucketTau { tau: base, confident: false, conf_low: -1.0 }; buckets.max(1)],
+            shadow: false,
+            epoch,
+        }
+    }
+
+    /// Effective tau for a select/expand round at `depth`.
+    pub fn tau_for(&self, depth: usize) -> usize {
+        match self.by_bucket.get(depth.min(self.by_bucket.len().saturating_sub(1))) {
+            Some(b) => b.tau,
+            None => self.base,
+        }
+    }
+
+    /// The bucket entry a round at `depth` resolves through.
+    pub fn bucket_for(&self, depth: usize) -> BucketTau {
+        let i = depth.min(self.by_bucket.len().saturating_sub(1));
+        self.by_bucket
+            .get(i)
+            .copied()
+            .unwrap_or(BucketTau { tau: self.base, confident: false, conf_low: -1.0 })
+    }
+
+    /// True when every bucket fell back to the static tau.
+    pub fn is_static(&self) -> bool {
+        self.by_bucket.iter().all(|b| b.tau == self.base)
+    }
+}
+
+/// The adaptive-tau controller: maps per-bucket calibration evidence to
+/// a rejection schedule.
+///
+/// A bucket is *proven* when it holds at least `min_samples` pairs and
+/// the Fisher-z lower bound of its partial↔final Pearson clears
+/// `conf_floor`. Proven buckets shave the checkpoint toward `min_tau`
+/// proportionally to how far the bound exceeds the floor (scaled by
+/// `aggressiveness`); everything else keeps the static base — the
+/// paper's exponential-risk intuition that aggressiveness must be earned
+/// by demonstrated predictiveness, not assumed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveTau {
+    pub min_samples: u64,
+    pub conf_floor: f64,
+    pub aggressiveness: f64,
+    pub min_tau: usize,
+}
+
+impl AdaptiveTau {
+    /// Resolve a frozen plan. `stats[b] = (samples, conf_low)` per depth
+    /// bucket. Pure: same inputs ⇒ same plan, byte-for-byte.
+    pub fn plan(&self, base: usize, stats: &[(u64, f64)], shadow: bool, epoch: u64) -> TauPlan {
+        let floor = self.min_tau.max(1).min(base);
+        let span = (1.0 - self.conf_floor).max(1e-9);
+        let by_bucket = stats
+            .iter()
+            .map(|&(n, conf_low)| {
+                let confident = n >= self.min_samples && conf_low >= self.conf_floor;
+                if !confident {
+                    return BucketTau { tau: base, confident: false, conf_low };
+                }
+                let excess = ((conf_low - self.conf_floor) / span).clamp(0.0, 1.0);
+                let shave = (self.aggressiveness.clamp(0.0, 1.0)
+                    * excess
+                    * (base - floor) as f64)
+                    .round() as usize;
+                BucketTau { tau: base.saturating_sub(shave).max(floor), confident: true, conf_low }
+            })
+            .collect();
+        TauPlan { base, by_bucket, shadow, epoch }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +251,50 @@ mod tests {
         assert_eq!(rank_desc(&(0, f32::NAN), &(1, 0.0)), std::cmp::Ordering::Greater);
         assert_eq!(rankable(0.7), 0.7);
         assert_eq!(rankable(f32::NAN), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn adaptive_tau_falls_back_to_base_when_thin() {
+        let ctl = AdaptiveTau { min_samples: 64, conf_floor: 0.35, aggressiveness: 1.0, min_tau: 2 };
+        // thin samples, strong-but-unproven corr, and proven-but-weak corr
+        let plan = ctl.plan(8, &[(10, 0.9), (64, 0.2), (0, -1.0)], false, 3);
+        assert!(plan.is_static());
+        assert_eq!(plan.tau_for(0), 8);
+        assert_eq!(plan.tau_for(99), 8, "deep rounds clamp into the last bucket");
+        assert!(plan.by_bucket.iter().all(|b| !b.confident));
+        assert_eq!(plan.epoch, 3);
+    }
+
+    #[test]
+    fn adaptive_tau_shaves_proportionally_and_clamps() {
+        let ctl = AdaptiveTau { min_samples: 16, conf_floor: 0.35, aggressiveness: 1.0, min_tau: 2 };
+        let plan = ctl.plan(8, &[(100, 0.35), (100, 0.675), (100, 1.0), (100, 0.999)], false, 0);
+        assert_eq!(plan.tau_for(0), 8, "exactly at the floor shaves nothing");
+        assert_eq!(plan.tau_for(1), 5, "halfway excess shaves half the span");
+        assert_eq!(plan.tau_for(2), 2, "full confidence hits min_tau");
+        assert_eq!(plan.tau_for(3), 2, "clamped at min_tau");
+        assert!(plan.by_bucket[2].confident);
+        assert!(!plan.is_static());
+        // aggressiveness scales the shave; min_tau >= base degenerates to static
+        let timid = AdaptiveTau { aggressiveness: 0.5, ..ctl };
+        assert_eq!(timid.plan(8, &[(100, 1.0)], false, 0).tau_for(0), 5);
+        let pinned = AdaptiveTau { min_tau: 8, ..ctl };
+        assert!(pinned.plan(8, &[(100, 1.0)], false, 0).is_static());
+    }
+
+    #[test]
+    fn plans_are_pure_functions_of_their_inputs() {
+        let ctl = AdaptiveTau { min_samples: 8, conf_floor: 0.3, aggressiveness: 0.7, min_tau: 3 };
+        let stats = [(32, 0.55), (9, 0.8), (0, -1.0)];
+        let a = ctl.plan(12, &stats, true, 17);
+        let b = ctl.plan(12, &stats, true, 17);
+        assert_eq!(a, b, "frozen table => frozen plan");
+        assert!(a.shadow);
+        // static_plan matches what thin evidence resolves to
+        let s = TauPlan::static_plan(12, 3, 17);
+        assert_eq!(s.tau_for(1), 12);
+        assert!(s.is_static());
+        assert_eq!(s.bucket_for(5).conf_low, -1.0);
     }
 
     #[test]

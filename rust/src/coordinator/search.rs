@@ -549,7 +549,10 @@ impl SearchCtx {
     }
 }
 
-fn hash_problem(p: &Problem) -> u64 {
+/// Stable FNV-style digest of a problem — seeds the per-request RNG and
+/// (xored with config/seed state) the deterministic shadow-sampling draw
+/// the adaptive-tau controller makes at admission.
+pub fn hash_problem(p: &Problem) -> u64 {
     let mut h = p.v0 as u64;
     for s in &p.ops {
         h = h

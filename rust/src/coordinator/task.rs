@@ -16,11 +16,12 @@
 //! wall-clock) no matter how many other tasks are interleaved between its
 //! `advance` calls. The integration suite pins this down.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{Aggregation, SearchConfig};
 use crate::coordinator::beam::BeamSet;
-use crate::coordinator::policy::RejectPolicy;
+use crate::coordinator::policy::{RejectPolicy, TauPlan};
 use crate::coordinator::scheduler::TwoTierPlan;
 use crate::coordinator::scorer::ScoreRound;
 use crate::coordinator::search::{
@@ -180,6 +181,14 @@ pub struct SolveTask {
     /// to tracing — recording never touches RNG, beams, or engine-call
     /// order, so a traced solve is byte-identical to an untraced one.
     pub trace: Option<Box<TraceBuilder>>,
+    /// Frozen per-request rejection schedule from the adaptive-tau
+    /// controller. `None` (and any plan whose per-bucket taus equal the
+    /// base) reproduces the static `cfg.tau` behaviour bit-for-bit.
+    pub tau_plan: Option<Arc<TauPlan>>,
+    /// Survivors' partial rewards from the last `Reject`, keyed by the
+    /// slot each survivor occupies *after* any two-tier shrink, waiting
+    /// to be paired with their finalized step rewards in `Finalize`.
+    calib_pending: Vec<(usize, f32)>,
 }
 
 impl SolveTask {
@@ -244,6 +253,8 @@ impl SolveTask {
             iters: 0,
             outcome: None,
             trace: None,
+            tau_plan: None,
+            calib_pending: Vec::new(),
         }
     }
 
@@ -586,6 +597,11 @@ impl SolveTask {
                     tb.end();
                 }
                 self.ctx = Some(ctx);
+                if let Some(plan) = self.tau_plan.as_deref() {
+                    if let Some(tb) = self.trace.as_mut() {
+                        tb.calib_control(true, plan.shadow);
+                    }
+                }
                 if self.cfg.max_steps == 0 {
                     // parity with the blocking `for _ in 0..max_steps`
                     // loops: zero iterations, finish on the sampled beams
@@ -645,7 +661,15 @@ impl SolveTask {
 
             // -------------------------------------------- early rejection
             State::ADecode => {
-                let tau = self.cfg.tau;
+                let base = self.cfg.tau;
+                let eff = self.tau_plan.as_deref().map_or(base, |p| p.tau_for(self.iters));
+                // Shadow-sampled requests decode phase A out to the base
+                // checkpoint even when the effective tau is shorter, so
+                // the base-tau counterfactual partials exist for the
+                // regret check in `Reject`. Rejection still happens at
+                // the effective tau.
+                let shadow = self.tau_plan.as_deref().map_or(false, |p| p.shadow);
+                let tau = if shadow && eff < base { base } else { eff };
                 self.poll_decode(engine, PhaseTarget::Prefix { tau }, |decode_ok, score_ok| {
                     State::AScore { decode_ok, score_ok }
                 })
@@ -666,13 +690,41 @@ impl SolveTask {
                 let Mode::Er { policy, two_tier } = self.mode else {
                     return Err(Error::internal("vanilla task reached an ER state"));
                 };
-                let (tau, agg) = (self.cfg.tau, self.cfg.agg);
-                let scored = partial_scores(&self.ctx_mut().beams, tau, agg);
+                let (base, agg) = (self.cfg.tau, self.cfg.agg);
+                let (eff, shadow, reason) = match self.tau_plan.as_deref() {
+                    None => (base, false, "static"),
+                    Some(p) => {
+                        let bt = p.bucket_for(self.iters);
+                        (bt.tau.min(base), p.shadow, if bt.confident { "confident" } else { "fallback" })
+                    }
+                };
+                let scored = partial_scores(&self.ctx_mut().beams, eff, agg);
                 if scored.is_empty() {
                     // pool exhausted (all finished or dead)
                     return self.complete().map(Step::Progressed);
                 }
                 let survivors = policy.select(&scored);
+                if let Some(tb) = self.trace.as_mut() {
+                    tb.event(
+                        "tau",
+                        format!("depth={} tau={eff} base={base} reason={reason}", self.iters),
+                    );
+                }
+                // Shadow counterfactual: score the same slate at the base
+                // checkpoint and count how many beams the effective tau
+                // rejects that the base tau would have kept — the regret
+                // half of the FLOPs-saved-vs-regret ledger.
+                if shadow && eff < base {
+                    let base_scored = partial_scores(&self.ctx_mut().beams, base, agg);
+                    let base_survivors = policy.select(&base_scored);
+                    let checked =
+                        scored.iter().filter(|&&(s, _)| !survivors.contains(&s)).count();
+                    let regret =
+                        base_survivors.iter().filter(|s| !survivors.contains(s)).count();
+                    if let Some(tb) = self.trace.as_mut() {
+                        tb.calib_regret(checked as u64, regret as u64);
+                    }
+                }
                 let ctx = self.ctx_mut();
                 let mut rejected: Vec<usize> = Vec::new();
                 for (slot, beam) in ctx.beams.beams.iter_mut().enumerate() {
@@ -699,7 +751,7 @@ impl SolveTask {
                         // An upper bound — a beam might have finished
                         // early (same accounting as ErEvent docs).
                         let this_round =
-                            self.cfg.max_step_tokens.saturating_sub(self.cfg.tau) as f64;
+                            self.cfg.max_step_tokens.saturating_sub(eff) as f64;
                         let future = self.cfg.max_steps.saturating_sub(self.iters + 1) as f64
                             * self.cfg.max_step_tokens as f64;
                         let per_beam =
@@ -716,6 +768,7 @@ impl SolveTask {
                             .collect();
                         tb.reject(ErEvent {
                             depth: self.iters,
+                            tau: eff,
                             rejected: rejected.clone(),
                             scores,
                             flops_saved: per_beam * rejected.len() as f64,
@@ -728,6 +781,20 @@ impl SolveTask {
                     &engine.manifest.batch_variants,
                     two_tier,
                 )?;
+                // Calibration pairing, half one: remember each survivor's
+                // partial reward keyed by the slot it will occupy after
+                // any two-tier shrink (`shrink_to_b2` moves survivor j
+                // into slot j). `Finalize` pairs these with the same
+                // beams' full-step rewards.
+                self.calib_pending.clear();
+                if self.trace.is_some() {
+                    for (j, &slot) in survivors.iter().enumerate() {
+                        if let Some(&(_, p)) = scored.iter().find(|&&(s, _)| s == slot) {
+                            let dst = if plan.shrink { j } else { slot };
+                            self.calib_pending.push((dst, p));
+                        }
+                    }
+                }
                 if plan.shrink {
                     self.ctx_mut().shrink_to_b2(engine, &survivors, plan)?;
                 }
@@ -760,6 +827,21 @@ impl SolveTask {
                     if beam.active() && beam.awaiting_finalize {
                         let r = beam.finalize_step(agg);
                         final_survivors.push((slot, r));
+                    }
+                }
+                // Calibration pairing, half two: each (partial, final)
+                // pair at this depth becomes one observatory sample.
+                if !self.calib_pending.is_empty() {
+                    let pending = std::mem::take(&mut self.calib_pending);
+                    let depth = self.iters as u32;
+                    if let Some(tb) = self.trace.as_mut() {
+                        for (slot, partial) in pending {
+                            if let Some(&(_, r)) =
+                                final_survivors.iter().find(|&&(s, _)| s == slot)
+                            {
+                                tb.calib_sample(&self.prm_ckpt, depth, partial, r);
+                            }
+                        }
                     }
                 }
                 if final_survivors.is_empty() {

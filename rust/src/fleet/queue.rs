@@ -13,9 +13,11 @@
 //! wasting a slot. All methods take `now` explicitly, which keeps the
 //! policy deterministic and directly testable without sleeping.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::{SearchConfig, SearchMode};
+use crate::coordinator::policy::TauPlan;
 use crate::coordinator::task::SolveTask;
 use crate::fleet::Solved;
 use crate::obs::TraceBuilder;
@@ -39,14 +41,18 @@ pub struct TaskSpec {
     pub prm: String,
     pub cfg: SearchConfig,
     pub temp: f32,
+    /// Frozen adaptive-tau schedule resolved at admission; `None` = the
+    /// static `cfg.tau`. Shared (`Arc`) because coalesced duplicates and
+    /// the cache key both refer to the same frozen plan.
+    pub tau_plan: Option<Arc<TauPlan>>,
 }
 
 impl TaskSpec {
     /// Instantiate the resumable task (validates the config).
     pub fn build(&self) -> Result<SolveTask> {
-        match self.mode {
+        let mut task = match self.mode {
             SearchMode::Vanilla => {
-                SolveTask::vanilla(self.problem.clone(), &self.lm, &self.prm, &self.cfg, self.temp)
+                SolveTask::vanilla(self.problem.clone(), &self.lm, &self.prm, &self.cfg, self.temp)?
             }
             SearchMode::EarlyRejection => SolveTask::early_rejection(
                 self.problem.clone(),
@@ -54,8 +60,10 @@ impl TaskSpec {
                 &self.prm,
                 &self.cfg,
                 self.temp,
-            ),
-        }
+            )?,
+        };
+        task.tau_plan = self.tau_plan.clone();
+        Ok(task)
     }
 }
 
@@ -230,6 +238,7 @@ mod tests {
             prm: "prm-large".into(),
             cfg: SearchConfig::default(),
             temp: 0.5,
+            tau_plan: None,
         }
     }
 

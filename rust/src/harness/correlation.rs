@@ -139,18 +139,25 @@ fn synth_trace(p: &Problem, rng: &mut Rng) -> Vec<i32> {
 }
 
 /// Fig. 4 rows: (tau, pearson, kendall) over a scored corpus.
+///
+/// Runs through the same incremental kernels as the online calibration
+/// observatory (`util::stats::{StreamingPearson, StreamingKendall}`) so
+/// the offline study and the serving-time tracker are one implementation:
+/// the corpus is streamed pair-by-pair exactly the way finished requests
+/// stream into `obs::calibration`. With the reservoir sized to the corpus
+/// the rank estimate is the exact tau-b the batch kernel computes.
 pub fn correlation_vs_tau(traces: &[ScoredTrace], taus: &[usize]) -> Vec<(usize, f64, f64)> {
     taus.iter()
         .map(|&tau| {
-            let mut xs = Vec::new();
-            let mut ys = Vec::new();
+            let mut sp = stats::StreamingPearson::new();
+            let mut sk = stats::StreamingKendall::new(traces.len().max(2), 0);
             for t in traces {
                 if t.len >= tau {
-                    xs.push(t.partial(tau));
-                    ys.push(t.final_reward());
+                    sp.push(t.partial(tau), t.final_reward());
+                    sk.push(t.partial(tau), t.final_reward());
                 }
             }
-            (tau, stats::pearson(&xs, &ys), stats::kendall_tau(&xs, &ys))
+            (tau, sp.corr(), sk.corr())
         })
         .collect()
 }
@@ -179,6 +186,37 @@ mod tests {
         assert!((t.partial(3) - 0.8).abs() < 1e-6);
         assert_eq!(t.partial(99), t.final_reward());
         assert!((t.half() - 0.85).abs() < 1e-6);
+    }
+
+    /// Satellite cross-check: the streaming kernels behind
+    /// `correlation_vs_tau` reproduce the batch `stats::{pearson,
+    /// kendall_tau}` on a shared corpus with mixed-quality traces.
+    #[test]
+    fn streaming_rows_match_batch_on_shared_corpus() {
+        let mut rng = crate::util::rng::Rng::new(404);
+        let traces: Vec<ScoredTrace> = (0..60)
+            .map(|_| {
+                let len = 8 + rng.below(24);
+                let base = 0.2 + 0.6 * rng.f32();
+                let cummean: Vec<f32> =
+                    (0..len).map(|i| base + 0.1 * rng.f32() - 0.002 * i as f32).collect();
+                ScoredTrace { cummin: cummean.clone(), cummean, len }
+            })
+            .collect();
+        for &tau in &[2usize, 4, 8, 16] {
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for t in &traces {
+                if t.len >= tau {
+                    xs.push(t.partial(tau));
+                    ys.push(t.final_reward());
+                }
+            }
+            let rows = correlation_vs_tau(&traces, &[tau]);
+            let (_, p, k) = rows[0];
+            assert!((p - stats::pearson(&xs, &ys)).abs() < 1e-12, "tau {tau}");
+            assert_eq!(k, stats::kendall_tau(&xs, &ys), "tau {tau}: reservoir covers corpus");
+        }
     }
 
     #[test]

@@ -186,6 +186,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace_capacity = args.get_usize("trace-capacity", scfg.trace_capacity)?;
     let trace_sample =
         args.get_f64("trace-sample", scfg.trace_sample)?.clamp(0.0, 1.0);
+    // Calibration observatory: the partial↔final table streams on every
+    // ER request regardless; --adaptive-tau additionally closes the
+    // loop and lets the router shave taus where the table has proven
+    // itself (GET /calibration shows the live table either way).
+    let mut calib = scfg.calib;
+    calib.adaptive = calib.adaptive || args.flag("adaptive-tau");
+    calib.min_samples = args.get_u64("calib-min-samples", calib.min_samples)?.max(1);
+    calib.conf_floor =
+        args.get_f64("calib-conf-floor", calib.conf_floor)?.clamp(-1.0, 1.0);
+    calib.aggressiveness =
+        args.get_f64("calib-aggressiveness", calib.aggressiveness)?.clamp(0.0, 1.0);
+    calib.min_tau = args.get_usize_min("calib-min-tau", calib.min_tau, 1)?;
+    calib.shadow_rate =
+        args.get_f64("calib-shadow-rate", calib.shadow_rate)?.clamp(0.0, 1.0);
     let worker_default = if fleet { shards * max_inflight + 2 } else { shards + 2 };
     let workers = args.get_usize_min("workers", worker_default, 1)?;
     // --cache N sets the LRU solve-cache size; --cache 0 disables it.
@@ -209,6 +223,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             trace: TraceOptions {
                 capacity: trace_capacity,
                 sample: SamplePolicy { success_rate: trace_sample, ..SamplePolicy::default() },
+                calib,
             },
         },
     )?;
@@ -236,10 +251,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         format!("sequential dispatch, default deadline {deadline_ms}ms")
     };
+    let tau_mode = if calib.adaptive {
+        format!(
+            ", adaptive tau (min {} samples, conf floor {:.2}, shadow {:.0}%)",
+            calib.min_samples,
+            calib.conf_floor,
+            calib.shadow_rate * 100.0
+        )
+    } else {
+        String::new()
+    };
     println!(
         "erprm serving on http://{local}  ({} engine shards, {capacity} queue slots/shard, \
-         cache {cache}, {mode})  (POST /solve, GET /metrics, GET /healthz, \
-         GET /trace/<id>, GET /traces, GET /traces/chrome)",
+         cache {cache}, {mode}{tau_mode})  (POST /solve, GET /metrics, GET /healthz, \
+         GET /calibration, GET /trace/<id>, GET /traces, GET /traces/chrome)",
         pool.n_shards()
     );
     // run until killed

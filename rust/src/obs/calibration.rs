@@ -1,0 +1,501 @@
+//! Online calibration observatory: streaming partial↔final reward
+//! correlation per (PRM checkpoint, depth bucket), and the regret ledger
+//! for the adaptive-tau controller built on top of it.
+//!
+//! Every finished early-rejection request records (depth, partial, final)
+//! reward pairs into its trace ([`crate::obs::trace::CalibNote`]); the
+//! recorder folds them into this hub before sampling, exactly like the ER
+//! rollups — so the table is exact even when the trace ring keeps only a
+//! sample. The statistics are the shared incremental kernels from
+//! `util::stats` ([`StreamingPearson`] Welford co-moments plus a
+//! seed-stable bounded [`StreamingKendall`] reservoir), the same code the
+//! offline Fig. 4 study (`harness::correlation`) runs batch-style.
+//!
+//! The control loop reads a *frozen* snapshot per request: the router
+//! resolves a `TauPlan` from [`CalibrationHub::bucket_stats`] before
+//! dispatch and the plan never changes mid-request. Aggressiveness is
+//! gated on the Fisher-z lower confidence bound of the Pearson estimate —
+//! "aggressive where correlation is proven, static `cfg.tau` where
+//! samples are thin" — and a sampled shadow check measures regret: beams
+//! the effective tau rejected that the base-tau counterfactual would have
+//! kept. Surfaces: `GET /calibration` (JSON table), `erprm_calib_*`
+//! metrics, and per-request `tau`/`shadow` trace events.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::coordinator::policy::TauPlan;
+use crate::obs::metrics::MetricWriter;
+use crate::obs::trace::CalibNote;
+use crate::util::json::Json;
+use crate::util::stats::{StreamingKendall, StreamingPearson};
+
+/// Observatory + controller knobs (`--adaptive-tau`, `--calib-*`,
+/// `server.calib_*`), carried through `TraceOptions`/`PoolOptions`.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibOptions {
+    /// Close the loop: let the router resolve per-depth effective taus
+    /// from the calibration table. Off = observe only (the table still
+    /// streams; every request runs the static `cfg.tau`).
+    pub adaptive: bool,
+    /// Minimum samples in a bucket before the controller trusts it.
+    pub min_samples: u64,
+    /// The Fisher-z lower confidence bound on Pearson r must clear this
+    /// for a bucket to count as "proven".
+    pub conf_floor: f64,
+    /// Fraction of the (base − min_tau) span shaved at full confidence
+    /// excess, in [0, 1].
+    pub aggressiveness: f64,
+    /// Hard floor for any effective tau the controller picks.
+    pub min_tau: usize,
+    /// Fraction of adaptive requests that run a shadow regret check
+    /// (decode to base tau, reject at the effective tau, compare).
+    pub shadow_rate: f64,
+    /// Depth buckets 0..n-1; the last bucket absorbs all deeper rounds.
+    pub depth_buckets: usize,
+    /// Per-bucket rank-concordance reservoir capacity.
+    pub reservoir: usize,
+    /// Seed for the reservoir sketch and the shadow draw.
+    pub seed: u64,
+}
+
+impl Default for CalibOptions {
+    fn default() -> Self {
+        CalibOptions {
+            adaptive: false,
+            min_samples: 64,
+            conf_floor: 0.35,
+            aggressiveness: 0.5,
+            min_tau: 2,
+            shadow_rate: 0.05,
+            depth_buckets: 4,
+            reservoir: 256,
+            seed: 0xCA11_B8A7E,
+        }
+    }
+}
+
+struct Bucket {
+    pearson: StreamingPearson,
+    kendall: StreamingKendall,
+    /// Last effective tau the controller resolved for this bucket
+    /// (0 = controller never ran here).
+    tau_effective: u64,
+}
+
+#[derive(Default)]
+struct HubInner {
+    /// (checkpoint, depth bucket) → streaming stats. BTreeMap so every
+    /// snapshot/render iterates in one deterministic order.
+    buckets: BTreeMap<(String, usize), Bucket>,
+    /// Bumped on every mutation batch; the router stamps it into each
+    /// request's frozen plan (and its coalescing key), so two requests
+    /// sharing a key saw the same table by construction.
+    epoch: u64,
+    samples_total: u64,
+    adaptive_requests: u64,
+    shadow_requests: u64,
+    regret_checked: u64,
+    regret_beams: u64,
+}
+
+/// One `/calibration` table row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibRow {
+    pub ckpt: String,
+    pub bucket: usize,
+    pub samples: u64,
+    pub pearson: f64,
+    pub kendall: f64,
+    /// Fisher-z 95% lower bound on the Pearson estimate (-1 = no
+    /// evidence yet).
+    pub conf_low: f64,
+    /// Clears both the sample floor and the confidence floor.
+    pub confident: bool,
+    /// Last controller-resolved tau for this bucket (0 = never).
+    pub tau_effective: u64,
+}
+
+/// A frozen view of the table (`/calibration`, benchmark summaries).
+#[derive(Debug, Clone, Default)]
+pub struct CalibSnapshot {
+    pub epoch: u64,
+    pub samples_total: u64,
+    pub adaptive_requests: u64,
+    pub shadow_requests: u64,
+    pub regret_checked: u64,
+    pub regret_beams: u64,
+    pub rows: Vec<CalibRow>,
+}
+
+/// The per-pool observatory. One mutex acquisition per finished request
+/// (inside `TraceRecorder::submit`) plus one per adaptive plan resolve.
+pub struct CalibrationHub {
+    opts: CalibOptions,
+    inner: Mutex<HubInner>,
+}
+
+const Z95: f64 = 1.96;
+
+fn key_hash(ckpt: &str, bucket: usize) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ bucket as u64;
+    for b in ckpt.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl CalibrationHub {
+    pub fn new(opts: CalibOptions) -> CalibrationHub {
+        CalibrationHub { opts, inner: Mutex::new(HubInner::default()) }
+    }
+
+    pub fn opts(&self) -> CalibOptions {
+        self.opts
+    }
+
+    fn bucket_of(&self, depth: usize) -> usize {
+        depth.min(self.opts.depth_buckets.max(1) - 1)
+    }
+
+    /// Fold one finished request's calibration note into the table.
+    /// Called by the recorder for every submitted trace, before sampling.
+    pub fn record(&self, note: &CalibNote) {
+        if note.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for &(depth, partial, fin) in &note.samples {
+            let b = self.bucket_of(depth as usize);
+            let bucket = g.buckets.entry((note.ckpt.clone(), b)).or_insert_with(|| Bucket {
+                pearson: StreamingPearson::new(),
+                kendall: StreamingKendall::new(
+                    self.opts.reservoir,
+                    self.opts.seed ^ key_hash(&note.ckpt, b),
+                ),
+                tau_effective: 0,
+            });
+            bucket.pearson.push(partial as f64, fin as f64);
+            bucket.kendall.push(partial as f64, fin as f64);
+            g.samples_total += 1;
+        }
+        g.regret_checked += note.regret_checked;
+        g.regret_beams += note.regret;
+        if note.shadow {
+            g.shadow_requests += 1;
+        }
+        g.epoch += 1;
+    }
+
+    /// Record the plan the controller resolved for a request (feeds the
+    /// `erprm_calib_tau_effective` gauge and the adaptive/shadow
+    /// counters).
+    pub fn note_plan(&self, ckpt: &str, plan: &TauPlan) {
+        let mut g = self.inner.lock().unwrap();
+        g.adaptive_requests += 1;
+        for (b, bt) in plan.by_bucket.iter().enumerate() {
+            if let Some(bucket) = g.buckets.get_mut(&(ckpt.to_string(), b)) {
+                bucket.tau_effective = bt.tau as u64;
+            }
+        }
+    }
+
+    /// Per-bucket (samples, conf_low) for one checkpoint, indexed by
+    /// depth bucket — the `AdaptiveTau` controller's input.
+    pub fn bucket_stats(&self, ckpt: &str) -> Vec<(u64, f64)> {
+        let g = self.inner.lock().unwrap();
+        (0..self.opts.depth_buckets.max(1))
+            .map(|b| match g.buckets.get(&(ckpt.to_string(), b)) {
+                Some(bu) => (bu.pearson.len(), bu.pearson.corr_lower(Z95)),
+                None => (0, -1.0),
+            })
+            .collect()
+    }
+
+    /// Current table epoch (stamped into plans and coalescing keys).
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    pub fn snapshot(&self) -> CalibSnapshot {
+        let mut g = self.inner.lock().unwrap();
+        let opts = self.opts;
+        let mut rows = Vec::with_capacity(g.buckets.len());
+        let keys: Vec<(String, usize)> = g.buckets.keys().cloned().collect();
+        for k in keys {
+            let bu = g.buckets.get_mut(&k).unwrap();
+            let n = bu.pearson.len();
+            let conf_low = bu.pearson.corr_lower(Z95);
+            rows.push(CalibRow {
+                ckpt: k.0,
+                bucket: k.1,
+                samples: n,
+                pearson: bu.pearson.corr(),
+                kendall: bu.kendall.corr(),
+                conf_low,
+                confident: n >= opts.min_samples && conf_low >= opts.conf_floor,
+                tau_effective: bu.tau_effective,
+            });
+        }
+        CalibSnapshot {
+            epoch: g.epoch,
+            samples_total: g.samples_total,
+            adaptive_requests: g.adaptive_requests,
+            shadow_requests: g.shadow_requests,
+            regret_checked: g.regret_checked,
+            regret_beams: g.regret_beams,
+            rows,
+        }
+    }
+
+    /// The `GET /calibration` document.
+    pub fn to_json(&self) -> Json {
+        let s = self.snapshot();
+        let o = self.opts;
+        let rows = s
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("ckpt", Json::str(&r.ckpt)),
+                    ("depth_bucket", Json::num(r.bucket as f64)),
+                    ("samples", Json::num(r.samples as f64)),
+                    ("pearson", Json::num(r.pearson)),
+                    ("kendall", Json::num(r.kendall)),
+                    ("conf_low", Json::num(r.conf_low)),
+                    ("confident", Json::Bool(r.confident)),
+                    ("tau_effective", Json::num(r.tau_effective as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("epoch", Json::num(s.epoch as f64)),
+            ("adaptive", Json::Bool(o.adaptive)),
+            ("samples_total", Json::num(s.samples_total as f64)),
+            (
+                "knobs",
+                Json::obj(vec![
+                    ("min_samples", Json::num(o.min_samples as f64)),
+                    ("conf_floor", Json::num(o.conf_floor)),
+                    ("aggressiveness", Json::num(o.aggressiveness)),
+                    ("min_tau", Json::num(o.min_tau as f64)),
+                    ("shadow_rate", Json::num(o.shadow_rate)),
+                    ("depth_buckets", Json::num(o.depth_buckets as f64)),
+                    ("reservoir", Json::num(o.reservoir as f64)),
+                ]),
+            ),
+            (
+                "regret",
+                Json::obj(vec![
+                    ("adaptive_requests", Json::num(s.adaptive_requests as f64)),
+                    ("shadow_requests", Json::num(s.shadow_requests as f64)),
+                    ("beams_checked", Json::num(s.regret_checked as f64)),
+                    ("beams_regretted", Json::num(s.regret_beams as f64)),
+                ]),
+            ),
+            ("buckets", Json::Arr(rows)),
+        ])
+    }
+
+    /// The observatory's `/metrics` series, exposition-format complete.
+    pub fn render_metrics(&self) -> String {
+        let s = self.snapshot();
+        let mut w = MetricWriter::new();
+        for r in &s.rows {
+            let labels = format!("ckpt=\"{}\",bucket=\"{}\"", r.ckpt, r.bucket);
+            w.gauge_labeled(
+                "erprm_calib_corr",
+                "Streaming partial-vs-final Pearson correlation per (checkpoint, depth bucket).",
+                &labels,
+                r.pearson,
+            );
+        }
+        for r in &s.rows {
+            let labels = format!("ckpt=\"{}\",bucket=\"{}\"", r.ckpt, r.bucket);
+            w.gauge_labeled(
+                "erprm_calib_samples",
+                "Calibration samples accumulated per (checkpoint, depth bucket).",
+                &labels,
+                r.samples as f64,
+            );
+        }
+        for r in &s.rows {
+            if r.tau_effective == 0 {
+                continue;
+            }
+            let labels = format!("ckpt=\"{}\",bucket=\"{}\"", r.ckpt, r.bucket);
+            w.gauge_labeled(
+                "erprm_calib_tau_effective",
+                "Last controller-resolved effective tau per (checkpoint, depth bucket).",
+                &labels,
+                r.tau_effective as f64,
+            );
+        }
+        w.gauge(
+            "erprm_calib_epoch",
+            "Calibration table mutation epoch (stamped into frozen per-request plans).",
+            s.epoch as f64,
+        );
+        w.counter(
+            "erprm_calib_adaptive_requests_total",
+            "Requests dispatched with a controller-resolved tau plan.",
+            s.adaptive_requests as f64,
+        );
+        w.counter(
+            "erprm_calib_shadow_requests_total",
+            "Adaptive requests that ran the shadow regret check.",
+            s.shadow_requests as f64,
+        );
+        w.counter(
+            "erprm_calib_regret_checked_total",
+            "Beams rejected under shadow comparison (the regret denominator).",
+            s.regret_checked as f64,
+        );
+        w.counter(
+            "erprm_calib_regret_beams_total",
+            "Shadow-checked rejected beams the base-tau counterfactual would have kept.",
+            s.regret_beams as f64,
+        );
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::AdaptiveTau;
+    use crate::obs::metrics::check_exposition;
+
+    fn note(ckpt: &str, samples: &[(u32, f32, f32)]) -> CalibNote {
+        CalibNote { ckpt: ckpt.into(), samples: samples.to_vec(), ..CalibNote::default() }
+    }
+
+    fn feed_linear(hub: &CalibrationHub, ckpt: &str, depth: u32, n: usize) {
+        // perfectly correlated pairs with spread => r = 1, tight bound
+        for i in 0..n {
+            let v = 0.2 + 0.6 * (i % 13) as f32 / 13.0;
+            hub.record(&note(ckpt, &[(depth, v, v)]));
+        }
+    }
+
+    #[test]
+    fn buckets_accumulate_and_clamp_depth() {
+        let hub = CalibrationHub::new(CalibOptions { depth_buckets: 3, ..Default::default() });
+        hub.record(&note("prm-large", &[(0, 0.5, 0.6), (1, 0.4, 0.5), (9, 0.3, 0.2)]));
+        let s = hub.snapshot();
+        assert_eq!(s.samples_total, 3);
+        assert_eq!(s.epoch, 1, "one mutation batch");
+        let buckets: Vec<usize> = s.rows.iter().map(|r| r.bucket).collect();
+        assert_eq!(buckets, vec![0, 1, 2], "depth 9 clamps into the last bucket");
+        assert!(s.rows.iter().all(|r| r.ckpt == "prm-large"));
+    }
+
+    #[test]
+    fn confidence_gate_needs_samples_and_correlation() {
+        let opts = CalibOptions { min_samples: 32, conf_floor: 0.35, ..Default::default() };
+        let hub = CalibrationHub::new(opts);
+        feed_linear(&hub, "prm-large", 0, 8);
+        assert!(!hub.snapshot().rows[0].confident, "8 samples are thin");
+        feed_linear(&hub, "prm-large", 0, 56);
+        let r = &hub.snapshot().rows[0];
+        assert!(r.samples == 64 && r.confident, "{r:?}");
+        assert!(r.pearson > 0.999);
+        // an uncorrelated bucket never clears the floor no matter the n
+        let mut h = 1u64;
+        for _ in 0..200 {
+            h = h.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let x = (h >> 33) as f32 / (1u32 << 31) as f32;
+            let y = (h & 0xffff) as f32 / 65535.0;
+            hub.record(&note("prm-large", &[(1, x, y)]));
+        }
+        let s = hub.snapshot();
+        let b1 = s.rows.iter().find(|r| r.bucket == 1).unwrap();
+        assert!(!b1.confident, "conf_low {} on noise", b1.conf_low);
+    }
+
+    #[test]
+    fn bucket_stats_feed_the_controller() {
+        let opts = CalibOptions { min_samples: 16, depth_buckets: 3, ..Default::default() };
+        let hub = CalibrationHub::new(opts);
+        feed_linear(&hub, "prm-large", 1, 64);
+        let stats = hub.bucket_stats("prm-large");
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats[0], (0, -1.0), "empty bucket carries no evidence");
+        assert_eq!(stats[1].0, 64);
+        assert!(stats[1].1 > 0.35);
+        // other checkpoints see nothing
+        assert!(hub.bucket_stats("prm-small").iter().all(|&(n, _)| n == 0));
+        // and a resolved plan lands in the tau_effective gauge
+        let ctl = AdaptiveTau { min_samples: 16, conf_floor: 0.35, aggressiveness: 1.0, min_tau: 2 };
+        let plan = ctl.plan(8, &stats, false, hub.epoch());
+        assert!(plan.by_bucket[1].tau < 8, "confident bucket got aggressive");
+        hub.note_plan("prm-large", &plan);
+        let s = hub.snapshot();
+        let row = s.rows.iter().find(|r| r.bucket == 1).unwrap();
+        assert_eq!(row.tau_effective, plan.by_bucket[1].tau as u64);
+        assert_eq!(s.adaptive_requests, 1);
+    }
+
+    #[test]
+    fn regret_ledger_rolls_up() {
+        let hub = CalibrationHub::new(CalibOptions::default());
+        let mut n = note("prm-large", &[(0, 0.5, 0.5)]);
+        n.shadow = true;
+        n.regret_checked = 6;
+        n.regret = 1;
+        hub.record(&n);
+        hub.record(&n);
+        let s = hub.snapshot();
+        assert_eq!(s.shadow_requests, 2);
+        assert_eq!(s.regret_checked, 12);
+        assert_eq!(s.regret_beams, 2);
+        let json = hub.to_json().to_string();
+        let doc = Json::parse(&json).unwrap();
+        let regret = doc.get("regret").unwrap();
+        assert_eq!(regret.get("beams_regretted").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(doc.get("epoch").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn empty_note_is_a_noop() {
+        let hub = CalibrationHub::new(CalibOptions::default());
+        hub.record(&CalibNote::default());
+        assert_eq!(hub.epoch(), 0);
+        assert!(hub.snapshot().rows.is_empty());
+    }
+
+    #[test]
+    fn metrics_render_is_exposition_valid() {
+        let hub = CalibrationHub::new(CalibOptions { min_samples: 8, ..Default::default() });
+        feed_linear(&hub, "prm-large", 0, 32);
+        feed_linear(&hub, "prm-small", 2, 4);
+        let ctl = AdaptiveTau { min_samples: 8, conf_floor: 0.35, aggressiveness: 0.5, min_tau: 2 };
+        let stats = hub.bucket_stats("prm-large");
+        hub.note_plan("prm-large", &ctl.plan(8, &stats, false, hub.epoch()));
+        let text = hub.render_metrics();
+        check_exposition(&text).unwrap();
+        assert!(text.contains("erprm_calib_corr{ckpt=\"prm-large\",bucket=\"0\"}"), "{text}");
+        assert!(text.contains("erprm_calib_samples{ckpt=\"prm-small\",bucket=\"2\"} 4"), "{text}");
+        assert!(text.contains("erprm_calib_tau_effective{ckpt=\"prm-large\",bucket=\"0\"}"));
+        assert!(text.contains("erprm_calib_regret_beams_total 0"));
+        // empty hub renders only the unlabelled series, still valid
+        let empty = CalibrationHub::new(CalibOptions::default()).render_metrics();
+        check_exposition(&empty).unwrap();
+        assert!(!empty.contains("erprm_calib_corr{"));
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_for_a_given_stream() {
+        let run = || {
+            let hub = CalibrationHub::new(CalibOptions::default());
+            for i in 0..300u32 {
+                let v = (i % 17) as f32 / 17.0;
+                hub.record(&note("prm-large", &[(i % 5, v, v * 0.8 + 0.1)]));
+            }
+            let s = hub.snapshot();
+            (s.epoch, s.rows.iter().map(|r| (r.pearson, r.kendall, r.samples)).collect::<Vec<_>>())
+        };
+        assert_eq!(run(), run(), "seed-stable sketch => identical tables");
+    }
+}

@@ -16,20 +16,27 @@
 //! * [`metrics`] — the Prometheus exposition writer every `/metrics`
 //!   renderer shares, plus the format-validity checker the golden test
 //!   pins.
+//! * [`calibration`] — the online calibration observatory: streaming
+//!   partial↔final reward correlation per (checkpoint, depth bucket)
+//!   fed from every finished request, the confidence-gated evidence the
+//!   adaptive-tau controller consumes, and the FLOPs-saved-vs-regret
+//!   ledger (`GET /calibration`, `erprm_calib_*`).
 //!
 //! Requests are keyed by an id minted at the HTTP door (or accepted
 //! from the client via an `X-Request-Id` header / `request_id` body
 //! field) and echoed in the `/solve` response.
 
+pub mod calibration;
 pub mod chrome;
 pub mod metrics;
 pub mod recorder;
 pub mod trace;
 
+pub use calibration::{CalibOptions, CalibRow, CalibSnapshot, CalibrationHub};
 pub use chrome::chrome_trace;
 pub use metrics::{check_exposition, MetricKind, MetricWriter};
 pub use recorder::{RecorderTotals, SamplePolicy, TraceOptions, TraceRecorder};
-pub use trace::{ErEvent, PhaseFlops, Span, SpanEvent, Trace, TraceBuilder};
+pub use trace::{CalibNote, ErEvent, PhaseFlops, Span, SpanEvent, Trace, TraceBuilder};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;

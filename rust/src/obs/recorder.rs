@@ -13,6 +13,7 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
+use crate::obs::calibration::{CalibOptions, CalibrationHub};
 use crate::obs::now_us;
 use crate::obs::trace::Trace;
 
@@ -77,11 +78,19 @@ pub struct TraceOptions {
     /// Ring capacity in traces; 0 disables retention (rollups still run).
     pub capacity: usize,
     pub sample: SamplePolicy,
+    /// Calibration observatory + adaptive-tau controller knobs. The hub
+    /// lives in the recorder because the recorder already sees every
+    /// finished request exactly once.
+    pub calib: CalibOptions,
 }
 
 impl Default for TraceOptions {
     fn default() -> Self {
-        TraceOptions { capacity: 256, sample: SamplePolicy::default() }
+        TraceOptions {
+            capacity: 256,
+            sample: SamplePolicy::default(),
+            calib: CalibOptions::default(),
+        }
     }
 }
 
@@ -118,17 +127,28 @@ pub struct RecorderTotals {
 pub struct TraceRecorder {
     capacity: usize,
     policy: SamplePolicy,
+    calib: CalibrationHub,
     inner: Mutex<Ring>,
 }
 
 impl TraceRecorder {
     pub fn new(opts: TraceOptions) -> TraceRecorder {
         let ring = Ring { bucket: opts.sample.burst, ..Ring::default() };
-        TraceRecorder { capacity: opts.capacity, policy: opts.sample, inner: Mutex::new(ring) }
+        TraceRecorder {
+            capacity: opts.capacity,
+            policy: opts.sample,
+            calib: CalibrationHub::new(opts.calib),
+            inner: Mutex::new(ring),
+        }
     }
 
     pub fn policy(&self) -> &SamplePolicy {
         &self.policy
+    }
+
+    /// The calibration observatory fed by every submitted trace.
+    pub fn calibration(&self) -> &CalibrationHub {
+        &self.calib
     }
 
     /// Record a completed trace (rollups always; retention per policy).
@@ -140,6 +160,8 @@ impl TraceRecorder {
     /// testable without sleeping.
     pub fn submit_at(&self, trace: Trace, now_us: u64) {
         debug_assert!(trace.well_formed(), "submitted trace has open spans");
+        // exact like the rollups below: folded before sampling
+        self.calib.record(&trace.calib);
         let mut g = self.inner.lock().unwrap();
         g.recorded += 1;
         g.er_flops_saved += trace.er_flops_saved();
@@ -237,7 +259,9 @@ impl TraceRecorder {
             "Request traces not retained (sampled out, rate-limited, or evicted).",
             t.dropped as f64,
         );
-        w.finish()
+        let mut out = w.finish();
+        out.push_str(&self.calib.render_metrics());
+        out
     }
 }
 
@@ -254,6 +278,7 @@ mod tests {
         TraceRecorder::new(TraceOptions {
             capacity,
             sample: SamplePolicy { success_rate: rate, seed, max_per_sec: 0.0, burst: 0.0 },
+            calib: CalibOptions::default(),
         })
     }
 
@@ -301,6 +326,7 @@ mod tests {
         let r = TraceRecorder::new(TraceOptions {
             capacity: 100,
             sample: SamplePolicy { success_rate: 0.0, seed: 7, max_per_sec: 1.0, burst: 1.0 },
+            calib: CalibOptions::default(),
         });
         r.submit(ok_trace("s1")); // sampled out
         r.submit(TraceBuilder::start("e1").finish("error", 500, PhaseFlops::default()));
@@ -320,6 +346,7 @@ mod tests {
         let r = TraceRecorder::new(TraceOptions {
             capacity: 100,
             sample: SamplePolicy { success_rate: 1.0, seed: 7, max_per_sec: 10.0, burst: 2.0 },
+            calib: CalibOptions::default(),
         });
         // burst of 2, then dry at t=0
         for i in 0..5 {
@@ -338,13 +365,45 @@ mod tests {
     fn rollups_count_sampled_out_traces() {
         let r = no_limit(100, 0.0, 1);
         let mut tb = TraceBuilder::start("x");
-        tb.reject(ErEvent { depth: 0, rejected: vec![0, 1], scores: vec![0.1, 0.2], flops_saved: 5.0 });
+        tb.reject(ErEvent {
+            depth: 0,
+            tau: 8,
+            rejected: vec![0, 1],
+            scores: vec![0.1, 0.2],
+            flops_saved: 5.0,
+        });
         r.submit(tb.finish("ok", 200, PhaseFlops::default()));
         let t = r.totals();
         assert_eq!(t.retained, 0, "sampled out");
         assert_eq!(t.er_beams_rejected, 2, "rollups still exact");
         assert_eq!(t.er_flops_saved, 5.0);
         assert_eq!(t.dropped, 1);
+    }
+
+    #[test]
+    fn calibration_folds_before_sampling() {
+        // success_rate 0 drops every trace from the ring — the hub must
+        // still see every sample, like the ER rollups
+        let r = no_limit(100, 0.0, 1);
+        for i in 0..5u32 {
+            let mut tb = TraceBuilder::start(format!("c{i}"));
+            let v = 0.3 + 0.1 * i as f32;
+            tb.calib_sample("prm-large", 0, v, v);
+            tb.calib_regret(2, 1);
+            tb.calib_control(true, true);
+            r.submit(tb.finish("ok", 200, PhaseFlops::default()));
+        }
+        assert_eq!(r.totals().retained, 0);
+        let s = r.calibration().snapshot();
+        assert_eq!(s.samples_total, 5);
+        assert_eq!(s.shadow_requests, 5);
+        assert_eq!(s.regret_checked, 10);
+        assert_eq!(s.regret_beams, 5);
+        assert_eq!(s.rows.len(), 1);
+        assert!(s.rows[0].pearson > 0.999);
+        // and the combined render stays exposition-valid
+        crate::obs::metrics::check_exposition(&r.render_metrics()).unwrap();
+        assert!(r.render_metrics().contains("erprm_calib_samples"));
     }
 
     #[test]

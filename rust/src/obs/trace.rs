@@ -47,6 +47,9 @@ pub struct ErEvent {
     /// Completed select/expand rounds when the rejection fired (the
     /// blocking loop index — rejection depth in paper terms).
     pub depth: usize,
+    /// The effective rejection checkpoint this round ran at — `cfg.tau`
+    /// unless the adaptive-tau controller resolved a shorter one.
+    pub tau: usize,
     /// Beam slots rejected this round.
     pub rejected: Vec<usize>,
     /// Partial rewards of the rejected beams, same order as `rejected`.
@@ -62,6 +65,7 @@ impl ErEvent {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("depth", Json::num(self.depth as f64)),
+            ("tau", Json::num(self.tau as f64)),
             (
                 "rejected",
                 Json::Arr(self.rejected.iter().map(|&s| Json::num(s as f64)).collect()),
@@ -71,6 +75,45 @@ impl ErEvent {
                 Json::Arr(self.scores.iter().map(|&s| Json::num(s as f64)).collect()),
             ),
             ("flops_saved", Json::num(self.flops_saved)),
+        ])
+    }
+}
+
+/// Calibration payload a request carries out: (depth, partial, final)
+/// reward pairs for the observatory, plus the controller/shadow verdicts
+/// for the regret ledger. Folded into `obs::calibration::CalibrationHub`
+/// by the recorder before sampling — so the table is exact even when the
+/// trace ring keeps only a sample of traces.
+#[derive(Debug, Clone, Default)]
+pub struct CalibNote {
+    /// PRM checkpoint that produced the rewards ("" until the first
+    /// sample lands).
+    pub ckpt: String,
+    /// (depth, partial reward at the round's tau, final step reward).
+    pub samples: Vec<(u32, f32, f32)>,
+    /// The request ran under a controller-resolved plan.
+    pub adaptive: bool,
+    /// The request ran the shadow regret check.
+    pub shadow: bool,
+    /// Beams rejected while the shadow comparison was armed.
+    pub regret_checked: u64,
+    /// Of those, beams the base-tau counterfactual would have kept.
+    pub regret: u64,
+}
+
+impl CalibNote {
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty() && !self.adaptive && !self.shadow && self.regret_checked == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ckpt", Json::str(&self.ckpt)),
+            ("samples", Json::num(self.samples.len() as f64)),
+            ("adaptive", Json::Bool(self.adaptive)),
+            ("shadow", Json::Bool(self.shadow)),
+            ("regret_checked", Json::num(self.regret_checked as f64)),
+            ("regret", Json::num(self.regret as f64)),
         ])
     }
 }
@@ -126,6 +169,7 @@ pub struct TraceBuilder {
     open: Vec<usize>,
     events: Vec<SpanEvent>,
     er: Vec<ErEvent>,
+    calib: CalibNote,
     shard: Option<usize>,
     slot: Option<usize>,
     queue_wait_ms: f64,
@@ -140,6 +184,7 @@ impl TraceBuilder {
             open: Vec::new(),
             events: Vec::new(),
             er: Vec::new(),
+            calib: CalibNote::default(),
             shard: None,
             slot: None,
             queue_wait_ms: 0.0,
@@ -213,6 +258,33 @@ impl TraceBuilder {
         self.er.push(ev);
     }
 
+    /// Record one (partial, final) calibration pair for the observatory.
+    pub fn calib_sample(&mut self, ckpt: &str, depth: u32, partial: f32, final_reward: f32) {
+        if self.calib.ckpt.is_empty() {
+            self.calib.ckpt = ckpt.to_string();
+        }
+        self.calib.samples.push((depth, partial, final_reward));
+    }
+
+    /// Mark how the controller treated this request (adaptive plan,
+    /// shadow regret check).
+    pub fn calib_control(&mut self, adaptive: bool, shadow: bool) {
+        self.calib.adaptive = adaptive;
+        self.calib.shadow = shadow;
+    }
+
+    /// Accumulate one shadow-check verdict: `checked` rejected beams, of
+    /// which `regret` the base-tau counterfactual would have kept.
+    pub fn calib_regret(&mut self, checked: u64, regret: u64) {
+        self.calib.regret_checked += checked;
+        self.calib.regret += regret;
+        self.events.push(SpanEvent {
+            name: "shadow",
+            ts_us: now_us(),
+            detail: format!("checked={checked} regret={regret}"),
+        });
+    }
+
     /// Record where the fleet placed this request (Chrome-trace row).
     pub fn set_placement(&mut self, shard: usize, slot: usize) {
         self.shard = Some(shard);
@@ -238,6 +310,7 @@ impl TraceBuilder {
             spans: self.spans,
             events: self.events,
             er: self.er,
+            calib: self.calib,
             phase,
         }
     }
@@ -259,6 +332,7 @@ pub struct Trace {
     pub spans: Vec<Span>,
     pub events: Vec<SpanEvent>,
     pub er: Vec<ErEvent>,
+    pub calib: CalibNote,
     pub phase: PhaseFlops,
 }
 
@@ -333,6 +407,7 @@ impl Trace {
                     ("events", Json::Arr(self.er.iter().map(ErEvent::to_json).collect())),
                 ]),
             ),
+            ("calibration", self.calib.to_json()),
             ("spans", Json::Arr(spans)),
             ("events", Json::Arr(events)),
         ])
@@ -421,16 +496,45 @@ mod tests {
         let mut tb = TraceBuilder::start("r4");
         tb.reject(ErEvent {
             depth: 0,
+            tau: 8,
             rejected: vec![1, 3],
             scores: vec![0.2, 0.1],
             flops_saved: 100.0,
         });
-        tb.reject(ErEvent { depth: 1, rejected: vec![2], scores: vec![0.4], flops_saved: 40.0 });
+        tb.reject(ErEvent {
+            depth: 1,
+            tau: 4,
+            rejected: vec![2],
+            scores: vec![0.4],
+            flops_saved: 40.0,
+        });
         let t = tb.finish("ok", 200, PhaseFlops::default());
         assert_eq!(t.er_rejected(), 3);
         assert_eq!(t.er_flops_saved(), 140.0);
         // the reject instant events mirror the ledger
         assert_eq!(t.events.iter().filter(|e| e.name == "reject").count(), 2);
+    }
+
+    #[test]
+    fn calib_note_rides_the_trace() {
+        let mut tb = TraceBuilder::start("r6");
+        assert!(tb.finish("ok", 200, PhaseFlops::default()).calib.is_empty());
+        let mut tb = TraceBuilder::start("r7");
+        tb.calib_control(true, true);
+        tb.calib_sample("prm-large", 0, 0.6, 0.7);
+        tb.calib_sample("prm-large", 1, 0.5, 0.4);
+        tb.calib_regret(3, 1);
+        tb.calib_regret(2, 0);
+        let t = tb.finish("ok", 200, PhaseFlops::default());
+        assert_eq!(t.calib.ckpt, "prm-large");
+        assert_eq!(t.calib.samples.len(), 2);
+        assert!(t.calib.adaptive && t.calib.shadow);
+        assert_eq!((t.calib.regret_checked, t.calib.regret), (5, 1));
+        assert_eq!(t.events.iter().filter(|e| e.name == "shadow").count(), 2);
+        let doc = Json::parse(&t.to_json().to_string()).unwrap();
+        let c = doc.get("calibration").unwrap();
+        assert_eq!(c.get("regret").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(c.get("shadow").and_then(Json::as_bool), Some(true));
     }
 
     #[test]

@@ -64,6 +64,7 @@ pub fn route(
         ("GET", "/traces/chrome") => {
             http::Response::json(200, obs::chrome_trace(&pool.tracer().all()).to_string())
         }
+        ("GET", "/calibration") => http::Response::json(200, pool.calibration_json()),
         ("GET", p) if p.starts_with("/trace/") => {
             let id = &p["/trace/".len()..];
             match pool.tracer().get(id) {

@@ -39,8 +39,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::batch::{BatchStats, BatchTotals};
-use crate::config::SearchConfig;
-use crate::coordinator::search::SolveOutcome;
+use crate::config::{SearchConfig, SearchMode};
+use crate::coordinator::policy::{AdaptiveTau, TauPlan};
+use crate::coordinator::search::{hash_problem, SolveOutcome};
 use crate::coordinator::task::Progress;
 use crate::fleet::{self, FleetJob, FleetOptions, FleetStats, FleetTotals, Solved, TaskSpec};
 use crate::harness::temp_for;
@@ -67,6 +68,9 @@ struct SolveJob {
     /// running; the shard closes it and records the rest of the
     /// lifecycle.
     trace: Option<Box<TraceBuilder>>,
+    /// Frozen adaptive-tau schedule resolved at admission (see
+    /// [`EnginePool::resolve_tau_plan`]); `None` = static `cfg.tau`.
+    tau_plan: Option<Arc<TauPlan>>,
 }
 
 enum Msg {
@@ -366,7 +370,16 @@ impl EnginePool {
             self.inner.tracer.submit(tb.finish("error", e.http_status(), PhaseFlops::default()));
             return Err(e);
         }
-        let key = req.cache_key(&cfg);
+        // Adaptive tau: freeze the rejection schedule for this request
+        // against the current calibration table *before* any key is
+        // built. The key embeds the table epoch, so cache hits and
+        // coalesced duplicates are only ever shared between requests
+        // that froze byte-identical plans.
+        let tau_plan = self.resolve_tau_plan(&req, &cfg);
+        let key = match &tau_plan {
+            Some(p) => format!("{}|calib{}", req.cache_key(&cfg), p.epoch),
+            None => req.cache_key(&cfg),
+        };
         if let Some(cache) = &self.inner.cache {
             if let Some(hit) = cache.lock().unwrap().get(&key) {
                 self.inner.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -384,29 +397,45 @@ impl EnginePool {
         // Pool-level single-flight: follow an in-flight leader for the
         // same key instead of dispatching a second engine run (possibly
         // onto a different shard, where the shard-local coalescer could
-        // never see the duplicate). Deadline-bounded requests bypass the
-        // table in both roles — including those bounded only by the pool
-        // default: a follower has no timed wait (it would inherit the
-        // leader's deadline fate and break its own end-to-end 504
-        // contract — a leader admitted earlier exhausts its budget
-        // earlier), and a tightly-bounded leader would impose its 504 on
-        // unbounded followers. The shard-local fleet coalescer still
-        // folds bounded duplicates, with proper per-rider deadline
-        // accounting.
-        let sf_guard = if let (None, Some(sf)) =
-            (self.effective_deadline(&req), &self.inner.singleflight)
-        {
+        // never see the duplicate). Deadline-bounded duplicates join as
+        // *followers* with a timed wait capped at their own budget: if
+        // the leader finishes in time they ride its result, otherwise
+        // the timed `recv` consumes (abandons) the channel and the
+        // request 504s on its own deadline instead of inheriting the
+        // leader's fate. Bounded requests still never *lead* — a
+        // tightly-bounded leader would impose its 504 on unbounded
+        // followers — so a bounded request with no leader in flight
+        // dispatches solo without claiming the key.
+        let deadline = self.effective_deadline(&req);
+        let sf_guard = if let Some(sf) = &self.inner.singleflight {
             let mut table = sf.lock().unwrap();
             if let Some(waiters) = table.get_mut(&key) {
                 let (tx, rx) = oneshot::channel();
                 waiters.push(tx);
                 drop(table);
                 self.inner.pool_coalesced.fetch_add(1, Ordering::Relaxed);
-                let res: Result<Solved> = rx
-                    .recv()
-                    .map_err(|_| Error::internal("single-flight leader vanished"))?;
+                let res: Result<Solved> = match deadline {
+                    None => rx
+                        .recv()
+                        .map_err(|_| Error::internal("single-flight leader vanished"))?,
+                    Some(budget) => match rx.recv_timeout(budget) {
+                        Ok(r) => r,
+                        Err(oneshot::RecvTimeoutError::Timeout) => {
+                            // the timed recv consumed the receiver, so
+                            // the leader's late send bounces harmlessly
+                            Err(Error::deadline(format!(
+                                "followed an in-flight identical run past the {}ms budget",
+                                budget.as_millis()
+                            )))
+                        }
+                        Err(oneshot::RecvTimeoutError::Disconnected) => {
+                            return Err(Error::internal("single-flight leader vanished"));
+                        }
+                    },
+                };
                 // the follower's own trace ends at the door: it rode the
-                // leader's engine run and inherits its result
+                // leader's engine run and inherits (or times out of) its
+                // result
                 let mut tb = TraceBuilder::start(req.request_id.clone());
                 tb.event("coalesced", "pool single-flight follower");
                 let t = match &res {
@@ -421,13 +450,17 @@ impl EnginePool {
                 self.inner.tracer.submit(t);
                 return res;
             }
-            table.insert(key.clone(), Vec::new());
-            Some(SingleFlightGuard { table: sf, key: key.clone() })
+            if deadline.is_none() {
+                table.insert(key.clone(), Vec::new());
+                Some(SingleFlightGuard { table: sf, key: key.clone() })
+            } else {
+                None
+            }
         } else {
             None
         };
         let rid = req.request_id.clone();
-        let res = self.dispatch_with_failover(req, cfg);
+        let res = self.dispatch_with_failover(req, cfg, tau_plan);
         if let Err(e) = &res {
             if e.http_status() == 503 {
                 // saturation bounces never reach a shard, so the shard
@@ -454,13 +487,47 @@ impl EnginePool {
         res
     }
 
+    /// Freeze this request's rejection schedule against the calibration
+    /// table. `None` (controller off, vanilla mode) means the task runs
+    /// the exact pre-controller static-`cfg.tau` path. The shadow draw is
+    /// a pure function of the request identity and table epoch, so every
+    /// duplicate that shares a cache/coalescing key froze the same plan.
+    fn resolve_tau_plan(&self, req: &SolveRequest, cfg: &SearchConfig) -> Option<Arc<TauPlan>> {
+        let hub = self.inner.tracer.calibration();
+        let o = hub.opts();
+        if !o.adaptive || cfg.mode != SearchMode::EarlyRejection {
+            return None;
+        }
+        let epoch = hub.epoch();
+        let stats = hub.bucket_stats(&req.prm);
+        let draw = crate::util::stats::mix64(
+            hash_problem(&req.problem) ^ cfg.seed ^ o.seed.wrapping_add(epoch),
+        );
+        let shadow = o.shadow_rate > 0.0
+            && (draw >> 11) as f64 / (1u64 << 53) as f64 < o.shadow_rate;
+        let ctl = AdaptiveTau {
+            min_samples: o.min_samples,
+            conf_floor: o.conf_floor,
+            aggressiveness: o.aggressiveness,
+            min_tau: o.min_tau,
+        };
+        let plan = ctl.plan(cfg.tau, &stats, shadow, epoch);
+        hub.note_plan(&req.prm, &plan);
+        Some(Arc::new(plan))
+    }
+
     /// One placement attempt per shard: a dispatch that dies marks its
     /// shard dead, and the next reserve() skips it.
-    fn dispatch_with_failover(&self, req: SolveRequest, cfg: SearchConfig) -> Result<Solved> {
+    fn dispatch_with_failover(
+        &self,
+        req: SolveRequest,
+        cfg: SearchConfig,
+        tau_plan: Option<Arc<TauPlan>>,
+    ) -> Result<Solved> {
         let mut last_err = None;
         for _ in 0..self.inner.shards.len() {
             let (idx, guard) = self.reserve()?;
-            match self.dispatch(idx, req.clone(), cfg.clone(), guard) {
+            match self.dispatch(idx, req.clone(), cfg.clone(), tau_plan.clone(), guard) {
                 Err(e) if self.inner.shards[idx].dead.load(Ordering::Relaxed) => {
                     log_error!("shard {idx} dead; failing request over: {e}");
                     last_err = Some(e);
@@ -490,7 +557,8 @@ impl EnginePool {
         cfg.validate()?;
         let guard = try_reserve(&self.inner.shards[idx].depth, self.inner.capacity)
             .ok_or_else(|| Error::saturated(format!("shard {idx} queue full")))?;
-        self.dispatch(idx, req, cfg, guard).map(|s| s.outcome)
+        let plan = self.resolve_tau_plan(&req, &cfg);
+        self.dispatch(idx, req, cfg, plan, guard).map(|s| s.outcome)
     }
 
     /// Placement signal per shard, `(primary, tiebreak)`. Sequential
@@ -565,6 +633,7 @@ impl EnginePool {
         idx: usize,
         req: SolveRequest,
         cfg: SearchConfig,
+        tau_plan: Option<Arc<TauPlan>>,
         guard: DepthGuard,
     ) -> Result<Solved> {
         let _guard = guard;
@@ -588,6 +657,7 @@ impl EnginePool {
             enqueued: Instant::now(),
             reply: rtx,
             trace: Some(tb),
+            tau_plan,
         };
         if shard.tx.send(Msg::Solve(Box::new(job))).is_err() {
             shard.dead.store(true, Ordering::Relaxed);
@@ -692,6 +762,13 @@ impl EnginePool {
     /// Chrome export, and the benchmarks' FLOPs-saved reporting).
     pub fn tracer(&self) -> &TraceRecorder {
         &self.inner.tracer
+    }
+
+    /// The calibration observatory's JSON table (`GET /calibration`):
+    /// per-(checkpoint, depth-bucket) partial↔final correlation, sample
+    /// counts, confidence verdicts, and the regret ledger.
+    pub fn calibration_json(&self) -> String {
+        self.inner.tracer.calibration().to_json().to_string()
     }
 
     /// Engine counters aggregated across all shards.
@@ -1033,7 +1110,9 @@ fn shard_main(
                 match msg {
                     Msg::Shutdown => break,
                     Msg::Solve(job) => {
-                        let SolveJob { req, cfg, enqueued, deadline, reply, mut trace, .. } = *job;
+                        let SolveJob {
+                            req, cfg, enqueued, deadline, reply, mut trace, tau_plan, ..
+                        } = *job;
                         let now = Instant::now();
                         let queue_wait_ms =
                             now.saturating_duration_since(enqueued).as_secs_f64() * 1000.0;
@@ -1065,7 +1144,8 @@ fn shard_main(
                             }
                         }
                         let _scope = trace.as_ref().map(|tb| logging::request_scope(tb.id()));
-                        let (solve_res, trace) = run_solve_traced(&engine, &req, &cfg, trace);
+                        let (solve_res, trace) =
+                            run_solve_traced(&engine, &req, &cfg, tau_plan, trace);
                         // capture the phase split before the 504 contract
                         // can swallow the outcome: a too-late solve still
                         // spent its FLOPs and the trace should say so
@@ -1114,7 +1194,13 @@ fn shard_main(
 /// key is the solve-cache key: equal keys are proven byte-identical, so
 /// riding a duplicate's task is exactly as correct as a cache hit.
 fn to_fleet_job(job: SolveJob) -> FleetJob {
-    let key = job.req.cache_key(&job.cfg);
+    // mirror the pool's key derivation: a frozen adaptive plan extends
+    // the key with its table epoch, so shard-local coalescing also only
+    // folds duplicates that froze byte-identical plans
+    let key = match &job.tau_plan {
+        Some(p) => format!("{}|calib{}", job.req.cache_key(&job.cfg), p.epoch),
+        None => job.req.cache_key(&job.cfg),
+    };
     FleetJob {
         spec: TaskSpec {
             problem: job.req.problem.clone(),
@@ -1123,6 +1209,7 @@ fn to_fleet_job(job: SolveJob) -> FleetJob {
             prm: job.req.prm.clone(),
             temp: temp_for(&job.req.lm),
             cfg: job.cfg,
+            tau_plan: job.tau_plan,
         },
         key: Some(key),
         enqueued: job.enqueued,
@@ -1142,6 +1229,7 @@ fn run_solve_traced(
     engine: &Engine,
     req: &SolveRequest,
     cfg: &SearchConfig,
+    tau_plan: Option<Arc<TauPlan>>,
     trace: Option<Box<TraceBuilder>>,
 ) -> (Result<SolveOutcome>, Option<Box<TraceBuilder>>) {
     let spec = TaskSpec {
@@ -1151,6 +1239,7 @@ fn run_solve_traced(
         prm: req.prm.clone(),
         temp: temp_for(&req.lm),
         cfg: cfg.clone(),
+        tau_plan,
     };
     let mut task = match spec.build() {
         Ok(t) => t,
@@ -1586,9 +1675,9 @@ mod tests {
                 std::thread::spawn(move || p.solve_timed(request(), SearchConfig::default()))
             })
             .collect();
-        // an identical request with an explicit deadline must bypass the
-        // table even while the leader is in flight (no timed wait exists;
-        // it must not inherit the leader's deadline fate)
+        // an identical request with a roomy deadline now joins as a
+        // *timed* follower: the leader finishes well inside its budget,
+        // so it rides the same engine run instead of dispatching its own
         let bounded = {
             let p = pool.clone();
             std::thread::spawn(move || {
@@ -1603,20 +1692,109 @@ mod tests {
             let s = f.join().unwrap().expect("follower rides the leader");
             assert_eq!(s.outcome.answer, Some(7));
         }
-        bounded.join().unwrap().expect("bounded duplicate dispatches its own run");
+        let b = bounded.join().unwrap().expect("bounded duplicate rides the leader too");
+        assert_eq!(b.outcome.answer, Some(7));
         assert_eq!(
             served.load(Ordering::Relaxed),
-            2,
-            "one engine run served the three unbounded requests; the bounded \
-             duplicate ran alone"
+            1,
+            "one engine run served all five requests, bounded included"
         );
-        assert_eq!(pool.pool_coalesced(), 3);
-        assert!(pool.render_metrics().contains("erprm_pool_coalesced_total 3"));
+        assert_eq!(pool.pool_coalesced(), 4);
+        assert!(pool.render_metrics().contains("erprm_pool_coalesced_total 4"));
         // the table drained: a later request dispatches fresh
         let again = pool.solve_timed(request(), SearchConfig::default()).unwrap();
         assert_eq!(again.outcome.answer, Some(7));
-        assert_eq!(served.load(Ordering::Relaxed), 3);
+        assert_eq!(served.load(Ordering::Relaxed), 2);
         pool.shutdown();
+    }
+
+    #[test]
+    fn bounded_followers_abandon_on_their_own_deadline() {
+        // fake shard: slow enough that a tightly-bounded follower's
+        // budget expires mid-wait, fast enough for the unbounded leader
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let served = Arc::new(AtomicU64::new(0));
+        let served2 = Arc::clone(&served);
+        let join = std::thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Shutdown => break,
+                    Msg::Solve(job) => {
+                        served2.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(250));
+                        let _ = job
+                            .reply
+                            .send(Ok(Solved { outcome: outcome(7), queue_wait_ms: 1.0 }));
+                    }
+                }
+            }
+        });
+        let mut pool = fake_pool(vec![fake_shard(tx)], vec![join]);
+        enable_singleflight(&mut pool);
+        let leader = {
+            let p = pool.clone();
+            std::thread::spawn(move || p.solve_timed(request(), SearchConfig::default()))
+        };
+        std::thread::sleep(Duration::from_millis(40)); // leader holds the key
+        // the bounded duplicate joins, times out on its own budget, and
+        // 504s — without dispatching a second engine run and without
+        // disturbing the leader (its late send bounces off the abandoned
+        // channel)
+        let t0 = Instant::now();
+        let mut r = request();
+        r.deadline_ms = Some(50);
+        let fe = pool.solve_timed(r, SearchConfig::default()).unwrap_err();
+        assert_eq!(fe.http_status(), 504, "timed follower 504s on its own budget: {fe}");
+        assert!(t0.elapsed() < Duration::from_millis(200), "bounded wait, not the leader's");
+        let lead = leader.join().unwrap().expect("leader unaffected by the abandon");
+        assert_eq!(lead.outcome.answer, Some(7));
+        assert_eq!(served.load(Ordering::Relaxed), 1, "the follower never dispatched");
+        assert_eq!(pool.pool_coalesced(), 1);
+        // a bounded request with no leader in flight never *leads*: it
+        // dispatches solo and leaves no table entry behind for others
+        let mut r2 = request();
+        r2.deadline_ms = Some(60_000);
+        let solo = pool.solve_timed(r2, SearchConfig::default()).unwrap();
+        assert_eq!(solo.outcome.answer, Some(7));
+        assert_eq!(served.load(Ordering::Relaxed), 2);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn tau_plans_freeze_against_the_table_epoch() {
+        use crate::obs::CalibOptions;
+        let (tx, _rx) = mpsc::channel::<Msg>();
+        let mut pool = fake_pool(vec![fake_shard(tx)], Vec::new());
+        let req = request();
+        let mut cfg = SearchConfig::default();
+        cfg.mode = SearchMode::EarlyRejection;
+        cfg.tau = req.tau;
+        // controller off (default): no plan — the exact pre-controller path
+        assert!(pool.resolve_tau_plan(&req, &cfg).is_none());
+        // controller on over an empty table: a static fallback plan
+        let inner = Arc::get_mut(&mut pool.inner).unwrap();
+        inner.tracer = Arc::new(TraceRecorder::new(TraceOptions {
+            calib: CalibOptions { adaptive: true, shadow_rate: 0.0, ..Default::default() },
+            ..Default::default()
+        }));
+        let p1 = pool.resolve_tau_plan(&req, &cfg).expect("adaptive ER request gets a plan");
+        let p2 = pool.resolve_tau_plan(&req, &cfg).expect("and again");
+        assert_eq!(*p1, *p2, "same request against the same epoch freezes the same plan");
+        assert!(p1.is_static(), "a thin table falls back to the static tau everywhere");
+        assert_eq!(p1.base, req.tau);
+        assert_eq!(p1.epoch, 0);
+        assert!(!p1.shadow, "shadow_rate 0 never draws a shadow");
+        // vanilla requests never get a plan even with the controller on
+        let mut vcfg = cfg.clone();
+        vcfg.mode = SearchMode::Vanilla;
+        assert!(pool.resolve_tau_plan(&req, &vcfg).is_none());
+        // the resolves were counted in the ledger
+        let doc = crate::util::json::Json::parse(&pool.calibration_json()).unwrap();
+        let regret = doc.get("regret").unwrap();
+        assert_eq!(
+            regret.get("adaptive_requests").and_then(crate::util::json::Json::as_f64),
+            Some(2.0)
+        );
     }
 
     #[test]

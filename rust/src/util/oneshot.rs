@@ -9,6 +9,7 @@
 //! [`Sender::is_closed`] observable at any time.
 
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 struct State<T> {
     value: Option<T>,
@@ -34,6 +35,19 @@ pub struct Receiver<T> {
 /// The sender hung up without delivering a value.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RecvError;
+
+/// Why a timed receive returned without a value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// The budget ran out with the sender still live. `recv_timeout`
+    /// consumes the receiver, so returning this *is* the abandon: the
+    /// channel is marked hung-up and a later `send` hands the value back
+    /// to the sender harmlessly — the abandon-and-504 path for
+    /// deadline-bounded single-flight followers.
+    Timeout,
+    /// The sender dropped without delivering a value.
+    Disconnected,
+}
 
 pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
     let inner = Arc::new(Inner {
@@ -86,6 +100,28 @@ impl<T> Receiver<T> {
             st = self.inner.cv.wait(st).unwrap();
         }
     }
+
+    /// Block until the value arrives or `budget` elapses. Consumes the
+    /// receiver either way; on `Timeout` the implied drop is the abandon
+    /// signal the sender observes via [`Sender::is_closed`] / a failed
+    /// `send`.
+    pub fn recv_timeout(self, budget: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + budget;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.value.take() {
+                return Ok(v);
+            }
+            if st.sender_gone {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            st = self.inner.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
 }
 
 impl<T> Drop for Receiver<T> {
@@ -130,6 +166,50 @@ mod tests {
         });
         assert_eq!(rx.recv(), Ok("done"));
         j.join().unwrap();
+    }
+
+    #[test]
+    fn recv_timeout_delivers_value_or_times_out() {
+        let (tx, rx) = channel();
+        tx.send(9).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(1)), Ok(9));
+
+        let (tx, rx) = channel::<i32>();
+        let t0 = Instant::now();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(30)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        drop(tx);
+    }
+
+    #[test]
+    fn recv_timeout_sees_sender_hangup() {
+        let (tx, rx) = channel::<i32>();
+        let j = std::thread::spawn(move || rx.recv_timeout(Duration::from_secs(5)));
+        drop(tx);
+        assert_eq!(j.join().unwrap(), Err(RecvTimeoutError::Disconnected));
+    }
+
+    #[test]
+    fn abandon_after_timeout_bounces_the_late_send() {
+        // the single-flight follower contract: timeout, drop the
+        // receiver, and the leader's eventual send must fail cleanly
+        let (tx, rx) = channel::<i32>();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(5)), Err(RecvTimeoutError::Timeout));
+        // receiver consumed by recv_timeout -> dropped -> hang-up visible
+        assert!(tx.is_closed());
+        assert_eq!(tx.send(42), Err(42));
+    }
+
+    #[test]
+    fn recv_timeout_wakes_on_late_send() {
+        let (tx, rx) = channel();
+        let j = std::thread::spawn(move || rx.recv_timeout(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        tx.send("late").unwrap();
+        assert_eq!(j.join().unwrap(), Ok("late"));
     }
 
     #[test]

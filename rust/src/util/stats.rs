@@ -1,8 +1,12 @@
-//! Statistics toolkit: moments, quantiles, correlations, OLS, histograms.
+//! Statistics toolkit: moments, quantiles, correlations, OLS, histograms,
+//! and incremental (streaming) correlation kernels.
 //!
 //! Used by the correlation studies (Fig. 2 / Fig. 4 reproduce Pearson,
-//! Kendall tau and an R² linear fit), the theory validation (Sec. 4), and
-//! the latency metrics of the server.
+//! Kendall tau and an R² linear fit), the theory validation (Sec. 4), the
+//! latency metrics of the server, and the online calibration observatory
+//! (`obs::calibration`), which streams partial↔final reward pairs through
+//! [`StreamingPearson`] / [`StreamingKendall`] one finished request at a
+//! time.
 
 /// Arithmetic mean; 0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -159,6 +163,172 @@ pub fn ols(xs: &[f64], ys: &[f64]) -> OlsFit {
     OlsFit { intercept, slope, r2 }
 }
 
+/// Incremental Pearson correlation (Welford co-moment form).
+///
+/// One `push` per (x, y) pair keeps running means and centered second
+/// moments; `corr()` is available at any point without revisiting the
+/// stream. `merge` combines two accumulators (parallel shards) exactly.
+/// The batch [`pearson`] and this kernel agree to floating-point noise on
+/// the same corpus (cross-checked in the tests and in
+/// `harness::correlation`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamingPearson {
+    n: u64,
+    mean_x: f64,
+    mean_y: f64,
+    m2x: f64,
+    m2y: f64,
+    cxy: f64,
+}
+
+impl StreamingPearson {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.n += 1;
+        let n = self.n as f64;
+        let dx = x - self.mean_x;
+        self.mean_x += dx / n;
+        let dy = y - self.mean_y;
+        self.mean_y += dy / n;
+        let dy2 = y - self.mean_y;
+        self.m2x += dx * (x - self.mean_x);
+        self.m2y += dy * dy2;
+        self.cxy += dx * dy2;
+    }
+
+    /// Pearson r; 0 when degenerate (n < 2 or a constant margin), matching
+    /// the batch [`pearson`] convention.
+    pub fn corr(&self) -> f64 {
+        if self.n < 2 || self.m2x <= 0.0 || self.m2y <= 0.0 {
+            return 0.0;
+        }
+        self.cxy / (self.m2x.sqrt() * self.m2y.sqrt())
+    }
+
+    /// Fisher-z lower confidence bound on r at critical value `z`
+    /// (1.96 ≈ 95%). Returns -1 when n < 4 (the transform needs n-3 > 0),
+    /// i.e. "no evidence" — callers gating on a confidence floor treat it
+    /// as not proven.
+    pub fn corr_lower(&self, z: f64) -> f64 {
+        if self.n < 4 {
+            return -1.0;
+        }
+        let r = self.corr().clamp(-0.999_999, 0.999_999);
+        let zr = r.atanh() - z / ((self.n - 3) as f64).sqrt();
+        zr.tanh()
+    }
+
+    /// Exact parallel combine (Chan et al. pairwise update).
+    pub fn merge(&mut self, o: &Self) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, o.n as f64);
+        let n = na + nb;
+        let dx = o.mean_x - self.mean_x;
+        let dy = o.mean_y - self.mean_y;
+        self.m2x += o.m2x + dx * dx * na * nb / n;
+        self.m2y += o.m2y + dy * dy * na * nb / n;
+        self.cxy += o.cxy + dx * dy * na * nb / n;
+        self.mean_x += dx * nb / n;
+        self.mean_y += dy * nb / n;
+        self.n += o.n;
+    }
+}
+
+/// Incremental Kendall tau-b over a seed-stable bounded reservoir.
+///
+/// Exact concordance needs all pairs, so the stream is sketched: the first
+/// `cap` samples are kept verbatim, after which each arrival replaces a
+/// reservoir slot with the classic `j = mix(seed, i) % i` rule — a pure
+/// function of (seed, arrival index), so the sketch is deterministic for a
+/// given stream order and byte-identical across process restarts. While
+/// the stream fits the reservoir (`seen <= cap`) `corr()` equals the batch
+/// [`kendall_tau`] exactly. The O(cap²) recompute is lazy and cached.
+#[derive(Debug, Clone)]
+pub struct StreamingKendall {
+    cap: usize,
+    seed: u64,
+    seen: u64,
+    buf: Vec<(f64, f64)>,
+    dirty: bool,
+    cached: f64,
+}
+
+/// SplitMix64 finalizer: a cheap, seed-stable bijection used for the
+/// Kendall reservoir's eviction draw and the adaptive-tau controller's
+/// deterministic shadow-sampling decision (a pure function of the
+/// request key and table epoch, so coalesced duplicates agree).
+pub(crate) fn mix64(mut x: u64) -> u64 {
+    // splitmix64 finalizer
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl StreamingKendall {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        StreamingKendall {
+            cap: cap.max(2),
+            seed,
+            seen: 0,
+            buf: Vec::new(),
+            dirty: false,
+            cached: 0.0,
+        }
+    }
+
+    /// Total samples offered (not the reservoir occupancy).
+    pub fn len(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.seen += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push((x, y));
+            self.dirty = true;
+        } else {
+            let j = (mix64(self.seed ^ self.seen) % self.seen) as usize;
+            if j < self.cap {
+                self.buf[j] = (x, y);
+                self.dirty = true;
+            }
+        }
+    }
+
+    /// Kendall tau-b of the reservoir contents.
+    pub fn corr(&mut self) -> f64 {
+        if self.dirty {
+            let xs: Vec<f64> = self.buf.iter().map(|p| p.0).collect();
+            let ys: Vec<f64> = self.buf.iter().map(|p| p.1).collect();
+            self.cached = kendall_tau(&xs, &ys);
+            self.dirty = false;
+        }
+        self.cached
+    }
+}
+
 /// Fixed-bin histogram over [lo, hi).
 #[derive(Debug, Clone)]
 pub struct Histogram {
@@ -297,6 +467,111 @@ mod tests {
         assert!((h.mean() - 4.95).abs() < 1e-9);
         let p50 = h.quantile(0.5);
         assert!((p50 - 4.5).abs() <= 1.0, "p50 {p50}");
+    }
+
+    fn corpus(seed: u64, n: usize) -> (Vec<f64>, Vec<f64>) {
+        // deterministic noisy-linear corpus with ties in both margins
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        let mut s = seed;
+        for i in 0..n {
+            s = super::mix64(s ^ i as u64);
+            let x = ((s % 17) as f64) / 16.0;
+            let y = x * 0.7 + ((s >> 32) % 13) as f64 / 13.0 * 0.4;
+            xs.push(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn streaming_pearson_matches_batch() {
+        let (xs, ys) = corpus(42, 257);
+        let mut sp = StreamingPearson::new();
+        for i in 0..xs.len() {
+            sp.push(xs[i], ys[i]);
+        }
+        assert_eq!(sp.len(), 257);
+        assert!((sp.corr() - pearson(&xs, &ys)).abs() < 1e-12, "{} vs {}", sp.corr(), pearson(&xs, &ys));
+    }
+
+    #[test]
+    fn streaming_pearson_degenerate_margins_are_zero() {
+        let mut sp = StreamingPearson::new();
+        sp.push(1.0, 2.0);
+        assert_eq!(sp.corr(), 0.0, "n < 2");
+        sp.push(1.0, 5.0); // constant x margin
+        assert_eq!(sp.corr(), 0.0);
+        assert_eq!(sp.corr_lower(1.96), -1.0, "n < 4 carries no evidence");
+    }
+
+    #[test]
+    fn streaming_pearson_merge_equals_single_pass() {
+        let (xs, ys) = corpus(7, 100);
+        let mut whole = StreamingPearson::new();
+        let mut a = StreamingPearson::new();
+        let mut b = StreamingPearson::new();
+        for i in 0..xs.len() {
+            whole.push(xs[i], ys[i]);
+            if i < 37 { a.push(xs[i], ys[i]) } else { b.push(xs[i], ys[i]) }
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), whole.len());
+        assert!((a.corr() - whole.corr()).abs() < 1e-12);
+        // merging into an empty accumulator is a copy
+        let mut e = StreamingPearson::new();
+        e.merge(&whole);
+        assert!((e.corr() - whole.corr()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn corr_lower_bound_tightens_with_samples() {
+        let mk = |n: usize| {
+            let mut sp = StreamingPearson::new();
+            let (xs, ys) = corpus(3, n);
+            for i in 0..n {
+                sp.push(xs[i], ys[i]);
+            }
+            sp
+        };
+        let small = mk(8);
+        let big = mk(512);
+        assert!(small.corr_lower(1.96) < small.corr());
+        assert!(big.corr_lower(1.96) < big.corr());
+        // same generator => similar r, but the bound closes in as n grows
+        assert!(
+            big.corr() - big.corr_lower(1.96) < small.corr() - small.corr_lower(1.96),
+            "wide at n=8, tight at n=512"
+        );
+    }
+
+    #[test]
+    fn streaming_kendall_exact_under_cap() {
+        let (xs, ys) = corpus(11, 64);
+        let mut sk = StreamingKendall::new(64, 9);
+        for i in 0..xs.len() {
+            sk.push(xs[i], ys[i]);
+        }
+        assert_eq!(sk.corr(), kendall_tau(&xs, &ys), "reservoir holds the full corpus");
+    }
+
+    #[test]
+    fn streaming_kendall_sketch_is_deterministic_and_bounded() {
+        let (xs, ys) = corpus(5, 400);
+        let run = || {
+            let mut sk = StreamingKendall::new(48, 123);
+            for i in 0..xs.len() {
+                sk.push(xs[i], ys[i]);
+            }
+            sk.corr()
+        };
+        let (t1, t2) = (run(), run());
+        assert_eq!(t1, t2, "same stream + seed => same sketch");
+        assert!(t1.abs() <= 1.0);
+        // the sketch still sees the positive association
+        assert!(t1 > 0.2, "tau {t1}");
+        let exact = kendall_tau(&xs, &ys);
+        assert!((t1 - exact).abs() < 0.35, "sketch {t1} vs exact {exact}");
     }
 
     #[test]

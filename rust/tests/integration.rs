@@ -709,6 +709,7 @@ fn fleet_cancels_abandoned_requests() {
             prm: "prm-large".into(),
             cfg: cfg(SearchMode::EarlyRejection, 8, 8),
             temp: 0.5,
+            tau_plan: None,
         },
         key: None,
         enqueued: std::time::Instant::now(),
@@ -765,6 +766,7 @@ fn fleet_rejects_doomed_deadlines_at_admission() {
         prm: "prm-large".into(),
         cfg: cfg(SearchMode::EarlyRejection, 8, 8),
         temp: 0.5,
+        tau_plan: None,
     };
     let mk = |deadline: Option<std::time::Duration>| {
         let (tx, rx) = erprm::util::oneshot::channel();
@@ -1359,6 +1361,7 @@ fn tracing_on_and_off_solve_byte_identically() {
             success_rate: 0.0,
             ..erprm::obs::SamplePolicy::default()
         },
+        ..erprm::obs::TraceOptions::default()
     });
     assert_eq!(on.answer, off.answer, "tracing changed the answer");
     assert_eq!(on.best_trace, off.best_trace, "tracing perturbed the search");
@@ -1458,4 +1461,129 @@ fn trace_endpoints_serve_lifecycle_and_chrome_export() {
 
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     epool.shutdown();
+}
+
+// ------------------------------------------------------- calibration
+
+// The calibration observatory streams partial↔final reward pairs out of
+// every traced ER solve: after a couple of requests GET /calibration
+// serves a per-(checkpoint, depth-bucket) table with sample counts, and
+// the erprm_calib_* family keeps the full /metrics page
+// exposition-valid.
+#[test]
+fn calibration_endpoint_streams_partials_and_metrics_stay_valid() {
+    let Some(dir) = artifacts() else { return };
+    let epool = fleet_pool(dir, 1, 2, 0);
+    let metrics = std::sync::Arc::new(Metrics::default());
+    let tpool = ThreadPool::new(4);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let p2 = epool.clone();
+    let m2 = std::sync::Arc::clone(&metrics);
+    let addr = http::serve(
+        "127.0.0.1:0",
+        &tpool,
+        1 << 20,
+        std::sync::Arc::clone(&stop),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), req)),
+    )
+    .unwrap();
+    let bodies: [&[u8]; 2] = [
+        solve_body(),
+        br#"{"v0": 47, "ops": [["+",9],["*",3],["-",6]], "mode": "er", "n_beams": 8, "tau": 8}"#,
+    ];
+    for body in bodies {
+        let req = format!(
+            "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            std::str::from_utf8(body).unwrap()
+        );
+        let out = http_get(addr, req.as_bytes());
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+    }
+
+    let cal_out = http_get(addr, b"GET /calibration HTTP/1.1\r\n\r\n");
+    assert!(cal_out.starts_with("HTTP/1.1 200"), "{cal_out}");
+    let cal_body = cal_out.split("\r\n\r\n").nth(1).expect("calibration body");
+    let cj = erprm::util::json::Json::parse(cal_body).expect("calibration JSON must parse");
+    let num = |v: &erprm::util::json::Json, k: &str| {
+        v.get(k).and_then(erprm::util::json::Json::as_f64).unwrap_or_else(|| panic!("{k} missing: {cal_body}"))
+    };
+    assert!(num(&cj, "epoch") >= 1.0, "two finished ER solves must bump the epoch: {cal_body}");
+    assert!(num(&cj, "samples_total") >= 1.0, "no partial↔final pairs streamed: {cal_body}");
+    match cj.get("buckets") {
+        Some(erprm::util::json::Json::Arr(buckets)) => {
+            assert!(!buckets.is_empty(), "table has samples but no buckets: {cal_body}");
+            let b = &buckets[0];
+            assert_eq!(
+                b.get("ckpt").and_then(erprm::util::json::Json::as_str),
+                Some("prm-large")
+            );
+            assert!(num(b, "samples") >= 1.0, "{cal_body}");
+            for k in ["depth_bucket", "pearson", "conf_low"] {
+                assert!(b.get(k).is_some(), "bucket field '{k}' missing: {cal_body}");
+            }
+        }
+        other => panic!("buckets must be an array, got {other:?}"),
+    }
+
+    let metrics_out = http_get(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+    let metrics_body = metrics_out.split("\r\n\r\n").nth(1).expect("metrics body");
+    erprm::obs::check_exposition(metrics_body)
+        .expect("/metrics with calib gauges must stay exposition-valid");
+    for fam in ["erprm_calib_epoch", "erprm_calib_samples", "erprm_calib_corr"] {
+        assert!(metrics_body.contains(fam), "metric family '{fam}' missing");
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    epool.shutdown();
+}
+
+// Closing the loop must not perturb anything until the table holds
+// evidence: on a thin (empty) table the adaptive controller's plan
+// degenerates to the static cfg.tau, so an adaptive-on pool and a
+// controller-off pool must solve byte-identically — and adaptive runs
+// must repeat byte-identically (the per-request plan is frozen against
+// the table epoch, never mid-flight state).
+#[test]
+fn adaptive_tau_on_a_thin_table_matches_static_byte_for_byte() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = SearchConfig::default();
+    let solve_with = |calib: erprm::obs::CalibOptions| {
+        let epool = EnginePool::spawn_with(
+            dir.clone(),
+            PoolOptions {
+                shards: 1,
+                capacity: 8,
+                cache_entries: 0,
+                default_deadline_ms: 0,
+                fleet: None,
+                singleflight: false,
+                kv_pool_blocks: None,
+                trace: erprm::obs::TraceOptions {
+                    calib,
+                    ..erprm::obs::TraceOptions::default()
+                },
+            },
+        )
+        .expect("pool spawn");
+        let req = api::parse_solve(solve_body(), &cfg).unwrap();
+        let out = epool.solve(req, cfg.clone()).unwrap();
+        epool.shutdown();
+        out
+    };
+    let adaptive = erprm::obs::CalibOptions {
+        adaptive: true,
+        shadow_rate: 0.0,
+        ..erprm::obs::CalibOptions::default()
+    };
+    let a1 = solve_with(adaptive);
+    let a2 = solve_with(adaptive);
+    let s = solve_with(erprm::obs::CalibOptions::default());
+    assert_eq!(a1.answer, s.answer, "an evidence-free controller changed the answer");
+    assert_eq!(a1.best_trace, s.best_trace, "an evidence-free controller steered the search");
+    assert_eq!(a1.ledger, s.ledger, "an evidence-free controller perturbed FLOPs accounting");
+    assert_eq!(a1.steps_executed, s.steps_executed);
+    assert_eq!(a1.best_trace, a2.best_trace, "adaptive repeats must be byte-identical");
+    assert_eq!(a1.ledger, a2.ledger, "adaptive repeats must be byte-identical");
+    assert_eq!(a1.answer, a2.answer);
 }
