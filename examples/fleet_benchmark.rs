@@ -147,6 +147,7 @@ fn run_mode(
             singleflight: false,
             kv_pool_blocks,
             trace,
+            ..PoolOptions::default()
         },
     )?;
     let client_pool = ThreadPool::new(clients);
@@ -433,6 +434,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 singleflight: false,
                 kv_pool_blocks: Some(0),
                 trace: TraceOptions { calib, ..topts },
+                ..PoolOptions::default()
             },
         )?;
         let client_pool = ThreadPool::new(clients);

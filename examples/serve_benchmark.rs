@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use erprm::config::SearchConfig;
-use erprm::server::{http, metrics::Metrics, route, router::EnginePool};
+use erprm::server::{http, metrics::Metrics, route, router::EnginePool, Lifecycle};
 use erprm::tokenizer as tk;
 use erprm::util::cli::Args;
 use erprm::util::json::Json;
@@ -83,12 +83,13 @@ fn run_once(
     let p2 = pool.clone();
     let m2 = Arc::clone(&metrics);
     let d2 = defaults.clone();
+    let l2 = Lifecycle::new();
     let addr = http::serve(
         "127.0.0.1:0",
         &http_pool,
         1 << 20,
         Arc::clone(&stop),
-        Arc::new(move |req| route(&p2, &m2, &d2, req)),
+        Arc::new(move |req| route(&p2, &m2, &d2, &l2, req)),
     )?;
 
     let client_pool = ThreadPool::new(clients);

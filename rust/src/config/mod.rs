@@ -224,6 +224,24 @@ pub struct ServerConfig {
     /// table always streams; `calib.adaptive` additionally lets the
     /// router shave per-depth taus where the table has proven itself.
     pub calib: CalibOptions,
+    /// Graceful-drain budget: after SIGTERM or `POST /admin/drain`, how
+    /// long the serve loop waits for in-flight work before shutting the
+    /// pool down anyway.
+    pub drain_deadline_ms: u64,
+    /// Transparent retry attempts per request for retryable failures
+    /// (shard death mid-solve); 1 disables retry.
+    pub retry_max_attempts: u32,
+    /// First retry backoff in ms (doubles per attempt, jittered).
+    pub retry_base_ms: u64,
+    /// Backoff growth ceiling in ms.
+    pub retry_cap_ms: u64,
+    /// Also retry `Saturated` admissions inside the request's own
+    /// deadline budget (off by default: 503 + Retry-After pushes the
+    /// wait to the client, which is usually the right backpressure).
+    pub retry_saturated: bool,
+    /// Supervisor wedge threshold: a shard with queued work whose
+    /// heartbeat is older than this is declared lost and respawned.
+    pub supervise_stale_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -244,6 +262,12 @@ impl Default for ServerConfig {
             trace_capacity: 256,
             trace_sample: 1.0,
             calib: CalibOptions::default(),
+            drain_deadline_ms: 10_000,
+            retry_max_attempts: 3,
+            retry_base_ms: 25,
+            retry_cap_ms: 1000,
+            retry_saturated: false,
+            supervise_stale_ms: 10_000,
         }
     }
 }
@@ -389,6 +413,24 @@ impl Config {
             if let Some(n) = s.get("calib_depth_buckets").and_then(Json::as_usize) {
                 cfg.server.calib.depth_buckets = n.max(1);
             }
+            if let Some(n) = s.get("drain_deadline_ms").and_then(Json::as_i64) {
+                cfg.server.drain_deadline_ms = n.max(0) as u64;
+            }
+            if let Some(n) = s.get("retry_max_attempts").and_then(Json::as_i64) {
+                cfg.server.retry_max_attempts = n.max(1) as u32;
+            }
+            if let Some(n) = s.get("retry_base_ms").and_then(Json::as_i64) {
+                cfg.server.retry_base_ms = n.max(1) as u64;
+            }
+            if let Some(n) = s.get("retry_cap_ms").and_then(Json::as_i64) {
+                cfg.server.retry_cap_ms = n.max(1) as u64;
+            }
+            if let Some(b) = s.get("retry_saturated").and_then(Json::as_bool) {
+                cfg.server.retry_saturated = b;
+            }
+            if let Some(n) = s.get("supervise_stale_ms").and_then(Json::as_i64) {
+                cfg.server.supervise_stale_ms = n.max(1) as u64;
+            }
         }
         cfg.search.validate()?;
         Ok(cfg)
@@ -423,6 +465,42 @@ mod tests {
         assert_eq!(c.search.n_beams, 32);
         assert_eq!(c.search.tau, 16);
         assert_eq!(c.server.addr, "0.0.0.0:9000");
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_default_and_parse() {
+        let d = ServerConfig::default();
+        assert_eq!(d.drain_deadline_ms, 10_000);
+        assert_eq!(d.retry_max_attempts, 3);
+        assert_eq!(d.retry_base_ms, 25);
+        assert_eq!(d.retry_cap_ms, 1000);
+        assert!(!d.retry_saturated);
+        assert_eq!(d.supervise_stale_ms, 10_000);
+
+        let j = Json::parse(
+            r#"{"server": {"drain_deadline_ms": 2500, "retry_max_attempts": 5,
+                "retry_base_ms": 10, "retry_cap_ms": 200, "retry_saturated": true,
+                "supervise_stale_ms": 3000}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.server.drain_deadline_ms, 2500);
+        assert_eq!(c.server.retry_max_attempts, 5);
+        assert_eq!(c.server.retry_base_ms, 10);
+        assert_eq!(c.server.retry_cap_ms, 200);
+        assert!(c.server.retry_saturated);
+        assert_eq!(c.server.supervise_stale_ms, 3000);
+
+        // floors: zero attempts/backoffs are configuration mistakes
+        let j = Json::parse(
+            r#"{"server": {"retry_max_attempts": 0, "retry_base_ms": 0,
+                "supervise_stale_ms": 0}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.server.retry_max_attempts, 1, "clamped to at least one attempt");
+        assert_eq!(c.server.retry_base_ms, 1);
+        assert_eq!(c.server.supervise_stale_ms, 1);
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Deterministic fault injection for the shard fleet.
+//!
+//! The supervision/retry stack can only be trusted if its failure paths
+//! are *exercised*, and the repo's signature invariant — byte-identical
+//! answers for a fixed (problem, config, seed) — can only be proven to
+//! survive recovery if the faults themselves are reproducible. So chaos
+//! here is not random: every injection decision is a pure function of
+//! `(seed, shard index, tick counter)` through the same SplitMix64
+//! finalizer the controller uses for shadow sampling. Re-running a
+//! chaos-enabled workload with the same seed injects the same panics at
+//! the same ticks; the acceptance test then asserts the answers match
+//! the chaos-off run bit for bit.
+//!
+//! Tick counters are *persistent per shard slot* (they live on the
+//! supervisor's slot state, not the thread): a respawned shard resumes
+//! the schedule where its predecessor died instead of replaying tick 0,
+//! which would otherwise re-inject the same panic forever (a crash-loop
+//! livelock). Injection caps (`max_panics`, `max_stalls`) are enforced
+//! with CAS so tests terminate even with aggressive probabilities.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::stats::mix64;
+
+/// Knob family behind `--chaos-*`. All-zero (the default) disables
+/// injection entirely — `enabled()` gates every draw.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosOptions {
+    /// Seed for the injection schedule; same seed → same faults.
+    pub seed: u64,
+    /// Probability in [0,1] that a given shard tick panics.
+    pub panic_per_tick: f64,
+    /// Cap on total injected panics (0 = unlimited).
+    pub max_panics: u64,
+    /// Probability in [0,1] that a given shard tick stalls (sleeps) —
+    /// simulates a wedged engine call for heartbeat-staleness testing.
+    pub stall_per_tick: f64,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Cap on total injected stalls (0 = unlimited).
+    pub max_stalls: u64,
+    /// If set, this shard index runs slow: every tick sleeps `slow_ms`.
+    pub slow_shard: Option<usize>,
+    /// Per-tick sleep for the slow shard, in milliseconds.
+    pub slow_ms: u64,
+}
+
+impl ChaosOptions {
+    pub fn enabled(&self) -> bool {
+        self.panic_per_tick > 0.0 || self.stall_per_tick > 0.0 || self.slow_shard.is_some()
+    }
+}
+
+/// What a chaos draw decided for this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Proceed normally.
+    None,
+    /// Panic the shard thread (the supervisor must recover).
+    Panic,
+    /// Sleep for the given duration before proceeding (wedge/slow-shard
+    /// simulation).
+    Stall(Duration),
+}
+
+/// Shared injection state: options plus CAS-guarded injection counters,
+/// held in an `Arc` by every shard body and the pool (for `/metrics`).
+#[derive(Debug)]
+pub struct ChaosState {
+    opts: ChaosOptions,
+    panics: AtomicU64,
+    stalls: AtomicU64,
+}
+
+/// Map a mixed draw to a uniform float in [0, 1).
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl ChaosState {
+    pub fn new(opts: ChaosOptions) -> Self {
+        ChaosState { opts, panics: AtomicU64::new(0), stalls: AtomicU64::new(0) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.opts.enabled()
+    }
+
+    /// Total panics injected so far.
+    pub fn panics_injected(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Total stalls injected so far.
+    pub fn stalls_injected(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Seed-stable per-(shard, tick, salt) draw in [0, 1).
+    fn draw(&self, shard: usize, tick: u64, salt: u64) -> f64 {
+        let x = self
+            .opts
+            .seed
+            .wrapping_add((shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(tick.wrapping_mul(0xD1B5_4A32_D192_ED03))
+            .wrapping_add(salt);
+        unit(mix64(x))
+    }
+
+    /// Try to consume one slot under `cap` (0 = unlimited); false once
+    /// the cap is reached.
+    fn consume(counter: &AtomicU64, cap: u64) -> bool {
+        counter
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                if cap != 0 && n >= cap {
+                    None
+                } else {
+                    Some(n + 1)
+                }
+            })
+            .is_ok()
+    }
+
+    /// Decide this tick's fate for `shard`. Panic draws are evaluated
+    /// before stall draws so a given (seed, shard, tick) always resolves
+    /// the same way regardless of cap state elsewhere.
+    pub fn tick(&self, shard: usize, tick: u64) -> ChaosAction {
+        if self.opts.panic_per_tick > 0.0
+            && self.draw(shard, tick, 0x70_61_6e_69_63) < self.opts.panic_per_tick
+            && Self::consume(&self.panics, self.opts.max_panics)
+        {
+            return ChaosAction::Panic;
+        }
+        if self.opts.stall_per_tick > 0.0
+            && self.draw(shard, tick, 0x73_74_61_6c_6c) < self.opts.stall_per_tick
+            && Self::consume(&self.stalls, self.opts.max_stalls)
+        {
+            return ChaosAction::Stall(Duration::from_millis(self.opts.stall_ms));
+        }
+        if self.opts.slow_shard == Some(shard) && self.opts.slow_ms > 0 {
+            return ChaosAction::Stall(Duration::from_millis(self.opts.slow_ms));
+        }
+        ChaosAction::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(panic_p: f64, stall_p: f64) -> ChaosOptions {
+        ChaosOptions {
+            seed: 42,
+            panic_per_tick: panic_p,
+            stall_per_tick: stall_p,
+            stall_ms: 7,
+            ..ChaosOptions::default()
+        }
+    }
+
+    #[test]
+    fn default_is_disabled_and_inert() {
+        let st = ChaosState::new(ChaosOptions::default());
+        assert!(!st.enabled());
+        for tick in 0..1000 {
+            assert_eq!(st.tick(0, tick), ChaosAction::None);
+        }
+        assert_eq!(st.panics_injected(), 0);
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_shard_tick() {
+        let a = ChaosState::new(opts(0.1, 0.1));
+        let b = ChaosState::new(opts(0.1, 0.1));
+        for shard in 0..3 {
+            for tick in 0..500 {
+                assert_eq!(a.tick(shard, tick), b.tick(shard, tick), "shard {shard} tick {tick}");
+            }
+        }
+        let other_seed =
+            ChaosState::new(ChaosOptions { seed: 43, ..opts(0.1, 0.1) });
+        let same = (0..500).filter(|&t| a.tick(9, t) == other_seed.tick(9, t)).count();
+        assert!(same < 500, "a different seed must change the schedule");
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let st = ChaosState::new(opts(0.2, 0.0));
+        let panics = (0..5000).filter(|&t| st.tick(1, t) == ChaosAction::Panic).count();
+        assert!((600..1400).contains(&panics), "~20% of 5000, got {panics}");
+        assert_eq!(st.panics_injected() as usize, panics);
+    }
+
+    #[test]
+    fn caps_bound_injection_counts() {
+        let st = ChaosState::new(ChaosOptions {
+            max_panics: 3,
+            max_stalls: 2,
+            ..opts(1.0, 1.0)
+        });
+        let mut panics = 0;
+        let mut stalls = 0;
+        for tick in 0..100 {
+            match st.tick(0, tick) {
+                ChaosAction::Panic => panics += 1,
+                ChaosAction::Stall(_) => stalls += 1,
+                ChaosAction::None => {}
+            }
+        }
+        assert_eq!(panics, 3, "panic cap respected");
+        assert_eq!(stalls, 2, "stall cap respected");
+        assert_eq!(st.panics_injected(), 3);
+        assert_eq!(st.stalls_injected(), 2);
+    }
+
+    #[test]
+    fn slow_shard_stalls_only_that_shard() {
+        let st = ChaosState::new(ChaosOptions {
+            slow_shard: Some(1),
+            slow_ms: 9,
+            ..ChaosOptions::default()
+        });
+        assert!(st.enabled());
+        assert_eq!(st.tick(0, 0), ChaosAction::None);
+        assert_eq!(st.tick(1, 0), ChaosAction::Stall(Duration::from_millis(9)));
+    }
+}

@@ -43,14 +43,16 @@
 //! batching, not just time-slicing. An intent waits at most
 //! `gang_max_wait` rounds for partners before running solo.
 
+pub mod chaos;
 pub mod queue;
 pub mod shard;
 pub mod stats;
 
 use crate::coordinator::search::SolveOutcome;
 
+pub use chaos::{ChaosAction, ChaosOptions, ChaosState};
 pub use queue::{AdmissionQueue, FleetJob, TaskSpec};
-pub use shard::{drive, Poll};
+pub use shard::{drive, DriveHooks, NoHooks, Poll};
 pub use stats::{FleetStats, FleetTotals};
 
 /// A completed solve plus its scheduling telemetry. `queue_wait_ms` is

@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 
 use crate::batch::{self, BatchStats};
 use crate::coordinator::task::{IntentKind, Progress, SolveTask, Step};
+use crate::fleet::chaos::ChaosAction;
 use crate::fleet::queue::{admission_forecast_ms, AdmissionQueue, FleetJob, ReplyTx};
 use crate::fleet::stats::FleetStats;
 use crate::fleet::{FleetOptions, Solved};
@@ -51,6 +52,7 @@ use crate::obs::{PhaseFlops, TraceRecorder};
 use crate::runtime::{Engine, EngineStats};
 use crate::util::error::Error;
 use crate::util::logging;
+use crate::util::sync::lock_unpoisoned;
 
 /// One poll of the shard's message source.
 pub enum Poll {
@@ -64,6 +66,35 @@ pub enum Poll {
     /// The channel is gone; exit after draining in-flight work.
     Closed,
 }
+
+/// Supervision hooks the drive loop consults once per scheduler round.
+/// The pool supervisor's heartbeat/retirement/chaos plumbing implements
+/// this; standalone callers (benchmarks, tests) use [`NoHooks`]. This is
+/// also the seam the ROADMAP's router tier reuses: a shard driven over a
+/// remote transport supplies hooks that report pod liveness instead of
+/// thread liveness.
+pub trait DriveHooks {
+    /// Record liveness for this round (the supervisor's wedge detector
+    /// reads it). Called at the top of every round, including idle ones.
+    fn beat(&self) {}
+    /// True once this shard generation has been retired (the supervisor
+    /// respawned the shard after declaring it wedged). The loop exits
+    /// immediately, dropping its state: every job still attached was
+    /// already requeued or failed by the supervisor, and any late reply
+    /// from this zombie would bounce off an abandoned channel.
+    fn retired(&self) -> bool {
+        false
+    }
+    /// Deterministic fault-injection draw for this round.
+    fn chaos_tick(&self) -> ChaosAction {
+        ChaosAction::None
+    }
+}
+
+/// No supervision: never retired, no heartbeats, no chaos.
+pub struct NoHooks;
+
+impl DriveHooks for NoHooks {}
 
 /// One request attached to a running task (the admitting job or a
 /// coalesced duplicate).
@@ -141,6 +172,7 @@ pub fn drive(
     engine_stats: &Mutex<EngineStats>,
     shard: usize,
     tracer: &TraceRecorder,
+    hooks: &dyn DriveHooks,
     mut poll: impl FnMut(bool) -> Poll,
 ) {
     let n_slots = opts.max_inflight.max(1);
@@ -154,6 +186,20 @@ pub fn drive(
     let mut completed_n = 0u64;
 
     loop {
+        // ---- 0. supervision: heartbeat, retirement, fault injection.
+        // The beat fires on idle rounds too (the blocking poll below is
+        // bounded by the mailbox's recv timeout), so a live-but-idle
+        // shard never looks wedged.
+        hooks.beat();
+        if hooks.retired() {
+            break;
+        }
+        match hooks.chaos_tick() {
+            ChaosAction::Panic => panic!("chaos: injected shard panic (shard {shard})"),
+            ChaosAction::Stall(d) => std::thread::sleep(d),
+            ChaosAction::None => {}
+        }
+
         // ---- 1. ingest
         if inflight == 0 && queue.is_empty() {
             if shutdown {
@@ -394,7 +440,7 @@ pub fn drive(
                     let r = slots[idx].take().expect("checked occupied");
                     inflight -= 1;
                     stats.failed_total.fetch_add(1, Ordering::Relaxed);
-                    *engine_stats.lock().unwrap() = engine.stats();
+                    *lock_unpoisoned(engine_stats) = engine.stats();
                     log_error!("fleet task failed in state '{}': {e}", r.task.state_name());
                     reply_error_traced(r, e, tracer);
                 }
@@ -505,7 +551,7 @@ fn finish_task(
     tracer: &TraceRecorder,
 ) {
     solved.fetch_add(1, Ordering::Relaxed);
-    *engine_stats.lock().unwrap() = engine.stats();
+    *lock_unpoisoned(engine_stats) = engine.stats();
     let service_ms = r.admitted_at.elapsed().as_secs_f64() * 1000.0;
     *completed_n += 1;
     *mean_service_ms += (service_ms - *mean_service_ms) / *completed_n as f64;
@@ -660,7 +706,7 @@ fn dispatch_gangs(
                     }
                 }
             }
-            *engine_stats.lock().unwrap() = engine.stats();
+            *lock_unpoisoned(engine_stats) = engine.stats();
         }
         // leftovers: solo once they waited max_wait rounds, or when no
         // partner can exist (the task is alone in the slot table)
@@ -703,7 +749,7 @@ fn solo_execute(
             let r = slots[slot].take().expect("checked occupied");
             *inflight -= 1;
             stats.failed_total.fetch_add(1, Ordering::Relaxed);
-            *engine_stats.lock().unwrap() = engine.stats();
+            *lock_unpoisoned(engine_stats) = engine.stats();
             log_error!("fleet task failed in state '{}': {e}", r.task.state_name());
             reply_error_traced(r, e, tracer);
             false

@@ -18,11 +18,14 @@ use std::sync::Arc;
 
 use erprm::config::{SearchConfig, SearchMode, ServerConfig};
 use erprm::coordinator::{solve_early_rejection, solve_vanilla};
-use erprm::fleet::FleetOptions;
+use erprm::fleet::{ChaosOptions, FleetOptions};
 use erprm::obs::{SamplePolicy, TraceOptions};
 use erprm::harness::{self, Cell};
 use erprm::runtime::Engine;
-use erprm::server::{http, metrics::Metrics, route, router::EnginePool, PoolOptions};
+use erprm::server::{
+    http, lifecycle, metrics::Metrics, route, router::EnginePool, Lifecycle, PoolOptions,
+    RetryOptions, SuperviseOptions,
+};
 use erprm::sim;
 use erprm::tokenizer as tk;
 use erprm::util::benchkit::{fmt_flops, Table};
@@ -204,6 +207,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.get_usize_min("workers", worker_default, 1)?;
     // --cache N sets the LRU solve-cache size; --cache 0 disables it.
     let cache = args.get_usize("cache", scfg.cache_entries)?;
+    // Fault tolerance: transparent retry of retryable failures within
+    // the request's deadline budget, supervisor respawn of dead/wedged
+    // shards, and a bounded graceful drain on SIGTERM / POST
+    // /admin/drain.
+    let retry = RetryOptions {
+        max_attempts: args.get_u64("retry-max", scfg.retry_max_attempts as u64)?.max(1) as u32,
+        base_ms: args.get_u64("retry-base-ms", scfg.retry_base_ms)?.max(1),
+        cap_ms: args.get_u64("retry-cap-ms", scfg.retry_cap_ms)?.max(1),
+        retry_saturated: args.flag("retry-saturated") || scfg.retry_saturated,
+    };
+    let supervise = SuperviseOptions {
+        enabled: !args.flag("no-supervise"),
+        stale_ms: args.get_u64("supervise-stale-ms", scfg.supervise_stale_ms)?.max(1),
+        ..SuperviseOptions::default()
+    };
+    let drain_deadline_ms = args.get_u64("drain-deadline-ms", scfg.drain_deadline_ms)?;
+    // --chaos-*: deterministic fault injection for resilience testing.
+    // Off unless a probability/slow-shard knob is set; never enable in
+    // production.
+    let chaos = ChaosOptions {
+        seed: args.get_u64("chaos-seed", 0)?,
+        panic_per_tick: args.get_f64("chaos-panic", 0.0)?.clamp(0.0, 1.0),
+        max_panics: args.get_u64("chaos-max-panics", 0)?,
+        stall_per_tick: args.get_f64("chaos-stall", 0.0)?.clamp(0.0, 1.0),
+        stall_ms: args.get_u64("chaos-stall-ms", 0)?,
+        max_stalls: args.get_u64("chaos-max-stalls", 0)?,
+        slow_shard: args
+            .get("chaos-slow-shard")
+            .map(|_| args.get_usize("chaos-slow-shard", 0))
+            .transpose()?,
+        slow_ms: args.get_u64("chaos-slow-ms", 0)?,
+    };
+    if chaos.enabled() {
+        eprintln!(
+            "warning: chaos injection enabled (seed {}, panic {}, stall {}) — testing only",
+            chaos.seed, chaos.panic_per_tick, chaos.stall_per_tick
+        );
+    }
     let defaults = SearchConfig::default();
     let pool = EnginePool::spawn_with(
         dir,
@@ -225,21 +266,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 sample: SamplePolicy { success_rate: trace_sample, ..SamplePolicy::default() },
                 calib,
             },
+            retry,
+            supervise,
+            chaos,
         },
     )?;
     let metrics = Arc::new(Metrics::default());
     let tpool = ThreadPool::new(workers);
     let stop = Arc::new(AtomicBool::new(false));
+    let life = Lifecycle::new();
+    lifecycle::install_sigterm();
 
     let p2 = pool.clone();
     let m2 = Arc::clone(&metrics);
     let d2 = defaults.clone();
+    let l2 = life.clone();
     let local = http::serve(
         &addr,
         &tpool,
         scfg.max_body_bytes,
         Arc::clone(&stop),
-        Arc::new(move |req| route(&p2, &m2, &d2, req)),
+        Arc::new(move |req| route(&p2, &m2, &d2, &l2, req)),
     )?;
     let mode = if fleet {
         let g = if gang {
@@ -264,13 +311,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "erprm serving on http://{local}  ({} engine shards, {capacity} queue slots/shard, \
          cache {cache}, {mode}{tau_mode})  (POST /solve, GET /metrics, GET /healthz, \
-         GET /calibration, GET /trace/<id>, GET /traces, GET /traces/chrome)",
+         GET /readyz, POST /admin/drain, GET /calibration, GET /trace/<id>, GET /traces, \
+         GET /traces/chrome)",
         pool.n_shards()
     );
-    // run until killed
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    // run until a drain is requested (SIGTERM or POST /admin/drain),
+    // then finish in-flight work — bounded by --drain-deadline-ms —
+    // stop admitting connections, and shut the pool down.
+    while !life.draining() {
+        if lifecycle::term_requested() {
+            life.drain();
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
     }
+    eprintln!("draining: refusing new work, finishing in-flight requests");
+    let t0 = std::time::Instant::now();
+    let budget = std::time::Duration::from_millis(drain_deadline_ms);
+    while pool.queue_depth() > 0 && t0.elapsed() < budget {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    // one extra beat so responses for just-finished solves flush
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let abandoned = pool.queue_depth();
+    pool.shutdown();
+    if abandoned > 0 {
+        eprintln!("drain deadline elapsed with {abandoned} requests still queued");
+    } else {
+        eprintln!("drain complete in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {

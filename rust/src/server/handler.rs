@@ -4,12 +4,23 @@
 //! examples, so the status-code contract is tested in one place:
 //!
 //! * parse/validation failures -> **400** (client mistake, don't retry)
-//! * pool saturation ([`crate::util::error::Error::Saturated`]) -> **503**
-//!   with `Retry-After` (server transient, retry later)
+//! * pool saturation ([`crate::util::error::Error::Saturated`]) and
+//!   unrecovered shard loss
+//!   ([`crate::util::error::Error::ShardLost`]) -> **503** with
+//!   `Retry-After` (server transient, retry later)
+//! * client gone mid-solve ([`crate::util::error::Error::Hangup`]) ->
+//!   **499** (nobody is listening; logged and counted, never retried)
 //! * deadline expiry ([`crate::util::error::Error::Deadline`]) -> **504**
 //!   (the request's own budget elapsed; retrying with the same budget
 //!   will likely 504 again, so no `Retry-After` hint)
 //! * runtime faults (I/O, XLA) -> **500**
+//!
+//! Lifecycle endpoints: `GET /healthz` is process liveness plus
+//! per-shard supervisor state (health string and restart count per
+//! shard); `GET /readyz` is rotation readiness — 503 while draining or
+//! while no shard is serving; `POST /admin/drain` starts a graceful
+//! drain (new `/solve` work is refused with 503 + `Retry-After`, the
+//! serve loop finishes in-flight work and exits).
 //!
 //! Every `/solve` request is keyed by a request id — the client's
 //! `X-Request-Id` header or `request_id` body field when usable, a
@@ -25,6 +36,7 @@ use crate::config::SearchConfig;
 use crate::obs::{self, PhaseFlops, TraceBuilder};
 use crate::server::api;
 use crate::server::http;
+use crate::server::lifecycle::Lifecycle;
 use crate::server::metrics::Metrics;
 use crate::server::router::EnginePool;
 use crate::util::error::Error;
@@ -42,18 +54,60 @@ pub fn error_response(e: &Error) -> http::Response {
     }
 }
 
+/// 503 for a drain refusal — the same shape load balancers already
+/// handle for saturation.
+fn draining_response() -> http::Response {
+    http::Response::json(503, "{\"error\":\"draining: not accepting new work\"}".into())
+        .with_header("Retry-After", "1")
+}
+
 /// Route one HTTP request against the shard pool.
 pub fn route(
     pool: &EnginePool,
     metrics: &Metrics,
     defaults: &SearchConfig,
+    life: &Lifecycle,
     req: http::Request,
 ) -> http::Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => http::Response::json(200, "{\"ok\":true}".into()),
+        ("GET", "/healthz") => {
+            // liveness + supervisor detail: the process answers even
+            // when every shard is down (that is what /readyz is for)
+            let shards: Vec<Json> = pool.shard_health().into_iter().map(Json::str).collect();
+            let restarts: Vec<Json> =
+                pool.shard_restarts().into_iter().map(|n| Json::num(n as f64)).collect();
+            let body = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("serving", Json::Bool(pool.any_serving())),
+                ("draining", Json::Bool(life.draining())),
+                ("shards", Json::Arr(shards)),
+                ("restarts", Json::Arr(restarts)),
+            ]);
+            http::Response::json(200, body.to_string())
+        }
+        ("GET", "/readyz") => {
+            if life.draining() {
+                draining_response()
+            } else if !pool.any_serving() {
+                http::Response::json(503, "{\"error\":\"no healthy shard\"}".into())
+                    .with_header("Retry-After", "1")
+            } else {
+                http::Response::json(200, "{\"ready\":true}".into())
+            }
+        }
+        ("POST", "/admin/drain") => {
+            life.drain();
+            http::Response::json(200, "{\"draining\":true}".into())
+        }
         ("GET", "/metrics") => {
             let mut text = metrics.render();
             text.push_str(&pool.render_metrics());
+            text.push_str("# HELP erprm_draining 1 while the process refuses new work.\n");
+            text.push_str("# TYPE erprm_draining gauge\n");
+            text.push_str(&format!(
+                "erprm_draining {}\n",
+                if life.draining() { 1 } else { 0 }
+            ));
             http::Response::text(200, &text)
         }
         ("GET", "/traces") => {
@@ -76,6 +130,10 @@ pub fn route(
             }
         }
         ("POST", "/solve") => {
+            if life.draining() {
+                metrics.record_error(503);
+                return draining_response();
+            }
             let t0 = Instant::now();
             // id precedence: X-Request-Id header > body request_id field
             // > minted at the door
@@ -100,7 +158,8 @@ pub fn route(
                 parsed.request_id = obs::mint_request_id();
             }
             let rid = parsed.request_id.clone();
-            match pool.solve_timed(parsed.clone(), defaults.clone()) {
+            match pool.solve_timed_watched(parsed.clone(), defaults.clone(), req.hangup.as_ref())
+            {
                 Ok(s) => {
                     metrics.record_ok(
                         t0.elapsed().as_secs_f64() * 1000.0,
@@ -149,5 +208,119 @@ mod tests {
         assert_eq!(r.status, 504);
         assert!(r.headers.is_empty(), "504 is not a back-off-and-retry signal");
         assert!(String::from_utf8(r.body).unwrap().contains("deadline"));
+    }
+
+    #[test]
+    fn shard_lost_renders_503_with_retry_after() {
+        let r = error_response(&Error::shard_lost("every engine shard is dead"));
+        assert_eq!(r.status, 503);
+        assert!(r.headers.iter().any(|(k, _)| *k == "Retry-After"));
+    }
+
+    #[test]
+    fn hangup_renders_499() {
+        let r = error_response(&Error::hangup("client disconnected mid-solve"));
+        assert_eq!(r.status, 499);
+        assert!(r.headers.is_empty(), "nobody is listening for a Retry-After");
+    }
+
+    use crate::server::router::testkit::{canned_pool, set_shard_health};
+    use crate::server::router::PoolOptions;
+
+    fn get(path: &str) -> http::Request {
+        http::Request {
+            method: "GET".into(),
+            path: path.into(),
+            body: Vec::new(),
+            request_id: None,
+            hangup: None,
+        }
+    }
+
+    fn post(path: &str, body: &str) -> http::Request {
+        http::Request {
+            method: "POST".into(),
+            path: path.into(),
+            body: body.as_bytes().to_vec(),
+            request_id: None,
+            hangup: None,
+        }
+    }
+
+    fn body_str(r: &http::Response) -> String {
+        String::from_utf8(r.body.clone()).unwrap()
+    }
+
+    #[test]
+    fn lifecycle_endpoints_gate_admission_and_report_shard_state() {
+        let pool = canned_pool(
+            PoolOptions { shards: 2, ..PoolOptions::default() },
+            std::time::Duration::ZERO,
+        );
+        let metrics = Metrics::default();
+        let cfg = SearchConfig::default();
+        let life = Lifecycle::new();
+
+        let h = route(&pool, &metrics, &cfg, &life, get("/healthz"));
+        assert_eq!(h.status, 200);
+        let hb = body_str(&h);
+        assert!(hb.contains("\"shards\":[\"healthy\",\"healthy\"]"), "{hb}");
+        assert!(hb.contains("\"draining\":false"), "{hb}");
+
+        let r = route(&pool, &metrics, &cfg, &life, get("/readyz"));
+        assert_eq!(r.status, 200, "{}", body_str(&r));
+
+        // a solve goes through before the drain
+        let solve_body = r#"{"v0": 4, "ops": [["+",3]]}"#;
+        let ok = route(&pool, &metrics, &cfg, &life, post("/solve", solve_body));
+        assert_eq!(ok.status, 200, "{}", body_str(&ok));
+
+        let d = route(&pool, &metrics, &cfg, &life, post("/admin/drain", ""));
+        assert_eq!(d.status, 200);
+        assert!(life.draining());
+
+        let r = route(&pool, &metrics, &cfg, &life, get("/readyz"));
+        assert_eq!(r.status, 503, "draining instance must leave rotation");
+        assert!(r.headers.iter().any(|(k, _)| *k == "Retry-After"));
+
+        let refused = route(&pool, &metrics, &cfg, &life, post("/solve", solve_body));
+        assert_eq!(refused.status, 503, "{}", body_str(&refused));
+        assert!(body_str(&refused).contains("draining"));
+
+        // healthz keeps answering during the drain (liveness)
+        let h = route(&pool, &metrics, &cfg, &life, get("/healthz"));
+        assert_eq!(h.status, 200);
+        assert!(body_str(&h).contains("\"draining\":true"));
+
+        let m = route(&pool, &metrics, &cfg, &life, get("/metrics"));
+        assert!(body_str(&m).contains("erprm_draining 1"), "{}", body_str(&m));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn readyz_is_503_when_no_shard_serves() {
+        let pool = canned_pool(
+            PoolOptions {
+                shards: 1,
+                supervise: crate::server::supervisor::SuperviseOptions {
+                    enabled: false,
+                    ..Default::default()
+                },
+                ..PoolOptions::default()
+            },
+            std::time::Duration::ZERO,
+        );
+        let metrics = Metrics::default();
+        let cfg = SearchConfig::default();
+        let life = Lifecycle::new();
+        assert_eq!(route(&pool, &metrics, &cfg, &life, get("/readyz")).status, 200);
+        set_shard_health(&pool, 0, crate::server::supervisor::HEALTH_DEAD);
+        let r = route(&pool, &metrics, &cfg, &life, get("/readyz"));
+        assert_eq!(r.status, 503);
+        assert!(body_str(&r).contains("no healthy shard"));
+        let h = route(&pool, &metrics, &cfg, &life, get("/healthz"));
+        assert_eq!(h.status, 200, "liveness still answers");
+        assert!(body_str(&h).contains("\"serving\":false"));
+        pool.shutdown();
     }
 }

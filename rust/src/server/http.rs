@@ -22,6 +22,59 @@ pub struct Request {
     /// echoes it (or a minted id) on every `/solve` response and keys
     /// the request's trace with it.
     pub request_id: Option<String>,
+    /// Live disconnect probe for the connection this request arrived
+    /// on. `serve` attaches one per accepted connection; requests built
+    /// by hand (tests, benchmarks) leave it `None` and long-running
+    /// handlers simply never observe a hangup.
+    pub hangup: Option<Arc<HangupProbe>>,
+}
+
+/// Client-disconnect probe for long-running handlers.
+///
+/// HTTP/1.1 over `std::net` gives a handler no callback when the peer
+/// goes away mid-solve; the only signal is the socket itself. The probe
+/// holds a dup of the connection's stream and answers "has the client
+/// hung up?" with a non-blocking one-byte `peek`: `Ok(0)` is an orderly
+/// EOF, a reset-class error is an abortive close, and `WouldBlock`
+/// means the peer is still waiting. The router's dispatch loop polls
+/// this between completion checks and fails an abandoned wait with
+/// [`Error::Hangup`] (HTTP 499) instead of holding the worker until the
+/// solve lands.
+///
+/// The dup shares its file-status flags with the fd `write_response`
+/// later uses, so the probe flips `O_NONBLOCK` on only for the peek and
+/// restores it before returning; probe and response writer run on the
+/// same worker thread, so the toggle cannot race the write.
+pub struct HangupProbe {
+    stream: TcpStream,
+}
+
+impl std::fmt::Debug for HangupProbe {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "HangupProbe({:?})", self.stream.peer_addr().ok())
+    }
+}
+
+impl HangupProbe {
+    pub fn new(stream: TcpStream) -> HangupProbe {
+        HangupProbe { stream }
+    }
+
+    /// True once the peer has closed its end of the connection.
+    pub fn hung_up(&self) -> bool {
+        if self.stream.set_nonblocking(true).is_err() {
+            return false;
+        }
+        let mut buf = [0u8; 1];
+        let gone = match self.stream.peek(&mut buf) {
+            Ok(0) => true,  // orderly shutdown
+            Ok(_) => false, // early pipelined bytes: peer is alive
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+            Err(_) => true, // reset/abort
+        };
+        let _ = self.stream.set_nonblocking(false);
+        gone
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -66,6 +119,7 @@ impl Response {
             405 => "405 Method Not Allowed",
             413 => "413 Payload Too Large",
             429 => "429 Too Many Requests",
+            499 => "499 Client Closed Request",
             500 => "500 Internal Server Error",
             503 => "503 Service Unavailable",
             504 => "504 Gateway Timeout",
@@ -108,7 +162,7 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request> 
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok(Request { method, path, body, request_id })
+    Ok(Request { method, path, body, request_id, hangup: None })
 }
 
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
@@ -157,7 +211,13 @@ pub fn serve(
                         let h = Arc::clone(&handler);
                         let accepted = sender.submit(Box::new(move || {
                             let resp = match read_request(&mut stream, max) {
-                                Ok(req) => h(req),
+                                Ok(mut req) => {
+                                    req.hangup = stream
+                                        .try_clone()
+                                        .ok()
+                                        .map(|s| Arc::new(HangupProbe::new(s)));
+                                    h(req)
+                                }
                                 Err(e) => {
                                     Response::json(400, format!("{{\"error\":\"{e}\"}}"))
                                 }
@@ -285,6 +345,38 @@ mod tests {
             Response::text(200, "ok")
         });
         assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+    }
+
+    #[test]
+    fn hangup_probe_detects_client_disconnect() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let probe = HangupProbe::new(server_side);
+        assert!(!probe.hung_up(), "connected peer reads as alive");
+        drop(client);
+        // EOF can take a beat to propagate through the loopback
+        let t0 = std::time::Instant::now();
+        while !probe.hung_up() && t0.elapsed() < std::time::Duration::from_secs(2) {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(probe.hung_up(), "dropped client must read as hung up");
+    }
+
+    #[test]
+    fn serve_attaches_a_probe_to_each_request() {
+        let out = roundtrip(b"GET /healthz HTTP/1.1\r\n\r\n", |req| {
+            let p = req.hangup.as_deref().expect("serve attaches a probe");
+            assert!(!p.hung_up(), "client is still waiting on the response");
+            Response::text(200, "ok")
+        });
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+    }
+
+    #[test]
+    fn status_line_knows_client_closed_request() {
+        assert_eq!(Response::text(499, "x").status_line(), "499 Client Closed Request");
     }
 
     #[test]

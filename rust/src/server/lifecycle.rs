@@ -1,0 +1,113 @@
+//! Graceful drain state for the serving process.
+//!
+//! Two events start a drain: SIGTERM (orchestrators' stop signal) and
+//! `POST /admin/drain` (operator-initiated). Once draining, the handler
+//! refuses new `/solve` admissions with 503 + `Retry-After` (load
+//! balancers route around the instance), `/readyz` flips to 503 so the
+//! instance falls out of rotation, and the serve loop in `erprm serve`
+//! waits for in-flight work to finish — bounded by
+//! `--drain-deadline-ms` — before shutting the pool down and exiting.
+//!
+//! Separation of concerns: the SIGTERM latch is a process-global
+//! `AtomicBool` because a signal handler may only do async-signal-safe
+//! work (a relaxed store qualifies; taking locks or allocating does
+//! not). [`Lifecycle`] itself is plain shared state with no global
+//! reach — the serve loop bridges the latch into it by polling
+//! [`term_requested`] and calling [`Lifecycle::drain`], which keeps
+//! every other consumer (handlers, tests) free of hidden global
+//! coupling.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Process-global SIGTERM latch; written only by the signal handler.
+static TERM: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_term(_signum: i32) {
+    TERM.store(true, Ordering::Relaxed);
+}
+
+/// Install the SIGTERM handler (idempotent). Returns `false` if the
+/// registration was rejected by the OS.
+///
+/// The crate builds without libc, so the one symbol needed is declared
+/// directly; `signal(2)` returns the previous disposition, or `SIG_ERR`
+/// (`-1` as a pointer) on failure.
+#[cfg(unix)]
+pub fn install_sigterm() -> bool {
+    const SIGTERM: i32 = 15;
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe { signal(SIGTERM, on_term) != usize::MAX }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm() -> bool {
+    false
+}
+
+/// True once SIGTERM has been delivered (after [`install_sigterm`]).
+pub fn term_requested() -> bool {
+    TERM.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+pub(crate) fn reset_term_for_tests() {
+    TERM.store(false, Ordering::Relaxed);
+}
+
+/// Shared drain flag for one serving process: cheap to clone into the
+/// handler closure, polled by the serve loop.
+#[derive(Debug, Clone, Default)]
+pub struct Lifecycle {
+    draining: Arc<AtomicBool>,
+}
+
+impl Lifecycle {
+    pub fn new() -> Lifecycle {
+        Lifecycle::default()
+    }
+
+    /// Enter the draining state (one-way; there is no un-drain).
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    /// True once a drain has been requested via [`Lifecycle::drain`] —
+    /// the serve loop calls that for SIGTERM too, so handlers only ever
+    /// consult this flag.
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drain_is_one_way_and_shared_across_clones() {
+        let life = Lifecycle::new();
+        let seen_by_handler = life.clone();
+        assert!(!life.draining());
+        assert!(!seen_by_handler.draining());
+        seen_by_handler.drain();
+        assert!(life.draining(), "clones share the flag");
+        assert!(seen_by_handler.draining());
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn sigterm_latch_round_trips() {
+        assert!(install_sigterm(), "registration must succeed on unix");
+        assert!(!term_requested());
+        // invoke the handler directly: same code path as delivery,
+        // without racing other tests via a real raise(2)
+        on_term(15);
+        assert!(term_requested());
+        reset_term_for_tests();
+        assert!(!term_requested());
+    }
+}

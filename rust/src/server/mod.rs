@@ -14,8 +14,17 @@
 //!   [`crate::fleet`] instead of one-request-at-a-time dispatch:
 //!   `max_inflight` resumable solves interleave per shard, freed slots
 //!   backfill from the queue, duplicates coalesce, deadlines abort.
-//! * [`handler`] — the shared `/solve` / `/healthz` / `/metrics` routing
-//!   and error→status mapping used by `erprm serve` and the examples.
+//! * [`supervisor`] — the pool's fault-tolerance primitives: per-shard
+//!   slot state (generation counter, heartbeat, health byte, swappable
+//!   mailbox), the custody word that lets the dispatcher follow a job
+//!   across a shard respawn, and the deadline-aware retry backoff math.
+//! * [`lifecycle`] — process drain state shared by the serve loop and
+//!   the handler: SIGTERM or `POST /admin/drain` flips it, admission
+//!   returns 503 + Retry-After, and the serve loop exits once in-flight
+//!   work finishes (or the drain deadline expires).
+//! * [`handler`] — the shared `/solve` / `/healthz` / `/readyz` /
+//!   `/metrics` / `/admin/drain` routing and error→status mapping used
+//!   by `erprm serve` and the examples.
 //! * [`api`] — request/response JSON schema for `/solve`, including the
 //!   `deadline_ms`/`priority` scheduling envelope and the
 //!   `queue_wait_ms` telemetry field.
@@ -23,8 +32,12 @@
 pub mod api;
 pub mod handler;
 pub mod http;
+pub mod lifecycle;
 pub mod metrics;
 pub mod router;
+pub mod supervisor;
 
 pub use handler::{error_response, route};
+pub use lifecycle::Lifecycle;
 pub use router::{EnginePool, PoolOptions};
+pub use supervisor::{RetryOptions, SuperviseOptions};

@@ -30,8 +30,34 @@
 //! [`crate::server::api::SolveRequest::cache_key`]): because solves are
 //! deterministic for a fixed seed, repeated benchmark traffic
 //! short-circuits entirely, and a hit returns a byte-identical outcome.
+//!
+//! # Supervision, retry, and fault injection
+//!
+//! Shard threads are *supervised*. Each thread runs its body under
+//! `catch_unwind` and heartbeats into its [`ShardSlot`] once per
+//! scheduler round; a supervisor thread detects panicked (flag) or
+//! wedged (stale heartbeat with reserved work) shards and recovers them:
+//! swap in a fresh mailbox, requeue the old queue's jobs onto healthy
+//! shards, retire the generation (the zombie's writes become no-ops and
+//! its drive loop exits at its next check), and respawn the thread with
+//! a fresh `Engine`. In-flight jobs on a lost shard surface as the
+//! retryable [`Error::ShardLost`] — the dispatcher notices via *custody*
+//! tracking (each job carries a packed `(shard, generation)` word that
+//! requeues update before the generation bump, so a double read
+//! distinguishes "moved" from "lost").
+//!
+//! `solve_timed` transparently retries retryable failures with capped
+//! exponential backoff and seeded jitter, never sleeping past the
+//! request's remaining deadline budget. Retrying is *correct* by the
+//! same determinism contract the cache relies on: a retried solve is a
+//! fresh deterministic solve, and only `Ok` outcomes are ever cached.
+//!
+//! The `--chaos-*` knob family ([`ChaosOptions`]) injects seed-keyed
+//! panics and stalls at shard-tick granularity, which is how the test
+//! suite proves byte-identical answers survive recovery.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -43,16 +69,25 @@ use crate::config::{SearchConfig, SearchMode};
 use crate::coordinator::policy::{AdaptiveTau, TauPlan};
 use crate::coordinator::search::{hash_problem, SolveOutcome};
 use crate::coordinator::task::Progress;
-use crate::fleet::{self, FleetJob, FleetOptions, FleetStats, FleetTotals, Solved, TaskSpec};
+use crate::fleet::{
+    self, ChaosAction, ChaosOptions, ChaosState, DriveHooks, FleetJob, FleetOptions, FleetStats,
+    FleetTotals, Solved, TaskSpec,
+};
 use crate::harness::temp_for;
 use crate::log_debug;
 use crate::log_error;
 use crate::obs::{mint_request_id, PhaseFlops, TraceBuilder, TraceOptions, TraceRecorder};
 use crate::runtime::{Engine, EngineStats};
 use crate::server::api::SolveRequest;
+use crate::server::http::HangupProbe;
+use crate::server::supervisor::{
+    backoff_delay, health_name, pack_custody, unpack_custody, RetryOptions, ShardSlot,
+    SuperviseOptions, HEALTH_DEAD, HEALTH_HEALTHY, HEALTH_STARTING,
+};
 use crate::util::error::{Error, Result};
 use crate::util::logging;
 use crate::util::oneshot;
+use crate::util::sync::{lock_unpoisoned, MailRecv, Mailbox};
 
 type Reply = oneshot::Sender<Result<Solved>>;
 
@@ -71,6 +106,12 @@ struct SolveJob {
     /// Frozen adaptive-tau schedule resolved at admission (see
     /// [`EnginePool::resolve_tau_plan`]); `None` = static `cfg.tau`.
     tau_plan: Option<Arc<TauPlan>>,
+    /// Packed `(shard, generation)` custody word (see
+    /// [`crate::server::supervisor`]). The dispatcher polls it while
+    /// waiting for the reply; supervisor requeues update it *before*
+    /// retiring the source generation, so a double read tells a moved
+    /// job from a lost one.
+    custody: Arc<AtomicU64>,
 }
 
 enum Msg {
@@ -78,9 +119,11 @@ enum Msg {
     Shutdown,
 }
 
-/// One engine shard: a thread owning its own `Engine`, fed by `tx`.
+/// One engine shard: a thread owning its own `Engine`, fed through the
+/// swappable mailbox on its [`ShardSlot`].
 struct Shard {
-    tx: mpsc::Sender<Msg>,
+    /// Supervision state: generation, heartbeat, health, mailbox.
+    slot: Arc<ShardSlot<Msg>>,
     /// Requests currently reserved against this shard (queued + executing
     /// + reply pending). Owned by callers via [`DepthGuard`].
     depth: Arc<AtomicUsize>,
@@ -92,10 +135,6 @@ struct Shard {
     fstats: Arc<FleetStats>,
     /// Gang-batcher telemetry (all-zero unless fleet gang mode is on).
     bstats: Arc<BatchStats>,
-    /// Set when the shard thread is observed dead (send/reply failure);
-    /// placement skips dead shards so they can't keep attracting traffic
-    /// with their permanently-empty queues.
-    dead: AtomicBool,
 }
 
 /// Followers of one in-flight single-flight key, waiting on the leader.
@@ -122,6 +161,93 @@ struct PoolInner {
     /// HTTP layer (`/trace/<id>`, `/traces`, `/traces/chrome`).
     tracer: Arc<TraceRecorder>,
     joins: Mutex<Vec<JoinHandle<()>>>,
+    /// Transparent-retry policy for retryable dispatch failures.
+    retry: RetryOptions,
+    supervise: SuperviseOptions,
+    /// Deterministic fault injection (`--chaos-*`); `None` when off.
+    chaos: Option<Arc<ChaosState>>,
+    retries_total: AtomicU64,
+    /// Jobs the supervisor moved out of a lost shard's mailbox.
+    requeued_total: AtomicU64,
+    /// Set by `shutdown()`; stops the supervisor thread.
+    stopping: AtomicBool,
+    supervisor: Mutex<Option<JoinHandle<()>>>,
+    /// The shard thread body, kept so the supervisor can respawn a shard
+    /// with a fresh engine. Injectable for artifact-free testing.
+    body: ShardBody,
+}
+
+/// What runs on a shard thread (inside `catch_unwind`). The real body
+/// loads an `Engine` and serves; tests inject canned bodies.
+type ShardBody = Arc<dyn Fn(ShardCtx) + Send + Sync>;
+
+/// Everything a shard body needs, bundled so respawns are one call.
+struct ShardCtx {
+    idx: usize,
+    /// The slot generation this body belongs to. All slot writes are
+    /// gated on it so a retired zombie cannot corrupt its replacement.
+    generation: u64,
+    mailbox: Arc<Mailbox<Msg>>,
+    slot: Arc<ShardSlot<Msg>>,
+    solved: Arc<AtomicU64>,
+    stats: Arc<Mutex<EngineStats>>,
+    fstats: Arc<FleetStats>,
+    bstats: Arc<BatchStats>,
+    tracer: Arc<TraceRecorder>,
+    chaos: Option<Arc<ChaosState>>,
+    /// Present on initial spawn only: reports engine-load success so
+    /// `spawn_with` can fail fast. Respawns report through slot health.
+    ready: Option<mpsc::Sender<Result<()>>>,
+}
+
+impl ShardCtx {
+    /// The engine is up: mark the slot serving and ack the spawner.
+    fn ready_ok(&mut self) {
+        self.slot.mark_ready(self.generation);
+        if let Some(tx) = self.ready.take() {
+            let _ = tx.send(Ok(()));
+        }
+    }
+
+    /// Engine load failed. On initial spawn the pool constructor unwinds;
+    /// on a respawn the shard is permanently dead.
+    fn ready_err(&mut self, e: Error) {
+        match self.ready.take() {
+            Some(tx) => {
+                let _ = tx.send(Err(e));
+            }
+            None => {
+                log_error!("shard {}: respawn failed to load engine: {e}", self.idx);
+                self.slot.mark_dead(self.generation);
+            }
+        }
+    }
+}
+
+/// Per-round supervision hooks for one shard body: generation-gated
+/// heartbeat/retirement plus the chaos draw (tick counter lives on the
+/// slot so a respawn resumes the schedule instead of replaying it).
+struct SlotHooks {
+    slot: Arc<ShardSlot<Msg>>,
+    generation: u64,
+    chaos: Option<Arc<ChaosState>>,
+}
+
+impl DriveHooks for SlotHooks {
+    fn beat(&self) {
+        self.slot.beat(self.generation);
+    }
+
+    fn retired(&self) -> bool {
+        self.slot.generation() != self.generation
+    }
+
+    fn chaos_tick(&self) -> ChaosAction {
+        match &self.chaos {
+            Some(c) if c.enabled() => c.tick(self.slot.idx, self.slot.next_tick()),
+            _ => ChaosAction::None,
+        }
+    }
 }
 
 /// Handle to the shard pool used by HTTP workers; cheap to clone.
@@ -160,7 +286,41 @@ pub struct PoolOptions {
     /// `--trace-sample`): ring size and success-sampling policy. Failures
     /// are always retained regardless of sampling.
     pub trace: TraceOptions,
+    /// Transparent retry of retryable dispatch failures (`--retry-*`).
+    pub retry: RetryOptions,
+    /// Shard supervision knobs (`--supervise-*` / `--no-supervise`).
+    pub supervise: SuperviseOptions,
+    /// Deterministic fault injection (`--chaos-*`); default-off.
+    pub chaos: ChaosOptions,
 }
+
+impl Default for PoolOptions {
+    fn default() -> Self {
+        PoolOptions {
+            shards: 1,
+            capacity: 64,
+            cache_entries: 0,
+            default_deadline_ms: 0,
+            fleet: None,
+            singleflight: false,
+            kv_pool_blocks: None,
+            trace: TraceOptions::default(),
+            retry: RetryOptions::default(),
+            supervise: SuperviseOptions::default(),
+            chaos: ChaosOptions::default(),
+        }
+    }
+}
+
+/// Poll slice while a dispatcher waits on a shard reply: between slices
+/// it checks the client-disconnect probe and the job's custody word.
+/// Short enough that loss detection and hangup propagation are prompt,
+/// long enough that a healthy solve costs a handful of wakeups.
+const DISPATCH_POLL: Duration = Duration::from_millis(20);
+
+/// Idle tick for a shard body blocking on its mailbox: bounds how stale a
+/// heartbeat can go while the shard is simply idle.
+const IDLE_TICK: Duration = Duration::from_millis(50);
 
 /// RAII slot reservation against one shard's depth gauge. Dropping the
 /// guard releases the slot, so the gauge can never leak — this replaces
@@ -235,22 +395,25 @@ impl EnginePool {
     ) -> Result<EnginePool> {
         EnginePool::spawn_with(
             artifacts_dir,
-            PoolOptions {
-                shards: n_shards,
-                capacity,
-                cache_entries,
-                default_deadline_ms: 0,
-                fleet: None,
-                singleflight: false,
-                kv_pool_blocks: None,
-                trace: TraceOptions::default(),
-            },
+            PoolOptions { shards: n_shards, capacity, cache_entries, ..PoolOptions::default() },
         )
     }
 
     /// Spawn with full options (fleet mode included). Fails fast (in the
     /// caller) if any shard's artifacts are unloadable.
     pub fn spawn_with(artifacts_dir: PathBuf, opts: PoolOptions) -> Result<EnginePool> {
+        let kv_pool_blocks = opts.kv_pool_blocks;
+        let fleet_opts = opts.fleet.clone();
+        let body: ShardBody = Arc::new(move |ctx: ShardCtx| {
+            real_shard_body(&artifacts_dir, kv_pool_blocks, fleet_opts.clone(), ctx)
+        });
+        EnginePool::spawn_with_body(opts, body)
+    }
+
+    /// Spawn the pool around an injectable shard body (the real one in
+    /// production; canned ones in artifact-free tests). The body runs
+    /// under `catch_unwind` and is kept for supervisor respawns.
+    fn spawn_with_body(opts: PoolOptions, body: ShardBody) -> Result<EnginePool> {
         let n_shards = opts.shards.max(1);
         if opts.capacity == 0 {
             return Err(Error::invalid("shard queue capacity must be positive"));
@@ -261,43 +424,33 @@ impl EnginePool {
             }
         }
         let tracer = Arc::new(TraceRecorder::new(opts.trace));
+        let chaos = opts.chaos.enabled().then(|| Arc::new(ChaosState::new(opts.chaos)));
         let mut shards = Vec::with_capacity(n_shards);
         let mut joins = Vec::with_capacity(n_shards);
         let mut readies = Vec::with_capacity(n_shards);
         for i in 0..n_shards {
-            let (tx, rx) = mpsc::channel::<Msg>();
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let slot = Arc::new(ShardSlot::new(i));
             let depth = Arc::new(AtomicUsize::new(0));
             let solved = Arc::new(AtomicU64::new(0));
             let stats = Arc::new(Mutex::new(EngineStats::default()));
             let fstats = Arc::new(FleetStats::default());
             let bstats = Arc::new(BatchStats::default());
-            let dir = artifacts_dir.clone();
-            let solved2 = Arc::clone(&solved);
-            let stats2 = Arc::clone(&stats);
-            let fstats2 = Arc::clone(&fstats);
-            let bstats2 = Arc::clone(&bstats);
-            let fleet_opts = opts.fleet.clone();
-            let kv_pool_blocks = opts.kv_pool_blocks;
-            let tracer2 = Arc::clone(&tracer);
-            let join = std::thread::Builder::new()
-                .name(format!("erprm-shard-{i}"))
-                .spawn(move || {
-                    shard_main(
-                        i, dir, kv_pool_blocks, rx, ready_tx, solved2, stats2, fleet_opts,
-                        fstats2, bstats2, tracer2,
-                    )
-                })?;
-            shards.push(Shard {
-                tx,
-                depth,
-                solved,
-                stats,
-                fstats,
-                bstats,
-                dead: AtomicBool::new(false),
-            });
-            joins.push(join);
+            let ctx = ShardCtx {
+                idx: i,
+                generation: slot.generation(),
+                mailbox: slot.mailbox(),
+                slot: Arc::clone(&slot),
+                solved: Arc::clone(&solved),
+                stats: Arc::clone(&stats),
+                fstats: Arc::clone(&fstats),
+                bstats: Arc::clone(&bstats),
+                tracer: Arc::clone(&tracer),
+                chaos: chaos.clone(),
+                ready: Some(ready_tx),
+            };
+            joins.push(spawn_shard_thread(Arc::clone(&body), ctx)?);
+            shards.push(Shard { slot, depth, solved, stats, fstats, bstats });
             readies.push(ready_rx);
         }
         let mut startup: Result<()> = Ok(());
@@ -313,7 +466,9 @@ impl EnginePool {
         if let Err(e) = startup {
             // Unwind: stop any shards that did come up, then join all.
             for s in &shards {
-                let _ = s.tx.send(Msg::Shutdown);
+                let mb = s.slot.mailbox();
+                let _ = mb.push(Msg::Shutdown);
+                mb.close();
             }
             for j in joins {
                 let _ = j.join();
@@ -325,7 +480,8 @@ impl EnginePool {
         } else {
             None
         };
-        Ok(EnginePool {
+        let supervise = opts.supervise.clone();
+        let pool = EnginePool {
             inner: Arc::new(PoolInner {
                 shards,
                 capacity: opts.capacity,
@@ -338,8 +494,21 @@ impl EnginePool {
                 pool_coalesced: AtomicU64::new(0),
                 tracer,
                 joins: Mutex::new(joins),
+                retry: opts.retry,
+                supervise,
+                chaos,
+                retries_total: AtomicU64::new(0),
+                requeued_total: AtomicU64::new(0),
+                stopping: AtomicBool::new(false),
+                supervisor: Mutex::new(None),
+                body,
             }),
-        })
+        };
+        if pool.inner.supervise.enabled {
+            let handle = spawn_supervisor(Arc::clone(&pool.inner))?;
+            *lock_unpoisoned(&pool.inner.supervisor) = Some(handle);
+        }
+        Ok(pool)
     }
 
     /// Solve via the least-loaded shard; returns [`Error::Saturated`]
@@ -356,7 +525,21 @@ impl EnginePool {
     /// waited for scheduling (`queue_wait_ms`; 0 on a cache hit, the
     /// leader's value when this request coalesced onto an in-flight
     /// single-flight run).
-    pub fn solve_timed(&self, mut req: SolveRequest, mut cfg: SearchConfig) -> Result<Solved> {
+    pub fn solve_timed(&self, req: SolveRequest, cfg: SearchConfig) -> Result<Solved> {
+        self.solve_timed_watched(req, cfg, None)
+    }
+
+    /// [`EnginePool::solve_timed`] with an optional client-disconnect
+    /// probe: while the dispatcher waits for the shard's reply it checks
+    /// the probe, and a hung-up client cancels the solve (the abandoned
+    /// reply channel tells the fleet nobody is listening) and surfaces
+    /// [`Error::Hangup`] (HTTP 499).
+    pub fn solve_timed_watched(
+        &self,
+        mut req: SolveRequest,
+        mut cfg: SearchConfig,
+        hangup: Option<&Arc<HangupProbe>>,
+    ) -> Result<Solved> {
         if req.request_id.is_empty() {
             req.request_id = mint_request_id();
         }
@@ -460,7 +643,54 @@ impl EnginePool {
             None
         };
         let rid = req.request_id.clone();
-        let res = self.dispatch_with_failover(req, cfg, tau_plan);
+        // Transparent retry: shard loss (and saturation, under the knob)
+        // is retried with capped exponential backoff + seeded jitter,
+        // never sleeping past the remaining deadline budget. Correct by
+        // determinism: a retried solve is a fresh deterministic solve.
+        let t0 = Instant::now();
+        let mut attempt: u32 = 0;
+        let mut prior: Option<String> = None;
+        let res = loop {
+            attempt += 1;
+            let r = self.dispatch_with_failover(
+                req.clone(),
+                cfg.clone(),
+                tau_plan.clone(),
+                attempt,
+                prior.take(),
+                hangup,
+            );
+            match r {
+                Err(e)
+                    if e.is_retryable()
+                        || (self.inner.retry.retry_saturated
+                            && matches!(e, Error::Saturated(_))) =>
+                {
+                    let remaining = deadline.map(|d| d.saturating_sub(t0.elapsed()));
+                    // jitter draw: stable for a fixed (request, attempt) so
+                    // chaos reruns back off identically, yet distinct across
+                    // requests so a recovering pool isn't hit in lockstep
+                    let draw = crate::util::stats::mix64(
+                        hash_problem(&req.problem) ^ cfg.seed ^ ((attempt as u64) << 48),
+                    );
+                    match backoff_delay(&self.inner.retry, attempt, draw, remaining) {
+                        Some(delay) => {
+                            self.inner.retries_total.fetch_add(1, Ordering::Relaxed);
+                            log_debug!(
+                                "retrying {rid} (attempt {} of {}) in {}ms after: {e}",
+                                attempt + 1,
+                                self.inner.retry.max_attempts,
+                                delay.as_millis()
+                            );
+                            prior = Some(e.to_string());
+                            std::thread::sleep(delay);
+                        }
+                        None => break Err(e),
+                    }
+                }
+                other => break other,
+            }
+        };
         if let Err(e) = &res {
             if e.http_status() == 503 {
                 // saturation bounces never reach a shard, so the shard
@@ -516,26 +746,39 @@ impl EnginePool {
         Some(Arc::new(plan))
     }
 
-    /// One placement attempt per shard: a dispatch that dies marks its
-    /// shard dead, and the next reserve() skips it.
+    /// One placement attempt per shard: a dispatch lost to a dying shard
+    /// (`Error::ShardLost`) immediately fails over to the next healthy
+    /// one; other failures surface as-is.
     fn dispatch_with_failover(
         &self,
         req: SolveRequest,
         cfg: SearchConfig,
         tau_plan: Option<Arc<TauPlan>>,
+        attempt: u32,
+        prior: Option<String>,
+        hangup: Option<&Arc<HangupProbe>>,
     ) -> Result<Solved> {
         let mut last_err = None;
         for _ in 0..self.inner.shards.len() {
             let (idx, guard) = self.reserve()?;
-            match self.dispatch(idx, req.clone(), cfg.clone(), tau_plan.clone(), guard) {
-                Err(e) if self.inner.shards[idx].dead.load(Ordering::Relaxed) => {
-                    log_error!("shard {idx} dead; failing request over: {e}");
+            match self.dispatch(
+                idx,
+                req.clone(),
+                cfg.clone(),
+                tau_plan.clone(),
+                guard,
+                attempt,
+                prior.as_deref(),
+                hangup,
+            ) {
+                Err(e) if e.is_retryable() => {
+                    log_error!("shard {idx} lost this dispatch; failing request over: {e}");
                     last_err = Some(e);
                 }
                 other => return other,
             }
         }
-        Err(last_err.unwrap_or_else(|| Error::internal("every engine shard is dead")))
+        Err(last_err.unwrap_or_else(|| Error::shard_lost("every placement attempt failed")))
     }
 
     /// Solve on one specific shard, bypassing placement and the cache.
@@ -558,7 +801,7 @@ impl EnginePool {
         let guard = try_reserve(&self.inner.shards[idx].depth, self.inner.capacity)
             .ok_or_else(|| Error::saturated(format!("shard {idx} queue full")))?;
         let plan = self.resolve_tau_plan(&req, &cfg);
-        self.dispatch(idx, req, cfg, plan, guard).map(|s| s.outcome)
+        self.dispatch(idx, req, cfg, plan, guard, 1, None, None).map(|s| s.outcome)
     }
 
     /// Placement signal per shard, `(primary, tiebreak)`. Sequential
@@ -590,21 +833,29 @@ impl EnginePool {
     }
 
     /// Claim a queue slot on the least-loaded live, non-full shard.
+    /// Healthy shards are preferred; shards mid-restart (`STARTING`) are
+    /// a fallback — their mailbox survives the engine load, so queuing on
+    /// one beats bouncing the request when it's all that's left.
+    /// Permanently dead shards never take traffic.
     fn reserve(&self) -> Result<(usize, DepthGuard)> {
         let loads = self.placement_loads();
+        let order = placement_order(&loads);
         let mut any_alive = false;
-        for idx in placement_order(&loads) {
-            let shard = &self.inner.shards[idx];
-            if shard.dead.load(Ordering::Relaxed) {
-                continue;
-            }
-            any_alive = true;
-            if let Some(guard) = try_reserve(&shard.depth, self.inner.capacity) {
-                return Ok((idx, guard));
+        for wanted in [HEALTH_HEALTHY, HEALTH_STARTING] {
+            for &idx in &order {
+                let shard = &self.inner.shards[idx];
+                if shard.slot.health() != wanted {
+                    continue;
+                }
+                any_alive = true;
+                if let Some(guard) = try_reserve(&shard.depth, self.inner.capacity) {
+                    return Ok((idx, guard));
+                }
             }
         }
         if !any_alive {
-            return Err(Error::internal("every engine shard is dead"));
+            // retryable: 503 + Retry-After, never a 4xx or a blameless 500
+            return Err(Error::shard_lost("every engine shard is dead"));
         }
         Err(Error::saturated(format!(
             "all {} shard queues at capacity {}",
@@ -625,9 +876,20 @@ impl EnginePool {
 
     /// Enqueue on shard `idx` and await the reply. The guard is held for
     /// the whole round trip, so the depth gauge releases on every exit
-    /// path, including a dead shard thread — which is also marked dead
-    /// here so placement stops routing to it (an empty queue on a dead
-    /// shard would otherwise look maximally attractive forever).
+    /// path. While waiting, the dispatcher watches three things between
+    /// poll slices:
+    ///
+    /// * the reply channel — value or sender-dropped (shard panicked with
+    ///   the job in flight → retryable [`Error::ShardLost`]);
+    /// * the job's custody word — if the generation it names was retired
+    ///   and the custody did not change across a confirming re-check (a
+    ///   supervisor requeue updates custody *before* the retirement, and
+    ///   the second strike gives an in-progress recovery time to land),
+    ///   the job is lost → retryable [`Error::ShardLost`];
+    /// * the client-disconnect probe — a hung-up client abandons the
+    ///   reply channel (cancelling the solve) and returns
+    ///   [`Error::Hangup`].
+    #[allow(clippy::too_many_arguments)]
     fn dispatch(
         &self,
         idx: usize,
@@ -635,6 +897,9 @@ impl EnginePool {
         cfg: SearchConfig,
         tau_plan: Option<Arc<TauPlan>>,
         guard: DepthGuard,
+        attempt: u32,
+        prior: Option<&str>,
+        hangup: Option<&Arc<HangupProbe>>,
     ) -> Result<Solved> {
         let _guard = guard;
         let shard = &self.inner.shards[idx];
@@ -648,7 +913,14 @@ impl EnginePool {
         } else {
             req.request_id.clone()
         }));
+        if attempt > 1 {
+            tb.event(
+                "retry",
+                format!("attempt {attempt} after: {}", prior.unwrap_or("retryable failure")),
+            );
+        }
         tb.begin("queue");
+        let custody = Arc::new(AtomicU64::new(pack_custody(idx, shard.slot.generation())));
         let job = SolveJob {
             deadline: self.effective_deadline(&req),
             priority: req.priority,
@@ -658,16 +930,47 @@ impl EnginePool {
             reply: rtx,
             trace: Some(tb),
             tau_plan,
+            custody: Arc::clone(&custody),
         };
-        if shard.tx.send(Msg::Solve(Box::new(job))).is_err() {
-            shard.dead.store(true, Ordering::Relaxed);
-            return Err(Error::internal(format!("engine shard {idx} gone")));
+        if shard.slot.mailbox().push(Msg::Solve(Box::new(job))).is_err() {
+            // mailbox closed: the supervisor is mid-recovery on this shard
+            return Err(Error::shard_lost(format!("engine shard {idx} mailbox closed")));
         }
-        match rrx.recv() {
-            Ok(res) => res,
-            Err(_) => {
-                shard.dead.store(true, Ordering::Relaxed);
-                Err(Error::internal(format!("engine shard {idx} died mid-request")))
+        let mut strikes = 0u32;
+        loop {
+            match rrx.poll_for(DISPATCH_POLL) {
+                oneshot::Polled::Value(res) => return res,
+                oneshot::Polled::Disconnected => {
+                    return Err(Error::shard_lost(format!(
+                        "engine shard {idx} died mid-request"
+                    )));
+                }
+                oneshot::Polled::Pending => {
+                    if let Some(p) = hangup {
+                        if p.hung_up() {
+                            // dropping rrx abandons the reply channel; the
+                            // fleet sees nobody listening and cancels
+                            return Err(Error::hangup("client disconnected mid-solve"));
+                        }
+                    }
+                    let c = custody.load(Ordering::SeqCst);
+                    let (ci, cg) = unpack_custody(c);
+                    let lost = self
+                        .inner
+                        .shards
+                        .get(ci)
+                        .is_none_or(|s| s.slot.generation() != cg);
+                    if lost && custody.load(Ordering::SeqCst) == c {
+                        strikes += 1;
+                        if strikes >= 2 {
+                            return Err(Error::shard_lost(format!(
+                                "engine shard {ci} generation {cg} retired mid-request"
+                            )));
+                        }
+                    } else {
+                        strikes = 0;
+                    }
+                }
             }
         }
     }
@@ -729,10 +1032,47 @@ impl EnginePool {
         self.inner.shards.iter().map(|s| s.solved.load(Ordering::Relaxed)).collect()
     }
 
-    /// Per-shard liveness (false once a shard thread has been observed
-    /// dead and placement stopped routing to it).
+    /// Per-shard liveness: true while the shard is healthy and serving
+    /// (false mid-restart or once permanently dead).
     pub fn shard_alive(&self) -> Vec<bool> {
-        self.inner.shards.iter().map(|s| !s.dead.load(Ordering::Relaxed)).collect()
+        self.inner.shards.iter().map(|s| s.slot.health() == HEALTH_HEALTHY).collect()
+    }
+
+    /// Per-shard health names for `/healthz` ("healthy" / "starting" /
+    /// "dead").
+    pub fn shard_health(&self) -> Vec<&'static str> {
+        self.inner.shards.iter().map(|s| health_name(s.slot.health())).collect()
+    }
+
+    /// Per-shard supervisor respawn counters.
+    pub fn shard_restarts(&self) -> Vec<u64> {
+        self.inner.shards.iter().map(|s| s.slot.restarts()).collect()
+    }
+
+    /// Total supervisor respawns across shards.
+    pub fn restarts_total(&self) -> u64 {
+        self.shard_restarts().iter().sum()
+    }
+
+    /// Dispatch attempts the router transparently retried.
+    pub fn retries_total(&self) -> u64 {
+        self.inner.retries_total.load(Ordering::Relaxed)
+    }
+
+    /// Jobs the supervisor moved out of a lost shard's mailbox.
+    pub fn requeued_total(&self) -> u64 {
+        self.inner.requeued_total.load(Ordering::Relaxed)
+    }
+
+    /// Whether any shard can take traffic (healthy or restarting).
+    pub fn any_serving(&self) -> bool {
+        self.inner.shards.iter().any(|s| s.slot.health() != HEALTH_DEAD)
+    }
+
+    /// `(panics, stalls)` injected by the chaos schedule; `None` when
+    /// chaos is off.
+    pub fn chaos_injected(&self) -> Option<(u64, u64)> {
+        self.inner.chaos.as_ref().map(|c| (c.panics_injected(), c.stalls_injected()))
     }
 
     /// Identical requests that coalesced onto an in-flight engine run at
@@ -771,11 +1111,13 @@ impl EnginePool {
         self.inner.tracer.calibration().to_json().to_string()
     }
 
-    /// Engine counters aggregated across all shards.
+    /// Engine counters aggregated across all shards. Poison-tolerant: a
+    /// shard that panicked mid-publish must not take `/metrics` down
+    /// with it (the snapshot is plain counters, valid at every point).
     pub fn engine_stats(&self) -> EngineStats {
         let mut agg = EngineStats::default();
         for s in &self.inner.shards {
-            agg.merge(&s.stats.lock().unwrap());
+            agg.merge(&lock_unpoisoned(&s.stats));
         }
         agg
     }
@@ -797,6 +1139,7 @@ impl EnginePool {
             self.fleet_enabled() as u8 as f64,
         );
         let alive = self.shard_alive();
+        let restarts = self.shard_restarts();
         for (i, (d, n)) in self.shard_depths().iter().zip(self.shard_solves()).enumerate() {
             let l = format!("shard=\"{i}\"");
             w.gauge_labeled(
@@ -813,9 +1156,47 @@ impl EnginePool {
             );
             w.gauge_labeled(
                 "erprm_shard_alive",
-                "0 once the shard thread was observed dead.",
+                "0 while the shard is not serving (restarting or dead).",
                 &l,
                 alive[i] as u8 as f64,
+            );
+            w.gauge_labeled(
+                "erprm_shard_health",
+                "1 healthy, 0 mid-restart, -1 permanently dead.",
+                &l,
+                match self.inner.shards[i].slot.health() {
+                    HEALTH_HEALTHY => 1.0,
+                    HEALTH_DEAD => -1.0,
+                    _ => 0.0,
+                },
+            );
+            w.counter_labeled(
+                "erprm_shard_restarts_total",
+                "Supervisor respawns of the shard thread.",
+                &l,
+                restarts[i] as f64,
+            );
+        }
+        w.counter(
+            "erprm_retries_total",
+            "Dispatch attempts transparently retried by the router.",
+            self.retries_total() as f64,
+        );
+        w.counter(
+            "erprm_requeued_total",
+            "Queued jobs the supervisor moved off a lost shard.",
+            self.requeued_total() as f64,
+        );
+        if let Some((panics, stalls)) = self.chaos_injected() {
+            w.counter(
+                "erprm_chaos_panics_injected_total",
+                "Shard panics injected by the chaos schedule.",
+                panics as f64,
+            );
+            w.counter(
+                "erprm_chaos_stalls_injected_total",
+                "Shard stalls injected by the chaos schedule.",
+                stalls as f64,
             );
         }
         if self.fleet_enabled() {
@@ -1042,41 +1423,176 @@ impl EnginePool {
         out
     }
 
-    /// Stop all shard threads and wait for them to exit.
+    /// Stop the supervisor and all shard threads and wait for them to
+    /// exit. The supervisor goes first so it cannot respawn a shard that
+    /// is being told to stop.
     pub fn shutdown(&self) {
-        for s in &self.inner.shards {
-            let _ = s.tx.send(Msg::Shutdown);
+        self.inner.stopping.store(true, Ordering::SeqCst);
+        if let Some(j) = lock_unpoisoned(&self.inner.supervisor).take() {
+            let _ = j.join();
         }
-        for j in self.inner.joins.lock().unwrap().drain(..) {
+        for s in &self.inner.shards {
+            let mb = s.slot.mailbox();
+            let _ = mb.push(Msg::Shutdown);
+            mb.close();
+        }
+        for j in lock_unpoisoned(&self.inner.joins).drain(..) {
             let _ = j.join();
         }
     }
 }
 
+/// Spawn one shard thread around `body`, catching panics: an unwound
+/// body flags its slot (generation-gated) so the supervisor recovers it.
+fn spawn_shard_thread(body: ShardBody, ctx: ShardCtx) -> std::io::Result<JoinHandle<()>> {
+    let slot = Arc::clone(&ctx.slot);
+    let generation = ctx.generation;
+    std::thread::Builder::new().name(format!("erprm-shard-{}", ctx.idx)).spawn(move || {
+        if catch_unwind(AssertUnwindSafe(|| body(ctx))).is_err() {
+            slot.note_panic(generation);
+        }
+    })
+}
+
+/// The pool supervisor: detects panicked (flagged) and wedged
+/// (stale-heartbeat with reserved work) shards and recovers them —
+/// respawn with a fresh engine, requeue their queued jobs, retire the
+/// old generation. Consecutive failures back off exponentially so a
+/// shard that dies on arrival cannot hot-loop respawns.
+fn spawn_supervisor(inner: Arc<PoolInner>) -> std::io::Result<JoinHandle<()>> {
+    std::thread::Builder::new().name("erprm-supervisor".into()).spawn(move || {
+        let n = inner.shards.len();
+        let interval = Duration::from_millis(inner.supervise.interval_ms.max(5));
+        let mut consecutive = vec![0u32; n];
+        let mut next_allowed = vec![Instant::now(); n];
+        while !inner.stopping.load(Ordering::SeqCst) {
+            std::thread::sleep(interval);
+            for idx in 0..n {
+                let slot = &inner.shards[idx].slot;
+                if slot.health() == HEALTH_DEAD {
+                    continue;
+                }
+                if Instant::now() < next_allowed[idx] {
+                    continue;
+                }
+                let panicked = slot.take_panicked();
+                let healthy = slot.health() == HEALTH_HEALTHY;
+                if healthy && !panicked {
+                    consecutive[idx] = 0;
+                }
+                let wedged = !panicked
+                    && healthy
+                    && inner.shards[idx].depth.load(Ordering::Relaxed) > 0
+                    && slot.beat_age_ms() > inner.supervise.stale_ms;
+                if !(panicked || wedged) {
+                    continue;
+                }
+                recover_shard(&inner, idx, if panicked { "panicked" } else { "wedged" });
+                consecutive[idx] = consecutive[idx].saturating_add(1);
+                next_allowed[idx] =
+                    Instant::now() + inner.supervise.restart_delay(consecutive[idx] - 1);
+            }
+        }
+    })
+}
+
+/// Recover one lost shard: mark restarting, swap in a fresh mailbox,
+/// requeue the old mailbox's jobs onto healthy shards (custody updated
+/// *before* the generation bump, so waiting dispatchers see "moved" and
+/// keep waiting rather than "lost"), retire the old generation (zombie
+/// writes become no-ops, its loop exits at the next retirement check),
+/// then respawn the thread with a fresh engine.
+fn recover_shard(inner: &Arc<PoolInner>, idx: usize, reason: &str) {
+    let shard = &inner.shards[idx];
+    let slot = &shard.slot;
+    slot.set_health(HEALTH_STARTING);
+    let fresh = Arc::new(Mailbox::new());
+    let old = slot.replace_mailbox(Arc::clone(&fresh));
+    old.close();
+    let pending = old.drain();
+    let new_generation = slot.generation() + 1;
+    let mut requeued = 0u64;
+    for msg in pending {
+        match msg {
+            Msg::Shutdown => {
+                let _ = fresh.push(Msg::Shutdown);
+            }
+            Msg::Solve(job) => {
+                // least-loaded healthy shard, else this shard's own fresh
+                // mailbox (it will serve once the respawn comes up)
+                let target = inner
+                    .shards
+                    .iter()
+                    .enumerate()
+                    .filter(|(t, s)| *t != idx && s.slot.health() == HEALTH_HEALTHY)
+                    .min_by_key(|(_, s)| s.depth.load(Ordering::Relaxed))
+                    .map(|(t, _)| t);
+                let moved = match target {
+                    Some(t) => {
+                        let ts = &inner.shards[t].slot;
+                        job.custody.store(pack_custody(t, ts.generation()), Ordering::SeqCst);
+                        ts.mailbox().push(Msg::Solve(job)).is_ok()
+                    }
+                    None => {
+                        job.custody.store(pack_custody(idx, new_generation), Ordering::SeqCst);
+                        fresh.push(Msg::Solve(job)).is_ok()
+                    }
+                };
+                if moved {
+                    requeued += 1;
+                }
+                // a failed push drops the job; its reply sender drops with
+                // it and the dispatcher retries via ShardLost
+            }
+        }
+    }
+    inner.requeued_total.fetch_add(requeued, Ordering::Relaxed);
+    let generation = slot.bump_generation();
+    slot.record_restart();
+    log_error!(
+        "shard {idx} {reason}; respawning (generation {generation}, {requeued} jobs requeued)"
+    );
+    let ctx = ShardCtx {
+        idx,
+        generation,
+        mailbox: fresh,
+        slot: Arc::clone(slot),
+        solved: Arc::clone(&shard.solved),
+        stats: Arc::clone(&shard.stats),
+        fstats: Arc::clone(&shard.fstats),
+        bstats: Arc::clone(&shard.bstats),
+        tracer: Arc::clone(&inner.tracer),
+        chaos: inner.chaos.clone(),
+        ready: None,
+    };
+    match spawn_shard_thread(Arc::clone(&inner.body), ctx) {
+        Ok(j) => lock_unpoisoned(&inner.joins).push(j),
+        Err(e) => {
+            log_error!("shard {idx}: could not spawn replacement thread: {e}");
+            slot.set_health(HEALTH_DEAD);
+        }
+    }
+}
+
 /// Body of one shard thread: load the engine, then serve solves until
-/// shutdown — sequentially, or through the fleet scheduler when
-/// configured. Publishes an engine-stats snapshot after every solve.
-#[allow(clippy::too_many_arguments)]
-fn shard_main(
-    idx: usize,
-    artifacts_dir: PathBuf,
+/// shutdown or retirement — sequentially, or through the fleet scheduler
+/// when configured. Publishes an engine-stats snapshot after every
+/// solve. This is the production [`ShardBody`]; the supervisor re-runs
+/// it (with a fresh `Engine`) when it respawns a shard.
+fn real_shard_body(
+    artifacts_dir: &std::path::Path,
     kv_pool_blocks: Option<usize>,
-    rx: mpsc::Receiver<Msg>,
-    ready_tx: mpsc::Sender<Result<()>>,
-    solved: Arc<AtomicU64>,
-    stats: Arc<Mutex<EngineStats>>,
     fleet_opts: Option<FleetOptions>,
-    fstats: Arc<FleetStats>,
-    bstats: Arc<BatchStats>,
-    tracer: Arc<TraceRecorder>,
+    mut ctx: ShardCtx,
 ) {
-    let engine = match Engine::load(&artifacts_dir) {
+    let idx = ctx.idx;
+    let engine = match Engine::load(artifacts_dir) {
         Ok(e) => {
-            let _ = ready_tx.send(Ok(()));
+            ctx.ready_ok();
             e
         }
         Err(e) => {
-            let _ = ready_tx.send(Err(e));
+            ctx.ready_err(e);
             return;
         }
     };
@@ -1089,102 +1605,130 @@ fn shard_main(
         // serve dense rather than refusing to start
         log_debug!("shard {idx}: manifest has no kv_block; paged KV off, dense caches");
     }
+    let hooks = SlotHooks {
+        slot: Arc::clone(&ctx.slot),
+        generation: ctx.generation,
+        chaos: ctx.chaos.clone(),
+    };
     match fleet_opts {
         Some(opts) => {
-            fleet::drive(&engine, &opts, &fstats, &bstats, &solved, &stats, idx, &tracer, |block| {
-                let msg = if block {
-                    rx.recv().map_err(|_| mpsc::TryRecvError::Disconnected)
-                } else {
-                    rx.try_recv()
-                };
-                match msg {
-                    Ok(Msg::Solve(job)) => fleet::Poll::Job(Box::new(to_fleet_job(*job))),
-                    Ok(Msg::Shutdown) => fleet::Poll::Shutdown,
-                    Err(mpsc::TryRecvError::Empty) => fleet::Poll::Empty,
-                    Err(mpsc::TryRecvError::Disconnected) => fleet::Poll::Closed,
-                }
-            })
+            let mailbox = Arc::clone(&ctx.mailbox);
+            fleet::drive(
+                &engine,
+                &opts,
+                &ctx.fstats,
+                &ctx.bstats,
+                &ctx.solved,
+                &ctx.stats,
+                idx,
+                &ctx.tracer,
+                &hooks,
+                |block| {
+                    let msg =
+                        if block { mailbox.recv_timeout(IDLE_TICK) } else { mailbox.try_recv() };
+                    match msg {
+                        MailRecv::Item(Msg::Solve(job)) => {
+                            fleet::Poll::Job(Box::new(to_fleet_job(*job)))
+                        }
+                        MailRecv::Item(Msg::Shutdown) => fleet::Poll::Shutdown,
+                        MailRecv::Empty => fleet::Poll::Empty,
+                        MailRecv::Closed => fleet::Poll::Closed,
+                    }
+                },
+            )
         }
-        None => {
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Shutdown => break,
-                    Msg::Solve(job) => {
-                        let SolveJob {
-                            req, cfg, enqueued, deadline, reply, mut trace, tau_plan, ..
-                        } = *job;
-                        let now = Instant::now();
-                        let queue_wait_ms =
-                            now.saturating_duration_since(enqueued).as_secs_f64() * 1000.0;
-                        if let Some(tb) = trace.as_mut() {
-                            tb.end(); // close the door-side "queue" span
-                            tb.set_queue_wait(queue_wait_ms);
-                            tb.set_placement(idx, 0); // sequential: one slot
+        None => sequential_serve(&engine, &ctx, &hooks),
+    }
+}
+
+/// The sequential dispatch loop (one request to completion at a time),
+/// under the same per-round supervision contract as the fleet: heartbeat
+/// every round, exit on retirement, honor the chaos draw per dequeued
+/// job (work-aligned, so injection caps are consumed by load, not idle
+/// ticks).
+fn sequential_serve(engine: &Engine, ctx: &ShardCtx, hooks: &SlotHooks) {
+    let idx = ctx.idx;
+    let (solved, stats, tracer) = (&ctx.solved, &ctx.stats, &ctx.tracer);
+    loop {
+        hooks.beat();
+        if hooks.retired() {
+            break;
+        }
+        match ctx.mailbox.recv_timeout(IDLE_TICK) {
+            MailRecv::Empty => continue,
+            MailRecv::Closed | MailRecv::Item(Msg::Shutdown) => break,
+            MailRecv::Item(Msg::Solve(job)) => {
+                match hooks.chaos_tick() {
+                    ChaosAction::Panic => panic!("chaos: injected shard panic (shard {idx})"),
+                    ChaosAction::Stall(d) => std::thread::sleep(d),
+                    ChaosAction::None => {}
+                }
+                let SolveJob { req, cfg, enqueued, deadline, reply, mut trace, tau_plan, .. } =
+                    *job;
+                let now = Instant::now();
+                let queue_wait_ms =
+                    now.saturating_duration_since(enqueued).as_secs_f64() * 1000.0;
+                if let Some(tb) = trace.as_mut() {
+                    tb.end(); // close the door-side "queue" span
+                    tb.set_queue_wait(queue_wait_ms);
+                    tb.set_placement(idx, 0); // sequential: one slot
+                }
+                if reply.is_closed() {
+                    // the client hung up while the job sat in the
+                    // queue: don't burn the engine for nobody
+                    log_debug!("shard {idx}: dropping abandoned request");
+                    if let Some(tb) = trace.take() {
+                        tracer.submit(tb.finish("cancelled", 0, PhaseFlops::default()));
+                    }
+                    continue;
+                }
+                if let Some(d) = deadline {
+                    if now.saturating_duration_since(enqueued) >= d {
+                        if let Some(tb) = trace.take() {
+                            tracer.submit(tb.finish("deadline", 504, PhaseFlops::default()));
                         }
-                        if reply.is_closed() {
-                            // the client hung up while the job sat in the
-                            // queue: don't burn the engine for nobody
-                            log_debug!("shard {idx}: dropping abandoned request");
-                            if let Some(tb) = trace.take() {
-                                tracer.submit(tb.finish("cancelled", 0, PhaseFlops::default()));
-                            }
-                            continue;
-                        }
-                        if let Some(d) = deadline {
-                            if now.saturating_duration_since(enqueued) >= d {
-                                if let Some(tb) = trace.take() {
-                                    tracer
-                                        .submit(tb.finish("deadline", 504, PhaseFlops::default()));
-                                }
-                                let _ = reply.send(Err(Error::deadline(format!(
-                                    "spent {queue_wait_ms:.0}ms queued, budget was {}ms",
-                                    d.as_millis()
-                                ))));
-                                continue;
-                            }
-                        }
-                        let _scope = trace.as_ref().map(|tb| logging::request_scope(tb.id()));
-                        let (solve_res, trace) =
-                            run_solve_traced(&engine, &req, &cfg, tau_plan, trace);
-                        // capture the phase split before the 504 contract
-                        // can swallow the outcome: a too-late solve still
-                        // spent its FLOPs and the trace should say so
-                        let phase = solve_res
-                            .as_ref()
-                            .map(|o| PhaseFlops::from_ledger(&o.ledger))
-                            .unwrap_or_default();
-                        let res = solve_res.and_then(|outcome| {
-                            // a sequential solve can't be aborted
-                            // mid-flight, but the end-to-end 504
-                            // contract still holds: never a late 200
-                            match deadline {
-                                Some(d) if enqueued.elapsed() >= d => Err(Error::deadline(
-                                    format!(
-                                        "solve finished after the {}ms budget",
-                                        d.as_millis()
-                                    ),
-                                )),
-                                _ => Ok(Solved { outcome, queue_wait_ms }),
-                            }
-                        });
-                        if let Some(tb) = trace {
-                            let t = match &res {
-                                Ok(_) => tb.finish("ok", 200, phase),
-                                Err(e) if e.http_status() == 504 => {
-                                    tb.finish("deadline", 504, phase)
-                                }
-                                Err(e) => tb.finish("error", e.http_status(), phase),
-                            };
-                            tracer.submit(t);
-                        }
-                        solved.fetch_add(1, Ordering::Relaxed);
-                        *stats.lock().unwrap() = engine.stats();
-                        if let Err(e) = &res {
-                            log_error!("shard {idx}: solve failed: {e}");
-                        }
-                        let _ = reply.send(res);
+                        let _ = reply.send(Err(Error::deadline(format!(
+                            "spent {queue_wait_ms:.0}ms queued, budget was {}ms",
+                            d.as_millis()
+                        ))));
+                        continue;
                     }
                 }
+                let _scope = trace.as_ref().map(|tb| logging::request_scope(tb.id()));
+                let (solve_res, trace) = run_solve_traced(engine, &req, &cfg, tau_plan, trace);
+                // capture the phase split before the 504 contract
+                // can swallow the outcome: a too-late solve still
+                // spent its FLOPs and the trace should say so
+                let phase = solve_res
+                    .as_ref()
+                    .map(|o| PhaseFlops::from_ledger(&o.ledger))
+                    .unwrap_or_default();
+                let res = solve_res.and_then(|outcome| {
+                    // a sequential solve can't be aborted
+                    // mid-flight, but the end-to-end 504
+                    // contract still holds: never a late 200
+                    match deadline {
+                        Some(d) if enqueued.elapsed() >= d => Err(Error::deadline(format!(
+                            "solve finished after the {}ms budget",
+                            d.as_millis()
+                        ))),
+                        _ => Ok(Solved { outcome, queue_wait_ms }),
+                    }
+                });
+                if let Some(tb) = trace {
+                    let t = match &res {
+                        Ok(_) => tb.finish("ok", 200, phase),
+                        Err(e) if e.http_status() == 504 => tb.finish("deadline", 504, phase),
+                        Err(e) => tb.finish("error", e.http_status(), phase),
+                    };
+                    tracer.submit(t);
+                }
+                solved.fetch_add(1, Ordering::Relaxed);
+                *lock_unpoisoned(stats) = engine.stats();
+                if let Err(e) = &res {
+                    log_error!("shard {idx}: solve failed: {e}");
+                }
+                let _ = reply.send(res);
             }
         }
     }
@@ -1349,11 +1893,112 @@ impl<T> FifoQueue<T> {
     }
 }
 
+/// Artifact-free pool construction for tests: canned shard bodies that
+/// are ready immediately, answer deterministically from the request, and
+/// honor the chaos schedule per dequeued job. Shared with the handler
+/// tests (drain/health endpoints need a servable pool without engine
+/// artifacts).
+#[cfg(test)]
+pub(crate) mod testkit {
+    use super::*;
+    use crate::coordinator::flops::FlopsLedger;
+    use crate::tokenizer as tk;
+    use crate::workload::{OpStep, Problem};
+
+    /// The canned shards' answer function: a pure function of the
+    /// request, so recovered/retried workloads can assert byte-identical
+    /// results against a fault-free run.
+    pub(crate) fn canned_answer(req: &SolveRequest) -> i64 {
+        req.problem.v0 * 100 + req.problem.ops.len() as i64
+    }
+
+    pub(crate) fn canned_outcome(answer: i64) -> SolveOutcome {
+        SolveOutcome {
+            answer: Some(answer),
+            correct: true,
+            best_reward: 0.5,
+            steps_executed: 1,
+            wall_s: 0.1,
+            ledger: FlopsLedger::new(10, 10),
+            best_trace: vec![tk::ANS, tk::EOS],
+            finished_beams: 1,
+        }
+    }
+
+    /// A solve request whose canned answer is `v0 * 100 + 1`.
+    pub(crate) fn request_for(v0: i64) -> SolveRequest {
+        SolveRequest {
+            problem: Problem { v0, ops: vec![OpStep { op: tk::PLUS, d: 3 }] },
+            mode: SearchMode::EarlyRejection,
+            n_beams: 8,
+            tau: 8,
+            lm: "lm-concise".into(),
+            prm: "prm-large".into(),
+            deadline_ms: None,
+            priority: 0,
+            request_id: String::new(),
+        }
+    }
+
+    /// Spawn a pool of canned shards. `service` simulates per-job engine
+    /// time (lets tests pile up a queue deterministically).
+    pub(crate) fn canned_pool(opts: PoolOptions, service: Duration) -> EnginePool {
+        let body: ShardBody = Arc::new(move |ctx| canned_body(ctx, service));
+        EnginePool::spawn_with_body(opts, body).expect("canned pool spawns")
+    }
+
+    /// Force shard `idx`'s health byte — lets tests outside this module
+    /// (handler drain/ready tests) simulate shard loss without reaching
+    /// into the pool's private state.
+    pub(crate) fn set_shard_health(pool: &EnginePool, idx: usize, health: u8) {
+        pool.inner.shards[idx].slot.set_health(health);
+    }
+
+    /// The canned shard body: the same supervision contract as the real
+    /// one (ready handshake, per-round heartbeat, retirement checks,
+    /// work-aligned chaos draws), minus the engine.
+    fn canned_body(mut ctx: ShardCtx, service: Duration) {
+        ctx.ready_ok();
+        loop {
+            ctx.slot.beat(ctx.generation);
+            if ctx.slot.generation() != ctx.generation {
+                break;
+            }
+            match ctx.mailbox.recv_timeout(Duration::from_millis(10)) {
+                MailRecv::Empty => continue,
+                MailRecv::Closed | MailRecv::Item(Msg::Shutdown) => break,
+                MailRecv::Item(Msg::Solve(job)) => {
+                    if let Some(c) = &ctx.chaos {
+                        if c.enabled() {
+                            match c.tick(ctx.idx, ctx.slot.next_tick()) {
+                                ChaosAction::Panic => {
+                                    panic!("chaos: injected shard panic (shard {})", ctx.idx)
+                                }
+                                ChaosAction::Stall(d) => std::thread::sleep(d),
+                                ChaosAction::None => {}
+                            }
+                        }
+                    }
+                    if !service.is_zero() {
+                        std::thread::sleep(service);
+                    }
+                    let wait = job.enqueued.elapsed().as_secs_f64() * 1000.0;
+                    ctx.solved.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Ok(Solved {
+                        outcome: canned_outcome(canned_answer(&job.req)),
+                        queue_wait_ms: wait,
+                    }));
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::testkit::{canned_answer, canned_outcome, canned_pool, request_for};
     use super::*;
     use crate::config::SearchMode;
-    use crate::coordinator::flops::FlopsLedger;
     use crate::tokenizer as tk;
     use crate::workload::{OpStep, Problem};
 
@@ -1377,14 +2022,9 @@ mod tests {
         let r = EnginePool::spawn_with(
             PathBuf::from("/nonexistent-artifacts"),
             PoolOptions {
-                shards: 1,
                 capacity: 4,
-                cache_entries: 0,
-                default_deadline_ms: 0,
                 fleet: Some(FleetOptions::default()),
-                singleflight: false,
-                kv_pool_blocks: None,
-                trace: TraceOptions::default(),
+                ..PoolOptions::default()
             },
         );
         assert!(r.is_err());
@@ -1394,29 +2034,15 @@ mod tests {
     fn spawn_with_rejects_zero_knobs() {
         let r = EnginePool::spawn_with(
             PathBuf::from("/nonexistent-artifacts"),
-            PoolOptions {
-                shards: 1,
-                capacity: 0,
-                cache_entries: 0,
-                default_deadline_ms: 0,
-                fleet: None,
-                singleflight: false,
-                kv_pool_blocks: None,
-                trace: TraceOptions::default(),
-            },
+            PoolOptions { capacity: 0, ..PoolOptions::default() },
         );
         assert!(r.is_err());
         let r = EnginePool::spawn_with(
             PathBuf::from("/nonexistent-artifacts"),
             PoolOptions {
-                shards: 1,
                 capacity: 4,
-                cache_entries: 0,
-                default_deadline_ms: 0,
                 fleet: Some(FleetOptions { max_inflight: 0, ..FleetOptions::default() }),
-                singleflight: false,
-                kv_pool_blocks: None,
-                trace: TraceOptions::default(),
+                ..PoolOptions::default()
             },
         );
         assert!(r.is_err());
@@ -1447,10 +2073,8 @@ mod tests {
 
     #[test]
     fn fleet_placement_uses_projected_slot_pressure() {
-        let (tx0, _rx0) = mpsc::channel::<Msg>();
-        let (tx1, _rx1) = mpsc::channel::<Msg>();
-        let shard0 = fake_shard(tx0);
-        let shard1 = fake_shard(tx1);
+        let shard0 = fake_shard(0);
+        let shard1 = fake_shard(1);
         // shard 0 looks empty by depth but its slot table is loaded;
         // shard 1 has a reservation in flight but free slots
         shard0.fstats.inflight.store(6, Ordering::Relaxed);
@@ -1469,26 +2093,13 @@ mod tests {
         assert_eq!(placement_order(&pool.placement_loads()), vec![1, 0]);
     }
 
-    fn outcome(answer: i64) -> SolveOutcome {
-        SolveOutcome {
-            answer: Some(answer),
-            correct: true,
-            best_reward: 0.5,
-            steps_executed: 1,
-            wall_s: 0.1,
-            ledger: FlopsLedger::new(10, 10),
-            best_trace: vec![tk::ANS, tk::EOS],
-            finished_beams: 1,
-        }
-    }
-
     #[test]
     fn lru_cache_evicts_oldest() {
         let mut c = SolveCache::new(2);
-        c.put("a".into(), outcome(1));
-        c.put("b".into(), outcome(2));
+        c.put("a".into(), canned_outcome(1));
+        c.put("b".into(), canned_outcome(2));
         assert!(c.get("a").is_some()); // refresh 'a'; 'b' is now LRU
-        c.put("c".into(), outcome(3)); // evicts 'b'
+        c.put("c".into(), canned_outcome(3)); // evicts 'b'
         assert_eq!(c.len(), 2);
         assert!(c.get("b").is_none());
         assert_eq!(c.get("a").unwrap().answer, Some(1));
@@ -1498,25 +2109,45 @@ mod tests {
     #[test]
     fn lru_cache_overwrite_keeps_len() {
         let mut c = SolveCache::new(2);
-        c.put("a".into(), outcome(1));
-        c.put("a".into(), outcome(9));
+        c.put("a".into(), canned_outcome(1));
+        c.put("a".into(), canned_outcome(9));
         assert_eq!(c.len(), 1);
         assert_eq!(c.get("a").unwrap().answer, Some(9));
     }
 
-    fn fake_shard(tx: mpsc::Sender<Msg>) -> Shard {
+    /// A shard with a live slot (marked healthy) and no serving thread;
+    /// pair with [`serve_fake`] to drain its mailbox.
+    fn fake_shard(idx: usize) -> Shard {
+        let slot = Arc::new(ShardSlot::new(idx));
+        slot.mark_ready(slot.generation());
         Shard {
-            tx,
+            slot,
             depth: Arc::new(AtomicUsize::new(0)),
             solved: Arc::new(AtomicU64::new(0)),
             stats: Arc::new(Mutex::new(EngineStats::default())),
             fstats: Arc::new(FleetStats::default()),
             bstats: Arc::new(BatchStats::default()),
-            dead: AtomicBool::new(false),
         }
     }
 
+    /// Drain a fake shard's mailbox on a thread, handing each solve job
+    /// to `f`. Exits on shutdown/close like a real body.
+    fn serve_fake(
+        shard: &Shard,
+        f: impl Fn(Box<SolveJob>) + Send + 'static,
+    ) -> JoinHandle<()> {
+        let mb = shard.slot.mailbox();
+        std::thread::spawn(move || loop {
+            match mb.recv_timeout(Duration::from_millis(20)) {
+                MailRecv::Item(Msg::Solve(job)) => f(job),
+                MailRecv::Item(Msg::Shutdown) | MailRecv::Closed => break,
+                MailRecv::Empty => {}
+            }
+        })
+    }
+
     fn fake_pool(shards: Vec<Shard>, joins: Vec<JoinHandle<()>>) -> EnginePool {
+        let body: ShardBody = Arc::new(|_| {});
         EnginePool {
             inner: Arc::new(PoolInner {
                 shards,
@@ -1530,6 +2161,14 @@ mod tests {
                 pool_coalesced: AtomicU64::new(0),
                 tracer: Arc::new(TraceRecorder::new(TraceOptions::default())),
                 joins: Mutex::new(joins),
+                retry: RetryOptions { base_ms: 2, cap_ms: 8, ..RetryOptions::default() },
+                supervise: SuperviseOptions { enabled: false, ..SuperviseOptions::default() },
+                chaos: None,
+                retries_total: AtomicU64::new(0),
+                requeued_total: AtomicU64::new(0),
+                stopping: AtomicBool::new(false),
+                supervisor: Mutex::new(None),
+                body,
             }),
         }
     }
@@ -1540,78 +2179,57 @@ mod tests {
     }
 
     fn request() -> SolveRequest {
-        SolveRequest {
-            problem: Problem { v0: 5, ops: vec![OpStep { op: tk::PLUS, d: 3 }] },
-            mode: SearchMode::EarlyRejection,
-            n_beams: 8,
-            tau: 8,
-            lm: "lm-concise".into(),
-            prm: "prm-large".into(),
-            deadline_ms: None,
-            priority: 0,
-            request_id: String::new(),
-        }
+        request_for(5)
     }
 
     #[test]
     fn solve_fails_over_from_dead_shard() {
-        // shard 0: receiver already dropped => first send marks it dead
-        let (tx0, rx0) = mpsc::channel::<Msg>();
-        drop(rx0);
+        // shard 0: mailbox already closed => the push fails (ShardLost)
+        let shard0 = fake_shard(0);
+        shard0.slot.mailbox().close();
         // shard 1: fake engine thread replying a canned error
-        let (tx1, rx1) = mpsc::channel::<Msg>();
-        let join = std::thread::spawn(move || {
-            while let Ok(msg) = rx1.recv() {
-                match msg {
-                    Msg::Shutdown => break,
-                    Msg::Solve(job) => {
-                        let _ = job.reply.send(Err(Error::invalid("fake engine")));
-                    }
-                }
-            }
+        let shard1 = fake_shard(1);
+        let join = serve_fake(&shard1, |job| {
+            let _ = job.reply.send(Err(Error::invalid("fake engine")));
         });
-        let pool = fake_pool(vec![fake_shard(tx0), fake_shard(tx1)], vec![join]);
-        // Placement tries shard 0 first (tie -> lowest index), discovers it
-        // dead, and fails over to shard 1, whose reply comes through.
+        let pool = fake_pool(vec![shard0, shard1], vec![join]);
+        // Placement tries shard 0 first (tie -> lowest index), loses the
+        // dispatch, and fails over to shard 1, whose reply comes through
+        // (a non-retryable error, so no transparent retry either).
         let err = pool.solve(request(), SearchConfig::default()).unwrap_err();
         assert!(err.to_string().contains("fake engine"), "{err}");
-        assert_eq!(pool.shard_alive(), vec![false, true]);
+        assert_eq!(pool.retries_total(), 0, "failover is not a retry");
         assert_eq!(pool.queue_depth(), 0, "guards released on both paths");
         pool.shutdown();
     }
 
     #[test]
-    fn all_shards_dead_is_internal_not_client_error() {
-        let (tx0, rx0) = mpsc::channel::<Msg>();
-        drop(rx0);
-        let pool = fake_pool(vec![fake_shard(tx0)], Vec::new());
-        // First call trips over the dead shard; both calls must surface a
-        // 500-class error, never a 4xx.
+    fn all_shards_dead_is_retryable_503_not_client_error() {
+        let shard = fake_shard(0);
+        shard.slot.mailbox().close();
+        shard.slot.set_health(HEALTH_DEAD);
+        let pool = fake_pool(vec![shard], Vec::new());
+        assert!(!pool.any_serving());
+        // Reserve finds nothing placeable: the request surfaces the
+        // retryable 503 class (the supervisor may be respawning), never
+        // a 4xx and no longer a blameless 500.
         let e1 = pool.solve(request(), SearchConfig::default()).unwrap_err();
-        assert_eq!(e1.http_status(), 500, "{e1}");
-        let e2 = pool.solve(request(), SearchConfig::default()).unwrap_err();
-        assert_eq!(e2.http_status(), 500, "{e2}");
+        assert_eq!(e1.http_status(), 503, "{e1}");
+        assert!(e1.is_retryable(), "{e1}");
+        assert!(pool.retries_total() > 0, "the router did retry before giving up");
         assert_eq!(pool.queue_depth(), 0);
     }
 
     #[test]
     fn solve_timed_passes_queue_wait_through() {
         // fake shard replies with a canned Solved carrying queue telemetry
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let join = std::thread::spawn(move || {
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Shutdown => break,
-                    Msg::Solve(job) => {
-                        let wait = job.enqueued.elapsed().as_secs_f64() * 1000.0;
-                        let _ = job
-                            .reply
-                            .send(Ok(Solved { outcome: outcome(7), queue_wait_ms: wait }));
-                    }
-                }
-            }
+        let shard = fake_shard(0);
+        let join = serve_fake(&shard, |job| {
+            let wait = job.enqueued.elapsed().as_secs_f64() * 1000.0;
+            let _ =
+                job.reply.send(Ok(Solved { outcome: canned_outcome(7), queue_wait_ms: wait }));
         });
-        let pool = fake_pool(vec![fake_shard(tx)], vec![join]);
+        let pool = fake_pool(vec![shard], vec![join]);
         let s = pool.solve_timed(request(), SearchConfig::default()).unwrap();
         assert_eq!(s.outcome.answer, Some(7));
         assert!(s.queue_wait_ms >= 0.0);
@@ -1621,8 +2239,7 @@ mod tests {
 
     #[test]
     fn effective_deadline_prefers_request_over_pool_default() {
-        let (tx, _rx) = mpsc::channel::<Msg>();
-        let mut pool = fake_pool(vec![fake_shard(tx)], Vec::new());
+        let mut pool = fake_pool(vec![fake_shard(0)], Vec::new());
         // no pool default: only per-request deadlines apply
         assert_eq!(pool.effective_deadline(&request()), None);
         let mut req = request();
@@ -1644,24 +2261,15 @@ mod tests {
     fn singleflight_coalesces_concurrent_identical_requests() {
         // fake shard: counts solves, replies after a pause long enough
         // for the followers to pile onto the leader's key
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let shard = fake_shard(0);
         let served = Arc::new(AtomicU64::new(0));
         let served2 = Arc::clone(&served);
-        let join = std::thread::spawn(move || {
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Shutdown => break,
-                    Msg::Solve(job) => {
-                        served2.fetch_add(1, Ordering::Relaxed);
-                        std::thread::sleep(Duration::from_millis(300));
-                        let _ = job
-                            .reply
-                            .send(Ok(Solved { outcome: outcome(7), queue_wait_ms: 1.0 }));
-                    }
-                }
-            }
+        let join = serve_fake(&shard, move |job| {
+            served2.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(300));
+            let _ = job.reply.send(Ok(Solved { outcome: canned_outcome(7), queue_wait_ms: 1.0 }));
         });
-        let mut pool = fake_pool(vec![fake_shard(tx)], vec![join]);
+        let mut pool = fake_pool(vec![shard], vec![join]);
         enable_singleflight(&mut pool);
         assert!(pool.singleflight_enabled());
         let leader = {
@@ -1712,24 +2320,15 @@ mod tests {
     fn bounded_followers_abandon_on_their_own_deadline() {
         // fake shard: slow enough that a tightly-bounded follower's
         // budget expires mid-wait, fast enough for the unbounded leader
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let shard = fake_shard(0);
         let served = Arc::new(AtomicU64::new(0));
         let served2 = Arc::clone(&served);
-        let join = std::thread::spawn(move || {
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Shutdown => break,
-                    Msg::Solve(job) => {
-                        served2.fetch_add(1, Ordering::Relaxed);
-                        std::thread::sleep(Duration::from_millis(250));
-                        let _ = job
-                            .reply
-                            .send(Ok(Solved { outcome: outcome(7), queue_wait_ms: 1.0 }));
-                    }
-                }
-            }
+        let join = serve_fake(&shard, move |job| {
+            served2.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(250));
+            let _ = job.reply.send(Ok(Solved { outcome: canned_outcome(7), queue_wait_ms: 1.0 }));
         });
-        let mut pool = fake_pool(vec![fake_shard(tx)], vec![join]);
+        let mut pool = fake_pool(vec![shard], vec![join]);
         enable_singleflight(&mut pool);
         let leader = {
             let p = pool.clone();
@@ -1763,8 +2362,7 @@ mod tests {
     #[test]
     fn tau_plans_freeze_against_the_table_epoch() {
         use crate::obs::CalibOptions;
-        let (tx, _rx) = mpsc::channel::<Msg>();
-        let mut pool = fake_pool(vec![fake_shard(tx)], Vec::new());
+        let mut pool = fake_pool(vec![fake_shard(0)], Vec::new());
         let req = request();
         let mut cfg = SearchConfig::default();
         cfg.mode = SearchMode::EarlyRejection;
@@ -1799,19 +2397,12 @@ mod tests {
 
     #[test]
     fn singleflight_followers_surface_leader_errors_by_class() {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let join = std::thread::spawn(move || {
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Shutdown => break,
-                    Msg::Solve(job) => {
-                        std::thread::sleep(Duration::from_millis(120));
-                        let _ = job.reply.send(Err(Error::deadline("budget spent")));
-                    }
-                }
-            }
+        let shard = fake_shard(0);
+        let join = serve_fake(&shard, |job| {
+            std::thread::sleep(Duration::from_millis(120));
+            let _ = job.reply.send(Err(Error::deadline("budget spent")));
         });
-        let mut pool = fake_pool(vec![fake_shard(tx)], vec![join]);
+        let mut pool = fake_pool(vec![shard], vec![join]);
         enable_singleflight(&mut pool);
         let leader = {
             let p = pool.clone();
@@ -1850,5 +2441,268 @@ mod tests {
         req2.prm = "prm-small".into();
         assert_ne!(k1, req2.cache_key(&cfg), "prm must be part of the cache key");
         assert_eq!(k1, req.cache_key(&cfg), "key is stable");
+    }
+
+    /// Fast supervision knobs for the chaos battery.
+    fn fast_supervise() -> SuperviseOptions {
+        SuperviseOptions {
+            enabled: true,
+            interval_ms: 5,
+            stale_ms: 10_000,
+            restart_backoff_ms: 1,
+        }
+    }
+
+    fn fast_retry(max_attempts: u32) -> RetryOptions {
+        RetryOptions { max_attempts, base_ms: 5, cap_ms: 40, retry_saturated: false }
+    }
+
+    /// Run `reqs` through `pool` on client threads; returns answers in
+    /// request order (Err stringified for assertion messages).
+    fn run_workload(pool: &EnginePool, reqs: Vec<SolveRequest>) -> Vec<Result<i64>> {
+        let handles: Vec<_> = reqs
+            .into_iter()
+            .map(|r| {
+                let p = pool.clone();
+                std::thread::spawn(move || {
+                    p.solve_timed(r, SearchConfig::default())
+                        .map(|s| s.outcome.answer.unwrap_or(i64::MIN))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    }
+
+    #[test]
+    fn chaos_panics_recover_with_zero_client_failures_and_identical_answers() {
+        let opts = |chaos: ChaosOptions| PoolOptions {
+            shards: 2,
+            capacity: 16,
+            supervise: fast_supervise(),
+            retry: fast_retry(6),
+            chaos,
+            ..PoolOptions::default()
+        };
+        let chaos = ChaosOptions {
+            seed: 7,
+            panic_per_tick: 0.3,
+            max_panics: 3,
+            ..ChaosOptions::default()
+        };
+        let faulty = canned_pool(opts(chaos), Duration::from_millis(2));
+        let clean = canned_pool(opts(ChaosOptions::default()), Duration::from_millis(2));
+        let reqs = || (0..24).map(request_for).collect::<Vec<_>>();
+        let with_faults = run_workload(&faulty, reqs());
+        let without = run_workload(&clean, reqs());
+        for (i, (a, b)) in with_faults.iter().zip(&without).enumerate() {
+            let a = a.as_ref().expect("zero client-visible failures under chaos");
+            let b = b.as_ref().expect("fault-free run");
+            assert_eq!(a, b, "request {i}: answers must match the chaos-off run");
+            assert_eq!(*a, canned_answer(&request_for(i as i64)), "request {i}");
+        }
+        let (panics, _) = faulty.chaos_injected().expect("chaos on");
+        assert_eq!(panics, 3, "the cap bounds the schedule deterministically");
+        assert!(faulty.restarts_total() >= 1, "the supervisor respawned panicked shards");
+        let m = faulty.render_metrics();
+        assert!(m.contains("erprm_shard_restarts_total"), "{m}");
+        assert!(m.contains("erprm_chaos_panics_injected_total 3"), "{m}");
+        assert!(m.contains("erprm_retries_total"), "{m}");
+        assert_eq!(clean.restarts_total(), 0);
+        assert_eq!(clean.chaos_injected(), None);
+        faulty.shutdown();
+        clean.shutdown();
+        // respawn threads registered their joins; nothing left running
+        assert_eq!(faulty.queue_depth(), 0);
+    }
+
+    #[test]
+    fn supervisor_requeues_queued_jobs_from_a_lost_shard() {
+        // one shard, slow service: pile three jobs up behind one in
+        // flight, then declare the shard lost and watch the supervisor
+        // move the queue onto the replacement generation.
+        let pool = canned_pool(
+            PoolOptions {
+                shards: 1,
+                capacity: 8,
+                supervise: fast_supervise(),
+                retry: fast_retry(4),
+                ..PoolOptions::default()
+            },
+            Duration::from_millis(60),
+        );
+        let clients: Vec<_> = (0..4)
+            .map(|i| {
+                let p = pool.clone();
+                std::thread::spawn(move || {
+                    p.solve_timed(request_for(i), SearchConfig::default())
+                        .map(|s| s.outcome.answer)
+                })
+            })
+            .collect();
+        // wait until one job is in service and three are queued
+        let mb_len = || pool.inner.shards[0].slot.mailbox().len();
+        let t0 = Instant::now();
+        while mb_len() < 3 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(mb_len() >= 3, "three jobs queued behind the in-flight one");
+        // simulate a panic report from the serving generation
+        let slot = &pool.inner.shards[0].slot;
+        slot.note_panic(slot.generation());
+        for c in clients {
+            let ans = c.join().unwrap().expect("requeued jobs complete on the new generation");
+            assert!(ans.is_some());
+        }
+        assert_eq!(pool.restarts_total(), 1, "one recovery");
+        assert!(
+            pool.requeued_total() >= 3,
+            "the queued jobs were moved, not dropped: {}",
+            pool.requeued_total()
+        );
+        assert_eq!(pool.shard_health(), vec!["healthy"], "replacement is serving");
+        let m = pool.render_metrics();
+        assert!(m.contains("erprm_requeued_total"), "{m}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn wedged_shard_is_detected_and_the_request_retried() {
+        // chaos stalls the only shard's first job far past stale_ms; the
+        // supervisor declares it wedged (reserved work + stale
+        // heartbeat), retires it, and the dispatcher's custody check
+        // fails the in-flight job over to a transparent retry on the
+        // replacement.
+        let pool = canned_pool(
+            PoolOptions {
+                shards: 1,
+                capacity: 4,
+                supervise: SuperviseOptions { stale_ms: 100, ..fast_supervise() },
+                retry: fast_retry(4),
+                chaos: ChaosOptions {
+                    seed: 11,
+                    stall_per_tick: 1.0,
+                    stall_ms: 1200,
+                    max_stalls: 1,
+                    ..ChaosOptions::default()
+                },
+                ..PoolOptions::default()
+            },
+            Duration::ZERO,
+        );
+        let t0 = Instant::now();
+        let s = pool.solve_timed(request_for(3), SearchConfig::default()).unwrap();
+        assert_eq!(s.outcome.answer, Some(canned_answer(&request_for(3))));
+        assert!(
+            t0.elapsed() < Duration::from_millis(1100),
+            "served by the replacement, not the stalled zombie: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(pool.restarts_total(), 1, "wedge detected exactly once");
+        assert!(pool.retries_total() >= 1, "the lost dispatch was retried");
+        assert_eq!(pool.chaos_injected(), Some((0, 1)));
+        assert_eq!(pool.shard_health(), vec!["healthy"]);
+        // shutdown joins the zombie too (it exits at its retirement
+        // check once the injected stall elapses)
+        pool.shutdown();
+    }
+
+    #[test]
+    fn retry_respects_the_deadline_budget() {
+        // the only shard's mailbox is closed for good (supervision off),
+        // so every dispatch is a retryable loss; a bounded request must
+        // give up within its budget instead of sleeping past it.
+        let pool = canned_pool(
+            PoolOptions {
+                shards: 1,
+                supervise: SuperviseOptions { enabled: false, ..SuperviseOptions::default() },
+                retry: RetryOptions {
+                    max_attempts: 50,
+                    base_ms: 40,
+                    cap_ms: 40,
+                    retry_saturated: false,
+                },
+                ..PoolOptions::default()
+            },
+            Duration::ZERO,
+        );
+        pool.inner.shards[0].slot.mailbox().close();
+        let mut req = request_for(1);
+        req.deadline_ms = Some(120);
+        let t0 = Instant::now();
+        let e = pool.solve_timed(req, SearchConfig::default()).unwrap_err();
+        assert_eq!(e.http_status(), 503, "{e}");
+        assert!(t0.elapsed() < Duration::from_millis(400), "{:?}", t0.elapsed());
+        let retries = pool.retries_total();
+        assert!((1..=6).contains(&retries), "a few retries, nowhere near 50: {retries}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn failed_outcomes_are_never_cached() {
+        // chaos kills the first attempt and retry is off: the request
+        // fails 503. The failure must not poison the cache — the next
+        // identical request (after recovery) recomputes and succeeds.
+        let pool = canned_pool(
+            PoolOptions {
+                shards: 1,
+                cache_entries: 8,
+                supervise: fast_supervise(),
+                retry: RetryOptions { max_attempts: 1, ..fast_retry(1) },
+                chaos: ChaosOptions {
+                    seed: 3,
+                    panic_per_tick: 1.0,
+                    max_panics: 1,
+                    ..ChaosOptions::default()
+                },
+                ..PoolOptions::default()
+            },
+            Duration::ZERO,
+        );
+        let e = pool.solve_timed(request_for(9), SearchConfig::default()).unwrap_err();
+        assert_eq!(e.http_status(), 503, "{e}");
+        assert_eq!(
+            pool.inner.cache.as_ref().unwrap().lock().unwrap().len(),
+            0,
+            "a failed solve must never be cached"
+        );
+        // wait for the respawn, then the same key succeeds and caches
+        let t0 = Instant::now();
+        while pool.restarts_total() < 1 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let s = pool.solve_timed(request_for(9), SearchConfig::default()).unwrap();
+        assert_eq!(s.outcome.answer, Some(canned_answer(&request_for(9))));
+        let (hits, misses) = pool.cache_counters();
+        assert_eq!((hits, misses), (0, 2), "both solves missed; nothing was served stale");
+        let s2 = pool.solve_timed(request_for(9), SearchConfig::default()).unwrap();
+        assert_eq!(s2.outcome.answer, Some(canned_answer(&request_for(9))));
+        assert_eq!(pool.cache_counters().0, 1, "the Ok outcome was cached");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn healthz_accessors_report_per_shard_state() {
+        let pool = canned_pool(
+            PoolOptions {
+                shards: 2,
+                supervise: SuperviseOptions { enabled: false, ..SuperviseOptions::default() },
+                ..PoolOptions::default()
+            },
+            Duration::ZERO,
+        );
+        assert_eq!(pool.shard_health(), vec!["healthy", "healthy"]);
+        assert_eq!(pool.shard_alive(), vec![true, true]);
+        assert!(pool.any_serving());
+        assert_eq!(pool.shard_restarts(), vec![0, 0]);
+        pool.inner.shards[1].slot.set_health(HEALTH_DEAD);
+        assert_eq!(pool.shard_health(), vec!["healthy", "dead"]);
+        assert_eq!(pool.shard_alive(), vec![true, false]);
+        assert!(pool.any_serving());
+        let m = pool.render_metrics();
+        assert!(m.contains("erprm_shard_health"), "{m}");
+        pool.inner.shards[0].slot.set_health(HEALTH_DEAD);
+        assert!(!pool.any_serving());
+        // both marked dead: restore so shutdown's pushes are harmless
+        pool.shutdown();
     }
 }

@@ -1,0 +1,416 @@
+//! Shard supervision primitives: slot state, health, custody, backoff.
+//!
+//! The router's shard threads are now *supervised*: each thread's drive
+//! loop heartbeats into a [`ShardSlot`], panics are caught and flagged,
+//! and a pool supervisor thread (in [`crate::server::router`]) respawns
+//! failed shards with a fresh `Engine`. This module holds the pieces
+//! that are generic over the message type so they can be unit-tested
+//! without a pool:
+//!
+//! * [`ShardSlot`] — the supervisor-visible state of one shard:
+//!   generation counter, heartbeat, health, panic flag, restart count,
+//!   the persistent chaos tick counter, and the swappable [`Mailbox`].
+//! * **Custody** — a packed `(shard, generation)` word each dispatched
+//!   job carries in an `Arc<AtomicU64>`. The dispatcher polls it while
+//!   waiting: if the owning generation retired and the supervisor did
+//!   *not* move the job elsewhere (requeue updates custody first, so a
+//!   double read disambiguates), the job is lost and the dispatcher
+//!   returns the retryable `Error::ShardLost`.
+//! * [`RetryOptions`] / [`backoff_delay`] — the router's transparent
+//!   retry policy: capped exponential backoff with seeded jitter that
+//!   never sleeps past the request's remaining deadline budget.
+//! * [`SuperviseOptions`] — detection cadence and staleness thresholds.
+//!
+//! Generations are the linchpin: a wedged thread cannot be killed, so
+//! the supervisor *retires* it by bumping the slot generation and
+//! spawning a replacement. The zombie's heartbeats are generation-gated
+//! no-ops, its drive loop exits at its next retirement check, and its
+//! late replies bounce off abandoned channels — determinism is never at
+//! risk because a retried solve is a fresh deterministic solve.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::sync::{lock_unpoisoned, Mailbox};
+
+/// Shard health states (stored in an `AtomicU8` on the slot).
+pub(crate) const HEALTH_STARTING: u8 = 0;
+pub(crate) const HEALTH_HEALTHY: u8 = 1;
+pub(crate) const HEALTH_DEAD: u8 = 2;
+
+/// Human-readable health name for `/healthz`.
+pub(crate) fn health_name(h: u8) -> &'static str {
+    match h {
+        HEALTH_HEALTHY => "healthy",
+        HEALTH_DEAD => "dead",
+        _ => "starting",
+    }
+}
+
+const GEN_BITS: u32 = 48;
+const GEN_MASK: u64 = (1 << GEN_BITS) - 1;
+
+/// Pack a job's custody word: shard index in the high 16 bits,
+/// generation in the low 48.
+pub(crate) fn pack_custody(idx: usize, generation: u64) -> u64 {
+    ((idx as u64) << GEN_BITS) | (generation & GEN_MASK)
+}
+
+/// Unpack a custody word into `(shard index, generation)`.
+pub(crate) fn unpack_custody(c: u64) -> (usize, u64) {
+    ((c >> GEN_BITS) as usize, c & GEN_MASK)
+}
+
+/// Supervisor-visible state of one shard, shared (via `Arc`) between the
+/// shard thread, the dispatcher, the supervisor, and `/metrics`. The
+/// mailbox is behind a mutex because recovery *swaps* it: the zombie
+/// keeps draining the old (closed) one while new traffic lands on the
+/// replacement.
+pub(crate) struct ShardSlot<M> {
+    pub idx: usize,
+    epoch: Instant,
+    generation: AtomicU64,
+    /// Epoch-relative ms of the last heartbeat from the current
+    /// generation's thread.
+    beat_ms: AtomicU64,
+    health: AtomicU8,
+    /// Set by the thread wrapper when `catch_unwind` catches a panic
+    /// from the current generation; consumed by the supervisor.
+    panicked: AtomicBool,
+    restarts: AtomicU64,
+    /// Persistent chaos tick counter: survives respawns so the
+    /// deterministic injection schedule continues instead of replaying
+    /// tick 0 (which would crash-loop a `panic_per_tick=1` shard
+    /// forever).
+    ticks: AtomicU64,
+    mailbox: Mutex<Arc<Mailbox<M>>>,
+}
+
+impl<M> ShardSlot<M> {
+    pub fn new(idx: usize) -> Self {
+        ShardSlot {
+            idx,
+            epoch: Instant::now(),
+            generation: AtomicU64::new(0),
+            beat_ms: AtomicU64::new(0),
+            health: AtomicU8::new(HEALTH_STARTING),
+            panicked: AtomicBool::new(false),
+            restarts: AtomicU64::new(0),
+            ticks: AtomicU64::new(0),
+            mailbox: Mutex::new(Arc::new(Mailbox::new())),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Retire the current generation (recovery). Returns the new one.
+    pub fn bump_generation(&self) -> u64 {
+        self.generation.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Record a heartbeat — a no-op unless `generation` is still
+    /// current, so a retired zombie cannot make its replacement look
+    /// alive (or mask the replacement's own wedge).
+    pub fn beat(&self, generation: u64) {
+        if self.generation() == generation {
+            self.beat_ms.store(self.now_ms(), Ordering::Relaxed);
+        }
+    }
+
+    /// Milliseconds since the last heartbeat (the wedge signal).
+    pub fn beat_age_ms(&self) -> u64 {
+        self.now_ms().saturating_sub(self.beat_ms.load(Ordering::Relaxed))
+    }
+
+    pub fn health(&self) -> u8 {
+        self.health.load(Ordering::SeqCst)
+    }
+
+    pub fn set_health(&self, h: u8) {
+        self.health.store(h, Ordering::SeqCst);
+    }
+
+    /// The shard body finished loading its engine: mark serving (and
+    /// fresh) if this generation is still current.
+    pub fn mark_ready(&self, generation: u64) {
+        if self.generation() == generation {
+            self.beat_ms.store(self.now_ms(), Ordering::Relaxed);
+            self.health.store(HEALTH_HEALTHY, Ordering::SeqCst);
+        }
+    }
+
+    /// A respawned body failed to load its engine: the shard is
+    /// permanently dead (generation-gated like every zombie write).
+    pub fn mark_dead(&self, generation: u64) {
+        if self.generation() == generation {
+            self.health.store(HEALTH_DEAD, Ordering::SeqCst);
+        }
+    }
+
+    /// Flag a caught panic from `generation`'s thread.
+    pub fn note_panic(&self, generation: u64) {
+        if self.generation() == generation {
+            self.panicked.store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Consume the panic flag (supervisor detection).
+    pub fn take_panicked(&self) -> bool {
+        self.panicked.swap(false, Ordering::SeqCst)
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Next chaos tick (monotonic across respawns).
+    pub fn next_tick(&self) -> u64 {
+        self.ticks.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// The mailbox new work should land on.
+    pub fn mailbox(&self) -> Arc<Mailbox<M>> {
+        Arc::clone(&lock_unpoisoned(&self.mailbox))
+    }
+
+    /// Swap in a fresh mailbox (recovery), returning the old one for
+    /// draining. The old one should be closed first thing so a dispatch
+    /// that cloned it just before the swap fails its push (and retries
+    /// on another shard) instead of stranding a job.
+    pub fn replace_mailbox(&self, fresh: Arc<Mailbox<M>>) -> Arc<Mailbox<M>> {
+        std::mem::replace(&mut *lock_unpoisoned(&self.mailbox), fresh)
+    }
+}
+
+/// Router-level transparent retry policy (`--retry-*` knobs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryOptions {
+    /// Total dispatch attempts per request (1 = no retries).
+    pub max_attempts: u32,
+    /// Base backoff before the first retry, in ms; doubles per attempt.
+    pub base_ms: u64,
+    /// Backoff ceiling in ms.
+    pub cap_ms: u64,
+    /// Also retry `Error::Saturated` bounces (off by default: saturation
+    /// is load, and blind retries feed the spiral; shard loss is a
+    /// transient hole the supervisor is already filling).
+    pub retry_saturated: bool,
+}
+
+impl Default for RetryOptions {
+    fn default() -> Self {
+        RetryOptions { max_attempts: 3, base_ms: 25, cap_ms: 1000, retry_saturated: false }
+    }
+}
+
+/// Supervisor knobs (`--supervise-*`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SuperviseOptions {
+    /// Run the supervisor thread at all.
+    pub enabled: bool,
+    /// Detection poll cadence in ms.
+    pub interval_ms: u64,
+    /// A shard with reserved work whose heartbeat is older than this is
+    /// declared wedged and retired. Generous by default: a heavily
+    /// loaded scheduler round must never look like a wedge.
+    pub stale_ms: u64,
+    /// Base delay between consecutive restarts of the same shard
+    /// (doubles per consecutive failure, capped at ~30x) so a shard
+    /// that dies on arrival cannot hot-loop respawns.
+    pub restart_backoff_ms: u64,
+}
+
+impl Default for SuperviseOptions {
+    fn default() -> Self {
+        SuperviseOptions {
+            enabled: true,
+            interval_ms: 50,
+            stale_ms: 10_000,
+            restart_backoff_ms: 100,
+        }
+    }
+}
+
+impl SuperviseOptions {
+    /// Delay before the next permitted restart after `consecutive`
+    /// back-to-back failures.
+    pub fn restart_delay(&self, consecutive: u32) -> Duration {
+        let factor = 1u64 << consecutive.min(5);
+        Duration::from_millis(self.restart_backoff_ms.saturating_mul(factor).min(30_000))
+    }
+}
+
+/// Backoff before retry number `attempt` (1-based: the delay after the
+/// `attempt`-th failed dispatch). Returns `None` when the request must
+/// not retry: attempts exhausted, or the delay would not fit inside
+/// `remaining` (the deadline budget left) — sleeping past the deadline
+/// only converts a retryable 503 into a guaranteed 504.
+///
+/// The delay is `base * 2^(attempt-1)` capped at `cap`, then jittered
+/// into `[delay/2, delay]` by `draw` (a seed-stable hash of the request
+/// identity and attempt, so coalesced duplicates don't thundering-herd
+/// the recovering pool in lockstep — yet reruns of the same workload
+/// back off identically, preserving the chaos suite's determinism).
+pub fn backoff_delay(
+    opts: &RetryOptions,
+    attempt: u32,
+    draw: u64,
+    remaining: Option<Duration>,
+) -> Option<Duration> {
+    if attempt >= opts.max_attempts {
+        return None;
+    }
+    let exp = opts
+        .base_ms
+        .saturating_mul(1u64 << (attempt.saturating_sub(1)).min(16))
+        .min(opts.cap_ms.max(opts.base_ms));
+    let half = exp / 2;
+    let delay = Duration::from_millis(half + if half > 0 { draw % (half + 1) } else { 0 });
+    match remaining {
+        Some(rem) if delay >= rem => None,
+        _ => Some(delay),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn custody_round_trips() {
+        for (idx, generation) in [(0usize, 0u64), (3, 17), (65_535, GEN_MASK)] {
+            let c = pack_custody(idx, generation);
+            assert_eq!(unpack_custody(c), (idx, generation));
+        }
+    }
+
+    #[test]
+    fn heartbeats_are_generation_gated() {
+        let slot: ShardSlot<u8> = ShardSlot::new(0);
+        let g0 = slot.generation();
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(slot.beat_age_ms() >= 15);
+        slot.beat(g0);
+        assert!(slot.beat_age_ms() < 15, "current-generation beat lands");
+        let g1 = slot.bump_generation();
+        std::thread::sleep(Duration::from_millis(15));
+        slot.beat(g0); // zombie beat: must not mask the replacement
+        assert!(slot.beat_age_ms() >= 15, "retired-generation beat is a no-op");
+        slot.beat(g1);
+        assert!(slot.beat_age_ms() < 15);
+    }
+
+    #[test]
+    fn zombie_writes_are_gated_but_current_ones_land() {
+        let slot: ShardSlot<u8> = ShardSlot::new(0);
+        let g0 = slot.generation();
+        let g1 = slot.bump_generation();
+        slot.note_panic(g0);
+        assert!(!slot.take_panicked(), "zombie panic flag is a no-op");
+        slot.mark_ready(g0);
+        assert_eq!(slot.health(), HEALTH_STARTING, "zombie ready is a no-op");
+        slot.mark_dead(g0);
+        assert_eq!(slot.health(), HEALTH_STARTING, "zombie death is a no-op");
+        slot.mark_ready(g1);
+        assert_eq!(slot.health(), HEALTH_HEALTHY);
+        slot.note_panic(g1);
+        assert!(slot.take_panicked());
+        assert!(!slot.take_panicked(), "flag consumed once");
+    }
+
+    #[test]
+    fn mailbox_swap_closes_over_to_the_fresh_one() {
+        let slot: ShardSlot<u32> = ShardSlot::new(0);
+        let old = slot.mailbox();
+        old.push(1).unwrap();
+        let fresh = Arc::new(Mailbox::new());
+        let swapped = slot.replace_mailbox(Arc::clone(&fresh));
+        swapped.close();
+        assert_eq!(swapped.drain(), vec![1], "queued work recoverable from the old mailbox");
+        assert!(swapped.push(2).is_err(), "stale handle pushes fail after close");
+        slot.mailbox().push(3).unwrap();
+        assert_eq!(fresh.len(), 1, "new work lands on the replacement");
+    }
+
+    #[test]
+    fn backoff_grows_doubles_and_caps() {
+        let opts =
+            RetryOptions { max_attempts: 10, base_ms: 100, cap_ms: 400, retry_saturated: false };
+        // draw=0 pins jitter to the low edge (delay/2), making growth visible
+        let d = |attempt| backoff_delay(&opts, attempt, 0, None).unwrap().as_millis() as u64;
+        assert_eq!(d(1), 50);
+        assert_eq!(d(2), 100);
+        assert_eq!(d(3), 200);
+        assert_eq!(d(4), 200, "capped at cap_ms/2 on the low edge");
+        // jitter stays within [delay/2, delay]
+        for draw in [1u64, 7, 99, u64::MAX] {
+            let ms = backoff_delay(&opts, 1, draw, None).unwrap().as_millis() as u64;
+            assert!((50..=100).contains(&ms), "{ms}");
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_in_the_draw() {
+        let opts = RetryOptions::default();
+        for attempt in 1..3 {
+            for draw in [0u64, 42, 1 << 60] {
+                assert_eq!(
+                    backoff_delay(&opts, attempt, draw, None),
+                    backoff_delay(&opts, attempt, draw, None),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_never_retries_past_the_deadline_budget() {
+        let opts =
+            RetryOptions { max_attempts: 5, base_ms: 100, cap_ms: 1000, retry_saturated: false };
+        // plenty of budget: retry allowed
+        assert!(backoff_delay(&opts, 1, 0, Some(Duration::from_secs(10))).is_some());
+        // the minimum possible delay (draw=0 -> 50ms) exceeds what's left
+        assert_eq!(backoff_delay(&opts, 1, 0, Some(Duration::from_millis(50))), None);
+        assert_eq!(backoff_delay(&opts, 1, 0, Some(Duration::ZERO)), None, "budget spent");
+        // whatever fits must leave the sleep strictly inside the budget
+        for draw in [0u64, 3, 1 << 40, u64::MAX] {
+            for rem_ms in [1u64, 60, 75, 101, 500] {
+                let rem = Duration::from_millis(rem_ms);
+                if let Some(d) = backoff_delay(&opts, 1, draw, Some(rem)) {
+                    assert!(d < rem, "sleep {d:?} must fit inside {rem:?}");
+                }
+            }
+        }
+        // unbounded requests always may retry (within attempts)
+        assert!(backoff_delay(&opts, 4, 9, None).is_some());
+    }
+
+    #[test]
+    fn backoff_exhausts_attempts() {
+        let opts = RetryOptions::default(); // max_attempts 3
+        assert!(backoff_delay(&opts, 1, 0, None).is_some());
+        assert!(backoff_delay(&opts, 2, 0, None).is_some());
+        assert_eq!(backoff_delay(&opts, 3, 0, None), None, "third failure is final");
+        let once = RetryOptions { max_attempts: 1, ..RetryOptions::default() };
+        assert_eq!(backoff_delay(&once, 1, 0, None), None, "max_attempts=1 never retries");
+    }
+
+    #[test]
+    fn restart_delay_backs_off_and_saturates() {
+        let opts = SuperviseOptions::default();
+        assert_eq!(opts.restart_delay(0), Duration::from_millis(100));
+        assert_eq!(opts.restart_delay(1), Duration::from_millis(200));
+        assert_eq!(opts.restart_delay(5), Duration::from_millis(3200));
+        assert_eq!(opts.restart_delay(50), Duration::from_millis(3200), "factor saturates");
+    }
+}

@@ -20,6 +20,19 @@ pub enum Error {
     /// (queued too long or aborted mid-solve by the fleet scheduler).
     /// Maps to HTTP 504 Gateway Timeout.
     Deadline(String),
+    /// The engine shard holding the request died (panicked, wedged, or
+    /// was retired by the supervisor) before delivering a result. The
+    /// router treats this as *retryable* — a retried solve is a fresh
+    /// deterministic solve, so replaying it on a healthy shard yields a
+    /// byte-identical answer. If retries are exhausted it surfaces as
+    /// HTTP 503 + Retry-After (the pool is respawning the shard), never
+    /// 4xx.
+    ShardLost(String),
+    /// The HTTP client hung up mid-solve (TCP close observed by the
+    /// socket probe). Nobody is left to read the answer, so the solve is
+    /// cancelled; maps to HTTP 499 (client closed request) in logs and
+    /// metrics only.
+    Hangup(String),
     /// Server-side infrastructure fault (e.g. an engine shard thread
     /// died). Maps to HTTP 500 — never blamed on the client.
     Internal(String),
@@ -36,6 +49,8 @@ impl fmt::Display for Error {
             Error::Invalid(m) => write!(f, "invalid: {m}"),
             Error::Saturated(m) => write!(f, "saturated: {m}"),
             Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
+            Error::ShardLost(m) => write!(f, "shard lost: {m}"),
+            Error::Hangup(m) => write!(f, "client hangup: {m}"),
             Error::Internal(m) => write!(f, "internal: {m}"),
         }
     }
@@ -69,8 +84,23 @@ impl Error {
     pub fn deadline(m: impl Into<String>) -> Self {
         Error::Deadline(m.into())
     }
+    pub fn shard_lost(m: impl Into<String>) -> Self {
+        Error::ShardLost(m.into())
+    }
+    pub fn hangup(m: impl Into<String>) -> Self {
+        Error::Hangup(m.into())
+    }
     pub fn internal(m: impl Into<String>) -> Self {
         Error::Internal(m.into())
+    }
+
+    /// Whether the router may transparently retry this failure on
+    /// another shard. Only `ShardLost` is unconditionally retryable: the
+    /// job never produced a result, and a fresh dispatch is a fresh
+    /// deterministic solve. (`Saturated` is additionally retryable under
+    /// the `retry_saturated` knob — decided at the router, not here.)
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::ShardLost(_))
     }
 
     /// Rebuild an error of the same class (`Error` is not `Clone` because
@@ -85,17 +115,22 @@ impl Error {
             Error::Invalid(m) => Error::Invalid(m.clone()),
             Error::Saturated(m) => Error::Saturated(m.clone()),
             Error::Deadline(m) => Error::Deadline(m.clone()),
+            Error::ShardLost(m) => Error::ShardLost(m.clone()),
+            Error::Hangup(m) => Error::Hangup(m.clone()),
             other => Error::Internal(other.to_string()),
         }
     }
 
     /// The HTTP status this error renders as: client mistakes are 4xx,
-    /// backpressure is 503 (retryable), deadline expiry is 504,
-    /// runtime/infrastructure faults are 500.
+    /// backpressure and shard loss are 503 (retryable), deadline expiry
+    /// is 504, client hangup is 499 (nginx convention — logged, never
+    /// actually read by the departed client), runtime/infrastructure
+    /// faults are 500.
     pub fn http_status(&self) -> u16 {
         match self {
             Error::Parse(_) | Error::Invalid(_) => 400,
-            Error::Saturated(_) => 503,
+            Error::Hangup(_) => 499,
+            Error::Saturated(_) | Error::ShardLost(_) => 503,
             Error::Deadline(_) => 504,
             Error::Io(_) | Error::Xla(_) | Error::Internal(_) => 500,
         }
@@ -125,6 +160,8 @@ mod tests {
             Error::deadline("d"),
             Error::internal("e"),
             Error::Xla("f".into()),
+            Error::shard_lost("g"),
+            Error::hangup("h"),
         ] {
             assert_eq!(e.clone_class().http_status(), e.http_status(), "{e}");
         }
@@ -138,10 +175,28 @@ mod tests {
         assert_eq!(Error::parse("x").http_status(), 400);
         assert_eq!(Error::invalid("x").http_status(), 400);
         assert_eq!(Error::saturated("x").http_status(), 503);
+        assert_eq!(Error::shard_lost("x").http_status(), 503, "retryable, never 4xx/500");
+        assert_eq!(Error::hangup("x").http_status(), 499);
         assert_eq!(Error::deadline("x").http_status(), 504);
         assert_eq!(Error::internal("x").http_status(), 500);
         assert_eq!(Error::Xla("x".into()).http_status(), 500);
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert_eq!(io.http_status(), 500);
+    }
+
+    #[test]
+    fn only_shard_loss_is_retryable() {
+        assert!(Error::shard_lost("x").is_retryable());
+        for e in [
+            Error::parse("a"),
+            Error::invalid("b"),
+            Error::saturated("c"),
+            Error::deadline("d"),
+            Error::internal("e"),
+            Error::hangup("f"),
+            Error::Xla("g".into()),
+        ] {
+            assert!(!e.is_retryable(), "{e}");
+        }
     }
 }

@@ -9,4 +9,5 @@ pub mod oneshot;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

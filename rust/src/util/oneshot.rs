@@ -49,6 +49,19 @@ pub enum RecvTimeoutError {
     Disconnected,
 }
 
+/// Outcome of a borrowed, non-consuming timed poll ([`Receiver::poll_for`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polled<T> {
+    /// The value arrived.
+    Value(T),
+    /// The sender dropped without delivering a value.
+    Disconnected,
+    /// The budget elapsed with the sender still live. Unlike
+    /// [`Receiver::recv_timeout`] this does *not* abandon the channel —
+    /// the receiver is untouched and the caller may poll again.
+    Pending,
+}
+
 pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
     let inner = Arc::new(Inner {
         state: Mutex::new(State { value: None, sender_gone: false, receiver_gone: false }),
@@ -98,6 +111,30 @@ impl<T> Receiver<T> {
                 return Err(RecvError);
             }
             st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Wait up to `budget` for the value *without* consuming the
+    /// receiver. This is the dispatcher's supervised-wait primitive: it
+    /// polls in bounded slices so that between slices it can check
+    /// side-band conditions — did the owning shard's generation retire?
+    /// did the HTTP client hang up? — none of which the channel itself
+    /// can observe. `Pending` leaves the channel fully intact.
+    pub fn poll_for(&self, budget: Duration) -> Polled<T> {
+        let deadline = Instant::now() + budget;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.value.take() {
+                return Polled::Value(v);
+            }
+            if st.sender_gone {
+                return Polled::Disconnected;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Polled::Pending;
+            }
+            st = self.inner.cv.wait_timeout(st, deadline - now).unwrap().0;
         }
     }
 
@@ -210,6 +247,32 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         tx.send("late").unwrap();
         assert_eq!(j.join().unwrap(), Ok("late"));
+    }
+
+    #[test]
+    fn poll_for_is_non_consuming() {
+        let (tx, rx) = channel();
+        assert_eq!(rx.poll_for(Duration::from_millis(5)), Polled::Pending);
+        assert_eq!(rx.poll_for(Duration::from_millis(5)), Polled::Pending, "still pollable");
+        assert!(!tx.is_closed(), "pending poll must not abandon the channel");
+        tx.send(11).unwrap();
+        assert_eq!(rx.poll_for(Duration::from_millis(5)), Polled::Value(11));
+    }
+
+    #[test]
+    fn poll_for_sees_disconnect() {
+        let (tx, rx) = channel::<i32>();
+        drop(tx);
+        assert_eq!(rx.poll_for(Duration::from_secs(5)), Polled::Disconnected);
+    }
+
+    #[test]
+    fn poll_for_wakes_on_late_send() {
+        let (tx, rx) = channel();
+        let j = std::thread::spawn(move || rx.poll_for(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        tx.send("late").unwrap();
+        assert_eq!(j.join().unwrap(), Polled::Value("late"));
     }
 
     #[test]

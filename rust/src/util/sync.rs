@@ -1,0 +1,232 @@
+//! Poison-tolerant synchronization primitives for the supervised fleet.
+//!
+//! Shard threads are now allowed to panic (and be respawned by the pool
+//! supervisor), which makes `Mutex` poisoning a live hazard: a panic
+//! between `lock()` and drop poisons the mutex, and every later
+//! `lock().unwrap()` on another thread turns one crashed tick into a
+//! pool-wide metrics/stats cascade. [`lock_unpoisoned`] recovers the
+//! guard instead — safe here because every shared value guarded this way
+//! (engine stats snapshots, mailboxes) is overwritten wholesale rather
+//! than mutated incrementally, so a half-finished write cannot persist.
+//!
+//! [`Mailbox`] is the panic-surviving job queue that replaces per-shard
+//! `mpsc` channels: the queue lives in an `Arc` held by dispatchers and
+//! the supervisor, so when a shard thread dies its queued jobs remain
+//! drainable (for requeueing onto healthy shards) instead of vanishing
+//! with the channel's receiving half.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// Use for state that is overwritten wholesale (snapshots, swaps), where
+/// observing a pre-panic value is indistinguishable from benign staleness.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// What a timed mailbox receive produced.
+#[derive(Debug, PartialEq, Eq)]
+pub enum MailRecv<T> {
+    /// A queued item.
+    Item(T),
+    /// The budget elapsed with the mailbox open but empty — the idle
+    /// tick that lets a blocked shard loop keep heartbeating.
+    Empty,
+    /// The mailbox is closed and drained; no item will ever arrive.
+    Closed,
+}
+
+struct MailState<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+/// Multi-producer multi-consumer FIFO that outlives its consumer thread.
+///
+/// Unlike `mpsc`, dropping (or killing) the consuming thread does not
+/// destroy the queue: any holder of the `Arc<Mailbox>` can still
+/// [`drain`](Mailbox::drain) pending items — the supervisor's requeue
+/// path — or [`close`](Mailbox::close) it so producers fail fast.
+pub struct Mailbox<T> {
+    state: Mutex<MailState<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for Mailbox<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Mailbox<T> {
+    pub fn new() -> Self {
+        Mailbox {
+            state: Mutex::new(MailState { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item; `Err(item)` hands it back if the mailbox is
+    /// closed (shard retired — the caller should pick another shard).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = lock_unpoisoned(&self.state);
+        if st.closed {
+            return Err(item);
+        }
+        st.queue.push_back(item);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue without blocking.
+    pub fn try_recv(&self) -> MailRecv<T> {
+        let mut st = lock_unpoisoned(&self.state);
+        match st.queue.pop_front() {
+            Some(item) => MailRecv::Item(item),
+            None if st.closed => MailRecv::Closed,
+            None => MailRecv::Empty,
+        }
+    }
+
+    /// Dequeue, blocking up to `budget`. Returns [`MailRecv::Empty`] on
+    /// timeout so idle consumers wake periodically (to heartbeat, check
+    /// retirement) instead of parking forever.
+    pub fn recv_timeout(&self, budget: Duration) -> MailRecv<T> {
+        let deadline = Instant::now() + budget;
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                return MailRecv::Item(item);
+            }
+            if st.closed {
+                return MailRecv::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return MailRecv::Empty;
+            }
+            st = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner)
+                .0;
+        }
+    }
+
+    /// Close the mailbox: subsequent pushes fail, consumers drain what
+    /// remains and then see [`MailRecv::Closed`].
+    pub fn close(&self) {
+        lock_unpoisoned(&self.state).closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Take every queued item at once — the supervisor's requeue path
+    /// after a shard dies. Usually preceded by [`close`](Mailbox::close)
+    /// so no new item lands behind the drain.
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = lock_unpoisoned(&self.state);
+        st.queue.drain(..).collect()
+    }
+
+    /// Number of queued items.
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.state).queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_panic() {
+        let m = Arc::new(Mutex::new(5u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 5, "guard recovered, value intact");
+        *lock_unpoisoned(&m) = 7;
+        assert_eq!(*lock_unpoisoned(&m), 7);
+    }
+
+    #[test]
+    fn mailbox_fifo_round_trip() {
+        let mb = Mailbox::new();
+        mb.push(1).unwrap();
+        mb.push(2).unwrap();
+        assert_eq!(mb.len(), 2);
+        assert_eq!(mb.try_recv(), MailRecv::Item(1));
+        assert_eq!(mb.recv_timeout(Duration::from_millis(5)), MailRecv::Item(2));
+        assert_eq!(mb.try_recv(), MailRecv::Empty);
+    }
+
+    #[test]
+    fn recv_timeout_returns_empty_not_forever() {
+        let mb: Mailbox<u8> = Mailbox::new();
+        let t0 = Instant::now();
+        assert_eq!(mb.recv_timeout(Duration::from_millis(20)), MailRecv::Empty);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn close_fails_pushes_and_drains_to_closed() {
+        let mb = Mailbox::new();
+        mb.push("queued").unwrap();
+        mb.close();
+        assert_eq!(mb.push("late"), Err("late"), "push after close bounces");
+        assert_eq!(mb.try_recv(), MailRecv::Item("queued"), "queued items still drain");
+        assert_eq!(mb.try_recv(), MailRecv::Closed);
+        assert_eq!(mb.recv_timeout(Duration::from_secs(1)), MailRecv::Closed);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let mb: Arc<Mailbox<u8>> = Arc::new(Mailbox::new());
+        let mb2 = Arc::clone(&mb);
+        let j = std::thread::spawn(move || mb2.recv_timeout(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        mb.close();
+        assert_eq!(j.join().unwrap(), MailRecv::Closed);
+    }
+
+    #[test]
+    fn drain_survives_consumer_panic() {
+        // the supervisor scenario: consumer thread dies mid-service, the
+        // queue must still be drainable by another Arc holder
+        let mb: Arc<Mailbox<u32>> = Arc::new(Mailbox::new());
+        for i in 0..4 {
+            mb.push(i).unwrap();
+        }
+        let mb2 = Arc::clone(&mb);
+        let _ = std::thread::spawn(move || {
+            let _got = mb2.try_recv();
+            panic!("shard dies holding nothing");
+        })
+        .join();
+        mb.close();
+        assert_eq!(mb.drain(), vec![1, 2, 3], "remaining jobs recoverable");
+        assert_eq!(mb.try_recv(), MailRecv::Closed);
+    }
+
+    #[test]
+    fn push_wakes_blocked_consumer() {
+        let mb: Arc<Mailbox<&str>> = Arc::new(Mailbox::new());
+        let mb2 = Arc::clone(&mb);
+        let j = std::thread::spawn(move || mb2.recv_timeout(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        mb.push("wake").unwrap();
+        assert_eq!(j.join().unwrap(), MailRecv::Item("wake"));
+    }
+}

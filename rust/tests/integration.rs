@@ -306,12 +306,13 @@ fn pool_saturation_returns_503_and_depth_recovers() {
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let p2 = epool.clone();
     let m2 = std::sync::Arc::clone(&metrics);
+    let life2 = erprm::server::Lifecycle::new();
     let addr = http::serve(
         "127.0.0.1:0",
         &tpool,
         1 << 20,
         std::sync::Arc::clone(&stop),
-        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), req)),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), &life2, req)),
     )
     .unwrap();
     let req = format!(
@@ -410,6 +411,7 @@ fn fleet_pool(dir: PathBuf, shards: usize, max_inflight: usize, cache: usize) ->
             singleflight: false,
             kv_pool_blocks: None,
             trace: erprm::obs::TraceOptions::default(),
+            ..PoolOptions::default()
         },
     )
     .expect("fleet pool spawn")
@@ -531,12 +533,13 @@ fn fleet_serves_over_http_with_queue_wait_and_metrics() {
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let p2 = epool.clone();
     let m2 = std::sync::Arc::clone(&metrics);
+    let life2 = erprm::server::Lifecycle::new();
     let addr = http::serve(
         "127.0.0.1:0",
         &tpool,
         1 << 20,
         std::sync::Arc::clone(&stop),
-        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), req)),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), &life2, req)),
     )
     .unwrap();
     let req = format!(
@@ -638,6 +641,7 @@ fn gang_batched_solves_are_byte_identical_to_solo() {
             singleflight: false,
             kv_pool_blocks: None,
             trace: erprm::obs::TraceOptions::default(),
+            ..PoolOptions::default()
         },
     )
     .expect("gang pool spawn");
@@ -943,6 +947,7 @@ fn pool_singleflight_coalesces_across_shards() {
             singleflight: true,
             kv_pool_blocks: None,
             trace: erprm::obs::TraceOptions::default(),
+            ..PoolOptions::default()
         },
     )
     .expect("pool spawn");
@@ -1130,6 +1135,7 @@ fn paged_fleet_exhaustion_degrades_to_queueing() {
             singleflight: false,
             kv_pool_blocks: Some(floor),
             trace: erprm::obs::TraceOptions::default(),
+            ..PoolOptions::default()
         },
     )
     .expect("paged fleet pool spawn");
@@ -1274,6 +1280,7 @@ fn gang_outcomes_identical_between_dense_and_block_native_pools() {
                 singleflight: false,
                 kv_pool_blocks,
                 trace: erprm::obs::TraceOptions::default(),
+                ..PoolOptions::default()
             },
         )
         .expect("pool spawn");
@@ -1346,6 +1353,7 @@ fn tracing_on_and_off_solve_byte_identically() {
                 singleflight: false,
                 kv_pool_blocks: None,
                 trace,
+                ..PoolOptions::default()
             },
         )
         .expect("pool spawn");
@@ -1384,12 +1392,13 @@ fn trace_endpoints_serve_lifecycle_and_chrome_export() {
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let p2 = epool.clone();
     let m2 = std::sync::Arc::clone(&metrics);
+    let life2 = erprm::server::Lifecycle::new();
     let addr = http::serve(
         "127.0.0.1:0",
         &tpool,
         1 << 20,
         std::sync::Arc::clone(&stop),
-        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), req)),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), &life2, req)),
     )
     .unwrap();
     let req = format!(
@@ -1479,12 +1488,13 @@ fn calibration_endpoint_streams_partials_and_metrics_stay_valid() {
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let p2 = epool.clone();
     let m2 = std::sync::Arc::clone(&metrics);
+    let life2 = erprm::server::Lifecycle::new();
     let addr = http::serve(
         "127.0.0.1:0",
         &tpool,
         1 << 20,
         std::sync::Arc::clone(&stop),
-        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), req)),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), &life2, req)),
     )
     .unwrap();
     let bodies: [&[u8]; 2] = [
@@ -1563,6 +1573,7 @@ fn adaptive_tau_on_a_thin_table_matches_static_byte_for_byte() {
                     calib,
                     ..erprm::obs::TraceOptions::default()
                 },
+                ..PoolOptions::default()
             },
         )
         .expect("pool spawn");
@@ -1586,4 +1597,135 @@ fn adaptive_tau_on_a_thin_table_matches_static_byte_for_byte() {
     assert_eq!(a1.best_trace, a2.best_trace, "adaptive repeats must be byte-identical");
     assert_eq!(a1.ledger, a2.ledger, "adaptive repeats must be byte-identical");
     assert_eq!(a1.answer, a2.answer);
+}
+
+// ------------------------------------------------------- fault tolerance
+
+// The acceptance gate for the supervision/retry stack: a workload run
+// under seeded shard panics must complete with zero client-visible
+// failures and answers byte-identical to the chaos-off run, with the
+// supervisor having actually respawned shards along the way.
+#[test]
+fn chaos_shard_panics_preserve_byte_identical_answers() {
+    let Some(dir) = artifacts() else { return };
+    let opts = |chaos: erprm::fleet::ChaosOptions| PoolOptions {
+        shards: 2,
+        capacity: 16,
+        supervise: erprm::server::SuperviseOptions {
+            interval_ms: 5,
+            restart_backoff_ms: 1,
+            ..erprm::server::SuperviseOptions::default()
+        },
+        retry: erprm::server::RetryOptions {
+            max_attempts: 6,
+            base_ms: 5,
+            cap_ms: 40,
+            ..erprm::server::RetryOptions::default()
+        },
+        chaos,
+        ..PoolOptions::default()
+    };
+    // p=1.0 with a cap of 2: the first two chaos draws (one per shard's
+    // first dequeue, or two ticks on one shard) panic deterministically,
+    // then the schedule is spent.
+    let faulty = EnginePool::spawn_with(
+        dir.clone(),
+        opts(erprm::fleet::ChaosOptions {
+            seed: 13,
+            panic_per_tick: 1.0,
+            max_panics: 2,
+            ..erprm::fleet::ChaosOptions::default()
+        }),
+    )
+    .unwrap();
+    let clean = EnginePool::spawn_with(dir, opts(erprm::fleet::ChaosOptions::default())).unwrap();
+    let cfg = SearchConfig::default();
+    let reqs: Vec<_> = (0..6)
+        .map(|i| {
+            let mut r = api::parse_solve(solve_body(), &cfg).unwrap();
+            r.problem.v0 = 40 + i;
+            r
+        })
+        .collect();
+    let joins: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let p = faulty.clone();
+            let (r, c) = (r.clone(), cfg.clone());
+            std::thread::spawn(move || p.solve(r, c))
+        })
+        .collect();
+    let with_faults: Vec<_> = joins
+        .into_iter()
+        .map(|j| j.join().unwrap().expect("zero client-visible failures under chaos"))
+        .collect();
+    for (r, a) in reqs.iter().zip(&with_faults) {
+        let b = clean.solve(r.clone(), cfg.clone()).expect("fault-free run");
+        assert_eq!(a.answer, b.answer, "v0={}: answer diverged under recovery", r.problem.v0);
+        assert_eq!(a.best_trace, b.best_trace, "v0={}: trace diverged", r.problem.v0);
+        assert_eq!(a.ledger, b.ledger, "v0={}: FLOPs accounting diverged", r.problem.v0);
+    }
+    assert_eq!(faulty.chaos_injected(), Some((2, 0)), "the cap bounds the schedule");
+    assert!(faulty.restarts_total() >= 1, "the supervisor respawned panicked shards");
+    assert_eq!(clean.restarts_total(), 0);
+    let m = faulty.render_metrics();
+    assert!(m.contains("erprm_chaos_panics_injected_total 2"), "{m}");
+    faulty.shutdown();
+    clean.shutdown();
+}
+
+// Graceful drain over live HTTP: work admitted before the drain
+// completes with 200, new work is refused with 503 + Retry-After, and
+// /readyz leaves rotation while /healthz keeps answering.
+#[test]
+fn drain_finishes_in_flight_work_and_refuses_new() {
+    let Some(dir) = artifacts() else { return };
+    let epool = EnginePool::spawn(dir, 1, 4, 0).unwrap();
+    let metrics = std::sync::Arc::new(Metrics::default());
+    let tpool = ThreadPool::new(4);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let life = erprm::server::Lifecycle::new();
+    let p2 = epool.clone();
+    let m2 = std::sync::Arc::clone(&metrics);
+    let life2 = life.clone();
+    let addr = http::serve(
+        "127.0.0.1:0",
+        &tpool,
+        1 << 20,
+        std::sync::Arc::clone(&stop),
+        std::sync::Arc::new(move |req| route(&p2, &m2, &SearchConfig::default(), &life2, req)),
+    )
+    .unwrap();
+    let req = format!(
+        "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        solve_body().len(),
+        std::str::from_utf8(solve_body()).unwrap()
+    );
+    let inflight = {
+        let req = req.clone();
+        std::thread::spawn(move || http_get(addr, req.as_bytes()))
+    };
+    // wait until the solve is admitted (holds a queue slot) so the
+    // drain provably lands while it is in flight
+    let t0 = std::time::Instant::now();
+    while epool.queue_depth() == 0 && t0.elapsed() < std::time::Duration::from_secs(5) {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(epool.queue_depth() > 0, "solve admitted before the drain");
+    let d = http_get(addr, b"POST /admin/drain HTTP/1.1\r\nContent-Length: 0\r\n\r\n");
+    assert!(d.starts_with("HTTP/1.1 200"), "{d}");
+    let ready = http_get(addr, b"GET /readyz HTTP/1.1\r\n\r\n");
+    assert!(ready.starts_with("HTTP/1.1 503"), "draining leaves rotation: {ready}");
+    assert!(ready.contains("Retry-After"), "{ready}");
+    let refused = http_get(addr, req.as_bytes());
+    assert!(refused.starts_with("HTTP/1.1 503"), "{refused}");
+    assert!(refused.contains("draining"), "{refused}");
+    let health = http_get(addr, b"GET /healthz HTTP/1.1\r\n\r\n");
+    assert!(health.starts_with("HTTP/1.1 200"), "liveness answers during drain: {health}");
+    assert!(health.contains("\"draining\":true"), "{health}");
+    let out = inflight.join().unwrap();
+    assert!(out.starts_with("HTTP/1.1 200"), "in-flight work finishes under drain: {out}");
+    assert_eq!(epool.queue_depth(), 0, "drained clean");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    epool.shutdown();
 }
